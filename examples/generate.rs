@@ -1,0 +1,68 @@
+//! Linear-time sampling demo (paper Fig. 4/5 analogue: generated samples).
+//!
+//! Loads a checkpoint produced by train_lm/quickstart and generates
+//! continuations with nucleus sampling at two nucleus settings (the paper
+//! contrasts nucleus 0.8 vs ~1.0). Per-token cost is O(S + 2L): constant in
+//! how much has been generated.
+//!
+//! Usage: cargo run --release --example generate -- [preset] [ckpt_dir] [n]
+
+use std::time::Instant;
+
+use anyhow::Result;
+use transformer_vq::manifest::Manifest;
+use transformer_vq::rng::Rng;
+use transformer_vq::runtime::Runtime;
+use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("quickstart");
+    let default_ckpt = format!("runs/train_lm-{preset}/ckpt-final");
+    let ckpt = args.get(1).map(String::as_str).unwrap_or(&default_ckpt);
+    let n_tokens: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(160);
+
+    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+    let mut sampler = Sampler::new(&runtime, &manifest, preset)?;
+    let ckpt_path = std::path::Path::new(ckpt).join("state.tvq");
+    if ckpt_path.exists() {
+        sampler.load_weights(&ckpt_path)?;
+        eprintln!("loaded weights from {}", ckpt_path.display());
+    } else {
+        eprintln!("WARNING: no checkpoint at {} — sampling untrained weights",
+                  ckpt_path.display());
+    }
+
+    let tok = ByteTokenizer;
+    let prompt = "the ";
+    let prompt_ids: Vec<i32> =
+        tok.encode(prompt.as_bytes()).into_iter().map(i32::from).collect();
+    let b = sampler.batch_size();
+
+    for top_p in [0.8f32, 0.999] {
+        let mut rng = Rng::new(42);
+        let t0 = Instant::now();
+        let outs = sampler.generate(
+            &vec![prompt_ids.clone(); b],
+            n_tokens,
+            SampleParams { temperature: 1.0, top_p },
+            &mut rng,
+        )?;
+        let dt = t0.elapsed();
+        let total = b * (n_tokens + prompt_ids.len() - 1);
+        println!(
+            "\n=== nucleus {top_p} ({} tokens in {:.2?}, {:.0} tok/s) ===",
+            total, dt, total as f64 / dt.as_secs_f64()
+        );
+        for (i, o) in outs.iter().take(2).enumerate() {
+            let bytes: Vec<u16> = o.iter().map(|&t| t as u16).collect();
+            println!(
+                "--- sample {i} ---\n{prompt}{}",
+                String::from_utf8_lossy(&tok.decode(&bytes))
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Perf-iteration tool (§Perf in EXPERIMENTS.md): benchmark every *.train
+//! artifact in a directory of perf-variant artifacts and print per-step
+//! latency + throughput. Variants are lowered by python (see EXPERIMENTS.md
+//! §Perf for the recipe); this binary is the timing half of the
+//! measure -> change one thing -> re-measure loop.
+//!
+//! Usage: perfbench [artifacts_dir]   (default /tmp/perfvariants)
+
+use transformer_vq::bench::Bencher;
+use transformer_vq::manifest::Manifest;
+use transformer_vq::runtime::{Runtime, StateBundle};
+
+fn main() {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/perfvariants".to_string());
+    let manifest = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let bencher = Bencher {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 40,
+        budget: std::time::Duration::from_secs(4),
+    };
+    for name in manifest.artifacts.keys() {
+        let exe = runtime.load(&manifest, name).unwrap();
+        let preset = name.trim_end_matches(".train");
+        let mut bundle = StateBundle::zeros_for(&exe.spec);
+        let init = manifest.init_path(preset);
+        if init.exists() {
+            bundle.load_groups(init).unwrap();
+        }
+        let inputs = bundle.assemble(&exe.spec).unwrap();
+        let lits = exe.to_literals(&inputs).unwrap();
+        let stats = bencher.run(name, || {
+            exe.run_literals(&lits).unwrap();
+        });
+        let toks = (exe.spec.config.window_len * exe.spec.config.batch_size) as f64;
+        println!(
+            "{:<24} {:>10.3?}/step  {:>8.0} tok/s",
+            name,
+            stats.mean,
+            toks / stats.mean_secs()
+        );
+    }
+}

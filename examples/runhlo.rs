@@ -1,0 +1,120 @@
+//! Debug tool: load an arbitrary HLO text file, feed zero inputs (or
+//! inputs from a TVQ file), print outputs / write them to a TVQ file.
+//! Usage: runhlo <file.hlo.txt> [in.tvq] [out.tvq]
+use anyhow::Result;
+use transformer_vq::runtime::tensor_to_literal;
+use transformer_vq::store::{read_tvq, write_tvq};
+use transformer_vq::tensor::{DType, HostTensor};
+
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).expect("usage: runhlo <hlo.txt> [in.tvq] [out.tvq]");
+    let in_tvq = std::env::args().nth(2);
+    let out_tvq = std::env::args().nth(3);
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    // parse parameter shapes from the entry_computation_layout header line
+    let text = std::fs::read_to_string(&path)?;
+    let header = text.lines().next().unwrap();
+    let inner = header.split("entry_computation_layout={(").nth(1)
+        .and_then(|s| s.split(")->").next())
+        .expect("no entry_computation_layout");
+    let mut args = Vec::new();
+    match &in_tvq {
+        Some(p) => {
+            for (_, t) in read_tvq(p)? {
+                args.push(tensor_to_literal(&t)?);
+            }
+        }
+        None => {
+            for spec in split_top(inner) {
+                args.push(zero_literal(spec.trim())?);
+            }
+        }
+    }
+    let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let mut saved: Vec<(String, HostTensor)> = Vec::new();
+    for (i, buf) in result[0].iter().enumerate() {
+        let mut lit = buf.to_literal_sync().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let parts = match lit.decompose_tuple() { Ok(p) => p, Err(_) => vec![lit] };
+        for (j, p) in parts.iter().enumerate() {
+            print_literal(i, j, p);
+            if out_tvq.is_some() {
+                saved.push((format!("out{i}_{j}"), literal_to_host(p)?));
+            }
+        }
+    }
+    if let Some(p) = out_tvq {
+        write_tvq(p, &saved)?;
+    }
+    Ok(())
+}
+
+fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let n: usize = dims.iter().product();
+    match lit.ty().map_err(|e| anyhow::anyhow!("{e:?}"))? {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(HostTensor::from_f32(&dims, &v))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(HostTensor::from_i32(&dims, &v))
+        }
+        other => anyhow::bail!("unsupported output type {other:?} ({n} elems)"),
+    }
+}
+
+fn split_top(s: &str) -> Vec<String> {
+    // split on commas not inside brackets/braces
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' | '{' => { depth += 1; cur.push(c); }
+            ']' | '}' => { depth -= 1; cur.push(c); }
+            ',' if depth == 0 => { out.push(cur.clone()); cur.clear(); }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() { out.push(cur); }
+    out
+}
+
+fn zero_literal(spec: &str) -> Result<xla::Literal> {
+    // spec like "f32[8,4]{1,0}" or "s32[3]{0}" or "f32[]",
+    // possibly prefixed with "/*index=N*/" comments
+    let spec = match spec.rfind("*/") {
+        Some(i) => spec[i + 2..].trim(),
+        None => spec,
+    };
+    let ty = if spec.starts_with("f32") { xla::ElementType::F32 }
+        else if spec.starts_with("s32") { xla::ElementType::S32 }
+        else if spec.starts_with("u32") { xla::ElementType::U32 }
+        else { anyhow::bail!("unknown type in {spec}") };
+    let dims_str = spec.split('[').nth(1).and_then(|s| s.split(']').next()).unwrap_or("");
+    let dims: Vec<usize> = if dims_str.is_empty() { vec![] }
+        else { dims_str.split(',').map(|d| d.trim().parse().unwrap()).collect() };
+    let n: usize = dims.iter().product();
+    xla::Literal::create_from_shape_and_untyped_data(ty, &dims, &vec![0u8; n * 4])
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+fn print_literal(i: usize, j: usize, lit: &xla::Literal) {
+    let ty = lit.ty();
+    match ty {
+        Ok(xla::ElementType::F32) => {
+            let v = lit.to_vec::<f32>().unwrap();
+            println!("out[{i}][{j}] f32 {:?}", &v[..v.len().min(6)]);
+        }
+        Ok(xla::ElementType::S32) => {
+            let v = lit.to_vec::<i32>().unwrap();
+            println!("out[{i}][{j}] s32 {:?}", &v[..v.len().min(6)]);
+        }
+        other => println!("out[{i}][{j}] ty {other:?}"),
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving demo: start the continuous-batching coordinator in-process, fire
+//! concurrent client requests at it, and report latency/throughput — the
+//! serving-side payoff of linear-time attention (no per-token cost growth,
+//! so slots interleave freely).
+//!
+//! Usage: cargo run --release --example serve -- [preset] [n_requests]
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+use transformer_vq::coordinator::{handle_conn, Client, Engine, WireRequest};
+use transformer_vq::manifest::Manifest;
+use transformer_vq::metrics::LatencyHistogram;
+use transformer_vq::runtime::Runtime;
+use transformer_vq::sample::Sampler;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "quickstart".into());
+    let n_requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
+
+    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
+    let ckpt = std::path::PathBuf::from(format!("runs/train_lm-{preset}/ckpt-final/state.tvq"));
+    let preset_c = preset.clone();
+    let (handle, _join) = Engine::spawn(
+        move || {
+            let runtime = Runtime::cpu()?;
+            let mut s = Sampler::new(&runtime, &manifest, &preset_c)?;
+            if ckpt.exists() {
+                s.load_weights(&ckpt)?;
+            }
+            Ok(s)
+        },
+        0,
+    )?;
+
+    // TCP front-end on an ephemeral port
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    {
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, h);
+                });
+            }
+        });
+    }
+    eprintln!("serving {preset} on {addr}; firing {n_requests} concurrent requests");
+
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n_requests {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let run = || -> Result<(f64, usize)> {
+                let mut client = Client::connect(&addr)?;
+                let t = Instant::now();
+                let resp = client.request(&WireRequest {
+                    prompt: format!("request {i}: the "),
+                    max_tokens: 24 + (i % 4) * 16, // mixed lengths
+                    temperature: 1.0,
+                    top_p: 0.95,
+                })?;
+                anyhow::ensure!(resp.ok, "{:?}", resp.error);
+                Ok((t.elapsed().as_secs_f64(), resp.tokens.unwrap().len()))
+            };
+            tx.send(run()).unwrap();
+        });
+    }
+    drop(tx);
+
+    let mut hist = LatencyHistogram::new();
+    let mut total_tokens = 0usize;
+    let mut done = 0;
+    while let Ok(r) = rx.recv() {
+        let (secs, toks) = r?;
+        hist.record(std::time::Duration::from_secs_f64(secs));
+        total_tokens += toks;
+        done += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("== serving summary ==");
+    println!("requests:        {done}/{n_requests}");
+    println!(
+        "generated:       {total_tokens} tokens in {wall:.2}s ({:.0} tok/s aggregate)",
+        total_tokens as f64 / wall
+    );
+    println!("latency  mean:   {:?}", hist.mean());
+    println!("latency  p50:    {:?}", hist.quantile(0.5));
+    println!("latency  p99:    {:?}", hist.quantile(0.99));
+    Ok(())
+}

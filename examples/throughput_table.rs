@@ -1,0 +1,49 @@
+//! Regenerate the paper's throughput tables (Tables 6-9 analogues):
+//! Full vs VQ-Attention training throughput across head types (SHGA/MQA/
+//! MHA), sequence lengths, and cross-block reduction methods.
+//!
+//! Sequence lengths are scaled 8-32x down from the paper's TPU v3 runs
+//! (CPU PJRT backend); the quadratic-vs-linear *scaling shape* — the claim
+//! under test — is hardware independent.
+//!
+//! Usage: cargo run --release --example throughput_table -- [max_T] [budget_s]
+
+use anyhow::Result;
+use transformer_vq::bench::Bencher;
+use transformer_vq::manifest::Manifest;
+use transformer_vq::paperbench::{measure_throughput_grid, print_throughput_tables};
+use transformer_vq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_t: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let budget: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+
+    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+    let bencher = Bencher {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 30,
+        budget: std::time::Duration::from_secs(budget),
+    };
+    eprintln!("measuring throughput grid (T <= {max_t}) ...");
+    let rows = measure_throughput_grid(&runtime, &manifest, &bencher, max_t)?;
+    print_throughput_tables(&rows);
+
+    // headline check (abstract): VQ speedup at the longest T, SHGA
+    let mut lens: Vec<usize> = rows.iter().map(|r| r.seq_len).collect();
+    lens.sort_unstable();
+    let t_max = *lens.last().unwrap();
+    let f = rows.iter().find(|r| r.head == "shga" && r.variant == "full" && r.seq_len == t_max);
+    let v = rows
+        .iter()
+        .find(|r| r.head == "shga" && r.variant == "vq-matmul" && r.seq_len == t_max);
+    if let (Some(f), Some(v)) = (f, v) {
+        println!(
+            "\nheadline: at T={t_max}, VQ is {:.2}x the throughput of Full (SHGA)",
+            v.tokens_per_sec / f.tokens_per_sec
+        );
+    }
+    Ok(())
+}

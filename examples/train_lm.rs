@@ -1,0 +1,63 @@
+//! End-to-end training driver (DESIGN.md §4, Tables 3/4/5 analogues).
+//!
+//! Trains a Transformer-VQ preset on its synthetic corpus stand-in for a few
+//! hundred TBPTT windows, logs the loss curve to <run_dir>/train.csv, then
+//! reports the paper's quality metric on the held-out test split:
+//! bits-per-byte for the byte tracks, word-level perplexity for the
+//! open-vocabulary (PG-19-like) track.
+//!
+//! Usage:
+//!   cargo run --release --example train_lm -- [preset] [steps]
+//!   preset in {enwik8-tiny, pg19-tiny, imagenet64-tiny, quickstart,
+//!              enwik8-tiny-full}
+
+use anyhow::Result;
+use transformer_vq::config::TrainConfig;
+use transformer_vq::data::{build_corpus, zipf, TbpttBatcher};
+use transformer_vq::manifest::Manifest;
+use transformer_vq::metrics::nats_to_bpb;
+use transformer_vq::runtime::Runtime;
+use transformer_vq::train::run_training;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("enwik8-tiny");
+    let steps: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
+
+    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+    let mut cfg = TrainConfig::preset(preset, steps)?;
+    cfg.run_dir = std::path::PathBuf::from(format!("runs/train_lm-{preset}"));
+    eprintln!(
+        "training {preset} for {steps} steps on {} ({} tokens)",
+        cfg.corpus, cfg.corpus_tokens
+    );
+    let (trainer, summary) = run_training(&runtime, &manifest, &cfg)?;
+
+    // --- test-split quality metric (the paper's Tables 3/4/5 numbers) -----
+    let corpus = build_corpus(&cfg.corpus, cfg.corpus_tokens, cfg.seed)?;
+    let (_, _, test_c) = corpus.split();
+    let n_words = zipf::word_count(&test_c.tokens);
+    let n_tokens = test_c.len();
+    let mut test_batcher =
+        TbpttBatcher::new(test_c.tokens, trainer.batch_size(), trainer.window_len())?;
+    let windows = (test_batcher.windows_per_epoch()).min(64);
+    let ce = trainer.evaluate(&mut test_batcher, windows)?;
+
+    println!("== {preset} results after {steps} steps ==");
+    println!("final train loss: {:.4}", summary.final_loss);
+    println!("test CE:          {ce:.4} nats/token");
+    println!("test BPB:         {:.4}", nats_to_bpb(ce));
+    if preset.starts_with("pg19") {
+        // Rae et al. (2020) conversion: total nats over the span divided by
+        // the whitespace word count (Table 4's metric)
+        let wlp =
+            transformer_vq::metrics::word_level_perplexity(ce * n_tokens as f64, n_words);
+        println!("test WLP:         {wlp:.2}  ({n_words} words / {n_tokens} tokens)");
+    }
+    if let Some(tps) = summary.tokens_per_sec {
+        println!("throughput:       {tps:.0} tokens/sec");
+    }
+    println!("loss curve -> {}/train.csv", cfg.run_dir.display());
+    Ok(())
+}

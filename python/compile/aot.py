@@ -1,0 +1,336 @@
+"""AOT compile path: lower jax step functions to HLO text + manifest.
+
+For every (preset, entry-point) pair this emits ``artifacts/<name>.hlo.txt``
+and records the flattened input/output structure in
+``artifacts/manifest.json``. The rust runtime compiles each HLO once on the
+PJRT CPU client and addresses buffers positionally via the manifest.
+
+The interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Initial parameter/codebook values are written as ``<preset>.init.tvq``
+(format: tvq.py). Golden step outputs for the rust integration tests are
+written as ``golden/<name>.tvq``.
+
+Usage:  python -m compile.aot --out ../artifacts [--quick] [--no-grid]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import VQConfig, PRESETS, throughput_grid, config_json
+from . import model, steps, decode, tvq
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def keep_all_inputs(fn: Callable) -> Callable:
+    """Guarantee a 1:1 match between manifest inputs and HLO parameters.
+
+    jax.jit DCEs unused arguments out of the lowered module (e.g. the RNG
+    seed when all dropout rates are 0), which would desynchronize positional
+    buffers on the rust side. We tie a 0-weighted reduction of every input
+    leaf into the first f32 output leaf: jaxpr-level DCE then keeps every
+    parameter, while XLA folds the zero-multiply away so the runtime cost is
+    nil.
+    """
+
+    def wrapped(*args):
+        out = fn(*args)
+        tie = jnp.zeros((), jnp.float32)
+        for leaf in jax.tree_util.tree_leaves(args):
+            tie = tie + 0.0 * jnp.sum(leaf).astype(jnp.float32)
+        def add_tie(x, done=[False]):
+            if not done[0] and jnp.issubdtype(x.dtype, jnp.floating):
+                done[0] = True
+                return x + tie.astype(x.dtype)
+            return x
+        return jax.tree_util.tree_map(add_tie, out)
+
+    return wrapped
+
+
+def to_hlo_text(fn: Callable, *example_args) -> str:
+    lowered = jax.jit(keep_all_inputs(fn)).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is load-bearing: the default elides big
+    # array constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently turns into ZEROS (no error). Sinusoid tables, masks and
+    # index matrices all ride in constants. See probe.py.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _dtype_str(x) -> str:
+    d = np.dtype(x.dtype)
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "float64": "f32", "int64": "i32"}[d.name]
+
+
+def flat_spec(tree, group: str) -> List[Dict]:
+    """Manifest leaf descriptors in jax flattening order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append({
+            "group": group,
+            "path": jax.tree_util.keystr(path),
+            "shape": list(np.shape(leaf)),
+            "dtype": _dtype_str(leaf),
+        })
+    return out
+
+
+def groups_spec(named_trees: List[Tuple[str, object]]) -> List[Dict]:
+    spec = []
+    for name, tree in named_trees:
+        spec.extend(flat_spec(tree, name))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# example-arg construction
+# ---------------------------------------------------------------------------
+
+def example_state(cfg: VQConfig, seed: int = 0):
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    cbs = model.init_cb_states(jax.random.PRNGKey(seed + 1), cfg)
+    carry = model.init_carry(cfg, cfg.batch_size)
+    opt = steps.init_opt_state(params)
+    return params, opt, cbs, carry
+
+
+def example_tokens(cfg: VQConfig, extra: int = 1):
+    return jnp.zeros((cfg.batch_size, cfg.window_len + extra),
+                     dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# entry-point registry
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: VQConfig):
+    params, opt, cbs, carry = example_state(cfg)
+    tokens = example_tokens(cfg)
+    lr = jnp.zeros((), jnp.float32)
+    seed = jnp.zeros((), jnp.int32)
+
+    def fn(params, opt, cbs, carry, tokens, lr, seed):
+        return steps.train_step(params, opt, cbs, carry, tokens, lr, seed,
+                                cfg)
+
+    args = (params, opt, cbs, carry, tokens, lr, seed)
+    outs = jax.eval_shape(fn, *args)
+    gin = groups_spec([("params", params), ("opt", opt), ("cb", cbs),
+                       ("carry", carry), ("tokens", tokens), ("lr", lr),
+                       ("seed", seed)])
+    gout = groups_spec([("params", outs[0]), ("opt", outs[1]),
+                        ("cb", outs[2]), ("carry", outs[3]),
+                        ("metrics", outs[4])])
+    return fn, args, gin, gout
+
+
+def build_eval(cfg: VQConfig):
+    params, _, cbs, carry = example_state(cfg)
+    tokens = example_tokens(cfg)
+
+    def fn(params, cbs, carry, tokens):
+        return steps.eval_step(params, cbs, carry, tokens, cfg)
+
+    args = (params, cbs, carry, tokens)
+    outs = jax.eval_shape(fn, *args)
+    gin = groups_spec([("params", params), ("cb", cbs), ("carry", carry),
+                       ("tokens", tokens)])
+    gout = groups_spec([("carry", outs[0]), ("metrics", outs[1])])
+    return fn, args, gin, gout
+
+
+def build_decode(cfg: VQConfig):
+    params, _, cbs, _ = example_state(cfg)
+    state = decode.init_decode_state(cfg, cfg.batch_size)
+    token = jnp.zeros((cfg.batch_size,), jnp.int32)
+
+    def fn(params, cbs, state, token):
+        return decode.decode_step(params, cbs, state, token, cfg)
+
+    args = (params, cbs, state, token)
+    outs = jax.eval_shape(fn, *args)
+    gin = groups_spec([("params", params), ("cb", cbs), ("state", state),
+                       ("token", token)])
+    gout = groups_spec([("logits", outs[0]), ("state", outs[1])])
+    return fn, args, gin, gout
+
+
+def build_bench(cfg: VQConfig):
+    params, _, cbs, carry = example_state(cfg)
+    tokens = example_tokens(cfg)
+
+    def fn(params, cbs, carry, tokens):
+        return steps.fwdbwd_bench(params, cbs, carry, tokens, cfg)
+
+    args = (params, cbs, carry, tokens)
+    outs = jax.eval_shape(fn, *args)
+    gin = groups_spec([("params", params), ("cb", cbs), ("carry", carry),
+                       ("tokens", tokens)])
+    gout = groups_spec([("metrics", outs)])
+    return fn, args, gin, gout
+
+
+ENTRIES = {
+    "train": build_train,
+    "eval": build_eval,
+    "decode": build_decode,
+    "bench": build_bench,
+}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lower_artifact(name: str, entry: str, cfg: VQConfig, out_dir: str,
+                   manifest: Dict) -> None:
+    t0 = time.time()
+    fn, args, gin, gout = ENTRIES[entry](cfg)
+    hlo = to_hlo_text(fn, *args)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    manifest["artifacts"][name] = {
+        "entry": entry,
+        "hlo": f"{name}.hlo.txt",
+        "config": cfg.to_dict(),
+        "inputs": gin,
+        "outputs": gout,
+    }
+    print(f"  [{time.time() - t0:5.1f}s] {name}  ({len(hlo) / 1e6:.1f} MB)")
+
+
+def write_init_state(preset: str, cfg: VQConfig, out_dir: str) -> None:
+    params, _, cbs, _ = example_state(cfg)
+    tensors = []
+    for spec, leaf in zip(
+            flat_spec(params, "params"),
+            jax.tree_util.tree_leaves(params)):
+        tensors.append(("params" + spec["path"], np.asarray(leaf)))
+    for spec, leaf in zip(flat_spec(cbs, "cb"),
+                          jax.tree_util.tree_leaves(cbs)):
+        tensors.append(("cb" + spec["path"], np.asarray(leaf)))
+    tvq.write(os.path.join(out_dir, f"{preset}.init.tvq"), tensors)
+
+
+def write_goldens(preset: str, cfg: VQConfig, out_dir: str) -> None:
+    """Run one train + eval + decode step in python; save inputs & outputs
+    so the rust runtime tests can assert bit-compatible execution."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    params, opt, cbs, carry = example_state(cfg)
+    rng = np.random.RandomState(42)
+    tokens = jnp.asarray(rng.randint(
+        0, cfg.vocab_size, size=(cfg.batch_size, cfg.window_len + 1)),
+        dtype=jnp.int32)
+    lr = jnp.asarray(3e-4, jnp.float32)
+    seed = jnp.asarray(7, jnp.int32)
+    outs = steps.train_step(params, opt, cbs, carry, tokens, lr, seed, cfg)
+    tensors = [("tokens", np.asarray(tokens)), ("lr", np.asarray(lr)),
+               ("seed", np.asarray(seed)),
+               ("metrics", np.asarray(outs[4]))]
+    tvq.write(os.path.join(gdir, f"{preset}.train.tvq"), tensors)
+
+    new_carry, metrics = steps.eval_step(params, cbs, carry, tokens, cfg)
+    tvq.write(os.path.join(gdir, f"{preset}.eval.tvq"),
+              [("tokens", np.asarray(tokens)), ("metrics",
+                                                np.asarray(metrics))])
+
+    state = decode.init_decode_state(cfg, cfg.batch_size)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, size=(cfg.batch_size,)),
+                      dtype=jnp.int32)
+    logits, _ = decode.decode_step(params, cbs, state, tok, cfg)
+    tvq.write(os.path.join(gdir, f"{preset}.decode.tvq"),
+              [("token", np.asarray(tok)), ("logits", np.asarray(logits))])
+
+
+PRESET_ENTRIES = {
+    "quickstart": ["train", "eval", "decode"],
+    "enwik8-tiny": ["train", "eval", "decode"],
+    "pg19-tiny": ["train", "eval", "decode"],
+    "imagenet64-tiny": ["train", "eval", "decode"],
+    "ablate-S32": ["train", "eval"],
+    "ablate-S64": ["train", "eval"],
+    "ablate-S128": ["train", "eval"],
+    "ablate-nocache": ["train", "eval"],
+    "ablate-cache": ["train", "eval"],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="quickstart preset only (fast CI loop)")
+    ap.add_argument("--state-only", action="store_true",
+                    help="rewrite init/golden TVQ files without re-lowering "
+                         "HLO (init distributions changed, graphs did not)")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="skip the throughput benchmark grid")
+    ap.add_argument("--grid-max-t", type=int, default=4096)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: Dict = {"artifacts": {}}
+
+    presets = (["quickstart"] if args.quick else list(PRESET_ENTRIES))
+    print(f"lowering {len(presets)} presets -> {out_dir}")
+    for preset in presets:
+        cfg = PRESETS[preset]
+        if not args.state_only:
+            for entry in PRESET_ENTRIES[preset]:
+                lower_artifact(f"{preset}.{entry}", entry, cfg, out_dir,
+                               manifest)
+        write_init_state(preset, cfg, out_dir)
+        write_goldens(preset, cfg, out_dir)
+
+    # quadratic-attention quality baseline twin (Table 3 comparison)
+    if not args.quick:
+        cfg = PRESETS["enwik8-tiny"].replace(attn_type="full")
+        if not args.state_only:
+            for entry in ("train", "eval"):
+                lower_artifact(f"enwik8-tiny-full.{entry}", entry, cfg,
+                               out_dir, manifest)
+        write_init_state("enwik8-tiny-full", cfg, out_dir)
+
+    if not args.no_grid and not args.quick:
+        grid = throughput_grid(
+            seq_lens=[t for t in (256, 1024, 4096) if t <= args.grid_max_t])
+        print(f"lowering throughput grid ({len(grid)} artifacts)")
+        for name, cfg in grid.items():
+            if not args.state_only:
+                lower_artifact(name, "bench", cfg, out_dir, manifest)
+            write_init_state(name, cfg, out_dir)
+
+    if args.state_only:
+        print("state-only: manifest untouched")
+        return
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

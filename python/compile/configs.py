@@ -1,0 +1,178 @@
+"""Model / artifact configuration for Transformer-VQ.
+
+Every artifact lowered by ``aot.py`` is parameterized by a ``VQConfig``. The
+rust coordinator never sees python — it reads ``artifacts/manifest.json``,
+which embeds the config dict for each artifact.
+
+Presets mirror the paper's Table 10 hyperparameters, scaled down so the CPU
+PJRT backend can train them in minutes (see DESIGN.md §5 substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class VQConfig:
+    """Hyperparameters of one Transformer-VQ (or baseline) model variant."""
+
+    # -- architecture ------------------------------------------------------
+    vocab_size: int = 256
+    d_model: int = 64          # D_m
+    d_k: int = 32              # per-head query/key width (paper: 128)
+    d_v: int = 128             # total value width across heads (paper: 2*D_m)
+    n_layers: int = 2          # number of attention sublayers ("num gau")
+    n_heads: int = 1           # 1 => SHGA (gated, paper default)
+    head_type: str = "shga"    # shga | mha | mqa
+    # -- VQ attention ------------------------------------------------------
+    attn_type: str = "vq"      # vq | full
+    n_code: int = 64           # S, codebook size (paper: 512)
+    block_len: int = 32        # L (paper: 512)
+    reduction: str = "matmul"  # serial | matmul | assoc | inputscan
+    use_cache: bool = True     # compressive cache (Table 2 ablation)
+    use_kernel: bool = False   # route block combine through the Pallas kernel
+    # -- training ----------------------------------------------------------
+    window_len: int = 64       # W, backprop/update window (multiple of L)
+    batch_size: int = 4        # B (global; single host here)
+    commit_coef: float = 1e-4  # beta
+    ema_rate: float = 0.99     # gamma, codebook EMA
+    tau: float = 0.0           # 0.0 => use d_k**0.5 temperature
+    dropout_rate: float = 0.0  # residual dropout (paper enwik8: 0.5)
+    use_abs_pe: bool = False   # absolute sinusoid PE (paper: image datasets)
+    tie_embeddings: bool = False
+    # -- optimizer (AdamW; LR supplied by the rust scheduler each step) ----
+    adam_b1: float = 0.9
+    adam_b2: float = 0.98
+    adam_eps: float = 1e-9
+    weight_decay: float = 0.0
+    grad_clip: float = 0.1
+
+    def __post_init__(self) -> None:
+        if self.head_type not in ("shga", "mha", "mqa"):
+            raise ValueError(f"bad head_type {self.head_type}")
+        if self.attn_type not in ("vq", "full"):
+            raise ValueError(f"bad attn_type {self.attn_type}")
+        if self.reduction not in ("serial", "matmul", "assoc", "inputscan"):
+            raise ValueError(f"bad reduction {self.reduction}")
+        if self.window_len % self.block_len != 0:
+            raise ValueError("window_len must be a multiple of block_len")
+        if self.d_v % max(self.n_heads, 1) != 0:
+            raise ValueError("d_v must divide n_heads")
+        if self.head_type == "shga" and self.n_heads != 1:
+            raise ValueError("shga is single-head")
+
+    # ------------------------------------------------------------------
+    @property
+    def tau_value(self) -> float:
+        """Attention temperature: scores are divided by tau (paper eq. 8-9)."""
+        return self.tau if self.tau > 0 else float(self.d_k) ** 0.5
+
+    @property
+    def n_kv_heads(self) -> int:
+        return 1 if self.head_type in ("shga", "mqa") else self.n_heads
+
+    @property
+    def d_v_head(self) -> int:
+        return self.d_v // self.n_heads
+
+    @property
+    def blocks_per_window(self) -> int:
+        return self.window_len // self.block_len
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "VQConfig":
+        return VQConfig(**d)
+
+    def replace(self, **kw) -> "VQConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Presets. Naming: <track>-<size>. All are CPU-trainable scaled versions of the
+# paper's Table 10 rows; relative shapes (d_v = 2*d_m, d_k fixed & small,
+# L = S, W = 4L where feasible) are preserved.
+# ---------------------------------------------------------------------------
+
+def _presets() -> Dict[str, VQConfig]:
+    p: Dict[str, VQConfig] = {}
+
+    # Byte-level LM (enwik8 stand-in). ~1.6M params.
+    p["enwik8-tiny"] = VQConfig(
+        vocab_size=256, d_model=128, d_k=32, d_v=256, n_layers=4,
+        n_code=64, block_len=32, window_len=128, batch_size=8,
+        reduction="matmul", use_kernel=False,
+    )
+    # Smoke-test sized, used by quickstart + integration tests. ~120k params.
+    p["quickstart"] = VQConfig(
+        vocab_size=256, d_model=64, d_k=16, d_v=128, n_layers=2,
+        n_code=32, block_len=16, window_len=64, batch_size=4,
+        reduction="matmul", use_kernel=True,
+    )
+    # Open-vocab LM (PG-19 stand-in), BPE vocab from the rust tokenizer.
+    p["pg19-tiny"] = VQConfig(
+        vocab_size=1024, d_model=128, d_k=32, d_v=256, n_layers=4,
+        n_code=64, block_len=32, window_len=128, batch_size=8,
+        reduction="matmul",
+    )
+    # Flattened-image density modeling (ImageNet64 stand-in).
+    p["imagenet64-tiny"] = VQConfig(
+        vocab_size=256, d_model=128, d_k=32, d_v=256, n_layers=4,
+        n_code=64, block_len=32, window_len=128, batch_size=4,
+        use_abs_pe=True, reduction="matmul",
+    )
+
+    # Table 1 codebook-size ablation: S in {64, 128, 256} (paper {256,512,1024})
+    for s in (32, 64, 128):
+        p[f"ablate-S{s}"] = p["enwik8-tiny"].replace(n_code=s)
+    # Table 2 compressive-cache ablation (paper used S=256 -> our S=32).
+    p["ablate-nocache"] = p["enwik8-tiny"].replace(n_code=32, use_cache=False)
+    p["ablate-cache"] = p["enwik8-tiny"].replace(n_code=32, use_cache=True)
+    return p
+
+
+PRESETS: Dict[str, VQConfig] = _presets()
+
+
+def throughput_grid(
+    seq_lens: Optional[List[int]] = None,
+    head_types: Optional[List[str]] = None,
+    variants: Optional[List[str]] = None,
+) -> Dict[str, VQConfig]:
+    """Benchmark grid for paper Tables 6-9 (Full vs VQ throughput).
+
+    Variant names: full, full-inputscan, vq-serial, vq-matmul, vq-assoc,
+    vq-inputscan. Sequence lengths are scaled 8x down from the paper's
+    {2048..131072} to {256..16384} (CPU backend); the scaling *exponent*
+    of quadratic vs linear attention is unchanged.
+    """
+    seq_lens = seq_lens or [256, 1024, 4096]
+    head_types = head_types or ["shga", "mqa", "mha"]
+    variants = variants or ["full", "vq-serial", "vq-matmul", "vq-assoc",
+                            "vq-inputscan", "full-inputscan"]
+    grid: Dict[str, VQConfig] = {}
+    for t in seq_lens:
+        for h in head_types:
+            for v in variants:
+                attn = "full" if v.startswith("full") else "vq"
+                red = v.split("-", 1)[1] if "-" in v else "matmul"
+                if attn == "full" and red == "full":
+                    red = "matmul"
+                n_heads = 1 if h == "shga" else 4
+                grid[f"tput-{h}-{v}-T{t}"] = VQConfig(
+                    vocab_size=256, d_model=64, d_k=16, d_v=128, n_layers=2,
+                    n_heads=n_heads, head_type=h, attn_type=attn,
+                    n_code=64, block_len=64, window_len=t, batch_size=1,
+                    reduction=red if red in ("serial", "matmul", "assoc",
+                                             "inputscan") else "matmul",
+                )
+    return grid
+
+
+def config_json(cfg: VQConfig) -> str:
+    return json.dumps(cfg.to_dict(), indent=2, sort_keys=True)

@@ -1,0 +1,182 @@
+"""Token-level autoregressive decoding with the compressive cache.
+
+§4.1 of the paper notes that VQ-Attention's cache update can be applied every
+token instead of every L tokens, so sampling needs no sporadic feature
+consolidation. This module implements that: per layer the decoder keeps
+
+  k_win [B, Hk, 2L, Dk]  quantized keys — slots [0,L) = previous block,
+                         slots [L, 2L) = current partial block
+  v_win [B, Hk, 2L, Dvh]
+  z_win [B, Hk, 2L] i32  shortcodes (so a completed block can be folded)
+  cache_u [B, Hk, S, Dvh], cache_l [B, Hk, S]   compressive cache
+
+plus one model-level position counter ``pos [B] i32``. At a block boundary
+(pos % L == 0) the oldest block is folded into the cache (running-mean merge)
+and the window shifts — all expressed with masks/where so the step lowers to
+a single static HLO module. Per-token cost is O(S + 2L), i.e. generation of
+T tokens is O(T) (linear-time sampling, Conclusion §6).
+
+The rust sampler (L3) owns the state tensors, performs nucleus sampling on
+the returned logits, and feeds tokens back in.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VQConfig
+from . import layers, model
+from .kernels import vq
+from .kernels.vq_attn import NEG_INF
+
+
+def init_decode_state(cfg: VQConfig, batch: int) -> Dict:
+    hk, s, l = cfg.n_kv_heads, cfg.n_code, cfg.block_len
+    return {
+        "layers": [
+            {
+                "k_win": jnp.zeros((batch, hk, 2 * l, cfg.d_k)),
+                "v_win": jnp.zeros((batch, hk, 2 * l, cfg.d_v_head)),
+                "z_win": jnp.zeros((batch, hk, 2 * l), dtype=jnp.int32),
+                "cache_u": jnp.zeros((batch, hk, s, cfg.d_v_head)),
+                "cache_l": jnp.zeros((batch, hk, s)),
+            }
+            for _ in range(cfg.n_layers)
+        ],
+        "pos": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+def _fold_and_shift(st: Dict, pos, cfg: VQConfig) -> Dict:
+    """At block boundaries: fold window slots [0,L) into the cache and shift
+    [L,2L) down. Gated by masks so the graph is static."""
+    l, s = cfg.block_len, cfg.n_code
+    p = pos % l                                       # [B]
+    boundary = (p == 0) & (pos >= 2 * l)              # fold is meaningful
+    shift = (p == 0) & (pos >= l)                     # prev block exists
+
+    zb = st["z_win"][:, :, :l]                        # [B,Hk,L]
+    vb = st["v_win"][:, :, :l]
+    onehot = jax.nn.one_hot(zb, s, dtype=vb.dtype)    # [B,Hk,L,S]
+    cnt = jnp.einsum("bhls->bhs", onehot)
+    sums = jnp.einsum("bhls,bhlv->bhsv", onehot, vb)
+    cnt = cnt * boundary[:, None, None].astype(vb.dtype)
+    sums = sums * boundary[:, None, None, None].astype(vb.dtype)
+    u_blk = sums / jnp.clip(cnt[..., None], min=1.0)
+
+    l_new = st["cache_l"] + cnt
+    f1 = st["cache_l"] / jnp.clip(l_new, min=1.0)
+    f2 = cnt / jnp.clip(l_new, min=1.0)
+    cache_u = f1[..., None] * st["cache_u"] + f2[..., None] * u_blk
+    cache_l = l_new
+
+    do_shift = shift[:, None, None, None]
+    zeros_k = jnp.zeros_like(st["k_win"][:, :, :l])
+    k_win = jnp.where(do_shift, jnp.concatenate(
+        [st["k_win"][:, :, l:], zeros_k], axis=2), st["k_win"])
+    v_win = jnp.where(do_shift, jnp.concatenate(
+        [st["v_win"][:, :, l:], jnp.zeros_like(st["v_win"][:, :, :l])],
+        axis=2), st["v_win"])
+    z_win = jnp.where(shift[:, None, None], jnp.concatenate(
+        [st["z_win"][:, :, l:], jnp.zeros_like(st["z_win"][:, :, :l])],
+        axis=2), st["z_win"])
+    return {"k_win": k_win, "v_win": v_win, "z_win": z_win,
+            "cache_u": cache_u, "cache_l": cache_l}
+
+
+def _decode_attn(p: Dict, cb_state: Dict, st: Dict, pos, x: jnp.ndarray,
+                 cfg: VQConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One token through one VQ-attention sublayer. x [B, Dm]."""
+    b, _ = x.shape
+    l, s = cfg.block_len, cfg.n_code
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    dk, dvh = cfg.d_k, cfg.d_v_head
+    tau_rsqrt = 1.0 / math.sqrt(cfg.tau_value)
+
+    st = _fold_and_shift(st, pos, cfg)
+    p_idx = pos % l                                   # [B]
+
+    x_t = layers.rmsnorm(x, p["ln_x"])
+    q = layers.rmsnorm(
+        (x_t @ p["wq"]).reshape(b, h, dk)) * tau_rsqrt
+    k = layers.rmsnorm(
+        (x_t @ p["wk"]).reshape(b, hk, dk)) * tau_rsqrt
+    v = jax.nn.silu((x_t @ p["wv"]).reshape(b, hk, dvh))
+    k_hat, z, _ = vq.stvq(k, cb_state["codebook"])    # [B,Hk,dk], [B,Hk]
+
+    # write into slot L + p_idx (one-hot write, vectorized over batch)
+    slot = jax.nn.one_hot(l + p_idx, 2 * l)           # [B, 2L]
+    wmask = slot[:, None, :, None]
+    k_win = st["k_win"] * (1 - wmask) + k_hat[:, :, None, :] * wmask
+    v_win = st["v_win"] * (1 - wmask) + v[:, :, None, :] * wmask
+    z_win = jnp.where(slot[:, None, :].astype(bool),
+                      z[:, :, None], st["z_win"])
+
+    # ---- scores -----------------------------------------------------------
+    jj = jnp.arange(2 * l)[None, :]                   # [1, 2L]
+    valid_prev = (jj < l) & (pos[:, None] >= l)
+    valid_cur = (jj >= l) & (jj <= l + p_idx[:, None])
+    valid = valid_prev | valid_cur                    # [B, 2L]
+    d = l + p_idx[:, None] - jj                       # distance, [B, 2L]
+    d_clip = jnp.clip(d, 0, 2 * l - 1)
+
+    phi = layers.sinusoid_table(2 * l, dk)
+    rp = (phi @ p["wr"].reshape(dk, h * dk)).reshape(2 * l, h, dk) * tau_rsqrt
+    bias_all = jnp.einsum("bhd,ehd->bhe", q, rp)      # [B,H,2L]
+    # one-hot contraction instead of take_along_axis (runtime compat,
+    # probe.py): bias[b,h,j] = bias_all[b,h,d_clip[b,j]]
+    d_onehot = jax.nn.one_hot(d_clip, 2 * l, dtype=bias_all.dtype)  # [B,2L,2L]
+    bias = jnp.einsum("bhe,bje->bhj", bias_all, d_onehot)
+    bias = jnp.where(valid[:, None], bias, NEG_INF)
+
+    def kv_b(t):  # [B,Hk,...] -> [B,H,...]
+        if hk == h:
+            return t
+        return jnp.broadcast_to(t[:, :1], (b, h) + t.shape[2:])
+
+    s_win = jnp.einsum("bhd,bhjd->bhj", q, kv_b(k_win)) + bias
+    cb_rows = jnp.repeat(cb_state["codebook"], h // hk, axis=0)  # [H,S,dk]
+    lb = jnp.where(st["cache_l"] > 0,
+                   jnp.log(jnp.clip(st["cache_l"], min=1.0)), NEG_INF)
+    s_cache = jnp.einsum("bhd,hsd->bhs", q, cb_rows) + kv_b(lb)
+    if not cfg.use_cache:
+        s_cache = jnp.full_like(s_cache, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s_win, axis=-1), jnp.max(s_cache, axis=-1))
+    a_win = jnp.exp(s_win - m[..., None])
+    a_cache = jnp.exp(s_cache - m[..., None])
+    denom = jnp.sum(a_win, axis=-1) + jnp.sum(a_cache, axis=-1)
+    o = jnp.einsum("bhj,bhjv->bhv", a_win, kv_b(v_win))
+    o += jnp.einsum("bhs,bhsv->bhv", a_cache, kv_b(st["cache_u"]))
+    o = (o / denom[..., None]).reshape(b, h * dvh)
+
+    if cfg.head_type == "shga":
+        o = o * jax.nn.silu(x_t @ p["wg"])
+    o = o @ p["wo"]
+
+    new_st = {"k_win": k_win, "v_win": v_win, "z_win": z_win,
+              "cache_u": st["cache_u"], "cache_l": st["cache_l"]}
+    return x + o, new_st
+
+
+def decode_step(params: Dict, cb_states: List[Dict], state: Dict,
+                token: jnp.ndarray, cfg: VQConfig):
+    """One decoding step. token [B] i32 -> (logits [B, V], new_state)."""
+    pos = state["pos"]
+    x = params["embed"][token]                        # [B, Dm]
+    if cfg.use_abs_pe:
+        x = x + params["pe_scale"] * layers.sinusoid_at(pos, cfg.d_model)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        x, st = _decode_attn(lp["attn"], cb_states[i], state["layers"][i],
+                             pos, x, cfg)
+        if "mlp" in lp:
+            x = layers.mlp_sublayer(lp["mlp"], x[:, None], cfg, None,
+                                    False)[:, 0]
+        new_layers.append(st)
+    logits = model._logits(params, cfg, x[:, None])[:, 0]
+    return logits, {"layers": new_layers, "pos": pos + 1}

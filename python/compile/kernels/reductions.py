@@ -1,0 +1,133 @@
+"""Cross-block reductions computing the compressive-cache variables.
+
+These are the three numerically-stabilized generalizations of FLASH's
+cross-block reductions from Appendix B / Appendix E of the paper:
+
+  * ``serial``  — ``jax.lax.scan`` over blocks (Code 2)
+  * ``matmul``  — lower-triangular matmul against block summaries (Code 3)
+  * ``assoc``   — ``jax.lax.associative_scan`` with a weighted-mean merge
+                  (Code 4)
+
+All three return, for every block index n, the *running mean* of value
+vectors per shortcode over blocks <= n-2 (``cache_u``, shape [B,R,S,Dv]) and
+the running count (``cache_l``, shape [B,R,S]). Storing means instead of sums
+(Remark 3.9) keeps the magnitudes bounded; the attention combine re-weights
+by moving log-counts into the exponent.
+
+Inputs: z [B,R,L] int32 shortcodes, v [B,R,L,Dv] values, n_code S.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def block_summaries(
+    z: jnp.ndarray, v: jnp.ndarray, n_code: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block grouped means and counts.
+
+    Returns (u_blk [B,R,S,Dv] mean of v per code within each block,
+             l_blk [B,R,S] count per code within each block).
+    """
+    delta = jax.nn.one_hot(z, n_code, dtype=v.dtype)       # [B,R,L,S]
+    l_blk = jnp.einsum("brls->brs", delta)                 # [B,R,S]
+    uv_blk = jnp.einsum("brls,brlv->brsv", delta, v)       # [B,R,S,Dv]
+    u_blk = uv_blk / jnp.clip(l_blk[..., None], min=1.0)
+    return u_blk, l_blk
+
+
+def shift2(u_cum: jnp.ndarray, l_cum: jnp.ndarray):
+    """Shift cumulative-through-block-n stats to 'blocks <= n-2' alignment.
+
+    Block n's attendable cache covers blocks <= n-2 (block n-1 is attended
+    directly with positional biases; see Theorem 3.7).
+    """
+    u = jnp.pad(u_cum[:, :-2], ((0, 0), (2, 0), (0, 0), (0, 0)))
+    l = jnp.pad(l_cum[:, :-2], ((0, 0), (2, 0), (0, 0)))
+    return u, l
+
+
+def reduce_serial(u_blk, l_blk):
+    """Code 2: sequential scan over blocks carrying (mean, count)."""
+
+    def scan_fn(carry, inp):
+        u, l = carry
+        u_b, l_b = inp
+        l_new = l + l_b
+        f1 = l / jnp.clip(l_new, min=1.0)
+        f2 = l_b / jnp.clip(l_new, min=1.0)
+        u_new = f1[..., None] * u + f2[..., None] * u_b
+        return (u_new, l_new), (u_new, l_new)
+
+    u0 = jnp.zeros_like(u_blk[:, 0])
+    l0 = jnp.zeros_like(l_blk[:, 0])
+    u_t = jnp.moveaxis(u_blk, 1, 0)  # scan axis first
+    l_t = jnp.moveaxis(l_blk, 1, 0)
+    _, (u_cum, l_cum) = jax.lax.scan(scan_fn, (u0, l0), (u_t, l_t))
+    return jnp.moveaxis(u_cum, 0, 1), jnp.moveaxis(l_cum, 0, 1)
+
+
+def reduce_matmul(u_blk, l_blk):
+    """Code 3: cumulative grouped means via a masked matmul.
+
+    The cumulative mean through block r is
+        sum_{g<=r} l_g * u_g / sum_{g<=r} l_g,
+    computed as a matmul of per-block normalized summaries against
+    count-fraction weights, which is the stabilized form of FLASH's
+    lower-triangular-ones matmul.
+    """
+    # tiled[b,s,r,g] = l_blk[b,g,s] for g <= r else 0
+    tiled = jnp.einsum("brs,bgs->bsrg", jnp.ones_like(l_blk), l_blk)
+    tiled = jnp.tril(tiled)
+    denom = jnp.clip(jnp.sum(tiled, axis=-1, keepdims=True), min=1.0)
+    fracs = tiled / denom                                   # [B,S,R,G]
+    u_cum = jnp.einsum("bsrg,bgsv->brsv", fracs, u_blk)
+    l_cum = jnp.cumsum(l_blk, axis=1)
+    return u_cum, l_cum
+
+
+def reduce_assoc(u_blk, l_blk):
+    """Code 4: parallel prefix scan with the weighted-mean monoid."""
+
+    def merge(a, b):
+        u_a, l_a = a
+        u_b, l_b = b
+        l_new = l_a + l_b
+        t1 = (l_a / jnp.clip(l_new, min=1.0))[..., None] * u_a
+        t2 = (l_b / jnp.clip(l_new, min=1.0))[..., None] * u_b
+        return t1 + t2, l_new
+
+    return jax.lax.associative_scan(merge, (u_blk, l_blk), axis=1)
+
+
+REDUCTIONS = {
+    "serial": reduce_serial,
+    "matmul": reduce_matmul,
+    "assoc": reduce_assoc,
+    # "inputscan" is not a cache-vars reduction: it scans whole layer inputs
+    # block-by-block (see model.py) and uses the serial merge incrementally.
+}
+
+
+def get_cache_vars(z, v, n_code, method: str):
+    """Cumulative (mean, count) through each block n (UNshifted; apply
+    ``shift2`` to obtain the attendable cache for each block).
+
+    Convenience wrapper over ``REDUCTIONS[method]`` which operate directly on
+    per-block (mean, count) summaries — the model prepends the TBPTT-carried
+    previous-block summary before reducing, see layers.py."""
+    if method == "inputscan":
+        method = "serial"
+    return REDUCTIONS[method](*block_summaries(z, v, n_code))
+
+
+def merge_cache(u_a, l_a, u_b, l_b):
+    """Merge two (mean, count) cache aggregates (used for the TBPTT carry)."""
+    l_new = l_a + l_b
+    t1 = (l_a / jnp.clip(l_new, min=1.0))[..., None] * u_a
+    t2 = (l_b / jnp.clip(l_new, min=1.0))[..., None] * u_b
+    return t1 + t2, l_new

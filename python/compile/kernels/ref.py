@@ -1,0 +1,104 @@
+"""Pure-jnp quadratic oracles for correctness testing.
+
+These implement Definition 3.1 directly (materializing the full T x T score
+matrix) and serve as ground truth for:
+
+  * the linear-time block recurrence (Theorem 3.7 exactness),
+  * the Pallas kernel (python/tests/test_kernel.py),
+  * the decode-time cache roll (python/tests/test_decode.py),
+  * golden values exported for the rust test-suite.
+
+Everything here is deliberately naive and O(T^2); nothing in this module is
+ever lowered into a shipped artifact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def quadratic_attention(q, k, v, bias):
+    """softmax(q k^T + bias) v over full sequences.
+
+    q [B,T,Dk], k [B,T,Dk], v [B,T,Dv], bias [B,T,T] (additive; caller bakes
+    causal mask / window structure / NEG_INF invalidations into it).
+    """
+    scores = jnp.einsum("bid,bjd->bij", q, k) + bias
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    a = jnp.exp(scores - m)
+    w = a / jnp.sum(a, axis=-1, keepdims=True)
+    return jnp.einsum("bij,bjv->biv", w, v)
+
+
+def banded_bias_matrix(bias_all, block_len, t):
+    """Expand per-distance q-dependent biases into the paper's blocked band.
+
+    bias_all [B,T,2L]: bias_all[b,i,d] is the bias for query i attending at
+    distance d (0 <= d < 2L). Bias applies only when key j is in the same or
+    previous block as query i (the paper's B has support on that band);
+    outside the band but causally visible => bias 0 (cache region); j > i =>
+    NEG_INF.
+    Returns [B,T,T].
+    """
+    b = bias_all.shape[0]
+    i = np.arange(t)[:, None]
+    j = np.arange(t)[None, :]
+    d = i - j
+    same_or_prev = (i // block_len - j // block_len) <= 1
+    causal = d >= 0
+    band = causal & same_or_prev
+    d_clip = np.clip(d, 0, bias_all.shape[-1] - 1)
+    gathered = jnp.take_along_axis(
+        bias_all, jnp.asarray(np.broadcast_to(d_clip, (b, t, t))), axis=-1
+    )
+    out = jnp.where(jnp.asarray(band), gathered, 0.0)
+    out = jnp.where(jnp.asarray(causal), out, NEG_INF)
+    return out
+
+
+def vq_attention_quadratic(q, k_hat, v, bias_all, block_len):
+    """Ground truth for VQ-Attention: dense quadratic attention over the
+    *quantized* keys with the blocked-band positional bias (Definition 3.1
+    with B as in Theorem 3.6). The linear-time recurrence must match this
+    bit-for-bit up to float assoc error."""
+    t = q.shape[1]
+    bias = banded_bias_matrix(bias_all, block_len, t)
+    return quadratic_attention(q, k_hat, v, bias)
+
+
+def naive_cache_vars(z, v, n_code):
+    """O(T*S) python-loop reference for the cross-block reductions.
+
+    z [B,R,L] int, v [B,R,L,Dv] -> (u_cum [B,R,S,Dv] running mean through
+    block r, l_cum [B,R,S] running count)."""
+    z = np.asarray(z)
+    v = np.asarray(v)
+    b, r, l = z.shape
+    dv = v.shape[-1]
+    u = np.zeros((b, r, n_code, dv), dtype=np.float64)
+    c = np.zeros((b, r, n_code), dtype=np.float64)
+    for bi in range(b):
+        sums = np.zeros((n_code, dv))
+        counts = np.zeros((n_code,))
+        for ri in range(r):
+            for li in range(l):
+                s = z[bi, ri, li]
+                sums[s] += v[bi, ri, li]
+                counts[s] += 1
+            c[bi, ri] = counts
+            u[bi, ri] = sums / np.clip(counts, 1.0, None)[:, None]
+    return u.astype(v.dtype), c.astype(v.dtype)
+
+
+def naive_quantize(k, codebook):
+    """Nearest-neighbour assignment, numpy loops. k [...,D], cb [S,D]."""
+    k = np.asarray(k)
+    cb = np.asarray(codebook)
+    flat = k.reshape(-1, k.shape[-1])
+    z = np.empty(flat.shape[0], dtype=np.int32)
+    for i, row in enumerate(flat):
+        z[i] = int(np.argmin(((row[None, :] - cb) ** 2).sum(-1)))
+    return z.reshape(k.shape[:-1])

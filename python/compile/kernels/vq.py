@@ -1,0 +1,114 @@
+"""Vector quantization with straight-through estimator + EMA k-means codebook.
+
+Implements Definition 2.6 (STVQ) and the van den Oord / Razavi EMA codebook
+update used by the paper (Appendix C: commit coefficient beta=1e-4, EMA rate
+gamma=0.99). Codebooks receive no gradient; they are updated by exponential
+moving averages of assignment counts and assigned-key sums, with Laplace
+smoothing of the counts.
+
+Shapes use H = number of key heads (1 for SHGA/MQA), S = codebook size,
+D = d_k per head.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def nearest_code(k: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Shortcodes z = argmin_s ||k - C_s||^2.
+
+    k: [..., H, D] (any leading dims), codebook: [H, S, D] -> z: [..., H] int32.
+
+    Uses the expanded form ||k||^2 - 2 k.C + ||C||^2; the ||k||^2 term is
+    constant w.r.t. s and omitted.
+    """
+    # scores[..., h, s] = -2 k.C_s + ||C_s||^2
+    dots = jnp.einsum("...hd,hsd->...hs", k, codebook)
+    c_sq = jnp.sum(jnp.square(codebook), axis=-1)  # [H, S]
+    dist = c_sq - 2.0 * dots
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def stvq(
+    k: jnp.ndarray, codebook: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Straight-through vector quantization (Definition 2.6).
+
+    Returns (k_hat, z, commit_loss) where commit_loss is the *mean over all
+    quantized vectors* of ||k - sg(C_z)||^2 (eq. 37 divided by token count;
+    the caller scales by beta and sums over layers).
+    """
+    z = nearest_code(k, codebook)
+    quantized = _gather_codes(codebook, z)
+    k_hat = k + jax.lax.stop_gradient(quantized - k)
+    commit = jnp.mean(
+        jnp.sum(jnp.square(k - jax.lax.stop_gradient(quantized)), axis=-1)
+    )
+    return k_hat, z, commit
+
+
+def _gather_codes(codebook: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """codebook: [H, S, D], z: [..., H] -> [..., H, D]."""
+    h = codebook.shape[0]
+    one_hot = jax.nn.one_hot(z, codebook.shape[1], dtype=codebook.dtype)
+    # [..., H, S] x [H, S, D] -> [..., H, D]
+    del h
+    return jnp.einsum("...hs,hsd->...hd", one_hot, codebook)
+
+
+def codebook_init(key: jax.Array, n_heads: int, n_code: int, d: int,
+                  scale: float = 1.0) -> Dict:
+    """Fresh EMA codebook state.
+
+    ``codebook`` is materialized from the EMA statistics so that the state is
+    self-consistent: codebook = ema_sum / smoothed(ema_count). ``scale``
+    should match the per-dim std of the keys being quantized (the model
+    rms-normalizes keys then multiplies by tau^-0.5, so their per-dim std is
+    ~tau^-0.5) — a mismatched init collapses early assignments onto a few
+    codes and the EMA takes thousands of steps to recover.
+    """
+    c = jax.random.normal(key, (n_heads, n_code, d)) * scale
+    return {
+        "codebook": c,
+        "ema_count": jnp.ones((n_heads, n_code)),
+        "ema_sum": c,  # consistent with count == 1
+    }
+
+
+def ema_update(
+    state: Dict, k: jnp.ndarray, z: jnp.ndarray, gamma: float, eps: float = 1e-5
+) -> Dict:
+    """EMA k-means codebook update (Razavi et al. 2019, eqs. in App. A).
+
+    k: [..., H, D] raw (unquantized) keys, z: [..., H] shortcodes. All leading
+    dims are flattened into the batch of assignments. Gradients are stopped:
+    codebooks are parameterized purely by the EMAs.
+    """
+    k = jax.lax.stop_gradient(k)
+    n_heads, n_code, _ = state["codebook"].shape
+    kf = k.reshape((-1, n_heads, k.shape[-1]))          # [T*, H, D]
+    zf = z.reshape((-1, n_heads))                       # [T*, H]
+    one_hot = jax.nn.one_hot(zf, n_code, dtype=kf.dtype)  # [T*, H, S]
+    counts = jnp.einsum("ths->hs", one_hot)
+    sums = jnp.einsum("ths,thd->hsd", one_hot, kf)
+    new_count = gamma * state["ema_count"] + (1.0 - gamma) * counts
+    new_sum = gamma * state["ema_sum"] + (1.0 - gamma) * sums
+    # Laplace smoothing keeps dead codes near the data mean instead of NaN.
+    total = jnp.sum(new_count, axis=-1, keepdims=True)
+    smoothed = (new_count + eps) / (total + n_code * eps) * total
+    codebook = new_sum / smoothed[..., None]
+    return {"codebook": codebook, "ema_count": new_count, "ema_sum": new_sum}
+
+
+def codebook_perplexity(z: jnp.ndarray, n_code: int) -> jnp.ndarray:
+    """exp(entropy) of the empirical shortcode distribution — a measure of
+    codebook utilization (S means uniform use, 1 means collapse)."""
+    zf = z.reshape((-1,))
+    counts = jnp.bincount(zf, length=n_code).astype(jnp.float32)
+    probs = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    ent = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(probs), 0.0))
+    return jnp.exp(ent)

@@ -1,0 +1,172 @@
+"""VQ-Attention block combine: Pallas kernel + jnp twin.
+
+This is the compute hot-spot of the paper (Theorem 3.7 / Appendix E Code 1):
+for each query block n, merge three score groups under one numerically-stable
+softmax —
+
+  * ``cache``   — scores against the codebook ``q @ C^T`` plus log-count
+                  biases (attends the compressive cache U(n-2)/L(n-2));
+  * ``prev``    — exact banded attention to block n-1 with positional biases;
+  * ``present`` — causally-masked attention within block n.
+
+Inputs arrive pre-aligned (the model shifts prev blocks / cache vars and bakes
+the causal mask, block-0 invalidation and log-count biases into the bias
+tensors), so the kernel body is uniform across grid cells — no data-dependent
+control flow, which is exactly what the TPU MXU wants.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid is (batch*heads,
+num_blocks); each grid cell loads one L-block of q/k/v plus the S-row codebook
+and cache into VMEM (~L*Dk + 2L*(Dk+Dv) + S*(Dk+Dv) floats) and issues
+MXU-shaped matmuls (L x Dk x L, L x Dk x S, L x S x Dv). On this image the
+kernel runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); interpret mode has no reverse-mode AD, so the public entry
+point wraps the kernel in ``jax.custom_vjp`` whose backward pass is the VJP of
+the jnp twin (same math; equality is asserted in python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# jnp twin — differentiable, single source of truth for the math
+# ---------------------------------------------------------------------------
+
+def combine_jnp(q, khat_cur, khat_prev, v_cur, v_prev, codebook,
+                cache_u, cache_lb, bias_cur, bias_prev):
+    """Stable three-way softmax attention combine.
+
+    Shapes (Bf folds batch*query-heads, R blocks, L block length):
+      q          [Bf, R, L, Dk]
+      khat_cur   [Bf, R, L, Dk]   quantized keys of block n
+      khat_prev  [Bf, R, L, Dk]   quantized keys of block n-1 (shifted in)
+      v_cur      [Bf, R, L, Dv]
+      v_prev     [Bf, R, L, Dv]
+      codebook   [Bf, S, Dk]      per-(folded)batch codebook rows
+      cache_u    [Bf, R, S, Dv]   running per-code value means over blocks<=n-2
+      cache_lb   [Bf, R, S]       log counts (NEG_INF where count == 0)
+      bias_cur   [Bf, R, L, L]    positional bias + causal mask (NEG_INF)
+      bias_prev  [Bf, R, L, L]    positional bias + block-0 invalidation
+    Returns o [Bf, R, L, Dv].
+    """
+    s_cur = jnp.einsum("brid,brjd->brij", q, khat_cur) + bias_cur
+    s_prev = jnp.einsum("brid,brjd->brij", q, khat_prev) + bias_prev
+    s_cache = jnp.einsum("brid,bsd->bris", q, codebook) + cache_lb[:, :, None, :]
+
+    m = jnp.maximum(
+        jnp.maximum(jnp.max(s_cur, axis=-1), jnp.max(s_prev, axis=-1)),
+        jnp.max(s_cache, axis=-1),
+    )
+    m = jax.lax.stop_gradient(m)[..., None]
+    a_cur = jnp.exp(s_cur - m)
+    a_prev = jnp.exp(s_prev - m)
+    a_cache = jnp.exp(s_cache - m)
+    denom = (jnp.sum(a_cur, axis=-1) + jnp.sum(a_prev, axis=-1)
+             + jnp.sum(a_cache, axis=-1))[..., None]
+    o = jnp.einsum("brij,brjv->briv", a_cur, v_cur)
+    o += jnp.einsum("brij,brjv->briv", a_prev, v_prev)
+    o += jnp.einsum("bris,brsv->briv", a_cache, cache_u)
+    return o / denom
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel — same math, one (batch, block) grid cell at a time
+# ---------------------------------------------------------------------------
+
+def _kernel(q_ref, kc_ref, kp_ref, vc_ref, vp_ref, cb_ref, cu_ref, clb_ref,
+            bc_ref, bp_ref, o_ref):
+    q = q_ref[0, 0]            # [L, Dk]
+    kc = kc_ref[0, 0]          # [L, Dk]
+    kp = kp_ref[0, 0]
+    vc = vc_ref[0, 0]          # [L, Dv]
+    vp = vp_ref[0, 0]
+    cb = cb_ref[0]             # [S, Dk]
+    cu = cu_ref[0, 0]          # [S, Dv]
+    clb = clb_ref[0, 0]        # [S]
+    bc = bc_ref[0, 0]          # [L, L]
+    bp = bp_ref[0, 0]
+
+    s_cur = jnp.dot(q, kc.T, preferred_element_type=jnp.float32) + bc
+    s_prev = jnp.dot(q, kp.T, preferred_element_type=jnp.float32) + bp
+    s_cache = jnp.dot(q, cb.T, preferred_element_type=jnp.float32) + clb[None, :]
+
+    m = jnp.maximum(
+        jnp.maximum(jnp.max(s_cur, axis=-1), jnp.max(s_prev, axis=-1)),
+        jnp.max(s_cache, axis=-1),
+    )[:, None]
+    a_cur = jnp.exp(s_cur - m)
+    a_prev = jnp.exp(s_prev - m)
+    a_cache = jnp.exp(s_cache - m)
+    denom = (jnp.sum(a_cur, axis=-1) + jnp.sum(a_prev, axis=-1)
+             + jnp.sum(a_cache, axis=-1))[:, None]
+    o = jnp.dot(a_cur, vc, preferred_element_type=jnp.float32)
+    o += jnp.dot(a_prev, vp, preferred_element_type=jnp.float32)
+    o += jnp.dot(a_cache, cu, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o / denom
+
+
+def combine_pallas_fwd_only(q, khat_cur, khat_prev, v_cur, v_prev, codebook,
+                            cache_u, cache_lb, bias_cur, bias_prev):
+    """Raw pallas_call (forward only). Grid = (Bf, R)."""
+    bf, r, l, dk = q.shape
+    dv = v_cur.shape[-1]
+    s = codebook.shape[1]
+
+    def bx(shape_block, index_map):
+        return pl.BlockSpec(shape_block, index_map)
+
+    grid = (bf, r)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            bx((1, 1, l, dk), lambda b, n: (b, n, 0, 0)),   # q
+            bx((1, 1, l, dk), lambda b, n: (b, n, 0, 0)),   # khat_cur
+            bx((1, 1, l, dk), lambda b, n: (b, n, 0, 0)),   # khat_prev
+            bx((1, 1, l, dv), lambda b, n: (b, n, 0, 0)),   # v_cur
+            bx((1, 1, l, dv), lambda b, n: (b, n, 0, 0)),   # v_prev
+            bx((1, s, dk), lambda b, n: (b, 0, 0)),         # codebook
+            bx((1, 1, s, dv), lambda b, n: (b, n, 0, 0)),   # cache_u
+            bx((1, 1, s), lambda b, n: (b, n, 0)),          # cache_lb
+            bx((1, 1, l, l), lambda b, n: (b, n, 0, 0)),    # bias_cur
+            bx((1, 1, l, l), lambda b, n: (b, n, 0, 0)),    # bias_prev
+        ],
+        out_specs=bx((1, 1, l, dv), lambda b, n: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bf, r, l, dv), q.dtype),
+        interpret=True,
+    )(q, khat_cur, khat_prev, v_cur, v_prev, codebook, cache_u, cache_lb,
+      bias_cur, bias_prev)
+    return out
+
+
+@jax.custom_vjp
+def combine_pallas(q, khat_cur, khat_prev, v_cur, v_prev, codebook,
+                   cache_u, cache_lb, bias_cur, bias_prev):
+    """Pallas forward, jnp-twin backward (interpret mode lacks AD)."""
+    return combine_pallas_fwd_only(q, khat_cur, khat_prev, v_cur, v_prev,
+                                   codebook, cache_u, cache_lb, bias_cur,
+                                   bias_prev)
+
+
+def _fwd(*args):
+    return combine_pallas_fwd_only(*args), args
+
+
+def _bwd(args, g):
+    _, vjp = jax.vjp(combine_jnp, *args)
+    return vjp(g)
+
+
+combine_pallas.defvjp(_fwd, _bwd)
+
+
+def combine(use_kernel: bool):
+    """Select the combine implementation."""
+    return combine_pallas if use_kernel else combine_jnp

@@ -1,0 +1,416 @@
+"""Transformer-VQ layers: GAU / MHA / MQA attention with VQ or full attention.
+
+All functions are pure: parameters and recurrent state are explicit pytrees,
+so every entry point lowers to a single self-contained HLO module that the
+rust coordinator drives (state in, state out). Windowed training follows
+§3.4.2 of the paper: each call processes W = R*L tokens and carries the
+compressive cache + previous block across windows (truncated backprop —
+carried tensors are stop-gradient'ed).
+
+Carry layout per attention layer (Bh = batch, Hk = kv heads):
+  cache_u [B, Hk, S, Dvh]  running mean of values per shortcode, blocks < g-1
+  cache_l [B, Hk, S]       running counts
+  prev_k  [B, Hk, L, Dk]   quantized keys of block g-1
+  prev_v  [B, Hk, L, Dvh]  values of block g-1
+  prev_z  [B, Hk, L] i32   shortcodes of block g-1 (to fold it into the cache
+                           once it leaves the positional-bias band)
+plus a model-level {"has_prev": [B] f32, "pos": [B] i32} entry.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import VQConfig
+from .kernels import vq
+from .kernels import reductions as red
+from .kernels.vq_attn import combine_jnp, combine_pallas, NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain=None, eps: float = 1e-6) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    if gain is not None:
+        y = y * gain
+    return y
+
+
+def dense_init(key, fan_in: int, fan_out: int) -> jnp.ndarray:
+    """PaLM-style variance-scaling init (Chowdhery et al. 2022)."""
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out)) * std
+
+
+def sinusoid_table(n_pos: int, dim: int, max_wavelength: float = 1e5):
+    """Fixed sinusoidal features; rows indexed by (relative) position.
+
+    Only used for small tables (2L rows); absolute PE uses sinusoid_at to
+    avoid baking a 16k-row constant into the HLO text.
+    """
+    pos = np.arange(n_pos)[:, None].astype(np.float64)
+    i = np.arange(dim // 2)[None, :].astype(np.float64)
+    angle = pos / np.power(max_wavelength, 2 * i / dim)
+    tab = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(tab, dtype=jnp.float32)
+
+
+def sinusoid_at(pos: jnp.ndarray, dim: int, max_wavelength: float = 1e5):
+    """Sinusoidal features computed at runtime for integer positions `pos`
+    (any shape). Returns [..., dim]. Constant-free (runtime sin/cos), so
+    arbitrarily long sequences cost nothing in artifact size."""
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    inv_freq = jnp.power(max_wavelength, -2.0 * i / dim)
+    angle = pos[..., None].astype(jnp.float32) * inv_freq
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def dropout(x, rate: float, key, train: bool):
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# relative positional biases (Transformer-XL style, local band only)
+# ---------------------------------------------------------------------------
+
+def rel_bias_all(q: jnp.ndarray, w_r: jnp.ndarray, block_len: int,
+                 tau_rsqrt: float) -> jnp.ndarray:
+    """Per-distance biases: out[..., i, d] = q_i . (phi(d) @ w_r) / sqrt(tau).
+
+    q [Bf, R, L, Dk] (already tau-scaled), w_r [Dk, Dk]; distances
+    d in [0, 2L-1]. Returns [Bf, R, L, 2L].
+    """
+    phi = sinusoid_table(2 * block_len, w_r.shape[0])      # [2L, Dk]
+    rp = (phi @ w_r) * tau_rsqrt                           # [2L, Dk]
+    return jnp.einsum("brid,ed->brie", q, rp)
+
+
+def gather_band_biases(bias_all: jnp.ndarray, block_len: int):
+    """Split per-distance biases into (bias_cur, bias_prev) [.., L, L].
+
+    bias_cur[i, j] = bias_all[i, i-j] + causal mask; bias_prev[i, j] =
+    bias_all[i, L+i-j] (query i of block n against key j of block n-1).
+
+    Implemented with *static* per-row slices + flips instead of a gather:
+    the indices are compile-time constants, and the deployed PJRT runtime
+    (xla_extension 0.5.1) miscompiles jax 0.8's constant-index gather form
+    (returns fill-NaNs / wrong rows; see python/compile/probe.py and
+    DESIGN.md §Runtime-compat).
+    """
+    l = block_len
+    i = np.arange(l)[:, None]
+    j = np.arange(l)[None, :]
+    causal = jnp.asarray((i - j < 0) * NEG_INF, dtype=bias_all.dtype)
+    # pad distances so row i's "current block" window is a plain slice:
+    # padded[..., i, l-1 + d] = bias_all[..., i, d]
+    pad = [(0, 0)] * (bias_all.ndim - 1) + [(l - 1, 0)]
+    padded = jnp.pad(bias_all, pad)
+    rows_cur = [jnp.flip(padded[..., r, r:r + l], axis=-1) for r in range(l)]
+    bias_cur = jnp.stack(rows_cur, axis=-2) + causal
+    # prev block: distances d = l+i-j for j in [0,l) => slice [i+1, i+l]
+    rows_prev = [jnp.flip(bias_all[..., r, r + 1:r + 1 + l], axis=-1)
+                 for r in range(l)]
+    bias_prev = jnp.stack(rows_prev, axis=-2)
+    return bias_cur, bias_prev
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_attn_layer(key, cfg: VQConfig) -> Dict:
+    dm, dk, dv = cfg.d_model, cfg.d_k, cfg.d_v
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln_x": jnp.ones((dm,)),
+        "wq": dense_init(ks[0], dm, h * dk),
+        "wk": dense_init(ks[1], dm, hk * dk),
+        "wv": dense_init(ks[2], dm, hk * cfg.d_v_head),
+        "wr": dense_init(ks[3], dk, h * dk).reshape(dk, h, dk),
+        "wo": dense_init(ks[4], dv, dm),
+    }
+    if cfg.head_type == "shga":
+        p["wg"] = dense_init(ks[5], dm, dv)
+    return p
+
+
+def init_mlp_layer(key, cfg: VQConfig) -> Dict:
+    dm, dff = cfg.d_model, cfg.d_v  # Dff = Dv keeps params comparable to GAU
+    ks = jax.random.split(key, 2)
+    return {
+        "ln": jnp.ones((dm,)),
+        "w1": dense_init(ks[0], dm, 2 * dff),
+        "w2": dense_init(ks[1], dff, dm),
+    }
+
+
+def init_layer_carry(cfg: VQConfig, batch: int) -> Dict:
+    hk, s, l = cfg.n_kv_heads, cfg.n_code, cfg.block_len
+    dk, dvh = cfg.d_k, cfg.d_v_head
+    if cfg.attn_type == "full":
+        # XL-style carry: previous window's keys/values (no grad). Under
+        # input scanning the recurrence unit is one L-block, so the carried
+        # memory is block-sized.
+        h = cfg.n_heads if cfg.head_type == "mha" else 1
+        mem = cfg.block_len if cfg.reduction == "inputscan" else cfg.window_len
+        return {
+            "prev_k": jnp.zeros((batch, h, mem, dk)),
+            "prev_v": jnp.zeros((batch, h, mem, dvh)),
+        }
+    return {
+        "cache_u": jnp.zeros((batch, hk, s, dvh)),
+        "cache_l": jnp.zeros((batch, hk, s)),
+        "prev_k": jnp.zeros((batch, hk, l, dk)),
+        "prev_v": jnp.zeros((batch, hk, l, dvh)),
+        "prev_z": jnp.zeros((batch, hk, l), dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# VQ attention over one window (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+def _fold_heads(x):
+    """[B, H, ...] -> [B*H, ...]"""
+    return x.reshape((-1,) + x.shape[2:])
+
+
+def _proj_heads(x, w, n_heads, d_head):
+    """x [B, W, Dm] @ w [Dm, H*dh] -> [B, H, W, dh]"""
+    b, wlen, _ = x.shape
+    y = x @ w
+    return jnp.moveaxis(y.reshape(b, wlen, n_heads, d_head), 2, 1)
+
+
+def vq_attention_window(
+    p: Dict, cb_state: Dict, carry: Dict, has_prev: jnp.ndarray,
+    x_tilde: jnp.ndarray, cfg: VQConfig,
+) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """Compute VQ-Attention for one window of W = R*L tokens.
+
+    Returns (o [B, W, Dv], new_carry, aux) where aux carries the commit loss
+    and the (k, z) pairs for the EMA codebook update.
+    """
+    b, wlen, _ = x_tilde.shape
+    l, s = cfg.block_len, cfg.n_code
+    r = wlen // l
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    dk, dvh = cfg.d_k, cfg.d_v_head
+    tau_rsqrt = 1.0 / math.sqrt(cfg.tau_value)
+
+    q = rmsnorm(_proj_heads(x_tilde, p["wq"], h, dk)) * tau_rsqrt
+    k = rmsnorm(_proj_heads(x_tilde, p["wk"], hk, dk)) * tau_rsqrt
+    v = jax.nn.silu(_proj_heads(x_tilde, p["wv"], hk, dvh))
+
+    # quantize keys per kv head: vq.stvq expects [..., H, D]
+    k_hd = jnp.moveaxis(k, 1, 2)                       # [B, W, Hk, Dk]
+    k_hat_hd, z_hd, commit = vq.stvq(k_hd, cb_state["codebook"])
+    k_hat = jnp.moveaxis(k_hat_hd, 2, 1)               # [B, Hk, W, Dk]
+    z = jnp.moveaxis(z_hd, 2, 1)                       # [B, Hk, W]
+
+    # -> blocks
+    qb = q.reshape(b, h, r, l, dk)
+    kb = k_hat.reshape(b, hk, r, l, dk)
+    vb = v.reshape(b, hk, r, l, dvh)
+    zb = z.reshape(b, hk, r, l)
+
+    # ---- cache variables (fold batch*kv-heads) --------------------------
+    zf = _fold_heads(zb)                               # [Bk, R, L]
+    vf = _fold_heads(vb)                               # [Bk, R, L, Dvh]
+    u_blk, l_blk = red.block_summaries(zf, vf, s)
+    # prepend the carried previous block's summary (guarded by has_prev)
+    pz = _fold_heads(carry["prev_z"])
+    pv = _fold_heads(carry["prev_v"])
+    pu, plc = red.block_summaries(pz[:, None], pv[:, None], s)
+    gate = jnp.repeat(has_prev, hk)[:, None, None]     # [Bk,1,1]
+    plc = plc * gate
+    ext_u = jnp.concatenate([pu, u_blk], axis=1)       # [Bk, R+1, S, Dvh]
+    ext_l = jnp.concatenate([plc, l_blk], axis=1)
+    reducer = red.REDUCTIONS["serial" if cfg.reduction == "inputscan"
+                             else cfg.reduction]
+    ext_cu, ext_cl = reducer(ext_u, ext_l)
+    # attendable for window block n = carry.cache (+) ext_cum[n-1]
+    att_u = jnp.concatenate(
+        [jnp.zeros_like(ext_cu[:, :1]), ext_cu[:, :r]], axis=1)[:, :r]
+    att_l = jnp.concatenate(
+        [jnp.zeros_like(ext_cl[:, :1]), ext_cl[:, :r]], axis=1)[:, :r]
+    cu_carry = _fold_heads(carry["cache_u"])[:, None]  # [Bk,1,S,Dvh]
+    cl_carry = _fold_heads(carry["cache_l"])[:, None]
+    cache_u, cache_l = red.merge_cache(
+        cu_carry * jnp.ones_like(att_u), cl_carry * jnp.ones_like(att_l),
+        att_u, att_l)
+    if not cfg.use_cache:
+        cache_u = jnp.zeros_like(cache_u)
+        cache_l = jnp.zeros_like(cache_l)
+    cache_lb = jnp.where(cache_l > 0.0, jnp.log(jnp.clip(cache_l, min=1.0)),
+                         NEG_INF)
+
+    # ---- prev-block keys/values -----------------------------------------
+    kprev = jnp.concatenate([carry["prev_k"][:, :, None], kb[:, :, :-1]],
+                            axis=2)                    # [B,Hk,R,L,Dk]
+    vprev = jnp.concatenate([carry["prev_v"][:, :, None], vb[:, :, :-1]],
+                            axis=2)
+
+    # ---- positional biases (per query head) ------------------------------
+    qf = _fold_heads(qb)                               # [Bh, R, L, Dk]
+    rp = (sinusoid_table(2 * l, dk) @ p["wr"].reshape(dk, h * dk)) \
+        .reshape(2 * l, h, dk) * tau_rsqrt
+    bias_all = jnp.einsum("bhrid,ehd->bhrie", qb, rp)
+    bias_all = _fold_heads(bias_all)                   # [Bh, R, L, 2L]
+    bias_cur, bias_prev = gather_band_biases(bias_all, l)
+    # invalidate block 0's prev attention on the first window of a sequence
+    inval = (1.0 - has_prev) * NEG_INF                 # [B]
+    first_blk = jnp.zeros((b, r)).at[:, 0].set(1.0)
+    bias_prev = bias_prev + jnp.repeat(
+        inval[:, None] * first_blk, h, axis=0)[:, :, None, None]
+
+    # ---- broadcast kv heads to query heads & fold -------------------------
+    def kv_to_qheads(x):
+        if hk == h:
+            return _fold_heads(x)
+        xe = jnp.broadcast_to(x[:, :, None], (b, hk, h // hk) + x.shape[2:])
+        return xe.reshape((b * h,) + x.shape[2:])
+
+    kc_f = kv_to_qheads(kb)
+    kp_f = kv_to_qheads(kprev)
+    vc_f = kv_to_qheads(vb)
+    vp_f = kv_to_qheads(vprev)
+    cu_f = kv_to_qheads(cache_u.reshape((b, hk) + cache_u.shape[1:]))
+    clb_f = kv_to_qheads(cache_lb.reshape((b, hk) + cache_lb.shape[1:]))
+    # Codebook rows live in the same (rms-normed, tau^-0.5-scaled) space as
+    # the keys — they were learned from them — so they need no extra factor.
+    # Map each folded (batch, query-head) index to its kv-head's codebook.
+    cb_exp = jnp.repeat(cb_state["codebook"], h // hk, axis=0)  # [H, S, Dk]
+    cb_f = jnp.tile(cb_exp, (b, 1, 1))                          # [B*H, S, Dk]
+
+    combine = combine_pallas if cfg.use_kernel else combine_jnp
+    o = combine(qf, kc_f, kp_f, vc_f, vp_f, cb_f,
+                cu_f, clb_f, bias_cur, bias_prev)      # [Bh, R, L, Dvh]
+
+    o = o.reshape(b, h, wlen, dvh)
+    o = jnp.moveaxis(o, 1, 2).reshape(b, wlen, h * dvh)
+
+    # ---- new carry (stop-grad: TBPTT boundary) ---------------------------
+    new_u, new_l = red.merge_cache(
+        cu_carry[:, 0], cl_carry[:, 0], ext_cu[:, r - 1], ext_cl[:, r - 1])
+    new_carry = {
+        "cache_u": jax.lax.stop_gradient(new_u.reshape(b, hk, s, dvh)),
+        "cache_l": jax.lax.stop_gradient(new_l.reshape(b, hk, s)),
+        "prev_k": jax.lax.stop_gradient(kb[:, :, -1]),
+        "prev_v": jax.lax.stop_gradient(vb[:, :, -1]),
+        "prev_z": jax.lax.stop_gradient(zb[:, :, -1]),
+    }
+    aux = {"commit": commit, "k_raw": k_hd, "z": z_hd}
+    return o, new_carry, aux
+
+
+# ---------------------------------------------------------------------------
+# full (quadratic) attention baseline with XL-style window carry
+# ---------------------------------------------------------------------------
+
+def full_attention_window(
+    p: Dict, carry: Dict, has_prev: jnp.ndarray, x_tilde: jnp.ndarray,
+    cfg: VQConfig,
+) -> Tuple[jnp.ndarray, Dict]:
+    b, wlen, _ = x_tilde.shape
+    l = cfg.block_len
+    h = cfg.n_heads
+    hk = 1 if cfg.head_type in ("shga", "mqa") else h
+    dk, dvh = cfg.d_k, cfg.d_v_head
+    tau_rsqrt = 1.0 / math.sqrt(cfg.tau_value)
+
+    q = rmsnorm(_proj_heads(x_tilde, p["wq"], h, dk)) * tau_rsqrt
+    k = rmsnorm(_proj_heads(x_tilde, p["wk"], hk, dk)) * tau_rsqrt
+    v = jax.nn.silu(_proj_heads(x_tilde, p["wv"], hk, dvh))
+
+    kfull = jnp.concatenate([carry["prev_k"], k], axis=2)   # [B,Hk,2W,dk]
+    vfull = jnp.concatenate([carry["prev_v"], v], axis=2)
+    if hk != h:
+        kfull = jnp.broadcast_to(kfull[:, :1], (b, h, 2 * wlen, dk))
+        vfull = jnp.broadcast_to(vfull[:, :1], (b, h, 2 * wlen, dvh))
+
+    # scores + causal mask over [carried window ‖ current window];
+    # the mask is built from iotas, not a baked [W, 2W] constant
+    scores = jnp.einsum("bhid,bhjd->bhij", q, kfull)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (wlen, 2 * wlen), 0) + wlen
+    jj = jax.lax.broadcasted_iota(jnp.int32, (wlen, 2 * wlen), 1)
+    causal = jnp.where(jj > ii, NEG_INF, 0.0)
+    scores = scores + causal
+    # XL-style q-dependent relative bias on the same/previous-block band
+    # (matches the VQ model's B support, Theorem 3.6). Added blockwise with
+    # static slices — no runtime gather (see gather_band_biases).
+    phi = sinusoid_table(2 * l, dk)
+    wr = p["wr"].reshape(dk, h * dk)
+    rp = (phi @ wr).reshape(2 * l, h, dk) * tau_rsqrt
+    r = wlen // l
+    qb = q.reshape(b, h, r, l, dk)
+    bias_all = jnp.einsum("bhrid,ehd->bhrie", qb, rp)       # [B,H,R,L,2L]
+    bias_cur, bias_prev = gather_band_biases(
+        bias_all.reshape(b * h, r, l, 2 * l), l)
+    bias_cur = bias_cur.reshape(b, h, r, l, l)
+    bias_prev = bias_prev.reshape(b, h, r, l, l)
+    sb = scores.reshape(b, h, r, l, 2 * wlen)
+    for rb in range(r):
+        cur0 = wlen + rb * l
+        sb = sb.at[:, :, rb, :, cur0:cur0 + l].add(bias_cur[:, :, rb])
+        prev0 = wlen + (rb - 1) * l  # rb == 0 -> tail of the carried window
+        sb = sb.at[:, :, rb, :, prev0:prev0 + l].add(bias_prev[:, :, rb])
+    scores = sb.reshape(b, h, wlen, 2 * wlen)
+    # invalidate the carried window before the first window of a sequence
+    inval = (1.0 - has_prev)[:, None, None, None] * NEG_INF
+    scores = scores + jnp.concatenate(
+        [jnp.broadcast_to(inval, (b, 1, wlen, wlen)),
+         jnp.zeros((b, 1, wlen, wlen))], axis=-1)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    a = jnp.exp(scores - m)
+    w = a / jnp.sum(a, axis=-1, keepdims=True)
+    o = jnp.einsum("bhij,bhjv->bhiv", w, vfull)
+    o = jnp.moveaxis(o, 1, 2).reshape(b, wlen, h * dvh)
+    new_carry = {
+        "prev_k": jax.lax.stop_gradient(k),
+        "prev_v": jax.lax.stop_gradient(v),
+    }
+    return o, new_carry
+
+
+# ---------------------------------------------------------------------------
+# sublayer assembly
+# ---------------------------------------------------------------------------
+
+def attn_sublayer(p, cb_state, carry, has_prev, x, cfg, rng, train):
+    """Pre-norm attention sublayer with gating (SHGA) or plain output proj."""
+    x_tilde = rmsnorm(x, p["ln_x"])
+    aux = {"commit": jnp.zeros(()), "k_raw": None, "z": None}
+    if cfg.attn_type == "vq":
+        o, new_carry, aux = vq_attention_window(
+            p, cb_state, carry, has_prev, x_tilde, cfg)
+    else:
+        o, new_carry = full_attention_window(p, carry, has_prev, x_tilde, cfg)
+    if cfg.head_type == "shga":
+        g = jax.nn.silu(x_tilde @ p["wg"])
+        o = o * g
+    o = o @ p["wo"]
+    o = dropout(o, cfg.dropout_rate, rng, train)
+    return x + o, new_carry, aux
+
+
+def mlp_sublayer(p, x, cfg, rng, train):
+    """SwiGLU MLP (only for mha/mqa head types; GAU fuses gating)."""
+    h = rmsnorm(x, p["ln"])
+    uv = h @ p["w1"]
+    u, vv = jnp.split(uv, 2, axis=-1)
+    y = (jax.nn.silu(u) * vv) @ p["w2"]
+    y = dropout(y, cfg.dropout_rate, rng, train)
+    return x + y

@@ -1,0 +1,186 @@
+"""L2: Transformer-VQ language model — fwd/bwd compute graph.
+
+Pure-functional LM over byte/BPE tokens. One call processes a training window
+of W tokens (R = W/L blocks) and threads the recurrent carry (compressive
+cache + previous block per layer), per §3.4.2 of the paper.
+
+Never imported at runtime: ``aot.py`` lowers the step functions in steps.py
+(which call into this module) to HLO text once, and the rust coordinator
+drives the artifacts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VQConfig
+from . import layers
+from .kernels import vq
+
+MAX_ABS_POS = 1 << 30  # position wrap bound (abs PE computed at runtime)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: VQConfig) -> Dict:
+    keys = jax.random.split(key, 2 * cfg.n_layers + 3)
+    p: Dict = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+        * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lp = {"attn": layers.init_attn_layer(keys[2 * i + 1], cfg)}
+        if cfg.head_type in ("mha", "mqa"):
+            lp["mlp"] = layers.init_mlp_layer(keys[2 * i + 2], cfg)
+        p["layers"].append(lp)
+    if not cfg.tie_embeddings:
+        p["head"] = layers.dense_init(keys[-2], cfg.d_model, cfg.vocab_size)
+    if cfg.use_abs_pe:
+        p["pe_scale"] = jnp.ones(())
+    return p
+
+
+def init_cb_states(key, cfg: VQConfig) -> List[Dict]:
+    """Per-layer EMA codebook states (empty list for the full baseline)."""
+    if cfg.attn_type != "vq":
+        return []
+    keys = jax.random.split(key, cfg.n_layers)
+    scale = 1.0 / math.sqrt(cfg.tau_value)  # match rms-normed tau-scaled keys
+    return [
+        vq.codebook_init(keys[i], cfg.n_kv_heads, cfg.n_code, cfg.d_k,
+                         scale=scale)
+        for i in range(cfg.n_layers)
+    ]
+
+
+def init_carry(cfg: VQConfig, batch: int) -> Dict:
+    return {
+        "layers": [layers.init_layer_carry(cfg, batch)
+                   for _ in range(cfg.n_layers)],
+        "has_prev": jnp.zeros((batch,)),
+        "pos": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: VQConfig, tokens, pos0):
+    x = params["embed"][tokens]                        # [B, W, Dm]
+    if cfg.use_abs_pe:
+        w = tokens.shape[1]
+        pos = pos0[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        x = x + params["pe_scale"] * layers.sinusoid_at(pos, cfg.d_model)
+    return x
+
+
+def _logits(params, cfg: VQConfig, x):
+    h = layers.rmsnorm(x, params["ln_f"])
+    if cfg.tie_embeddings:
+        return h @ (params["embed"].T / math.sqrt(cfg.d_model))
+    return h @ params["head"]
+
+
+def forward_window(
+    params: Dict, cb_states: List[Dict], carry: Dict, tokens: jnp.ndarray,
+    cfg: VQConfig, rng, train: bool,
+) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """tokens [B, W] -> (logits [B, W, V], new_carry, aux).
+
+    aux = {"commit": scalar, "ema": [(k_raw, z) per vq layer]}.
+    """
+    if cfg.reduction == "inputscan" and cfg.blocks_per_window > 1:
+        return _forward_inputscan(params, cb_states, carry, tokens, cfg, rng,
+                                  train)
+    x = _embed(params, cfg, tokens, carry["pos"])
+    has_prev = carry["has_prev"]
+    new_layer_carries = []
+    commit_total = jnp.zeros(())
+    ema_pairs = []
+    rngs = jax.random.split(rng, 2 * cfg.n_layers + 1)
+    for i, lp in enumerate(params["layers"]):
+        cb = cb_states[i] if cfg.attn_type == "vq" else None
+        x, lcarry, aux = layers.attn_sublayer(
+            lp["attn"], cb, carry["layers"][i], has_prev, x, cfg,
+            rngs[2 * i], train)
+        new_layer_carries.append(lcarry)
+        commit_total = commit_total + aux["commit"]
+        if aux["k_raw"] is not None:
+            ema_pairs.append((aux["k_raw"], aux["z"]))
+        if "mlp" in lp:
+            x = layers.mlp_sublayer(lp["mlp"], x, cfg, rngs[2 * i + 1], train)
+    logits = _logits(params, cfg, x)
+    new_carry = {
+        "layers": new_layer_carries,
+        "has_prev": jnp.ones_like(has_prev),
+        "pos": carry["pos"] + tokens.shape[1],
+    }
+    return logits, new_carry, {"commit": commit_total, "ema": ema_pairs}
+
+
+def _forward_inputscan(params, cb_states, carry, tokens, cfg, rng, train):
+    """Table 9 variant: lax.scan over L-blocks, all layers inside the body.
+
+    Mathematically identical to the batched-window forward (asserted in
+    python/tests/test_model.py); trades parallelism for O(L) activation
+    memory, mirroring Wu et al. / Hutchins et al. input scanning.
+    """
+    b, w = tokens.shape
+    l = cfg.block_len
+    r = w // l
+    blocks = tokens.reshape(b, r, l)
+    cfg_blk = cfg.replace(reduction="serial", window_len=l)
+
+    def body(state, blk):
+        carry_s, rng_s = state
+        rng_s, sub = jax.random.split(rng_s)
+        logits, new_carry, aux = forward_window(
+            params, cb_states, carry_s, blk, cfg_blk, sub, train)
+        ema_flat = tuple(x for pair in aux["ema"] for x in pair)
+        return (new_carry, rng_s), (logits, aux["commit"], ema_flat)
+
+    (final_carry, _), (logits, commits, ema_flat) = jax.lax.scan(
+        body, (carry, rng), jnp.moveaxis(blocks, 1, 0))
+    logits = jnp.moveaxis(logits, 0, 1).reshape(b, w, -1)
+    # re-pair ema tensors: scan stacked the block axis at dim 0
+    ema_pairs = []
+    for i in range(0, len(ema_flat), 2):
+        kk = jnp.moveaxis(ema_flat[i], 0, 1).reshape(
+            b, w, *ema_flat[i].shape[3:])
+        zz = jnp.moveaxis(ema_flat[i + 1], 0, 1).reshape(
+            b, w, *ema_flat[i + 1].shape[3:])
+        ema_pairs.append((kk, zz))
+    return logits, final_carry, {"commit": jnp.sum(commits) / r,
+                                 "ema": ema_pairs}
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cb_states, carry, inputs, targets, cfg: VQConfig, rng,
+            train: bool):
+    """Average next-token CE + beta * summed commit losses (eq. 35-37)."""
+    logits, new_carry, aux = forward_window(
+        params, cb_states, carry, inputs, cfg, rng, train)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: the deployed PJRT
+    # runtime miscompiles some gather forms (probe.py / DESIGN.md)
+    onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=logp.dtype)
+    ce_tok = -jnp.sum(onehot * logp, axis=-1)
+    ce = jnp.mean(ce_tok)
+    loss = ce + cfg.commit_coef * aux["commit"]
+    return loss, (ce, aux["commit"], new_carry, aux["ema"])
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,136 @@
+"""Compatibility probe: verify HLO ops execute correctly under the rust
+PJRT runtime (xla_extension 0.5.1), which predates jax 0.8's lowering by
+~3 years. Some gather/scatter forms miscompile there (see DESIGN.md
+§Runtime-compat); this harness catches regressions whenever the lowering
+patterns change.
+
+Usage:
+  python -m compile.probe emit /tmp/probes     # write hlo+inputs+expected
+  <run rust:  runhlo <hlo> <in.tvq> <got.tvq>  for each probe>
+  python -m compile.probe check /tmp/probes    # compare
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tvq
+from .aot import to_hlo_text
+
+
+def _rand(key, shape, dtype=jnp.float32, hi=None):
+    if dtype == jnp.int32:
+        return jax.random.randint(key, shape, 0, hi or 8)
+    return jax.random.normal(key, shape, dtype)
+
+
+def build_probes():
+    """name -> (fn, args). Functions must be deterministic."""
+    k = jax.random.split(jax.random.PRNGKey(0), 24)
+    probes = {}
+
+    # embedding lookup (classic gather)
+    probes["embed_lookup"] = (
+        lambda emb, idx: (emb[idx],),
+        (_rand(k[0], (16, 8)), _rand(k[1], (4, 6), jnp.int32, 16)),
+    )
+    # take_along_axis depth-3 (the CE-loss gather shape)
+    probes["take_along3"] = (
+        lambda x, i: (jnp.take_along_axis(x, i[..., None], axis=-1),),
+        (_rand(k[2], (2, 6, 9)), _rand(k[3], (2, 6), jnp.int32, 9)),
+    )
+    # take_along_axis depth-4 (the band-bias gather shape)
+    probes["take_along4"] = (
+        lambda x, i: (jnp.take_along_axis(x, i, axis=-1),),
+        (_rand(k[4], (2, 3, 4, 10)), _rand(k[5], (2, 3, 4, 4), jnp.int32, 10)),
+    )
+    # one-hot matmul alternative to gather
+    probes["onehot_matmul"] = (
+        lambda emb, idx: (jnp.einsum("btv,vd->btd",
+                                     jax.nn.one_hot(idx, emb.shape[0]), emb),),
+        (_rand(k[6], (16, 8)), _rand(k[7], (4, 6), jnp.int32, 16)),
+    )
+    # scatter-add via bincount
+    probes["bincount"] = (
+        lambda z: (jnp.bincount(z, length=16).astype(jnp.float32),),
+        (_rand(k[8], (64,), jnp.int32, 16),),
+    )
+    # cumsum / scan
+    probes["cumsum"] = (
+        lambda x: (jnp.cumsum(x, axis=1),),
+        (_rand(k[9], (3, 7, 2)),),
+    )
+    # .at[].set one-hot write (decode path)
+    probes["at_set"] = (
+        lambda x, v: (x.at[:, 3].set(v),),
+        (_rand(k[10], (4, 8)), _rand(k[11], (4,))),
+    )
+    # dynamic_update_slice-free masked write (decode path)
+    def masked_write(win, val, p):
+        slot = jax.nn.one_hot(p, win.shape[1], dtype=win.dtype)
+        return (win * (1 - slot[..., None]) + val[:, None, :] * slot[..., None],)
+    probes["masked_write"] = (
+        masked_write,
+        (_rand(k[12], (2, 8, 4)), _rand(k[13], (2, 4)),
+         _rand(k[14], (2,), jnp.int32, 8)),
+    )
+    # table row gather with clipped indices (decode positional bias)
+    probes["table_rows"] = (
+        lambda t, p: (t[jnp.clip(p, 0, t.shape[0] - 1)],),
+        (_rand(k[15], (32, 8)), _rand(k[16], (5,), jnp.int32, 32)),
+    )
+    # argmin + one_hot codebook gather (vq path)
+    def vq_assign(kk, cb):
+        d = jnp.sum(cb * cb, -1) - 2.0 * kk @ cb.T
+        z = jnp.argmin(d, -1)
+        return (jax.nn.one_hot(z, cb.shape[0]) @ cb, z.astype(jnp.int32))
+    probes["vq_assign"] = (vq_assign, (_rand(k[17], (6, 4)), _rand(k[18], (9, 4))))
+    return probes
+
+
+def emit(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, args) in build_probes().items():
+        with open(f"{out_dir}/{name}.hlo.txt", "w") as f:
+            f.write(to_hlo_text(fn, *args))
+        tvq.write(f"{out_dir}/{name}.in.tvq",
+                  [(f"arg{i}", np.asarray(a)) for i, a in enumerate(args)])
+        out = fn(*args)
+        tvq.write(f"{out_dir}/{name}.expected.tvq",
+                  [(f"out{i}", np.asarray(o)) for i, o in enumerate(out)])
+    print(f"emitted {len(build_probes())} probes to {out_dir}")
+
+
+def check(out_dir: str) -> int:
+    failures = 0
+    for name in build_probes():
+        got_path = f"{out_dir}/{name}.got.tvq"
+        if not os.path.exists(got_path):
+            print(f"MISSING {name} (run runhlo first)")
+            failures += 1
+            continue
+        want = tvq.read(f"{out_dir}/{name}.expected.tvq")
+        got = tvq.read(got_path)
+        ok = len(want) == len(got)
+        if ok:
+            for (_, w), (_, g) in zip(want, got):
+                if w.shape != g.shape or not np.allclose(
+                        w.astype(np.float64), g.astype(np.float64),
+                        atol=1e-5, rtol=1e-5):
+                    ok = False
+        print(f"{'OK  ' if ok else 'FAIL'} {name}")
+        failures += 0 if ok else 1
+    return failures
+
+
+if __name__ == "__main__":
+    mode, out_dir = sys.argv[1], sys.argv[2]
+    if mode == "emit":
+        emit(out_dir)
+    else:
+        sys.exit(check(out_dir))

@@ -1,0 +1,129 @@
+"""Step functions lowered to HLO artifacts.
+
+Each function is pure: (state..., inputs...) -> (state'..., outputs...). The
+rust coordinator owns all state between calls — params, AdamW moments,
+codebook EMAs, recurrent carry — so checkpointing/resume is trivial and the
+artifacts contain no host callbacks.
+
+The learning rate arrives as a scalar input: the LR schedule (linear warmup +
+cosine decay, Appendix C) lives in the rust scheduler (L3), keeping policy
+out of the compiled graph.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VQConfig
+from . import model
+from .kernels import vq
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph; Appendix C hyperparameters)
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros(())}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params, grads, opt, lr, cfg: VQConfig):
+    """Returns (new_params, new_opt, grad_norm). Decay skips 1-D tensors
+    (norm gains, scales) following Radford et al. 2019."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+    step = opt["step"] + 1.0
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+
+    def upd(p, g, m, v):
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2 and cfg.weight_decay > 0.0:
+            delta = delta + cfg.weight_decay * p
+        return p - lr * delta, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def train_step(params, opt, cb_states: List[Dict], carry, tokens, lr, seed,
+               cfg: VQConfig):
+    """One §3.4.2 update over a window of W tokens.
+
+    tokens [B, W+1] (inputs ‖ next-token targets). Returns
+    (params', opt', cb_states', carry', metrics [6]):
+    metrics = [loss, ce, commit, grad_norm, code_perplexity, lr].
+    """
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    rng = jax.random.PRNGKey(seed)
+
+    (loss, (ce, commit, new_carry, ema_pairs)), grads = jax.value_and_grad(
+        model.loss_fn, has_aux=True)(
+        params, cb_states, carry, inputs, targets, cfg, rng, True)
+
+    new_params, new_opt, gnorm = adamw_update(params, grads, opt, lr, cfg)
+
+    new_cbs = []
+    perplexities = []
+    for cb, (k_raw, z) in zip(cb_states, ema_pairs):
+        new_cbs.append(vq.ema_update(cb, k_raw, z, cfg.ema_rate))
+        perplexities.append(vq.codebook_perplexity(z, cfg.n_code))
+    perp = (jnp.mean(jnp.stack(perplexities)) if perplexities
+            else jnp.zeros(()))
+
+    metrics = jnp.stack([loss, ce, commit, gnorm, perp, lr])
+    return new_params, new_opt, new_cbs, new_carry, metrics
+
+
+def eval_step(params, cb_states, carry, tokens, cfg: VQConfig):
+    """Windowed evaluation. tokens [B, W+1] -> (carry', metrics [2] =
+    [sum CE over window, token count])."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    rng = jax.random.PRNGKey(0)
+    _, (ce, _, new_carry, _) = model.loss_fn(
+        params, cb_states, carry, inputs, targets, cfg, rng, False)
+    n_tok = jnp.asarray(inputs.size, dtype=jnp.float32)
+    metrics = jnp.stack([ce * n_tok, n_tok])
+    return new_carry, metrics
+
+
+def fwdbwd_bench(params, cb_states, carry, tokens, cfg: VQConfig):
+    """Throughput benchmark body (Tables 6-9): forward + backward over a full
+    sequence of length T = window_len; returns the loss and the gradient
+    global norm so XLA cannot DCE the backward pass."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    rng = jax.random.PRNGKey(0)
+    (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, cb_states, carry, inputs, targets, cfg, rng, True)
+    return jnp.stack([loss, global_norm(grads)])

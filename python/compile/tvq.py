@@ -1,0 +1,69 @@
+"""TVQ tensor-store: the binary interchange format between python and rust.
+
+Layout:  b"TVQ1" | u32 header_len (LE) | JSON header | raw tensor data.
+Header: {"tensors": [{"name", "dtype" ("f32"|"i32"|"u32"), "shape",
+"offset", "nbytes"}]} — offsets relative to the start of the data section.
+All data little-endian, C-contiguous. The rust reader/writer lives in
+rust/src/store.rs and round-trips bit-exactly (asserted in cargo tests
+against files generated here).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+MAGIC = b"TVQ1"
+
+_DTYPES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+    np.dtype(np.uint32): "u32",
+}
+_NP_DTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path: str, tensors: Sequence[Tuple[str, np.ndarray]]) -> None:
+    metas: List[Dict] = []
+    blobs: List[bytes] = []
+    off = 0
+    for name, arr in tensors:
+        shape = list(np.shape(arr))
+        # NB: ascontiguousarray promotes 0-d arrays to 1-d; restore shape.
+        arr = np.ascontiguousarray(arr).reshape(shape)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        dt = _DTYPES[arr.dtype]
+        raw = arr.tobytes()
+        metas.append({"name": name, "dtype": dt, "shape": list(arr.shape),
+                      "offset": off, "nbytes": len(raw)})
+        blobs.append(raw)
+        off += len(raw)
+    header = json.dumps({"tensors": metas}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read(path: str) -> List[Tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r} in {path}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        data = f.read()
+    out = []
+    for m in header["tensors"]:
+        raw = data[m["offset"]:m["offset"] + m["nbytes"]]
+        arr = np.frombuffer(raw, dtype=_NP_DTYPES[m["dtype"]]).reshape(
+            m["shape"]).copy()
+        out.append((m["name"], arr))
+    return out

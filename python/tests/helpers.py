@@ -1,0 +1,60 @@
+"""Shared fixtures/utilities for the python test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.configs import VQConfig
+from compile import model
+from compile.kernels import vq, reductions as red
+from compile.kernels.vq_attn import NEG_INF
+
+
+def rand_inputs(seed, b, r, l, s, dk, dv):
+    """Random, pre-aligned inputs for the attention combine (first window:
+    no carried prev block, empty initial cache)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    t = r * l
+    q = jax.random.normal(ks[0], (b, t, dk)) / np.sqrt(dk)
+    k = jax.random.normal(ks[1], (b, t, dk)) / np.sqrt(dk)
+    v = jax.random.normal(ks[2], (b, t, dv))
+    codebook = jax.random.normal(ks[3], (1, s, dk)) / np.sqrt(dk)
+    # q-dependent per-distance biases
+    wr = jax.random.normal(ks[4], (dk, 2 * l)) * 0.1
+    bias_all = q @ wr  # [b, t, 2l]
+    return q, k, v, codebook, bias_all
+
+
+def combine_inputs_from_seq(q, k_hat, z, v, bias_all, l, s, reduction="serial"):
+    """Build the block-aligned inputs the combine expects, from full-sequence
+    tensors (single kv head, first window)."""
+    b, t, dk = q.shape
+    dv = v.shape[-1]
+    r = t // l
+    qb = q.reshape(b, r, l, dk)
+    kb = k_hat.reshape(b, r, l, dk)
+    vb = v.reshape(b, r, l, dv)
+    zb = z.reshape(b, r, l)
+
+    u_cum, l_cum = red.REDUCTIONS[reduction](*red.block_summaries(zb, vb, s))
+    cache_u, cache_l = red.shift2(u_cum, l_cum)
+    cache_lb = jnp.where(cache_l > 0, jnp.log(jnp.clip(cache_l, min=1.0)),
+                         NEG_INF)
+
+    kprev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+
+    ba = bias_all.reshape(b, r, l, 2 * l)
+    from compile.layers import gather_band_biases
+    bias_cur, bias_prev = gather_band_biases(ba, l)
+    # first block has no previous block
+    inval = jnp.zeros((b, r, 1, 1)).at[:, 0].set(NEG_INF)
+    bias_prev = bias_prev + inval
+    return qb, kb, kprev, vb, vprev, cache_u, cache_lb, bias_cur, bias_prev
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol, err_msg=msg)

@@ -1,0 +1,112 @@
+"""AOT pipeline tests: manifest coherence, input-retention wrapper, HLO
+text properties required by the old-runtime parser (DESIGN.md §10)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model, steps, decode
+from compile.configs import PRESETS
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_keep_all_inputs_retains_unused_args():
+    def fn(x, unused):
+        return (x * 2.0,)
+
+    wrapped = aot.keep_all_inputs(fn)
+    lowered = jax.jit(wrapped).lower(jnp.ones((3,)), jnp.ones((5,)))
+    text = lowered.compiler_ir("stablehlo")
+    # both parameters must survive lowering
+    n_args = str(text).count("%arg")
+    assert "%arg1" in str(text), "unused arg was DCE'd"
+    # and values are unchanged
+    out = jax.jit(wrapped)(jnp.asarray([1.0, 2.0, 3.0]), jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(out[0]), [2.0, 4.0, 6.0])
+    del n_args
+
+
+def test_hlo_text_has_no_elided_constants():
+    """print_large_constants=True is load-bearing (parser zeroes `{...}`)."""
+    big = jnp.asarray(np.random.RandomState(0).randn(64, 32).astype("f"))
+
+    def fn(x):
+        return (x @ big,)
+
+    text = aot.to_hlo_text(fn, jnp.ones((4, 64)))
+    assert "constant({...})" not in text
+    assert "f32[64,32]" in text
+
+
+def test_entry_builders_cover_groups():
+    cfg = PRESETS["quickstart"]
+    fn, args, gin, gout = aot.build_train(cfg)
+    in_groups = {l["group"] for l in gin}
+    assert in_groups == {"params", "opt", "cb", "carry", "tokens", "lr",
+                         "seed"}
+    out_groups = {l["group"] for l in gout}
+    assert out_groups == {"params", "opt", "cb", "carry", "metrics"}
+    # leaf counts of recurring groups must match between inputs and outputs
+    for g in ("params", "opt", "cb", "carry"):
+        n_in = sum(1 for l in gin if l["group"] == g)
+        n_out = sum(1 for l in gout if l["group"] == g)
+        assert n_in == n_out, g
+
+
+def test_group_spec_matches_tree_leaves():
+    cfg = PRESETS["quickstart"]
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    spec = aot.flat_spec(params, "params")
+    leaves = jax.tree_util.tree_leaves(params)
+    assert len(spec) == len(leaves)
+    for s, leaf in zip(spec, leaves):
+        assert tuple(s["shape"]) == np.shape(leaf)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestBuiltManifest:
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self):
+        m = self.manifest()
+        for name, spec in m["artifacts"].items():
+            path = os.path.join(ARTIFACTS, spec["hlo"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 1000, name
+
+    def test_preset_artifacts_present(self):
+        m = self.manifest()
+        for preset, entries in aot.PRESET_ENTRIES.items():
+            for e in entries:
+                assert f"{preset}.{e}" in m["artifacts"], f"{preset}.{e}"
+
+    def test_input_shapes_match_configs(self):
+        m = self.manifest()
+        spec = m["artifacts"]["quickstart.train"]
+        cfg = PRESETS["quickstart"]
+        tokens = [l for l in spec["inputs"] if l["group"] == "tokens"]
+        assert tokens[0]["shape"] == [cfg.batch_size, cfg.window_len + 1]
+        assert spec["config"]["n_code"] == cfg.n_code
+
+    def test_init_state_matches_manifest_param_specs(self):
+        from compile import tvq
+        m = self.manifest()
+        spec = m["artifacts"]["quickstart.train"]
+        init = tvq.read(os.path.join(ARTIFACTS, "quickstart.init.tvq"))
+        by_group = {}
+        for name, arr in init:
+            g = name.split("[")[0].split("/")[0]
+            by_group.setdefault(g, []).append(arr)
+        params_spec = [l for l in spec["inputs"] if l["group"] == "params"]
+        assert len(by_group["params"]) == len(params_spec)
+        for arr, leaf in zip(by_group["params"], params_spec):
+            assert list(arr.shape) == leaf["shape"]

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel vs the pure-jnp oracle — the CORE correctness signal.
+
+The kernel (kernels/vq_attn.py) must agree with (a) the jnp twin that its
+custom backward pass differentiates, and (b) the quadratic oracle over
+quantized keys. Hypothesis sweeps shapes.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vq
+from compile.kernels.vq_attn import combine_jnp, combine_pallas, NEG_INF
+from tests.helpers import rand_inputs, combine_inputs_from_seq, assert_close
+
+
+def build_combine_inputs(seed, b, r, l, s, dk, dv):
+    q, k, v, codebook, bias_all = rand_inputs(seed, b, r, l, s, dk, dv)
+    k_hat, z, _ = vq.stvq(k[:, :, None, :], codebook)
+    k_hat, z = k_hat[:, :, 0], z[:, :, 0]
+    parts = combine_inputs_from_seq(q, k_hat, z, v, bias_all, l, s)
+    cb_f = jnp.broadcast_to(codebook[0][None], (b, s, dk))
+    return parts, cb_f, (q, k_hat, v, bias_all)
+
+
+SHAPES = [
+    (1, 2, 4, 8, 8, 16),
+    (2, 3, 8, 16, 8, 8),
+    (1, 4, 16, 32, 16, 32),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_jnp_twin(shape):
+    (qb, kb, kp, vb, vp, cu, clb, bc, bp), cb_f, _ = build_combine_inputs(
+        0, *shape)
+    got = combine_pallas(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    want = combine_jnp(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    assert_close(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_quadratic_oracle(shape):
+    b, r, l, s, dk, dv = shape
+    parts, cb_f, (q, k_hat, v, bias_all) = build_combine_inputs(1, *shape)
+    got = combine_pallas(parts[0], parts[1], parts[2], parts[3], parts[4],
+                         cb_f, parts[5], parts[6], parts[7], parts[8])
+    want = ref.vq_attention_quadratic(q, k_hat, v, bias_all, l)
+    assert_close(got.reshape(b, r * l, dv), want, atol=5e-5, rtol=5e-4)
+
+
+def test_kernel_gradients_flow():
+    """The custom_vjp must differentiate through all float inputs."""
+    (qb, kb, kp, vb, vp, cu, clb, bc, bp), cb_f, _ = build_combine_inputs(
+        2, 1, 2, 4, 8, 8, 8)
+
+    def loss_k(q, v):
+        return jnp.sum(
+            combine_pallas(q, kb, kp, v, vp, cb_f, cu, clb, bc, bp) ** 2)
+
+    def loss_j(q, v):
+        return jnp.sum(
+            combine_jnp(q, kb, kp, v, vp, cb_f, cu, clb, bc, bp) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(qb, vb)
+    gj = jax.grad(loss_j, argnums=(0, 1))(qb, vb)
+    for a, b_ in zip(gk, gj):
+        assert_close(a, b_, atol=1e-5, rtol=1e-4)
+    assert float(jnp.max(jnp.abs(gk[0]))) > 0
+
+
+def test_kernel_under_jit():
+    (qb, kb, kp, vb, vp, cu, clb, bc, bp), cb_f, _ = build_combine_inputs(
+        3, 1, 2, 8, 8, 4, 4)
+    f = jax.jit(combine_pallas)
+    got = f(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    want = combine_jnp(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    assert_close(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_attends_cache():
+    """Attention output must move when the cached value means change."""
+    (qb, kb, kp, vb, vp, cu, clb, bc, bp), cb_f, _ = build_combine_inputs(
+        4, 1, 4, 4, 8, 8, 8)
+    base = combine_pallas(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    moved = combine_pallas(qb, kb, kp, vb, vp, cb_f, cu + 1.0, clb, bc, bp)
+    # later blocks (with non-empty cache) must change
+    diff = float(jnp.max(jnp.abs(base[:, 2:] - moved[:, 2:])))
+    assert diff > 1e-4
+
+
+def test_kernel_ignores_empty_cache():
+    """With all log-count biases at -inf, the cache contributes nothing."""
+    (qb, kb, kp, vb, vp, cu, clb, bc, bp), cb_f, _ = build_combine_inputs(
+        5, 1, 3, 4, 8, 8, 8)
+    clb_off = jnp.full_like(clb, NEG_INF)
+    a = combine_pallas(qb, kb, kp, vb, vp, cb_f, cu, clb_off, bc, bp)
+    b_ = combine_pallas(qb, kb, kp, vb, vp, cb_f, cu * 0 + 99.0, clb_off,
+                        bc, bp)
+    assert_close(a, b_, atol=1e-6, rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(0, 100_000),
+    st.integers(1, 2),
+    st.integers(1, 4),
+    st.sampled_from([2, 4, 8]),
+    st.sampled_from([4, 8, 16]),
+    st.sampled_from([4, 8]),
+    st.sampled_from([4, 8, 12]),
+)
+def test_hypothesis_kernel_vs_oracle(seed, b, r, l, s, dk, dv):
+    parts, cb_f, (q, k_hat, v, bias_all) = build_combine_inputs(
+        seed, b, r, l, s, dk, dv)
+    got = combine_pallas(parts[0], parts[1], parts[2], parts[3], parts[4],
+                         cb_f, parts[5], parts[6], parts[7], parts[8])
+    want = ref.vq_attention_quadratic(q, k_hat, v, bias_all, l)
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(b, r * l, dv)), np.asarray(want),
+        atol=1e-4, rtol=1e-3)

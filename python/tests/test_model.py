@@ -1,0 +1,141 @@
+"""Model-level tests: shapes, head types, reductions equivalence,
+input-scanning variant, full-attention baseline, ablation configs."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.configs import VQConfig, PRESETS, throughput_grid
+from compile import model
+from tests.helpers import assert_close
+
+BASE = VQConfig(vocab_size=64, d_model=32, d_k=8, d_v=64, n_layers=2,
+                n_code=16, block_len=8, window_len=32, batch_size=2)
+
+
+def setup(cfg, seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    cbs = model.init_cb_states(jax.random.PRNGKey(seed + 1), cfg)
+    carry = model.init_carry(cfg, cfg.batch_size)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 2),
+                                (cfg.batch_size, cfg.window_len), 0,
+                                cfg.vocab_size)
+    return params, cbs, carry, tokens
+
+
+def fwd(cfg, seed=0, train=False):
+    params, cbs, carry, tokens = setup(cfg, seed)
+    return model.forward_window(params, cbs, carry, tokens, cfg,
+                                jax.random.PRNGKey(9), train)
+
+
+@pytest.mark.parametrize("head,heads", [("shga", 1), ("mha", 4), ("mqa", 4)])
+def test_head_types_shapes(head, heads):
+    cfg = BASE.replace(head_type=head, n_heads=heads)
+    logits, carry, aux = fwd(cfg)
+    assert logits.shape == (2, 32, 64)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert len(aux["ema"]) == cfg.n_layers
+
+
+@pytest.mark.parametrize("head,heads", [("shga", 1), ("mha", 4), ("mqa", 4)])
+def test_full_attention_heads(head, heads):
+    cfg = BASE.replace(attn_type="full", head_type=head, n_heads=heads)
+    logits, carry, aux = fwd(cfg)
+    assert logits.shape == (2, 32, 64)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert aux["ema"] == []
+
+
+def test_reductions_all_equal():
+    outs = {}
+    for m in ("serial", "matmul", "assoc"):
+        outs[m] = fwd(BASE.replace(reduction=m))[0]
+    assert_close(outs["serial"], outs["matmul"], atol=2e-4, rtol=2e-3)
+    assert_close(outs["serial"], outs["assoc"], atol=2e-4, rtol=2e-3)
+
+
+def test_inputscan_equals_batched():
+    a = fwd(BASE.replace(reduction="serial"))[0]
+    b = fwd(BASE.replace(reduction="inputscan"))[0]
+    assert_close(a, b, atol=3e-4, rtol=3e-3)
+
+
+def test_kernel_equals_jnp_forward():
+    a = fwd(BASE.replace(use_kernel=False))[0]
+    b = fwd(BASE.replace(use_kernel=True))[0]
+    assert_close(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_cache_ablation_changes_output():
+    """use_cache=False must change predictions once context exceeds 2L."""
+    with_c = fwd(BASE)[0]
+    without = fwd(BASE.replace(use_cache=False))[0]
+    # first two blocks identical (no cache yet), later blocks differ
+    assert_close(with_c[:, :16], without[:, :16], atol=1e-5, rtol=1e-4)
+    assert float(jnp.max(jnp.abs(with_c[:, 16:] - without[:, 16:]))) > 1e-4
+
+
+def test_abs_pe_changes_with_position():
+    cfg = BASE.replace(use_abs_pe=True)
+    params, cbs, carry, tokens = setup(cfg)
+    l0, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                    jax.random.PRNGKey(0), False)
+    carry2 = dict(carry)
+    carry2["pos"] = carry["pos"] + 100
+    l1, _, _ = model.forward_window(params, cbs, carry2, tokens, cfg,
+                                    jax.random.PRNGKey(0), False)
+    assert float(jnp.max(jnp.abs(l0 - l1))) > 1e-4
+
+
+def test_carry_pos_and_flag_advance():
+    cfg = BASE
+    _, carry, _ = fwd(cfg)
+    assert int(carry["pos"][0]) == cfg.window_len
+    assert float(carry["has_prev"][0]) == 1.0
+
+
+def test_dropout_only_in_train_mode():
+    cfg = BASE.replace(dropout_rate=0.5)
+    params, cbs, carry, tokens = setup(cfg)
+    e1, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                    jax.random.PRNGKey(1), False)
+    e2, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                    jax.random.PRNGKey(2), False)
+    assert_close(e1, e2, atol=0, rtol=0)  # eval is deterministic
+    t1, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                    jax.random.PRNGKey(1), True)
+    t2, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                    jax.random.PRNGKey(2), True)
+    assert float(jnp.max(jnp.abs(t1 - t2))) > 1e-5
+
+
+def test_tied_embeddings():
+    cfg = BASE.replace(tie_embeddings=True)
+    params, cbs, carry, tokens = setup(cfg)
+    assert "head" not in params
+    logits, _, _ = model.forward_window(params, cbs, carry, tokens, cfg,
+                                        jax.random.PRNGKey(0), False)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_count_scales_with_width():
+    small = model.param_count(model.init_params(jax.random.PRNGKey(0), BASE))
+    big = model.param_count(model.init_params(
+        jax.random.PRNGKey(0), BASE.replace(d_model=64, d_v=128)))
+    assert big > 2 * small
+
+
+def test_presets_all_construct():
+    for name, cfg in PRESETS.items():
+        assert cfg.window_len % cfg.block_len == 0, name
+        assert cfg.d_v % cfg.n_heads == 0, name
+
+
+def test_throughput_grid_names_and_variants():
+    grid = throughput_grid(seq_lens=[256], head_types=["shga"],
+                           variants=["full", "vq-serial"])
+    assert set(grid) == {"tput-shga-full-T256", "tput-shga-vq-serial-T256"}
+    assert grid["tput-shga-full-T256"].attn_type == "full"
+    assert grid["tput-shga-vq-serial-T256"].reduction == "serial"

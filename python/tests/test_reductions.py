@@ -1,0 +1,104 @@
+"""Cross-block reduction tests (Appendix E Codes 2-4, Appendix B)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import reductions as red, ref
+
+
+def rand_zv(seed, b, r, l, s, dv):
+    kz, kv = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.randint(kz, (b, r, l), 0, s)
+    v = jax.random.normal(kv, (b, r, l, dv))
+    return z, v
+
+
+METHODS = ["serial", "matmul", "assoc"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_matches_naive(method):
+    z, v = rand_zv(0, 2, 5, 8, 6, 4)
+    u, c = red.get_cache_vars(z, v, 6, method)
+    u_ref, c_ref = ref.naive_cache_vars(z, v, 6)
+    np.testing.assert_allclose(np.asarray(c), c_ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u), u_ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m2", ["matmul", "assoc"])
+def test_methods_agree(m2):
+    z, v = rand_zv(1, 3, 6, 4, 8, 5)
+    u1, c1 = red.get_cache_vars(z, v, 8, "serial")
+    u2, c2 = red.get_cache_vars(z, v, 8, m2)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_running_mean_is_bounded():
+    """Remark 3.9: storing means keeps magnitudes bounded by max |v|."""
+    z, v = rand_zv(2, 1, 16, 8, 4, 3)
+    u, _ = red.get_cache_vars(z, v, 4, "serial")
+    assert float(jnp.max(jnp.abs(u))) <= float(jnp.max(jnp.abs(v))) + 1e-5
+
+
+def test_counts_accumulate_monotonically():
+    z, v = rand_zv(3, 1, 6, 8, 4, 2)
+    _, c = red.get_cache_vars(z, v, 4, "assoc")
+    c = np.asarray(c)
+    assert (np.diff(c.sum(-1), axis=1) >= -1e-6).all()
+    # total count through block r == (r+1) * L
+    np.testing.assert_allclose(c.sum(-1)[0], (np.arange(6) + 1) * 8)
+
+
+def test_shift2_alignment():
+    z, v = rand_zv(4, 1, 5, 4, 4, 2)
+    u, c = red.get_cache_vars(z, v, 4, "serial")
+    us, cs = red.shift2(u, c)
+    assert float(jnp.sum(cs[:, :2])) == 0.0
+    np.testing.assert_allclose(np.asarray(cs[:, 2:]), np.asarray(c[:, :-2]))
+
+
+def test_merge_cache_monoid():
+    """merge(merge(a,b),c) == merge(a, merge(b,c)) — required for the
+    associative scan and the TBPTT carry."""
+    keys = jax.random.split(jax.random.PRNGKey(5), 6)
+    s, dv = 6, 3
+    mk_u = lambda k: jax.random.normal(k, (2, s, dv))
+    mk_l = lambda k: jax.random.randint(k, (2, s), 0, 5).astype(jnp.float32)
+    ua, la = mk_u(keys[0]), mk_l(keys[1])
+    ub, lb = mk_u(keys[2]), mk_l(keys[3])
+    uc, lc = mk_u(keys[4]), mk_l(keys[5])
+    u1, l1 = red.merge_cache(*red.merge_cache(ua, la, ub, lb), uc, lc)
+    u2, l2 = red.merge_cache(ua, la, *red.merge_cache(ub, lb, uc, lc))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+    # means only comparable where counts > 0
+    mask = np.asarray(l1) > 0
+    np.testing.assert_allclose(np.asarray(u1)[mask], np.asarray(u2)[mask],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_merge_cache_identity():
+    u = jax.random.normal(jax.random.PRNGKey(6), (2, 4, 3))
+    l = jnp.ones((2, 4)) * 3
+    zu, zl = jnp.zeros_like(u), jnp.zeros_like(l)
+    mu, ml = red.merge_cache(u, l, zu, zl)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(u), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ml), np.asarray(l), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 6),
+       st.integers(1, 8), st.integers(2, 10))
+def test_hypothesis_all_methods_match_naive(seed, b, r, l, s):
+    z, v = rand_zv(seed, b, r, l, s, 3)
+    u_ref, c_ref = ref.naive_cache_vars(z, v, s)
+    for m in METHODS:
+        u, c = red.get_cache_vars(z, v, s, m)
+        np.testing.assert_allclose(np.asarray(c), c_ref, atol=1e-4,
+                                   err_msg=m)
+        np.testing.assert_allclose(np.asarray(u), u_ref, atol=1e-3,
+                                   rtol=1e-3, err_msg=m)

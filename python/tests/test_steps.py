@@ -1,0 +1,161 @@
+"""Step-function tests: AdamW math, train/eval steps, TVQ store."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.configs import VQConfig
+from compile import model, steps, tvq
+
+CFG = VQConfig(vocab_size=64, d_model=32, d_k=8, d_v=64, n_layers=2,
+               n_code=16, block_len=8, window_len=32, batch_size=2)
+
+
+def make_state(cfg=CFG, seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    cbs = model.init_cb_states(jax.random.PRNGKey(seed + 1), cfg)
+    carry = model.init_carry(cfg, cfg.batch_size)
+    opt = steps.init_opt_state(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 2),
+                                (cfg.batch_size, cfg.window_len + 1), 0,
+                                cfg.vocab_size)
+    return params, opt, cbs, carry, tokens
+
+
+class TestAdamW:
+    def test_first_step_is_signed_lr(self):
+        """With bias correction, step 1 moves ~lr * sign(grad)."""
+        p = {"w": jnp.asarray([1.0, -1.0])}
+        g = {"w": jnp.asarray([0.5, -0.25])}
+        opt = steps.init_opt_state(p)
+        cfg = CFG.replace(grad_clip=1e9)
+        p2, _, _ = steps.adamw_update(p, g, opt, 0.1, cfg)
+        np.testing.assert_allclose(
+            np.asarray(p2["w"]), [1.0 - 0.1, -1.0 + 0.1], rtol=1e-4)
+
+    def test_clip_bounds_update(self):
+        p = {"w": jnp.zeros((4,))}
+        g = {"w": jnp.full((4,), 1e6)}
+        _, _, gnorm = steps.adamw_update(p, g, steps.init_opt_state(p), 0.1,
+                                         CFG)
+        assert float(gnorm) > 1e6  # reported norm is pre-clip
+
+    def test_weight_decay_skips_1d(self):
+        cfg = CFG.replace(weight_decay=0.5, grad_clip=1e9)
+        p = {"gain": jnp.ones((4,)), "w": jnp.ones((4, 4))}
+        g = {"gain": jnp.zeros((4,)), "w": jnp.zeros((4, 4))}
+        p2, _, _ = steps.adamw_update(p, g, steps.init_opt_state(p), 0.1, cfg)
+        np.testing.assert_allclose(np.asarray(p2["gain"]), np.ones(4))
+        assert float(p2["w"][0, 0]) < 1.0
+
+    def test_step_counter_increments(self):
+        p = {"w": jnp.ones((2,))}
+        g = {"w": jnp.ones((2,))}
+        opt = steps.init_opt_state(p)
+        _, opt1, _ = steps.adamw_update(p, g, opt, 0.1, CFG)
+        _, opt2, _ = steps.adamw_update(p, g, opt1, 0.1, CFG)
+        assert float(opt2["step"]) == 2.0
+
+    def test_global_norm(self):
+        t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        assert abs(float(steps.global_norm(t)) - 5.0) < 1e-6
+
+
+class TestTrainStep:
+    def test_loss_decreases_over_steps(self):
+        params, opt, cbs, carry, tokens = make_state()
+        losses = []
+        for i in range(8):
+            params, opt, cbs, carry, m = steps.train_step(
+                params, opt, cbs, carry, tokens, jnp.float32(3e-3),
+                jnp.int32(i), CFG)
+            losses.append(float(m[0]))
+        assert losses[-1] < losses[0], losses
+
+    def test_metrics_layout(self):
+        params, opt, cbs, carry, tokens = make_state()
+        *_, m = steps.train_step(params, opt, cbs, carry, tokens,
+                                 jnp.float32(1e-3), jnp.int32(0), CFG)
+        assert m.shape == (6,)
+        loss, ce, commit, gnorm, perp, lr = [float(x) for x in m]
+        assert abs(loss - (ce + CFG.commit_coef * commit)) < 1e-3
+        assert 1.0 <= perp <= CFG.n_code + 1e-3
+        assert lr == pytest.approx(1e-3)
+
+    def test_codebook_state_changes(self):
+        params, opt, cbs, carry, tokens = make_state()
+        _, _, cbs2, _, _ = steps.train_step(
+            params, opt, cbs, carry, tokens, jnp.float32(1e-3), jnp.int32(0),
+            CFG)
+        d = float(jnp.max(jnp.abs(cbs2[0]["ema_count"] -
+                                  cbs[0]["ema_count"])))
+        assert d > 1e-6
+
+    def test_deterministic_given_seed(self):
+        a = make_state()
+        b = make_state()
+        ma = steps.train_step(*a[:4], a[4], jnp.float32(1e-3), jnp.int32(3),
+                              CFG)[4]
+        mb = steps.train_step(*b[:4], b[4], jnp.float32(1e-3), jnp.int32(3),
+                              CFG)[4]
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+    def test_full_attention_baseline_trains(self):
+        cfg = CFG.replace(attn_type="full")
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        cbs = model.init_cb_states(jax.random.PRNGKey(1), cfg)
+        carry = model.init_carry(cfg, cfg.batch_size)
+        opt = steps.init_opt_state(params)
+        tokens = jax.random.randint(jax.random.PRNGKey(2),
+                                    (cfg.batch_size, cfg.window_len + 1), 0,
+                                    cfg.vocab_size)
+        l0 = None
+        for i in range(6):
+            params, opt, cbs, carry, m = steps.train_step(
+                params, opt, cbs, carry, tokens, jnp.float32(3e-3),
+                jnp.int32(i), cfg)
+            l0 = l0 or float(m[0])
+        assert float(m[0]) < l0
+
+
+class TestEvalStep:
+    def test_sums_and_counts(self):
+        params, _, cbs, carry, tokens = make_state()
+        _, m = steps.eval_step(params, cbs, carry, tokens, CFG)
+        ce_sum, n = float(m[0]), float(m[1])
+        assert n == CFG.batch_size * CFG.window_len
+        assert 0 < ce_sum / n < 10
+
+    def test_eval_does_not_need_dropout_rng(self):
+        cfg = CFG.replace(dropout_rate=0.5)
+        params, _, cbs, carry, tokens = make_state(cfg)
+        m1 = steps.eval_step(params, cbs, carry, tokens, cfg)[1]
+        m2 = steps.eval_step(params, cbs, carry, tokens, cfg)[1]
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+class TestTvqStore:
+    def test_roundtrip(self, tmp_path):
+        p = str(tmp_path / "x.tvq")
+        tensors = [("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+                   ("b/c", np.asarray([-1, 5], dtype=np.int32)),
+                   ("s", np.float32(2.5))]
+        tvq.write(p, tensors)
+        back = tvq.read(p)
+        assert [n for n, _ in back] == ["a", "b/c", "s"]
+        np.testing.assert_array_equal(back[0][1], tensors[0][1])
+        np.testing.assert_array_equal(back[1][1], tensors[1][1])
+        assert back[2][1].shape == ()
+
+    def test_scalar_shape_preserved(self, tmp_path):
+        p = str(tmp_path / "s.tvq")
+        tvq.write(p, [("lr", np.float32(1e-3))])
+        assert tvq.read(p)[0][1].shape == ()
+
+    def test_f64_downcast(self, tmp_path):
+        p = str(tmp_path / "d.tvq")
+        tvq.write(p, [("x", np.asarray([1.5], dtype=np.float64))])
+        assert tvq.read(p)[0][1].dtype == np.float32

@@ -1,0 +1,141 @@
+"""Exactness of the linear-time recurrence (Theorems 3.4-3.7).
+
+The central claim of the paper: given vector-quantized keys, blockwise
+attention against (codebook scores + cache vars) is *exactly* softmax dense
+attention over the full sequence. We verify this against the quadratic
+oracle for a sweep of shapes and all three reduction methods.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref, vq, reductions as red
+from compile.kernels.vq_attn import combine_jnp
+from tests.helpers import rand_inputs, combine_inputs_from_seq, assert_close
+
+
+SHAPES = [
+    # (b, r, l, s, dk, dv)
+    (1, 2, 4, 8, 8, 16),
+    (2, 4, 8, 16, 8, 8),
+    (1, 8, 4, 4, 4, 4),
+    (2, 3, 16, 32, 16, 32),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("reduction", ["serial", "matmul", "assoc"])
+def test_linear_equals_quadratic(shape, reduction):
+    """Theorem 3.7: block recurrence == dense softmax over quantized keys."""
+    b, r, l, s, dk, dv = shape
+    q, k, v, codebook, bias_all = rand_inputs(0, b, r, l, s, dk, dv)
+    k_hat, z, _ = vq.stvq(k[:, :, None, :], codebook)
+    k_hat, z = k_hat[:, :, 0], z[:, :, 0]
+
+    want = ref.vq_attention_quadratic(q, k_hat, v, bias_all, l)
+
+    qb, kb, kp, vb, vp, cu, clb, bc, bp = combine_inputs_from_seq(
+        q, k_hat, z, v, bias_all, l, s, reduction)
+    cb_f = jnp.broadcast_to(codebook[0][None], (b, s, dk))
+    got = combine_jnp(qb, kb, kp, vb, vp, cb_f, cu, clb, bc, bp)
+    got = got.reshape(b, r * l, dv)
+    assert_close(got, want, atol=5e-5, rtol=5e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_factorization_elementwise(shape):
+    """Theorem 3.4: phi(Q Khat^T) == phi(Q C^T) Delta for element-wise phi."""
+    b, r, l, s, dk, dv = shape
+    t = r * l
+    q, k, v, codebook, _ = rand_inputs(1, b, r, l, s, dk, dv)
+    k_hat, z, _ = vq.stvq(k[:, :, None, :], codebook)
+    k_hat, z = k_hat[:, :, 0], z[:, :, 0]
+    phi = jnp.exp
+    lhs = phi(jnp.einsum("bid,bjd->bij", q, k_hat))
+    delta = jax.nn.one_hot(z, s).transpose(0, 2, 1)     # [b, s, t]
+    rhs = jnp.einsum("bis,bst->bit", phi(jnp.einsum(
+        "bid,sd->bis", q, codebook[0])), delta)
+    assert_close(lhs, rhs, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_factorization_softmax(shape):
+    """Theorem 3.5: softmax(Q Khat^T) == normalized exp(Q C^T) Delta."""
+    b, r, l, s, dk, dv = shape
+    q, k, v, codebook, _ = rand_inputs(2, b, r, l, s, dk, dv)
+    k_hat, z, _ = vq.stvq(k[:, :, None, :], codebook)
+    k_hat, z = k_hat[:, :, 0], z[:, :, 0]
+    lhs = jax.nn.softmax(jnp.einsum("bid,bjd->bij", q, k_hat), axis=-1)
+    delta = jax.nn.one_hot(z, s).transpose(0, 2, 1)
+    e = jnp.einsum("bis,bst->bit",
+                   jnp.exp(jnp.einsum("bid,sd->bis", q, codebook[0])), delta)
+    rhs = e / jnp.sum(e, axis=-1, keepdims=True)
+    assert_close(lhs, rhs, atol=1e-5, rtol=1e-4)
+
+
+def test_guo_inner_product_bound():
+    """Theorem 2.2 empirically: E||q^T k - q^T phi(k)||^2 proportional to
+    E||k - phi(k)||^2 under isotropic q."""
+    key = jax.random.PRNGKey(3)
+    d, n, s = 16, 4096, 8
+    kq, kk, kc = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (n, d))
+    k = jax.random.normal(kk, (n, d)) * 2.0
+    cb = jax.random.normal(kc, (1, s, d))
+    k_hat, _, _ = vq.stvq(k[:, None, :], cb)
+    k_hat = k_hat[:, 0]
+    lhs = np.mean(np.square(np.einsum("nd,nd->n", q, k - k_hat)))
+    rhs = np.mean(np.sum(np.square(k - k_hat), axis=-1))
+    # sigma^2 = 1 for standard normal q => lhs ~= rhs
+    assert abs(lhs / rhs - 1.0) < 0.15
+
+
+def test_cache_equals_attending_each_position():
+    """The cache term exp(q C^T + log L) @ U == sum over individual cached
+    positions of exp(q k_hat_j) v_j (Remark 3.9's running-mean form)."""
+    b, t, s, dk, dv = 1, 32, 8, 8, 4
+    q1 = jax.random.normal(jax.random.PRNGKey(4), (dk,))
+    k = jax.random.normal(jax.random.PRNGKey(5), (t, dk))
+    v = jax.random.normal(jax.random.PRNGKey(6), (t, dv))
+    cb = jax.random.normal(jax.random.PRNGKey(7), (1, s, dk))
+    k_hat, z, _ = vq.stvq(k[:, None, :], cb)
+    k_hat, z = k_hat[:, 0], z[:, 0]
+    # naive: per-position
+    want = sum(np.exp(float(q1 @ k_hat[j])) * np.asarray(v[j])
+               for j in range(t))
+    # cache form
+    onehot = jax.nn.one_hot(z, s)
+    counts = onehot.sum(0)
+    u = (onehot.T @ v) / np.clip(counts[:, None], 1.0, None)
+    scores = np.exp(np.asarray(cb[0] @ q1) + np.log(np.clip(counts, 1e-30,
+                                                            None)))
+    got = scores @ np.asarray(u)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("reduction", ["serial", "matmul", "assoc"])
+def test_carry_across_windows_equals_one_window(reduction):
+    """Splitting a sequence into two carried windows must equal processing it
+    as one window (the §3.4.2 TBPTT equivalence, forward pass)."""
+    from compile.configs import PRESETS
+    from compile import model
+    cfg = PRESETS["quickstart"].replace(
+        use_kernel=False, reduction=reduction, batch_size=2)
+    w = cfg.window_len
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    cbs = model.init_cb_states(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 2 * w), 0, 256)
+    rng = jax.random.PRNGKey(9)
+
+    cfg2 = cfg.replace(window_len=2 * w)
+    carry = model.init_carry(cfg2, 2)
+    big, _, _ = model.forward_window(params, cbs, carry, toks, cfg2, rng,
+                                     False)
+    carry = model.init_carry(cfg, 2)
+    l1, c1, _ = model.forward_window(params, cbs, carry, toks[:, :w], cfg,
+                                     rng, False)
+    l2, _, _ = model.forward_window(params, cbs, c1, toks[:, w:], cfg, rng,
+                                    False)
+    assert_close(jnp.concatenate([l1, l2], 1), big, atol=3e-4, rtol=3e-3)

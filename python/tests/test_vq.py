@@ -1,0 +1,135 @@
+"""Vector quantizer + EMA codebook tests (Definitions 2.1/2.6, §3.4.1)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import vq, ref
+
+
+def mk(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+class TestNearestCode:
+    def test_matches_naive(self):
+        k = mk(0, 40, 1, 8)
+        cb = mk(1, 1, 16, 8)
+        z = vq.nearest_code(k, cb)
+        z_ref = ref.naive_quantize(np.asarray(k[:, 0]), np.asarray(cb[0]))
+        np.testing.assert_array_equal(np.asarray(z[:, 0]), z_ref)
+
+    def test_codeword_maps_to_itself(self):
+        cb = mk(2, 1, 8, 4)
+        z = vq.nearest_code(cb[0][:, None, :], cb)
+        np.testing.assert_array_equal(np.asarray(z[:, 0]), np.arange(8))
+
+    def test_multihead_independent(self):
+        k = mk(3, 10, 2, 4)
+        cb = mk(4, 2, 8, 4)
+        z = vq.nearest_code(k, cb)
+        for h in range(2):
+            zh = vq.nearest_code(k[:, h:h+1], cb[h:h+1])
+            np.testing.assert_array_equal(np.asarray(z[:, h]),
+                                          np.asarray(zh[:, 0]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 1000), st.integers(2, 24), st.integers(1, 12))
+    def test_hypothesis_nearest_is_argmin(self, seed, s, d):
+        k = jax.random.normal(jax.random.PRNGKey(seed), (5, 1, d))
+        cb = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, s, d))
+        z = np.asarray(vq.nearest_code(k, cb))[:, 0]
+        dists = ((np.asarray(k)[:, 0, None, :] -
+                  np.asarray(cb)[0][None, :, :]) ** 2).sum(-1)
+        np.testing.assert_array_equal(z, dists.argmin(-1))
+
+
+class TestSTVQ:
+    def test_output_is_codeword(self):
+        k = mk(5, 20, 1, 8)
+        cb_state = vq.codebook_init(jax.random.PRNGKey(6), 1, 16, 8)
+        k_hat, z, _ = vq.stvq(k, cb_state["codebook"])
+        gathered = np.asarray(cb_state["codebook"])[0][np.asarray(z)[:, 0]]
+        np.testing.assert_allclose(np.asarray(k_hat)[:, 0], gathered,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_straight_through_gradient_is_identity(self):
+        """Remark 2.7: d stvq(k)/dk == I via the STE."""
+        cb = mk(7, 1, 8, 4)
+
+        def f(k):
+            k_hat, _, _ = vq.stvq(k[None, None, :], cb)
+            return jnp.sum(k_hat * jnp.arange(4.0))
+
+        g = jax.grad(f)(jnp.ones((4,)))
+        np.testing.assert_allclose(np.asarray(g), np.arange(4.0), rtol=1e-6)
+
+    def test_commit_loss_value(self):
+        k = mk(8, 30, 1, 8)
+        cb = mk(9, 1, 16, 8)
+        k_hat, z, commit = vq.stvq(k, cb)
+        want = np.mean(np.sum((np.asarray(k) - np.asarray(k_hat)) ** 2, -1))
+        np.testing.assert_allclose(float(commit), want, rtol=1e-5)
+
+    def test_commit_gradient_points_to_codeword(self):
+        cb = jnp.zeros((1, 4, 2)).at[0, 0].set(jnp.asarray([1.0, 0.0]))
+
+        def f(k):
+            _, _, commit = vq.stvq(k[None, None, :], cb)
+            return commit
+
+        k0 = jnp.asarray([0.9, 0.1])
+        g = jax.grad(f)(k0)
+        # d/dk ||k - c||^2 = 2(k - c)
+        np.testing.assert_allclose(np.asarray(g),
+                                   2 * (np.asarray(k0) - np.array([1.0, 0.0])),
+                                   rtol=1e-5)
+
+
+class TestEmaUpdate:
+    def test_counts_move_toward_assignments(self):
+        state = vq.codebook_init(jax.random.PRNGKey(10), 1, 4, 2)
+        k = jnp.tile(jnp.asarray([[5.0, 5.0]]), (64, 1))[:, None, :]
+        z = vq.nearest_code(k, state["codebook"])
+        s1 = vq.ema_update(state, k, z, gamma=0.5)
+        zi = int(np.asarray(z)[0, 0])
+        assert float(s1["ema_count"][0, zi]) > float(state["ema_count"][0, zi])
+
+    def test_codebook_converges_to_cluster_mean(self):
+        state = vq.codebook_init(jax.random.PRNGKey(11), 1, 2, 2)
+        target = jnp.asarray([3.0, -2.0])
+        for _ in range(200):
+            k = target[None, None, :] + 0.01 * mk(12, 32, 1, 2)
+            z = vq.nearest_code(k, state["codebook"])
+            state = vq.ema_update(state, k, z, gamma=0.9)
+        cb = np.asarray(state["codebook"])[0]
+        best = np.abs(cb - np.asarray(target)).sum(-1).min()
+        assert best < 0.1, cb
+
+    def test_no_nan_with_dead_codes(self):
+        state = vq.codebook_init(jax.random.PRNGKey(13), 1, 8, 2)
+        k = jnp.zeros((16, 1, 2))
+        z = vq.nearest_code(k, state["codebook"])
+        for _ in range(500):
+            state = vq.ema_update(state, k, z, gamma=0.99)
+        assert np.isfinite(np.asarray(state["codebook"])).all()
+
+    def test_gamma_one_freezes(self):
+        state = vq.codebook_init(jax.random.PRNGKey(14), 1, 4, 2)
+        k = mk(15, 8, 1, 2)
+        z = vq.nearest_code(k, state["codebook"])
+        s1 = vq.ema_update(state, k, z, gamma=1.0)
+        np.testing.assert_allclose(np.asarray(s1["ema_count"]),
+                                   np.asarray(state["ema_count"]), rtol=1e-6)
+
+
+class TestPerplexity:
+    def test_uniform_is_full(self):
+        z = jnp.arange(16, dtype=jnp.int32)
+        assert abs(float(vq.codebook_perplexity(z, 16)) - 16.0) < 1e-3
+
+    def test_collapse_is_one(self):
+        z = jnp.zeros((64,), dtype=jnp.int32)
+        assert abs(float(vq.codebook_perplexity(z, 16)) - 1.0) < 1e-3

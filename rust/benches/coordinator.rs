@@ -1,0 +1,118 @@
+//! `cargo bench --bench coordinator` — serving-path benchmarks:
+//! decode steps/sec, continuous-batching utilization under mixed loads,
+//! and the wire-protocol overhead (JSON parse/serialize per request).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use transformer_vq::bench::{Bencher, Table};
+use transformer_vq::coordinator::{Engine, GenRequest, WireRequest, WireResponse};
+use transformer_vq::manifest::Manifest;
+use transformer_vq::runtime::Runtime;
+use transformer_vq::sample::{SampleParams, Sampler};
+
+fn main() {
+    let bencher = Bencher { warmup_iters: 3, min_iters: 10, max_iters: 5000,
+                            budget: std::time::Duration::from_secs(2) };
+
+    // --- wire protocol micro-benchmarks (no artifacts needed) -------------
+    let mut table = Table::new(&["bench", "mean", "ops/s"]);
+    let req_line = WireRequest {
+        prompt: "a moderately sized prompt for parsing".into(),
+        max_tokens: 64,
+        temperature: 1.0,
+        top_p: 0.95,
+    }
+    .to_json()
+    .dump();
+    let stats = bencher.run("wire request parse", || {
+        let r = WireRequest::parse(&req_line).unwrap();
+        std::hint::black_box(r);
+    });
+    table.row(vec!["request parse".into(), format!("{:.3?}", stats.mean),
+                   format!("{:.0}", 1.0 / stats.mean_secs())]);
+    let resp = WireResponse {
+        ok: true,
+        text: Some("x".repeat(128)),
+        tokens: Some((0..128).collect()),
+        prompt_tokens: Some(16),
+        queue_ms: Some(0.1),
+        gen_ms: Some(5.0),
+        error: None,
+    };
+    let stats = bencher.run("wire response serialize", || {
+        std::hint::black_box(resp.to_json().dump());
+    });
+    table.row(vec!["response serialize".into(), format!("{:.3?}", stats.mean),
+                   format!("{:.0}", 1.0 / stats.mean_secs())]);
+    table.print();
+
+    // --- engine benchmarks (need artifacts) --------------------------------
+    let dir = transformer_vq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP engine benches: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+
+    // raw decode step rate (full batch)
+    {
+        let runtime = Runtime::cpu().unwrap();
+        let mut sampler = Sampler::new(&runtime, &manifest, "quickstart").unwrap();
+        let b = sampler.batch_size();
+        sampler.reset_all();
+        let stats = Bencher { warmup_iters: 3, min_iters: 10, max_iters: 200,
+                              budget: std::time::Duration::from_secs(3) }
+            .run("decode step (full batch)", || {
+                sampler.step(&vec![42; b]).unwrap();
+            });
+        println!(
+            "\ndecode step: {:.3?}/step, {:.0} tok/s at batch {b}",
+            stats.mean,
+            b as f64 / stats.mean_secs()
+        );
+    }
+
+    // continuous batching: aggregate throughput + utilization, mixed lengths
+    {
+        let m2 = manifest.clone();
+        let (handle, join) = Engine::spawn(
+            move || {
+                let runtime = Runtime::cpu()?;
+                Sampler::new(&runtime, &m2, "quickstart")
+            },
+            7,
+        )
+        .unwrap();
+        let n_requests = 24;
+        let t0 = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..n_requests {
+            let handle = handle.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let r = handle.generate(GenRequest {
+                    prompt: vec![(i % 200) as i32 + 32],
+                    max_tokens: 16 + (i % 5) * 16,
+                    params: SampleParams::default(),
+                    stop_token: None,
+                });
+                tx.send(r.map(|x| x.tokens.len())).unwrap();
+            });
+        }
+        drop(tx);
+        let mut total = 0usize;
+        while let Ok(r) = rx.recv() {
+            total += r.unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        drop(handle);
+        let stats = join.join().unwrap();
+        println!(
+            "continuous batching: {n_requests} reqs, {total} tokens in {wall:.2}s \
+             ({:.0} tok/s), slot utilization {:.0}%",
+            total as f64 / wall,
+            100.0 * stats.utilization(4)
+        );
+    }
+}

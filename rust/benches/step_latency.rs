@@ -1,0 +1,75 @@
+//! `cargo bench --bench step_latency` — per-step wall time of the compiled
+//! train / eval / decode artifacts for the training presets (the latency
+//! column of paper Tables 1-2 comes from the train-step latency here), plus
+//! the L3-side overhead split (literal conversion vs execution), which the
+//! §Perf pass in EXPERIMENTS.md tracks.
+
+use std::time::Instant;
+
+use transformer_vq::bench::{Bencher, Table};
+use transformer_vq::manifest::Manifest;
+use transformer_vq::runtime::{Runtime, StateBundle};
+
+fn main() {
+    let dir = transformer_vq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP step_latency bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let bencher = Bencher {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 40,
+        budget: std::time::Duration::from_secs(3),
+    };
+
+    let mut table = Table::new(&[
+        "artifact", "mean/step", "median", "tok/s", "convert-in %",
+    ]);
+    for preset in ["quickstart", "enwik8-tiny", "ablate-S32", "ablate-S128"] {
+        for entry in ["train", "eval", "decode"] {
+            let name = format!("{preset}.{entry}");
+            if manifest.get(&name).is_err() {
+                continue;
+            }
+            let exe = runtime.load(&manifest, &name).unwrap();
+            let mut bundle = StateBundle::zeros_for(&exe.spec);
+            let init = manifest.init_path(preset);
+            if init.exists() {
+                bundle.load_groups(init).unwrap();
+            }
+            let inputs = bundle.assemble(&exe.spec).unwrap();
+
+            // measure input literal conversion separately (L3 overhead)
+            let t0 = Instant::now();
+            let mut lits = exe.to_literals(&inputs).unwrap();
+            let convert = t0.elapsed();
+            let stats = bencher.run(&name, || {
+                lits = exe.to_literals(&inputs).unwrap();
+                exe.run_literals(&lits).unwrap();
+            });
+            let exec_only = bencher.run(&name, || {
+                exe.run_literals(&lits).unwrap();
+            });
+            let tokens = match entry {
+                "decode" => exe.spec.config.batch_size,
+                _ => exe.spec.config.batch_size * exe.spec.config.window_len,
+            } as f64;
+            table.row(vec![
+                name,
+                format!("{:.3?}", stats.mean),
+                format!("{:.3?}", stats.median),
+                format!("{:.0}", tokens / stats.mean_secs()),
+                format!(
+                    "{:.1}%",
+                    100.0 * (stats.mean_secs() - exec_only.mean_secs()).max(0.0)
+                        / stats.mean_secs()
+                ),
+            ]);
+            let _ = convert;
+        }
+    }
+    table.print();
+}

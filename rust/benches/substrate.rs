@@ -1,0 +1,117 @@
+//! `cargo bench --bench substrate` — micro-benchmarks of the L3 substrates
+//! that sit near the hot paths: corpus generation, TBPTT batching, BPE,
+//! TVQ (de)serialization, nucleus sampling, and the rust VQ-attention
+//! reference (the analytic quadratic-cost model).
+
+use transformer_vq::bench::{Bencher, Table};
+use transformer_vq::data::{build_corpus, markov, TbpttBatcher};
+use transformer_vq::rng::Rng;
+use transformer_vq::sample::{nucleus_sample, SampleParams};
+use transformer_vq::store::{read_tvq, write_tvq};
+use transformer_vq::tensor::HostTensor;
+use transformer_vq::testutil::TempDir;
+use transformer_vq::tokenizer::{Bpe, Tokenizer};
+use transformer_vq::vqref;
+
+fn main() {
+    let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 2000,
+                      budget: std::time::Duration::from_secs(2) };
+    let mut table = Table::new(&["bench", "mean", "throughput"]);
+
+    // corpus generation
+    let stats = b.run("markov corpus 1MB", || {
+        std::hint::black_box(markov::generate(1_000_000, 1));
+    });
+    table.row(vec!["markov gen 1MB".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.1} MB/s", 1.0 / stats.mean_secs())]);
+
+    // TBPTT batching
+    let corpus = build_corpus("markov", 2_000_000, 0).unwrap();
+    let mut batcher = TbpttBatcher::new(corpus.tokens.clone(), 8, 128).unwrap();
+    let stats = b.run("tbptt next_batch", || {
+        std::hint::black_box(batcher.next_batch());
+    });
+    table.row(vec!["tbptt batch (8x129)".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.2} Mtok/s",
+                           8.0 * 129.0 / stats.mean_secs() / 1e6)]);
+
+    // BPE encode
+    let text: Vec<u8> = corpus.tokens.iter().take(200_000).map(|&t| t as u8).collect();
+    let bpe = Bpe::train(&text[..20_000], 512);
+    let chunk = &text[..4096];
+    let stats = b.run("bpe encode 4KB", || {
+        std::hint::black_box(bpe.encode(chunk));
+    });
+    table.row(vec!["bpe encode 4KB".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.2} MB/s", 4096.0 / stats.mean_secs() / 1e6)]);
+
+    // TVQ store
+    let dir = TempDir::new();
+    let vals: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
+    let tensors = vec![("big".to_string(), HostTensor::from_f32(&[1000, 1000], &vals))];
+    let p = dir.join("bench.tvq");
+    let stats = b.run("tvq write 4MB", || {
+        write_tvq(&p, &tensors).unwrap();
+    });
+    table.row(vec!["tvq write 4MB".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.0} MB/s", 4.0 / stats.mean_secs())]);
+    let stats = b.run("tvq read 4MB", || {
+        std::hint::black_box(read_tvq(&p).unwrap());
+    });
+    table.row(vec!["tvq read 4MB".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.0} MB/s", 4.0 / stats.mean_secs())]);
+
+    // nucleus sampling over a byte vocabulary
+    let mut rng = Rng::new(0);
+    let logits: Vec<f32> = (0..256).map(|i| ((i * 37) % 100) as f32 / 25.0).collect();
+    let stats = b.run("nucleus sample V=256", || {
+        std::hint::black_box(nucleus_sample(&logits, SampleParams::default(), &mut rng));
+    });
+    table.row(vec!["nucleus sample V=256".into(), format!("{:.2?}", stats.mean),
+                   format!("{:.0} samp/s", 1.0 / stats.mean_secs())]);
+
+    // rust reference attention: quadratic vs linear cost shape
+    for (t, l) in [(128usize, 16usize), (256, 16)] {
+        let inp = ref_inputs(t, l, 32);
+        let sq = b.run("vqref quadratic", || {
+            std::hint::black_box(vqref::quadratic_vq_attention(&inp));
+        });
+        let sl = b.run("vqref linear", || {
+            std::hint::black_box(vqref::linear_vq_attention(&inp));
+        });
+        table.row(vec![format!("vqref T={t} quad"), format!("{:.2?}", sq.mean),
+                       format!("{:.2} Mtok/s", t as f64 / sq.mean_secs() / 1e6)]);
+        table.row(vec![format!("vqref T={t} linear"), format!("{:.2?}", sl.mean),
+                       format!("{:.2} Mtok/s", t as f64 / sl.mean_secs() / 1e6)]);
+    }
+    table.print();
+    println!("\nexpected shape: doubling T roughly doubles quadratic per-token \
+              cost, leaves linear per-token cost flat (Remark 3.8).");
+}
+
+fn ref_inputs(t: usize, l: usize, s: usize) -> vqref::AttnInputs {
+    let mut rng = Rng::new(3);
+    let dk = 8;
+    let dv = 8;
+    let scale = 1.0 / (dk as f64).sqrt();
+    let codebook: Vec<Vec<f64>> = (0..s)
+        .map(|_| (0..dk).map(|_| rng.normal() * scale).collect())
+        .collect();
+    let mut k_hat = Vec::new();
+    let mut z = Vec::new();
+    for _ in 0..t {
+        let raw: Vec<f64> = (0..dk).map(|_| rng.normal() * scale).collect();
+        let c = vqref::nearest_code(&raw, &codebook);
+        k_hat.push(codebook[c].clone());
+        z.push(c);
+    }
+    vqref::AttnInputs {
+        q: (0..t).map(|_| (0..dk).map(|_| rng.normal() * scale).collect()).collect(),
+        k_hat,
+        z,
+        v: (0..t).map(|_| (0..dv).map(|_| rng.normal()).collect()).collect(),
+        codebook,
+        bias: (0..t).map(|_| (0..2 * l).map(|_| rng.normal() * 0.2).collect()).collect(),
+        block_len: l,
+    }
+}

@@ -1,0 +1,33 @@
+//! `cargo bench --bench throughput` — paper Tables 6-9 (Full vs VQ training
+//! throughput per head type / reduction / sequence length).
+//!
+//! Set TVQ_BENCH_MAX_T to limit sequence length (default 1024 under `cargo
+//! bench` to keep the run short; the throughput_table example defaults to
+//! the full grid).
+
+use transformer_vq::bench::Bencher;
+use transformer_vq::manifest::Manifest;
+use transformer_vq::paperbench::{measure_throughput_grid, print_throughput_tables};
+use transformer_vq::runtime::Runtime;
+
+fn main() {
+    let dir = transformer_vq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP throughput bench: run `make artifacts` first");
+        return;
+    }
+    let max_t: usize = std::env::var("TVQ_BENCH_MAX_T")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024);
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let bencher = Bencher {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 20,
+        budget: std::time::Duration::from_secs(2),
+    };
+    let rows = measure_throughput_grid(&runtime, &manifest, &bencher, max_t).unwrap();
+    print_throughput_tables(&rows);
+}

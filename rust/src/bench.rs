@@ -1,0 +1,164 @@
+//! Micro-benchmark harness (criterion is not in the vendored dependency
+//! set): warmup + timed iterations with robust statistics, and the table
+//! printer used by the paper-reproduction benches.
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3?} ±{:>9.3?}  (median {:.3?}, n={})",
+            self.name, self.mean, self.stddev, self.median, self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 50, budget: Duration::from_secs(2) }
+    }
+
+    /// Time `f` (which should perform one full operation per call).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        stats_from(name, &mut samples)
+    }
+}
+
+fn stats_from(name: &str, samples: &mut [Duration]) -> BenchStats {
+    samples.sort_unstable();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| (s.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        min: samples[0],
+        max: samples[n - 1],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Fixed-width table printer for the paper-format benchmark outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<width$}", c, width = widths[i.min(widths.len() - 1)]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_stats() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 10,
+                          budget: Duration::from_millis(50) };
+        let stats = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        t.print();
+    }
+}

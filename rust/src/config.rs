@@ -1,0 +1,163 @@
+//! Run configuration for the L3 coordinator (training / eval / serving).
+//!
+//! Model hyperparameters are baked into artifacts at AOT time (see
+//! `python/compile/configs.py`); this config covers everything the rust side
+//! decides at run time: which artifact preset to drive, schedule, data
+//! source, checkpointing, logging. Serializable to JSON so runs are fully
+//! described by `<run_dir>/config.json`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::json::Json;
+use crate::schedule::LrSchedule;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact preset name (e.g. "quickstart", "enwik8-tiny").
+    pub preset: String,
+    /// Corpus kind: markov | zipf | images.
+    pub corpus: String,
+    /// Corpus size in tokens (pre-split).
+    pub corpus_tokens: usize,
+    pub seed: u64,
+    pub steps: u64,
+    pub schedule: LrSchedule,
+    /// Evaluate on the validation split every N steps (0 = never).
+    pub eval_every: u64,
+    /// Max eval windows per evaluation (caps eval cost).
+    pub eval_windows: usize,
+    /// Checkpoint every N steps (0 = never).
+    pub ckpt_every: u64,
+    /// Output directory for logs + checkpoints.
+    pub run_dir: PathBuf,
+    /// Console log interval.
+    pub log_every: u64,
+}
+
+impl TrainConfig {
+    pub fn quickstart() -> Self {
+        Self {
+            preset: "quickstart".into(),
+            corpus: "markov".into(),
+            corpus_tokens: 200_000,
+            seed: 0,
+            steps: 60,
+            schedule: LrSchedule::paper_scaled(1e-3, 60),
+            eval_every: 0,
+            eval_windows: 16,
+            ckpt_every: 0,
+            run_dir: PathBuf::from("runs/quickstart"),
+            log_every: 10,
+        }
+    }
+
+    /// Scaled version of the paper's per-dataset recipes (Table 10).
+    pub fn preset(name: &str, steps: u64) -> Result<Self> {
+        let (corpus, tokens, lr) = match name {
+            "enwik8-tiny" | "ablate-S32" | "ablate-S64" | "ablate-S128"
+            | "ablate-nocache" | "ablate-cache" | "enwik8-tiny-full" => {
+                ("markov", 2_000_000, 1e-3)
+            }
+            "pg19-tiny" => ("zipf", 2_000_000, 1e-3),
+            "imagenet64-tiny" => ("images", 2_000_000, 1e-3),
+            "quickstart" => ("markov", 200_000, 1e-3),
+            other => anyhow::bail!("no training recipe for preset '{other}'"),
+        };
+        Ok(Self {
+            preset: name.into(),
+            corpus: corpus.into(),
+            corpus_tokens: tokens,
+            seed: 0,
+            steps,
+            schedule: LrSchedule::paper_scaled(lr, steps),
+            eval_every: (steps / 5).max(1),
+            eval_windows: 32,
+            ckpt_every: 0,
+            run_dir: PathBuf::from(format!("runs/{name}")),
+            log_every: (steps / 50).max(1),
+        })
+    }
+
+    /// JSON description of the run (written to <run_dir>/config.json).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("corpus", Json::str(self.corpus.clone())),
+            ("corpus_tokens", Json::num(self.corpus_tokens as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("max_lr", Json::num(self.schedule.max_lr as f64)),
+            ("warmup_steps", Json::num(self.schedule.warmup_steps as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_windows", Json::num(self.eval_windows as f64)),
+            ("ckpt_every", Json::num(self.ckpt_every as f64)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("run_dir", Json::str(self.run_dir.display().to_string())),
+        ])
+    }
+
+    pub fn save(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.run_dir)?;
+        let path = self.run_dir.join("config.json");
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub preset: String,
+    pub addr: String,
+    /// Max requests fused into one decode batch (must divide into the
+    /// artifact's compiled batch size).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub max_wait_ms: u64,
+    /// Default sampling settings.
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Optional checkpoint to load model weights from.
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl ServeConfig {
+    pub fn default_for(preset: &str) -> Self {
+        Self {
+            preset: preset.into(),
+            addr: "127.0.0.1:7433".into(),
+            max_batch: 4,
+            max_wait_ms: 5,
+            temperature: 1.0,
+            top_p: 0.95,
+            checkpoint: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_serializes_json() {
+        let c = TrainConfig::quickstart();
+        let j = Json::parse(&c.to_json().dump()).unwrap();
+        assert_eq!(j.req("preset").unwrap().as_str().unwrap(), "quickstart");
+        assert_eq!(j.req("steps").unwrap().as_u64().unwrap(), c.steps);
+    }
+
+    #[test]
+    fn unknown_preset_recipe_errors() {
+        assert!(TrainConfig::preset("nope", 10).is_err());
+    }
+
+    #[test]
+    fn known_recipes_exist() {
+        for p in ["enwik8-tiny", "pg19-tiny", "imagenet64-tiny",
+                  "ablate-S64", "quickstart"] {
+            assert!(TrainConfig::preset(p, 100).is_ok(), "{p}");
+        }
+    }
+}

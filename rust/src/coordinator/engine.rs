@@ -1,0 +1,223 @@
+//! Continuous-batching engine.
+//!
+//! One dedicated OS thread owns the `Sampler` (PJRT execution is blocking
+//! CPU work); callers submit `GenRequest`s over an mpsc channel and block on
+//! a per-request response channel. The engine admits requests into free
+//! batch slots at every step boundary, so short and long generations
+//! interleave without head-of-line blocking — the serving pattern the
+//! paper's linear-time sampling enables (a quadratic-cache model would pay
+//! O(T) per token for its longest-running slot; here every slot is
+//! O(S + 2L) forever).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::rng::Rng;
+use crate::sample::{nucleus_sample, SampleParams, Sampler};
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub params: SampleParams,
+    /// Optional stop token (generation halts when sampled).
+    pub stop_token: Option<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub queue_ms: f64,
+    pub gen_ms: f64,
+}
+
+struct Pending {
+    req: GenRequest,
+    tx: mpsc::Sender<Result<GenResponse, String>>,
+    enqueued: Instant,
+}
+
+struct Slot {
+    req: GenRequest,
+    tx: mpsc::Sender<Result<GenResponse, String>>,
+    enqueued: Instant,
+    started: Instant,
+    /// Index of the prompt token being fed this step.
+    prompt_pos: usize,
+    generated: Vec<i32>,
+    /// Token to feed at the next step.
+    current: i32,
+    rng: Rng,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub steps: u64,
+    /// Sum over steps of active slots (batch-utilization numerator).
+    pub active_slot_steps: u64,
+}
+
+impl EngineStats {
+    pub fn utilization(&self, batch: usize) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.active_slot_steps as f64 / (self.steps * batch as u64) as f64
+    }
+}
+
+/// Cloneable handle: submit requests, block for responses. Thread-safe.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Pending>,
+}
+
+impl EngineHandle {
+    /// Submit and wait for completion (blocking; call from worker threads).
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse, String> {
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { req, tx, enqueued: Instant::now() };
+        self.tx.send(pending).map_err(|_| "engine shut down".to_string())?;
+        rx.recv().map_err(|_| "engine dropped request".to_string())?
+    }
+}
+
+pub struct Engine;
+
+impl Engine {
+    /// Spawn the engine thread. The `Sampler` (PJRT client) is **not Send**
+    /// (Rc-based refcounts inside the xla crate), so the engine constructs
+    /// it on its own thread via `factory`; construction errors are
+    /// propagated back to the caller before this returns.
+    pub fn spawn<F>(
+        factory: F,
+        seed: u64,
+    ) -> anyhow::Result<(EngineHandle, std::thread::JoinHandle<EngineStats>)>
+    where
+        F: FnOnce() -> anyhow::Result<Sampler> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::spawn(move || {
+            let mut sampler = match factory() {
+                Ok(s) => {
+                    let _ = init_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(format!("{e:#}")));
+                    return EngineStats::default();
+                }
+            };
+            run(&mut sampler, seed, rx)
+        });
+        match init_rx.recv() {
+            Ok(Ok(())) => Ok((EngineHandle { tx }, join)),
+            Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
+            Err(_) => anyhow::bail!("engine thread died during init"),
+        }
+    }
+}
+
+fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Pending>) -> EngineStats {
+    let b = sampler.batch_size();
+    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+    let mut stats = EngineStats::default();
+    let mut rng_root = Rng::new(seed);
+    sampler.reset_all();
+
+    loop {
+        // --- admit into free slots ----------------------------------------
+        for i in 0..b {
+            if slots[i].is_none() {
+                match rx.try_recv() {
+                    Ok(p) => {
+                        if let Err(e) = sampler.reset_slot(i) {
+                            let _ = p.tx.send(Err(format!("{e:#}")));
+                            continue;
+                        }
+                        slots[i] = Some(admit(p, &mut rng_root));
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        let n_active = slots.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
+            // idle: block for the next request (or shut down)
+            match rx.recv() {
+                Ok(p) => {
+                    let _ = sampler.reset_slot(0);
+                    slots[0] = Some(admit(p, &mut rng_root));
+                }
+                Err(_) => return stats,
+            }
+            continue;
+        }
+
+        // --- one decode step over all slots --------------------------------
+        let tokens: Vec<i32> = slots
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.current).unwrap_or(0))
+            .collect();
+        let logits = match sampler.step(&tokens) {
+            Ok(l) => l,
+            Err(e) => {
+                // fail every active request; engine stays alive
+                for slot in slots.iter_mut() {
+                    if let Some(s) = slot.take() {
+                        let _ = s.tx.send(Err(format!("{e:#}")));
+                    }
+                }
+                continue;
+            }
+        };
+        stats.steps += 1;
+        stats.active_slot_steps += n_active as u64;
+
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let Some(s) = slot.as_mut() else { continue };
+            if s.prompt_pos + 1 < s.req.prompt.len() {
+                // prefill: feed the next prompt token
+                s.prompt_pos += 1;
+                s.current = s.req.prompt[s.prompt_pos];
+                continue;
+            }
+            // generation
+            let tok = nucleus_sample(&logits[i], s.req.params, &mut s.rng);
+            s.generated.push(tok);
+            s.current = tok;
+            stats.tokens_generated += 1;
+            let hit_stop = s.req.stop_token == Some(tok);
+            if s.generated.len() >= s.req.max_tokens || hit_stop {
+                let s = slot.take().unwrap();
+                stats.requests_completed += 1;
+                let resp = GenResponse {
+                    prompt_tokens: s.req.prompt.len(),
+                    queue_ms: (s.started - s.enqueued).as_secs_f64() * 1e3,
+                    gen_ms: s.started.elapsed().as_secs_f64() * 1e3,
+                    tokens: s.generated,
+                };
+                let _ = s.tx.send(Ok(resp));
+            }
+        }
+    }
+}
+
+fn admit(p: Pending, rng_root: &mut Rng) -> Slot {
+    let prompt = if p.req.prompt.is_empty() { vec![0] } else { p.req.prompt.clone() };
+    let current = prompt[0];
+    Slot {
+        req: GenRequest { prompt, ..p.req },
+        tx: p.tx,
+        enqueued: p.enqueued,
+        started: Instant::now(),
+        prompt_pos: 0,
+        generated: Vec::new(),
+        current,
+        rng: rng_root.fork(0xC0FFEE),
+    }
+}

@@ -1,0 +1,19 @@
+//! Serving coordinator: request router + continuous batcher over the
+//! linear-time sampler (vLLM-router-style L3).
+//!
+//! The decode artifact is compiled for a fixed batch size B; the engine
+//! treats its B rows as *slots*. Requests are admitted into free slots at
+//! any step boundary (continuous batching): a slot runs prompt prefill
+//! (teacher-forcing one token per step — decode is token-level, so prefill
+//! needs no separate graph), then nucleus-samples until done, then is
+//! zeroed (`Sampler::reset_slot`) and immediately reusable. Per-token cost
+//! is O(S + 2L) regardless of how long each sequence has run — the
+//! compressive cache never grows.
+
+pub mod engine;
+pub mod protocol;
+pub mod server;
+
+pub use engine::{Engine, EngineHandle, EngineStats, GenRequest, GenResponse};
+pub use protocol::{WireRequest, WireResponse};
+pub use server::{handle_conn, serve, Client};

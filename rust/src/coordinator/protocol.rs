@@ -1,0 +1,147 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Request:  {"prompt": "...", "max_tokens": 32, "temperature": 1.0,
+//!            "top_p": 0.95}
+//! Response: {"ok": true, "text": "...", "tokens": [...],
+//!            "prompt_tokens": 5, "queue_ms": 0.3, "gen_ms": 12.5}
+//! Errors:   {"ok": false, "error": "..."}
+
+use anyhow::Result;
+
+use crate::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl WireRequest {
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = Json::parse(line)?;
+        Ok(Self {
+            prompt: j.req("prompt")?.as_str()?.to_string(),
+            max_tokens: j.usize_or("max_tokens", 64),
+            temperature: j.f64_or("temperature", 1.0) as f32,
+            top_p: j.f64_or("top_p", 0.95) as f32,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prompt", Json::str(self.prompt.clone())),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("temperature", Json::num(self.temperature as f64)),
+            ("top_p", Json::num(self.top_p as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct WireResponse {
+    pub ok: bool,
+    pub text: Option<String>,
+    pub tokens: Option<Vec<i32>>,
+    pub prompt_tokens: Option<usize>,
+    pub queue_ms: Option<f64>,
+    pub gen_ms: Option<f64>,
+    pub error: Option<String>,
+}
+
+impl WireResponse {
+    pub fn error(msg: impl Into<String>) -> Self {
+        Self { ok: false, error: Some(msg.into()), ..Default::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("ok", Json::Bool(self.ok))];
+        if let Some(t) = &self.text {
+            pairs.push(("text", Json::str(t.clone())));
+        }
+        if let Some(toks) = &self.tokens {
+            pairs.push((
+                "tokens",
+                Json::Arr(toks.iter().map(|&t| Json::num(t as f64)).collect()),
+            ));
+        }
+        if let Some(p) = self.prompt_tokens {
+            pairs.push(("prompt_tokens", Json::num(p as f64)));
+        }
+        if let Some(q) = self.queue_ms {
+            pairs.push(("queue_ms", Json::num(q)));
+        }
+        if let Some(g) = self.gen_ms {
+            pairs.push(("gen_ms", Json::num(g)));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = Json::parse(line)?;
+        Ok(Self {
+            ok: j.req("ok")?.as_bool()?,
+            text: j.get("text").and_then(|x| x.as_str().ok()).map(String::from),
+            tokens: j.get("tokens").and_then(|x| x.as_arr().ok()).map(|a| {
+                a.iter().filter_map(|v| v.as_f64().ok()).map(|f| f as i32).collect()
+            }),
+            prompt_tokens: j.get("prompt_tokens").and_then(|x| x.as_usize().ok()),
+            queue_ms: j.get("queue_ms").and_then(|x| x.as_f64().ok()),
+            gen_ms: j.get("gen_ms").and_then(|x| x.as_f64().ok()),
+            error: j.get("error").and_then(|x| x.as_str().ok()).map(String::from),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = WireRequest::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(r.max_tokens, 64);
+        assert!((r.top_p - 0.95).abs() < 1e-6);
+        assert_eq!(r.prompt, "hi");
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let r = WireRequest {
+            prompt: "a \"quoted\" prompt\n".into(),
+            max_tokens: 7,
+            temperature: 0.5,
+            top_p: 0.9,
+        };
+        let r2 = WireRequest::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(r2.prompt, r.prompt);
+        assert_eq!(r2.max_tokens, 7);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = WireResponse {
+            ok: true,
+            text: Some("x".into()),
+            tokens: Some(vec![1, 2]),
+            prompt_tokens: Some(1),
+            queue_ms: Some(0.5),
+            gen_ms: Some(2.0),
+            error: None,
+        };
+        let s = r.to_json().dump();
+        assert!(!s.contains("error"));
+        let back = WireResponse::parse(&s).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.tokens.unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn missing_prompt_is_error() {
+        assert!(WireRequest::parse(r#"{"max_tokens": 4}"#).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! TCP front-end: newline-delimited JSON requests routed to the engine.
+//! Thread-per-connection (connections are few and long-lived; the real
+//! concurrency lives in the engine's continuous batcher).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::Result;
+
+use crate::sample::SampleParams;
+use crate::tokenizer::Tokenizer;
+
+use super::engine::{EngineHandle, GenRequest};
+use super::protocol::{WireRequest, WireResponse};
+
+/// Serve until the process is killed. Byte-level tokenizer converts
+/// prompts/outputs (the decode artifacts are byte-vocab).
+pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("coordinator listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, handle) {
+                eprintln!("conn {peer}: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
+    let mut write = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let tok = crate::tokenizer::ByteTokenizer;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match WireRequest::parse(&line) {
+            Err(e) => WireResponse::error(format!("bad request: {e:#}")),
+            Ok(req) => {
+                let gen_req = GenRequest {
+                    prompt: tok
+                        .encode(req.prompt.as_bytes())
+                        .into_iter()
+                        .map(|t| t as i32)
+                        .collect(),
+                    max_tokens: req.max_tokens.clamp(1, 4096),
+                    params: SampleParams {
+                        temperature: req.temperature,
+                        top_p: req.top_p,
+                    },
+                    stop_token: None,
+                };
+                match handle.generate(gen_req) {
+                    Err(e) => WireResponse::error(e),
+                    Ok(r) => {
+                        let bytes: Vec<u16> =
+                            r.tokens.iter().map(|&t| t as u16).collect();
+                        WireResponse {
+                            ok: true,
+                            text: Some(
+                                String::from_utf8_lossy(&tok.decode(&bytes))
+                                    .into_owned(),
+                            ),
+                            tokens: Some(r.tokens),
+                            prompt_tokens: Some(r.prompt_tokens),
+                            queue_ms: Some(r.queue_ms),
+                            gen_ms: Some(r.gen_ms),
+                            error: None,
+                        }
+                    }
+                }
+            }
+        };
+        let mut out = resp.to_json().dump();
+        out.push('\n');
+        write.write_all(out.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (used by examples/serve.rs and tests).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        let mut line = req.to_json().dump();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        WireResponse::parse(&resp)
+    }
+}

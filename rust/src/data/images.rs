@@ -1,0 +1,118 @@
+//! ImageNet64 stand-in: structured synthetic 64x64x3 images, flattened to
+//! 12,288-byte sequences (the paper's §5.2.3 regime). Each image is a
+//! Gaussian-mixture "scene": a smooth background gradient plus a few soft
+//! blobs, quantized to bytes. The spatial smoothness gives strong local
+//! correlations (like natural images after raster flattening) so an
+//! autoregressive byte model has real structure to learn.
+
+use crate::rng::Rng;
+
+use super::Corpus;
+
+pub const SIDE: usize = 64;
+pub const IMAGE_BYTES: usize = SIDE * SIDE * 3;
+
+/// Render one image into `buf` (len IMAGE_BYTES), raster order, RGB
+/// interleaved — matching the downsampled-ImageNet flattening.
+pub fn render_image(rng: &mut Rng, buf: &mut [u8]) {
+    assert_eq!(buf.len(), IMAGE_BYTES);
+    // background gradient
+    let (r0, g0, b0) = (rng.f64() * 160.0, rng.f64() * 160.0, rng.f64() * 160.0);
+    let (dx, dy) = (rng.f64() * 1.2 - 0.6, rng.f64() * 1.2 - 0.6);
+    // blobs
+    let n_blobs = 2 + rng.below(4) as usize;
+    let blobs: Vec<(f64, f64, f64, [f64; 3])> = (0..n_blobs)
+        .map(|_| {
+            (
+                rng.f64() * SIDE as f64,
+                rng.f64() * SIDE as f64,
+                4.0 + rng.f64() * 12.0,
+                [rng.f64() * 255.0, rng.f64() * 255.0, rng.f64() * 255.0],
+            )
+        })
+        .collect();
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let mut px = [
+                r0 + dx * x as f64 + dy * y as f64,
+                g0 + dx * y as f64 - dy * x as f64,
+                b0 + 0.5 * (dx + dy) * (x + y) as f64,
+            ];
+            for (bx, by, sigma, color) in &blobs {
+                let d2 = (x as f64 - bx).powi(2) + (y as f64 - by).powi(2);
+                let w = (-d2 / (2.0 * sigma * sigma)).exp();
+                for c in 0..3 {
+                    px[c] = px[c] * (1.0 - w) + color[c] * w;
+                }
+            }
+            let off = (y * SIDE + x) * 3;
+            for c in 0..3 {
+                // tiny noise so the bytes aren't perfectly predictable
+                let v = px[c] + rng.normal() * 2.0;
+                buf[off + c] = v.clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+}
+
+/// Generate a corpus of ~`size` bytes of concatenated flattened images.
+pub fn generate(size: usize, seed: u64) -> Corpus {
+    let n_images = size.div_ceil(IMAGE_BYTES);
+    let mut rng = Rng::new(seed ^ 0x1A6E);
+    let mut tokens = Vec::with_capacity(n_images * IMAGE_BYTES);
+    let mut buf = vec![0u8; IMAGE_BYTES];
+    for _ in 0..n_images {
+        render_image(&mut rng, &mut buf);
+        tokens.extend(buf.iter().map(|&b| b as u16));
+    }
+    tokens.truncate(size);
+    Corpus {
+        tokens,
+        vocab_size: 256,
+        name: format!("gm-images64(seed={seed},bytes={size})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_is_locally_smooth() {
+        let mut rng = Rng::new(5);
+        let mut buf = vec![0u8; IMAGE_BYTES];
+        render_image(&mut rng, &mut buf);
+        // mean |horizontal neighbor delta| must be far below the 85 expected
+        // of uniform noise
+        let mut total = 0u64;
+        let mut count = 0u64;
+        for y in 0..SIDE {
+            for x in 0..SIDE - 1 {
+                let a = buf[(y * SIDE + x) * 3] as i64;
+                let b = buf[(y * SIDE + x + 1) * 3] as i64;
+                total += a.abs_diff(b);
+                count += 1;
+            }
+        }
+        let mean = total as f64 / count as f64;
+        assert!(mean < 20.0, "mean neighbor delta {mean}");
+    }
+
+    #[test]
+    fn corpus_size_and_determinism() {
+        let a = generate(20_000, 7);
+        let b = generate(20_000, 7);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.len(), 20_000);
+    }
+
+    #[test]
+    fn images_differ() {
+        let mut rng = Rng::new(8);
+        let mut b1 = vec![0u8; IMAGE_BYTES];
+        let mut b2 = vec![0u8; IMAGE_BYTES];
+        render_image(&mut rng, &mut b1);
+        render_image(&mut rng, &mut b2);
+        assert_ne!(b1, b2);
+    }
+}

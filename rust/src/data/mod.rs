@@ -1,0 +1,56 @@
+//! Data substrates: synthetic corpora standing in for the paper's datasets
+//! (enwik8, PG-19, ImageNet64 — none shippable here; DESIGN.md §5) plus the
+//! TBPTT window batcher feeding the training loop.
+//!
+//! All generators are seeded and deterministic, so experiments are exactly
+//! reproducible and train/val/test splits are stable across runs.
+
+pub mod batcher;
+pub mod images;
+pub mod markov;
+pub mod zipf;
+
+pub use batcher::{Batch, TbpttBatcher};
+
+/// A token stream plus its vocabulary size. Token values < vocab_size.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub tokens: Vec<u16>,
+    pub vocab_size: usize,
+    /// Human-readable provenance for logs/EXPERIMENTS.md.
+    pub name: String,
+}
+
+impl Corpus {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Convention split: 90/5/5 like enwik8 (Child et al. 2019).
+    pub fn split(&self) -> (Corpus, Corpus, Corpus) {
+        let n = self.tokens.len();
+        let a = n * 90 / 100;
+        let b = n * 95 / 100;
+        let mk = |range: std::ops::Range<usize>, tag: &str| Corpus {
+            tokens: self.tokens[range].to_vec(),
+            vocab_size: self.vocab_size,
+            name: format!("{}:{}", self.name, tag),
+        };
+        (mk(0..a, "train"), mk(a..b, "valid"), mk(b..n, "test"))
+    }
+}
+
+/// Builtin dataset registry for the CLI / examples.
+pub fn build_corpus(kind: &str, size: usize, seed: u64) -> anyhow::Result<Corpus> {
+    match kind {
+        "markov" | "enwik8-like" => Ok(markov::generate(size, seed)),
+        "zipf" | "pg19-like" => Ok(zipf::generate_bytes(size, seed)),
+        "images" | "imagenet64-like" => Ok(images::generate(size, seed)),
+        other => anyhow::bail!("unknown corpus kind '{other}' \
+                              (markov|zipf|images)"),
+    }
+}

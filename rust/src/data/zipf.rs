@@ -1,0 +1,114 @@
+//! PG-19 stand-in: Zipf-distributed word stream ("books" of coherent
+//! paragraphs). Exercises the open-vocabulary path end to end: raw bytes ->
+//! BPE tokenizer (rust/src/tokenizer) -> token ids -> word-level perplexity
+//! conversion (Rae et al. 2020), exactly the arithmetic the paper's Table 4
+//! reports.
+
+use crate::rng::Rng;
+
+use super::Corpus;
+
+const VOCAB_WORDS: usize = 2000;
+const ZIPF_S: f64 = 1.07; // exponent close to natural language
+
+fn zipf_weights(n: usize) -> Vec<f64> {
+    (1..=n).map(|r| 1.0 / (r as f64).powf(ZIPF_S)).collect()
+}
+
+fn make_word(rng: &mut Rng) -> String {
+    const VOWELS: &[u8] = b"aeiouy";
+    const CONS: &[u8] = b"bcdfghjklmnprstvw";
+    let len = 2 + rng.below(8) as usize;
+    let mut w = String::new();
+    for i in 0..len {
+        let set = if i % 2 == 0 { CONS } else { VOWELS };
+        w.push(set[rng.below(set.len() as u64) as usize] as char);
+    }
+    w
+}
+
+/// Generate ~`size` bytes of Zipfian "book" text (raw bytes, to be BPE'd).
+pub fn generate_bytes(size: usize, seed: u64) -> Corpus {
+    let mut rng = Rng::new(seed ^ 0x9_619);
+    let words: Vec<String> = (0..VOCAB_WORDS).map(|_| make_word(&mut rng)).collect();
+    let weights = zipf_weights(VOCAB_WORDS);
+
+    let mut out = String::with_capacity(size + 64);
+    let mut sentence_len = 0usize;
+    while out.len() < size {
+        let w = &words[rng.categorical(&weights)];
+        if sentence_len == 0 {
+            let mut c = w.clone();
+            let up = c.remove(0).to_ascii_uppercase();
+            out.push(up);
+            out.push_str(&c);
+        } else {
+            out.push(' ');
+            out.push_str(w);
+        }
+        sentence_len += 1;
+        if sentence_len >= 5 + rng.below(12) as usize {
+            out.push('.');
+            out.push(' ');
+            sentence_len = 0;
+            if rng.f64() < 0.08 {
+                out.push('\n');
+            }
+        }
+    }
+    out.truncate(size);
+    Corpus {
+        tokens: out.bytes().map(u16::from).collect(),
+        vocab_size: 256,
+        name: format!("zipf-books(seed={seed},bytes={size})"),
+    }
+}
+
+/// Count whitespace-delimited words — denominator of the word-level
+/// perplexity conversion (Rae et al. 2020): WLP = exp(total_nats / n_words).
+pub fn word_count(bytes: &[u16]) -> usize {
+    let mut words = 0;
+    let mut in_word = false;
+    for &b in bytes {
+        let is_space = b == b' ' as u16 || b == b'\n' as u16;
+        if !is_space && !in_word {
+            words += 1;
+        }
+        in_word = !is_space;
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate_bytes(5000, 1).tokens, generate_bytes(5000, 1).tokens);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let c = generate_bytes(200_000, 2);
+        let s: String = c.tokens.iter().map(|&t| t as u8 as char).collect();
+        let mut counts = std::collections::HashMap::new();
+        for w in s.split([' ', '.', '\n']).filter(|w| !w.is_empty()) {
+            *counts.entry(w.to_lowercase()).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = freqs.iter().sum();
+        let top10: usize = freqs.iter().take(10).sum();
+        // Zipf s=1.07 over 2000 words: top-10 should hold a large share
+        assert!(top10 * 100 / total > 25, "top10 share {}", top10 * 100 / total);
+    }
+
+    #[test]
+    fn word_count_counts() {
+        let bytes: Vec<u16> = "two words. and three"
+            .bytes().map(u16::from).collect();
+        assert_eq!(word_count(&bytes), 4);
+        assert_eq!(word_count(&[]), 0);
+    }
+}

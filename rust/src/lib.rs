@@ -1,0 +1,42 @@
+//! Transformer-VQ: linear-time transformers via vector quantization
+//! (Lingle, ICLR 2024) — rust coordinator over AOT-compiled XLA artifacts.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L1 — Pallas VQ-attention kernel (build-time python, lowered into L2).
+//! * L2 — JAX Transformer-VQ model, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * L3 — this crate: training orchestration, data pipelines, tokenizers,
+//!   linear-time sampling, a batching inference server, and the benchmark
+//!   harness that regenerates every table in the paper.
+//!
+//! Python never runs at request time: [`runtime`] loads the HLO artifacts
+//! once and executes them via the PJRT C API.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod paperbench;
+pub mod rng;
+pub mod runtime;
+pub mod sample;
+pub mod schedule;
+pub mod store;
+pub mod tensor;
+pub mod testutil;
+pub mod tokenizer;
+pub mod train;
+pub mod vqref;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$TVQ_ARTIFACTS` or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("TVQ_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::PathBuf::from(ARTIFACTS_DIR),
+    }
+}

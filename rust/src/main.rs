@@ -1,0 +1,187 @@
+//! `tvq` — Transformer-VQ coordinator CLI.
+//!
+//! Subcommands:
+//!   train      train a preset on a synthetic corpus (TBPTT, §3.4.2)
+//!   generate   sample from a trained checkpoint via linear-time decoding
+//!   serve      continuous-batching inference server (JSON-lines TCP)
+//!   inspect    list artifacts in the manifest
+//!
+//! Benchmarks reproducing the paper's tables live in examples/ and
+//! rust/benches/ (see DESIGN.md §4 for the exhibit -> target map).
+//! Argument parsing is hand-rolled: the deployment image vendors no CLI
+//! crates, and the flag surface is small.
+
+use anyhow::{bail, Result};
+
+use transformer_vq::config::TrainConfig;
+use transformer_vq::coordinator::{serve, Engine};
+use transformer_vq::manifest::Manifest;
+use transformer_vq::rng::Rng;
+use transformer_vq::runtime::Runtime;
+use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::schedule::LrSchedule;
+use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
+use transformer_vq::train;
+
+const USAGE: &str = "\
+tvq — Transformer-VQ rust coordinator
+
+USAGE: tvq [--artifacts DIR] <command> [flags]
+
+COMMANDS
+  train     --preset P --steps N [--max-lr F] [--run-dir D] [--seed S]
+  generate  --preset P [--checkpoint D] [--prompt S] [--tokens N]
+            [--temperature F] [--top-p F] [--seed S]
+  serve     --preset P [--addr HOST:PORT] [--checkpoint D]
+  inspect
+";
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                bail!("unexpected argument '{a}'\n{USAGE}");
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn opt(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // global --artifacts flag may precede the subcommand
+    let mut artifacts = None;
+    if argv.first().map(String::as_str) == Some("--artifacts") {
+        if argv.len() < 2 {
+            bail!("--artifacts needs a value\n{USAGE}");
+        }
+        artifacts = Some(std::path::PathBuf::from(argv[1].clone()));
+        argv.drain(0..2);
+    }
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let dir = artifacts.unwrap_or_else(transformer_vq::artifacts_dir);
+    let manifest = Manifest::load(&dir)?;
+
+    match cmd.as_str() {
+        "inspect" => {
+            println!("{:<34} {:>8} {:>9} {:>7}", "artifact", "entry", "inputs", "outputs");
+            for (name, spec) in &manifest.artifacts {
+                println!(
+                    "{:<34} {:>8} {:>9} {:>7}",
+                    name,
+                    spec.entry,
+                    spec.inputs.len(),
+                    spec.outputs.len()
+                );
+            }
+        }
+        "train" => {
+            let preset = args.str("preset", "quickstart");
+            let steps: u64 = args.num("steps", 100)?;
+            let runtime = Runtime::cpu()?;
+            let mut cfg = TrainConfig::preset(&preset, steps)?;
+            cfg.seed = args.num("seed", 0u64)?;
+            if let Some(lr) = args.opt("max-lr") {
+                cfg.schedule = LrSchedule::paper_scaled(lr.parse()?, steps);
+            }
+            if let Some(rd) = args.opt("run-dir") {
+                cfg.run_dir = rd.into();
+            }
+            let (_, summary) = train::run_training(&runtime, &manifest, &cfg)?;
+            println!(
+                "done: {} steps, final loss {:.4} ({:.4} bpb), best val bpb {:?}",
+                summary.steps, summary.final_loss, summary.final_bpb, summary.best_val_bpb
+            );
+        }
+        "generate" => {
+            let preset = args.str("preset", "quickstart");
+            let runtime = Runtime::cpu()?;
+            let mut sampler = Sampler::new(&runtime, &manifest, &preset)?;
+            if let Some(ck) = args.opt("checkpoint") {
+                sampler.load_weights(std::path::Path::new(&ck).join("state.tvq"))?;
+            }
+            let prompt = args.str("prompt", "The ");
+            let tok = ByteTokenizer;
+            let prompt_ids: Vec<i32> =
+                tok.encode(prompt.as_bytes()).into_iter().map(i32::from).collect();
+            let b = sampler.batch_size();
+            let prompts = vec![prompt_ids; b];
+            let mut rng = Rng::new(args.num("seed", 0u64)?);
+            let params = SampleParams {
+                temperature: args.num("temperature", 1.0f32)?,
+                top_p: args.num("top-p", 0.95f32)?,
+            };
+            let outs = sampler.generate(&prompts, args.num("tokens", 64)?, params, &mut rng)?;
+            for (i, o) in outs.iter().enumerate() {
+                let bytes: Vec<u16> = o.iter().map(|&t| t as u16).collect();
+                println!(
+                    "--- sample {i} ---\n{}{}",
+                    prompt,
+                    String::from_utf8_lossy(&tok.decode(&bytes))
+                );
+            }
+        }
+        "serve" => {
+            let preset = args.str("preset", "quickstart");
+            let addr = args.str("addr", "127.0.0.1:7433");
+            let ckpt = args.opt("checkpoint");
+            let manifest_c = manifest.clone();
+            // the PJRT client is not Send: the engine builds it on its thread
+            let (handle, _join) = Engine::spawn(
+                move || {
+                    let runtime = Runtime::cpu()?;
+                    let mut sampler = Sampler::new(&runtime, &manifest_c, &preset)?;
+                    if let Some(ck) = ckpt {
+                        sampler
+                            .load_weights(std::path::Path::new(&ck).join("state.tvq"))?;
+                    }
+                    Ok(sampler)
+                },
+                0,
+            )?;
+            serve(&addr, handle)?;
+        }
+        other => {
+            bail!("unknown command '{other}'\n{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Describes, for every AOT-lowered HLO module, the flattened
+//! positional input/output layout (grouped leaves) and the model config.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::tensor::DType;
+
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    /// Logical group this leaf belongs to (e.g. "params", "opt", "carry").
+    pub group: String,
+    /// Pytree key path within the group (jax `keystr` format).
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(Self {
+            group: j.req("group")?.as_str()?.to_string(),
+            path: j.req("path")?.as_str()?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// Paper-aligned model hyperparameters, embedded per artifact by aot.py.
+/// Field names mirror `python/compile/configs.py::VQConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub d_k: usize,
+    pub d_v: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_type: String,
+    pub attn_type: String,
+    pub n_code: usize,
+    pub block_len: usize,
+    pub reduction: String,
+    pub use_cache: bool,
+    pub use_kernel: bool,
+    pub window_len: usize,
+    pub batch_size: usize,
+    pub commit_coef: f64,
+    pub ema_rate: f64,
+    pub grad_clip: f64,
+    pub use_abs_pe: bool,
+}
+
+impl ModelConfig {
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab_size: j.req("vocab_size")?.as_usize()?,
+            d_model: j.req("d_model")?.as_usize()?,
+            d_k: j.req("d_k")?.as_usize()?,
+            d_v: j.req("d_v")?.as_usize()?,
+            n_layers: j.req("n_layers")?.as_usize()?,
+            n_heads: j.req("n_heads")?.as_usize()?,
+            head_type: j.req("head_type")?.as_str()?.to_string(),
+            attn_type: j.req("attn_type")?.as_str()?.to_string(),
+            n_code: j.req("n_code")?.as_usize()?,
+            block_len: j.req("block_len")?.as_usize()?,
+            reduction: j.req("reduction")?.as_str()?.to_string(),
+            use_cache: j.req("use_cache")?.as_bool()?,
+            use_kernel: j.req("use_kernel")?.as_bool()?,
+            window_len: j.req("window_len")?.as_usize()?,
+            batch_size: j.req("batch_size")?.as_usize()?,
+            commit_coef: j.req("commit_coef")?.as_f64()?,
+            ema_rate: j.req("ema_rate")?.as_f64()?,
+            grad_clip: j.req("grad_clip")?.as_f64()?,
+            use_abs_pe: j.req("use_abs_pe")?.as_bool()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Entry-point kind: "train" | "eval" | "decode" | "bench".
+    pub entry: String,
+    /// HLO text filename, relative to the artifacts directory.
+    pub hlo: String,
+    pub config: ModelConfig,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+}
+
+impl ArtifactSpec {
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(Self {
+            entry: j.req("entry")?.as_str()?.to_string(),
+            hlo: j.req("hlo")?.as_str()?.to_string(),
+            config: ModelConfig::parse(j.req("config")?)
+                .context("parsing artifact config")?,
+            inputs: j
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::parse)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::parse)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Leaf specs of one input group, with their positional offsets.
+    pub fn input_group(&self, group: &str) -> Vec<(usize, &LeafSpec)> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.group == group)
+            .collect()
+    }
+
+    pub fn output_group(&self, group: &str) -> Vec<(usize, &LeafSpec)> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.group == group)
+            .collect()
+    }
+
+    pub fn input_group_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for l in &self.inputs {
+            if names.last() != Some(&l.group) {
+                names.push(l.group.clone());
+            }
+        }
+        names
+    }
+
+    /// Total input bytes (all leaves), for state-size reporting.
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|l| l.element_count() * 4).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in root.req("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec::parse(spec)
+                    .with_context(|| format!("artifact '{name}'"))?,
+            );
+        }
+        Ok(Self { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        match self.artifacts.get(name) {
+            Some(a) => Ok(a),
+            None => {
+                let known: Vec<_> = self.artifacts.keys().take(20).collect();
+                bail!("artifact '{name}' not in manifest (known: {known:?} ...)")
+            }
+        }
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.hlo)
+    }
+
+    pub fn init_path(&self, preset: &str) -> PathBuf {
+        self.dir.join(format!("{preset}.init.tvq"))
+    }
+
+    /// Artifact names matching a prefix (used by the bench harness to
+    /// enumerate the throughput grid).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.artifacts
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn sample_manifest_json() -> &'static str {
+    r#"{"artifacts": {"p.train": {
+        "entry": "train", "hlo": "p.train.hlo.txt",
+        "config": {"vocab_size": 256, "d_model": 64, "d_k": 16,
+            "d_v": 128, "n_layers": 2, "n_heads": 1, "head_type": "shga",
+            "attn_type": "vq", "n_code": 32, "block_len": 16,
+            "reduction": "matmul", "use_cache": true, "use_kernel": false,
+            "window_len": 64, "batch_size": 4, "commit_coef": 1e-4,
+            "ema_rate": 0.99, "tau": 0.0, "dropout_rate": 0.0,
+            "use_abs_pe": false, "tie_embeddings": false,
+            "adam_b1": 0.9, "adam_b2": 0.98, "adam_eps": 1e-9,
+            "weight_decay": 0.0, "grad_clip": 0.1},
+        "inputs": [
+            {"group": "params", "path": "['embed']", "shape": [256, 64], "dtype": "f32"},
+            {"group": "tokens", "path": "", "shape": [4, 65], "dtype": "i32"}
+        ],
+        "outputs": [
+            {"group": "metrics", "path": "", "shape": [6], "dtype": "f32"}
+        ]}}}"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_groups() {
+        let m = Manifest::parse(sample_manifest_json(), PathBuf::from("/x")).unwrap();
+        let a = m.get("p.train").unwrap();
+        assert_eq!(a.entry, "train");
+        assert_eq!(a.input_group("params").len(), 1);
+        assert_eq!(a.input_group("tokens")[0].0, 1);
+        assert_eq!(a.output_group("metrics")[0].1.shape, vec![6]);
+        assert_eq!(a.input_group_names(), vec!["params", "tokens"]);
+        assert_eq!(a.config.n_code, 32);
+        assert!((a.config.commit_coef - 1e-4).abs() < 1e-12);
+        assert_eq!(a.input_bytes(), 256 * 64 * 4 + 4 * 65 * 4);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(sample_manifest_json(), PathBuf::from("/x")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(Manifest::parse(r#"{"artifacts": {"a": {"entry": "x"}}}"#,
+                                PathBuf::from("/x")).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Metrics: unit conversions the paper reports (BPB, word-level perplexity),
+//! throughput meters, and latency histograms for the serving coordinator.
+
+use std::time::{Duration, Instant};
+
+/// Natural-log loss (nats/token) -> bits-per-byte (Tables 1-3, 5).
+pub fn nats_to_bpb(nats_per_token: f64) -> f64 {
+    nats_per_token / std::f64::consts::LN_2
+}
+
+/// Word-level perplexity from total nats over a byte/BPE span containing
+/// `n_words` words (Rae et al. 2020 convention; Table 4).
+pub fn word_level_perplexity(total_nats: f64, n_words: usize) -> f64 {
+    (total_nats / n_words.max(1) as f64).exp()
+}
+
+/// Rolling throughput (tokens/sec) with warmup exclusion.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Option<Instant>,
+    tokens: u64,
+    skip: u32,
+    skipped: u32,
+}
+
+impl ThroughputMeter {
+    /// `warmup_steps` initial observations are discarded (compile/cache
+    /// effects), matching how the paper reports steady-state tokens/sec.
+    pub fn new(warmup_steps: u32) -> Self {
+        Self { start: None, tokens: 0, skip: warmup_steps, skipped: 0 }
+    }
+
+    pub fn observe(&mut self, tokens: u64) {
+        if self.skipped < self.skip {
+            self.skipped += 1;
+            return;
+        }
+        if self.start.is_none() {
+            self.start = Some(Instant::now());
+            // the first timed observation opens the interval; its tokens
+            // were produced before it, so do not count them
+            return;
+        }
+        self.tokens += tokens;
+    }
+
+    pub fn tokens_per_sec(&self) -> Option<f64> {
+        let elapsed = self.start?.elapsed().as_secs_f64();
+        if elapsed <= 0.0 || self.tokens == 0 {
+            return None;
+        }
+        Some(self.tokens as f64 / elapsed)
+    }
+}
+
+/// Fixed-bucket latency histogram (microsecond buckets, powers of two).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>, // bucket i: [2^i, 2^(i+1)) microseconds
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 40], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Append-only CSV metrics log (loss curves for EXPERIMENTS.md).
+pub struct CsvLog {
+    file: std::fs::File,
+}
+
+impl CsvLog {
+    pub fn create(path: impl AsRef<std::path::Path>, header: &str) -> anyhow::Result<Self> {
+        use std::io::Write;
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(Self { file })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        use std::io::Write;
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bpb_conversion() {
+        // ln(2) nats/byte == 1 bit/byte
+        assert!((nats_to_bpb(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wlp_conversion() {
+        // 100 words, 100*ln(26.6) nats => WLP 26.6
+        let nats = 100.0 * 26.6f64.ln();
+        assert!((word_level_perplexity(nats, 100) - 26.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 10, 20, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.max() >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn throughput_skips_warmup() {
+        let mut m = ThroughputMeter::new(2);
+        m.observe(100);
+        m.observe(100);
+        assert!(m.tokens_per_sec().is_none());
+        m.observe(100); // opens the interval
+        std::thread::sleep(Duration::from_millis(5));
+        m.observe(100);
+        let tps = m.tokens_per_sec().unwrap();
+        assert!(tps > 0.0);
+    }
+}

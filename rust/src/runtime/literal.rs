@@ -1,0 +1,63 @@
+//! HostTensor <-> xla::Literal conversion.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::LeafSpec;
+use crate::tensor::{DType, HostTensor};
+
+fn element_type(dtype: DType) -> xla::ElementType {
+    match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        element_type(t.dtype),
+        &t.shape,
+        &t.data,
+    )
+    .map_err(|e| anyhow::anyhow!("literal from tensor {:?}{:?}: {e:?}", t.dtype, t.shape))
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, spec: &LeafSpec) -> Result<HostTensor> {
+    let n = spec.element_count();
+    let data = match spec.dtype {
+        DType::F32 => {
+            let mut v = vec![0f32; n];
+            lit.copy_raw_to(&mut v)
+                .map_err(|e| anyhow::anyhow!("copy_raw_to f32 ({}): {e:?}", spec.path))?;
+            let mut bytes = Vec::with_capacity(n * 4);
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            bytes
+        }
+        DType::I32 => {
+            let mut v = vec![0i32; n];
+            lit.copy_raw_to(&mut v)
+                .map_err(|e| anyhow::anyhow!("copy_raw_to i32 ({}): {e:?}", spec.path))?;
+            let mut bytes = Vec::with_capacity(n * 4);
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            bytes
+        }
+        DType::U32 => {
+            let mut v = vec![0u32; n];
+            lit.copy_raw_to(&mut v)
+                .map_err(|e| anyhow::anyhow!("copy_raw_to u32 ({}): {e:?}", spec.path))?;
+            let mut bytes = Vec::with_capacity(n * 4);
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            bytes
+        }
+    };
+    if data.len() != n * 4 {
+        bail!("literal size mismatch for {}", spec.path);
+    }
+    Ok(HostTensor { dtype: spec.dtype, shape: spec.shape.clone(), data })
+}

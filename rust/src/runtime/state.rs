@@ -1,0 +1,218 @@
+//! StateBundle: grouped model state threaded through step executions.
+//!
+//! Artifacts declare their inputs as ordered groups of pytree leaves
+//! (params, opt, cb, carry, tokens, lr, seed, ...). A `StateBundle` keeps a
+//! `Vec<HostTensor>` per group and assembles the positional input vector for
+//! an execution, then reabsorbs the matching output groups — so the training
+//! loop reads as `bundle.assemble() -> exe.run() -> bundle.absorb()`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ArtifactSpec;
+use crate::store;
+use crate::tensor::HostTensor;
+
+#[derive(Debug, Clone, Default)]
+pub struct StateBundle {
+    groups: BTreeMap<String, Vec<HostTensor>>,
+}
+
+impl StateBundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Initialize every input group of `spec` with zeros (correct shapes &
+    /// dtypes). Typical use: build zeros, then overwrite params/cb from the
+    /// init TVQ file.
+    pub fn zeros_for(spec: &ArtifactSpec) -> Self {
+        let mut groups: BTreeMap<String, Vec<HostTensor>> = BTreeMap::new();
+        for leaf in &spec.inputs {
+            groups
+                .entry(leaf.group.clone())
+                .or_default()
+                .push(HostTensor::zeros(leaf.dtype, &leaf.shape));
+        }
+        Self { groups }
+    }
+
+    /// Load groups from a TVQ file whose tensor names are `<group><path>`
+    /// (as written by aot.py's `write_init_state`). Tensors within a group
+    /// must appear in manifest (jax flattening) order, which the writer
+    /// guarantees.
+    pub fn load_groups(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let tensors = store::read_tvq(path)?;
+        let mut groups: BTreeMap<String, Vec<HostTensor>> = BTreeMap::new();
+        for (name, t) in tensors {
+            let group = name.split(['[', '/']).next().unwrap_or(&name).to_string();
+            groups.entry(group).or_default().push(t);
+        }
+        for (g, ts) in groups {
+            self.groups.insert(g, ts);
+        }
+        Ok(())
+    }
+
+    pub fn set_group(&mut self, name: &str, tensors: Vec<HostTensor>) {
+        self.groups.insert(name.to_string(), tensors);
+    }
+
+    pub fn group(&self, name: &str) -> Result<&[HostTensor]> {
+        match self.groups.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("state bundle has no group '{name}' (has: {:?})",
+                          self.groups.keys().collect::<Vec<_>>()),
+        }
+    }
+
+    pub fn group_mut(&mut self, name: &str) -> Option<&mut Vec<HostTensor>> {
+        self.groups.get_mut(name)
+    }
+
+    pub fn has_group(&self, name: &str) -> bool {
+        self.groups.contains_key(name)
+    }
+
+    /// Assemble the positional input vector for `spec`, validating that each
+    /// group has the right leaf count.
+    pub fn assemble(&self, spec: &ArtifactSpec) -> Result<Vec<HostTensor>> {
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        let mut cursor: BTreeMap<&str, usize> = BTreeMap::new();
+        for leaf in &spec.inputs {
+            let idx = cursor.entry(leaf.group.as_str()).or_insert(0);
+            let group = self.group(&leaf.group)?;
+            if *idx >= group.len() {
+                bail!(
+                    "group '{}' has {} tensors, artifact '{}' needs more",
+                    leaf.group, group.len(), spec.hlo
+                );
+            }
+            out.push(group[*idx].clone());
+            *idx += 1;
+        }
+        Ok(out)
+    }
+
+    /// Absorb execution outputs back into the bundle, grouped per the spec.
+    /// Groups not present in the outputs are left untouched.
+    pub fn absorb(&mut self, spec: &ArtifactSpec, outputs: Vec<HostTensor>) -> Result<()> {
+        if outputs.len() != spec.outputs.len() {
+            bail!("absorb: {} outputs vs {} specs", outputs.len(), spec.outputs.len());
+        }
+        let mut grouped: BTreeMap<String, Vec<HostTensor>> = BTreeMap::new();
+        for (t, leaf) in outputs.into_iter().zip(&spec.outputs) {
+            grouped.entry(leaf.group.clone()).or_default().push(t);
+        }
+        for (g, ts) in grouped {
+            self.groups.insert(g, ts);
+        }
+        Ok(())
+    }
+
+    /// Serialize selected groups to a TVQ checkpoint.
+    pub fn save_groups(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        spec: &ArtifactSpec,
+        group_names: &[&str],
+    ) -> Result<()> {
+        let mut tensors = Vec::new();
+        for g in group_names {
+            let leaves = spec.input_group(g);
+            let ts = self.group(g)?;
+            if leaves.len() != ts.len() {
+                bail!("group '{g}': {} tensors vs {} manifest leaves",
+                      ts.len(), leaves.len());
+            }
+            for ((_, leaf), t) in leaves.iter().zip(ts) {
+                tensors.push((format!("{}{}", g, leaf.path), t.clone()));
+            }
+        }
+        store::write_tvq(path, &tensors)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.groups.values().flatten().map(|t| t.nbytes()).sum()
+    }
+
+    pub fn group_names(&self) -> Vec<&String> {
+        self.groups.keys().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ArtifactSpec, LeafSpec, ModelConfig};
+    use crate::tensor::DType;
+
+    fn tiny_spec() -> ArtifactSpec {
+        let cfg = ModelConfig {
+            vocab_size: 256, d_model: 8, d_k: 4, d_v: 16, n_layers: 1,
+            n_heads: 1, head_type: "shga".into(), attn_type: "vq".into(),
+            n_code: 8, block_len: 4, reduction: "matmul".into(),
+            use_cache: true, use_kernel: false, window_len: 8,
+            batch_size: 2, commit_coef: 1e-4, ema_rate: 0.99,
+            grad_clip: 0.1, use_abs_pe: false,
+        };
+        ArtifactSpec {
+            entry: "train".into(),
+            hlo: "x.hlo.txt".into(),
+            config: cfg,
+            inputs: vec![
+                LeafSpec { group: "params".into(), path: "['w']".into(),
+                           shape: vec![2, 2], dtype: DType::F32 },
+                LeafSpec { group: "tokens".into(), path: "".into(),
+                           shape: vec![2], dtype: DType::I32 },
+            ],
+            outputs: vec![
+                LeafSpec { group: "params".into(), path: "['w']".into(),
+                           shape: vec![2, 2], dtype: DType::F32 },
+                LeafSpec { group: "metrics".into(), path: "".into(),
+                           shape: vec![1], dtype: DType::F32 },
+            ],
+        }
+    }
+
+    #[test]
+    fn zeros_assemble_absorb() {
+        let spec = tiny_spec();
+        let mut b = StateBundle::zeros_for(&spec);
+        let inputs = b.assemble(&spec).unwrap();
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(inputs[0].shape, vec![2, 2]);
+        let outs = vec![
+            HostTensor::from_f32(&[2, 2], &[1., 2., 3., 4.]),
+            HostTensor::from_f32(&[1], &[0.5]),
+        ];
+        b.absorb(&spec, outs).unwrap();
+        assert_eq!(b.group("params").unwrap()[0].as_f32().unwrap()[3], 4.0);
+        assert_eq!(b.group("metrics").unwrap()[0].as_f32().unwrap()[0], 0.5);
+        // tokens untouched by absorb
+        assert!(b.has_group("tokens"));
+    }
+
+    #[test]
+    fn missing_group_is_error() {
+        let spec = tiny_spec();
+        let b = StateBundle::new();
+        assert!(b.assemble(&spec).is_err());
+    }
+
+    #[test]
+    fn save_and_reload_groups() {
+        let spec = tiny_spec();
+        let mut b = StateBundle::zeros_for(&spec);
+        b.group_mut("params").unwrap()[0] =
+            HostTensor::from_f32(&[2, 2], &[9., 8., 7., 6.]);
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("ckpt.tvq");
+        b.save_groups(&p, &spec, &["params"]).unwrap();
+        let mut b2 = StateBundle::zeros_for(&spec);
+        b2.load_groups(&p).unwrap();
+        assert_eq!(b2.group("params").unwrap()[0].as_f32().unwrap(),
+                   vec![9., 8., 7., 6.]);
+    }
+}

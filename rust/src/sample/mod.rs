@@ -1,0 +1,167 @@
+//! Linear-time sampling runtime.
+//!
+//! Drives the `<preset>.decode` artifact token by token. The compressive
+//! cache state lives in the "state" group of the bundle ([B, ...] tensors:
+//! rolling 2L key/value window + per-shortcode running means, per layer), so
+//! per-token cost is O(S + 2L) — generation is linear in sequence length,
+//! unlike a quadratic-attention sampler whose KV cache grows with T.
+//!
+//! The sampler exposes per-slot control (reset/zero one batch row) so the
+//! serving coordinator can run continuous batching on top of it.
+
+mod nucleus;
+
+pub use nucleus::{nucleus_sample, softmax_with_temperature};
+
+use anyhow::{bail, Result};
+
+use crate::manifest::Manifest;
+use crate::rng::Rng;
+use crate::runtime::{Executable, Runtime, StateBundle};
+use crate::tensor::HostTensor;
+
+pub struct Sampler {
+    pub exe: Executable,
+    pub bundle: StateBundle,
+    preset: String,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SampleParams {
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_p: 0.95 }
+    }
+}
+
+impl Sampler {
+    pub fn new(runtime: &Runtime, manifest: &Manifest, preset: &str) -> Result<Self> {
+        let exe = runtime.load(manifest, &format!("{preset}.decode"))?;
+        let mut bundle = StateBundle::zeros_for(&exe.spec);
+        let init = manifest.init_path(preset);
+        if !init.exists() {
+            bail!("missing init state {}", init.display());
+        }
+        bundle.load_groups(&init)?;
+        Ok(Self { exe, bundle, preset: preset.to_string() })
+    }
+
+    /// Overwrite model weights from a training checkpoint (TVQ with params/cb
+    /// groups, e.g. saved by train::save_checkpoint).
+    pub fn load_weights(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut staged = StateBundle::new();
+        staged.load_groups(path)?;
+        for g in ["params", "cb"] {
+            let ts = staged.group(g)?.to_vec();
+            self.bundle.set_group(g, ts);
+        }
+        Ok(())
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.exe.spec.config.batch_size
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.exe.spec.config.vocab_size
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    /// Feed one token per batch row; returns logits [B, V] row-major.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch_size();
+        if tokens.len() != b {
+            bail!("step: {} tokens for batch size {b}", tokens.len());
+        }
+        self.bundle
+            .set_group("token", vec![HostTensor::from_i32(&[b], tokens)]);
+        let inputs = self.bundle.assemble(&self.exe.spec)?;
+        let outputs = self.exe.run(&inputs)?;
+        self.bundle.absorb(&self.exe.spec, outputs)?;
+        let logits = self.bundle.group("logits")?[0].as_f32()?;
+        let v = self.vocab_size();
+        Ok((0..b).map(|i| logits[i * v..(i + 1) * v].to_vec()).collect())
+    }
+
+    /// Zero the decode state of every slot.
+    pub fn reset_all(&mut self) {
+        let zeros: Vec<HostTensor> = self
+            .exe
+            .spec
+            .input_group("state")
+            .iter()
+            .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))
+            .collect();
+        self.bundle.set_group("state", zeros);
+    }
+
+    /// Zero one batch row's decode state (continuous batching: a finished
+    /// request frees its slot for a new sequence). Every "state" leaf is
+    /// [B, ...], so slot `b`'s slice is a contiguous byte range.
+    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        let b = self.batch_size();
+        if slot >= b {
+            bail!("slot {slot} out of range (batch {b})");
+        }
+        let group = self
+            .bundle
+            .group_mut("state")
+            .ok_or_else(|| anyhow::anyhow!("no state group"))?;
+        for t in group.iter_mut() {
+            if t.shape.first() != Some(&b) {
+                bail!("state leaf not batched: {:?}", t.shape);
+            }
+            let stride = t.data.len() / b;
+            t.data[slot * stride..(slot + 1) * stride].fill(0);
+        }
+        Ok(())
+    }
+
+    /// Convenience: generate `n_tokens` continuations for a batch of prompts
+    /// (all slots used; prompts teacher-forced token by token). Returns
+    /// per-row generated token ids.
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        n_tokens: usize,
+        params: SampleParams,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_size();
+        if prompts.len() != b {
+            bail!("generate: {} prompts for batch size {b}", prompts.len());
+        }
+        self.reset_all();
+        let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        let mut outputs = vec![Vec::with_capacity(n_tokens); b];
+        let mut current: Vec<i32> = prompts
+            .iter()
+            .map(|p| p.first().copied().unwrap_or(0))
+            .collect();
+        let total = max_prompt + n_tokens - 1;
+        for t in 0..total {
+            let logits = self.step(&current)?;
+            for row in 0..b {
+                let next_in_prompt = prompts[row].get(t + 1).copied();
+                current[row] = match next_in_prompt {
+                    Some(tok) => tok, // still teacher-forcing this row
+                    None => {
+                        let tok = nucleus_sample(&logits[row], params, rng);
+                        if outputs[row].len() < n_tokens {
+                            outputs[row].push(tok);
+                        }
+                        tok
+                    }
+                };
+            }
+        }
+        Ok(outputs)
+    }
+}

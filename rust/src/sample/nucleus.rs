@@ -1,0 +1,90 @@
+//! Nucleus (top-p) sampling (Holtzman et al. 2020) — the paper samples with
+//! nucleus 0.8-1.0 (Appendix D).
+
+use crate::rng::Rng;
+
+use super::SampleParams;
+
+/// Temperature-scaled softmax over raw logits.
+pub fn softmax_with_temperature(logits: &[f32], temperature: f32) -> Vec<f64> {
+    let t = temperature.max(1e-4) as f64;
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&l| ((l as f64 - m) / t).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Sample a token id from the smallest set of tokens whose cumulative
+/// probability exceeds `top_p`, renormalized.
+pub fn nucleus_sample(logits: &[f32], params: SampleParams, rng: &mut Rng) -> i32 {
+    let probs = softmax_with_temperature(logits, params.temperature);
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let p = params.top_p.clamp(0.0, 1.0) as f64;
+    let mut cum = 0.0;
+    let mut cutoff = idx.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        cum += probs[i];
+        if cum >= p {
+            cutoff = rank + 1;
+            break;
+        }
+    }
+    let nucleus = &idx[..cutoff.max(1)];
+    let weights: Vec<f64> = nucleus.iter().map(|&i| probs[i]).collect();
+    nucleus[rng.categorical(&weights)] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax_with_temperature(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let hot = softmax_with_temperature(&[1.0, 2.0], 2.0);
+        let cold = softmax_with_temperature(&[1.0, 2.0], 0.1);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn tiny_top_p_is_greedy() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0, 5.0, 1.0, -2.0];
+        for _ in 0..50 {
+            let params = SampleParams { temperature: 1.0, top_p: 1e-6 };
+            assert_eq!(nucleus_sample(&logits, params, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_one_covers_support() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0, 0.0, 0.0];
+        let mut seen = [false; 3];
+        for _ in 0..300 {
+            let params = SampleParams { temperature: 1.0, top_p: 1.0 };
+            seen[nucleus_sample(&logits, params, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn respects_distribution_roughly() {
+        let mut rng = Rng::new(2);
+        let logits = vec![0.0f32, (9f32).ln()]; // p = [0.1, 0.9]
+        let params = SampleParams { temperature: 1.0, top_p: 1.0 };
+        let n = 5000;
+        let ones = (0..n)
+            .filter(|_| nucleus_sample(&logits, params, &mut rng) == 1)
+            .count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.03, "frac {frac}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Learning-rate schedules (paper Appendix C): linear warmup for 10k steps,
+//! then cosine decay to max_lr / 10. Scaled-down runs use proportionally
+//! shorter warmups; the schedule lives here in L3 so policy changes never
+//! require re-lowering artifacts.
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub max_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    /// Final LR = max_lr / decay_factor (paper: 10x cosine decay).
+    pub decay_factor: f32,
+}
+
+impl LrSchedule {
+    pub fn paper_scaled(max_lr: f32, total_steps: u64) -> Self {
+        Self {
+            max_lr,
+            warmup_steps: (total_steps / 12).max(1), // 10k of 125k ~ 8%
+            total_steps,
+            decay_factor: 10.0,
+        }
+    }
+
+    pub fn constant(lr: f32) -> Self {
+        Self { max_lr: lr, warmup_steps: 0, total_steps: u64::MAX, decay_factor: 1.0 }
+    }
+
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.max_lr * (step as f32 + 1.0) / self.warmup_steps as f32;
+        }
+        if self.total_steps == u64::MAX || self.decay_factor == 1.0 {
+            return self.max_lr;
+        }
+        let min_lr = self.max_lr / self.decay_factor;
+        let span = (self.total_steps - self.warmup_steps).max(1) as f32;
+        let t = ((step - self.warmup_steps) as f32 / span).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        min_lr + (self.max_lr - min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = LrSchedule { max_lr: 1.0, warmup_steps: 10, total_steps: 100,
+                             decay_factor: 10.0 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_hits_min_at_end() {
+        let s = LrSchedule { max_lr: 1.0, warmup_steps: 10, total_steps: 100,
+                             decay_factor: 10.0 };
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-5);
+        // monotone decreasing after warmup
+        let mut prev = s.lr_at(10);
+        for step in 11..100 {
+            let lr = s.lr_at(step);
+            assert!(lr <= prev + 1e-7);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.3);
+        assert_eq!(s.lr_at(0), 0.3);
+        assert_eq!(s.lr_at(10_000_000), 0.3);
+    }
+
+    #[test]
+    fn beyond_total_clamps() {
+        let s = LrSchedule { max_lr: 1.0, warmup_steps: 0, total_steps: 10,
+                             decay_factor: 10.0 };
+        assert!((s.lr_at(50) - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,128 @@
+//! TVQ tensor store: binary interchange with the python compile path.
+//!
+//! Format (see python/compile/tvq.py, the writer of record):
+//!   b"TVQ1" | u32 header_len LE | JSON header | raw LE tensor data
+//! Used for initial parameters, checkpoints, and golden test vectors.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::tensor::{DType, HostTensor};
+
+const MAGIC: &[u8; 4] = b"TVQ1";
+
+/// Read every tensor in a TVQ file, preserving order.
+pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let mut len_buf = [0u8; 4];
+    f.read_exact(&mut len_buf)?;
+    let hlen = u32::from_le_bytes(len_buf) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .with_context(|| format!("{}: header parse", path.display()))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+
+    let tensors = header.req("tensors")?.as_arr()?;
+    let mut out = Vec::with_capacity(tensors.len());
+    for m in tensors {
+        let name = m.req("name")?.as_str()?.to_string();
+        let offset = m.req("offset")?.as_usize()?;
+        let nbytes = m.req("nbytes")?.as_usize()?;
+        let shape: Vec<usize> = m
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Result<_>>()?;
+        let end = offset + nbytes;
+        if end > data.len() {
+            bail!("{}: tensor {name} overruns data section", path.display());
+        }
+        let dtype = DType::parse(m.req("dtype")?.as_str()?)?;
+        let expect = shape.iter().product::<usize>() * dtype.size_bytes();
+        if expect != nbytes {
+            bail!("{}: tensor {name} shape/bytes mismatch", path.display());
+        }
+        out.push((
+            name,
+            HostTensor { dtype, shape, data: data[offset..end].to_vec() },
+        ));
+    }
+    Ok(out)
+}
+
+/// Write tensors to a TVQ file (bit-compatible with the python reader).
+pub fn write_tvq(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let mut metas = Vec::with_capacity(tensors.len());
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        metas.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            ("dtype", Json::str(t.dtype.name())),
+            ("shape", Json::Arr(t.shape.iter().map(|&s| Json::num(s as f64)).collect())),
+            ("offset", Json::num(offset as f64)),
+            ("nbytes", Json::num(t.nbytes() as f64)),
+        ]));
+        offset += t.nbytes();
+    }
+    let header = Json::obj(vec![("tensors", Json::Arr(metas))]).dump().into_bytes();
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(&header)?;
+    for (_, t) in tensors {
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("x.tvq");
+        let tensors = vec![
+            ("a".to_string(), HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.])),
+            ("b/c".to_string(), HostTensor::from_i32(&[2], &[-7, 9])),
+            ("scalar".to_string(), HostTensor::scalar_f32(0.5)),
+        ];
+        write_tvq(&p, &tensors).unwrap();
+        let back = read_tvq(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("bad.tvq");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_tvq(&p).is_err());
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("empty.tvq");
+        std::fs::write(&p, b"").unwrap();
+        assert!(read_tvq(&p).is_err());
+    }
+}

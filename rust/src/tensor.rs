@@ -1,0 +1,165 @@
+//! Host-side tensor: the coordinator's view of model state and batches.
+//!
+//! A deliberately small ND-array — just enough for the L3 control plane
+//! (state plumbing, checkpoints, sampling math, reference checks). All heavy
+//! compute happens inside the AOT-compiled XLA executables.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`HostTensor`]. Mirrors the TVQ store / manifest dtypes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+}
+
+/// Dense, C-contiguous host tensor. Data stored as raw little-endian bytes so
+/// f32/i32/u32 share one container (matching XLA literals and the TVQ store).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size_bytes()] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], &[v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::from_i32(&[], &[v])
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// First element as f32 (for scalar metric tensors).
+    pub fn first_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| anyhow::anyhow!("empty tensor"))
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Flat index helpers for multi-dim access in reference code.
+pub fn flat_index(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), idx.len());
+    let mut out = 0;
+    for (s, i) in shape.iter().zip(idx) {
+        debug_assert!(i < s);
+        out = out * s + i;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.nbytes(), 16);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::from_i32(&[3], &[-1, 0, 7]);
+        assert_eq!(t.as_i32().unwrap(), vec![-1, 0, 7]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(DType::F32, &[4, 5]);
+        assert_eq!(t.element_count(), 20);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::from_i32(&[1], &[3]);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn flat_index_row_major() {
+        assert_eq!(flat_index(&[2, 3], &[1, 2]), 5);
+        assert_eq!(flat_index(&[4], &[3]), 3);
+    }
+}

@@ -1,0 +1,98 @@
+//! Test utilities: self-cleaning temp dirs and a tiny property-testing
+//! driver over the in-repo deterministic [`crate::rng::Rng`] (the vendored
+//! dependency set has no proptest/tempfile).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Temp directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "tvq-test-{}-{}-{n}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&path).expect("create tempdir");
+        Self { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Default for TempDir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Minimal property-test driver: runs `f` on `n` seeded cases; reports the
+/// failing seed so the case reproduces exactly.
+pub fn check_property<F: FnMut(&mut crate::rng::Rng)>(name: &str, n: u64, mut f: F) {
+    for seed in 0..n {
+        let mut rng = crate::rng::Rng::new(0xFEED ^ seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_cleans_up() {
+        let path;
+        {
+            let d = TempDir::new();
+            path = d.path().to_path_buf();
+            std::fs::write(d.join("f.txt"), "x").unwrap();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn property_driver_runs_all_seeds() {
+        let mut count = 0u64;
+        check_property("counting", 10, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn property_driver_seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check_property("collect", 4, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        check_property("collect", 4, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

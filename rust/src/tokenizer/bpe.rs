@@ -1,0 +1,197 @@
+//! Byte-pair encoding, from scratch (Sennrich-style, byte base vocabulary).
+//!
+//! Training: repeatedly merge the most frequent adjacent token pair into a
+//! new symbol until the target vocabulary size is reached. Encoding applies
+//! merges in training order (lowest rank first), the standard BPE greedy
+//! scheme. Deterministic: frequency ties break on the lexicographically
+//! smaller pair.
+
+use std::collections::HashMap;
+
+use super::Tokenizer;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merges[i] = (left, right) produced new symbol 256 + i.
+    pub merges: Vec<(u16, u16)>,
+    /// rank lookup: pair -> merge index.
+    ranks: HashMap<(u16, u16), usize>,
+    /// decoded byte expansion of every symbol.
+    expansions: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train on `corpus` until `vocab_size` symbols exist (>= 256).
+    pub fn train(corpus: &[u8], vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must include all bytes");
+        let mut tokens: Vec<u16> = corpus.iter().map(|&b| b as u16).collect();
+        let mut merges = Vec::with_capacity(vocab_size - 256);
+        while 256 + merges.len() < vocab_size {
+            let mut counts: HashMap<(u16, u16), usize> = HashMap::new();
+            for w in tokens.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&best, &n)) = counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break; // nothing worth merging
+            }
+            let new_sym = (256 + merges.len()) as u16;
+            merges.push(best);
+            tokens = merge_pair(&tokens, best, new_sym);
+        }
+        Self::from_merges(merges)
+    }
+
+    pub fn from_merges(merges: Vec<(u16, u16)>) -> Self {
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+        let mut expansions: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        for &(l, r) in &merges {
+            let mut e = expansions[l as usize].clone();
+            e.extend_from_slice(&expansions[r as usize]);
+            expansions.push(e);
+        }
+        Self { merges, ranks, expansions }
+    }
+
+    /// Save as a line-oriented text file: "left right" per merge, in rank
+    /// order (the format is trivially diffable and versionable).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let mut out = String::from("# tvq-bpe v1\n");
+        for (l, r) in &self.merges {
+            out.push_str(&format!("{l} {r}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut merges = Vec::new();
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut it = line.split_whitespace();
+            let l: u16 = it.next().ok_or_else(|| anyhow::anyhow!("bad merge line"))?.parse()?;
+            let r: u16 = it.next().ok_or_else(|| anyhow::anyhow!("bad merge line"))?.parse()?;
+            merges.push((l, r));
+        }
+        Ok(Self::from_merges(merges))
+    }
+}
+
+fn merge_pair(tokens: &[u16], pair: (u16, u16), new_sym: u16) -> Vec<u16> {
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut i = 0;
+    while i < tokens.len() {
+        if i + 1 < tokens.len() && (tokens[i], tokens[i + 1]) == pair {
+            out.push(new_sym);
+            i += 2;
+        } else {
+            out.push(tokens[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Tokenizer for Bpe {
+    fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    fn encode(&self, text: &[u8]) -> Vec<u16> {
+        let mut tokens: Vec<u16> = text.iter().map(|&b| b as u16).collect();
+        // repeatedly apply the lowest-rank applicable merge
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for (pos, w) in tokens.windows(2).enumerate() {
+                if let Some(&rank) = self.ranks.get(&(w[0], w[1])) {
+                    if best.is_none() || rank < best.unwrap().0 {
+                        best = Some((rank, pos));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((rank, _)) => {
+                    let pair = self.merges[rank];
+                    tokens = merge_pair(&tokens, pair, (256 + rank) as u16);
+                }
+            }
+        }
+        tokens
+    }
+
+    fn decode(&self, tokens: &[u16]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            match self.expansions.get(t as usize) {
+                Some(e) => out.extend_from_slice(e),
+                None => out.push(b'?'),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trains_and_roundtrips() {
+        let corpus = b"the cat sat on the mat. the cat sat again. the cat!";
+        let bpe = Bpe::train(corpus, 280);
+        assert!(bpe.vocab_size() > 256);
+        let enc = bpe.encode(corpus);
+        assert!(enc.len() < corpus.len(), "BPE should compress");
+        assert_eq!(bpe.decode(&enc), corpus.to_vec());
+    }
+
+    #[test]
+    fn roundtrips_unseen_bytes() {
+        let bpe = Bpe::train(b"aaabbbaaabbb", 260);
+        let text = b"zzz \xF0\x9F\x8E\x89 qqq";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text.to_vec());
+    }
+
+    #[test]
+    fn most_frequent_pair_merged_first() {
+        // "ab" appears 4x, others less
+        let bpe = Bpe::train(b"abxabyabzab", 257);
+        assert_eq!(bpe.merges[0], (b'a' as u16, b'b' as u16));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let c = b"some repeated text some repeated text some repeated";
+        let a = Bpe::train(c, 270);
+        let b = Bpe::train(c, 270);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn save_load_preserves_encoding() {
+        let corpus = b"hello hello hello world world";
+        let bpe = Bpe::train(corpus, 264);
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("bpe.txt");
+        bpe.save(&p).unwrap();
+        let bpe2 = Bpe::load(&p).unwrap();
+        assert_eq!(bpe.encode(corpus), bpe2.encode(corpus));
+        assert_eq!(bpe2.decode(&bpe2.encode(corpus)), corpus.to_vec());
+    }
+
+    #[test]
+    fn stops_when_no_repeats() {
+        let bpe = Bpe::train(b"abcdefg", 300);
+        assert!(bpe.vocab_size() < 300);
+    }
+}

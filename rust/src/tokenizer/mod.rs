@@ -1,0 +1,45 @@
+//! Tokenizers: byte-level (enwik8/ImageNet64 tracks) and a from-scratch BPE
+//! trainer/encoder (PG-19 track; the paper used a SentencePiece BPE-32k
+//! vocabulary — we train a scaled-down BPE on the synthetic book corpus).
+
+pub mod bpe;
+
+pub use bpe::Bpe;
+
+/// Common interface over tokenizers.
+pub trait Tokenizer {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &[u8]) -> Vec<u16>;
+    fn decode(&self, tokens: &[u16]) -> Vec<u8>;
+}
+
+/// Identity byte tokenizer (vocab 256).
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &[u8]) -> Vec<u16> {
+        text.iter().map(|&b| b as u16).collect()
+    }
+
+    fn decode(&self, tokens: &[u16]) -> Vec<u8> {
+        tokens.iter().map(|&t| (t & 0xFF) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let text = b"hello \xffworld".to_vec();
+        assert_eq!(t.decode(&t.encode(&text)), text);
+        assert_eq!(t.vocab_size(), 256);
+    }
+}

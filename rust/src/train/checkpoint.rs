@@ -1,0 +1,71 @@
+//! Checkpointing: model state (params/opt/codebooks/carry) as a TVQ file
+//! plus a JSON sidecar with run metadata. Resume is bit-exact: every tensor
+//! the train step touches is saved.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::json::Json;
+
+use super::Trainer;
+
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    pub preset: String,
+    pub step: u64,
+    pub format: u32,
+}
+
+impl CheckpointMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("format", Json::num(self.format as f64)),
+        ])
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(Self {
+            preset: j.req("preset")?.as_str()?.to_string(),
+            step: j.req("step")?.as_u64()?,
+            format: j.req("format")?.as_u64()? as u32,
+        })
+    }
+}
+
+const STATE_GROUPS: &[&str] = &["params", "opt", "cb", "carry"];
+
+pub fn save_checkpoint(trainer: &Trainer, dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let groups: Vec<&str> = STATE_GROUPS
+        .iter()
+        .copied()
+        .filter(|g| trainer.bundle.has_group(g))
+        .collect();
+    trainer
+        .bundle
+        .save_groups(dir.join("state.tvq"), &trainer.exe_train.spec, &groups)?;
+    let meta = CheckpointMeta { preset: trainer.preset.clone(), step: trainer.step, format: 1 };
+    std::fs::write(dir.join("meta.json"), meta.to_json().dump())?;
+    Ok(())
+}
+
+pub fn load_checkpoint(trainer: &mut Trainer, dir: impl AsRef<Path>) -> Result<CheckpointMeta> {
+    let dir = dir.as_ref();
+    let meta = CheckpointMeta::parse(&Json::parse(&std::fs::read_to_string(
+        dir.join("meta.json"),
+    )?)?)?;
+    if meta.preset != trainer.preset {
+        anyhow::bail!(
+            "checkpoint is for preset '{}', trainer is '{}'",
+            meta.preset,
+            trainer.preset
+        );
+    }
+    trainer.bundle.load_groups(dir.join("state.tvq"))?;
+    trainer.step = meta.step;
+    Ok(meta)
+}

@@ -1,0 +1,100 @@
+//! High-level training driver shared by the CLI and examples: corpus ->
+//! splits -> batcher -> train loop with periodic eval/checkpoint/logging.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::{build_corpus, TbpttBatcher};
+use crate::manifest::Manifest;
+use crate::metrics::{nats_to_bpb, CsvLog};
+use crate::runtime::Runtime;
+
+use super::{save_checkpoint, Trainer, TrainMetrics};
+
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    pub steps: u64,
+    pub final_loss: f32,
+    pub final_bpb: f64,
+    pub best_val_bpb: Option<f64>,
+    pub tokens_per_sec: Option<f64>,
+    pub loss_curve: Vec<(u64, f32)>,
+}
+
+/// Run a full training job per `cfg`; returns the summary (and leaves the
+/// trained `Trainer` for further use, e.g. sampling).
+pub fn run_training(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+) -> Result<(Trainer, TrainSummary)> {
+    cfg.save()?;
+    let mut trainer = Trainer::new(runtime, manifest, &cfg.preset, cfg.schedule.clone())?;
+    let corpus = build_corpus(&cfg.corpus, cfg.corpus_tokens, cfg.seed)?;
+    let (train_c, valid_c, _test_c) = corpus.split();
+    let w = trainer.window_len();
+    let b = trainer.batch_size();
+    let mut batcher = TbpttBatcher::new(train_c.tokens, b, w)?;
+    let mut val_batcher = TbpttBatcher::new(valid_c.tokens, b, w)?;
+
+    let mut log = CsvLog::create(
+        cfg.run_dir.join("train.csv"),
+        "step,loss,ce,bpb,commit,grad_norm,code_perplexity,lr",
+    )?;
+    let mut curve = Vec::new();
+    let mut best_val: Option<f64> = None;
+    let mut last: Option<TrainMetrics> = None;
+
+    for step in 0..cfg.steps {
+        let batch = batcher.next_batch();
+        let m = trainer.train_on(&batch)?;
+        log.row(&[
+            step.to_string(),
+            m.loss.to_string(),
+            m.ce.to_string(),
+            format!("{:.4}", m.bpb()),
+            m.commit.to_string(),
+            m.grad_norm.to_string(),
+            m.code_perplexity.to_string(),
+            m.lr.to_string(),
+        ])?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            let tps = trainer
+                .throughput
+                .tokens_per_sec()
+                .map(|t| format!("{t:.0} tok/s"))
+                .unwrap_or_default();
+            eprintln!(
+                "[{}] step {step:>6}  loss {:.4}  bpb {:.4}  codeppl {:.1}  {tps}",
+                cfg.preset,
+                m.loss,
+                m.bpb(),
+                m.code_perplexity
+            );
+            curve.push((step, m.loss));
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let ce = trainer.evaluate(&mut val_batcher, cfg.eval_windows)?;
+            let bpb = nats_to_bpb(ce);
+            eprintln!("[{}] step {step:>6}  VAL bpb {bpb:.4}", cfg.preset);
+            if best_val.is_none_or(|b| bpb < b) {
+                best_val = Some(bpb);
+            }
+        }
+        if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 {
+            save_checkpoint(&trainer, cfg.run_dir.join(format!("ckpt-{}", step + 1)))?;
+        }
+        last = Some(m);
+    }
+    let last = last.ok_or_else(|| anyhow::anyhow!("0 training steps"))?;
+    save_checkpoint(&trainer, cfg.run_dir.join("ckpt-final"))?;
+    let summary = TrainSummary {
+        steps: cfg.steps,
+        final_loss: last.loss,
+        final_bpb: last.bpb(),
+        best_val_bpb: best_val,
+        tokens_per_sec: trainer.throughput.tokens_per_sec(),
+        loss_curve: curve,
+    };
+    Ok((trainer, summary))
+}

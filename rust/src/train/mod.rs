@@ -1,0 +1,167 @@
+//! Training orchestrator: drives the AOT `*.train`/`*.eval` artifacts with
+//! TBPTT windows (§3.4.2), owns the model state between steps, computes the
+//! LR schedule, evaluates, and checkpoints.
+
+mod checkpoint;
+mod driver;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, CheckpointMeta};
+pub use driver::{run_training, TrainSummary};
+
+use anyhow::{bail, Result};
+
+use crate::data::{Batch, TbpttBatcher};
+use crate::manifest::Manifest;
+use crate::metrics::ThroughputMeter;
+use crate::runtime::{Executable, Runtime, StateBundle};
+use crate::schedule::LrSchedule;
+use crate::tensor::HostTensor;
+
+/// Parsed train-step metrics (order fixed by steps.py).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub commit: f32,
+    pub grad_norm: f32,
+    pub code_perplexity: f32,
+    pub lr: f32,
+}
+
+impl TrainMetrics {
+    pub fn parse(t: &HostTensor) -> Result<Self> {
+        let v = t.as_f32()?;
+        if v.len() != 6 {
+            bail!("metrics tensor has {} entries, expected 6", v.len());
+        }
+        Ok(Self {
+            loss: v[0],
+            ce: v[1],
+            commit: v[2],
+            grad_norm: v[3],
+            code_perplexity: v[4],
+            lr: v[5],
+        })
+    }
+
+    pub fn bpb(&self) -> f64 {
+        crate::metrics::nats_to_bpb(self.ce as f64)
+    }
+}
+
+pub struct Trainer {
+    pub exe_train: Executable,
+    pub exe_eval: Option<Executable>,
+    pub bundle: StateBundle,
+    pub schedule: LrSchedule,
+    pub step: u64,
+    pub preset: String,
+    pub throughput: ThroughputMeter,
+}
+
+impl Trainer {
+    /// Load `<preset>.train` (+ `<preset>.eval` if present) and initialize
+    /// state: zeros for all groups, then params/codebooks from
+    /// `<preset>.init.tvq`.
+    pub fn new(
+        runtime: &Runtime,
+        manifest: &Manifest,
+        preset: &str,
+        schedule: LrSchedule,
+    ) -> Result<Self> {
+        let exe_train = runtime.load(manifest, &format!("{preset}.train"))?;
+        let exe_eval = match manifest.get(&format!("{preset}.eval")) {
+            Ok(_) => Some(runtime.load(manifest, &format!("{preset}.eval"))?),
+            Err(_) => None,
+        };
+        let mut bundle = StateBundle::zeros_for(&exe_train.spec);
+        let init = manifest.init_path(preset);
+        if init.exists() {
+            bundle.load_groups(&init)?;
+        } else {
+            bail!("missing init state {} — re-run `make artifacts`", init.display());
+        }
+        Ok(Self {
+            exe_train,
+            exe_eval,
+            bundle,
+            schedule,
+            step: 0,
+            preset: preset.to_string(),
+            throughput: ThroughputMeter::new(2),
+        })
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.exe_train.spec.config.window_len
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.exe_train.spec.config.batch_size
+    }
+
+    /// Reset the recurrent carry (sequence boundary).
+    pub fn reset_carry(&mut self) {
+        let zeros: Vec<HostTensor> = self
+            .exe_train
+            .spec
+            .input_group("carry")
+            .iter()
+            .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))
+            .collect();
+        self.bundle.set_group("carry", zeros);
+    }
+
+    /// One §3.4.2 update on a TBPTT window.
+    pub fn train_on(&mut self, batch: &Batch) -> Result<TrainMetrics> {
+        if batch.fresh.iter().any(|&f| f) {
+            // the batcher resets all streams together; partial resets would
+            // need per-row carry masking (not required by our batcher)
+            self.reset_carry();
+        }
+        let lr = self.schedule.lr_at(self.step);
+        self.bundle.set_group("tokens", vec![batch.tokens.clone()]);
+        self.bundle.set_group("lr", vec![HostTensor::scalar_f32(lr)]);
+        self.bundle
+            .set_group("seed", vec![HostTensor::scalar_i32(self.step as i32)]);
+        let inputs = self.bundle.assemble(&self.exe_train.spec)?;
+        let outputs = self.exe_train.run(&inputs)?;
+        self.bundle.absorb(&self.exe_train.spec, outputs)?;
+        self.step += 1;
+        self.throughput
+            .observe((self.batch_size() * self.window_len()) as u64);
+        let metrics = &self.bundle.group("metrics")?[0];
+        TrainMetrics::parse(metrics)
+    }
+
+    /// Evaluate on `max_windows` windows from `batcher` (fresh carry).
+    /// Returns mean CE in nats/token.
+    pub fn evaluate(&self, batcher: &mut TbpttBatcher, max_windows: usize) -> Result<f64> {
+        let exe = self
+            .exe_eval
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no eval artifact for {}", self.preset))?;
+        let mut bundle = self.bundle.clone();
+        // eval carries its own recurrent state
+        let zeros: Vec<HostTensor> = exe
+            .spec
+            .input_group("carry")
+            .iter()
+            .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))
+            .collect();
+        bundle.set_group("carry", zeros);
+        let mut total_ce = 0f64;
+        let mut total_tok = 0f64;
+        for _ in 0..max_windows {
+            let b = batcher.next_batch();
+            bundle.set_group("tokens", vec![b.tokens]);
+            let inputs = bundle.assemble(&exe.spec)?;
+            let outputs = exe.run(&inputs)?;
+            bundle.absorb(&exe.spec, outputs)?;
+            let m = bundle.group("metrics")?[0].as_f32()?;
+            total_ce += m[0] as f64;
+            total_tok += m[1] as f64;
+        }
+        Ok(total_ce / total_tok.max(1.0))
+    }
+}

@@ -1,0 +1,42 @@
+//! Pure-rust reference implementation of VQ-Attention (single head, f64).
+//!
+//! An independent re-derivation of the paper's math — no shared code with
+//! the python/L2 implementation — used to (a) verify the theorems from the
+//! rust side (cargo tests + proptest), and (b) provide an in-process cost
+//! model / oracle for coordinator tests that must not depend on artifacts
+//! being built.
+//!
+//! Everything is deliberately simple O(T^2)-or-linear loops over `Vec<f64>`.
+
+pub mod attention;
+pub mod quantizer;
+
+pub use attention::{linear_vq_attention, quadratic_vq_attention, AttnInputs};
+pub use quantizer::{nearest_code, quantize_all, CodebookEma};
+
+/// FLOP estimate of quadratic attention per token (used by the analytic
+/// throughput model in the bench harness): scores T*Dk + weights*values T*Dv.
+pub fn quadratic_flops_per_token(t: usize, d_k: usize, d_v: usize) -> f64 {
+    2.0 * t as f64 * (d_k + d_v) as f64
+}
+
+/// FLOP estimate of VQ attention per token (Remark 3.8):
+/// O((S + 2L) * (Dk + Dv)).
+pub fn vq_flops_per_token(s: usize, l: usize, d_k: usize, d_v: usize) -> f64 {
+    2.0 * (s + 2 * l) as f64 * (d_k + d_v) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vq_flops_independent_of_t() {
+        let a = vq_flops_per_token(512, 512, 128, 1536);
+        let b = vq_flops_per_token(512, 512, 128, 1536);
+        assert_eq!(a, b);
+        // quadratic grows linearly per token with t
+        assert!(quadratic_flops_per_token(8192, 128, 1536)
+            > 3.9 * quadratic_flops_per_token(2048, 128, 1536));
+    }
+}

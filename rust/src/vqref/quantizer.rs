@@ -1,0 +1,120 @@
+//! Vector quantizer + EMA k-means codebook, rust reference (Definition 2.1,
+//! §3.4.1). Mirrors python/compile/kernels/vq.py independently.
+
+/// Index of the nearest codeword (L2). `codebook` is row-major [s][d].
+pub fn nearest_code(x: &[f64], codebook: &[Vec<f64>]) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (s, c) in codebook.iter().enumerate() {
+        let d: f64 = x.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best_d {
+            best_d = d;
+            best = s;
+        }
+    }
+    best
+}
+
+/// Quantize a sequence of vectors; returns (quantized rows, shortcodes).
+pub fn quantize_all(xs: &[Vec<f64>], codebook: &[Vec<f64>]) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut qs = Vec::with_capacity(xs.len());
+    let mut zs = Vec::with_capacity(xs.len());
+    for x in xs {
+        let z = nearest_code(x, codebook);
+        qs.push(codebook[z].clone());
+        zs.push(z);
+    }
+    (qs, zs)
+}
+
+/// EMA-smoothed k-means codebook (van den Oord 2017 / Razavi 2019), with
+/// Laplace-smoothed counts.
+#[derive(Debug, Clone)]
+pub struct CodebookEma {
+    pub codebook: Vec<Vec<f64>>,
+    pub ema_count: Vec<f64>,
+    pub ema_sum: Vec<Vec<f64>>,
+    pub gamma: f64,
+    pub eps: f64,
+}
+
+impl CodebookEma {
+    pub fn new(codebook: Vec<Vec<f64>>, gamma: f64) -> Self {
+        let s = codebook.len();
+        let ema_sum = codebook.clone();
+        Self { codebook, ema_count: vec![1.0; s], ema_sum, gamma, eps: 1e-5 }
+    }
+
+    /// One EMA update from a batch of raw (unquantized) keys + assignments.
+    pub fn update(&mut self, keys: &[Vec<f64>], codes: &[usize]) {
+        let s = self.codebook.len();
+        let d = self.codebook[0].len();
+        let mut counts = vec![0.0; s];
+        let mut sums = vec![vec![0.0; d]; s];
+        for (k, &z) in keys.iter().zip(codes) {
+            counts[z] += 1.0;
+            for (acc, v) in sums[z].iter_mut().zip(k) {
+                *acc += v;
+            }
+        }
+        for z in 0..s {
+            self.ema_count[z] = self.gamma * self.ema_count[z] + (1.0 - self.gamma) * counts[z];
+            for j in 0..d {
+                self.ema_sum[z][j] =
+                    self.gamma * self.ema_sum[z][j] + (1.0 - self.gamma) * sums[z][j];
+            }
+        }
+        let total: f64 = self.ema_count.iter().sum();
+        for z in 0..s {
+            let smoothed =
+                (self.ema_count[z] + self.eps) / (total + s as f64 * self.eps) * total;
+            for j in 0..d {
+                self.codebook[z][j] = self.ema_sum[z][j] / smoothed;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn nearest_is_nearest() {
+        let cb = vec![vec![0.0, 0.0], vec![10.0, 10.0]];
+        assert_eq!(nearest_code(&[1.0, -1.0], &cb), 0);
+        assert_eq!(nearest_code(&[9.0, 11.0], &cb), 1);
+    }
+
+    #[test]
+    fn quantized_rows_are_codewords() {
+        let cb = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        let (qs, zs) = quantize_all(&[vec![0.1, 0.2], vec![0.9, 0.8]], &cb);
+        assert_eq!(zs, vec![0, 1]);
+        assert_eq!(qs[0], cb[0]);
+        assert_eq!(qs[1], cb[1]);
+    }
+
+    #[test]
+    fn ema_converges_to_cluster_means() {
+        // two well-separated clusters; EMA codebook should approach means
+        let mut rng = Rng::new(11);
+        let mut ema = CodebookEma::new(vec![vec![-1.0, 0.0], vec![1.0, 0.0]], 0.8);
+        for _ in 0..300 {
+            let mut keys = Vec::new();
+            for _ in 0..64 {
+                let c = if rng.f64() < 0.5 { -5.0 } else { 5.0 };
+                keys.push(vec![c + 0.1 * rng.normal(), 2.0 + 0.1 * rng.normal()]);
+            }
+            let codes: Vec<usize> =
+                keys.iter().map(|k| nearest_code(k, &ema.codebook)).collect();
+            ema.update(&keys, &codes);
+        }
+        let mut cents: Vec<f64> = ema.codebook.iter().map(|c| c[0]).collect();
+        cents.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((cents[0] + 5.0).abs() < 0.3, "{cents:?}");
+        assert!((cents[1] - 5.0).abs() < 0.3, "{cents:?}");
+        assert!((ema.codebook[0][1] - 2.0).abs() < 0.3);
+    }
+}

@@ -1,0 +1,264 @@
+//! Property tests over the coordinator substrates (in-repo property driver;
+//! the vendored dependency set has no proptest crate). Each property runs on
+//! many deterministic seeds; failures report the reproducing seed.
+
+use transformer_vq::data::{markov, TbpttBatcher};
+use transformer_vq::json::Json;
+use transformer_vq::metrics::LatencyHistogram;
+use transformer_vq::rng::Rng;
+use transformer_vq::schedule::LrSchedule;
+use transformer_vq::store::{read_tvq, write_tvq};
+use transformer_vq::tensor::HostTensor;
+use transformer_vq::testutil::{check_property, TempDir};
+use transformer_vq::tokenizer::{Bpe, ByteTokenizer, Tokenizer};
+use transformer_vq::vqref;
+
+fn rand_text(rng: &mut Rng, n: usize) -> Vec<u8> {
+    // mixture of repetitive and random bytes — exercises BPE merges
+    let mut out = Vec::with_capacity(n);
+    let words: Vec<&[u8]> = vec![b"the ", b"cat ", b"vq ", b"attn "];
+    while out.len() < n {
+        if rng.f64() < 0.7 {
+            out.extend_from_slice(words[rng.below(words.len() as u64) as usize]);
+        } else {
+            out.push(rng.below(256) as u8);
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[test]
+fn prop_bpe_roundtrip_identity() {
+    check_property("bpe encode-decode == id", 25, |rng| {
+        let n = 50 + rng.below(400) as usize;
+        let corpus = rand_text(rng, n);
+        let vocab = 256 + rng.below(64) as usize;
+        let bpe = Bpe::train(&corpus, vocab);
+        // roundtrip on the training corpus AND on unseen text
+        assert_eq!(bpe.decode(&bpe.encode(&corpus)), corpus);
+        let unseen = rand_text(rng, 100);
+        assert_eq!(bpe.decode(&bpe.encode(&unseen)), unseen);
+    });
+}
+
+#[test]
+fn prop_bpe_never_exceeds_input_len() {
+    check_property("bpe output never longer than input", 15, |rng| {
+        let corpus = rand_text(rng, 300);
+        let bpe = Bpe::train(&corpus, 300);
+        let enc = bpe.encode(&corpus);
+        assert!(enc.len() <= corpus.len());
+    });
+}
+
+#[test]
+fn prop_batcher_covers_epoch_exactly_once() {
+    check_property("tbptt epoch covers every stream token once", 20, |rng| {
+        let n = 200 + rng.below(2000) as usize;
+        let batch = 1 + rng.below(4) as usize;
+        let window = 4 + rng.below(16) as usize;
+        let tokens: Vec<u16> = (0..n).map(|i| (i % 997) as u16).collect();
+        let Ok(mut b) = TbpttBatcher::new(tokens.clone(), batch, window) else {
+            return; // corpus too small for this shape: construction must fail
+        };
+        let per_epoch = b.windows_per_epoch();
+        let span = n / batch;
+        let mut seen: Vec<Vec<i32>> = vec![Vec::new(); batch];
+        for _ in 0..per_epoch {
+            let w = b.next_batch();
+            let t = w.tokens.as_i32().unwrap();
+            for (row, seen_row) in seen.iter_mut().enumerate() {
+                let base = row * (window + 1);
+                seen_row.extend(&t[base..base + window]); // inputs only
+            }
+        }
+        for (row, seen_row) in seen.iter().enumerate() {
+            let want: Vec<i32> = (0..per_epoch * window)
+                .map(|i| tokens[row * span + i] as i32)
+                .collect();
+            assert_eq!(seen_row, &want, "row {row} mismatch");
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_overlap_invariant() {
+    check_property("consecutive windows overlap by one token", 20, |rng| {
+        let tokens: Vec<u16> = (0..3000).map(|i| (i % 251) as u16).collect();
+        let batch = 1 + rng.below(3) as usize;
+        let window = 2 + rng.below(32) as usize;
+        let mut b = TbpttBatcher::new(tokens, batch, window).unwrap();
+        let mut prev = b.next_batch();
+        for _ in 0..10 {
+            let cur = b.next_batch();
+            if cur.fresh[0] {
+                prev = cur;
+                continue;
+            }
+            let tp = prev.tokens.as_i32().unwrap();
+            let tc = cur.tokens.as_i32().unwrap();
+            for row in 0..batch {
+                let base = row * (window + 1);
+                assert_eq!(tp[base + window], tc[base]);
+            }
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn prop_vqref_linear_equals_quadratic() {
+    check_property("rust linear VQ attention == quadratic oracle", 12, |rng| {
+        let l = 2 + rng.below(6) as usize;
+        let r = 1 + rng.below(5) as usize;
+        let s = 2 + rng.below(8) as usize;
+        let t = r * l;
+        let dk = 4;
+        let dv = 3;
+        let scale = 1.0 / (dk as f64).sqrt();
+        let codebook: Vec<Vec<f64>> = (0..s)
+            .map(|_| (0..dk).map(|_| rng.normal() * scale).collect())
+            .collect();
+        let mut k_hat = Vec::new();
+        let mut z = Vec::new();
+        for _ in 0..t {
+            let raw: Vec<f64> = (0..dk).map(|_| rng.normal() * scale).collect();
+            let c = vqref::nearest_code(&raw, &codebook);
+            k_hat.push(codebook[c].clone());
+            z.push(c);
+        }
+        let inp = vqref::AttnInputs {
+            q: (0..t).map(|_| (0..dk).map(|_| rng.normal() * scale).collect()).collect(),
+            k_hat,
+            z,
+            v: (0..t).map(|_| (0..dv).map(|_| rng.normal()).collect()).collect(),
+            codebook,
+            bias: (0..t).map(|_| (0..2 * l).map(|_| rng.normal() * 0.2).collect()).collect(),
+            block_len: l,
+        };
+        let quad = vqref::quadratic_vq_attention(&inp);
+        let lin = vqref::linear_vq_attention(&inp);
+        for (a, b) in quad.iter().zip(&lin) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tvq_roundtrip() {
+    check_property("tvq store roundtrips arbitrary tensors", 20, |rng| {
+        let dir = TempDir::new();
+        let n_tensors = 1 + rng.below(6) as usize;
+        let mut tensors = Vec::new();
+        for i in 0..n_tensors {
+            let ndim = rng.below(4) as usize;
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5) as usize).collect();
+            let n: usize = shape.iter().product();
+            let t = if rng.f64() < 0.5 {
+                let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                HostTensor::from_f32(&shape, &vals)
+            } else {
+                let vals: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
+                HostTensor::from_i32(&shape, &vals)
+            };
+            tensors.push((format!("t/{i}"), t));
+        }
+        let p = dir.join("x.tvq");
+        write_tvq(&p, &tensors).unwrap();
+        let back = read_tvq(&p).unwrap();
+        assert_eq!(back.len(), tensors.len());
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.next_u64() % 100_000) as f64 / 8.0),
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check_property("json parse-dump == id", 60, |rng| {
+        let j = rand_json(rng, 3);
+        let j2 = Json::parse(&j.dump()).unwrap();
+        assert_eq!(j, j2);
+    });
+}
+
+#[test]
+fn prop_schedule_bounded_and_continuous() {
+    check_property("lr stays within (0, max] and changes smoothly", 20, |rng| {
+        let total = 50 + rng.below(500);
+        let s = LrSchedule::paper_scaled(0.001, total);
+        let mut prev = s.lr_at(0);
+        for step in 0..=total {
+            let lr = s.lr_at(step);
+            assert!(lr > 0.0 && lr <= s.max_lr * (1.0 + 1e-6));
+            assert!((lr - prev).abs() <= s.max_lr * 0.25, "jump at {step}");
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone() {
+    check_property("latency quantiles are monotone in q", 15, |rng| {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..200 {
+            h.record(std::time::Duration::from_micros(1 + rng.below(1_000_000)));
+        }
+        let qs = [0.1, 0.5, 0.9, 0.99];
+        let mut prev = std::time::Duration::ZERO;
+        for q in qs {
+            let v = h.quantile(q);
+            assert!(v >= prev);
+            prev = v;
+        }
+    });
+}
+
+#[test]
+fn prop_markov_corpus_split_disjoint_and_complete() {
+    check_property("90/5/5 split partitions the corpus", 6, |rng| {
+        let c = markov::generate(10_000 + rng.below(10_000) as usize, rng.next_u64());
+        let (tr, va, te) = c.split();
+        assert_eq!(tr.len() + va.len() + te.len(), c.len());
+        let rejoined: Vec<u16> = tr
+            .tokens
+            .iter()
+            .chain(&va.tokens)
+            .chain(&te.tokens)
+            .copied()
+            .collect();
+        assert_eq!(rejoined, c.tokens);
+    });
+}
+
+#[test]
+fn prop_byte_tokenizer_identity() {
+    check_property("byte tokenizer is the identity embedding", 10, |rng| {
+        let text = rand_text(rng, 128);
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&t.encode(&text)), text);
+    });
+}
