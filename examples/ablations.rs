@@ -11,9 +11,8 @@
 
 use anyhow::Result;
 use transformer_vq::bench::Table;
-use transformer_vq::manifest::Manifest;
 use transformer_vq::paperbench::ablation_tables;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 
 fn main() -> Result<()> {
     let steps: u64 = std::env::args()
@@ -21,13 +20,12 @@ fn main() -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(200);
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
+    let backend = auto_backend(transformer_vq::artifacts_dir())?;
+    eprintln!("backend: {}", backend.platform());
 
     eprintln!("== Table 1 analogue: codebook size ablation ({steps} steps each)");
     let rows = ablation_tables(
-        &runtime,
-        &manifest,
+        backend.as_ref(),
         &["ablate-S32", "ablate-S64", "ablate-S128"],
         "ablate-S64", // paper normalizes latency to the middle size
         steps,
@@ -43,8 +41,7 @@ fn main() -> Result<()> {
 
     eprintln!("\n== Table 2 analogue: compressive cache ablation");
     let rows = ablation_tables(
-        &runtime,
-        &manifest,
+        backend.as_ref(),
         &["ablate-nocache", "ablate-cache"],
         "ablate-cache",
         steps,

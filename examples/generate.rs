@@ -10,9 +10,8 @@
 use std::time::Instant;
 
 use anyhow::Result;
-use transformer_vq::manifest::Manifest;
 use transformer_vq::rng::Rng;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
 
@@ -23,9 +22,9 @@ fn main() -> Result<()> {
     let ckpt = args.get(1).map(String::as_str).unwrap_or(&default_ckpt);
     let n_tokens: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(160);
 
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
-    let mut sampler = Sampler::new(&runtime, &manifest, preset)?;
+    let backend = auto_backend(transformer_vq::artifacts_dir())?;
+    eprintln!("backend: {}", backend.platform());
+    let mut sampler = Sampler::new(backend.as_ref(), preset)?;
     let ckpt_path = std::path::Path::new(ckpt).join("state.tvq");
     if ckpt_path.exists() {
         sampler.load_weights(&ckpt_path)?;

@@ -1,46 +1,118 @@
-//! Perf-iteration tool (§Perf in EXPERIMENTS.md): benchmark every *.train
-//! artifact in a directory of perf-variant artifacts and print per-step
-//! latency + throughput. Variants are lowered by python (see EXPERIMENTS.md
-//! §Perf for the recipe); this binary is the timing half of the
-//! measure -> change one thing -> re-measure loop.
+//! Native decode perf baseline: per-token latency vs sequence position.
 //!
-//! Usage: perfbench [artifacts_dir]   (default /tmp/perfvariants)
+//! The paper's serving claim (Remark 3.8) is that VQ decode costs
+//! O(S + 2L) per token — *independent of position*. This bench drives the
+//! native backend's `<preset>.decode` executor for thousands of consecutive
+//! positions without resetting, records per-step wall time, and reports
+//! tokens/sec at exponentially spaced positions. A quadratic-cache model
+//! would slow down linearly with position; this one must stay flat
+//! (position 4096 within 1.5x of position 64 — asserted).
+//!
+//! Emits `BENCH_native_decode.json` (path overridable) so CI can track the
+//! perf trajectory across PRs.
+//!
+//! Usage: cargo run --release --example perfbench -- [preset] [max_pos] [out.json]
 
-use transformer_vq::bench::Bencher;
-use transformer_vq::manifest::Manifest;
-use transformer_vq::runtime::{Runtime, StateBundle};
+use anyhow::Result;
+use transformer_vq::json::Json;
+use transformer_vq::native::NativeBackend;
+use transformer_vq::runtime::{Backend, StateBundle};
+use transformer_vq::tensor::HostTensor;
 
-fn main() {
-    let dir = std::env::args()
-        .nth(1)
-        .unwrap_or_else(|| "/tmp/perfvariants".to_string());
-    let manifest = Manifest::load(&dir).unwrap();
-    let runtime = Runtime::cpu().unwrap();
-    let bencher = Bencher {
-        warmup_iters: 2,
-        min_iters: 5,
-        max_iters: 40,
-        budget: std::time::Duration::from_secs(4),
-    };
-    for name in manifest.artifacts.keys() {
-        let exe = runtime.load(&manifest, name).unwrap();
-        let preset = name.trim_end_matches(".train");
-        let mut bundle = StateBundle::zeros_for(&exe.spec);
-        let init = manifest.init_path(preset);
-        if init.exists() {
-            bundle.load_groups(init).unwrap();
-        }
-        let inputs = bundle.assemble(&exe.spec).unwrap();
-        let lits = exe.to_literals(&inputs).unwrap();
-        let stats = bencher.run(name, || {
-            exe.run_literals(&lits).unwrap();
-        });
-        let toks = (exe.spec.config.window_len * exe.spec.config.batch_size) as f64;
-        println!(
-            "{:<24} {:>10.3?}/step  {:>8.0} tok/s",
-            name,
-            stats.mean,
-            toks / stats.mean_secs()
-        );
+fn median_ns(window: &[f64]) -> f64 {
+    let mut w: Vec<f64> = window.to_vec();
+    w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    w[w.len() / 2]
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("quickstart");
+    let max_pos: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let out_path = args
+        .get(2)
+        .map(String::as_str)
+        .unwrap_or("BENCH_native_decode.json");
+
+    anyhow::ensure!(
+        max_pos >= 64,
+        "max_pos must be >= 64 (first reported position), got {max_pos}"
+    );
+    let backend = NativeBackend::new();
+    let exe = backend.load(&format!("{preset}.decode"))?;
+    let cfg = exe.spec().config.clone();
+    let batch = cfg.batch_size;
+    eprintln!(
+        "perfbench: {preset}.decode  (B={batch}, S={}, L={}, positions 1..={max_pos})",
+        cfg.n_code, cfg.block_len
+    );
+
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(backend.init_state(preset)?);
+
+    // drive one long sequence per slot, timing every step
+    let mut step_ns: Vec<f64> = Vec::with_capacity(max_pos);
+    for pos in 0..max_pos {
+        let tokens: Vec<i32> = (0..batch).map(|b| ((pos + b) % 251) as i32).collect();
+        bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &tokens)]);
+        let inputs = bundle.assemble(exe.spec())?;
+        let t0 = std::time::Instant::now();
+        let outputs = exe.run(&inputs)?;
+        step_ns.push(t0.elapsed().as_nanos() as f64);
+        bundle.absorb(exe.spec(), outputs)?;
     }
+
+    // report at exponentially spaced positions: median over the preceding
+    // 32 steps (median is robust to scheduler noise)
+    let window = 32usize;
+    let positions: Vec<usize> = [64usize, 128, 256, 512, 1024, 2048, 4096, 8192]
+        .into_iter()
+        .filter(|&p| p <= max_pos && p >= window)
+        .collect();
+    let mut ns_per_token = Vec::new();
+    let mut tokens_per_sec = Vec::new();
+    println!("{:>9} {:>14} {:>14}", "position", "ns/token", "tok/s");
+    for &p in &positions {
+        let med = median_ns(&step_ns[p - window..p]) / batch as f64;
+        ns_per_token.push(med);
+        let tps = 1e9 / med;
+        tokens_per_sec.push(tps);
+        println!("{p:>9} {med:>14.0} {tps:>14.0}");
+    }
+
+    let first = *ns_per_token.first().expect("at least one position");
+    let last = *ns_per_token.last().expect("at least one position");
+    let flat_ratio = last / first;
+    println!(
+        "flatness: pos {} is {flat_ratio:.3}x pos {} (O(S+2L) decode => ~1.0)",
+        positions.last().unwrap(),
+        positions.first().unwrap()
+    );
+
+    let jarr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
+    let j = Json::obj(vec![
+        ("bench", Json::str("native_decode")),
+        ("preset", Json::str(preset)),
+        ("batch", Json::num(batch as f64)),
+        ("n_code", Json::num(cfg.n_code as f64)),
+        ("block_len", Json::num(cfg.block_len as f64)),
+        (
+            "positions",
+            Json::Arr(positions.iter().map(|&p| Json::num(p as f64)).collect()),
+        ),
+        ("ns_per_token", jarr(&ns_per_token)),
+        ("tokens_per_sec", jarr(&tokens_per_sec)),
+        ("flat_ratio_last_vs_first", Json::num(flat_ratio)),
+    ]);
+    std::fs::write(out_path, j.dump())?;
+    println!("wrote {out_path}");
+
+    assert!(
+        flat_ratio < 1.5,
+        "decode latency is not flat: position {} is {flat_ratio:.2}x position {}",
+        positions.last().unwrap(),
+        positions.first().unwrap()
+    );
+    println!("perfbench OK: per-token decode latency is flat in sequence position");
+    Ok(())
 }

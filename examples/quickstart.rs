@@ -1,30 +1,30 @@
-//! Quickstart: the smallest end-to-end loop through all three layers.
+//! Quickstart: the smallest end-to-end loop through the whole stack.
 //!
-//!   1. load the `quickstart.train` artifact (JAX+Pallas, AOT-lowered HLO)
+//!   1. pick a backend (native pure-rust by default; PJRT artifacts when
+//!      built with `--features pjrt` and `make artifacts` has run)
 //!   2. train 30 TBPTT windows on a synthetic wiki-like byte corpus
 //!   3. evaluate, then generate a few bytes with the linear-time sampler
 //!
-//! Run:  make artifacts && cargo run --release --example quickstart
+//! Run:  cargo run --release --example quickstart
+//! (no artifacts, python, or HLO required — the native backend ships in-crate)
 
 use anyhow::Result;
 use transformer_vq::config::TrainConfig;
-use transformer_vq::manifest::Manifest;
 use transformer_vq::rng::Rng;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
 use transformer_vq::train::{run_training, save_checkpoint};
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
-    println!("platform: {}", runtime.platform());
+    let backend = auto_backend(transformer_vq::artifacts_dir())?;
+    println!("platform: {}", backend.platform());
 
     // --- train -----------------------------------------------------------
     let mut cfg = TrainConfig::quickstart();
     cfg.steps = 30;
     cfg.run_dir = std::path::PathBuf::from("runs/quickstart-example");
-    let (trainer, summary) = run_training(&runtime, &manifest, &cfg)?;
+    let (trainer, summary) = run_training(backend.as_ref(), &cfg)?;
     println!(
         "trained {} steps: loss {:.3} -> {:.3} ({:.3} bpb)",
         summary.steps,
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     save_checkpoint(&trainer, &ckpt)?;
 
     // --- sample ----------------------------------------------------------
-    let mut sampler = Sampler::new(&runtime, &manifest, "quickstart")?;
+    let mut sampler = Sampler::new(backend.as_ref(), "quickstart")?;
     sampler.load_weights(ckpt.join("state.tvq"))?;
     let tok = ByteTokenizer;
     let prompt: Vec<i32> = tok.encode(b"the ").into_iter().map(i32::from).collect();

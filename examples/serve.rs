@@ -10,9 +10,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 use transformer_vq::coordinator::{handle_conn, Client, Engine, WireRequest};
-use transformer_vq::manifest::Manifest;
 use transformer_vq::metrics::LatencyHistogram;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::Sampler;
 
 fn main() -> Result<()> {
@@ -20,13 +19,14 @@ fn main() -> Result<()> {
     let preset = args.first().cloned().unwrap_or_else(|| "quickstart".into());
     let n_requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
 
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
+    let artifacts = transformer_vq::artifacts_dir();
     let ckpt = std::path::PathBuf::from(format!("runs/train_lm-{preset}/ckpt-final/state.tvq"));
     let preset_c = preset.clone();
     let (handle, _join) = Engine::spawn(
         move || {
-            let runtime = Runtime::cpu()?;
-            let mut s = Sampler::new(&runtime, &manifest, &preset_c)?;
+            // backends may not be Send; build on the engine thread
+            let backend = auto_backend(&artifacts)?;
+            let mut s = Sampler::new(backend.as_ref(), &preset_c)?;
             if ckpt.exists() {
                 s.load_weights(&ckpt)?;
             }

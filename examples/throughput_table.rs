@@ -10,25 +10,26 @@
 
 use anyhow::Result;
 use transformer_vq::bench::Bencher;
-use transformer_vq::manifest::Manifest;
 use transformer_vq::paperbench::{measure_throughput_grid, print_throughput_tables};
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let max_t: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4096);
     let budget: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
 
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
+    let backend = auto_backend(transformer_vq::artifacts_dir())?;
     let bencher = Bencher {
         warmup_iters: 1,
         min_iters: 3,
         max_iters: 30,
         budget: std::time::Duration::from_secs(budget),
     };
-    eprintln!("measuring throughput grid (T <= {max_t}) ...");
-    let rows = measure_throughput_grid(&runtime, &manifest, &bencher, max_t)?;
+    eprintln!(
+        "measuring throughput grid (T <= {max_t}, {} backend) ...",
+        backend.platform()
+    );
+    let rows = measure_throughput_grid(backend.as_ref(), &bencher, max_t)?;
     print_throughput_tables(&rows);
 
     // headline check (abstract): VQ speedup at the longest T, SHGA

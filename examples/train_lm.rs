@@ -14,9 +14,8 @@
 use anyhow::Result;
 use transformer_vq::config::TrainConfig;
 use transformer_vq::data::{build_corpus, zipf, TbpttBatcher};
-use transformer_vq::manifest::Manifest;
 use transformer_vq::metrics::nats_to_bpb;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::train::run_training;
 
 fn main() -> Result<()> {
@@ -24,15 +23,16 @@ fn main() -> Result<()> {
     let preset = args.first().map(String::as_str).unwrap_or("enwik8-tiny");
     let steps: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
 
-    let manifest = Manifest::load(transformer_vq::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
+    let backend = auto_backend(transformer_vq::artifacts_dir())?;
     let mut cfg = TrainConfig::preset(preset, steps)?;
     cfg.run_dir = std::path::PathBuf::from(format!("runs/train_lm-{preset}"));
     eprintln!(
-        "training {preset} for {steps} steps on {} ({} tokens)",
-        cfg.corpus, cfg.corpus_tokens
+        "training {preset} for {steps} steps on {} ({} tokens, {} backend)",
+        cfg.corpus,
+        cfg.corpus_tokens,
+        backend.platform()
     );
-    let (trainer, summary) = run_training(&runtime, &manifest, &cfg)?;
+    let (trainer, summary) = run_training(backend.as_ref(), &cfg)?;
 
     // --- test-split quality metric (the paper's Tables 3/4/5 numbers) -----
     let corpus = build_corpus(&cfg.corpus, cfg.corpus_tokens, cfg.seed)?;

@@ -7,8 +7,7 @@ use std::time::Instant;
 
 use transformer_vq::bench::{Bencher, Table};
 use transformer_vq::coordinator::{Engine, GenRequest, WireRequest, WireResponse};
-use transformer_vq::manifest::Manifest;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::{SampleParams, Sampler};
 
 fn main() {
@@ -47,18 +46,14 @@ fn main() {
                    format!("{:.0}", 1.0 / stats.mean_secs())]);
     table.print();
 
-    // --- engine benchmarks (need artifacts) --------------------------------
+    // --- engine benchmarks (native backend by default) ---------------------
     let dir = transformer_vq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP engine benches: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(dir).unwrap();
 
     // raw decode step rate (full batch)
     {
-        let runtime = Runtime::cpu().unwrap();
-        let mut sampler = Sampler::new(&runtime, &manifest, "quickstart").unwrap();
+        let backend = auto_backend(&dir).unwrap();
+        eprintln!("backend: {}", backend.platform());
+        let mut sampler = Sampler::new(backend.as_ref(), "quickstart").unwrap();
         let b = sampler.batch_size();
         sampler.reset_all();
         let stats = Bencher { warmup_iters: 3, min_iters: 10, max_iters: 200,
@@ -75,11 +70,11 @@ fn main() {
 
     // continuous batching: aggregate throughput + utilization, mixed lengths
     {
-        let m2 = manifest.clone();
+        let dir2 = dir.clone();
         let (handle, join) = Engine::spawn(
             move || {
-                let runtime = Runtime::cpu()?;
-                Sampler::new(&runtime, &m2, "quickstart")
+                let backend = auto_backend(&dir2)?;
+                Sampler::new(backend.as_ref(), "quickstart")
             },
             7,
         )

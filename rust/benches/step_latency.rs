@@ -1,23 +1,15 @@
-//! `cargo bench --bench step_latency` — per-step wall time of the compiled
-//! train / eval / decode artifacts for the training presets (the latency
-//! column of paper Tables 1-2 comes from the train-step latency here), plus
-//! the L3-side overhead split (literal conversion vs execution), which the
-//! §Perf pass in EXPERIMENTS.md tracks.
-
-use std::time::Instant;
+//! `cargo bench --bench step_latency` — per-step wall time of the train /
+//! eval / decode executors for the training presets (the latency column of
+//! paper Tables 1-2 comes from the train-step latency here). Runs against
+//! whatever backend is available: native always; PJRT artifacts when built
+//! with `--features pjrt` and `make artifacts` has run.
 
 use transformer_vq::bench::{Bencher, Table};
-use transformer_vq::manifest::Manifest;
-use transformer_vq::runtime::{Runtime, StateBundle};
+use transformer_vq::runtime::{auto_backend, StateBundle};
 
 fn main() {
-    let dir = transformer_vq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP step_latency bench: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(dir).unwrap();
-    let runtime = Runtime::cpu().unwrap();
+    let backend = auto_backend(transformer_vq::artifacts_dir()).unwrap();
+    eprintln!("backend: {}", backend.platform());
     let bencher = Bencher {
         warmup_iters: 2,
         min_iters: 5,
@@ -25,50 +17,34 @@ fn main() {
         budget: std::time::Duration::from_secs(3),
     };
 
-    let mut table = Table::new(&[
-        "artifact", "mean/step", "median", "tok/s", "convert-in %",
-    ]);
+    let mut table = Table::new(&["artifact", "mean/step", "median", "tok/s"]);
     for preset in ["quickstart", "enwik8-tiny", "ablate-S32", "ablate-S128"] {
         for entry in ["train", "eval", "decode"] {
             let name = format!("{preset}.{entry}");
-            if manifest.get(&name).is_err() {
+            if !backend.has_artifact(&name) {
                 continue;
             }
-            let exe = runtime.load(&manifest, &name).unwrap();
-            let mut bundle = StateBundle::zeros_for(&exe.spec);
-            let init = manifest.init_path(preset);
-            if init.exists() {
-                bundle.load_groups(init).unwrap();
+            let exe = backend.load(&name).unwrap();
+            let mut bundle = StateBundle::zeros_for(exe.spec());
+            if let Ok(init) = backend.init_state(preset) {
+                bundle.set_named(init);
             }
-            let inputs = bundle.assemble(&exe.spec).unwrap();
-
-            // measure input literal conversion separately (L3 overhead)
-            let t0 = Instant::now();
-            let mut lits = exe.to_literals(&inputs).unwrap();
-            let convert = t0.elapsed();
+            let inputs = bundle.assemble(exe.spec()).unwrap();
             let stats = bencher.run(&name, || {
-                lits = exe.to_literals(&inputs).unwrap();
-                exe.run_literals(&lits).unwrap();
+                exe.run(&inputs).unwrap();
             });
-            let exec_only = bencher.run(&name, || {
-                exe.run_literals(&lits).unwrap();
-            });
-            let tokens = match entry {
-                "decode" => exe.spec.config.batch_size,
-                _ => exe.spec.config.batch_size * exe.spec.config.window_len,
-            } as f64;
+            let cfg = &exe.spec().config;
+            let tokens_per_step = if entry == "decode" {
+                cfg.batch_size as f64
+            } else {
+                (cfg.window_len * cfg.batch_size) as f64
+            };
             table.row(vec![
-                name,
+                name.clone(),
                 format!("{:.3?}", stats.mean),
                 format!("{:.3?}", stats.median),
-                format!("{:.0}", tokens / stats.mean_secs()),
-                format!(
-                    "{:.1}%",
-                    100.0 * (stats.mean_secs() - exec_only.mean_secs()).max(0.0)
-                        / stats.mean_secs()
-                ),
+                format!("{:.0}", tokens_per_step / stats.mean_secs()),
             ]);
-            let _ = convert;
         }
     }
     table.print();

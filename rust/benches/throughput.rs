@@ -6,28 +6,22 @@
 //! the full grid).
 
 use transformer_vq::bench::Bencher;
-use transformer_vq::manifest::Manifest;
 use transformer_vq::paperbench::{measure_throughput_grid, print_throughput_tables};
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 
 fn main() {
-    let dir = transformer_vq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP throughput bench: run `make artifacts` first");
-        return;
-    }
     let max_t: usize = std::env::var("TVQ_BENCH_MAX_T")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1024);
-    let manifest = Manifest::load(dir).unwrap();
-    let runtime = Runtime::cpu().unwrap();
+    let backend = auto_backend(transformer_vq::artifacts_dir()).unwrap();
+    eprintln!("backend: {}", backend.platform());
     let bencher = Bencher {
         warmup_iters: 1,
         min_iters: 3,
         max_iters: 20,
         budget: std::time::Duration::from_secs(2),
     };
-    let rows = measure_throughput_grid(&runtime, &manifest, &bencher, max_t).unwrap();
+    let rows = measure_throughput_grid(backend.as_ref(), &bencher, max_t).unwrap();
     print_throughput_tables(&rows);
 }

@@ -88,10 +88,10 @@ impl EngineHandle {
 pub struct Engine;
 
 impl Engine {
-    /// Spawn the engine thread. The `Sampler` (PJRT client) is **not Send**
-    /// (Rc-based refcounts inside the xla crate), so the engine constructs
-    /// it on its own thread via `factory`; construction errors are
-    /// propagated back to the caller before this returns.
+    /// Spawn the engine thread. A `Sampler` is **not Send** in general (the
+    /// PJRT backend holds Rc-based refcounts inside the xla crate), so the
+    /// engine constructs it on its own thread via `factory`; construction
+    /// errors are propagated back to the caller before this returns.
     pub fn spawn<F>(
         factory: F,
         seed: u64,

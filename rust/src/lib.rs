@@ -1,15 +1,24 @@
 //! Transformer-VQ: linear-time transformers via vector quantization
-//! (Lingle, ICLR 2024) — rust coordinator over AOT-compiled XLA artifacts.
+//! (Lingle, ICLR 2024) — a rust training/serving system over pluggable
+//! execution backends.
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Layered architecture (see DESIGN.md):
 //! * L1 — Pallas VQ-attention kernel (build-time python, lowered into L2).
-//! * L2 — JAX Transformer-VQ model, AOT-lowered to `artifacts/*.hlo.txt`.
-//! * L3 — this crate: training orchestration, data pipelines, tokenizers,
-//!   linear-time sampling, a batching inference server, and the benchmark
-//!   harness that regenerates every table in the paper.
+//! * L2 — model execution behind the [`runtime::Backend`]/[`runtime::Executor`]
+//!   traits, two implementations:
+//!   - [`native`]: a pure-rust, multi-layer, multi-head f32 Transformer-VQ
+//!     engine (Theorem 3.7 block recurrence + compressive cache). Always
+//!     available; a fresh checkout builds, trains, serves, and benchmarks
+//!     with no python, artifacts, or FFI.
+//!   - `runtime::PjrtBackend` (cargo feature `pjrt`): the JAX Transformer-VQ
+//!     model AOT-lowered to `artifacts/*.hlo.txt` and executed via the PJRT
+//!     C API. Python never runs at request time.
+//! * L3 — this crate's coordinator: training orchestration, data pipelines,
+//!   tokenizers, linear-time sampling, a continuous-batching inference
+//!   server, and the benchmark harness that regenerates the paper's tables.
 //!
-//! Python never runs at request time: [`runtime`] loads the HLO artifacts
-//! once and executes them via the PJRT C API.
+//! Backend selection is automatic ([`runtime::auto_backend`]): PJRT when
+//! compiled artifacts exist and the feature is on, native otherwise.
 
 pub mod bench;
 pub mod config;
@@ -18,6 +27,7 @@ pub mod data;
 pub mod json;
 pub mod manifest;
 pub mod metrics;
+pub mod native;
 pub mod paperbench;
 pub mod rng;
 pub mod runtime;

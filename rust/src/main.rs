@@ -4,7 +4,7 @@
 //!   train      train a preset on a synthetic corpus (TBPTT, §3.4.2)
 //!   generate   sample from a trained checkpoint via linear-time decoding
 //!   serve      continuous-batching inference server (JSON-lines TCP)
-//!   inspect    list artifacts in the manifest
+//!   inspect    list artifacts offered by the active backend
 //!
 //! Benchmarks reproducing the paper's tables live in examples/ and
 //! rust/benches/ (see DESIGN.md §4 for the exhibit -> target map).
@@ -15,9 +15,8 @@ use anyhow::{bail, Result};
 
 use transformer_vq::config::TrainConfig;
 use transformer_vq::coordinator::{serve, Engine};
-use transformer_vq::manifest::Manifest;
 use transformer_vq::rng::Rng;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::schedule::LrSchedule;
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
@@ -98,12 +97,14 @@ fn main() -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     let dir = artifacts.unwrap_or_else(transformer_vq::artifacts_dir);
-    let manifest = Manifest::load(&dir)?;
 
     match cmd.as_str() {
         "inspect" => {
+            let backend = auto_backend(&dir)?;
+            println!("backend: {}", backend.platform());
             println!("{:<34} {:>8} {:>9} {:>7}", "artifact", "entry", "inputs", "outputs");
-            for (name, spec) in &manifest.artifacts {
+            for name in backend.artifact_names() {
+                let spec = backend.spec(&name)?;
                 println!(
                     "{:<34} {:>8} {:>9} {:>7}",
                     name,
@@ -116,7 +117,7 @@ fn main() -> Result<()> {
         "train" => {
             let preset = args.str("preset", "quickstart");
             let steps: u64 = args.num("steps", 100)?;
-            let runtime = Runtime::cpu()?;
+            let backend = auto_backend(&dir)?;
             let mut cfg = TrainConfig::preset(&preset, steps)?;
             cfg.seed = args.num("seed", 0u64)?;
             if let Some(lr) = args.opt("max-lr") {
@@ -125,7 +126,7 @@ fn main() -> Result<()> {
             if let Some(rd) = args.opt("run-dir") {
                 cfg.run_dir = rd.into();
             }
-            let (_, summary) = train::run_training(&runtime, &manifest, &cfg)?;
+            let (_, summary) = train::run_training(backend.as_ref(), &cfg)?;
             println!(
                 "done: {} steps, final loss {:.4} ({:.4} bpb), best val bpb {:?}",
                 summary.steps, summary.final_loss, summary.final_bpb, summary.best_val_bpb
@@ -133,8 +134,8 @@ fn main() -> Result<()> {
         }
         "generate" => {
             let preset = args.str("preset", "quickstart");
-            let runtime = Runtime::cpu()?;
-            let mut sampler = Sampler::new(&runtime, &manifest, &preset)?;
+            let backend = auto_backend(&dir)?;
+            let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
             if let Some(ck) = args.opt("checkpoint") {
                 sampler.load_weights(std::path::Path::new(&ck).join("state.tvq"))?;
             }
@@ -163,12 +164,13 @@ fn main() -> Result<()> {
             let preset = args.str("preset", "quickstart");
             let addr = args.str("addr", "127.0.0.1:7433");
             let ckpt = args.opt("checkpoint");
-            let manifest_c = manifest.clone();
-            // the PJRT client is not Send: the engine builds it on its thread
+            let dir_c = dir.clone();
+            // backends may not be Send (the PJRT client is Rc-based), so
+            // the engine constructs its backend on its own thread
             let (handle, _join) = Engine::spawn(
                 move || {
-                    let runtime = Runtime::cpu()?;
-                    let mut sampler = Sampler::new(&runtime, &manifest_c, &preset)?;
+                    let backend = auto_backend(&dir_c)?;
+                    let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
                     if let Some(ck) = ckpt {
                         sampler
                             .load_weights(std::path::Path::new(&ck).join("state.tvq"))?;

@@ -1,0 +1,382 @@
+//! Native model layout: the flattened positional leaf contract.
+//!
+//! Mirrors what `python/compile/aot.py` bakes into the artifact manifest for
+//! the PJRT path, but generated from a [`ModelConfig`] instead of read from
+//! disk — group names ("params"/"cb"/"opt"/"state"/"carry"/"token"/…),
+//! leaf order, shapes, and dtypes. Everything downstream (StateBundle
+//! assemble/absorb, `Sampler::reset_slot`, checkpoints) keys off this spec,
+//! so the native backend slots into the exact same serving path as the
+//! compiled artifacts.
+
+use crate::manifest::{ArtifactSpec, LeafSpec, ModelConfig};
+use crate::rng::Rng;
+use crate::tensor::{DType, HostTensor};
+
+/// Per-layer parameter leaves, in spec order.
+pub const LAYER_PARAM_NAMES: &[&str] = &[
+    "attn_norm", "wq", "wk", "wv", "wo", "bias", "ffn_norm", "wg", "w1", "w2",
+];
+
+/// Global parameter leaves, in spec order (after all layers).
+pub const GLOBAL_PARAM_NAMES: &[&str] = &["embed", "out_norm", "wout", "bout"];
+
+/// Per-layer decode/carry state leaves, in spec order (after `['pos']`).
+pub const LAYER_STATE_NAMES: &[&str] = &["win_k", "win_v", "win_z", "cache_u", "cache_l"];
+
+/// Leaf/spec factory for one model configuration.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub cfg: ModelConfig,
+}
+
+impl Layout {
+    pub fn new(cfg: ModelConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Gated-FFN hidden width.
+    pub fn d_ff(&self) -> usize {
+        2 * self.cfg.d_model
+    }
+
+    fn layer_param_shape(&self, name: &str) -> Vec<usize> {
+        let c = &self.cfg;
+        match name {
+            "attn_norm" | "ffn_norm" => vec![c.d_model],
+            "wq" | "wk" => vec![c.d_model, c.n_heads * c.d_k],
+            "wv" => vec![c.d_model, c.n_heads * c.d_v],
+            "wo" => vec![c.n_heads * c.d_v, c.d_model],
+            "bias" => vec![c.n_heads, 2 * c.block_len],
+            "wg" | "w1" => vec![c.d_model, self.d_ff()],
+            "w2" => vec![self.d_ff(), c.d_model],
+            other => unreachable!("unknown layer param {other}"),
+        }
+    }
+
+    fn global_param_shape(&self, name: &str) -> Vec<usize> {
+        let c = &self.cfg;
+        match name {
+            "embed" => vec![c.vocab_size, c.d_model],
+            "out_norm" => vec![c.d_model],
+            "wout" => vec![c.d_model, c.vocab_size],
+            "bout" => vec![c.vocab_size],
+            other => unreachable!("unknown global param {other}"),
+        }
+    }
+
+    fn layer_state_shape(&self, name: &str) -> (Vec<usize>, DType) {
+        let c = &self.cfg;
+        let b = c.batch_size;
+        let w = 2 * c.block_len;
+        match name {
+            "win_k" => (vec![b, w, c.n_heads, c.d_k], DType::F32),
+            "win_v" => (vec![b, w, c.n_heads, c.d_v], DType::F32),
+            "win_z" => (vec![b, w, c.n_heads], DType::I32),
+            "cache_u" => (vec![b, c.n_heads, c.n_code, c.d_v], DType::F32),
+            "cache_l" => (vec![b, c.n_heads, c.n_code], DType::F32),
+            other => unreachable!("unknown state leaf {other}"),
+        }
+    }
+
+    fn leaf(group: &str, path: String, shape: Vec<usize>, dtype: DType) -> LeafSpec {
+        LeafSpec { group: group.to_string(), path, shape, dtype }
+    }
+
+    /// Group "params": per-layer weights then global weights.
+    pub fn param_leaves(&self) -> Vec<LeafSpec> {
+        let mut out = Vec::new();
+        for l in 0..self.cfg.n_layers {
+            for name in LAYER_PARAM_NAMES {
+                out.push(Self::leaf(
+                    "params",
+                    format!("['layers'][{l}]['{name}']"),
+                    self.layer_param_shape(name),
+                    DType::F32,
+                ));
+            }
+        }
+        for name in GLOBAL_PARAM_NAMES {
+            out.push(Self::leaf(
+                "params",
+                format!("['{name}']"),
+                self.global_param_shape(name),
+                DType::F32,
+            ));
+        }
+        out
+    }
+
+    /// Group "cb": one codebook per layer, [H, S, d_k].
+    pub fn cb_leaves(&self) -> Vec<LeafSpec> {
+        let c = &self.cfg;
+        (0..c.n_layers)
+            .map(|l| {
+                Self::leaf(
+                    "cb",
+                    format!("['layers'][{l}]"),
+                    vec![c.n_heads, c.n_code, c.d_k],
+                    DType::F32,
+                )
+            })
+            .collect()
+    }
+
+    /// Group "opt": EMA codebook statistics (§3.4.1), per layer.
+    pub fn opt_leaves(&self) -> Vec<LeafSpec> {
+        let c = &self.cfg;
+        let mut out = Vec::new();
+        for l in 0..c.n_layers {
+            out.push(Self::leaf(
+                "opt",
+                format!("['layers'][{l}]['ema_count']"),
+                vec![c.n_heads, c.n_code],
+                DType::F32,
+            ));
+            out.push(Self::leaf(
+                "opt",
+                format!("['layers'][{l}]['ema_sum']"),
+                vec![c.n_heads, c.n_code, c.d_k],
+                DType::F32,
+            ));
+        }
+        out
+    }
+
+    /// Decode/recurrent state leaves under `group` ("state" or "carry").
+    /// Every leaf is `[B, ...]` so `Sampler::reset_slot` can zero one batch
+    /// row as a contiguous byte range; all-zeros means "fresh sequence".
+    pub fn state_leaves(&self, group: &str) -> Vec<LeafSpec> {
+        let mut out = vec![Self::leaf(
+            group,
+            "['pos']".to_string(),
+            vec![self.cfg.batch_size],
+            DType::I32,
+        )];
+        for l in 0..self.cfg.n_layers {
+            for name in LAYER_STATE_NAMES {
+                let (shape, dtype) = self.layer_state_shape(name);
+                out.push(Self::leaf(group, format!("['layers'][{l}]['{name}']"), shape, dtype));
+            }
+        }
+        out
+    }
+
+    /// `<preset>.decode` spec: (params, cb, state, token) -> (state, logits).
+    pub fn decode_spec(&self, name: &str) -> ArtifactSpec {
+        let c = &self.cfg;
+        let mut inputs = self.param_leaves();
+        inputs.extend(self.cb_leaves());
+        inputs.extend(self.state_leaves("state"));
+        inputs.push(Self::leaf("token", String::new(), vec![c.batch_size], DType::I32));
+        let mut outputs = self.state_leaves("state");
+        outputs.push(Self::leaf(
+            "logits",
+            String::new(),
+            vec![c.batch_size, c.vocab_size],
+            DType::F32,
+        ));
+        ArtifactSpec {
+            entry: "decode".into(),
+            hlo: format!("native://{name}"),
+            config: c.clone(),
+            inputs,
+            outputs,
+        }
+    }
+
+    /// `<preset>.train` spec:
+    /// (params, cb, opt, carry, tokens, lr, seed) ->
+    /// (params, cb, opt, carry, metrics[6]).
+    pub fn train_spec(&self, name: &str) -> ArtifactSpec {
+        let c = &self.cfg;
+        let mut inputs = self.param_leaves();
+        inputs.extend(self.cb_leaves());
+        inputs.extend(self.opt_leaves());
+        inputs.extend(self.state_leaves("carry"));
+        inputs.push(Self::leaf(
+            "tokens",
+            String::new(),
+            vec![c.batch_size, c.window_len + 1],
+            DType::I32,
+        ));
+        inputs.push(Self::leaf("lr", String::new(), vec![], DType::F32));
+        inputs.push(Self::leaf("seed", String::new(), vec![], DType::I32));
+        let mut outputs = self.param_leaves();
+        outputs.extend(self.cb_leaves());
+        outputs.extend(self.opt_leaves());
+        outputs.extend(self.state_leaves("carry"));
+        outputs.push(Self::leaf("metrics", String::new(), vec![6], DType::F32));
+        ArtifactSpec {
+            entry: "train".into(),
+            hlo: format!("native://{name}"),
+            config: c.clone(),
+            inputs,
+            outputs,
+        }
+    }
+
+    /// `<preset>.eval` / `tput-*` bench spec:
+    /// (params, cb, carry, tokens) -> (carry, metrics[total_ce, n_tokens]).
+    pub fn eval_spec(&self, name: &str, entry: &str) -> ArtifactSpec {
+        let c = &self.cfg;
+        let mut inputs = self.param_leaves();
+        inputs.extend(self.cb_leaves());
+        inputs.extend(self.state_leaves("carry"));
+        inputs.push(Self::leaf(
+            "tokens",
+            String::new(),
+            vec![c.batch_size, c.window_len + 1],
+            DType::I32,
+        ));
+        let mut outputs = self.state_leaves("carry");
+        outputs.push(Self::leaf("metrics", String::new(), vec![2], DType::F32));
+        ArtifactSpec {
+            entry: entry.into(),
+            hlo: format!("native://{name}"),
+            config: c.clone(),
+            inputs,
+            outputs,
+        }
+    }
+
+    /// Seeded initial state: params + codebooks + EMA stats, as named
+    /// tensors (`<group><path>`) in leaf order — the same contract as the
+    /// PJRT path's `<preset>.init.tvq`.
+    ///
+    /// The readout starts near zero (small-gaussian `wout`, zero `bout`) so
+    /// the initial loss sits just above `ln(V)` and native training has a
+    /// clean convex signal, while untrained logits still depend on the
+    /// decode state (needed by slot-isolation tests and serving smoke
+    /// tests); norms start at one; projections use 1/sqrt(fan_in) gaussians.
+    pub fn init_state(&self, seed: u64) -> Vec<(String, HostTensor)> {
+        let mut rng = Rng::new(seed ^ 0x7F4A_7C15);
+        let mut out = Vec::new();
+        let dff = self.d_ff();
+        let c = self.cfg.clone();
+        for leaf in self.param_leaves() {
+            let n = leaf.element_count();
+            let scale: f64 = match leaf_kind(&leaf.path) {
+                "attn_norm" | "ffn_norm" | "out_norm" => -1.0, // ones
+                "wq" | "wk" | "wv" | "wg" | "w1" => 1.0 / (c.d_model as f64).sqrt(),
+                "w2" => 1.0 / (dff as f64).sqrt(),
+                "wo" => 1.0 / ((c.n_heads * c.d_v) as f64).sqrt(),
+                "bias" => 0.02,
+                "embed" => 0.1,
+                "wout" => 0.05,
+                "bout" => 0.0, // zeros
+                other => unreachable!("unknown param leaf {other}"),
+            };
+            let vals: Vec<f32> = if scale < 0.0 {
+                vec![1.0; n]
+            } else if scale == 0.0 {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+            };
+            out.push((
+                format!("params{}", leaf.path),
+                HostTensor::from_f32(&leaf.shape, &vals),
+            ));
+        }
+        let mut cb_tensors = Vec::new();
+        for leaf in self.cb_leaves() {
+            let n = leaf.element_count();
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let t = HostTensor::from_f32(&leaf.shape, &vals);
+            cb_tensors.push(t.clone());
+            out.push((format!("cb{}", leaf.path), t));
+        }
+        // EMA stats start as count=1, sum=codebook (vqref::CodebookEma
+        // convention) so the first update is a smooth blend, not a jump.
+        for (l, cb_t) in cb_tensors.iter().enumerate() {
+            out.push((
+                format!("opt['layers'][{l}]['ema_count']"),
+                HostTensor::from_f32(
+                    &[c.n_heads, c.n_code],
+                    &vec![1.0; c.n_heads * c.n_code],
+                ),
+            ));
+            out.push((format!("opt['layers'][{l}]['ema_sum']"), cb_t.clone()));
+        }
+        out
+    }
+}
+
+/// Last `['...']` component of a leaf path ("['layers'][0]['wq']" -> "wq").
+fn leaf_kind(path: &str) -> &str {
+    let start = path.rfind("['").map(|i| i + 2).unwrap_or(0);
+    let end = path.rfind("']").unwrap_or(path.len());
+    &path[start..end]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::preset_config;
+
+    #[test]
+    fn leaf_kind_extracts_last_component() {
+        assert_eq!(leaf_kind("['layers'][3]['wq']"), "wq");
+        assert_eq!(leaf_kind("['embed']"), "embed");
+    }
+
+    #[test]
+    fn specs_are_internally_consistent() {
+        let layout = Layout::new(preset_config("quickstart").unwrap());
+        let d = layout.decode_spec("quickstart.decode");
+        assert_eq!(d.entry, "decode");
+        // groups appear in contiguous runs, in declaration order
+        assert_eq!(d.input_group_names(), vec!["params", "cb", "state", "token"]);
+        let t = layout.train_spec("quickstart.train");
+        assert_eq!(
+            t.input_group_names(),
+            vec!["params", "cb", "opt", "carry", "tokens", "lr", "seed"]
+        );
+        // decode and train share the params/cb layout (checkpoints move
+        // between them via Sampler::load_weights)
+        let dp = d.input_group("params");
+        let tp = t.input_group("params");
+        assert_eq!(dp.len(), tp.len());
+        for ((_, a), (_, b)) in dp.iter().zip(&tp) {
+            assert_eq!(a.path, b.path);
+            assert_eq!(a.shape, b.shape);
+        }
+        // every state leaf is batched ([B, ...]) for reset_slot
+        for (_, leaf) in d.input_group("state") {
+            assert_eq!(leaf.shape.first(), Some(&layout.cfg.batch_size));
+        }
+    }
+
+    #[test]
+    fn init_state_matches_leaf_specs() {
+        let layout = Layout::new(preset_config("quickstart").unwrap());
+        let init = layout.init_state(0);
+        let mut by_name: std::collections::BTreeMap<&str, &HostTensor> =
+            std::collections::BTreeMap::new();
+        for (n, t) in &init {
+            by_name.insert(n, t);
+        }
+        for leaf in layout.param_leaves() {
+            let t = by_name[format!("params{}", leaf.path).as_str()];
+            assert_eq!(t.shape, leaf.shape, "{}", leaf.path);
+        }
+        for leaf in layout.cb_leaves() {
+            let t = by_name[format!("cb{}", leaf.path).as_str()];
+            assert_eq!(t.shape, leaf.shape);
+        }
+        for leaf in layout.opt_leaves() {
+            let t = by_name[format!("opt{}", leaf.path).as_str()];
+            assert_eq!(t.shape, leaf.shape, "{}", leaf.path);
+        }
+        // readout bias starts at zero => initial CE sits near ln(V)
+        let bout = by_name["params['bout']"];
+        assert!(bout.as_f32().unwrap().iter().all(|&x| x == 0.0));
+        // deterministic
+        let again = layout.init_state(0);
+        assert_eq!(init.len(), again.len());
+        for ((n1, t1), (n2, t2)) in init.iter().zip(&again) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+    }
+}

@@ -1,0 +1,615 @@
+//! Pure-rust f32 Transformer-VQ forward pass.
+//!
+//! Architecture per layer: RMSNorm -> multi-head VQ-attention (keys
+//! vector-quantized against a per-layer/per-head codebook, Definition 2.1)
+//! -> residual -> RMSNorm -> gated FFN (SiLU gate) -> residual; then a final
+//! RMSNorm and a linear readout to vocab logits.
+//!
+//! Attention implements Theorem 3.7's block recurrence in streaming form:
+//! each position attends exactly over
+//! * the compressive cache — per-shortcode running value means `cache_u`
+//!   with log-count offsets `ln(cache_l)` covering all blocks <= n-2
+//!   (Remark 3.9), scored against the codebook rows, plus
+//! * a rolling 2L window `win_k/win_v` holding the previous and current
+//!   blocks exactly, with the learned relative-position bias B (Thm 3.6).
+//!
+//! When position p enters a new block (p % L == 0, p >= 2L), block n-2
+//! leaves the bias band and is folded into the running means before its
+//! window slots are overwritten — so per-token cost is O(S + 2L) forever,
+//! while matching dense quadratic attention over quantized keys exactly
+//! (verified against `vqref` oracles in rust/tests/native_oracle.rs).
+//!
+//! Everything operates on flat contiguous f32/i32 buffers parsed from the
+//! positional `HostTensor` inputs; no hidden executor state.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelConfig;
+use crate::tensor::HostTensor;
+
+use super::layout::Layout;
+
+// ---------------------------------------------------------------------------
+// flat math helpers
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// out = x @ w, with w row-major [x.len(), out.len()]. Overwrites out.
+pub(crate) fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let o = out.len();
+    debug_assert_eq!(w.len(), x.len() * o);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * o..(i + 1) * o];
+        for (acc, &wv) in out.iter_mut().zip(row) {
+            *acc += xi * wv;
+        }
+    }
+}
+
+/// out += x @ w (residual add), same layout as [`matvec`].
+pub(crate) fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let o = out.len();
+    debug_assert_eq!(w.len(), x.len() * o);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * o..(i + 1) * o];
+        for (acc, &wv) in out.iter_mut().zip(row) {
+            *acc += xi * wv;
+        }
+    }
+}
+
+pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    let n = x.len().max(1);
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / n as f32 + 1e-6).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Index of the nearest codebook row (L2) among `s` rows of width `dk`.
+pub(crate) fn nearest_code_f32(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for c in 0..s {
+        let row = &codebook[c * dk..(c + 1) * dk];
+        let mut d = 0.0f32;
+        for (a, b) in x.iter().zip(row) {
+            let t = a - b;
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// parsed parameter / state views (flat Vec<f32> per leaf)
+// ---------------------------------------------------------------------------
+
+pub(crate) struct LayerParams {
+    pub attn_norm: Vec<f32>, // [dm]
+    pub wq: Vec<f32>,        // [dm, H*dk]
+    pub wk: Vec<f32>,        // [dm, H*dk]
+    pub wv: Vec<f32>,        // [dm, H*dv]
+    pub wo: Vec<f32>,        // [H*dv, dm]
+    pub bias: Vec<f32>,      // [H, 2L]
+    pub ffn_norm: Vec<f32>,  // [dm]
+    pub wg: Vec<f32>,        // [dm, dff]
+    pub w1: Vec<f32>,        // [dm, dff]
+    pub w2: Vec<f32>,        // [dff, dm]
+}
+
+pub(crate) struct Params {
+    pub layers: Vec<LayerParams>,
+    pub embed: Vec<f32>,    // [V, dm]
+    pub out_norm: Vec<f32>, // [dm]
+    pub wout: Vec<f32>,     // [dm, V]
+    pub bout: Vec<f32>,     // [V]
+}
+
+impl Params {
+    /// Parse the "params" group from positional tensors (leaf order per
+    /// [`Layout::param_leaves`]; shapes already validated against the spec).
+    pub fn parse(cfg: &ModelConfig, tensors: &[HostTensor]) -> Result<Self> {
+        let mut it = tensors.iter();
+        let mut next = |what: &str| -> Result<Vec<f32>> {
+            match it.next() {
+                Some(t) => t.as_f32(),
+                None => bail!("params group truncated at {what}"),
+            }
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerParams {
+                attn_norm: next("attn_norm")?,
+                wq: next("wq")?,
+                wk: next("wk")?,
+                wv: next("wv")?,
+                wo: next("wo")?,
+                bias: next("bias")?,
+                ffn_norm: next("ffn_norm")?,
+                wg: next("wg")?,
+                w1: next("w1")?,
+                w2: next("w2")?,
+            });
+        }
+        Ok(Self {
+            layers,
+            embed: next("embed")?,
+            out_norm: next("out_norm")?,
+            wout: next("wout")?,
+            bout: next("bout")?,
+        })
+    }
+
+    /// Serialize back to leaf order (same order as [`Layout::param_leaves`]).
+    pub fn dump(&self, layout: &Layout) -> Vec<HostTensor> {
+        let leaves = layout.param_leaves();
+        let mut flat: Vec<&[f32]> = Vec::with_capacity(leaves.len());
+        for lp in &self.layers {
+            flat.push(&lp.attn_norm);
+            flat.push(&lp.wq);
+            flat.push(&lp.wk);
+            flat.push(&lp.wv);
+            flat.push(&lp.wo);
+            flat.push(&lp.bias);
+            flat.push(&lp.ffn_norm);
+            flat.push(&lp.wg);
+            flat.push(&lp.w1);
+            flat.push(&lp.w2);
+        }
+        flat.push(&self.embed);
+        flat.push(&self.out_norm);
+        flat.push(&self.wout);
+        flat.push(&self.bout);
+        debug_assert_eq!(flat.len(), leaves.len());
+        flat.iter()
+            .zip(&leaves)
+            .map(|(v, leaf)| HostTensor::from_f32(&leaf.shape, v))
+            .collect()
+    }
+}
+
+/// Per-layer codebooks, each flat [H, S, dk].
+pub(crate) struct Codebooks {
+    pub layers: Vec<Vec<f32>>,
+}
+
+impl Codebooks {
+    pub fn parse(cfg: &ModelConfig, tensors: &[HostTensor]) -> Result<Self> {
+        if tensors.len() != cfg.n_layers {
+            bail!("cb group has {} tensors, expected {}", tensors.len(), cfg.n_layers);
+        }
+        Ok(Self { layers: tensors.iter().map(|t| t.as_f32()).collect::<Result<_>>()? })
+    }
+
+    pub fn dump(&self, layout: &Layout) -> Vec<HostTensor> {
+        self.layers
+            .iter()
+            .zip(layout.cb_leaves())
+            .map(|(v, leaf)| HostTensor::from_f32(&leaf.shape, v))
+            .collect()
+    }
+}
+
+pub(crate) struct LayerState {
+    pub win_k: Vec<f32>,   // [B, 2L, H, dk]
+    pub win_v: Vec<f32>,   // [B, 2L, H, dv]
+    pub win_z: Vec<i32>,   // [B, 2L, H]
+    pub cache_u: Vec<f32>, // [B, H, S, dv]
+    pub cache_l: Vec<f32>, // [B, H, S]
+}
+
+/// Decode / TBPTT-carry state (group "state"/"carry"), all leaves [B, ...].
+pub(crate) struct State {
+    pub pos: Vec<i32>, // [B]
+    pub layers: Vec<LayerState>,
+}
+
+impl State {
+    pub fn parse(cfg: &ModelConfig, tensors: &[HostTensor]) -> Result<Self> {
+        let expected = 1 + 5 * cfg.n_layers;
+        if tensors.len() != expected {
+            bail!("state group has {} tensors, expected {expected}", tensors.len());
+        }
+        let pos = tensors[0].as_i32()?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let base = 1 + 5 * l;
+            layers.push(LayerState {
+                win_k: tensors[base].as_f32()?,
+                win_v: tensors[base + 1].as_f32()?,
+                win_z: tensors[base + 2].as_i32()?,
+                cache_u: tensors[base + 3].as_f32()?,
+                cache_l: tensors[base + 4].as_f32()?,
+            });
+        }
+        Ok(Self { pos, layers })
+    }
+
+    /// Serialize back to leaf order (same order as [`Layout::state_leaves`]).
+    pub fn dump(&self, layout: &Layout, group: &str) -> Vec<HostTensor> {
+        let leaves = layout.state_leaves(group);
+        let mut out = Vec::with_capacity(leaves.len());
+        out.push(HostTensor::from_i32(&leaves[0].shape, &self.pos));
+        for (l, st) in self.layers.iter().enumerate() {
+            let base = 1 + 5 * l;
+            out.push(HostTensor::from_f32(&leaves[base].shape, &st.win_k));
+            out.push(HostTensor::from_f32(&leaves[base + 1].shape, &st.win_v));
+            out.push(HostTensor::from_i32(&leaves[base + 2].shape, &st.win_z));
+            out.push(HostTensor::from_f32(&leaves[base + 3].shape, &st.cache_u));
+            out.push(HostTensor::from_f32(&leaves[base + 4].shape, &st.cache_l));
+        }
+        debug_assert_eq!(out.len(), leaves.len());
+        for (t, leaf) in out.iter().zip(&leaves) {
+            debug_assert_eq!(t.dtype, leaf.dtype);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// training-side accumulator (codebook EMA inputs + commitment loss)
+// ---------------------------------------------------------------------------
+
+/// Accumulates quantizer statistics across a training window: per-code
+/// assignment counts + raw-key sums (EMA k-means inputs, §3.4.1) and the
+/// commitment term sum(||k - k_hat||^2).
+pub(crate) struct TrainAccum {
+    pub commit_sum: f64,
+    pub commit_n: f64,
+    /// Per layer: [H*S] assignment counts.
+    pub code_counts: Vec<Vec<f64>>,
+    /// Per layer: [H*S*dk] raw key sums.
+    pub key_sums: Vec<Vec<f64>>,
+}
+
+impl TrainAccum {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let hs = cfg.n_heads * cfg.n_code;
+        Self {
+            commit_sum: 0.0,
+            commit_n: 0.0,
+            code_counts: (0..cfg.n_layers).map(|_| vec![0.0; hs]).collect(),
+            key_sums: (0..cfg.n_layers).map(|_| vec![0.0; hs * cfg.d_k]).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the per-token step (VQ attention path)
+// ---------------------------------------------------------------------------
+
+/// One decode step for batch row `row`: feeds `token`, advances the state,
+/// returns `(logits [V], y [dm])` where `y` is the final normed hidden
+/// (the readout features, kept for the native training step's gradient).
+pub(crate) fn forward_token(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    st: &mut State,
+    row: usize,
+    token: i32,
+    mut accum: Option<&mut TrainAccum>,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_ne!(cfg.attn_type, "full", "dense path uses forward_window_dense");
+    let dm = cfg.d_model;
+    let h_n = cfg.n_heads;
+    let dk = cfg.d_k;
+    let dv = cfg.d_v;
+    let s = cfg.n_code;
+    let l = cfg.block_len;
+    let w2l = 2 * l;
+    let v_sz = cfg.vocab_size;
+    let dff = 2 * dm;
+
+    let pos = st.pos[row].max(0) as usize;
+    let n = pos / l;
+    let li = pos % l;
+    let tok = (token.max(0) as usize).min(v_sz - 1);
+
+    let mut x = p.embed[tok * dm..(tok + 1) * dm].to_vec();
+    let mut h = vec![0.0f32; dm];
+    let mut q = vec![0.0f32; h_n * dk];
+    let mut k = vec![0.0f32; h_n * dk];
+    let mut v = vec![0.0f32; h_n * dv];
+    let mut attn = vec![0.0f32; h_n * dv];
+    let mut zs = vec![0usize; h_n];
+    let mut g = vec![0.0f32; dff];
+    let mut u1 = vec![0.0f32; dff];
+    let q_scale = 1.0 / (dk as f32).sqrt();
+
+    for (layer_ix, (lp, lst)) in p.layers.iter().zip(st.layers.iter_mut()).enumerate() {
+        let lcb = &cb.layers[layer_ix];
+        rmsnorm(&x, &lp.attn_norm, &mut h);
+        matvec(&lp.wq, &h, &mut q);
+        matvec(&lp.wk, &h, &mut k);
+        matvec(&lp.wv, &h, &mut v);
+        for qv in q.iter_mut() {
+            *qv *= q_scale;
+        }
+        // quantize keys per head
+        for hd in 0..h_n {
+            let kh = &k[hd * dk..(hd + 1) * dk];
+            let head_cb = &lcb[hd * s * dk..(hd + 1) * s * dk];
+            let z = nearest_code_f32(kh, head_cb, s, dk);
+            zs[hd] = z;
+            if let Some(acc) = accum.as_deref_mut() {
+                let k_hat = &head_cb[z * dk..(z + 1) * dk];
+                let mut d2 = 0.0f64;
+                for (a, b) in kh.iter().zip(k_hat) {
+                    d2 += ((a - b) as f64).powi(2);
+                }
+                acc.commit_sum += d2;
+                acc.commit_n += 1.0;
+                acc.code_counts[layer_ix][hd * s + z] += 1.0;
+                let sums = &mut acc.key_sums[layer_ix][(hd * s + z) * dk..(hd * s + z + 1) * dk];
+                for (sv, &kv) in sums.iter_mut().zip(kh) {
+                    *sv += kv as f64;
+                }
+            }
+        }
+
+        // --- roll block n-2 into the compressive cache (Remark 3.9): it
+        // leaves the bias band exactly when block n begins, and its window
+        // slots are about to be overwritten by block n's tokens.
+        if cfg.use_cache && li == 0 && n >= 2 {
+            let start = (n - 2) * l;
+            for j in start..start + l {
+                let slot = j % w2l;
+                for hd in 0..h_n {
+                    let win_ix = (row * w2l + slot) * h_n + hd;
+                    let zc = lst.win_z[win_ix].max(0) as usize % s;
+                    let cl_ix = (row * h_n + hd) * s + zc;
+                    let cnt = lst.cache_l[cl_ix] + 1.0;
+                    let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
+                    let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
+                    // incremental running mean (Remark 3.9)
+                    for (uu, &vv) in u.iter_mut().zip(val) {
+                        *uu += (vv - *uu) / cnt;
+                    }
+                    lst.cache_l[cl_ix] = cnt;
+                }
+            }
+        }
+
+        // --- write the current token into its window slot ------------------
+        let slot = pos % w2l;
+        for hd in 0..h_n {
+            let z = zs[hd];
+            let k_hat = &lcb[(hd * s + z) * dk..(hd * s + z + 1) * dk];
+            let win_ix = (row * w2l + slot) * h_n + hd;
+            lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(k_hat);
+            lst.win_v[win_ix * dv..(win_ix + 1) * dv]
+                .copy_from_slice(&v[hd * dv..(hd + 1) * dv]);
+            lst.win_z[win_ix] = z as i32;
+        }
+
+        // --- attention: cache scores (codebook + log counts) + exact window
+        let lo = if n == 0 { 0 } else { (n - 1) * l };
+        attn.fill(0.0);
+        let mut scores: Vec<f32> = Vec::with_capacity(s + w2l);
+        // value source: offset into cache_u (from_cache) or win_v
+        let mut vals: Vec<(usize, bool)> = Vec::with_capacity(s + w2l);
+        for hd in 0..h_n {
+            scores.clear();
+            vals.clear();
+            let qh = &q[hd * dk..(hd + 1) * dk];
+            if cfg.use_cache {
+                for c in 0..s {
+                    let cl_ix = (row * h_n + hd) * s + c;
+                    let cl = lst.cache_l[cl_ix];
+                    if cl > 0.0 {
+                        let crow = &lcb[(hd * s + c) * dk..(hd * s + c + 1) * dk];
+                        scores.push(dot(qh, crow) + cl.ln());
+                        vals.push((cl_ix * dv, true));
+                    }
+                }
+            }
+            for j in lo..=pos {
+                let jslot = j % w2l;
+                let win_ix = (row * w2l + jslot) * h_n + hd;
+                let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
+                scores.push(dot(qh, kw) + lp.bias[hd * w2l + (pos - j)]);
+                vals.push((win_ix * dv, false));
+            }
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut zsum = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - m).exp();
+                zsum += *sc;
+            }
+            let out_h = &mut attn[hd * dv..(hd + 1) * dv];
+            for (&e, &(off, from_cache)) in scores.iter().zip(&vals) {
+                let w = e / zsum;
+                let val = if from_cache {
+                    &lst.cache_u[off..off + dv]
+                } else {
+                    &lst.win_v[off..off + dv]
+                };
+                for (o, &vv) in out_h.iter_mut().zip(val) {
+                    *o += w * vv;
+                }
+            }
+        }
+        matvec_add(&lp.wo, &attn, &mut x);
+
+        // --- gated FFN ------------------------------------------------------
+        rmsnorm(&x, &lp.ffn_norm, &mut h);
+        matvec(&lp.wg, &h, &mut g);
+        matvec(&lp.w1, &h, &mut u1);
+        for (gv, uv) in g.iter_mut().zip(&u1) {
+            *gv = silu(*gv) * uv;
+        }
+        matvec_add(&lp.w2, &g, &mut x);
+    }
+
+    let mut y = vec![0.0f32; dm];
+    rmsnorm(&x, &p.out_norm, &mut y);
+    let mut logits = p.bout.clone();
+    matvec_add(&p.wout, &y, &mut logits);
+    st.pos[row] = (pos + 1) as i32;
+    (logits, y)
+}
+
+// ---------------------------------------------------------------------------
+// dense (Full) window forward — the quadratic baseline for bench grids
+// ---------------------------------------------------------------------------
+
+/// Dense causal attention over the window (unquantized keys, no bias, no
+/// cross-window memory): the paper's "Full" throughput baseline. Returns
+/// per-token `(logits, y)` for one batch row. O(T^2) by construction.
+pub(crate) fn forward_window_dense(
+    cfg: &ModelConfig,
+    p: &Params,
+    tokens: &[i32],
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let dm = cfg.d_model;
+    let h_n = cfg.n_heads;
+    let dk = cfg.d_k;
+    let dv = cfg.d_v;
+    let v_sz = cfg.vocab_size;
+    let dff = 2 * dm;
+    let t_len = tokens.len();
+    let q_scale = 1.0 / (dk as f32).sqrt();
+
+    let mut xs: Vec<Vec<f32>> = tokens
+        .iter()
+        .map(|&tok| {
+            let tok = (tok.max(0) as usize).min(v_sz - 1);
+            p.embed[tok * dm..(tok + 1) * dm].to_vec()
+        })
+        .collect();
+
+    let mut h = vec![0.0f32; dm];
+    for lp in &p.layers {
+        let mut qs = vec![0.0f32; t_len * h_n * dk];
+        let mut ks = vec![0.0f32; t_len * h_n * dk];
+        let mut vs = vec![0.0f32; t_len * h_n * dv];
+        for (t, x) in xs.iter().enumerate() {
+            rmsnorm(x, &lp.attn_norm, &mut h);
+            matvec(&lp.wq, &h, &mut qs[t * h_n * dk..(t + 1) * h_n * dk]);
+            matvec(&lp.wk, &h, &mut ks[t * h_n * dk..(t + 1) * h_n * dk]);
+            matvec(&lp.wv, &h, &mut vs[t * h_n * dv..(t + 1) * h_n * dv]);
+        }
+        for qv in qs.iter_mut() {
+            *qv *= q_scale;
+        }
+        let mut attn = vec![0.0f32; h_n * dv];
+        let mut scores: Vec<f32> = Vec::with_capacity(t_len);
+        for (t, x) in xs.iter_mut().enumerate() {
+            attn.fill(0.0);
+            for hd in 0..h_n {
+                let qh = &qs[(t * h_n + hd) * dk..(t * h_n + hd + 1) * dk];
+                scores.clear();
+                for j in 0..=t {
+                    let kj = &ks[(j * h_n + hd) * dk..(j * h_n + hd + 1) * dk];
+                    scores.push(dot(qh, kj));
+                }
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut zsum = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - m).exp();
+                    zsum += *sc;
+                }
+                let out_h = &mut attn[hd * dv..(hd + 1) * dv];
+                for (j, &e) in scores.iter().enumerate() {
+                    let w = e / zsum;
+                    let vj = &vs[(j * h_n + hd) * dv..(j * h_n + hd + 1) * dv];
+                    for (o, &vv) in out_h.iter_mut().zip(vj) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            matvec_add(&lp.wo, &attn, x);
+            rmsnorm(x, &lp.ffn_norm, &mut h);
+            let mut g = vec![0.0f32; dff];
+            let mut u1 = vec![0.0f32; dff];
+            matvec(&lp.wg, &h, &mut g);
+            matvec(&lp.w1, &h, &mut u1);
+            for (gv, uv) in g.iter_mut().zip(&u1) {
+                *gv = silu(*gv) * uv;
+            }
+            matvec_add(&lp.w2, &g, x);
+        }
+    }
+
+    xs.iter()
+        .map(|x| {
+            let mut y = vec![0.0f32; dm];
+            rmsnorm(x, &p.out_norm, &mut y);
+            let mut logits = p.bout.clone();
+            matvec_add(&p.wout, &y, &mut logits);
+            (logits, y)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        // w: [2, 3] row-major
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [10.0, 100.0];
+        let mut out = vec![0.0; 3];
+        matvec(&w, &x, &mut out);
+        assert_eq!(out, vec![410.0, 520.0, 630.0]);
+        matvec_add(&w, &x, &mut out);
+        assert_eq!(out, vec![820.0, 1040.0, 1260.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0, 4.0];
+        let gain = [1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &gain, &mut out);
+        // rms = sqrt((9+16)/2) = 3.5355
+        assert!((out[0] - 3.0 / 3.5355339).abs() < 1e-4);
+        assert!((out[1] - 4.0 / 3.5355339).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nearest_code_flat_matches_vqref() {
+        let cb_flat = [0.0, 0.0, 10.0, 10.0];
+        assert_eq!(nearest_code_f32(&[1.0, -1.0], &cb_flat, 2, 2), 0);
+        assert_eq!(nearest_code_f32(&[9.0, 11.0], &cb_flat, 2, 2), 1);
+    }
+
+    #[test]
+    fn silu_basic() {
+        assert!(silu(0.0).abs() < 1e-9);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

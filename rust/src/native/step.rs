@@ -1,0 +1,334 @@
+//! Native step functions: the decode / train / eval entry points behind
+//! [`crate::runtime::Executor::run`], each a pure function of its positional
+//! inputs (validated upstream against the spec).
+//!
+//! Training is deliberately scoped (this is a serving-first engine): the
+//! forward pass is the full multi-layer VQ-attention model, the codebooks
+//! learn online via the paper's §3.4.1 EMA k-means (gradient-free), and
+//! gradient descent trains the linear readout (`wout`/`bout`) on the
+//! cross-entropy — a reservoir-style probe that gives honest, monotonically
+//! improving loss curves without a full backprop engine. Full backprop
+//! through the block recurrence is ROADMAP work; the step contract
+//! (params/opt/cb/carry in, same + metrics out) already matches it.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::HostTensor;
+
+use super::layout::Layout;
+use super::model::{
+    forward_token, forward_window_dense, Codebooks, Params, State, TrainAccum,
+};
+
+/// The LR schedule targets the paper's full-model Adam recipe; plain SGD on
+/// the linear readout needs a far larger step to move within a scaled-down
+/// run, so the native trainer rescales it (documented in DESIGN.md; tuned so
+/// a 30-step quickstart drops ~0.5 nats while 300-step runs stay stable
+/// under the global-norm clip).
+const READOUT_LR_SCALE: f32 = 5000.0;
+
+/// Laplace smoothing for EMA codebook counts (van den Oord 2017).
+const EMA_EPS: f32 = 1e-5;
+
+struct SplitSpec {
+    n_params: usize,
+    n_cb: usize,
+    n_opt: usize,
+    n_state: usize,
+}
+
+impl SplitSpec {
+    fn of(layout: &Layout) -> Self {
+        let nl = layout.cfg.n_layers;
+        Self {
+            n_params: 10 * nl + 4,
+            n_cb: nl,
+            n_opt: 2 * nl,
+            n_state: 1 + 5 * nl,
+        }
+    }
+}
+
+/// `<preset>.decode`: (params, cb, state, token[B]) -> (state, logits[B,V]).
+pub(crate) fn run_decode(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let cfg = &layout.cfg;
+    let sp = SplitSpec::of(layout);
+    let (b, v) = (cfg.batch_size, cfg.vocab_size);
+    let p = Params::parse(cfg, &inputs[..sp.n_params])?;
+    let cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
+    let st_base = sp.n_params + sp.n_cb;
+    let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
+    let tokens = inputs[st_base + sp.n_state].as_i32()?;
+
+    let mut logits = vec![0.0f32; b * v];
+    for row in 0..b {
+        let (row_logits, _) = forward_token(cfg, &p, &cb, &mut st, row, tokens[row], None);
+        logits[row * v..(row + 1) * v].copy_from_slice(&row_logits);
+    }
+    let mut outputs = st.dump(layout, "state");
+    outputs.push(HostTensor::from_f32(&[b, v], &logits));
+    Ok(outputs)
+}
+
+/// Per-(token,row) forward results the readout trainer consumes.
+struct WindowForward {
+    /// Per token: (logits [V], y [dm], target id).
+    steps: Vec<(Vec<f32>, Vec<f32>, usize)>,
+    accum: TrainAccum,
+}
+
+/// Run the forward pass over a [B, W+1] token window, advancing `st`.
+fn forward_window(
+    layout: &Layout,
+    p: &Params,
+    cb: &Codebooks,
+    st: &mut State,
+    tokens: &[i32],
+    with_accum: bool,
+) -> WindowForward {
+    let cfg = &layout.cfg;
+    let (b, w, v) = (cfg.batch_size, cfg.window_len, cfg.vocab_size);
+    let mut accum = TrainAccum::new(cfg);
+    let mut steps = Vec::with_capacity(b * w);
+    for row in 0..b {
+        let row_tokens = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
+        if cfg.attn_type == "full" {
+            // dense baseline: quadratic within the window, no carry memory
+            for (t, (logits, y)) in
+                forward_window_dense(cfg, p, &row_tokens[..w]).into_iter().enumerate()
+            {
+                let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
+                steps.push((logits, y, target));
+            }
+            st.pos[row] += w as i32;
+        } else {
+            for t in 0..w {
+                let acc = if with_accum { Some(&mut accum) } else { None };
+                let (logits, y) = forward_token(cfg, p, cb, st, row, row_tokens[t], acc);
+                let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
+                steps.push((logits, y, target));
+            }
+        }
+    }
+    WindowForward { steps, accum }
+}
+
+/// Mean CE (nats/token) + mean readout gradients from forward results.
+fn ce_and_readout_grads(
+    steps: &[(Vec<f32>, Vec<f32>, usize)],
+    dm: usize,
+    v: usize,
+) -> (f64, Vec<f64>, Vec<f64>) {
+    let n = steps.len().max(1) as f64;
+    let mut ce = 0.0f64;
+    let mut grad_w = vec![0.0f64; dm * v];
+    let mut grad_b = vec![0.0f64; v];
+    for (logits, y, target) in steps {
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        ce -= (exps[*target] / z).max(1e-300).ln();
+        for (vix, &e) in exps.iter().enumerate() {
+            let d = e / z - if vix == *target { 1.0 } else { 0.0 };
+            grad_b[vix] += d;
+            for (dix, &yd) in y.iter().enumerate() {
+                grad_w[dix * v + vix] += yd as f64 * d;
+            }
+        }
+    }
+    ce /= n;
+    for g in grad_w.iter_mut() {
+        *g /= n;
+    }
+    for g in grad_b.iter_mut() {
+        *g /= n;
+    }
+    (ce, grad_w, grad_b)
+}
+
+/// Average per-(layer,head) codebook usage perplexity exp(H(p)).
+fn code_perplexity(layout: &Layout, accum: &TrainAccum) -> f64 {
+    let cfg = &layout.cfg;
+    let s = cfg.n_code;
+    let mut total_ppl = 0.0f64;
+    let mut n_groups = 0.0f64;
+    for counts in &accum.code_counts {
+        for hd in 0..cfg.n_heads {
+            let slice = &counts[hd * s..(hd + 1) * s];
+            let tot: f64 = slice.iter().sum();
+            if tot <= 0.0 {
+                continue;
+            }
+            let mut ent = 0.0f64;
+            for &c in slice {
+                if c > 0.0 {
+                    let pr = c / tot;
+                    ent -= pr * pr.ln();
+                }
+            }
+            total_ppl += ent.exp();
+            n_groups += 1.0;
+        }
+    }
+    if n_groups > 0.0 {
+        total_ppl / n_groups
+    } else {
+        0.0
+    }
+}
+
+/// §3.4.1 EMA k-means codebook update from this window's assignments.
+fn ema_update(
+    layout: &Layout,
+    accum: &TrainAccum,
+    cb: &mut Codebooks,
+    ema_count: &mut [Vec<f32>],
+    ema_sum: &mut [Vec<f32>],
+) {
+    let cfg = &layout.cfg;
+    let (s, dk) = (cfg.n_code, cfg.d_k);
+    let gamma = cfg.ema_rate as f32;
+    for l in 0..cfg.n_layers {
+        let counts = &accum.code_counts[l];
+        let sums = &accum.key_sums[l];
+        let ec = &mut ema_count[l];
+        let es = &mut ema_sum[l];
+        let cbl = &mut cb.layers[l];
+        for (e, &c) in ec.iter_mut().zip(counts) {
+            *e = gamma * *e + (1.0 - gamma) * c as f32;
+        }
+        for (e, &ks) in es.iter_mut().zip(sums) {
+            *e = gamma * *e + (1.0 - gamma) * ks as f32;
+        }
+        for hd in 0..cfg.n_heads {
+            let head = &ec[hd * s..(hd + 1) * s];
+            let total: f32 = head.iter().sum();
+            if total <= 0.0 {
+                continue;
+            }
+            for c in 0..s {
+                let smoothed = (head[c] + EMA_EPS) / (total + s as f32 * EMA_EPS) * total;
+                if smoothed <= 0.0 {
+                    continue;
+                }
+                let base = (hd * s + c) * dk;
+                for d in 0..dk {
+                    cbl[base + d] = es[base + d] / smoothed;
+                }
+            }
+        }
+    }
+}
+
+/// `<preset>.train`: one §3.4.2 TBPTT update.
+/// (params, cb, opt, carry, tokens[B,W+1], lr, seed) ->
+/// (params, cb, opt, carry, metrics[loss, ce, commit, grad_norm, code_ppl, lr]).
+pub(crate) fn run_train(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let cfg = &layout.cfg;
+    let sp = SplitSpec::of(layout);
+    let (dm, v) = (cfg.d_model, cfg.vocab_size);
+    let mut p = Params::parse(cfg, &inputs[..sp.n_params])?;
+    let mut cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
+    let opt_base = sp.n_params + sp.n_cb;
+    let mut ema_count: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
+    let mut ema_sum: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        ema_count.push(inputs[opt_base + 2 * l].as_f32()?);
+        ema_sum.push(inputs[opt_base + 2 * l + 1].as_f32()?);
+    }
+    let st_base = opt_base + sp.n_opt;
+    let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
+    let tokens = inputs[st_base + sp.n_state].as_i32()?;
+    let lr = inputs[st_base + sp.n_state + 1].first_f32()?;
+
+    let fwd = forward_window(layout, &p, &cb, &mut st, &tokens, true);
+    let (ce, grad_w, grad_b) = ce_and_readout_grads(&fwd.steps, dm, v);
+
+    // global-norm clip, then the rescaled SGD step on the readout
+    let mut sq = 0.0f64;
+    for &g in grad_w.iter().chain(&grad_b) {
+        sq += g * g;
+    }
+    let grad_norm = sq.sqrt();
+    let clip = cfg.grad_clip;
+    let clip_scale = if clip > 0.0 && grad_norm > clip { clip / grad_norm } else { 1.0 };
+    let step = (lr * READOUT_LR_SCALE) as f64 * clip_scale;
+    for (w, &g) in p.wout.iter_mut().zip(&grad_w) {
+        *w -= (step * g) as f32;
+    }
+    for (b_, &g) in p.bout.iter_mut().zip(&grad_b) {
+        *b_ -= (step * g) as f32;
+    }
+
+    let commit = if fwd.accum.commit_n > 0.0 {
+        fwd.accum.commit_sum / fwd.accum.commit_n
+    } else {
+        0.0
+    };
+    let code_ppl = code_perplexity(layout, &fwd.accum);
+    if cfg.attn_type != "full" {
+        ema_update(layout, &fwd.accum, &mut cb, &mut ema_count, &mut ema_sum);
+    }
+
+    let loss = ce + cfg.commit_coef * commit;
+    let metrics = [
+        loss as f32,
+        ce as f32,
+        commit as f32,
+        grad_norm as f32,
+        code_ppl as f32,
+        lr,
+    ];
+
+    let mut outputs = p.dump(layout);
+    outputs.extend(cb.dump(layout));
+    let opt_leaves = layout.opt_leaves();
+    for l in 0..cfg.n_layers {
+        outputs.push(HostTensor::from_f32(&opt_leaves[2 * l].shape, &ema_count[l]));
+        outputs.push(HostTensor::from_f32(&opt_leaves[2 * l + 1].shape, &ema_sum[l]));
+    }
+    outputs.extend(st.dump(layout, "carry"));
+    outputs.push(HostTensor::from_f32(&[6], &metrics));
+    Ok(outputs)
+}
+
+/// `<preset>.eval` / `tput-*` bench: forward-only over a window.
+/// (params, cb, carry, tokens) -> (carry, metrics[total_ce_nats, n_tokens]).
+pub(crate) fn run_eval(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let cfg = &layout.cfg;
+    let sp = SplitSpec::of(layout);
+    let p = Params::parse(cfg, &inputs[..sp.n_params])?;
+    let cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
+    let st_base = sp.n_params + sp.n_cb;
+    let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
+    let tokens = inputs[st_base + sp.n_state].as_i32()?;
+
+    let fwd = forward_window(layout, &p, &cb, &mut st, &tokens, false);
+    let mut total_ce = 0.0f64;
+    for (logits, _, target) in &fwd.steps {
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let exps_sum: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let p_t = (((logits[*target] as f64) - m).exp() / exps_sum).max(1e-300);
+        total_ce -= p_t.ln();
+    }
+    let mut outputs = st.dump(layout, "carry");
+    outputs.push(HostTensor::from_f32(
+        &[2],
+        &[total_ce as f32, fwd.steps.len() as f32],
+    ));
+    Ok(outputs)
+}
+
+/// Dispatch on the spec entry; shared by [`super::NativeExecutor`].
+pub(crate) fn run_entry(
+    entry: &str,
+    layout: &Layout,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    match entry {
+        "decode" => run_decode(layout, inputs),
+        "train" => run_train(layout, inputs),
+        "eval" | "bench" => run_eval(layout, inputs),
+        other => bail!("native backend: unknown entry '{other}'"),
+    }
+}

@@ -18,32 +18,27 @@ use anyhow::Result;
 use crate::bench::{Bencher, Table};
 use crate::config::TrainConfig;
 use crate::data::{build_corpus, TbpttBatcher};
-use crate::manifest::Manifest;
 use crate::metrics::nats_to_bpb;
-use crate::runtime::{Runtime, StateBundle};
+use crate::runtime::{Backend, StateBundle};
 use crate::schedule::LrSchedule;
 use crate::train::Trainer;
 
-/// tokens/sec of one bench artifact (fwd+bwd over a full sequence).
+/// tokens/sec of one bench artifact (forward over a full sequence).
 pub fn measure_tokens_per_sec(
-    runtime: &Runtime,
-    manifest: &Manifest,
+    backend: &dyn Backend,
     name: &str,
     bencher: &Bencher,
 ) -> Result<f64> {
-    let exe = runtime.load(manifest, name)?;
-    let preset = name.to_string();
-    let mut bundle = StateBundle::zeros_for(&exe.spec);
-    let init = manifest.init_path(&preset);
-    if init.exists() {
-        bundle.load_groups(&init)?;
+    let exe = backend.load(name)?;
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    if let Ok(init) = backend.init_state(name) {
+        bundle.set_named(init);
     }
-    let inputs = bundle.assemble(&exe.spec)?;
-    let lits = exe.to_literals(&inputs)?;
+    let inputs = bundle.assemble(exe.spec())?;
     let stats = bencher.run(name, || {
-        exe.run_literals(&lits).expect("bench execute");
+        exe.run(&inputs).expect("bench execute");
     });
-    let tokens = (exe.spec.config.window_len * exe.spec.config.batch_size) as f64;
+    let tokens = (exe.spec().config.window_len * exe.spec().config.batch_size) as f64;
     Ok(tokens / stats.mean_secs())
 }
 
@@ -55,33 +50,37 @@ pub struct ThroughputRow {
     pub tokens_per_sec: f64,
 }
 
-/// Measure every `tput-*` artifact in the manifest (optionally filtered).
+/// Parse a bench-grid artifact name `tput-<head>-<variant>-T<len>` into
+/// (head, variant, len). One grammar, shared by the grid runner and the
+/// native backend's preset registry.
+pub fn parse_tput_name(name: &str) -> Option<(&str, &str, usize)> {
+    let rest = name.strip_prefix("tput-")?;
+    let mut parts = rest.rsplitn(2, "-T");
+    let t: usize = parts.next()?.parse().ok()?;
+    let head_variant = parts.next()?;
+    let (head, variant) = head_variant.split_once('-')?;
+    Some((head, variant, t))
+}
+
+/// Measure every `tput-*` artifact the backend offers (optionally filtered).
 pub fn measure_throughput_grid(
-    runtime: &Runtime,
-    manifest: &Manifest,
+    backend: &dyn Backend,
     bencher: &Bencher,
     max_t: usize,
 ) -> Result<Vec<ThroughputRow>> {
     let mut rows = Vec::new();
-    for name in manifest.names_with_prefix("tput-") {
-        // name: tput-<head>-<variant>-T<len>
-        let rest = name.trim_start_matches("tput-");
-        let mut parts = rest.rsplitn(2, "-T");
-        let t: usize = parts.next().unwrap().parse()?;
-        let head_variant = parts.next().unwrap();
-        let (head, variant) = head_variant.split_once('-').unwrap();
+    for name in backend.names_with_prefix("tput-") {
+        let Some((head, variant, t)) = parse_tput_name(&name) else {
+            anyhow::bail!("malformed bench artifact name '{name}'");
+        };
+        let (head, variant) = (head.to_string(), variant.to_string());
         if t > max_t {
             continue;
         }
         let t0 = Instant::now();
-        let tps = measure_tokens_per_sec(runtime, manifest, &name, bencher)?;
+        let tps = measure_tokens_per_sec(backend, &name, bencher)?;
         eprintln!("  {name}: {tps:9.0} tok/s  ({:.1?})", t0.elapsed());
-        rows.push(ThroughputRow {
-            head: head.to_string(),
-            variant: variant.to_string(),
-            seq_len: t,
-            tokens_per_sec: tps,
-        });
+        rows.push(ThroughputRow { head, variant, seq_len: t, tokens_per_sec: tps });
     }
     Ok(rows)
 }
@@ -176,8 +175,7 @@ pub struct AblationRow {
 /// Tables 1-2: train each ablation preset for `steps`, report best val BPB
 /// and per-step latency relative to `baseline` (paper: S=512 row).
 pub fn ablation_tables(
-    runtime: &Runtime,
-    manifest: &Manifest,
+    backend: &dyn Backend,
     presets: &[&str],
     baseline: &str,
     steps: u64,
@@ -189,7 +187,7 @@ pub fn ablation_tables(
         cfg.eval_every = 0; // evaluate manually at the end
         cfg.run_dir = std::path::PathBuf::from(format!("runs/ablate/{preset}"));
         cfg.schedule = LrSchedule::paper_scaled(1e-3, steps);
-        let mut trainer = Trainer::new(runtime, manifest, preset, cfg.schedule.clone())?;
+        let mut trainer = Trainer::new(backend, preset, cfg.schedule.clone())?;
         let corpus = build_corpus(&cfg.corpus, cfg.corpus_tokens, cfg.seed)?;
         let (train_c, valid_c, _) = corpus.split();
         let mut batcher =

@@ -1,0 +1,146 @@
+//! Backend abstraction: the execution contract every serving-path module
+//! (sampler, continuous-batching engine, trainer, benches) programs against.
+//!
+//! An [`Executor`] is one loaded step function (train / eval / decode /
+//! bench): positional [`HostTensor`]s in, positional `HostTensor`s out,
+//! shapes and dtypes validated against its [`ArtifactSpec`]. A [`Backend`]
+//! is a factory of executors plus the initial-state source for a preset.
+//!
+//! Two implementations ship:
+//! * [`crate::native::NativeBackend`] — pure-rust f32 Transformer-VQ model
+//!   (always available; no artifacts, no FFI, no python).
+//! * [`crate::runtime::PjrtBackend`] — AOT-compiled XLA artifacts via the
+//!   PJRT C API (`pjrt` cargo feature; requires `make artifacts`).
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ArtifactSpec;
+use crate::tensor::HostTensor;
+
+/// One loaded step function, executable from the request path.
+///
+/// Implementations must be pure: all model/optimizer/decode state flows
+/// through the positional inputs and outputs (the [`super::StateBundle`]
+/// assemble/absorb cycle), never through hidden executor state.
+pub trait Executor {
+    /// Artifact name this executor was loaded from (e.g. "quickstart.decode").
+    fn name(&self) -> &str;
+
+    /// The input/output layout contract (grouped leaves) and model config.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute with positional host tensors; returns positional outputs.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Factory of executors + initial state for presets.
+pub trait Backend {
+    /// Human-readable platform tag (e.g. "native-cpu", "Host").
+    fn platform(&self) -> String;
+
+    /// Load one artifact by name (`<preset>.{train,eval,decode}` or a
+    /// bench name like `tput-shga-vq-matmul-T256`).
+    fn load(&self, name: &str) -> Result<Box<dyn Executor>>;
+
+    /// The spec of an artifact without loading/compiling it (cheap —
+    /// used by `tvq inspect` and capacity planning).
+    fn spec(&self, name: &str) -> Result<ArtifactSpec>;
+
+    /// Initial state for `preset` as named tensors (`<group><path>`, the
+    /// same naming contract as `<preset>.init.tvq`): model params and
+    /// codebooks at minimum. Groups absent here start zeroed.
+    fn init_state(&self, preset: &str) -> Result<Vec<(String, HostTensor)>>;
+
+    /// Every artifact name this backend can load.
+    fn artifact_names(&self) -> Vec<String>;
+
+    /// Artifact names matching a prefix (bench-grid enumeration).
+    fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.artifact_names()
+            .into_iter()
+            .filter(|n| n.starts_with(prefix))
+            .collect()
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_names().iter().any(|n| n == name)
+    }
+}
+
+/// Validate positional `inputs` against `spec.inputs`: count, shape, dtype.
+/// Shared by every backend so mismatches fail with context instead of an
+/// opaque kernel abort.
+pub fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{name}: got {} inputs, spec expects {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (i, (t, leaf)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape != leaf.shape || t.dtype != leaf.dtype {
+            bail!(
+                "{name}: input #{i} ({}{}) is {:?}{:?}, spec expects {:?}{:?}",
+                leaf.group,
+                leaf.path,
+                t.dtype,
+                t.shape,
+                leaf.dtype,
+                leaf.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Pick the best available backend: PJRT over compiled artifacts when the
+/// `pjrt` feature is on and `<artifacts_dir>/manifest.json` exists,
+/// otherwise the native pure-rust engine (which needs nothing on disk).
+pub fn auto_backend(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Box<dyn Backend>> {
+    let dir = artifacts_dir.as_ref();
+    #[cfg(feature = "pjrt")]
+    {
+        if dir.join("manifest.json").exists() {
+            let manifest = crate::manifest::Manifest::load(dir)?;
+            return Ok(Box::new(super::PjrtBackend::new(manifest)?));
+        }
+    }
+    let _ = dir;
+    Ok(Box::new(crate::native::NativeBackend::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::tensor::DType;
+
+    #[test]
+    fn validate_catches_count_and_shape() {
+        let m = Manifest::parse(
+            crate::manifest::sample_manifest_json(),
+            std::path::PathBuf::from("/x"),
+        )
+        .unwrap();
+        let spec = m.get("p.train").unwrap();
+        assert!(validate_inputs("t", spec, &[]).is_err());
+        let bad = vec![
+            HostTensor::zeros(DType::F32, &[256, 64]),
+            HostTensor::zeros(DType::I32, &[4, 64]), // wrong: spec says [4, 65]
+        ];
+        assert!(validate_inputs("t", spec, &bad).is_err());
+        let good = vec![
+            HostTensor::zeros(DType::F32, &[256, 64]),
+            HostTensor::zeros(DType::I32, &[4, 65]),
+        ];
+        assert!(validate_inputs("t", spec, &good).is_ok());
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_native() {
+        let b = auto_backend("/definitely/not/a/dir").unwrap();
+        assert_eq!(b.platform(), "native-cpu");
+        assert!(b.has_artifact("quickstart.decode"));
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime (`pjrt` feature): load AOT HLO artifacts and execute them
+//! from rust via the XLA PJRT C API. Python is compile-time only.
+//!
+//! `Runtime` wraps a `PjRtClient` (CPU plugin); `Executable` wraps one
+//! compiled HLO module plus its manifest spec; [`PjrtBackend`] adapts the
+//! pair to the [`Backend`]/[`Executor`] contract the serving path uses.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::HostTensor;
+
+use super::backend::{Backend, Executor};
+use super::literal::{literal_to_tensor, tensor_to_literal};
+
+/// Shared PJRT client. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact from the manifest. HLO *text* is the interchange
+    /// format (xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<Executable> {
+        let spec = manifest.get(name)?.clone();
+        let path = manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { name: name.to_string(), spec, exe, compile_time: t0.elapsed() })
+    }
+}
+
+/// One compiled HLO module, executable from the request path.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time: std::time::Duration,
+}
+
+impl Executable {
+    /// Execute with positional host tensors; returns positional outputs.
+    ///
+    /// Shapes/dtypes are validated against the manifest before crossing the
+    /// FFI boundary so mismatches fail with context instead of an XLA abort.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = self.to_literals(inputs)?;
+        self.run_literals(&lits)
+    }
+
+    /// Validate + convert inputs to XLA literals (reusable across runs).
+    pub fn to_literals(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        super::backend::validate_inputs(&self.name, &self.spec, inputs)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            lits.push(tensor_to_literal(t)?);
+        }
+        Ok(lits)
+    }
+
+    /// Execute with pre-built literals.
+    pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(lits)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.name))?;
+        self.collect_outputs(bufs)
+    }
+
+    fn collect_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let device0 = bufs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: no device outputs", self.name))?;
+        let n_out = self.spec.outputs.len();
+        // aot.py lowers with return_tuple=True, so the usual shape is one
+        // tuple buffer holding all outputs; handle untupled layouts too.
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(n_out);
+        for buf in &device0 {
+            let mut lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.name))?;
+            match lit.decompose_tuple() {
+                Ok(parts) => lits.extend(parts),
+                Err(_) => lits.push(lit),
+            }
+        }
+        if lits.len() != n_out {
+            bail!(
+                "{}: got {} output literals, manifest expects {n_out}",
+                self.name,
+                lits.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(n_out);
+        for (lit, spec) in lits.iter().zip(&self.spec.outputs) {
+            outs.push(literal_to_tensor(lit, spec)?);
+        }
+        Ok(outs)
+    }
+}
+
+impl Executor for Executable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Executable::run(self, inputs)
+    }
+}
+
+/// [`Backend`] over a PJRT runtime + artifact manifest.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self { runtime: Runtime::cpu()?, manifest })
+    }
+
+    pub fn with_runtime(runtime: Runtime, manifest: Manifest) -> Self {
+        Self { runtime, manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn load(&self, name: &str) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(self.runtime.load(&self.manifest, name)?))
+    }
+
+    fn spec(&self, name: &str) -> Result<ArtifactSpec> {
+        Ok(self.manifest.get(name)?.clone())
+    }
+
+    fn init_state(&self, preset: &str) -> Result<Vec<(String, HostTensor)>> {
+        let init = self.manifest.init_path(preset);
+        if !init.exists() {
+            bail!("missing init state {} — run `make artifacts`", init.display());
+        }
+        crate::store::read_tvq(init)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}

@@ -44,6 +44,15 @@ impl StateBundle {
     /// guarantees.
     pub fn load_groups(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let tensors = store::read_tvq(path)?;
+        self.set_named(tensors);
+        Ok(())
+    }
+
+    /// Install named tensors (`<group><path>`), grouped by name prefix —
+    /// the same contract as [`Self::load_groups`] but from memory (used
+    /// with [`crate::runtime::Backend::init_state`]). Tensors must appear
+    /// in leaf (spec) order within each group.
+    pub fn set_named(&mut self, tensors: Vec<(String, HostTensor)>) {
         let mut groups: BTreeMap<String, Vec<HostTensor>> = BTreeMap::new();
         for (name, t) in tensors {
             let group = name.split(['[', '/']).next().unwrap_or(&name).to_string();
@@ -52,7 +61,6 @@ impl StateBundle {
         for (g, ts) in groups {
             self.groups.insert(g, ts);
         }
-        Ok(())
     }
 
     pub fn set_group(&mut self, name: &str, tensors: Vec<HostTensor>) {

@@ -1,6 +1,7 @@
 //! Linear-time sampling runtime.
 //!
-//! Drives the `<preset>.decode` artifact token by token. The compressive
+//! Drives a `<preset>.decode` executor (native or PJRT, via the
+//! [`crate::runtime::Backend`] abstraction) token by token. The compressive
 //! cache state lives in the "state" group of the bundle ([B, ...] tensors:
 //! rolling 2L key/value window + per-shortcode running means, per layer), so
 //! per-token cost is O(S + 2L) — generation is linear in sequence length,
@@ -15,13 +16,12 @@ pub use nucleus::{nucleus_sample, softmax_with_temperature};
 
 use anyhow::{bail, Result};
 
-use crate::manifest::Manifest;
 use crate::rng::Rng;
-use crate::runtime::{Executable, Runtime, StateBundle};
+use crate::runtime::{Backend, Executor, StateBundle};
 use crate::tensor::HostTensor;
 
 pub struct Sampler {
-    pub exe: Executable,
+    pub exe: Box<dyn Executor>,
     pub bundle: StateBundle,
     preset: String,
 }
@@ -39,14 +39,12 @@ impl Default for SampleParams {
 }
 
 impl Sampler {
-    pub fn new(runtime: &Runtime, manifest: &Manifest, preset: &str) -> Result<Self> {
-        let exe = runtime.load(manifest, &format!("{preset}.decode"))?;
-        let mut bundle = StateBundle::zeros_for(&exe.spec);
-        let init = manifest.init_path(preset);
-        if !init.exists() {
-            bail!("missing init state {}", init.display());
-        }
-        bundle.load_groups(&init)?;
+    /// Load `<preset>.decode` from any backend and initialize its state
+    /// (params/codebooks from the backend, decode state zeroed).
+    pub fn new(backend: &dyn Backend, preset: &str) -> Result<Self> {
+        let exe = backend.load(&format!("{preset}.decode"))?;
+        let mut bundle = StateBundle::zeros_for(exe.spec());
+        bundle.set_named(backend.init_state(preset)?);
         Ok(Self { exe, bundle, preset: preset.to_string() })
     }
 
@@ -63,11 +61,11 @@ impl Sampler {
     }
 
     pub fn batch_size(&self) -> usize {
-        self.exe.spec.config.batch_size
+        self.exe.spec().config.batch_size
     }
 
     pub fn vocab_size(&self) -> usize {
-        self.exe.spec.config.vocab_size
+        self.exe.spec().config.vocab_size
     }
 
     pub fn preset(&self) -> &str {
@@ -82,9 +80,9 @@ impl Sampler {
         }
         self.bundle
             .set_group("token", vec![HostTensor::from_i32(&[b], tokens)]);
-        let inputs = self.bundle.assemble(&self.exe.spec)?;
+        let inputs = self.bundle.assemble(self.exe.spec())?;
         let outputs = self.exe.run(&inputs)?;
-        self.bundle.absorb(&self.exe.spec, outputs)?;
+        self.bundle.absorb(self.exe.spec(), outputs)?;
         let logits = self.bundle.group("logits")?[0].as_f32()?;
         let v = self.vocab_size();
         Ok((0..b).map(|i| logits[i * v..(i + 1) * v].to_vec()).collect())
@@ -94,7 +92,7 @@ impl Sampler {
     pub fn reset_all(&mut self) {
         let zeros: Vec<HostTensor> = self
             .exe
-            .spec
+            .spec()
             .input_group("state")
             .iter()
             .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))

@@ -47,7 +47,7 @@ pub fn save_checkpoint(trainer: &Trainer, dir: impl AsRef<Path>) -> Result<()> {
         .collect();
     trainer
         .bundle
-        .save_groups(dir.join("state.tvq"), &trainer.exe_train.spec, &groups)?;
+        .save_groups(dir.join("state.tvq"), trainer.exe_train.spec(), &groups)?;
     let meta = CheckpointMeta { preset: trainer.preset.clone(), step: trainer.step, format: 1 };
     std::fs::write(dir.join("meta.json"), meta.to_json().dump())?;
     Ok(())

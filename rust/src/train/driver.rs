@@ -5,9 +5,8 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::{build_corpus, TbpttBatcher};
-use crate::manifest::Manifest;
 use crate::metrics::{nats_to_bpb, CsvLog};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 use super::{save_checkpoint, Trainer, TrainMetrics};
 
@@ -23,13 +22,9 @@ pub struct TrainSummary {
 
 /// Run a full training job per `cfg`; returns the summary (and leaves the
 /// trained `Trainer` for further use, e.g. sampling).
-pub fn run_training(
-    runtime: &Runtime,
-    manifest: &Manifest,
-    cfg: &TrainConfig,
-) -> Result<(Trainer, TrainSummary)> {
+pub fn run_training(backend: &dyn Backend, cfg: &TrainConfig) -> Result<(Trainer, TrainSummary)> {
     cfg.save()?;
-    let mut trainer = Trainer::new(runtime, manifest, &cfg.preset, cfg.schedule.clone())?;
+    let mut trainer = Trainer::new(backend, &cfg.preset, cfg.schedule.clone())?;
     let corpus = build_corpus(&cfg.corpus, cfg.corpus_tokens, cfg.seed)?;
     let (train_c, valid_c, _test_c) = corpus.split();
     let w = trainer.window_len();

@@ -1,6 +1,7 @@
-//! Training orchestrator: drives the AOT `*.train`/`*.eval` artifacts with
-//! TBPTT windows (§3.4.2), owns the model state between steps, computes the
-//! LR schedule, evaluates, and checkpoints.
+//! Training orchestrator: drives `*.train`/`*.eval` executors (native or
+//! PJRT, via the [`crate::runtime::Backend`] abstraction) with TBPTT windows
+//! (§3.4.2), owns the model state between steps, computes the LR schedule,
+//! evaluates, and checkpoints.
 
 mod checkpoint;
 mod driver;
@@ -11,9 +12,8 @@ pub use driver::{run_training, TrainSummary};
 use anyhow::{bail, Result};
 
 use crate::data::{Batch, TbpttBatcher};
-use crate::manifest::Manifest;
 use crate::metrics::ThroughputMeter;
-use crate::runtime::{Executable, Runtime, StateBundle};
+use crate::runtime::{Backend, Executor, StateBundle};
 use crate::schedule::LrSchedule;
 use crate::tensor::HostTensor;
 
@@ -50,8 +50,8 @@ impl TrainMetrics {
 }
 
 pub struct Trainer {
-    pub exe_train: Executable,
-    pub exe_eval: Option<Executable>,
+    pub exe_train: Box<dyn Executor>,
+    pub exe_eval: Option<Box<dyn Executor>>,
     pub bundle: StateBundle,
     pub schedule: LrSchedule,
     pub step: u64,
@@ -60,27 +60,19 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Load `<preset>.train` (+ `<preset>.eval` if present) and initialize
-    /// state: zeros for all groups, then params/codebooks from
-    /// `<preset>.init.tvq`.
-    pub fn new(
-        runtime: &Runtime,
-        manifest: &Manifest,
-        preset: &str,
-        schedule: LrSchedule,
-    ) -> Result<Self> {
-        let exe_train = runtime.load(manifest, &format!("{preset}.train"))?;
-        let exe_eval = match manifest.get(&format!("{preset}.eval")) {
-            Ok(_) => Some(runtime.load(manifest, &format!("{preset}.eval"))?),
-            Err(_) => None,
-        };
-        let mut bundle = StateBundle::zeros_for(&exe_train.spec);
-        let init = manifest.init_path(preset);
-        if init.exists() {
-            bundle.load_groups(&init)?;
+    /// Load `<preset>.train` (+ `<preset>.eval` if present) from `backend`
+    /// and initialize state: zeros for all groups, then params/codebooks
+    /// (and optimizer stats, if any) from the backend's init state.
+    pub fn new(backend: &dyn Backend, preset: &str, schedule: LrSchedule) -> Result<Self> {
+        let exe_train = backend.load(&format!("{preset}.train"))?;
+        let eval_name = format!("{preset}.eval");
+        let exe_eval = if backend.has_artifact(&eval_name) {
+            Some(backend.load(&eval_name)?)
         } else {
-            bail!("missing init state {} — re-run `make artifacts`", init.display());
-        }
+            None
+        };
+        let mut bundle = StateBundle::zeros_for(exe_train.spec());
+        bundle.set_named(backend.init_state(preset)?);
         Ok(Self {
             exe_train,
             exe_eval,
@@ -93,18 +85,18 @@ impl Trainer {
     }
 
     pub fn window_len(&self) -> usize {
-        self.exe_train.spec.config.window_len
+        self.exe_train.spec().config.window_len
     }
 
     pub fn batch_size(&self) -> usize {
-        self.exe_train.spec.config.batch_size
+        self.exe_train.spec().config.batch_size
     }
 
     /// Reset the recurrent carry (sequence boundary).
     pub fn reset_carry(&mut self) {
         let zeros: Vec<HostTensor> = self
             .exe_train
-            .spec
+            .spec()
             .input_group("carry")
             .iter()
             .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))
@@ -124,9 +116,9 @@ impl Trainer {
         self.bundle.set_group("lr", vec![HostTensor::scalar_f32(lr)]);
         self.bundle
             .set_group("seed", vec![HostTensor::scalar_i32(self.step as i32)]);
-        let inputs = self.bundle.assemble(&self.exe_train.spec)?;
+        let inputs = self.bundle.assemble(self.exe_train.spec())?;
         let outputs = self.exe_train.run(&inputs)?;
-        self.bundle.absorb(&self.exe_train.spec, outputs)?;
+        self.bundle.absorb(self.exe_train.spec(), outputs)?;
         self.step += 1;
         self.throughput
             .observe((self.batch_size() * self.window_len()) as u64);
@@ -144,7 +136,7 @@ impl Trainer {
         let mut bundle = self.bundle.clone();
         // eval carries its own recurrent state
         let zeros: Vec<HostTensor> = exe
-            .spec
+            .spec()
             .input_group("carry")
             .iter()
             .map(|(_, l)| HostTensor::zeros(l.dtype, &l.shape))
@@ -155,9 +147,9 @@ impl Trainer {
         for _ in 0..max_windows {
             let b = batcher.next_batch();
             bundle.set_group("tokens", vec![b.tokens]);
-            let inputs = bundle.assemble(&exe.spec)?;
+            let inputs = bundle.assemble(exe.spec())?;
             let outputs = exe.run(&inputs)?;
-            bundle.absorb(&exe.spec, outputs)?;
+            bundle.absorb(exe.spec(), outputs)?;
             let m = bundle.group("metrics")?[0].as_f32()?;
             total_ce += m[0] as f64;
             total_tok += m[1] as f64;

@@ -1,13 +1,16 @@
-//! Integration tests over real AOT artifacts: execute the compiled HLO from
-//! rust with the exact inputs python used (golden TVQ vectors) and assert
-//! the outputs match bit-for-bit-ish (f32 tolerance).
+//! Integration tests over real AOT artifacts (cargo feature `pjrt`):
+//! execute the compiled HLO from rust with the exact inputs python used
+//! (golden TVQ vectors) and assert the outputs match bit-for-bit-ish (f32
+//! tolerance).
 //!
 //! Requires `make artifacts` to have produced artifacts/ — tests self-skip
 //! (with a loud message) when the directory is missing so `cargo test`
-//! stays usable before the first build.
+//! stays usable before the first build. The native-backend equivalents of
+//! these tests live in native_backend.rs / native_oracle.rs and always run.
+#![cfg(feature = "pjrt")]
 
 use transformer_vq::manifest::Manifest;
-use transformer_vq::runtime::{Runtime, StateBundle};
+use transformer_vq::runtime::{PjrtBackend, Runtime, StateBundle};
 use transformer_vq::store::read_tvq;
 use transformer_vq::tensor::HostTensor;
 
@@ -111,13 +114,8 @@ fn train_steps_reduce_loss_and_checkpoint_roundtrips() {
     use transformer_vq::schedule::LrSchedule;
     use transformer_vq::train::{load_checkpoint, save_checkpoint, Trainer};
 
-    let mut trainer = Trainer::new(
-        &runtime,
-        &manifest,
-        "quickstart",
-        LrSchedule::constant(1e-3),
-    )
-    .unwrap();
+    let backend = PjrtBackend::with_runtime(runtime.clone(), manifest.clone());
+    let mut trainer = Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
     let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
     let mut batcher =
         TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len())
@@ -136,13 +134,7 @@ fn train_steps_reduce_loss_and_checkpoint_roundtrips() {
     save_checkpoint(&trainer, dir.path()).unwrap();
     let probe = batcher.next_batch();
     let m1 = trainer.train_on(&probe).unwrap();
-    let mut trainer2 = Trainer::new(
-        &runtime,
-        &manifest,
-        "quickstart",
-        LrSchedule::constant(1e-3),
-    )
-    .unwrap();
+    let mut trainer2 = Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
     load_checkpoint(&mut trainer2, dir.path()).unwrap();
     let m2 = trainer2.train_on(&probe).unwrap();
     assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "resume not bit-exact");

@@ -1,28 +1,19 @@
 //! Coordinator integration tests: continuous-batching engine + TCP server
-//! over the real decode artifact (skip when artifacts are missing).
+//! over the native backend's decode executor. No artifacts required — this
+//! is the end-to-end serving path on a fresh checkout.
 
 use std::sync::mpsc;
 use std::time::Duration;
 
 use transformer_vq::coordinator::{handle_conn, Client, Engine, GenRequest, WireRequest};
-use transformer_vq::manifest::Manifest;
-use transformer_vq::runtime::Runtime;
+use transformer_vq::native::NativeBackend;
 use transformer_vq::sample::{SampleParams, Sampler};
 
-fn artifacts() -> Option<Manifest> {
-    let dir = transformer_vq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: {} missing — run `make artifacts`", dir.display());
-        return None;
-    }
-    Some(Manifest::load(dir).unwrap())
-}
-
-fn spawn_engine(manifest: Manifest) -> transformer_vq::coordinator::EngineHandle {
+fn spawn_engine() -> transformer_vq::coordinator::EngineHandle {
     let (handle, _join) = Engine::spawn(
         move || {
-            let runtime = Runtime::cpu()?;
-            Sampler::new(&runtime, &manifest, "quickstart")
+            let backend = NativeBackend::new();
+            Sampler::new(&backend, "quickstart")
         },
         42,
     )
@@ -32,8 +23,7 @@ fn spawn_engine(manifest: Manifest) -> transformer_vq::coordinator::EngineHandle
 
 #[test]
 fn engine_serves_single_request() {
-    let Some(manifest) = artifacts() else { return };
-    let handle = spawn_engine(manifest);
+    let handle = spawn_engine();
     let resp = handle
         .generate(GenRequest {
             prompt: vec![104, 105], // "hi"
@@ -49,8 +39,7 @@ fn engine_serves_single_request() {
 
 #[test]
 fn engine_batches_concurrent_requests() {
-    let Some(manifest) = artifacts() else { return };
-    let handle = spawn_engine(manifest);
+    let handle = spawn_engine();
     let (tx, rx) = mpsc::channel();
     // more concurrent requests than slots (batch=4): exercises queueing +
     // slot reuse (continuous batching)
@@ -79,8 +68,7 @@ fn engine_batches_concurrent_requests() {
 
 #[test]
 fn engine_stop_token_halts_generation() {
-    let Some(manifest) = artifacts() else { return };
-    let handle = spawn_engine(manifest);
+    let handle = spawn_engine();
     // stop on every token id: generation must stop at length 1
     let mut hit_short = false;
     for stop in 0..6 {
@@ -104,8 +92,7 @@ fn engine_stop_token_halts_generation() {
 
 #[test]
 fn tcp_server_roundtrip() {
-    let Some(manifest) = artifacts() else { return };
-    let handle = spawn_engine(manifest);
+    let handle = spawn_engine();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     std::thread::spawn(move || {
@@ -144,9 +131,8 @@ fn tcp_server_roundtrip() {
 
 #[test]
 fn sampler_generate_deterministic_given_seed() {
-    let Some(manifest) = artifacts() else { return };
-    let runtime = Runtime::cpu().unwrap();
-    let mut sampler = Sampler::new(&runtime, &manifest, "quickstart").unwrap();
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
     let b = sampler.batch_size();
     let prompts = vec![vec![1, 2, 3]; b];
     let mut r1 = transformer_vq::rng::Rng::new(7);
@@ -162,9 +148,8 @@ fn sampler_generate_deterministic_given_seed() {
 
 #[test]
 fn sampler_reset_slot_isolates_state() {
-    let Some(manifest) = artifacts() else { return };
-    let runtime = Runtime::cpu().unwrap();
-    let mut sampler = Sampler::new(&runtime, &manifest, "quickstart").unwrap();
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
     let b = sampler.batch_size();
     // run a few steps, snapshot logits of slot 1
     sampler.reset_all();

@@ -1,0 +1,102 @@
+//! Native-backend integration tests: the full train -> checkpoint ->
+//! sample path with zero artifacts on disk — what a fresh checkout runs.
+
+use transformer_vq::data::TbpttBatcher;
+use transformer_vq::native::NativeBackend;
+use transformer_vq::rng::Rng;
+use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::schedule::LrSchedule;
+use transformer_vq::train::{load_checkpoint, save_checkpoint, Trainer};
+
+#[test]
+fn train_steps_reduce_loss_natively() {
+    let backend = NativeBackend::new();
+    let mut trainer =
+        Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+    let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
+    let mut batcher =
+        TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len()).unwrap();
+    let first = trainer.train_on(&batcher.next_batch()).unwrap();
+    assert!(first.loss.is_finite(), "loss must be finite, got {}", first.loss);
+    // readout starts near zero -> initial CE is within noise of ln(256)
+    assert!(
+        (first.ce - (256f32).ln()).abs() < 0.5,
+        "initial ce {} far from ln(256)",
+        first.ce
+    );
+    assert!(first.code_perplexity >= 1.0, "code ppl {}", first.code_perplexity);
+    let mut last = first;
+    for _ in 0..15 {
+        last = trainer.train_on(&batcher.next_batch()).unwrap();
+    }
+    assert!(last.loss < first.loss, "loss {} -> {}", first.loss, last.loss);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact() {
+    let backend = NativeBackend::new();
+    let mut trainer =
+        Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+    let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
+    let mut batcher =
+        TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len()).unwrap();
+    for _ in 0..3 {
+        trainer.train_on(&batcher.next_batch()).unwrap();
+    }
+    let dir = transformer_vq::testutil::TempDir::new();
+    save_checkpoint(&trainer, dir.path()).unwrap();
+    let probe = batcher.next_batch();
+    let m1 = trainer.train_on(&probe).unwrap();
+    let mut trainer2 =
+        Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+    load_checkpoint(&mut trainer2, dir.path()).unwrap();
+    let m2 = trainer2.train_on(&probe).unwrap();
+    assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "resume not bit-exact");
+    assert_eq!(
+        m1.code_perplexity.to_bits(),
+        m2.code_perplexity.to_bits(),
+        "codebook state not restored"
+    );
+}
+
+#[test]
+fn trained_weights_flow_into_sampler() {
+    let backend = NativeBackend::new();
+    let mut trainer =
+        Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+    let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
+    let mut batcher =
+        TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len()).unwrap();
+    for _ in 0..3 {
+        trainer.train_on(&batcher.next_batch()).unwrap();
+    }
+    let dir = transformer_vq::testutil::TempDir::new();
+    save_checkpoint(&trainer, dir.path()).unwrap();
+
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
+    let b = sampler.batch_size();
+    let fresh_logits = sampler.step(&vec![42; b]).unwrap();
+    sampler.load_weights(dir.path().join("state.tvq")).unwrap();
+    sampler.reset_all();
+    let trained_logits = sampler.step(&vec![42; b]).unwrap();
+    assert_ne!(fresh_logits[0], trained_logits[0], "weights did not change logits");
+
+    let mut rng = Rng::new(3);
+    let prompts = vec![vec![104, 105]; b];
+    let outs = sampler
+        .generate(&prompts, 8, SampleParams::default(), &mut rng)
+        .unwrap();
+    assert!(outs.iter().all(|o| o.len() == 8));
+}
+
+#[test]
+fn eval_reports_sane_cross_entropy() {
+    let backend = NativeBackend::new();
+    let trainer = Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+    let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
+    let mut batcher =
+        TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len()).unwrap();
+    let ce = trainer.evaluate(&mut batcher, 4).unwrap();
+    // untrained near-zero readout: CE within noise of uniform ln(256)
+    assert!((ce - 256f64.ln()).abs() < 0.5, "eval ce {ce}");
+}
