@@ -14,7 +14,7 @@ use transformer_vq::rng::Rng;
 use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
-use transformer_vq::train::{run_training, save_checkpoint};
+use transformer_vq::train::run_training;
 
 fn main() -> Result<()> {
     let backend = auto_backend(transformer_vq::artifacts_dir())?;
@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     let mut cfg = TrainConfig::quickstart();
     cfg.steps = 30;
     cfg.run_dir = std::path::PathBuf::from("runs/quickstart-example");
-    let (trainer, summary) = run_training(backend.as_ref(), &cfg)?;
+    let (_trainer, summary) = run_training(backend.as_ref(), &cfg)?;
     println!(
         "trained {} steps: loss {:.3} -> {:.3} ({:.3} bpb)",
         summary.steps,
@@ -36,8 +36,9 @@ fn main() -> Result<()> {
         summary.final_loss < summary.loss_curve[0].1,
         "loss did not decrease"
     );
+    // run_training leaves the final checkpoint (with the batcher position
+    // for stream-exact resume) at <run_dir>/ckpt-final
     let ckpt = cfg.run_dir.join("ckpt-final");
-    save_checkpoint(&trainer, &ckpt)?;
 
     // --- sample ----------------------------------------------------------
     let mut sampler = Sampler::new(backend.as_ref(), "quickstart")?;

@@ -1,0 +1,102 @@
+//! Native train-throughput baseline: tokens/sec of the full §3.4.2 update
+//! (forward + exact backprop through the Theorem 3.7 block recurrence +
+//! Adam + EMA codebook learning) on a synthetic corpus.
+//!
+//! Complements `perfbench` (decode flat-latency): together CI tracks both
+//! the serving and the training side of the linear-time claim. Emits
+//! `BENCH_native_train.json` so the trajectory is visible across PRs.
+//!
+//! Also reports the identity-keyed weight-cache effect: steps/sec with the
+//! executor's parsed-weight cache warm (steady-state training) versus a
+//! fresh executor per step (every step re-parses the params group).
+//!
+//! Usage: cargo run --release --example trainbench -- [preset] [steps] [out.json]
+
+use anyhow::Result;
+use transformer_vq::data::TbpttBatcher;
+use transformer_vq::json::Json;
+use transformer_vq::native::NativeBackend;
+use transformer_vq::runtime::Backend;
+use transformer_vq::schedule::LrSchedule;
+use transformer_vq::train::Trainer;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("quickstart");
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(60);
+    let out_path = args
+        .get(2)
+        .map(String::as_str)
+        .unwrap_or("BENCH_native_train.json");
+
+    let backend = NativeBackend::new();
+    let mut trainer = Trainer::new(&backend, preset, LrSchedule::constant(3e-3))?;
+    let (b, w) = (trainer.batch_size(), trainer.window_len());
+    eprintln!("trainbench: {preset}.train  (B={b}, W={w}, {steps} steps)");
+    let corpus = transformer_vq::data::build_corpus("markov", 200_000, 0)?;
+    let mut batcher = TbpttBatcher::new(corpus.tokens, b, w)?;
+
+    // warmup (first step parses weights; later steps hit the cache)
+    let mut first_loss = f32::NAN;
+    for _ in 0..3 {
+        first_loss = trainer.train_on(&batcher.next_batch())?.loss;
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut last_loss = first_loss;
+    for _ in 0..steps {
+        last_loss = trainer.train_on(&batcher.next_batch())?.loss;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let tokens = (steps * b * w) as f64;
+    let tok_per_sec = tokens / dt;
+    let ms_per_step = dt * 1e3 / steps as f64;
+    println!(
+        "{steps} steps in {dt:.2}s: {tok_per_sec:.0} tok/s  ({ms_per_step:.1} ms/step)  \
+         loss {first_loss:.3} -> {last_loss:.3}"
+    );
+
+    // cold-executor comparison: a fresh executor per step defeats the
+    // identity-keyed weight cache, so every step re-parses params+cb.
+    // Executors are constructed before the clock starts so only the
+    // parse cost is in the measured region.
+    let cold_steps = steps.clamp(1, 20);
+    let mut cold_exes = Vec::with_capacity(cold_steps);
+    for _ in 0..cold_steps {
+        cold_exes.push(backend.load(&format!("{preset}.train"))?);
+    }
+    let t1 = std::time::Instant::now();
+    for exe in cold_exes {
+        trainer.exe_train = exe;
+        trainer.train_on(&batcher.next_batch())?;
+    }
+    let cold_dt = t1.elapsed().as_secs_f64();
+    let cold_tok_per_sec = (cold_steps * b * w) as f64 / cold_dt;
+    println!(
+        "weight cache: warm {tok_per_sec:.0} tok/s vs cold-parse {cold_tok_per_sec:.0} tok/s \
+         ({:.2}x)",
+        tok_per_sec / cold_tok_per_sec
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("native_train")),
+        ("preset", Json::str(preset)),
+        ("batch", Json::num(b as f64)),
+        ("window", Json::num(w as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("tokens_per_sec", Json::num(tok_per_sec)),
+        ("ms_per_step", Json::num(ms_per_step)),
+        ("tokens_per_sec_cold_parse", Json::num(cold_tok_per_sec)),
+        ("first_loss", Json::num(first_loss as f64)),
+        ("last_loss", Json::num(last_loss as f64)),
+    ]);
+    std::fs::write(out_path, j.dump())?;
+    println!("wrote {out_path}");
+
+    assert!(
+        last_loss.is_finite() && last_loss < first_loss,
+        "training regressed: loss {first_loss} -> {last_loss}"
+    );
+    println!("trainbench OK: full-model training is live and converging");
+    Ok(())
+}

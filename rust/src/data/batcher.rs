@@ -65,6 +65,46 @@ impl TbpttBatcher {
         (self.span - 1) / self.window
     }
 
+    /// Stream position as (epoch, window index within the epoch) — what
+    /// checkpoints persist so a resumed run continues here.
+    pub fn position(&self) -> (usize, usize) {
+        (self.epoch, self.window_index)
+    }
+
+    /// FNV-1a over geometry and corpus content: a cheap identity for the
+    /// exact data stream. A persisted position is only meaningful on a
+    /// batcher with the same fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for x in [self.batch as u64, self.window as u64, self.tokens.len() as u64] {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        }
+        for &t in &self.tokens {
+            h ^= t as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+
+    /// Jump to a position previously returned by [`Self::position`]. The
+    /// batcher must have the same corpus/batch/window geometry as the one
+    /// that produced it.
+    pub fn seek(&mut self, epoch: usize, window_index: usize) -> anyhow::Result<()> {
+        if window_index >= self.windows_per_epoch() {
+            anyhow::bail!(
+                "batcher seek out of range: window {window_index} >= {} per epoch \
+                 (was the checkpoint written with a different corpus or geometry?)",
+                self.windows_per_epoch()
+            );
+        }
+        self.epoch = epoch;
+        self.window_index = window_index;
+        self.cursor = window_index * self.window;
+        Ok(())
+    }
+
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.window
     }
@@ -147,6 +187,23 @@ mod tests {
     #[test]
     fn too_small_corpus_errors() {
         assert!(TbpttBatcher::new(seq(10), 4, 8).is_err());
+    }
+
+    #[test]
+    fn seek_restores_stream_position() {
+        let mut a = TbpttBatcher::new(seq(1000), 2, 8).unwrap();
+        for _ in 0..5 {
+            a.next_batch();
+        }
+        let (epoch, wi) = a.position();
+        let mut b = TbpttBatcher::new(seq(1000), 2, 8).unwrap();
+        b.seek(epoch, wi).unwrap();
+        // both produce the same next window
+        assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        assert_eq!(a.position(), b.position());
+        // out-of-range window index is rejected
+        let bad = a.windows_per_epoch();
+        assert!(b.seek(0, bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,1511 @@
+//! Reverse-mode differentiation through the native training window.
+//!
+//! One forward pass over a `[B, W+1]` TBPTT window — identical in structure
+//! to the streaming `model::forward_token` recurrence (Theorem 3.7 cache +
+//! rolling 2L window) — recording an activation tape, followed by an exact
+//! reverse sweep producing `dL/dθ` for every parameter leaf, where
+//!
+//! ```text
+//! L = mean-CE + commit_coef * mean ||k - sg(k_hat)||^2        (§3.4.2)
+//! ```
+//!
+//! Gradient conventions (the paper's recipe):
+//! * **Straight-through estimator** through the quantizer: the adjoint of a
+//!   quantized key `k_hat = C[z]` is routed to the raw key `k`, as if
+//!   `k_hat = k + sg(C[z] - k)`. The codebook itself receives no gradient —
+//!   it learns by §3.4.1 EMA k-means (see `step::ema_update`).
+//! * **Commit loss** flows into the key projection: `d k += 2 c (k - C[z])/N`.
+//! * **TBPTT truncation**: window/cache entries inherited from the carry are
+//!   constants; gradients flow only to tokens inside this window.
+//!
+//! The only non-obvious piece is the compressive cache. At query time t the
+//! cache value for code c is the running mean `u_c(t) = (sum of folded
+//! values)/cnt_c(t)`, so `d v_i = sum over queries t >= T_i of
+//! p(t) g(t) / cnt_c(t)` where `T_i` is the fold time of token i. The
+//! backward sweep walks tokens in reverse keeping one adjoint accumulator
+//! per (head, code); each query adds `p g / cnt` and each fold event (met
+//! in reverse exactly after all queries that can see it) hands the
+//! accumulator to the folded token's value adjoint. Counts and `ln cnt`
+//! score offsets are assignment counts — discrete, constants.
+//!
+//! Everything here is f64: the finite-difference gradient check in the
+//! tests below runs against *this exact code*, and f64 keeps the production
+//! trainer's loss curves free of f32 accumulation drift (params/state still
+//! round-trip through f32 tensors each step, so runs stay deterministic and
+//! checkpoint-resume stays bit-exact).
+//!
+//! FD-checking a quantized model needs care: the attention path is
+//! piecewise constant in `k` (the true derivative the STE replaces), so the
+//! tests freeze the assignments and offsets captured at the center point
+//! ([`QuantMode::Frozen`]) — the surrogate whose exact gradient the STE
+//! backward computes — and finite-difference that.
+
+use std::ops::Range;
+
+use crate::manifest::ModelConfig;
+
+use super::model::{LayerParams, Params, State, TrainAccum};
+
+// ---------------------------------------------------------------------------
+// flat f64 math helpers
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// out = x @ w, with w row-major [x.len(), out.len()].
+fn matvec(w: &[f64], x: &[f64], out: &mut [f64]) {
+    let o = out.len();
+    debug_assert_eq!(w.len(), x.len() * o);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * o..(i + 1) * o];
+        for (acc, &wv) in out.iter_mut().zip(row) {
+            *acc += xi * wv;
+        }
+    }
+}
+
+/// out[i] = sum_o w[i, o] * y[o]  (the transpose product, for backward).
+fn matvec_t(w: &[f64], y: &[f64], out: &mut [f64]) {
+    let o = y.len();
+    debug_assert_eq!(w.len(), out.len() * o);
+    for (i, acc) in out.iter_mut().enumerate() {
+        *acc = dot(&w[i * o..(i + 1) * o], y);
+    }
+}
+
+/// g[i, o] += x[i] * y[o]  (outer-product gradient accumulation).
+fn outer_acc(g: &mut [f64], x: &[f64], y: &[f64]) {
+    let o = y.len();
+    debug_assert_eq!(g.len(), x.len() * o);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &mut g[i * o..(i + 1) * o];
+        for (acc, &yv) in row.iter_mut().zip(y) {
+            *acc += xi * yv;
+        }
+    }
+}
+
+fn rmsnorm(x: &[f64], gain: &[f64], out: &mut [f64]) {
+    let n = x.len().max(1) as f64;
+    let mut ss = 0.0;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / n + 1e-6).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
+}
+
+/// Backward of [`rmsnorm`]: writes dx, accumulates into dgain.
+fn rmsnorm_bwd(x: &[f64], gain: &[f64], dy: &[f64], dx: &mut [f64], dgain: &mut [f64]) {
+    let n = x.len().max(1) as f64;
+    let mut ss = 0.0;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / n + 1e-6).sqrt();
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += dy[i] * gain[i] * x[i];
+    }
+    let k = inv * inv * inv / n * s;
+    for i in 0..x.len() {
+        dgain[i] += dy[i] * x[i] * inv;
+        dx[i] = dy[i] * gain[i] * inv - x[i] * k;
+    }
+}
+
+#[inline]
+fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn dsilu(x: f64) -> f64 {
+    let sig = 1.0 / (1.0 + (-x).exp());
+    sig * (1.0 + x * (1.0 - sig))
+}
+
+fn softmax_in_place(v: &mut [f64]) {
+    let m = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for x in v.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= z;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat parameter vector (leaf order == Layout::param_leaves)
+// ---------------------------------------------------------------------------
+
+/// Offsets of every parameter leaf inside one flat vector, in the exact
+/// order of [`super::layout::Layout::param_leaves`]. The same index maps
+/// the flat gradient and the flat Adam moment vectors.
+#[derive(Debug, Clone)]
+pub(crate) struct ParamIx {
+    nl: usize,
+    dm: usize,
+    nh: usize,
+    hdk: usize,
+    hdv: usize,
+    dff: usize,
+    w2l: usize,
+    vocab: usize,
+    layer_stride: usize,
+    globals: usize,
+    total: usize,
+}
+
+impl ParamIx {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let dm = cfg.d_model;
+        let hdk = cfg.n_heads * cfg.d_k;
+        let hdv = cfg.n_heads * cfg.d_v;
+        let dff = 2 * dm;
+        let w2l = 2 * cfg.block_len;
+        let vocab = cfg.vocab_size;
+        // attn_norm, wq, wk, wv, wo, bias, ffn_norm, wg, w1, w2
+        let layer_stride = dm
+            + dm * hdk
+            + dm * hdk
+            + dm * hdv
+            + hdv * dm
+            + cfg.n_heads * w2l
+            + dm
+            + dm * dff
+            + dm * dff
+            + dff * dm;
+        let globals = cfg.n_layers * layer_stride;
+        let total = globals + vocab * dm + dm + dm * vocab + vocab;
+        Self {
+            nl: cfg.n_layers,
+            dm,
+            nh: cfg.n_heads,
+            hdk,
+            hdv,
+            dff,
+            w2l,
+            vocab,
+            layer_stride,
+            globals,
+            total,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    fn lb(&self, l: usize) -> usize {
+        debug_assert!(l < self.nl);
+        l * self.layer_stride
+    }
+
+    pub fn attn_norm(&self, l: usize) -> Range<usize> {
+        let o = self.lb(l);
+        o..o + self.dm
+    }
+
+    pub fn wq(&self, l: usize) -> Range<usize> {
+        let o = self.lb(l) + self.dm;
+        o..o + self.dm * self.hdk
+    }
+
+    pub fn wk(&self, l: usize) -> Range<usize> {
+        let o = self.wq(l).end;
+        o..o + self.dm * self.hdk
+    }
+
+    pub fn wv(&self, l: usize) -> Range<usize> {
+        let o = self.wk(l).end;
+        o..o + self.dm * self.hdv
+    }
+
+    pub fn wo(&self, l: usize) -> Range<usize> {
+        let o = self.wv(l).end;
+        o..o + self.hdv * self.dm
+    }
+
+    pub fn bias(&self, l: usize) -> Range<usize> {
+        let o = self.wo(l).end;
+        o..o + self.nh * self.w2l
+    }
+
+    pub fn ffn_norm(&self, l: usize) -> Range<usize> {
+        let o = self.bias(l).end;
+        o..o + self.dm
+    }
+
+    pub fn wg(&self, l: usize) -> Range<usize> {
+        let o = self.ffn_norm(l).end;
+        o..o + self.dm * self.dff
+    }
+
+    pub fn w1(&self, l: usize) -> Range<usize> {
+        let o = self.wg(l).end;
+        o..o + self.dm * self.dff
+    }
+
+    pub fn w2(&self, l: usize) -> Range<usize> {
+        let o = self.w1(l).end;
+        o..o + self.dff * self.dm
+    }
+
+    pub fn embed(&self) -> Range<usize> {
+        self.globals..self.globals + self.vocab * self.dm
+    }
+
+    pub fn out_norm(&self) -> Range<usize> {
+        let o = self.embed().end;
+        o..o + self.dm
+    }
+
+    pub fn wout(&self) -> Range<usize> {
+        let o = self.out_norm().end;
+        o..o + self.dm * self.vocab
+    }
+
+    pub fn bout(&self) -> Range<usize> {
+        let o = self.wout().end;
+        o..o + self.vocab
+    }
+
+    /// (label, range) for every leaf, in leaf order — for tests/diagnostics.
+    pub fn leaves(&self) -> Vec<(String, Range<usize>)> {
+        let mut out = Vec::new();
+        for l in 0..self.nl {
+            out.push((format!("l{l}.attn_norm"), self.attn_norm(l)));
+            out.push((format!("l{l}.wq"), self.wq(l)));
+            out.push((format!("l{l}.wk"), self.wk(l)));
+            out.push((format!("l{l}.wv"), self.wv(l)));
+            out.push((format!("l{l}.wo"), self.wo(l)));
+            out.push((format!("l{l}.bias"), self.bias(l)));
+            out.push((format!("l{l}.ffn_norm"), self.ffn_norm(l)));
+            out.push((format!("l{l}.wg"), self.wg(l)));
+            out.push((format!("l{l}.w1"), self.w1(l)));
+            out.push((format!("l{l}.w2"), self.w2(l)));
+        }
+        out.push(("embed".into(), self.embed()));
+        out.push(("out_norm".into(), self.out_norm()));
+        out.push(("wout".into(), self.wout()));
+        out.push(("bout".into(), self.bout()));
+        out
+    }
+}
+
+/// Concatenate a [`Params`] into the flat f64 vector (ParamIx order).
+pub(crate) fn flatten_params(p: &Params) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut push = |v: &[f32]| out.extend(v.iter().map(|&x| x as f64));
+    for lp in &p.layers {
+        push(&lp.attn_norm);
+        push(&lp.wq);
+        push(&lp.wk);
+        push(&lp.wv);
+        push(&lp.wo);
+        push(&lp.bias);
+        push(&lp.ffn_norm);
+        push(&lp.wg);
+        push(&lp.w1);
+        push(&lp.w2);
+    }
+    push(&p.embed);
+    push(&p.out_norm);
+    push(&p.wout);
+    push(&p.bout);
+    out
+}
+
+/// Split a flat f64 vector back into [`Params`] leaves (rounded to f32).
+pub(crate) fn unflatten_params(px: &ParamIx, flat: &[f64]) -> Params {
+    debug_assert_eq!(flat.len(), px.total());
+    let take = |r: Range<usize>| flat[r].iter().map(|&x| x as f32).collect::<Vec<f32>>();
+    Params {
+        layers: (0..px.nl)
+            .map(|l| LayerParams {
+                attn_norm: take(px.attn_norm(l)),
+                wq: take(px.wq(l)),
+                wk: take(px.wk(l)),
+                wv: take(px.wv(l)),
+                wo: take(px.wo(l)),
+                bias: take(px.bias(l)),
+                ffn_norm: take(px.ffn_norm(l)),
+                wg: take(px.wg(l)),
+                w1: take(px.w1(l)),
+                w2: take(px.w2(l)),
+            })
+            .collect(),
+        embed: take(px.embed()),
+        out_norm: take(px.out_norm()),
+        wout: take(px.wout()),
+        bout: take(px.bout()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 carry state (mirror of model::State)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub(crate) struct LayerCarry64 {
+    pub win_k: Vec<f64>,   // [B, 2L, H, dk]
+    pub win_v: Vec<f64>,   // [B, 2L, H, dv]
+    pub win_z: Vec<i32>,   // [B, 2L, H]
+    pub cache_u: Vec<f64>, // [B, H, S, dv]
+    pub cache_l: Vec<f64>, // [B, H, S]
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Carry64 {
+    pub pos: Vec<i32>, // [B]
+    pub layers: Vec<LayerCarry64>,
+}
+
+impl Carry64 {
+    pub fn from_state(st: &State) -> Self {
+        let up = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        Self {
+            pos: st.pos.clone(),
+            layers: st
+                .layers
+                .iter()
+                .map(|l| LayerCarry64 {
+                    win_k: up(&l.win_k),
+                    win_v: up(&l.win_v),
+                    win_z: l.win_z.clone(),
+                    cache_u: up(&l.cache_u),
+                    cache_l: up(&l.cache_l),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn write_state(&self, st: &mut State) {
+        let down = |src: &[f64], dst: &mut Vec<f32>| {
+            dst.clear();
+            dst.extend(src.iter().map(|&x| x as f32));
+        };
+        st.pos = self.pos.clone();
+        for (l64, lst) in self.layers.iter().zip(st.layers.iter_mut()) {
+            down(&l64.win_k, &mut lst.win_k);
+            down(&l64.win_v, &mut lst.win_v);
+            lst.win_z = l64.win_z.clone();
+            down(&l64.cache_u, &mut lst.cache_u);
+            down(&l64.cache_l, &mut lst.cache_l);
+        }
+    }
+
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        let (b, h, s) = (cfg.batch_size, cfg.n_heads, cfg.n_code);
+        let w2l = 2 * cfg.block_len;
+        Self {
+            pos: vec![0; b],
+            layers: (0..cfg.n_layers)
+                .map(|_| LayerCarry64 {
+                    win_k: vec![0.0; b * w2l * h * cfg.d_k],
+                    win_v: vec![0.0; b * w2l * h * cfg.d_v],
+                    win_z: vec![0; b * w2l * h],
+                    cache_u: vec![0.0; b * h * s * cfg.d_v],
+                    cache_l: vec![0.0; b * h * s],
+                })
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantizer modes (Frozen/Capture exist for the FD gradient check)
+// ---------------------------------------------------------------------------
+
+/// Frozen quantizer decisions: assignments `z` and offsets `k_hat - k`
+/// captured at a center point. `QuantMode::Frozen` replays them so the
+/// forward becomes differentiable in the keys — the exact function whose
+/// gradient the straight-through backward computes.
+#[cfg_attr(not(test), allow(dead_code))]
+#[derive(Debug, Clone)]
+pub(crate) struct FrozenQuant {
+    /// [B, W, nl, H] assignments.
+    pub z: Vec<usize>,
+    /// [B, W, nl, H, dk] offsets.
+    pub off: Vec<f64>,
+}
+
+#[cfg_attr(not(test), allow(dead_code))]
+impl FrozenQuant {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let n = cfg.batch_size * cfg.window_len * cfg.n_layers * cfg.n_heads;
+        Self { z: vec![0; n], off: vec![0.0; n * cfg.d_k] }
+    }
+
+    #[inline]
+    fn ix(&self, cfg: &ModelConfig, row: usize, t: usize, l: usize, hd: usize) -> usize {
+        ((row * cfg.window_len + t) * cfg.n_layers + l) * cfg.n_heads + hd
+    }
+}
+
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) enum QuantMode<'a> {
+    /// Production: nearest-codebook-row assignment (Definition 2.1).
+    Nearest,
+    /// Nearest assignment, recording `z`/offsets into the given buffer.
+    Capture(&'a mut FrozenQuant),
+    /// Replay frozen assignments/offsets (FD surrogate; see module docs).
+    Frozen(&'a FrozenQuant),
+}
+
+// ---------------------------------------------------------------------------
+// activation tape (one batch row)
+// ---------------------------------------------------------------------------
+
+/// Attention source at one query: a compressive-cache code (with the cache
+/// snapshot era current at the query) or an exact window slot at absolute
+/// position `j`.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    Cache { code: usize, era: usize },
+    Win { j: usize },
+}
+
+struct HeadRec {
+    probs: Vec<f64>,
+    srcs: Vec<Src>,
+}
+
+struct FoldItem {
+    hd: usize,
+    code: usize,
+    /// In-window token index whose value was folded; None = carry (const).
+    vsrc: Option<usize>,
+}
+
+struct FoldEvent {
+    t: usize,
+    items: Vec<FoldItem>,
+}
+
+/// Cache contents after `era` fold events (era 0 = the incoming carry).
+struct CacheSnap {
+    u: Vec<f64>,   // [H, S, dv] running value means
+    cnt: Vec<f64>, // [H, S] assignment counts
+}
+
+/// Everything the backward sweep needs, for one batch row.
+struct RowTape {
+    pos0: usize,
+    // per (t, layer), flattened t * nl + l
+    x_in: Vec<f64>,  // [W, nl, dm]
+    h: Vec<f64>,     // [W, nl, dm]
+    q: Vec<f64>,     // [W, nl, H*dk] (scaled)
+    k: Vec<f64>,     // [W, nl, H*dk] (raw)
+    khat: Vec<f64>,  // [W, nl, H*dk] (quantized / identity for dense)
+    zs: Vec<usize>,  // [W, nl, H]
+    v: Vec<f64>,     // [W, nl, H*dv]
+    attn: Vec<f64>,  // [W, nl, H*dv]
+    x_mid: Vec<f64>, // [W, nl, dm]
+    h2: Vec<f64>,    // [W, nl, dm]
+    gpre: Vec<f64>,  // [W, nl, dff]
+    u1: Vec<f64>,    // [W, nl, dff]
+    gated: Vec<f64>, // [W, nl, dff]
+    // per token
+    x_fin: Vec<f64>, // [W, dm]
+    y: Vec<f64>,     // [W, dm]
+    probs: Vec<f64>, // [W, V] softmax over logits
+    targets: Vec<usize>,
+    heads: Vec<HeadRec>, // [W, nl, H]
+    // per layer
+    snaps: Vec<Vec<CacheSnap>>,
+    folds: Vec<Vec<FoldEvent>>,
+    init_win_k: Vec<Vec<f64>>, // [2L, H, dk] carry window at window start
+    init_win_v: Vec<Vec<f64>>, // [2L, H, dv]
+}
+
+impl RowTape {
+    fn new(cfg: &ModelConfig) -> Self {
+        let (w, nl, dm) = (cfg.window_len, cfg.n_layers, cfg.d_model);
+        let hdk = cfg.n_heads * cfg.d_k;
+        let hdv = cfg.n_heads * cfg.d_v;
+        let dff = 2 * dm;
+        Self {
+            pos0: 0,
+            x_in: vec![0.0; w * nl * dm],
+            h: vec![0.0; w * nl * dm],
+            q: vec![0.0; w * nl * hdk],
+            k: vec![0.0; w * nl * hdk],
+            khat: vec![0.0; w * nl * hdk],
+            zs: vec![0; w * nl * cfg.n_heads],
+            v: vec![0.0; w * nl * hdv],
+            attn: vec![0.0; w * nl * hdv],
+            x_mid: vec![0.0; w * nl * dm],
+            h2: vec![0.0; w * nl * dm],
+            gpre: vec![0.0; w * nl * dff],
+            u1: vec![0.0; w * nl * dff],
+            gated: vec![0.0; w * nl * dff],
+            x_fin: vec![0.0; w * dm],
+            y: vec![0.0; w * dm],
+            probs: vec![0.0; w * cfg.vocab_size],
+            targets: vec![0; w],
+            heads: (0..w * nl * cfg.n_heads)
+                .map(|_| HeadRec { probs: Vec::new(), srcs: Vec::new() })
+                .collect(),
+            snaps: (0..nl).map(|_| Vec::new()).collect(),
+            folds: (0..nl).map(|_| Vec::new()).collect(),
+            init_win_k: (0..nl).map(|_| Vec::new()).collect(),
+            init_win_v: (0..nl).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forward + backward
+// ---------------------------------------------------------------------------
+
+pub(crate) struct BackpropOut {
+    /// Mean cross-entropy, nats/token.
+    pub ce: f64,
+    /// Mean per-(token, head) commitment term.
+    pub commit: f64,
+    /// dL/dθ, flat in [`ParamIx`] order.
+    pub grads: Vec<f64>,
+    /// §3.4.1 EMA statistics + commit sums (same as the streaming forward).
+    pub accum: TrainAccum,
+}
+
+/// Run the differentiable training window: full forward (advancing `carry`
+/// exactly like the streaming engine) + reverse sweep. `tokens` is the
+/// `[B, W+1]` window; the dense "full" preset path (quadratic in-window
+/// attention, no quantizer/cache/bias) is selected by `cfg.attn_type`.
+pub(crate) fn train_forward_backward(
+    cfg: &ModelConfig,
+    px: &ParamIx,
+    params: &[f64],
+    cb: &[Vec<f64>],
+    carry: &mut Carry64,
+    tokens: &[i32],
+    mut quant: QuantMode<'_>,
+) -> BackpropOut {
+    debug_assert_eq!(params.len(), px.total());
+    let w = cfg.window_len;
+    let b = cfg.batch_size;
+    debug_assert_eq!(tokens.len(), b * (w + 1));
+    let dense = cfg.attn_type == "full";
+    let mut grads = vec![0.0; px.total()];
+    let mut accum = TrainAccum::new(cfg);
+    let mut ce_sum = 0.0;
+    let n_tok = (b * w) as f64;
+    let commit_n = (b * w * cfg.n_heads) as f64;
+
+    for row in 0..b {
+        let toks = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
+        let tape =
+            forward_row(cfg, px, params, cb, carry, row, toks, &mut quant, &mut accum, dense);
+        for t in 0..w {
+            let pr = tape.probs[t * cfg.vocab_size + tape.targets[t]];
+            ce_sum -= pr.max(1e-300).ln();
+        }
+        backward_row(cfg, px, params, cb, &tape, toks, &mut grads, n_tok, commit_n, dense);
+    }
+
+    let commit = if accum.commit_n > 0.0 { accum.commit_sum / accum.commit_n } else { 0.0 };
+    BackpropOut { ce: ce_sum / n_tok, commit, grads, accum }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_row(
+    cfg: &ModelConfig,
+    px: &ParamIx,
+    params: &[f64],
+    cb: &[Vec<f64>],
+    carry: &mut Carry64,
+    row: usize,
+    toks: &[i32],
+    quant: &mut QuantMode<'_>,
+    accum: &mut TrainAccum,
+    dense: bool,
+) -> RowTape {
+    let w = cfg.window_len;
+    let nl = cfg.n_layers;
+    let dm = cfg.d_model;
+    let h_n = cfg.n_heads;
+    let (dk, dv, s, l_blk) = (cfg.d_k, cfg.d_v, cfg.n_code, cfg.block_len);
+    let w2l = 2 * l_blk;
+    let v_sz = cfg.vocab_size;
+    let (hdk, hdv, dff) = (h_n * dk, h_n * dv, 2 * dm);
+    let q_scale = 1.0 / (dk as f64).sqrt();
+
+    let mut tape = RowTape::new(cfg);
+    let pos0 = carry.pos[row].max(0) as usize;
+    tape.pos0 = pos0;
+    if !dense {
+        for l in 0..nl {
+            let lst = &carry.layers[l];
+            tape.init_win_k[l] = lst.win_k[row * w2l * hdk..(row + 1) * w2l * hdk].to_vec();
+            tape.init_win_v[l] = lst.win_v[row * w2l * hdv..(row + 1) * w2l * hdv].to_vec();
+            tape.snaps[l].push(CacheSnap {
+                u: lst.cache_u[row * h_n * s * dv..(row + 1) * h_n * s * dv].to_vec(),
+                cnt: lst.cache_l[row * h_n * s..(row + 1) * h_n * s].to_vec(),
+            });
+        }
+    }
+
+    let mut x = vec![0.0; dm];
+    for t in 0..w {
+        let pos = pos0 + t;
+        let n_blk = pos / l_blk;
+        let li = pos % l_blk;
+        let tok = (toks[t].max(0) as usize).min(v_sz - 1);
+        x.copy_from_slice(&params[px.embed()][tok * dm..(tok + 1) * dm]);
+
+        for l in 0..nl {
+            let tl = t * nl + l;
+            tape.x_in[tl * dm..(tl + 1) * dm].copy_from_slice(&x);
+            {
+                let (h, q, k, v) = (
+                    &mut tape.h[tl * dm..(tl + 1) * dm],
+                    &mut tape.q[tl * hdk..(tl + 1) * hdk],
+                    &mut tape.k[tl * hdk..(tl + 1) * hdk],
+                    &mut tape.v[tl * hdv..(tl + 1) * hdv],
+                );
+                rmsnorm(&x, &params[px.attn_norm(l)], h);
+                matvec(&params[px.wq(l)], h, q);
+                matvec(&params[px.wk(l)], h, k);
+                matvec(&params[px.wv(l)], h, v);
+                for qv in q.iter_mut() {
+                    *qv *= q_scale;
+                }
+            }
+
+            if !dense {
+                // quantize per head (nearest / capture / frozen)
+                for hd in 0..h_n {
+                    let kh = &tape.k[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
+                    let head_cb = &cb[l][hd * s * dk..(hd + 1) * s * dk];
+                    let (z, khat): (usize, Vec<f64>) = match quant {
+                        QuantMode::Nearest | QuantMode::Capture(_) => {
+                            let z = nearest_code(kh, head_cb, s, dk);
+                            (z, head_cb[z * dk..(z + 1) * dk].to_vec())
+                        }
+                        QuantMode::Frozen(fr) => {
+                            let fi = fr.ix(cfg, row, t, l, hd);
+                            let z = fr.z[fi];
+                            let kh_off = &fr.off[fi * dk..(fi + 1) * dk];
+                            (z, kh.iter().zip(kh_off).map(|(a, b)| a + b).collect())
+                        }
+                    };
+                    if let QuantMode::Capture(fr) = quant {
+                        let fi = fr.ix(cfg, row, t, l, hd);
+                        fr.z[fi] = z;
+                        for (o, (a, b)) in
+                            fr.off[fi * dk..(fi + 1) * dk].iter_mut().zip(khat.iter().zip(kh))
+                        {
+                            *o = a - b;
+                        }
+                    }
+                    tape.zs[tl * h_n + hd] = z;
+                    tape.khat[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk]
+                        .copy_from_slice(&khat);
+                    // EMA statistics + commitment (against the true row z)
+                    let c_row = &cb[l][(hd * s + z) * dk..(hd * s + z + 1) * dk];
+                    let mut d2 = 0.0;
+                    for (a, bb) in kh.iter().zip(c_row) {
+                        d2 += (a - bb) * (a - bb);
+                    }
+                    accum.commit_sum += d2;
+                    accum.commit_n += 1.0;
+                    accum.code_counts[l][hd * s + z] += 1.0;
+                    let sums = &mut accum.key_sums[l][(hd * s + z) * dk..(hd * s + z + 1) * dk];
+                    for (sv, &kv) in sums.iter_mut().zip(kh) {
+                        *sv += kv;
+                    }
+                }
+
+                let lst = &mut carry.layers[l];
+                // fold block n-2 into the compressive cache (Remark 3.9)
+                if cfg.use_cache && li == 0 && n_blk >= 2 {
+                    let start = (n_blk - 2) * l_blk;
+                    let mut items = Vec::with_capacity(l_blk * h_n);
+                    for j in start..start + l_blk {
+                        let slot = j % w2l;
+                        for hd in 0..h_n {
+                            let win_ix = (row * w2l + slot) * h_n + hd;
+                            let zc = lst.win_z[win_ix].max(0) as usize % s;
+                            let cl_ix = (row * h_n + hd) * s + zc;
+                            let cnt = lst.cache_l[cl_ix] + 1.0;
+                            let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
+                            let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
+                            for (uu, &vv) in u.iter_mut().zip(val) {
+                                *uu += (vv - *uu) / cnt;
+                            }
+                            lst.cache_l[cl_ix] = cnt;
+                            items.push(FoldItem {
+                                hd,
+                                code: zc,
+                                vsrc: if j >= pos0 { Some(j - pos0) } else { None },
+                            });
+                        }
+                    }
+                    tape.snaps[l].push(CacheSnap {
+                        u: lst.cache_u[row * h_n * s * dv..(row + 1) * h_n * s * dv].to_vec(),
+                        cnt: lst.cache_l[row * h_n * s..(row + 1) * h_n * s].to_vec(),
+                    });
+                    tape.folds[l].push(FoldEvent { t, items });
+                }
+
+                // write the current token into its window slot
+                let slot = pos % w2l;
+                for hd in 0..h_n {
+                    let win_ix = (row * w2l + slot) * h_n + hd;
+                    lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(
+                        &tape.khat[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk],
+                    );
+                    lst.win_v[win_ix * dv..(win_ix + 1) * dv]
+                        .copy_from_slice(&tape.v[tl * hdv + hd * dv..tl * hdv + (hd + 1) * dv]);
+                    lst.win_z[win_ix] = tape.zs[tl * h_n + hd] as i32;
+                }
+
+                // attention: cache scores + exact window
+                let era = tape.snaps[l].len() - 1;
+                let lo = if n_blk == 0 { 0 } else { (n_blk - 1) * l_blk };
+                for hd in 0..h_n {
+                    let qh = &tape.q[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
+                    let mut scores: Vec<f64> = Vec::with_capacity(s + w2l);
+                    let mut srcs: Vec<Src> = Vec::with_capacity(s + w2l);
+                    if cfg.use_cache {
+                        for code in 0..s {
+                            let cl_ix = (row * h_n + hd) * s + code;
+                            let cl = lst.cache_l[cl_ix];
+                            if cl > 0.0 {
+                                let crow = &cb[l][(hd * s + code) * dk..(hd * s + code + 1) * dk];
+                                scores.push(dot(qh, crow) + cl.ln());
+                                srcs.push(Src::Cache { code, era });
+                            }
+                        }
+                    }
+                    let bias = &params[px.bias(l)];
+                    for j in lo..=pos {
+                        let win_ix = (row * w2l + j % w2l) * h_n + hd;
+                        let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
+                        scores.push(dot(qh, kw) + bias[hd * w2l + (pos - j)]);
+                        srcs.push(Src::Win { j });
+                    }
+                    softmax_in_place(&mut scores);
+                    let out_h = &mut tape.attn[tl * hdv + hd * dv..tl * hdv + (hd + 1) * dv];
+                    for (&p_i, &src) in scores.iter().zip(&srcs) {
+                        let val = match src {
+                            Src::Cache { code, .. } => {
+                                let cl_ix = (row * h_n + hd) * s + code;
+                                &lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv]
+                            }
+                            Src::Win { j } => {
+                                let win_ix = (row * w2l + j % w2l) * h_n + hd;
+                                &lst.win_v[win_ix * dv..(win_ix + 1) * dv]
+                            }
+                        };
+                        for (o, &vv) in out_h.iter_mut().zip(val) {
+                            *o += p_i * vv;
+                        }
+                    }
+                    tape.heads[tl * h_n + hd] = HeadRec { probs: scores, srcs };
+                }
+            } else {
+                // dense "Full" baseline: causal quadratic attention within
+                // the window, raw keys, no bias, no cross-window memory
+                tape.khat[tl * hdk..(tl + 1) * hdk]
+                    .copy_from_slice(&tape.k[tl * hdk..(tl + 1) * hdk]);
+                for hd in 0..h_n {
+                    let qh = &tape.q[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
+                    let mut scores: Vec<f64> = Vec::with_capacity(t + 1);
+                    let mut srcs: Vec<Src> = Vec::with_capacity(t + 1);
+                    for j in 0..=t {
+                        let jl = j * nl + l;
+                        let kj = &tape.k[jl * hdk + hd * dk..jl * hdk + (hd + 1) * dk];
+                        scores.push(dot(qh, kj));
+                        srcs.push(Src::Win { j });
+                    }
+                    softmax_in_place(&mut scores);
+                    let mut out_h = vec![0.0; dv];
+                    for (&p_i, &src) in scores.iter().zip(&srcs) {
+                        let Src::Win { j } = src else { unreachable!() };
+                        let jl = j * nl + l;
+                        let vj = &tape.v[jl * hdv + hd * dv..jl * hdv + (hd + 1) * dv];
+                        for (o, &vv) in out_h.iter_mut().zip(vj) {
+                            *o += p_i * vv;
+                        }
+                    }
+                    tape.attn[tl * hdv + hd * dv..tl * hdv + (hd + 1) * dv]
+                        .copy_from_slice(&out_h);
+                    tape.heads[tl * h_n + hd] = HeadRec { probs: scores, srcs };
+                }
+            }
+
+            // residual + gated FFN
+            let attn_t = &tape.attn[tl * hdv..(tl + 1) * hdv];
+            let mut delta = vec![0.0; dm];
+            matvec(&params[px.wo(l)], attn_t, &mut delta);
+            for (xv, &d) in x.iter_mut().zip(&delta) {
+                *xv += d;
+            }
+            tape.x_mid[tl * dm..(tl + 1) * dm].copy_from_slice(&x);
+            {
+                let (h2, gpre, u1, gated) = (
+                    &mut tape.h2[tl * dm..(tl + 1) * dm],
+                    &mut tape.gpre[tl * dff..(tl + 1) * dff],
+                    &mut tape.u1[tl * dff..(tl + 1) * dff],
+                    &mut tape.gated[tl * dff..(tl + 1) * dff],
+                );
+                rmsnorm(&x, &params[px.ffn_norm(l)], h2);
+                matvec(&params[px.wg(l)], h2, gpre);
+                matvec(&params[px.w1(l)], h2, u1);
+                for ((g, &gp), &u) in gated.iter_mut().zip(gpre.iter()).zip(u1.iter()) {
+                    *g = silu(gp) * u;
+                }
+            }
+            let gated_t = &tape.gated[tl * dff..(tl + 1) * dff];
+            matvec(&params[px.w2(l)], gated_t, &mut delta);
+            for (xv, &d) in x.iter_mut().zip(&delta) {
+                *xv += d;
+            }
+        }
+
+        tape.x_fin[t * dm..(t + 1) * dm].copy_from_slice(&x);
+        {
+            let y = &mut tape.y[t * dm..(t + 1) * dm];
+            rmsnorm(&x, &params[px.out_norm()], y);
+            let logits = &mut tape.probs[t * v_sz..(t + 1) * v_sz];
+            logits.copy_from_slice(&params[px.bout()]);
+            let wout = &params[px.wout()];
+            for (i, &yi) in y.iter().enumerate() {
+                if yi == 0.0 {
+                    continue;
+                }
+                let wrow = &wout[i * v_sz..(i + 1) * v_sz];
+                for (lg, &wv) in logits.iter_mut().zip(wrow) {
+                    *lg += yi * wv;
+                }
+            }
+            softmax_in_place(logits);
+        }
+        tape.targets[t] = (toks[t + 1].max(0) as usize).min(v_sz - 1);
+    }
+    carry.pos[row] = (pos0 + w) as i32;
+    tape
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_row(
+    cfg: &ModelConfig,
+    px: &ParamIx,
+    params: &[f64],
+    cb: &[Vec<f64>],
+    tape: &RowTape,
+    toks: &[i32],
+    grads: &mut [f64],
+    n_tok: f64,
+    commit_n: f64,
+    dense: bool,
+) {
+    let w = cfg.window_len;
+    let nl = cfg.n_layers;
+    let dm = cfg.d_model;
+    let h_n = cfg.n_heads;
+    let (dk, dv, s, l_blk) = (cfg.d_k, cfg.d_v, cfg.n_code, cfg.block_len);
+    let w2l = 2 * l_blk;
+    let v_sz = cfg.vocab_size;
+    let (hdk, hdv, dff) = (h_n * dk, h_n * dv, 2 * dm);
+    let q_scale = 1.0 / (dk as f64).sqrt();
+    let pos0 = tape.pos0;
+
+    // cross-token adjoints: quantized keys (STE -> raw keys), values, and
+    // the per-(head, code) compressive-cache accumulator (see module docs)
+    let mut d_k: Vec<Vec<f64>> = (0..nl).map(|_| vec![0.0; w * hdk]).collect();
+    let mut d_v: Vec<Vec<f64>> = (0..nl).map(|_| vec![0.0; w * hdv]).collect();
+    let mut cache_adj: Vec<Vec<f64>> = (0..nl).map(|_| vec![0.0; h_n * s * dv]).collect();
+
+    let mut dlogits = vec![0.0; v_sz];
+    let mut dy = vec![0.0; dm];
+    let mut dx = vec![0.0; dm];
+    let mut dxn = vec![0.0; dm];
+    let mut dgated = vec![0.0; dff];
+    let mut dgpre = vec![0.0; dff];
+    let mut du1 = vec![0.0; dff];
+    let mut dh2 = vec![0.0; dm];
+    let mut dxmid = vec![0.0; dm];
+    let mut dattn = vec![0.0; hdv];
+    let mut dq = vec![0.0; hdk];
+    let mut dh = vec![0.0; dm];
+    let mut dk_t = vec![0.0; hdk];
+
+    for t in (0..w).rev() {
+        let pos = pos0 + t;
+        let tok = (toks[t].max(0) as usize).min(v_sz - 1);
+
+        // readout + final norm
+        let probs = &tape.probs[t * v_sz..(t + 1) * v_sz];
+        for (d, &p) in dlogits.iter_mut().zip(probs) {
+            *d = p / n_tok;
+        }
+        dlogits[tape.targets[t]] -= 1.0 / n_tok;
+        let y = &tape.y[t * dm..(t + 1) * dm];
+        for (g, &d) in grads[px.bout()].iter_mut().zip(&dlogits) {
+            *g += d;
+        }
+        outer_acc(&mut grads[px.wout()], y, &dlogits);
+        matvec_t(&params[px.wout()], &dlogits, &mut dy);
+        {
+            let x_fin = &tape.x_fin[t * dm..(t + 1) * dm];
+            rmsnorm_bwd(
+                x_fin,
+                &params[px.out_norm()],
+                &dy,
+                &mut dx,
+                &mut grads[px.out_norm()],
+            );
+        }
+
+        for l in (0..nl).rev() {
+            let tl = t * nl + l;
+            // --- gated FFN backward ---------------------------------------
+            let gated = &tape.gated[tl * dff..(tl + 1) * dff];
+            matvec_t(&params[px.w2(l)], &dx, &mut dgated);
+            outer_acc(&mut grads[px.w2(l)], gated, &dx);
+            let gpre = &tape.gpre[tl * dff..(tl + 1) * dff];
+            let u1 = &tape.u1[tl * dff..(tl + 1) * dff];
+            for i in 0..dff {
+                dgpre[i] = dgated[i] * u1[i] * dsilu(gpre[i]);
+                du1[i] = dgated[i] * silu(gpre[i]);
+            }
+            matvec_t(&params[px.wg(l)], &dgpre, &mut dh2);
+            {
+                let mut tmp = vec![0.0; dm];
+                matvec_t(&params[px.w1(l)], &du1, &mut tmp);
+                for (a, &b) in dh2.iter_mut().zip(&tmp) {
+                    *a += b;
+                }
+            }
+            let h2_in = &tape.h2[tl * dm..(tl + 1) * dm];
+            outer_acc(&mut grads[px.wg(l)], h2_in, &dgpre);
+            outer_acc(&mut grads[px.w1(l)], h2_in, &du1);
+            let x_mid = &tape.x_mid[tl * dm..(tl + 1) * dm];
+            rmsnorm_bwd(
+                x_mid,
+                &params[px.ffn_norm(l)],
+                &dh2,
+                &mut dxn,
+                &mut grads[px.ffn_norm(l)],
+            );
+            for i in 0..dm {
+                dxmid[i] = dx[i] + dxn[i];
+            }
+
+            // --- attention output projection ------------------------------
+            matvec_t(&params[px.wo(l)], &dxmid, &mut dattn);
+            let attn_t = &tape.attn[tl * hdv..(tl + 1) * hdv];
+            outer_acc(&mut grads[px.wo(l)], attn_t, &dxmid);
+
+            // --- softmax attention backward, per head ---------------------
+            dq.fill(0.0);
+            for hd in 0..h_n {
+                let g = &dattn[hd * dv..(hd + 1) * dv];
+                let rec = &tape.heads[tl * h_n + hd];
+                let n_src = rec.srcs.len();
+                // g . val_i per source
+                let mut dots = vec![0.0; n_src];
+                for (i, &src) in rec.srcs.iter().enumerate() {
+                    let val: &[f64] = match src {
+                        Src::Cache { code, era } => {
+                            let u = &tape.snaps[l][era].u;
+                            &u[(hd * s + code) * dv..(hd * s + code + 1) * dv]
+                        }
+                        Src::Win { j } => {
+                            if dense || j >= pos0 {
+                                let jw = if dense { j } else { j - pos0 };
+                                let jl = jw * nl + l;
+                                &tape.v[jl * hdv + hd * dv..jl * hdv + (hd + 1) * dv]
+                            } else {
+                                let win_ix = (j % w2l) * h_n + hd;
+                                &tape.init_win_v[l][win_ix * dv..(win_ix + 1) * dv]
+                            }
+                        }
+                    };
+                    dots[i] = dot(g, val);
+                }
+                let mut sdot = 0.0;
+                for (i, &p_i) in rec.probs.iter().enumerate() {
+                    sdot += p_i * dots[i];
+                }
+                let dq_h = &mut dq[hd * dk..(hd + 1) * dk];
+                for (i, &src) in rec.srcs.iter().enumerate() {
+                    let p_i = rec.probs[i];
+                    let ds = p_i * (dots[i] - sdot);
+                    match src {
+                        Src::Cache { code, era } => {
+                            let cnt = tape.snaps[l][era].cnt[hd * s + code];
+                            let adj = &mut cache_adj[l]
+                                [(hd * s + code) * dv..(hd * s + code + 1) * dv];
+                            for (a, &gv) in adj.iter_mut().zip(g) {
+                                *a += p_i * gv / cnt;
+                            }
+                            let crow = &cb[l][(hd * s + code) * dk..(hd * s + code + 1) * dk];
+                            for (d, &c) in dq_h.iter_mut().zip(crow) {
+                                *d += ds * c;
+                            }
+                        }
+                        Src::Win { j } => {
+                            let khat: &[f64] = if dense || j >= pos0 {
+                                let jw = if dense { j } else { j - pos0 };
+                                let jl = jw * nl + l;
+                                &tape.khat[jl * hdk + hd * dk..jl * hdk + (hd + 1) * dk]
+                            } else {
+                                let win_ix = (j % w2l) * h_n + hd;
+                                &tape.init_win_k[l][win_ix * dk..(win_ix + 1) * dk]
+                            };
+                            for (d, &kv) in dq_h.iter_mut().zip(khat) {
+                                *d += ds * kv;
+                            }
+                            if !dense {
+                                grads[px.bias(l)][hd * w2l + (pos - j)] += ds;
+                            }
+                            if dense || j >= pos0 {
+                                let jw = if dense { j } else { j - pos0 };
+                                let qh = &tape.q[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
+                                let dkj = &mut d_k[l][jw * hdk + hd * dk..jw * hdk + (hd + 1) * dk];
+                                for (d, &qv) in dkj.iter_mut().zip(qh) {
+                                    *d += ds * qv;
+                                }
+                                let dvj = &mut d_v[l][jw * hdv + hd * dv..jw * hdv + (hd + 1) * dv];
+                                for (d, &gv) in dvj.iter_mut().zip(g) {
+                                    *d += p_i * gv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- fold events at this token: hand cache adjoints to the
+            //     folded values (reverse order => exactly the queries that
+            //     could see them have contributed)
+            if !dense {
+                for ev in &tape.folds[l] {
+                    if ev.t != t {
+                        continue;
+                    }
+                    for item in &ev.items {
+                        if let Some(jw) = item.vsrc {
+                            let adj = &cache_adj[l]
+                                [(item.hd * s + item.code) * dv..(item.hd * s + item.code + 1) * dv];
+                            let dvj = &mut d_v[l]
+                                [jw * hdv + item.hd * dv..jw * hdv + (item.hd + 1) * dv];
+                            for (d, &a) in dvj.iter_mut().zip(adj) {
+                                *d += a;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- projections backward -------------------------------------
+            let h_in = &tape.h[tl * dm..(tl + 1) * dm];
+            for d in dq.iter_mut() {
+                *d *= q_scale;
+            }
+            outer_acc(&mut grads[px.wq(l)], h_in, &dq);
+            matvec_t(&params[px.wq(l)], &dq, &mut dh);
+
+            dk_t.copy_from_slice(&d_k[l][t * hdk..(t + 1) * hdk]);
+            if !dense {
+                // commitment gradient into the raw keys
+                let cc = 2.0 * cfg.commit_coef / commit_n;
+                for hd in 0..h_n {
+                    let z = tape.zs[tl * h_n + hd];
+                    let crow = &cb[l][(hd * s + z) * dk..(hd * s + z + 1) * dk];
+                    let kh = &tape.k[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
+                    let dk_h = &mut dk_t[hd * dk..(hd + 1) * dk];
+                    for ((d, &kv), &c) in dk_h.iter_mut().zip(kh).zip(crow) {
+                        *d += cc * (kv - c);
+                    }
+                }
+            }
+            outer_acc(&mut grads[px.wk(l)], h_in, &dk_t);
+            {
+                let mut tmp = vec![0.0; dm];
+                matvec_t(&params[px.wk(l)], &dk_t, &mut tmp);
+                for (a, &b) in dh.iter_mut().zip(&tmp) {
+                    *a += b;
+                }
+            }
+            let dv_t = &d_v[l][t * hdv..(t + 1) * hdv];
+            outer_acc(&mut grads[px.wv(l)], h_in, dv_t);
+            {
+                let mut tmp = vec![0.0; dm];
+                matvec_t(&params[px.wv(l)], dv_t, &mut tmp);
+                for (a, &b) in dh.iter_mut().zip(&tmp) {
+                    *a += b;
+                }
+            }
+
+            let x_in = &tape.x_in[tl * dm..(tl + 1) * dm];
+            rmsnorm_bwd(
+                x_in,
+                &params[px.attn_norm(l)],
+                &dh,
+                &mut dxn,
+                &mut grads[px.attn_norm(l)],
+            );
+            for i in 0..dm {
+                dx[i] = dxmid[i] + dxn[i];
+            }
+        }
+
+        let g_embed = &mut grads[px.embed()][tok * dm..(tok + 1) * dm];
+        for (g, &d) in g_embed.iter_mut().zip(&dx) {
+            *g += d;
+        }
+    }
+}
+
+/// f64 twin of `model::nearest_code_f32`.
+fn nearest_code(x: &[f64], codebook: &[f64], s: usize, dk: usize) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for c in 0..s {
+        let row = &codebook[c * dk..(c + 1) * dk];
+        let mut d = 0.0;
+        for (a, b) in x.iter().zip(row) {
+            let t = a - b;
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::{preset_config, Layout};
+    use crate::rng::Rng;
+
+    #[allow(clippy::too_many_arguments)]
+    fn test_cfg(
+        dm: usize,
+        h: usize,
+        dk: usize,
+        dv: usize,
+        s: usize,
+        l: usize,
+        w: usize,
+        b: usize,
+        v: usize,
+        nl: usize,
+        attn: &str,
+        use_cache: bool,
+    ) -> ModelConfig {
+        ModelConfig {
+            vocab_size: v,
+            d_model: dm,
+            d_k: dk,
+            d_v: dv,
+            n_layers: nl,
+            n_heads: h,
+            head_type: "shga".into(),
+            attn_type: attn.into(),
+            n_code: s,
+            block_len: l,
+            reduction: "native".into(),
+            use_cache,
+            use_kernel: false,
+            window_len: w,
+            batch_size: b,
+            commit_coef: 1e-2,
+            ema_rate: 0.99,
+            grad_clip: 0.1,
+            use_abs_pe: false,
+        }
+    }
+
+    fn rand_setup(cfg: &ModelConfig, seed: u64) -> (ParamIx, Vec<f64>, Vec<Vec<f64>>) {
+        let px = ParamIx::new(cfg);
+        let mut rng = Rng::new(seed);
+        let mut params = vec![0.0; px.total()];
+        for (name, r) in px.leaves() {
+            let norm = name.ends_with("attn_norm")
+                || name.ends_with("ffn_norm")
+                || name.ends_with("out_norm");
+            for p in params[r].iter_mut() {
+                *p = if norm { 1.0 } else { rng.normal() * 0.3 };
+            }
+        }
+        let cb = (0..cfg.n_layers)
+            .map(|_| {
+                (0..cfg.n_heads * cfg.n_code * cfg.d_k)
+                    .map(|_| rng.normal())
+                    .collect::<Vec<f64>>()
+            })
+            .collect();
+        (px, params, cb)
+    }
+
+    fn rand_tokens(cfg: &ModelConfig, rng: &mut Rng) -> Vec<i32> {
+        (0..cfg.batch_size * (cfg.window_len + 1))
+            .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+            .collect()
+    }
+
+    /// FD check every leaf of the flat gradient against the frozen-quantizer
+    /// surrogate (exact for the STE backward; see module docs).
+    fn fd_check(cfg: &ModelConfig, seed: u64, warm_windows: usize) {
+        let (px, mut params, cb) = rand_setup(cfg, seed);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let mut carry = Carry64::zeros(cfg);
+        for _ in 0..warm_windows {
+            let toks = rand_tokens(cfg, &mut rng);
+            train_forward_backward(cfg, &px, &params, &cb, &mut carry, &toks, QuantMode::Nearest);
+        }
+        let toks = rand_tokens(cfg, &mut rng);
+        let dense = cfg.attn_type == "full";
+        let mut frozen = FrozenQuant::new(cfg);
+        let out = {
+            let mut c = carry.clone();
+            train_forward_backward(
+                cfg,
+                &px,
+                &params,
+                &cb,
+                &mut c,
+                &toks,
+                if dense { QuantMode::Nearest } else { QuantMode::Capture(&mut frozen) },
+            )
+        };
+        if !dense && cfg.use_cache && cfg.window_len >= 3 * cfg.block_len && warm_windows == 0 {
+            // the multi-block window really exercised the fold path
+            let folded: f64 = {
+                let mut c = carry.clone();
+                train_forward_backward(cfg, &px, &params, &cb, &mut c, &toks, QuantMode::Nearest);
+                c.layers[0].cache_l.iter().sum()
+            };
+            assert!(folded > 0.0, "cache fold path not exercised");
+        }
+        let loss_at = |params: &[f64], carry: &Carry64| -> f64 {
+            let mut c = carry.clone();
+            let o = train_forward_backward(
+                cfg,
+                &px,
+                params,
+                &cb,
+                &mut c,
+                &toks,
+                if dense { QuantMode::Nearest } else { QuantMode::Frozen(&frozen) },
+            );
+            o.ce + cfg.commit_coef * o.commit
+        };
+        let eps = 1e-6;
+        let mut worst = 0.0f64;
+        for (name, r) in px.leaves() {
+            let leaf_g = &out.grads[r.clone()];
+            let mut probe: Vec<usize> =
+                (0..4).map(|_| rng.below(leaf_g.len() as u64) as usize).collect();
+            let argmax = leaf_g
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
+                .map(|(i, _)| i)
+                .unwrap();
+            probe.push(argmax);
+            probe.sort_unstable();
+            probe.dedup();
+            for i in probe {
+                let ix = r.start + i;
+                let keep = params[ix];
+                params[ix] = keep + eps;
+                let lp = loss_at(&params, &carry);
+                params[ix] = keep - eps;
+                let lm = loss_at(&params, &carry);
+                params[ix] = keep;
+                let fd = (lp - lm) / (2.0 * eps);
+                let ad = leaf_g[i];
+                let rel = (fd - ad).abs() / fd.abs().max(ad.abs()).max(1e-8);
+                worst = worst.max(rel);
+                assert!(
+                    rel <= 1e-3,
+                    "grad mismatch {name}[{i}]: fd={fd:.6e} ad={ad:.6e} rel={rel:.3e}"
+                );
+            }
+        }
+        // the check must not be vacuous
+        assert!(out.grads.iter().any(|&g| g != 0.0), "all gradients zero");
+        eprintln!(
+            "fd_check ok: attn={} use_cache={} warm={warm_windows} worst_rel={worst:.2e}",
+            cfg.attn_type, cfg.use_cache
+        );
+    }
+
+    #[test]
+    fn fd_vq_multiblock_window() {
+        // W = 4L: folds at blocks 2 and 3 exercise the cache-fold backward
+        let cfg = test_cfg(8, 2, 3, 5, 6, 4, 16, 2, 17, 2, "vq", true);
+        fd_check(&cfg, 0, 0);
+    }
+
+    #[test]
+    fn fd_vq_with_carry_window() {
+        // second window: carry cache/window entries are constants, folds of
+        // pre-window tokens hit the `vsrc: None` path
+        let cfg = test_cfg(8, 2, 3, 5, 6, 4, 16, 1, 17, 2, "vq", true);
+        fd_check(&cfg, 1, 1);
+    }
+
+    #[test]
+    fn fd_vq_no_cache_ablation() {
+        let cfg = test_cfg(6, 1, 4, 4, 5, 4, 12, 1, 11, 2, "vq", false);
+        fd_check(&cfg, 2, 0);
+    }
+
+    #[test]
+    fn fd_dense_full_baseline() {
+        let cfg = test_cfg(6, 2, 3, 4, 5, 4, 8, 2, 11, 2, "full", true);
+        fd_check(&cfg, 3, 0);
+    }
+
+    /// The f64 tape forward must compute the same function as the f32
+    /// streaming engine (`model::forward_token`) — otherwise training
+    /// optimizes (and emits carry for) a model that decode/eval never run.
+    /// Pins mean CE and the full post-window carry, leaf for leaf.
+    #[test]
+    fn autodiff_forward_matches_streaming_forward() {
+        use super::super::model::forward_token;
+        use crate::tensor::HostTensor;
+
+        let cfg = test_cfg(8, 2, 3, 5, 6, 4, 16, 2, 17, 2, "vq", true);
+        let layout = Layout::new(cfg.clone());
+        let init = layout.init_state(42);
+        let pick = |prefix: &str| -> Vec<HostTensor> {
+            init.iter()
+                .filter(|(n, _)| n.starts_with(prefix))
+                .map(|(_, t)| t.clone())
+                .collect()
+        };
+        let p = Params::parse(&cfg, &pick("params")).unwrap();
+        let cbs = crate::native::model::Codebooks::parse(&cfg, &pick("cb")).unwrap();
+        let mut rng = Rng::new(9);
+        let tokens = rand_tokens(&cfg, &mut rng);
+        let (w, v) = (cfg.window_len, cfg.vocab_size);
+
+        // f32 streaming forward over the window
+        let zeros: Vec<HostTensor> = layout
+            .state_leaves("carry")
+            .iter()
+            .map(|l| HostTensor::zeros(l.dtype, &l.shape))
+            .collect();
+        let mut st = State::parse(&cfg, &zeros).unwrap();
+        let mut ce32 = 0.0f64;
+        for row in 0..cfg.batch_size {
+            let toks = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
+            for t in 0..w {
+                let (logits, _) = forward_token(&cfg, &p, &cbs, &mut st, row, toks[t], None);
+                let target = (toks[t + 1].max(0) as usize).min(v - 1);
+                let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+                let z: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+                ce32 -= ((((logits[target] as f64) - m).exp() / z).max(1e-300)).ln();
+            }
+        }
+        ce32 /= (cfg.batch_size * w) as f64;
+
+        // f64 tape forward from the same weights and a zero carry
+        let px = ParamIx::new(&cfg);
+        let flat = flatten_params(&p);
+        let cb64: Vec<Vec<f64>> = cbs
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|&x| x as f64).collect())
+            .collect();
+        let mut carry = Carry64::zeros(&cfg);
+        let out =
+            train_forward_backward(&cfg, &px, &flat, &cb64, &mut carry, &tokens, QuantMode::Nearest);
+        assert!(
+            (out.ce - ce32).abs() < 1e-4,
+            "autodiff CE {} != streaming CE {ce32}",
+            out.ce
+        );
+
+        // carry must match leaf for leaf (f32-rounded f64 vs native f32)
+        let mut st64 = State::parse(&cfg, &zeros).unwrap();
+        carry.write_state(&mut st64);
+        assert_eq!(st.pos, st64.pos);
+        let close = |a: &[f32], b: &[f32], what: &str| {
+            assert_eq!(a.len(), b.len(), "{what} length");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!((x - y).abs() < 1e-4, "{what}[{i}]: {x} vs {y}");
+            }
+        };
+        for (i, (a, b)) in st.layers.iter().zip(&st64.layers).enumerate() {
+            assert_eq!(a.win_z, b.win_z, "layer {i} assignments diverged");
+            close(&a.win_k, &b.win_k, "win_k");
+            close(&a.win_v, &b.win_v, "win_v");
+            close(&a.cache_u, &b.cache_u, "cache_u");
+            close(&a.cache_l, &b.cache_l, "cache_l");
+        }
+    }
+
+    #[test]
+    fn param_ix_matches_layout_leaves() {
+        let cfg = preset_config("quickstart").unwrap();
+        let px = ParamIx::new(&cfg);
+        let layout = Layout::new(cfg);
+        let leaves = layout.param_leaves();
+        let ranges = px.leaves();
+        assert_eq!(leaves.len(), ranges.len());
+        let mut off = 0usize;
+        for (leaf, (name, r)) in leaves.iter().zip(&ranges) {
+            assert_eq!(r.start, off, "offset of {name} vs leaf {}", leaf.path);
+            assert_eq!(r.end - r.start, leaf.element_count(), "size of {name}");
+            off = r.end;
+        }
+        assert_eq!(off, px.total());
+        assert_eq!(px.total(), layout.param_element_count());
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let cfg = preset_config("quickstart").unwrap();
+        let layout = Layout::new(cfg.clone());
+        let named = layout.init_state(7);
+        let tensors: Vec<crate::tensor::HostTensor> = named
+            .iter()
+            .filter(|(n, _)| n.starts_with("params"))
+            .map(|(_, t)| t.clone())
+            .collect();
+        let p = Params::parse(&cfg, &tensors).unwrap();
+        let px = ParamIx::new(&cfg);
+        let flat = flatten_params(&p);
+        assert_eq!(flat.len(), px.total());
+        let p2 = unflatten_params(&px, &flat);
+        assert_eq!(p.embed, p2.embed);
+        assert_eq!(p.wout, p2.wout);
+        for (a, b) in p.layers.iter().zip(&p2.layers) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+}

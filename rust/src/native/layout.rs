@@ -39,6 +39,12 @@ impl Layout {
         2 * self.cfg.d_model
     }
 
+    /// Total element count of the "params" group — the length of the flat
+    /// gradient / Adam moment vectors (`opt['adam_m']` / `opt['adam_v']`).
+    pub fn param_element_count(&self) -> usize {
+        self.param_leaves().iter().map(|l| l.element_count()).sum()
+    }
+
     fn layer_param_shape(&self, name: &str) -> Vec<usize> {
         let c = &self.cfg;
         match name {
@@ -121,7 +127,10 @@ impl Layout {
             .collect()
     }
 
-    /// Group "opt": EMA codebook statistics (§3.4.1), per layer.
+    /// Group "opt": EMA codebook statistics (§3.4.1) per layer, then the
+    /// full-model Adam state for the §3.4.2 update — first/second moments
+    /// flat over the params group (ParamIx order == leaf order) plus the
+    /// bias-correction step counter.
     pub fn opt_leaves(&self) -> Vec<LeafSpec> {
         let c = &self.cfg;
         let mut out = Vec::new();
@@ -139,6 +148,11 @@ impl Layout {
                 DType::F32,
             ));
         }
+        let p_total = self.param_element_count();
+        out.push(Self::leaf("opt", "['adam_m']".to_string(), vec![p_total], DType::F32));
+        out.push(Self::leaf("opt", "['adam_v']".to_string(), vec![p_total], DType::F32));
+        // i32: exact at any step count (f32 would freeze at 2^24)
+        out.push(Self::leaf("opt", "['adam_t']".to_string(), vec![1], DType::I32));
         out
     }
 
@@ -298,6 +312,17 @@ impl Layout {
             ));
             out.push((format!("opt['layers'][{l}]['ema_sum']"), cb_t.clone()));
         }
+        // Adam state starts at zero (moments and step counter)
+        let p_total = self.param_element_count();
+        out.push((
+            "opt['adam_m']".to_string(),
+            HostTensor::zeros(DType::F32, &[p_total]),
+        ));
+        out.push((
+            "opt['adam_v']".to_string(),
+            HostTensor::zeros(DType::F32, &[p_total]),
+        ));
+        out.push(("opt['adam_t']".to_string(), HostTensor::zeros(DType::I32, &[1])));
         out
     }
 }

@@ -113,6 +113,7 @@ pub(crate) fn nearest_code_f32(x: &[f32], codebook: &[f32], s: usize, dk: usize)
 // parsed parameter / state views (flat Vec<f32> per leaf)
 // ---------------------------------------------------------------------------
 
+#[derive(Clone)]
 pub(crate) struct LayerParams {
     pub attn_norm: Vec<f32>, // [dm]
     pub wq: Vec<f32>,        // [dm, H*dk]
@@ -126,6 +127,7 @@ pub(crate) struct LayerParams {
     pub w2: Vec<f32>,        // [dff, dm]
 }
 
+#[derive(Clone)]
 pub(crate) struct Params {
     pub layers: Vec<LayerParams>,
     pub embed: Vec<f32>,    // [V, dm]
@@ -198,6 +200,7 @@ impl Params {
 }
 
 /// Per-layer codebooks, each flat [H, S, dk].
+#[derive(Clone)]
 pub(crate) struct Codebooks {
     pub layers: Vec<Vec<f32>>,
 }

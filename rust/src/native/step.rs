@@ -2,33 +2,62 @@
 //! [`crate::runtime::Executor::run`], each a pure function of its positional
 //! inputs (validated upstream against the spec).
 //!
-//! Training is deliberately scoped (this is a serving-first engine): the
-//! forward pass is the full multi-layer VQ-attention model, the codebooks
-//! learn online via the paper's §3.4.1 EMA k-means (gradient-free), and
-//! gradient descent trains the linear readout (`wout`/`bout`) on the
-//! cross-entropy — a reservoir-style probe that gives honest, monotonically
-//! improving loss curves without a full backprop engine. Full backprop
-//! through the block recurrence is ROADMAP work; the step contract
-//! (params/opt/cb/carry in, same + metrics out) already matches it.
+//! The train step is the paper's full §3.4.2 recipe: one TBPTT window
+//! forward through the complete model, exact reverse-mode gradients for
+//! every parameter leaf (embedding, RMSNorms, multi-head VQ-attention
+//! through the Theorem 3.7 block recurrence with straight-through through
+//! the quantizer and the commit-loss term, gated FFN, readout — see
+//! [`super::autodiff`]), a global-norm clip, and a bias-corrected Adam
+//! update. Codebooks learn gradient-free via §3.4.1 EMA k-means; the `opt`
+//! group carries both the EMA statistics and the Adam moments, so training
+//! state round-trips through the step contract and checkpoint resume stays
+//! bit-exact.
+//!
+//! Step functions receive pre-parsed weights ([`ParsedWeights`], cached by
+//! identity inside [`super::NativeExecutor`]) so the per-step cost of
+//! re-decoding the params group from raw bytes is paid once per distinct
+//! weight set, not once per call.
 
 use anyhow::{bail, Result};
 
 use crate::tensor::HostTensor;
 
-use super::layout::Layout;
-use super::model::{
-    forward_token, forward_window_dense, Codebooks, Params, State, TrainAccum,
+use super::autodiff::{
+    flatten_params, train_forward_backward, unflatten_params, Carry64, ParamIx, QuantMode,
 };
+use super::layout::Layout;
+use super::model::{forward_token, forward_window_dense, Codebooks, Params, State, TrainAccum};
 
-/// The LR schedule targets the paper's full-model Adam recipe; plain SGD on
-/// the linear readout needs a far larger step to move within a scaled-down
-/// run, so the native trainer rescales it (documented in DESIGN.md; tuned so
-/// a 30-step quickstart drops ~0.5 nats while 300-step runs stay stable
-/// under the global-norm clip).
-const READOUT_LR_SCALE: f32 = 5000.0;
+/// Adam hyperparameters (§3.4.2; the schedule supplies the LR).
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
 
 /// Laplace smoothing for EMA codebook counts (van den Oord 2017).
 const EMA_EPS: f32 = 1e-5;
+
+/// Parsed params + codebooks — the executor's identity-keyed cache entry.
+pub(crate) struct ParsedWeights {
+    pub params: Params,
+    pub cb: Codebooks,
+}
+
+/// Number of leading input (and, for train, output) tensors that hold the
+/// weights: the params group followed by the cb group.
+pub(crate) fn weight_tensor_count(layout: &Layout) -> usize {
+    let sp = SplitSpec::of(layout);
+    sp.n_params + sp.n_cb
+}
+
+/// Parse the weight tensors of `inputs` into a cacheable [`ParsedWeights`].
+pub(crate) fn parse_weights(layout: &Layout, inputs: &[HostTensor]) -> Result<ParsedWeights> {
+    let cfg = &layout.cfg;
+    let sp = SplitSpec::of(layout);
+    Ok(ParsedWeights {
+        params: Params::parse(cfg, &inputs[..sp.n_params])?,
+        cb: Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?,
+    })
+}
 
 struct SplitSpec {
     n_params: usize,
@@ -43,26 +72,30 @@ impl SplitSpec {
         Self {
             n_params: 10 * nl + 4,
             n_cb: nl,
-            n_opt: 2 * nl,
+            // per-layer (ema_count, ema_sum) + adam_m + adam_v + adam_t
+            n_opt: 2 * nl + 3,
             n_state: 1 + 5 * nl,
         }
     }
 }
 
 /// `<preset>.decode`: (params, cb, state, token[B]) -> (state, logits[B,V]).
-pub(crate) fn run_decode(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+pub(crate) fn run_decode(
+    layout: &Layout,
+    weights: &ParsedWeights,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
     let (b, v) = (cfg.batch_size, cfg.vocab_size);
-    let p = Params::parse(cfg, &inputs[..sp.n_params])?;
-    let cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
     let st_base = sp.n_params + sp.n_cb;
     let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
     let mut logits = vec![0.0f32; b * v];
     for row in 0..b {
-        let (row_logits, _) = forward_token(cfg, &p, &cb, &mut st, row, tokens[row], None);
+        let (row_logits, _) =
+            forward_token(cfg, &weights.params, &weights.cb, &mut st, row, tokens[row], None);
         logits[row * v..(row + 1) * v].copy_from_slice(&row_logits);
     }
     let mut outputs = st.dump(layout, "state");
@@ -70,80 +103,39 @@ pub(crate) fn run_decode(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<H
     Ok(outputs)
 }
 
-/// Per-(token,row) forward results the readout trainer consumes.
-struct WindowForward {
-    /// Per token: (logits [V], y [dm], target id).
-    steps: Vec<(Vec<f32>, Vec<f32>, usize)>,
-    accum: TrainAccum,
-}
-
-/// Run the forward pass over a [B, W+1] token window, advancing `st`.
+/// Run the f32 streaming forward over a [B, W+1] window, advancing `st`
+/// (evaluation path; training uses the differentiable f64 twin in
+/// [`super::autodiff`]). Returns per token (logits [V], target id).
 fn forward_window(
     layout: &Layout,
     p: &Params,
     cb: &Codebooks,
     st: &mut State,
     tokens: &[i32],
-    with_accum: bool,
-) -> WindowForward {
+) -> Vec<(Vec<f32>, usize)> {
     let cfg = &layout.cfg;
     let (b, w, v) = (cfg.batch_size, cfg.window_len, cfg.vocab_size);
-    let mut accum = TrainAccum::new(cfg);
     let mut steps = Vec::with_capacity(b * w);
     for row in 0..b {
         let row_tokens = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
         if cfg.attn_type == "full" {
             // dense baseline: quadratic within the window, no carry memory
-            for (t, (logits, y)) in
+            for (t, (logits, _)) in
                 forward_window_dense(cfg, p, &row_tokens[..w]).into_iter().enumerate()
             {
                 let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
-                steps.push((logits, y, target));
+                steps.push((logits, target));
             }
             st.pos[row] += w as i32;
         } else {
             for t in 0..w {
-                let acc = if with_accum { Some(&mut accum) } else { None };
-                let (logits, y) = forward_token(cfg, p, cb, st, row, row_tokens[t], acc);
+                let (logits, _) = forward_token(cfg, p, cb, st, row, row_tokens[t], None);
                 let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
-                steps.push((logits, y, target));
+                steps.push((logits, target));
             }
         }
     }
-    WindowForward { steps, accum }
-}
-
-/// Mean CE (nats/token) + mean readout gradients from forward results.
-fn ce_and_readout_grads(
-    steps: &[(Vec<f32>, Vec<f32>, usize)],
-    dm: usize,
-    v: usize,
-) -> (f64, Vec<f64>, Vec<f64>) {
-    let n = steps.len().max(1) as f64;
-    let mut ce = 0.0f64;
-    let mut grad_w = vec![0.0f64; dm * v];
-    let mut grad_b = vec![0.0f64; v];
-    for (logits, y, target) in steps {
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - m).exp()).collect();
-        let z: f64 = exps.iter().sum();
-        ce -= (exps[*target] / z).max(1e-300).ln();
-        for (vix, &e) in exps.iter().enumerate() {
-            let d = e / z - if vix == *target { 1.0 } else { 0.0 };
-            grad_b[vix] += d;
-            for (dix, &yd) in y.iter().enumerate() {
-                grad_w[dix * v + vix] += yd as f64 * d;
-            }
-        }
-    }
-    ce /= n;
-    for g in grad_w.iter_mut() {
-        *g /= n;
-    }
-    for g in grad_b.iter_mut() {
-        *g /= n;
-    }
-    (ce, grad_w, grad_b)
+    steps
 }
 
 /// Average per-(layer,head) codebook usage perplexity exp(H(p)).
@@ -220,15 +212,20 @@ fn ema_update(
     }
 }
 
-/// `<preset>.train`: one §3.4.2 TBPTT update.
+/// `<preset>.train`: one full §3.4.2 TBPTT update — backprop through the
+/// whole model, global-norm clip, bias-corrected Adam at exactly the
+/// schedule LR (the reported and applied LR are the same number), EMA
+/// codebook learning.
+///
 /// (params, cb, opt, carry, tokens[B,W+1], lr, seed) ->
 /// (params, cb, opt, carry, metrics[loss, ce, commit, grad_norm, code_ppl, lr]).
-pub(crate) fn run_train(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+pub(crate) fn run_train(
+    layout: &Layout,
+    weights: &ParsedWeights,
+    inputs: &[HostTensor],
+) -> Result<(Vec<HostTensor>, ParsedWeights)> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
-    let (dm, v) = (cfg.d_model, cfg.vocab_size);
-    let mut p = Params::parse(cfg, &inputs[..sp.n_params])?;
-    let mut cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
     let opt_base = sp.n_params + sp.n_cb;
     let mut ema_count: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
     let mut ema_sum: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
@@ -236,76 +233,110 @@ pub(crate) fn run_train(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<Ho
         ema_count.push(inputs[opt_base + 2 * l].as_f32()?);
         ema_sum.push(inputs[opt_base + 2 * l + 1].as_f32()?);
     }
+    let adam_base = opt_base + 2 * cfg.n_layers;
+    let mut adam_m = inputs[adam_base].as_f32()?;
+    let mut adam_v = inputs[adam_base + 1].as_f32()?;
+    let adam_t_prev = *inputs[adam_base + 2]
+        .as_i32()?
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("empty adam_t tensor"))?;
     let st_base = opt_base + sp.n_opt;
     let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
     let lr = inputs[st_base + sp.n_state + 1].first_f32()?;
 
-    let fwd = forward_window(layout, &p, &cb, &mut st, &tokens, true);
-    let (ce, grad_w, grad_b) = ce_and_readout_grads(&fwd.steps, dm, v);
+    // --- forward + exact reverse-mode gradients (f64) ---------------------
+    let px = ParamIx::new(cfg);
+    let mut flat = flatten_params(&weights.params);
+    if adam_m.len() != flat.len() || adam_v.len() != flat.len() {
+        bail!(
+            "adam moment length {} / {} does not match param count {}",
+            adam_m.len(),
+            adam_v.len(),
+            flat.len()
+        );
+    }
+    let cb64: Vec<Vec<f64>> = weights
+        .cb
+        .layers
+        .iter()
+        .map(|l| l.iter().map(|&x| x as f64).collect())
+        .collect();
+    let mut carry = Carry64::from_state(&st);
+    let out =
+        train_forward_backward(cfg, &px, &flat, &cb64, &mut carry, &tokens, QuantMode::Nearest);
+    carry.write_state(&mut st);
 
-    // global-norm clip, then the rescaled SGD step on the readout
+    // --- global-norm clip + Adam ------------------------------------------
     let mut sq = 0.0f64;
-    for &g in grad_w.iter().chain(&grad_b) {
+    for &g in &out.grads {
         sq += g * g;
     }
     let grad_norm = sq.sqrt();
     let clip = cfg.grad_clip;
     let clip_scale = if clip > 0.0 && grad_norm > clip { clip / grad_norm } else { 1.0 };
-    let step = (lr * READOUT_LR_SCALE) as f64 * clip_scale;
-    for (w, &g) in p.wout.iter_mut().zip(&grad_w) {
-        *w -= (step * g) as f32;
+    let adam_t = adam_t_prev + 1;
+    let bc1 = 1.0 - ADAM_B1.powi(adam_t);
+    let bc2 = 1.0 - ADAM_B2.powi(adam_t);
+    let lr64 = lr as f64;
+    for i in 0..flat.len() {
+        let g = out.grads[i] * clip_scale;
+        let m = ADAM_B1 * adam_m[i] as f64 + (1.0 - ADAM_B1) * g;
+        let v = ADAM_B2 * adam_v[i] as f64 + (1.0 - ADAM_B2) * g * g;
+        adam_m[i] = m as f32;
+        adam_v[i] = v as f32;
+        flat[i] -= lr64 * (m / bc1) / ((v / bc2).sqrt() + ADAM_EPS);
     }
-    for (b_, &g) in p.bout.iter_mut().zip(&grad_b) {
-        *b_ -= (step * g) as f32;
-    }
+    let new_params = unflatten_params(&px, &flat);
 
-    let commit = if fwd.accum.commit_n > 0.0 {
-        fwd.accum.commit_sum / fwd.accum.commit_n
-    } else {
-        0.0
-    };
-    let code_ppl = code_perplexity(layout, &fwd.accum);
+    // --- EMA codebook learning (gradient-free, §3.4.1) --------------------
+    let mut new_cb = weights.cb.clone();
+    let code_ppl = code_perplexity(layout, &out.accum);
     if cfg.attn_type != "full" {
-        ema_update(layout, &fwd.accum, &mut cb, &mut ema_count, &mut ema_sum);
+        ema_update(layout, &out.accum, &mut new_cb, &mut ema_count, &mut ema_sum);
     }
 
-    let loss = ce + cfg.commit_coef * commit;
+    let loss = out.ce + cfg.commit_coef * out.commit;
     let metrics = [
         loss as f32,
-        ce as f32,
-        commit as f32,
+        out.ce as f32,
+        out.commit as f32,
         grad_norm as f32,
         code_ppl as f32,
         lr,
     ];
 
-    let mut outputs = p.dump(layout);
-    outputs.extend(cb.dump(layout));
+    let mut outputs = new_params.dump(layout);
+    outputs.extend(new_cb.dump(layout));
     let opt_leaves = layout.opt_leaves();
     for l in 0..cfg.n_layers {
         outputs.push(HostTensor::from_f32(&opt_leaves[2 * l].shape, &ema_count[l]));
         outputs.push(HostTensor::from_f32(&opt_leaves[2 * l + 1].shape, &ema_sum[l]));
     }
+    outputs.push(HostTensor::from_f32(&[adam_m.len()], &adam_m));
+    outputs.push(HostTensor::from_f32(&[adam_v.len()], &adam_v));
+    outputs.push(HostTensor::from_i32(&[1], &[adam_t]));
     outputs.extend(st.dump(layout, "carry"));
     outputs.push(HostTensor::from_f32(&[6], &metrics));
-    Ok(outputs)
+    Ok((outputs, ParsedWeights { params: new_params, cb: new_cb }))
 }
 
 /// `<preset>.eval` / `tput-*` bench: forward-only over a window.
 /// (params, cb, carry, tokens) -> (carry, metrics[total_ce_nats, n_tokens]).
-pub(crate) fn run_eval(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+pub(crate) fn run_eval(
+    layout: &Layout,
+    weights: &ParsedWeights,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
-    let p = Params::parse(cfg, &inputs[..sp.n_params])?;
-    let cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
     let st_base = sp.n_params + sp.n_cb;
     let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
-    let fwd = forward_window(layout, &p, &cb, &mut st, &tokens, false);
+    let steps = forward_window(layout, &weights.params, &weights.cb, &mut st, &tokens);
     let mut total_ce = 0.0f64;
-    for (logits, _, target) in &fwd.steps {
+    for (logits, target) in &steps {
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
         let exps_sum: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
         let p_t = (((logits[*target] as f64) - m).exp() / exps_sum).max(1e-300);
@@ -314,21 +345,27 @@ pub(crate) fn run_eval(layout: &Layout, inputs: &[HostTensor]) -> Result<Vec<Hos
     let mut outputs = st.dump(layout, "carry");
     outputs.push(HostTensor::from_f32(
         &[2],
-        &[total_ce as f32, fwd.steps.len() as f32],
+        &[total_ce as f32, steps.len() as f32],
     ));
     Ok(outputs)
 }
 
-/// Dispatch on the spec entry; shared by [`super::NativeExecutor`].
+/// Dispatch on the spec entry; shared by [`super::NativeExecutor`]. Returns
+/// the step outputs plus, for train, the freshly produced weights (so the
+/// executor can re-seed its identity-keyed cache without re-parsing).
 pub(crate) fn run_entry(
     entry: &str,
     layout: &Layout,
+    weights: &ParsedWeights,
     inputs: &[HostTensor],
-) -> Result<Vec<HostTensor>> {
+) -> Result<(Vec<HostTensor>, Option<ParsedWeights>)> {
     match entry {
-        "decode" => run_decode(layout, inputs),
-        "train" => run_train(layout, inputs),
-        "eval" | "bench" => run_eval(layout, inputs),
+        "decode" => Ok((run_decode(layout, weights, inputs)?, None)),
+        "train" => {
+            let (outputs, new_weights) = run_train(layout, weights, inputs)?;
+            Ok((outputs, Some(new_weights)))
+        }
+        "eval" | "bench" => Ok((run_eval(layout, weights, inputs)?, None)),
         other => bail!("native backend: unknown entry '{other}'"),
     }
 }

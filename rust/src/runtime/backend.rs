@@ -21,7 +21,9 @@ use crate::tensor::HostTensor;
 ///
 /// Implementations must be pure: all model/optimizer/decode state flows
 /// through the positional inputs and outputs (the [`super::StateBundle`]
-/// assemble/absorb cycle), never through hidden executor state.
+/// assemble/absorb cycle), never through hidden executor state. Internal
+/// memoization that cannot change results is fine — e.g. the native
+/// backend caches parsed weights keyed by input-buffer identity.
 pub trait Executor {
     /// Artifact name this executor was loaded from (e.g. "quickstart.decode").
     fn name(&self) -> &str;

@@ -59,5 +59,5 @@ pub fn literal_to_tensor(lit: &xla::Literal, spec: &LeafSpec) -> Result<HostTens
     if data.len() != n * 4 {
         bail!("literal size mismatch for {}", spec.path);
     }
-    Ok(HostTensor { dtype: spec.dtype, shape: spec.shape.clone(), data })
+    Ok(HostTensor { dtype: spec.dtype, shape: spec.shape.clone(), data: data.into() })
 }

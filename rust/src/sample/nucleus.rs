@@ -6,10 +6,29 @@ use crate::rng::Rng;
 use super::SampleParams;
 
 /// Temperature-scaled softmax over raw logits.
+///
+/// Defensive about non-finite logits (a diverged model or a buggy backend
+/// must degrade a sample, not crash the serving loop): NaN logits carry
+/// zero probability, `+inf` logits split the whole mass, and if nothing
+/// finite remains the distribution falls back to uniform.
 pub fn softmax_with_temperature(logits: &[f32], temperature: f32) -> Vec<f64> {
     let t = temperature.max(1e-4) as f64;
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let exps: Vec<f64> = logits.iter().map(|&l| ((l as f64 - m) / t).exp()).collect();
+    let clean: Vec<f64> = logits
+        .iter()
+        .map(|&l| if l.is_nan() { f64::NEG_INFINITY } else { l as f64 })
+        .collect();
+    let m = clean.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::INFINITY {
+        let n_inf = clean.iter().filter(|&&x| x == f64::INFINITY).count() as f64;
+        return clean
+            .iter()
+            .map(|&x| if x == f64::INFINITY { 1.0 / n_inf } else { 0.0 })
+            .collect();
+    }
+    if m == f64::NEG_INFINITY {
+        return vec![1.0 / logits.len().max(1) as f64; logits.len()];
+    }
+    let exps: Vec<f64> = clean.iter().map(|&l| ((l - m) / t).exp()).collect();
     let z: f64 = exps.iter().sum();
     exps.into_iter().map(|e| e / z).collect()
 }
@@ -19,7 +38,8 @@ pub fn softmax_with_temperature(logits: &[f32], temperature: f32) -> Vec<f64> {
 pub fn nucleus_sample(logits: &[f32], params: SampleParams, rng: &mut Rng) -> i32 {
     let probs = softmax_with_temperature(logits, params.temperature);
     let mut idx: Vec<usize> = (0..probs.len()).collect();
-    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    // total order: never panics, and any residual non-finite values sort last
+    idx.sort_unstable_by(|&a, &b| probs[b].total_cmp(&probs[a]));
     let p = params.top_p.clamp(0.0, 1.0) as f64;
     let mut cum = 0.0;
     let mut cutoff = idx.len();
@@ -73,6 +93,39 @@ mod tests {
             seen[nucleus_sample(&logits, params, &mut rng) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn nan_logit_is_excluded_not_panicking() {
+        let mut rng = Rng::new(7);
+        let logits = vec![f32::NAN, 2.0, 1.0, f32::NAN];
+        for _ in 0..100 {
+            let params = SampleParams { temperature: 1.0, top_p: 0.95 };
+            let s = nucleus_sample(&logits, params, &mut rng);
+            assert!(s == 1 || s == 2, "sampled a NaN-logit token: {s}");
+        }
+    }
+
+    #[test]
+    fn all_nan_logits_fall_back_to_uniform() {
+        let mut rng = Rng::new(8);
+        let logits = vec![f32::NAN; 4];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            let params = SampleParams { temperature: 1.0, top_p: 1.0 };
+            seen[nucleus_sample(&logits, params, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform fallback missed ids: {seen:?}");
+    }
+
+    #[test]
+    fn inf_logit_takes_all_mass() {
+        let mut rng = Rng::new(9);
+        let logits = vec![0.0, f32::INFINITY, 1.0];
+        for _ in 0..50 {
+            let params = SampleParams { temperature: 1.0, top_p: 1.0 };
+            assert_eq!(nucleus_sample(&logits, params, &mut rng), 1);
+        }
     }
 
     #[test]

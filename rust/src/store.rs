@@ -57,7 +57,7 @@ pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
         }
         out.push((
             name,
-            HostTensor { dtype, shape, data: data[offset..end].to_vec() },
+            HostTensor { dtype, shape, data: data[offset..end].to_vec().into() },
         ));
     }
     Ok(out)

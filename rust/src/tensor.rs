@@ -4,7 +4,60 @@
 //! (state plumbing, checkpoints, sampling math, reference checks). All heavy
 //! compute happens inside the AOT-compiled XLA executables.
 
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
+
+/// Shared byte buffer backing a [`HostTensor`].
+///
+/// Cloning is an `Arc` bump, so `StateBundle::assemble` hands executors the
+/// same underlying allocation every step instead of deep-copying the
+/// weights. The allocation's address doubles as a cheap identity
+/// ([`Bytes::identity`]) — the native backend keys its parsed-weight cache
+/// on it (and pins the `Arc` so the address cannot be recycled while the
+/// cache entry lives). Mutation goes through [`DerefMut`], which is
+/// copy-on-write (`Arc::make_mut`), preserving value semantics.
+#[derive(Debug, Clone)]
+pub struct Bytes(Arc<Vec<u8>>);
+
+impl Bytes {
+    pub fn new(data: Vec<u8>) -> Self {
+        Self(Arc::new(data))
+    }
+
+    /// Address of the shared allocation: equal for clones of the same
+    /// buffer, distinct between live buffers. Only meaningful while an
+    /// `Arc` to this buffer is held (pin it to use it as a cache key).
+    pub fn identity(&self) -> usize {
+        Arc::as_ptr(&self.0) as usize
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(data: Vec<u8>) -> Self {
+        Self::new(data)
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl DerefMut for Bytes {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        Arc::make_mut(&mut self.0).as_mut_slice()
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.0, &other.0) || self.0 == other.0
+    }
+}
 
 /// Element type of a [`HostTensor`]. Mirrors the TVQ store / manifest dtypes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,13 +96,17 @@ impl DType {
 pub struct HostTensor {
     pub dtype: DType,
     pub shape: Vec<usize>,
-    pub data: Vec<u8>,
+    pub data: Bytes,
 }
 
 impl HostTensor {
     pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
-        Self { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size_bytes()] }
+        Self {
+            dtype,
+            shape: shape.to_vec(),
+            data: Bytes::new(vec![0u8; n * dtype.size_bytes()]),
+        }
     }
 
     pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
@@ -58,7 +115,7 @@ impl HostTensor {
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
         }
-        Self { dtype: DType::F32, shape: shape.to_vec(), data }
+        Self { dtype: DType::F32, shape: shape.to_vec(), data: Bytes::new(data) }
     }
 
     pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
@@ -67,7 +124,7 @@ impl HostTensor {
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
         }
-        Self { dtype: DType::I32, shape: shape.to_vec(), data }
+        Self { dtype: DType::I32, shape: shape.to_vec(), data: Bytes::new(data) }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -161,5 +218,22 @@ mod tests {
     fn flat_index_row_major() {
         assert_eq!(flat_index(&[2, 3], &[1, 2]), 5);
         assert_eq!(flat_index(&[4], &[3]), 3);
+    }
+
+    #[test]
+    fn bytes_clone_shares_identity_and_cow_on_write() {
+        let t = HostTensor::from_f32(&[2], &[1.0, 2.0]);
+        let mut c = t.clone();
+        assert_eq!(t.data.identity(), c.data.identity(), "clone shares buffer");
+        assert_eq!(t, c);
+        // copy-on-write: mutating the clone must not touch the original
+        c.data[0..4].copy_from_slice(&3.0f32.to_le_bytes());
+        assert_ne!(t.data.identity(), c.data.identity());
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(c.as_f32().unwrap(), vec![3.0, 2.0]);
+        // equal contents compare equal across distinct buffers
+        let d = HostTensor::from_f32(&[2], &[1.0, 2.0]);
+        assert_ne!(t.data.identity(), d.data.identity());
+        assert_eq!(t, d);
     }
 }

@@ -1,20 +1,36 @@
 //! Checkpointing: model state (params/opt/codebooks/carry) as a TVQ file
 //! plus a JSON sidecar with run metadata. Resume is bit-exact: every tensor
-//! the train step touches is saved.
+//! the train step touches is saved — including the Adam moments in `opt` —
+//! and the data-stream position, so a resumed run continues the TBPTT
+//! stream where it left off instead of re-training on early windows.
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::data::TbpttBatcher;
 use crate::json::Json;
 
 use super::Trainer;
+
+/// Current checkpoint format.
+///
+/// * 1 — PR 1: params/cb/carry + EMA stats only (readout-SGD trainer).
+/// * 2 — full-model Adam: `opt` additionally carries `adam_m`/`adam_v`/
+///   `adam_t`, and the meta records the batcher position.
+pub const CHECKPOINT_FORMAT: u32 = 2;
 
 #[derive(Debug, Clone)]
 pub struct CheckpointMeta {
     pub preset: String,
     pub step: u64,
     pub format: u32,
+    /// [`TbpttBatcher`] position at save time (epoch, window index).
+    pub data_epoch: u64,
+    pub data_window_index: u64,
+    /// [`TbpttBatcher::fingerprint`] of the stream the position refers to
+    /// (covers corpus content/size/seed and batch/window geometry).
+    pub data_fingerprint: u64,
 }
 
 impl CheckpointMeta {
@@ -23,21 +39,46 @@ impl CheckpointMeta {
             ("preset", Json::str(self.preset.clone())),
             ("step", Json::num(self.step as f64)),
             ("format", Json::num(self.format as f64)),
+            ("data_epoch", Json::num(self.data_epoch as f64)),
+            ("data_window_index", Json::num(self.data_window_index as f64)),
+            // stored as a hex string: u64 does not round-trip through f64
+            (
+                "data_fingerprint",
+                Json::str(format!("{:016x}", self.data_fingerprint)),
+            ),
         ])
     }
 
     fn parse(j: &Json) -> Result<Self> {
+        let format = j.req("format")?.as_u64()? as u32;
+        if format != CHECKPOINT_FORMAT {
+            bail!(
+                "unsupported checkpoint format {format} (this build reads format \
+                 {CHECKPOINT_FORMAT}; format 1 checkpoints predate the full-model \
+                 Adam optimizer state and cannot be resumed — retrain)"
+            );
+        }
         Ok(Self {
             preset: j.req("preset")?.as_str()?.to_string(),
             step: j.req("step")?.as_u64()?,
-            format: j.req("format")?.as_u64()? as u32,
+            format,
+            data_epoch: j.req("data_epoch")?.as_u64()?,
+            data_window_index: j.req("data_window_index")?.as_u64()?,
+            data_fingerprint: u64::from_str_radix(
+                j.req("data_fingerprint")?.as_str()?,
+                16,
+            )?,
         })
     }
 }
 
 const STATE_GROUPS: &[&str] = &["params", "opt", "cb", "carry"];
 
-pub fn save_checkpoint(trainer: &Trainer, dir: impl AsRef<Path>) -> Result<()> {
+pub fn save_checkpoint(
+    trainer: &Trainer,
+    batcher: &TbpttBatcher,
+    dir: impl AsRef<Path>,
+) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
     let groups: Vec<&str> = STATE_GROUPS
@@ -48,18 +89,33 @@ pub fn save_checkpoint(trainer: &Trainer, dir: impl AsRef<Path>) -> Result<()> {
     trainer
         .bundle
         .save_groups(dir.join("state.tvq"), trainer.exe_train.spec(), &groups)?;
-    let meta = CheckpointMeta { preset: trainer.preset.clone(), step: trainer.step, format: 1 };
+    let (epoch, window_index) = batcher.position();
+    let meta = CheckpointMeta {
+        preset: trainer.preset.clone(),
+        step: trainer.step,
+        format: CHECKPOINT_FORMAT,
+        data_epoch: epoch as u64,
+        data_window_index: window_index as u64,
+        data_fingerprint: batcher.fingerprint(),
+    };
     std::fs::write(dir.join("meta.json"), meta.to_json().dump())?;
     Ok(())
 }
 
-pub fn load_checkpoint(trainer: &mut Trainer, dir: impl AsRef<Path>) -> Result<CheckpointMeta> {
+/// Restore trainer state (and, when given, the data stream position) from a
+/// checkpoint directory. Unknown or outdated formats are rejected with a
+/// clear error rather than silently mis-parsed.
+pub fn load_checkpoint(
+    trainer: &mut Trainer,
+    batcher: Option<&mut TbpttBatcher>,
+    dir: impl AsRef<Path>,
+) -> Result<CheckpointMeta> {
     let dir = dir.as_ref();
     let meta = CheckpointMeta::parse(&Json::parse(&std::fs::read_to_string(
         dir.join("meta.json"),
     )?)?)?;
     if meta.preset != trainer.preset {
-        anyhow::bail!(
+        bail!(
             "checkpoint is for preset '{}', trainer is '{}'",
             meta.preset,
             trainer.preset
@@ -67,5 +123,18 @@ pub fn load_checkpoint(trainer: &mut Trainer, dir: impl AsRef<Path>) -> Result<C
     }
     trainer.bundle.load_groups(dir.join("state.tvq"))?;
     trainer.step = meta.step;
+    if let Some(b) = batcher {
+        if b.fingerprint() != meta.data_fingerprint {
+            bail!(
+                "checkpoint was written against a different data stream \
+                 (fingerprint {:016x} vs this batcher's {:016x}: corpus \
+                 content/size/seed, batch, or window differ) — a restored \
+                 position would silently land in the wrong data",
+                meta.data_fingerprint,
+                b.fingerprint()
+            );
+        }
+        b.seek(meta.data_epoch as usize, meta.data_window_index as usize)?;
+    }
     Ok(meta)
 }

@@ -77,12 +77,12 @@ pub fn run_training(backend: &dyn Backend, cfg: &TrainConfig) -> Result<(Trainer
             }
         }
         if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 {
-            save_checkpoint(&trainer, cfg.run_dir.join(format!("ckpt-{}", step + 1)))?;
+            save_checkpoint(&trainer, &batcher, cfg.run_dir.join(format!("ckpt-{}", step + 1)))?;
         }
         last = Some(m);
     }
     let last = last.ok_or_else(|| anyhow::anyhow!("0 training steps"))?;
-    save_checkpoint(&trainer, cfg.run_dir.join("ckpt-final"))?;
+    save_checkpoint(&trainer, &batcher, cfg.run_dir.join("ckpt-final"))?;
     let summary = TrainSummary {
         steps: cfg.steps,
         final_loss: last.loss,

@@ -6,7 +6,7 @@
 mod checkpoint;
 mod driver;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint, CheckpointMeta};
+pub use checkpoint::{load_checkpoint, save_checkpoint, CheckpointMeta, CHECKPOINT_FORMAT};
 pub use driver::{run_training, TrainSummary};
 
 use anyhow::{bail, Result};
@@ -23,8 +23,11 @@ pub struct TrainMetrics {
     pub loss: f32,
     pub ce: f32,
     pub commit: f32,
+    /// Global norm of the full-model gradient, before clipping.
     pub grad_norm: f32,
     pub code_perplexity: f32,
+    /// The LR the step actually applied — by contract the same number the
+    /// schedule supplied (no hidden rescaling; regression-tested).
     pub lr: f32,
 }
 

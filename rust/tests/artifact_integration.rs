@@ -131,11 +131,11 @@ fn train_steps_reduce_loss_and_checkpoint_roundtrips() {
     // checkpoint roundtrip: saving then loading reproduces the metrics of
     // the next step exactly
     let dir = transformer_vq::testutil::TempDir::new();
-    save_checkpoint(&trainer, dir.path()).unwrap();
+    save_checkpoint(&trainer, &batcher, dir.path()).unwrap();
     let probe = batcher.next_batch();
     let m1 = trainer.train_on(&probe).unwrap();
     let mut trainer2 = Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
-    load_checkpoint(&mut trainer2, dir.path()).unwrap();
+    load_checkpoint(&mut trainer2, None, dir.path()).unwrap();
     let m2 = trainer2.train_on(&probe).unwrap();
     assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "resume not bit-exact");
 }

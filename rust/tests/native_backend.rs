@@ -12,7 +12,7 @@ use transformer_vq::train::{load_checkpoint, save_checkpoint, Trainer};
 fn train_steps_reduce_loss_natively() {
     let backend = NativeBackend::new();
     let mut trainer =
-        Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
+        Trainer::new(&backend, "quickstart", LrSchedule::constant(3e-3)).unwrap();
     let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0).unwrap();
     let mut batcher =
         TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len()).unwrap();
@@ -44,12 +44,12 @@ fn checkpoint_resume_is_bit_exact() {
         trainer.train_on(&batcher.next_batch()).unwrap();
     }
     let dir = transformer_vq::testutil::TempDir::new();
-    save_checkpoint(&trainer, dir.path()).unwrap();
+    save_checkpoint(&trainer, &batcher, dir.path()).unwrap();
     let probe = batcher.next_batch();
     let m1 = trainer.train_on(&probe).unwrap();
     let mut trainer2 =
         Trainer::new(&backend, "quickstart", LrSchedule::constant(1e-3)).unwrap();
-    load_checkpoint(&mut trainer2, dir.path()).unwrap();
+    load_checkpoint(&mut trainer2, None, dir.path()).unwrap();
     let m2 = trainer2.train_on(&probe).unwrap();
     assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "resume not bit-exact");
     assert_eq!(
@@ -71,7 +71,7 @@ fn trained_weights_flow_into_sampler() {
         trainer.train_on(&batcher.next_batch()).unwrap();
     }
     let dir = transformer_vq::testutil::TempDir::new();
-    save_checkpoint(&trainer, dir.path()).unwrap();
+    save_checkpoint(&trainer, &batcher, dir.path()).unwrap();
 
     let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
     let b = sampler.batch_size();
