@@ -1,21 +1,29 @@
-//! Native decode perf baseline: per-token latency vs sequence position.
+//! Native decode perf baseline: per-token latency vs sequence position,
+//! plus the thread-scaling curve of the batch-lane-parallel engine.
 //!
 //! The paper's serving claim (Remark 3.8) is that VQ decode costs
 //! O(S + 2L) per token — *independent of position*. This bench drives the
 //! native backend's `<preset>.decode` executor for thousands of consecutive
 //! positions without resetting, records per-step wall time, and reports
 //! tokens/sec at exponentially spaced positions. A quadratic-cache model
-//! would slow down linearly with position; this one must stay flat
-//! (position 4096 within 1.5x of position 64 — asserted).
+//! would slow down linearly with position; this one must stay flat (the
+//! last reported position — 8192 at the default max_pos — within 1.5x of
+//! position 64, asserted).
+//!
+//! It then re-drives the same stream at num_threads = 1/2/4/N (Linformer-
+//! style fixed-budget tok/s curves across sequence positions 512/2k/8k) so
+//! CI tracks the multi-core speedup next to the flatness baseline. Logits
+//! are bit-identical across thread counts (enforced by
+//! rust/tests/parallel_determinism.rs); only the wall clock may differ.
 //!
 //! Emits `BENCH_native_decode.json` (path overridable) so CI can track the
-//! perf trajectory across PRs.
+//! perf trajectory across PRs. See DESIGN.md §7 for how to read it.
 //!
 //! Usage: cargo run --release --example perfbench -- [preset] [max_pos] [out.json]
 
 use anyhow::Result;
 use transformer_vq::json::Json;
-use transformer_vq::native::NativeBackend;
+use transformer_vq::native::{kernels, NativeBackend, NativeOptions};
 use transformer_vq::runtime::{Backend, StateBundle};
 use transformer_vq::tensor::HostTensor;
 
@@ -25,10 +33,42 @@ fn median_ns(window: &[f64]) -> f64 {
     w[w.len() / 2]
 }
 
+/// Drive one decode stream of `max_pos` steps; returns per-step wall ns.
+/// `num_threads` = None uses the backend default (env / all cores).
+fn drive(preset: &str, max_pos: usize, num_threads: Option<usize>) -> Result<Vec<f64>> {
+    let backend = match num_threads {
+        Some(nt) => NativeBackend::new().with_options(NativeOptions { num_threads: nt }),
+        None => NativeBackend::new(),
+    };
+    let exe = backend.load(&format!("{preset}.decode"))?;
+    let batch = exe.spec().config.batch_size;
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(backend.init_state(preset)?);
+    let mut step_ns: Vec<f64> = Vec::with_capacity(max_pos);
+    for pos in 0..max_pos {
+        let tokens: Vec<i32> = (0..batch).map(|b| ((pos + b) % 251) as i32).collect();
+        bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &tokens)]);
+        let inputs = bundle.assemble(exe.spec())?;
+        let t0 = std::time::Instant::now();
+        let outputs = exe.run(&inputs)?;
+        step_ns.push(t0.elapsed().as_nanos() as f64);
+        bundle.absorb(exe.spec(), outputs)?;
+    }
+    Ok(step_ns)
+}
+
+/// Median tok/s over the `window` steps preceding each position.
+fn tps_at(step_ns: &[f64], positions: &[usize], window: usize, batch: usize) -> Vec<f64> {
+    positions
+        .iter()
+        .map(|&p| 1e9 * batch as f64 / median_ns(&step_ns[p - window..p]))
+        .collect()
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let preset = args.first().map(String::as_str).unwrap_or("quickstart");
-    let max_pos: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let max_pos: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8192);
     let out_path = args
         .get(2)
         .map(String::as_str)
@@ -47,20 +87,8 @@ fn main() -> Result<()> {
         cfg.n_code, cfg.block_len
     );
 
-    let mut bundle = StateBundle::zeros_for(exe.spec());
-    bundle.set_named(backend.init_state(preset)?);
-
-    // drive one long sequence per slot, timing every step
-    let mut step_ns: Vec<f64> = Vec::with_capacity(max_pos);
-    for pos in 0..max_pos {
-        let tokens: Vec<i32> = (0..batch).map(|b| ((pos + b) % 251) as i32).collect();
-        bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &tokens)]);
-        let inputs = bundle.assemble(exe.spec())?;
-        let t0 = std::time::Instant::now();
-        let outputs = exe.run(&inputs)?;
-        step_ns.push(t0.elapsed().as_nanos() as f64);
-        bundle.absorb(exe.spec(), outputs)?;
-    }
+    // --- flatness baseline (default thread budget) -------------------------
+    let step_ns = drive(preset, max_pos, None)?;
 
     // report at exponentially spaced positions: median over the preceding
     // 32 steps (median is robust to scheduler noise)
@@ -89,21 +117,86 @@ fn main() -> Result<()> {
         positions.first().unwrap()
     );
 
+    // --- thread-scaling sweep ----------------------------------------------
+    let ncores = kernels::default_threads();
+    let mut thread_counts = vec![1usize, 2, 4, ncores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let sweep_positions: Vec<usize> =
+        [512usize, 2048, 8192].into_iter().filter(|&p| p <= max_pos).collect();
+    let mut scaling: Vec<(usize, Vec<f64>)> = Vec::new();
+    if !sweep_positions.is_empty() {
+        println!("\nthread scaling ({ncores} cores):");
+        print!("{:>9}", "threads");
+        for p in &sweep_positions {
+            print!(" {:>11}", format!("tok/s@{p}"));
+        }
+        println!();
+        // when the flatness baseline already ran at the all-cores default,
+        // its timings double as the nt = ncores sweep row — don't re-drive
+        let baseline_is_all_cores = NativeOptions::default().num_threads == 0;
+        for &nt in &thread_counts {
+            let tps = if nt == ncores && baseline_is_all_cores {
+                tps_at(&step_ns, &sweep_positions, window, batch)
+            } else {
+                let ns = drive(preset, *sweep_positions.last().unwrap(), Some(nt))?;
+                tps_at(&ns, &sweep_positions, window, batch)
+            };
+            print!("{nt:>9}");
+            for t in &tps {
+                print!(" {t:>11.0}");
+            }
+            println!();
+            scaling.push((nt, tps));
+        }
+    }
+    // headline speedup: 4 threads vs 1 thread at the largest seq >= 2048
+    // (omitted, not approximated, when max_pos never reaches 2048)
+    let speedup_4t = match (
+        scaling.iter().find(|(nt, _)| *nt == 1),
+        scaling.iter().find(|(nt, _)| *nt == 4),
+        sweep_positions.iter().rposition(|&p| p >= 2048),
+    ) {
+        (Some((_, t1)), Some((_, t4)), Some(ix)) => Some(t4[ix] / t1[ix]),
+        _ => None,
+    };
+    if let Some(s) = speedup_4t {
+        println!("speedup at 4 threads (seq >= 2k): {s:.2}x");
+    }
+
     let jarr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
-    let j = Json::obj(vec![
+    let jpos = |v: &[usize]| Json::Arr(v.iter().map(|&p| Json::num(p as f64)).collect());
+    let mut fields = vec![
         ("bench", Json::str("native_decode")),
         ("preset", Json::str(preset)),
         ("batch", Json::num(batch as f64)),
         ("n_code", Json::num(cfg.n_code as f64)),
         ("block_len", Json::num(cfg.block_len as f64)),
-        (
-            "positions",
-            Json::Arr(positions.iter().map(|&p| Json::num(p as f64)).collect()),
-        ),
+        ("positions", jpos(&positions)),
         ("ns_per_token", jarr(&ns_per_token)),
         ("tokens_per_sec", jarr(&tokens_per_sec)),
         ("flat_ratio_last_vs_first", Json::num(flat_ratio)),
-    ]);
+        ("cores", Json::num(ncores as f64)),
+        ("scaling_positions", jpos(&sweep_positions)),
+        (
+            "thread_scaling",
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|(nt, tps)| {
+                        Json::obj(vec![
+                            ("threads", Json::num(*nt as f64)),
+                            ("tokens_per_sec", jarr(tps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(s) = speedup_4t {
+        fields.push(("speedup_threads4_vs_1", Json::num(s)));
+    }
+    let j = Json::obj(fields);
     std::fs::write(out_path, j.dump())?;
     println!("wrote {out_path}");
 

@@ -6,19 +6,50 @@
 //! the serving and the training side of the linear-time claim. Emits
 //! `BENCH_native_train.json` so the trajectory is visible across PRs.
 //!
-//! Also reports the identity-keyed weight-cache effect: steps/sec with the
-//! executor's parsed-weight cache warm (steady-state training) versus a
-//! fresh executor per step (every step re-parses the params group).
+//! Also reports:
+//! * the identity-keyed weight-cache effect: steps/sec with the executor's
+//!   parsed-weight cache warm versus a fresh executor per step, and
+//! * the thread-scaling curve: tok/s at num_threads = 1/2/4/N over TBPTT
+//!   windows of 512 and 2048 tokens (batch lanes run one per pool thread;
+//!   metrics are bit-identical across thread counts, only wall time moves).
+//!
+//! See DESIGN.md §7 for how to read the emitted JSON.
 //!
 //! Usage: cargo run --release --example trainbench -- [preset] [steps] [out.json]
 
 use anyhow::Result;
 use transformer_vq::data::TbpttBatcher;
 use transformer_vq::json::Json;
-use transformer_vq::native::NativeBackend;
+use transformer_vq::native::{kernels, preset_config, NativeBackend, NativeOptions};
 use transformer_vq::runtime::Backend;
 use transformer_vq::schedule::LrSchedule;
 use transformer_vq::train::Trainer;
+
+/// tok/s of `timed_steps` train steps of `preset`'s model at window
+/// length `seq` and thread budget `nt` (1 warmup step first, so weight
+/// parsing is out of the measured region).
+fn sweep_point(
+    preset: &str,
+    corpus_tokens: &[u16],
+    seq: usize,
+    nt: usize,
+    timed_steps: usize,
+) -> Result<f64> {
+    let mut cfg = preset_config(preset)?;
+    cfg.window_len = seq;
+    let name = format!("bench-{preset}-seq{seq}");
+    let backend = NativeBackend::with_preset(&name, cfg, 0x5EED)
+        .with_options(NativeOptions { num_threads: nt });
+    let mut trainer = Trainer::new(&backend, &name, LrSchedule::constant(1e-3))?;
+    let (b, w) = (trainer.batch_size(), trainer.window_len());
+    let mut batcher = TbpttBatcher::new(corpus_tokens.to_vec(), b, w)?;
+    trainer.train_on(&batcher.next_batch())?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..timed_steps {
+        trainer.train_on(&batcher.next_batch())?;
+    }
+    Ok((timed_steps * b * w) as f64 / t0.elapsed().as_secs_f64())
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -78,7 +109,37 @@ fn main() -> Result<()> {
         tok_per_sec / cold_tok_per_sec
     );
 
-    let j = Json::obj(vec![
+    // thread-scaling sweep: Linformer-style fixed-budget tok/s curves at
+    // window lengths 512 / 2048 across 1/2/4/N threads
+    let ncores = kernels::default_threads();
+    let mut thread_counts = vec![1usize, 2, 4, ncores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let seqs = [512usize, 2048];
+    let mut scaling: Vec<(usize, usize, f64)> = Vec::new();
+    println!("\nthread scaling ({preset} model, {ncores} cores):");
+    println!("{:>9} {:>7} {:>11}", "threads", "seq", "tok/s");
+    // one corpus for the whole sweep; each point only re-windows it
+    let sweep_corpus = transformer_vq::data::build_corpus("markov", 200_000, 1)?;
+    for &seq in &seqs {
+        for &nt in &thread_counts {
+            let tps = sweep_point(preset, &sweep_corpus.tokens, seq, nt, 2)?;
+            println!("{nt:>9} {seq:>7} {tps:>11.0}");
+            scaling.push((nt, seq, tps));
+        }
+    }
+    let speedup_4t = {
+        let at = |nt: usize| scaling.iter().find(|(n, s, _)| *n == nt && *s == 2048);
+        match (at(1), at(4)) {
+            (Some((_, _, t1s)), Some((_, _, t4s))) => Some(t4s / t1s),
+            _ => None,
+        }
+    };
+    if let Some(s) = speedup_4t {
+        println!("speedup at 4 threads (seq 2048): {s:.2}x");
+    }
+
+    let mut fields = vec![
         ("bench", Json::str("native_train")),
         ("preset", Json::str(preset)),
         ("batch", Json::num(b as f64)),
@@ -89,7 +150,27 @@ fn main() -> Result<()> {
         ("tokens_per_sec_cold_parse", Json::num(cold_tok_per_sec)),
         ("first_loss", Json::num(first_loss as f64)),
         ("last_loss", Json::num(last_loss as f64)),
-    ]);
+        ("cores", Json::num(ncores as f64)),
+        (
+            "thread_scaling",
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|(nt, seq, tps)| {
+                        Json::obj(vec![
+                            ("threads", Json::num(*nt as f64)),
+                            ("seq", Json::num(*seq as f64)),
+                            ("tokens_per_sec", Json::num(*tps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(s) = speedup_4t {
+        fields.push(("speedup_threads4_vs_1_seq2048", Json::num(s)));
+    }
+    let j = Json::obj(fields);
     std::fs::write(out_path, j.dump())?;
     println!("wrote {out_path}");
 

@@ -34,6 +34,11 @@ pub struct TrainConfig {
     pub run_dir: PathBuf,
     /// Console log interval.
     pub log_every: u64,
+    /// Native-backend thread budget per step (0 = all cores), applied via
+    /// `runtime::auto_backend_threads` when the run's backend is built and
+    /// recorded in `config.json`. Purely a throughput knob: step outputs
+    /// are bit-identical at any value.
+    pub num_threads: usize,
 }
 
 impl TrainConfig {
@@ -53,6 +58,7 @@ impl TrainConfig {
             ckpt_every: 0,
             run_dir: PathBuf::from("runs/quickstart"),
             log_every: 10,
+            num_threads: 0,
         }
     }
 
@@ -80,10 +86,11 @@ impl TrainConfig {
             ckpt_every: 0,
             run_dir: PathBuf::from(format!("runs/{name}")),
             log_every: (steps / 50).max(1),
+            num_threads: 0,
         })
     }
 
-    /// JSON description of the run (written to <run_dir>/config.json).
+    /// JSON description of the run (written to `<run_dir>/config.json`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("preset", Json::str(self.preset.clone())),
@@ -98,6 +105,7 @@ impl TrainConfig {
             ("ckpt_every", Json::num(self.ckpt_every as f64)),
             ("log_every", Json::num(self.log_every as f64)),
             ("run_dir", Json::str(self.run_dir.display().to_string())),
+            ("num_threads", Json::num(self.num_threads as f64)),
         ])
     }
 

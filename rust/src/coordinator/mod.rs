@@ -1,6 +1,12 @@
 //! Serving coordinator: request router + continuous batcher over the
 //! linear-time sampler (vLLM-router-style L3).
 //!
+//! * [`engine`] — the continuous-batching [`Engine`]: one dedicated thread
+//!   owns the sampler, requests enter over channels into free batch slots.
+//! * [`protocol`] — newline-delimited JSON wire format
+//!   ([`WireRequest`]/[`WireResponse`]).
+//! * [`server`] — the TCP front-end ([`serve`]), thread-per-connection.
+//!
 //! The decode artifact is compiled for a fixed batch size B; the engine
 //! treats its B rows as *slots*. Requests are admitted into free slots at
 //! any step boundary (continuous batching): a slot runs prompt prefill
@@ -9,6 +15,13 @@
 //! zeroed (`Sampler::reset_slot`) and immediately reusable. Per-token cost
 //! is O(S + 2L) regardless of how long each sequence has run — the
 //! compressive cache never grows.
+//!
+//! Threading: the engine's single step thread is the *coordinator*
+//! concurrency level; *compute* concurrency lives below it, inside each
+//! native step, which fans batch slots out across the kernel pool
+//! (`native::kernels`, DESIGN.md §7). The two compose — one step thread,
+//! many kernel lanes — so slot admission order, and therefore sampling,
+//! stays deterministic while the hardware stays busy.
 
 pub mod engine;
 pub mod protocol;

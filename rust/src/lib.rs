@@ -9,7 +9,9 @@
 //!   - [`native`]: a pure-rust, multi-layer, multi-head f32 Transformer-VQ
 //!     engine (Theorem 3.7 block recurrence + compressive cache). Always
 //!     available; a fresh checkout builds, trains, serves, and benchmarks
-//!     with no python, artifacts, or FFI.
+//!     with no python, artifacts, or FFI. Multi-core: cache-blocked
+//!     kernels + a batch-lane thread pool ([`native::kernels`]), with
+//!     bit-identical results at any thread count (DESIGN.md §7).
 //!   - `runtime::PjrtBackend` (cargo feature `pjrt`): the JAX Transformer-VQ
 //!     model AOT-lowered to `artifacts/*.hlo.txt` and executed via the PJRT
 //!     C API. Python never runs at request time.

@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 use transformer_vq::config::TrainConfig;
 use transformer_vq::coordinator::{serve, Engine};
 use transformer_vq::rng::Rng;
-use transformer_vq::runtime::auto_backend;
+use transformer_vq::runtime::{auto_backend, auto_backend_threads};
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::schedule::LrSchedule;
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
@@ -29,10 +29,15 @@ USAGE: tvq [--artifacts DIR] <command> [flags]
 
 COMMANDS
   train     --preset P --steps N [--max-lr F] [--run-dir D] [--seed S]
+            [--threads N]
   generate  --preset P [--checkpoint D] [--prompt S] [--tokens N]
-            [--temperature F] [--top-p F] [--seed S]
-  serve     --preset P [--addr HOST:PORT] [--checkpoint D]
+            [--temperature F] [--top-p F] [--seed S] [--threads N]
+  serve     --preset P [--addr HOST:PORT] [--checkpoint D] [--threads N]
   inspect
+
+--threads N pins the native backend's per-step thread budget (default:
+all cores; also settable via TVQ_NUM_THREADS). Results are bit-identical
+at any thread count.
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -97,6 +102,13 @@ fn main() -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     let dir = artifacts.unwrap_or_else(transformer_vq::artifacts_dir);
+    let num_threads: usize = args.num("threads", 0)?;
+    if num_threads > 0 {
+        // NativeOptions::default() reads this at backend construction, so
+        // the knob reaches every executor regardless of which thread
+        // builds the backend (the serve engine constructs it off-thread)
+        std::env::set_var("TVQ_NUM_THREADS", num_threads.to_string());
+    }
 
     match cmd.as_str() {
         "inspect" => {
@@ -117,9 +129,12 @@ fn main() -> Result<()> {
         "train" => {
             let preset = args.str("preset", "quickstart");
             let steps: u64 = args.num("steps", 100)?;
-            let backend = auto_backend(&dir)?;
             let mut cfg = TrainConfig::preset(&preset, steps)?;
             cfg.seed = args.num("seed", 0u64)?;
+            cfg.num_threads = num_threads;
+            // config-level knob: the backend (and so every executor this
+            // run loads) is built with exactly the budget the run records
+            let backend = auto_backend_threads(&dir, cfg.num_threads)?;
             if let Some(lr) = args.opt("max-lr") {
                 cfg.schedule = LrSchedule::paper_scaled(lr.parse()?, steps);
             }

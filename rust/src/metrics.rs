@@ -31,12 +31,19 @@ impl ThroughputMeter {
     }
 
     pub fn observe(&mut self, tokens: u64) {
+        self.observe_at(tokens, Instant::now());
+    }
+
+    /// [`Self::observe`] with an injected clock — the production path
+    /// passes `Instant::now()`; tests pass synthetic instants so timing
+    /// assertions never depend on `thread::sleep` under a loaded runner.
+    pub fn observe_at(&mut self, tokens: u64, now: Instant) {
         if self.skipped < self.skip {
             self.skipped += 1;
             return;
         }
         if self.start.is_none() {
-            self.start = Some(Instant::now());
+            self.start = Some(now);
             // the first timed observation opens the interval; its tokens
             // were produced before it, so do not count them
             return;
@@ -45,7 +52,13 @@ impl ThroughputMeter {
     }
 
     pub fn tokens_per_sec(&self) -> Option<f64> {
-        let elapsed = self.start?.elapsed().as_secs_f64();
+        self.tokens_per_sec_at(Instant::now())
+    }
+
+    /// [`Self::tokens_per_sec`] against an injected clock (see
+    /// [`Self::observe_at`]).
+    pub fn tokens_per_sec_at(&self, now: Instant) -> Option<f64> {
+        let elapsed = now.saturating_duration_since(self.start?).as_secs_f64();
         if elapsed <= 0.0 || self.tokens == 0 {
             return None;
         }
@@ -176,14 +189,20 @@ mod tests {
 
     #[test]
     fn throughput_skips_warmup() {
+        // synthetic clock: no sleeps, so the assertion is exact and cannot
+        // flake under a loaded CI runner
+        let t0 = Instant::now();
         let mut m = ThroughputMeter::new(2);
-        m.observe(100);
-        m.observe(100);
-        assert!(m.tokens_per_sec().is_none());
-        m.observe(100); // opens the interval
-        std::thread::sleep(Duration::from_millis(5));
-        m.observe(100);
-        let tps = m.tokens_per_sec().unwrap();
-        assert!(tps > 0.0);
+        m.observe_at(100, t0);
+        m.observe_at(100, t0);
+        assert!(m.tokens_per_sec_at(t0).is_none());
+        m.observe_at(100, t0); // opens the interval at t0
+        m.observe_at(100, t0 + Duration::from_millis(250));
+        m.observe_at(100, t0 + Duration::from_millis(500));
+        // 200 counted tokens over 0.5s == 400 tok/s, exactly
+        let tps = m.tokens_per_sec_at(t0 + Duration::from_millis(500)).unwrap();
+        assert!((tps - 400.0).abs() < 1e-6, "tps {tps}");
+        // a clock that has not advanced reports nothing rather than inf
+        assert!(m.tokens_per_sec_at(t0).is_none());
     }
 }

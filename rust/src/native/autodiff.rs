@@ -39,65 +39,26 @@
 //! tests freeze the assignments and offsets captured at the center point
 //! ([`QuantMode::Frozen`]) — the surrogate whose exact gradient the STE
 //! backward computes — and finite-difference that.
+//!
+//! # Parallelism
+//!
+//! Batch rows are independent through the whole forward + reverse sweep
+//! (the carry, tape, quantizer records, and per-(head, code) cache-fold
+//! adjoint accumulators are all per-row), so [`train_forward_backward`]
+//! runs one row per pool thread (`super::kernels::parallel_for_items`):
+//! each row fills a private gradient vector and [`TrainAccum`], and the
+//! caller merges them in fixed row order — results are bit-identical at
+//! any thread count. All matmul-family math routes through the f64 kernels
+//! in [`super::kernels`].
 
 use std::ops::Range;
 
 use crate::manifest::ModelConfig;
 
+use super::kernels::{
+    self, dot64 as dot, matvec64 as matvec, matvec64_t as matvec_t, outer_acc64 as outer_acc,
+};
 use super::model::{LayerParams, Params, State, TrainAccum};
-
-// ---------------------------------------------------------------------------
-// flat f64 math helpers
-// ---------------------------------------------------------------------------
-
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
-}
-
-/// out = x @ w, with w row-major [x.len(), out.len()].
-fn matvec(w: &[f64], x: &[f64], out: &mut [f64]) {
-    let o = out.len();
-    debug_assert_eq!(w.len(), x.len() * o);
-    out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * o..(i + 1) * o];
-        for (acc, &wv) in out.iter_mut().zip(row) {
-            *acc += xi * wv;
-        }
-    }
-}
-
-/// out[i] = sum_o w[i, o] * y[o]  (the transpose product, for backward).
-fn matvec_t(w: &[f64], y: &[f64], out: &mut [f64]) {
-    let o = y.len();
-    debug_assert_eq!(w.len(), out.len() * o);
-    for (i, acc) in out.iter_mut().enumerate() {
-        *acc = dot(&w[i * o..(i + 1) * o], y);
-    }
-}
-
-/// g[i, o] += x[i] * y[o]  (outer-product gradient accumulation).
-fn outer_acc(g: &mut [f64], x: &[f64], y: &[f64]) {
-    let o = y.len();
-    debug_assert_eq!(g.len(), x.len() * o);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &mut g[i * o..(i + 1) * o];
-        for (acc, &yv) in row.iter_mut().zip(y) {
-            *acc += xi * yv;
-        }
-    }
-}
 
 fn rmsnorm(x: &[f64], gain: &[f64], out: &mut [f64]) {
     let n = x.len().max(1) as f64;
@@ -430,6 +391,55 @@ impl Carry64 {
                 .collect(),
         }
     }
+
+    /// Split into per-row views along the leading batch dimension (the f64
+    /// twin of `model::State::rows`): each [`RowCarry64`] borrows a
+    /// disjoint slice of every leaf, so rows can run on separate threads.
+    pub fn rows(&mut self) -> Vec<RowCarry64<'_>> {
+        let b = self.pos.len();
+        let n_layers = self.layers.len();
+        let mut rows: Vec<RowCarry64<'_>> = self
+            .pos
+            .iter_mut()
+            .map(|pos| RowCarry64 { pos, layers: Vec::with_capacity(n_layers) })
+            .collect();
+        if b == 0 {
+            return rows;
+        }
+        for lst in &mut self.layers {
+            let mut wk = lst.win_k.chunks_mut(lst.win_k.len() / b);
+            let mut wv = lst.win_v.chunks_mut(lst.win_v.len() / b);
+            let mut wz = lst.win_z.chunks_mut(lst.win_z.len() / b);
+            let mut cu = lst.cache_u.chunks_mut(lst.cache_u.len() / b);
+            let mut cl = lst.cache_l.chunks_mut(lst.cache_l.len() / b);
+            for row in rows.iter_mut() {
+                row.layers.push(RowLayerCarry64 {
+                    win_k: wk.next().expect("win_k rows"),
+                    win_v: wv.next().expect("win_v rows"),
+                    win_z: wz.next().expect("win_z rows"),
+                    cache_u: cu.next().expect("cache_u rows"),
+                    cache_l: cl.next().expect("cache_l rows"),
+                });
+            }
+        }
+        rows
+    }
+}
+
+/// One layer of one batch row's f64 carry: disjoint mutable views into the
+/// `[B, ...]` leaves of [`Carry64`].
+pub(crate) struct RowLayerCarry64<'a> {
+    pub win_k: &'a mut [f64],   // [2L, H, dk]
+    pub win_v: &'a mut [f64],   // [2L, H, dv]
+    pub win_z: &'a mut [i32],   // [2L, H]
+    pub cache_u: &'a mut [f64], // [H, S, dv]
+    pub cache_l: &'a mut [f64], // [H, S]
+}
+
+/// One batch row of [`Carry64`]: the unit of training parallelism.
+pub(crate) struct RowCarry64<'a> {
+    pub pos: &'a mut i32,
+    pub layers: Vec<RowLayerCarry64<'a>>,
 }
 
 // ---------------------------------------------------------------------------
@@ -455,11 +465,6 @@ impl FrozenQuant {
         let n = cfg.batch_size * cfg.window_len * cfg.n_layers * cfg.n_heads;
         Self { z: vec![0; n], off: vec![0.0; n * cfg.d_k] }
     }
-
-    #[inline]
-    fn ix(&self, cfg: &ModelConfig, row: usize, t: usize, l: usize, hd: usize) -> usize {
-        ((row * cfg.window_len + t) * cfg.n_layers + l) * cfg.n_heads + hd
-    }
 }
 
 #[cfg_attr(not(test), allow(dead_code))]
@@ -470,6 +475,37 @@ pub(crate) enum QuantMode<'a> {
     Capture(&'a mut FrozenQuant),
     /// Replay frozen assignments/offsets (FD surrogate; see module docs).
     Frozen(&'a FrozenQuant),
+}
+
+/// One batch row's slice of a [`QuantMode`]: the `[B, W, nl, H]` record
+/// buffers split along B, indexed row-locally by `(t·nl + l)·H + hd`, so
+/// rows record/replay concurrently without sharing mutable state.
+enum RowQuant<'a> {
+    Nearest,
+    Capture { z: &'a mut [usize], off: &'a mut [f64] },
+    Frozen { z: &'a [usize], off: &'a [f64] },
+}
+
+/// Split a [`QuantMode`] into `B` disjoint per-row [`RowQuant`]s.
+fn split_quant<'a>(cfg: &ModelConfig, quant: QuantMode<'a>) -> Vec<RowQuant<'a>> {
+    let b = cfg.batch_size;
+    let stride = cfg.window_len * cfg.n_layers * cfg.n_heads;
+    let mut rows: Vec<RowQuant<'a>> = Vec::with_capacity(b);
+    match quant {
+        QuantMode::Nearest => rows.extend((0..b).map(|_| RowQuant::Nearest)),
+        QuantMode::Capture(fr) => {
+            let zs = fr.z.chunks_mut(stride);
+            let offs = fr.off.chunks_mut(stride * cfg.d_k);
+            rows.extend(zs.zip(offs).map(|(z, off)| RowQuant::Capture { z, off }));
+        }
+        QuantMode::Frozen(fr) => {
+            let zs = fr.z.chunks(stride);
+            let offs = fr.off.chunks(stride * cfg.d_k);
+            rows.extend(zs.zip(offs).map(|(z, off)| RowQuant::Frozen { z, off }));
+        }
+    }
+    debug_assert_eq!(rows.len(), b);
+    rows
 }
 
 // ---------------------------------------------------------------------------
@@ -593,6 +629,12 @@ pub(crate) struct BackpropOut {
 /// exactly like the streaming engine) + reverse sweep. `tokens` is the
 /// `[B, W+1]` window; the dense "full" preset path (quadratic in-window
 /// attention, no quantizer/cache/bias) is selected by `cfg.attn_type`.
+///
+/// Batch rows run one per pool thread (`nt` lanes; 0 = all cores): each
+/// row owns its carry view, quantizer slice, tape, gradient vector, and
+/// EMA accumulator, and the merge below walks rows in fixed order — so the
+/// returned gradients and metrics are bit-identical at any `nt`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn train_forward_backward(
     cfg: &ModelConfig,
     px: &ParamIx,
@@ -600,28 +642,58 @@ pub(crate) fn train_forward_backward(
     cb: &[Vec<f64>],
     carry: &mut Carry64,
     tokens: &[i32],
-    mut quant: QuantMode<'_>,
+    quant: QuantMode<'_>,
+    nt: usize,
 ) -> BackpropOut {
     debug_assert_eq!(params.len(), px.total());
     let w = cfg.window_len;
     let b = cfg.batch_size;
     debug_assert_eq!(tokens.len(), b * (w + 1));
     let dense = cfg.attn_type == "full";
-    let mut grads = vec![0.0; px.total()];
-    let mut accum = TrainAccum::new(cfg);
-    let mut ce_sum = 0.0;
     let n_tok = (b * w) as f64;
     let commit_n = (b * w * cfg.n_heads) as f64;
 
-    for row in 0..b {
-        let toks = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
-        let tape =
-            forward_row(cfg, px, params, cb, carry, row, toks, &mut quant, &mut accum, dense);
-        for t in 0..w {
-            let pr = tape.probs[t * cfg.vocab_size + tape.targets[t]];
-            ce_sum -= pr.max(1e-300).ln();
+    struct RowOut {
+        ce: f64,
+        grads: Vec<f64>,
+        accum: TrainAccum,
+    }
+    let mut outs: Vec<Option<RowOut>> = (0..b).map(|_| None).collect();
+    {
+        let row_quants = split_quant(cfg, quant);
+        let mut work: Vec<_> = carry
+            .rows()
+            .into_iter()
+            .zip(row_quants)
+            .zip(outs.iter_mut())
+            .map(|((rc, rq), out)| (rc, rq, out))
+            .collect();
+        kernels::parallel_for_items(nt, &mut work, |row, (rc, rq, out)| {
+            let toks = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
+            let mut accum = TrainAccum::new(cfg);
+            let mut grads = vec![0.0; px.total()];
+            let tape = forward_row(cfg, px, params, cb, rc, toks, rq, &mut accum, dense);
+            let mut ce = 0.0;
+            for t in 0..w {
+                let pr = tape.probs[t * cfg.vocab_size + tape.targets[t]];
+                ce -= pr.max(1e-300).ln();
+            }
+            backward_row(cfg, px, params, cb, &tape, toks, &mut grads, n_tok, commit_n, dense);
+            **out = Some(RowOut { ce, grads, accum });
+        });
+    }
+
+    // deterministic merge: fixed row order, independent of the schedule
+    let mut grads = vec![0.0; px.total()];
+    let mut accum = TrainAccum::new(cfg);
+    let mut ce_sum = 0.0;
+    for out in outs {
+        let ro = out.expect("every batch row produced an output");
+        ce_sum += ro.ce;
+        for (g, &rg) in grads.iter_mut().zip(&ro.grads) {
+            *g += rg;
         }
-        backward_row(cfg, px, params, cb, &tape, toks, &mut grads, n_tok, commit_n, dense);
+        accum.merge(&ro.accum);
     }
 
     let commit = if accum.commit_n > 0.0 { accum.commit_sum / accum.commit_n } else { 0.0 };
@@ -634,10 +706,9 @@ fn forward_row(
     px: &ParamIx,
     params: &[f64],
     cb: &[Vec<f64>],
-    carry: &mut Carry64,
-    row: usize,
+    rc: &mut RowCarry64<'_>,
     toks: &[i32],
-    quant: &mut QuantMode<'_>,
+    quant: &mut RowQuant<'_>,
     accum: &mut TrainAccum,
     dense: bool,
 ) -> RowTape {
@@ -652,16 +723,16 @@ fn forward_row(
     let q_scale = 1.0 / (dk as f64).sqrt();
 
     let mut tape = RowTape::new(cfg);
-    let pos0 = carry.pos[row].max(0) as usize;
+    let pos0 = (*rc.pos).max(0) as usize;
     tape.pos0 = pos0;
     if !dense {
         for l in 0..nl {
-            let lst = &carry.layers[l];
-            tape.init_win_k[l] = lst.win_k[row * w2l * hdk..(row + 1) * w2l * hdk].to_vec();
-            tape.init_win_v[l] = lst.win_v[row * w2l * hdv..(row + 1) * w2l * hdv].to_vec();
+            let lst = &rc.layers[l];
+            tape.init_win_k[l] = lst.win_k.to_vec();
+            tape.init_win_v[l] = lst.win_v.to_vec();
             tape.snaps[l].push(CacheSnap {
-                u: lst.cache_u[row * h_n * s * dv..(row + 1) * h_n * s * dv].to_vec(),
-                cnt: lst.cache_l[row * h_n * s..(row + 1) * h_n * s].to_vec(),
+                u: lst.cache_u.to_vec(),
+                cnt: lst.cache_l.to_vec(),
             });
         }
     }
@@ -698,23 +769,23 @@ fn forward_row(
                 for hd in 0..h_n {
                     let kh = &tape.k[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk];
                     let head_cb = &cb[l][hd * s * dk..(hd + 1) * s * dk];
-                    let (z, khat): (usize, Vec<f64>) = match quant {
-                        QuantMode::Nearest | QuantMode::Capture(_) => {
+                    // row-local record index: [W, nl, H]
+                    let fi = (t * nl + l) * h_n + hd;
+                    let (z, khat): (usize, Vec<f64>) = match &*quant {
+                        RowQuant::Nearest | RowQuant::Capture { .. } => {
                             let z = nearest_code(kh, head_cb, s, dk);
                             (z, head_cb[z * dk..(z + 1) * dk].to_vec())
                         }
-                        QuantMode::Frozen(fr) => {
-                            let fi = fr.ix(cfg, row, t, l, hd);
-                            let z = fr.z[fi];
-                            let kh_off = &fr.off[fi * dk..(fi + 1) * dk];
-                            (z, kh.iter().zip(kh_off).map(|(a, b)| a + b).collect())
+                        RowQuant::Frozen { z, off } => {
+                            let zz = z[fi];
+                            let kh_off = &off[fi * dk..(fi + 1) * dk];
+                            (zz, kh.iter().zip(kh_off).map(|(a, b)| a + b).collect())
                         }
                     };
-                    if let QuantMode::Capture(fr) = quant {
-                        let fi = fr.ix(cfg, row, t, l, hd);
-                        fr.z[fi] = z;
+                    if let RowQuant::Capture { z: zrec, off } = quant {
+                        zrec[fi] = z;
                         for (o, (a, b)) in
-                            fr.off[fi * dk..(fi + 1) * dk].iter_mut().zip(khat.iter().zip(kh))
+                            off[fi * dk..(fi + 1) * dk].iter_mut().zip(khat.iter().zip(kh))
                         {
                             *o = a - b;
                         }
@@ -737,7 +808,7 @@ fn forward_row(
                     }
                 }
 
-                let lst = &mut carry.layers[l];
+                let lst = &mut rc.layers[l];
                 // fold block n-2 into the compressive cache (Remark 3.9)
                 if cfg.use_cache && li == 0 && n_blk >= 2 {
                     let start = (n_blk - 2) * l_blk;
@@ -745,9 +816,9 @@ fn forward_row(
                     for j in start..start + l_blk {
                         let slot = j % w2l;
                         for hd in 0..h_n {
-                            let win_ix = (row * w2l + slot) * h_n + hd;
+                            let win_ix = slot * h_n + hd;
                             let zc = lst.win_z[win_ix].max(0) as usize % s;
-                            let cl_ix = (row * h_n + hd) * s + zc;
+                            let cl_ix = hd * s + zc;
                             let cnt = lst.cache_l[cl_ix] + 1.0;
                             let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
                             let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
@@ -763,8 +834,8 @@ fn forward_row(
                         }
                     }
                     tape.snaps[l].push(CacheSnap {
-                        u: lst.cache_u[row * h_n * s * dv..(row + 1) * h_n * s * dv].to_vec(),
-                        cnt: lst.cache_l[row * h_n * s..(row + 1) * h_n * s].to_vec(),
+                        u: lst.cache_u.to_vec(),
+                        cnt: lst.cache_l.to_vec(),
                     });
                     tape.folds[l].push(FoldEvent { t, items });
                 }
@@ -772,7 +843,7 @@ fn forward_row(
                 // write the current token into its window slot
                 let slot = pos % w2l;
                 for hd in 0..h_n {
-                    let win_ix = (row * w2l + slot) * h_n + hd;
+                    let win_ix = slot * h_n + hd;
                     lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(
                         &tape.khat[tl * hdk + hd * dk..tl * hdk + (hd + 1) * dk],
                     );
@@ -790,7 +861,7 @@ fn forward_row(
                     let mut srcs: Vec<Src> = Vec::with_capacity(s + w2l);
                     if cfg.use_cache {
                         for code in 0..s {
-                            let cl_ix = (row * h_n + hd) * s + code;
+                            let cl_ix = hd * s + code;
                             let cl = lst.cache_l[cl_ix];
                             if cl > 0.0 {
                                 let crow = &cb[l][(hd * s + code) * dk..(hd * s + code + 1) * dk];
@@ -801,7 +872,7 @@ fn forward_row(
                     }
                     let bias = &params[px.bias(l)];
                     for j in lo..=pos {
-                        let win_ix = (row * w2l + j % w2l) * h_n + hd;
+                        let win_ix = (j % w2l) * h_n + hd;
                         let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
                         scores.push(dot(qh, kw) + bias[hd * w2l + (pos - j)]);
                         srcs.push(Src::Win { j });
@@ -811,11 +882,11 @@ fn forward_row(
                     for (&p_i, &src) in scores.iter().zip(&srcs) {
                         let val = match src {
                             Src::Cache { code, .. } => {
-                                let cl_ix = (row * h_n + hd) * s + code;
+                                let cl_ix = hd * s + code;
                                 &lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv]
                             }
                             Src::Win { j } => {
-                                let win_ix = (row * w2l + j % w2l) * h_n + hd;
+                                let win_ix = (j % w2l) * h_n + hd;
                                 &lst.win_v[win_ix * dv..(win_ix + 1) * dv]
                             }
                         };
@@ -905,7 +976,7 @@ fn forward_row(
         }
         tape.targets[t] = (toks[t + 1].max(0) as usize).min(v_sz - 1);
     }
-    carry.pos[row] = (pos0 + w) as i32;
+    *rc.pos = (pos0 + w) as i32;
     tape
 }
 
@@ -1281,7 +1352,16 @@ mod tests {
         let mut carry = Carry64::zeros(cfg);
         for _ in 0..warm_windows {
             let toks = rand_tokens(cfg, &mut rng);
-            train_forward_backward(cfg, &px, &params, &cb, &mut carry, &toks, QuantMode::Nearest);
+            train_forward_backward(
+                cfg,
+                &px,
+                &params,
+                &cb,
+                &mut carry,
+                &toks,
+                QuantMode::Nearest,
+                2,
+            );
         }
         let toks = rand_tokens(cfg, &mut rng);
         let dense = cfg.attn_type == "full";
@@ -1296,13 +1376,23 @@ mod tests {
                 &mut c,
                 &toks,
                 if dense { QuantMode::Nearest } else { QuantMode::Capture(&mut frozen) },
+                2,
             )
         };
         if !dense && cfg.use_cache && cfg.window_len >= 3 * cfg.block_len && warm_windows == 0 {
             // the multi-block window really exercised the fold path
             let folded: f64 = {
                 let mut c = carry.clone();
-                train_forward_backward(cfg, &px, &params, &cb, &mut c, &toks, QuantMode::Nearest);
+                train_forward_backward(
+                    cfg,
+                    &px,
+                    &params,
+                    &cb,
+                    &mut c,
+                    &toks,
+                    QuantMode::Nearest,
+                    2,
+                );
                 c.layers[0].cache_l.iter().sum()
             };
             assert!(folded > 0.0, "cache fold path not exercised");
@@ -1317,6 +1407,7 @@ mod tests {
                 &mut c,
                 &toks,
                 if dense { QuantMode::Nearest } else { QuantMode::Frozen(&frozen) },
+                2,
             );
             o.ce + cfg.commit_coef * o.commit
         };
@@ -1441,8 +1532,16 @@ mod tests {
             .map(|l| l.iter().map(|&x| x as f64).collect())
             .collect();
         let mut carry = Carry64::zeros(&cfg);
-        let out =
-            train_forward_backward(&cfg, &px, &flat, &cb64, &mut carry, &tokens, QuantMode::Nearest);
+        let out = train_forward_backward(
+            &cfg,
+            &px,
+            &flat,
+            &cb64,
+            &mut carry,
+            &tokens,
+            QuantMode::Nearest,
+            2,
+        );
         assert!(
             (out.ce - ce32).abs() < 1e-4,
             "autodiff CE {} != streaming CE {ce32}",
@@ -1465,6 +1564,49 @@ mod tests {
             close(&a.win_v, &b.win_v, "win_v");
             close(&a.cache_u, &b.cache_u, "cache_u");
             close(&a.cache_l, &b.cache_l, "cache_l");
+        }
+    }
+
+    /// The batch-lane parallel sweep must be bit-deterministic: per-row
+    /// gradients are private and merged in row order, so the thread count
+    /// cannot change a single bit of the result.
+    #[test]
+    fn gradients_bit_identical_across_thread_counts() {
+        let cfg = test_cfg(8, 2, 3, 5, 6, 4, 16, 4, 17, 2, "vq", true);
+        let (px, params, cb) = rand_setup(&cfg, 5);
+        let mut rng = Rng::new(0x7EAD);
+        let toks = rand_tokens(&cfg, &mut rng);
+        let run = |nt: usize| {
+            let mut carry = Carry64::zeros(&cfg);
+            let out = train_forward_backward(
+                &cfg,
+                &px,
+                &params,
+                &cb,
+                &mut carry,
+                &toks,
+                QuantMode::Nearest,
+                nt,
+            );
+            (out, carry)
+        };
+        let (out1, carry1) = run(1);
+        for nt in [2usize, 4] {
+            let (outn, carryn) = run(nt);
+            assert_eq!(out1.ce.to_bits(), outn.ce.to_bits(), "ce at nt={nt}");
+            assert_eq!(
+                out1.grads.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+                outn.grads.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+                "grads diverged at nt={nt}"
+            );
+            assert_eq!(carry1.pos, carryn.pos);
+            for (a, b) in carry1.layers.iter().zip(&carryn.layers) {
+                assert_eq!(a.win_z, b.win_z);
+                assert_eq!(
+                    a.cache_u.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.cache_u.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
         }
     }
 

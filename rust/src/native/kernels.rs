@@ -1,0 +1,670 @@
+//! Compute kernels for the native backend: cache-blocked matmuls with
+//! unrolled, auto-vectorizable inner loops, plus the persistent thread pool
+//! behind the engine's batch-lane parallelism.
+//!
+//! # Kernel design
+//!
+//! Every matmul-family call site in the native engine (`model`, `step`,
+//! `autodiff`) routes through this module, so loop order, tiling, and
+//! unrolling decisions live in exactly one place. All kernels operate on
+//! flat row-major slices and are individually sequential and deterministic:
+//! for a fixed input, the floating-point accumulation order never depends
+//! on the thread count, which is what lets the engine promise bit-identical
+//! results at `num_threads = 1` and `num_threads = N` (asserted by
+//! `rust/tests/parallel_determinism.rs`).
+//!
+//! The panel sizes [`TILE_K`] × [`TILE_N`] are chosen so one f32 panel of
+//! the right-hand matrix (the streamed operand) fits in a 32 KiB L1 data
+//! cache; see `DESIGN.md` §7 ("Performance model") for the derivation and
+//! the measured scaling curves.
+//!
+//! # Parallelism
+//!
+//! [`parallel_for`] / [`parallel_for_items`] execute an index space on a
+//! lazily spawned, process-global pool of parked worker threads (plain
+//! `std::thread` — the deployment image vendors no rayon, so the pool is
+//! ~100 lines of std). Work items are claimed with an atomic counter, so
+//! scheduling is dynamic, but each item is executed exactly once by exactly
+//! one thread and items never share mutable state — results cannot depend
+//! on the schedule. Dispatch latency is a few microseconds per call; split
+//! points in the engine are chosen so the work quantum per item (a whole
+//! batch row per step, a whole output-row block per GEMM) is far above
+//! that (see `DESIGN.md` §7).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// tiling parameters
+// ---------------------------------------------------------------------------
+
+/// Rows of the right-hand operand (the `k` dimension) per cache block.
+///
+/// One f32 panel of `TILE_K × TILE_N` elements is 32 KiB — sized to sit in
+/// a typical L1 data cache while it is streamed over every output row.
+pub const TILE_K: usize = 64;
+
+/// Columns of the right-hand operand (the `n` dimension) per cache block.
+pub const TILE_N: usize = 128;
+
+// ---------------------------------------------------------------------------
+// f32 kernels (forward / serving path)
+// ---------------------------------------------------------------------------
+
+/// Dot product of two equal-length f32 slices.
+///
+/// Loop order: single pass, 4-way unrolled into independent partial sums
+/// (breaks the serial FP dependence chain so the backend can keep ~4 FMAs
+/// in flight / vectorize). Complexity O(n); accumulation order is fixed.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// `out = x @ w`, with `w` row-major `[x.len(), out.len()]`. Overwrites out.
+///
+/// Loop order: k (rows of `w`, 4-way unrolled) outer, contiguous n inner —
+/// an axpy formulation that walks `w` exactly once in storage order, so the
+/// inner loop is a unit-stride multiply-add the compiler auto-vectorizes.
+/// Complexity O(k·n). The `k` dimension here is `d_model`-sized, so no
+/// k-blocking is needed: the accumulator `out` itself stays resident.
+pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    matvec_add(w, x, out);
+}
+
+/// `out += x @ w` (residual add), same layout and loop order as [`matvec`].
+pub fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n);
+    let mut i = 0;
+    while i + 4 <= k {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            i += 4;
+            continue;
+        }
+        let r0 = &w[i * n..(i + 1) * n];
+        let r1 = &w[(i + 1) * n..(i + 2) * n];
+        let r2 = &w[(i + 2) * n..(i + 3) * n];
+        let r3 = &w[(i + 3) * n..(i + 4) * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+        }
+        i += 4;
+    }
+    while i < k {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &w[i * n..(i + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `c = a @ b`: row-major `a [m,k]`, `b [k,n]`, `c [m,n]`. Overwrites `c`.
+///
+/// Cache-blocked: loop order is k-block ([`TILE_K`]) → n-block
+/// ([`TILE_N`]) → output row `i` → unrolled k micro-step → contiguous j.
+/// The active `b` panel (`TILE_K × TILE_N` = 32 KiB) stays L1-resident
+/// while it is reused across all `m` output rows; `a` is read in storage
+/// order; `c` rows accumulate in place. Complexity O(m·k·n). Each output
+/// row's accumulation order is a function of the loop structure only —
+/// never of how rows are distributed over threads — so [`gemm_par`] is
+/// bit-identical to this kernel.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    gemm_add(m, k, n, a, b, c);
+}
+
+/// `c += a @ b`, same layout, blocking, and loop order as [`gemm`].
+pub fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE_N).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                let mut kk = k0;
+                while kk + 4 <= k1 {
+                    let (x0, x1, x2, x3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    let r0 = &b[kk * n + j0..kk * n + j1];
+                    let r1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                    let r2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                    let r3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                    for (j, o) in crow.iter_mut().enumerate() {
+                        *o += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < k1 {
+                    let xi = arow[kk];
+                    if xi != 0.0 {
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in crow.iter_mut().zip(brow) {
+                            *o += xi * bv;
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// Row-parallel [`gemm`]: output rows of `c` are split into contiguous
+/// bands, one work item per band, executed on the pool with `num_threads`
+/// lanes (0 = all cores). Every row is computed by the same sequential
+/// [`gemm_add`] loop regardless of which thread owns its band, so the
+/// result is bit-identical to the sequential kernel at any thread count.
+pub fn gemm_par(
+    num_threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(c.len(), m * n);
+    let nt = effective_threads(num_threads);
+    if nt <= 1 || m <= 1 {
+        gemm(m, k, n, a, b, c);
+        return;
+    }
+    let band = m.div_ceil(nt);
+    let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
+    parallel_for_items(nt, &mut items, |_, (ci, cband)| {
+        let i0 = *ci * band;
+        let rows = cband.len() / n;
+        cband.fill(0.0);
+        gemm_add(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, cband);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f64 kernels (autodiff / training path)
+// ---------------------------------------------------------------------------
+
+/// f64 twin of [`dot`]: 4-way unrolled single pass, fixed accumulation
+/// order, O(n).
+#[inline]
+pub fn dot64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// f64 twin of [`matvec`]: `out = x @ w`, `w` row-major `[x.len(),
+/// out.len()]`. Same axpy loop order (unrolled k outer, contiguous n
+/// inner), O(k·n).
+pub fn matvec64(w: &[f64], x: &[f64], out: &mut [f64]) {
+    out.fill(0.0);
+    matvec64_add(w, x, out);
+}
+
+/// f64 twin of [`matvec_add`]: `out += x @ w`.
+pub fn matvec64_add(w: &[f64], x: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n);
+    let mut i = 0;
+    while i + 4 <= k {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            i += 4;
+            continue;
+        }
+        let r0 = &w[i * n..(i + 1) * n];
+        let r1 = &w[(i + 1) * n..(i + 2) * n];
+        let r2 = &w[(i + 2) * n..(i + 3) * n];
+        let r3 = &w[(i + 3) * n..(i + 4) * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+        }
+        i += 4;
+    }
+    while i < k {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &w[i * n..(i + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Transpose product for the reverse sweep: `out[i] = Σ_o w[i,o]·y[o]`
+/// with `w` row-major `[out.len(), y.len()]`. Loop order: one [`dot64`]
+/// per output element — each reads a contiguous row of `w`, so the walk is
+/// storage-order and unit-stride. Complexity O(k·n). Overwrites `out`.
+pub fn matvec64_t(w: &[f64], y: &[f64], out: &mut [f64]) {
+    let o = y.len();
+    debug_assert_eq!(w.len(), out.len() * o);
+    for (i, acc) in out.iter_mut().enumerate() {
+        *acc = dot64(&w[i * o..(i + 1) * o], y);
+    }
+}
+
+/// Outer-product gradient accumulation: `g[i,o] += x[i]·y[o]`, `g`
+/// row-major `[x.len(), y.len()]`. Loop order: rows of `g` outer (skipping
+/// `x[i] == 0`, which embeddings/one-hots hit often), contiguous `o`
+/// inner. Complexity O(k·n).
+pub fn outer_acc64(g: &mut [f64], x: &[f64], y: &[f64]) {
+    let o = y.len();
+    debug_assert_eq!(g.len(), x.len() * o);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &mut g[i * o..(i + 1) * o];
+        for (acc, &yv) in row.iter_mut().zip(y) {
+            *acc += xi * yv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread pool
+// ---------------------------------------------------------------------------
+
+/// Number of hardware threads (the `num_threads = 0` / auto default).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn effective_threads(num_threads: usize) -> usize {
+    if num_threads == 0 {
+        default_threads()
+    } else {
+        num_threads
+    }
+}
+
+/// One submitted index space. The raw closure pointer is only dereferenced
+/// after a *successful* claim (`next.fetch_add < n`): `parallel_for`
+/// cannot return until `finished == n`, which requires all `n` successful
+/// claims to have already happened — so a stale queue handle popped after
+/// `parallel_for` returned always sees `next >= n` and never touches
+/// `task`, and every dereference is strictly inside the closure's
+/// lifetime.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    finished: AtomicUsize,
+    n: usize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+// SAFETY: see the field comment on `task` — lifetime is enforced by the
+// completion barrier in `parallel_for`, and the pointee is `Sync`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run items until the index space is exhausted. Called by
+    /// the submitting thread and by any helper that popped this job.
+    fn run_to_exhaustion(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: the claim above succeeded (i < n), so `parallel_for`
+            // is still blocked on its completion barrier (it needs this
+            // item's `finished` increment, which has not happened yet) and
+            // the borrowed closure behind `task` is alive. Stale handles
+            // popped later never reach this point — see the type docs.
+            let f: &(dyn Fn(usize) + Sync) = unsafe { &*self.task };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            // AcqRel chains every item's writes into the final increment,
+            // so the waiter observes all of them after `done`
+            if self.finished.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                *self.done.lock().unwrap() = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    workers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { queue: VecDeque::new(), workers: 0 }),
+        cv: Condvar::new(),
+    })
+}
+
+fn worker_loop() {
+    let p = pool();
+    loop {
+        let job = {
+            let mut st = p.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                st = p.cv.wait(st).unwrap();
+            }
+        };
+        // a stale handle (job already drained) exits immediately
+        job.run_to_exhaustion();
+    }
+}
+
+/// Run `f(0), f(1), …, f(n-1)` with up to `num_threads` lanes (0 = all
+/// cores). The calling thread participates; `num_threads - 1` parked pool
+/// workers help. Items are claimed atomically, each index runs exactly
+/// once, and the call returns only after every item has finished (so `f`
+/// may borrow from the caller's stack). Panics in items are re-raised
+/// here after the barrier. With `num_threads <= 1` (or `n <= 1`) this is
+/// a plain sequential loop on the caller — no pool, no atomics.
+///
+/// Nesting (an item calling back into the pool) cannot deadlock — the
+/// inner caller always drains its own index space — but it mostly
+/// serializes while busy workers hold the outer items, so the engine
+/// parallelizes at one level per code path (see `DESIGN.md` §7).
+pub fn parallel_for(num_threads: usize, n: usize, f: &(dyn Fn(usize) + Sync)) {
+    let nt = effective_threads(num_threads).min(n);
+    if nt <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let job = Arc::new(Job {
+        task: f as *const (dyn Fn(usize) + Sync),
+        next: AtomicUsize::new(0),
+        finished: AtomicUsize::new(0),
+        n,
+        panicked: AtomicBool::new(false),
+        done: Mutex::new(false),
+        cv: Condvar::new(),
+    });
+    let helpers = nt - 1;
+    {
+        let p = pool();
+        let mut st = p.state.lock().unwrap();
+        while st.workers < helpers {
+            st.workers += 1;
+            std::thread::Builder::new()
+                .name(format!("tvq-kernel-{}", st.workers))
+                .spawn(worker_loop)
+                .expect("spawn pool worker");
+        }
+        for _ in 0..helpers {
+            st.queue.push_back(Arc::clone(&job));
+        }
+        p.cv.notify_all();
+    }
+    job.run_to_exhaustion();
+    {
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.cv.wait(done).unwrap();
+        }
+    }
+    if job.panicked.load(Ordering::Acquire) {
+        panic!("a parallel_for work item panicked");
+    }
+}
+
+/// [`parallel_for`] over a slice of owned work items, giving each
+/// invocation `&mut` access to exactly one element. This is the engine's
+/// batch-lane entry point: build one item per lane (disjoint row views
+/// into the state tensors), then let the pool claim lanes.
+pub fn parallel_for_items<T, F>(num_threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    struct ItemsPtr<T>(*mut T);
+    // SAFETY: each index is claimed exactly once by `parallel_for`, so no
+    // two invocations alias the same element; T: Send moves the element
+    // access to the claiming thread.
+    unsafe impl<T: Send> Sync for ItemsPtr<T> {}
+    let ptr = ItemsPtr(items.as_mut_ptr());
+    let n = items.len();
+    let run = |i: usize| {
+        // SAFETY: i < n and each i is claimed exactly once (see ItemsPtr).
+        let item = unsafe { &mut *ptr.0.add(i) };
+        f(i, item);
+    };
+    parallel_for(num_threads, n, &run);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Reference triple loop in f64 (i → j → k, textbook order).
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Property: blocked GEMM == naive triple loop over assorted shapes,
+    /// including non-multiples of TILE_K/TILE_N and degenerate dims.
+    #[test]
+    fn gemm_matches_naive_triple_loop_assorted_shapes() {
+        let mut rng = Rng::new(0xB10C);
+        let shapes = [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, TILE_K, TILE_N),
+            (2, TILE_K + 3, TILE_N + 5),
+            (5, TILE_K - 1, 2 * TILE_N + 1),
+            (7, 2 * TILE_K + 9, 33),
+            (16, 64, 96),
+            (1, 130, 257),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut c);
+            let want = naive_gemm(m, k, n, &a, &b);
+            for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                let tol = 1e-4 * (1.0 + w.abs());
+                assert!(
+                    (got as f64 - w).abs() < tol,
+                    "gemm({m},{k},{n})[{i}] = {got} want {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_add_accumulates() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (3, 10, 6);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![1.0f32; m * n];
+        gemm_add(m, k, n, &a, &b, &mut c);
+        let want = naive_gemm(m, k, n, &a, &b);
+        for (&got, &w) in c.iter().zip(&want) {
+            assert!((got as f64 - (w + 1.0)).abs() < 1e-4, "{got} vs {}", w + 1.0);
+        }
+    }
+
+    /// gemm_par must be *bit-identical* to gemm at every thread count:
+    /// row bands change ownership, never accumulation order.
+    #[test]
+    fn gemm_par_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(42);
+        let (m, k, n) = (13, TILE_K + 5, TILE_N + 3);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut base = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut base);
+        for nt in [1, 2, 3, 4, 8] {
+            let mut c = vec![f32::NAN; m * n];
+            gemm_par(nt, m, k, n, &a, &b, &mut c);
+            assert_eq!(
+                base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "gemm_par(nt={nt}) diverged from sequential gemm"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_matches_gemm_row() {
+        let mut rng = Rng::new(9);
+        for &(k, n) in &[(1usize, 1usize), (4, 7), (63, 65), (64, 128), (130, 31)] {
+            let w = rand_vec(&mut rng, k * n);
+            let x = rand_vec(&mut rng, k);
+            let mut out = vec![0.0f32; n];
+            matvec(&w, &x, &mut out);
+            let want = naive_gemm(1, k, n, &x, &w);
+            for (&got, &wv) in out.iter().zip(&want) {
+                assert!((got as f64 - wv).abs() < 1e-4 * (1.0 + wv.abs()));
+            }
+            // the _add variant really accumulates
+            matvec_add(&w, &x, &mut out);
+            for (&got, &wv) in out.iter().zip(&want) {
+                assert!((got as f64 - 2.0 * wv).abs() < 2e-4 * (1.0 + wv.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn f64_kernels_match_references() {
+        let mut rng = Rng::new(11);
+        let (k, n) = (37, 29);
+        let w: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f64; n];
+        matvec64(&w, &x, &mut out);
+        for j in 0..n {
+            let want: f64 = (0..k).map(|i| x[i] * w[i * n + j]).sum();
+            assert!((out[j] - want).abs() < 1e-10, "matvec64[{j}]");
+        }
+        let mut outt = vec![0.0f64; k];
+        matvec64_t(&w, &y, &mut outt);
+        for i in 0..k {
+            let want: f64 = (0..n).map(|j| w[i * n + j] * y[j]).sum();
+            assert!((outt[i] - want).abs() < 1e-10, "matvec64_t[{i}]");
+        }
+        let mut g = vec![0.5f64; k * n];
+        outer_acc64(&mut g, &x, &y);
+        for i in 0..k {
+            for j in 0..n {
+                let want = 0.5 + x[i] * y[j];
+                assert!((g[i * n + j] - want).abs() < 1e-12, "outer_acc64[{i},{j}]");
+            }
+        }
+        let d = dot64(&x, &w[..k]);
+        let want: f64 = (0..k).map(|i| x[i] * w[i]).sum();
+        assert!((d - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn parallel_for_runs_every_index_exactly_once() {
+        for nt in [1usize, 2, 4, 8] {
+            for n in [0usize, 1, 2, 5, 17, 100] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                parallel_for(nt, n, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} at nt={nt}, n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_items_gives_exclusive_mut_access() {
+        let mut items: Vec<u64> = (0..50).collect();
+        parallel_for_items(4, &mut items, |i, v| {
+            *v = *v * 2 + i as u64;
+        });
+        for (i, &v) in items.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -5,6 +5,10 @@
 //!
 //! * [`layout`] — the positional leaf contract (groups, shapes, dtypes),
 //!   generated from a [`ModelConfig`] instead of read from a manifest.
+//! * [`kernels`] — cache-blocked matmul kernels + the thread pool; every
+//!   matmul call site in the engine routes through it, and every step
+//!   entry point parallelizes over batch lanes with bit-identical results
+//!   at any thread count (see DESIGN.md §7, "Performance model").
 //! * `model` — the flat-f32 forward pass: Theorem 3.7 block recurrence with
 //!   the running-mean compressive cache + rolling 2L window, so decode is
 //!   O(S + 2L) per token at any position.
@@ -17,7 +21,13 @@
 //! Presets mirror `config.rs` recipes (quickstart, enwik8-tiny, ablations,
 //! …) plus a `tput-*` bench grid comparing the VQ linear path against a
 //! dense quadratic "Full" baseline, so the paper-table harness runs natively.
+//!
+//! The thread budget is a [`NativeOptions`] knob: `NativeBackend::new()`
+//! reads `TVQ_NUM_THREADS` (0/unset = all cores), and
+//! [`NativeBackend::with_options`] pins it explicitly (used by the bench
+//! thread-scaling sweeps and the `--threads` CLI flag).
 
+pub mod kernels;
 pub mod layout;
 
 mod autodiff;
@@ -145,11 +155,34 @@ struct ArtifactEntry {
     cfg: ModelConfig,
 }
 
+/// Runtime knobs for the native backend, threaded into every executor it
+/// loads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeOptions {
+    /// Thread budget per step: batch lanes (and, on the dense path, token
+    /// blocks / GEMM row bands) run on up to this many threads. `0` means
+    /// all cores. Results are bit-identical at any value — this is purely
+    /// a throughput knob.
+    pub num_threads: usize,
+}
+
+impl Default for NativeOptions {
+    /// `TVQ_NUM_THREADS` if set and parseable, else 0 (= all cores).
+    fn default() -> Self {
+        let num_threads = std::env::var("TVQ_NUM_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        Self { num_threads }
+    }
+}
+
 /// Pure-rust [`Backend`]: always available, nothing required on disk.
 pub struct NativeBackend {
     artifacts: BTreeMap<String, ArtifactEntry>,
     /// Init-state seed per preset (default: FNV of the preset name).
     seeds: BTreeMap<String, u64>,
+    options: NativeOptions,
 }
 
 /// Trainable presets registered by [`NativeBackend::new`].
@@ -168,7 +201,11 @@ pub const PRESETS: &[&str] = &[
 
 impl NativeBackend {
     pub fn new() -> Self {
-        let mut b = Self { artifacts: BTreeMap::new(), seeds: BTreeMap::new() };
+        let mut b = Self {
+            artifacts: BTreeMap::new(),
+            seeds: BTreeMap::new(),
+            options: NativeOptions::default(),
+        };
         for preset in PRESETS {
             let cfg = preset_config(preset).expect("builtin preset");
             b.register(preset, cfg, preset_seed(preset));
@@ -191,9 +228,20 @@ impl NativeBackend {
     /// `<name>.train`, `<name>.eval`, and (for VQ attention)
     /// `<name>.decode`.
     pub fn with_preset(name: &str, cfg: ModelConfig, seed: u64) -> Self {
-        let mut b = Self { artifacts: BTreeMap::new(), seeds: BTreeMap::new() };
+        let mut b = Self {
+            artifacts: BTreeMap::new(),
+            seeds: BTreeMap::new(),
+            options: NativeOptions::default(),
+        };
         b.register(name, cfg, seed);
         b
+    }
+
+    /// Pin runtime options (builder style); executors loaded afterwards
+    /// inherit them. Used by the bench sweeps to fix the thread count.
+    pub fn with_options(mut self, options: NativeOptions) -> Self {
+        self.options = options;
+        self
     }
 
     fn register(&mut self, preset: &str, cfg: ModelConfig, seed: u64) {
@@ -261,6 +309,7 @@ impl Backend for NativeBackend {
             spec,
             layout,
             cache: Mutex::new(None),
+            num_threads: self.options.num_threads,
         }))
     }
 
@@ -301,6 +350,10 @@ pub struct NativeExecutor {
     spec: ArtifactSpec,
     layout: Layout,
     cache: Mutex<Option<WeightCacheEntry>>,
+    /// Thread budget per step ([`NativeOptions::num_threads`]; 0 = all
+    /// cores). Purely a throughput knob — outputs are bit-identical at
+    /// any value.
+    num_threads: usize,
 }
 
 impl NativeExecutor {
@@ -347,7 +400,7 @@ impl Executor for NativeExecutor {
         let n_weights = step::weight_tensor_count(&self.layout);
         let weights = self.weights_for(inputs, n_weights)?;
         let (outputs, new_weights) =
-            step::run_entry(&self.spec.entry, &self.layout, &weights, inputs)?;
+            step::run_entry(&self.spec.entry, &self.layout, &weights, inputs, self.num_threads)?;
         debug_assert_eq!(outputs.len(), self.spec.outputs.len());
         if let Some(nw) = new_weights {
             // train emits fresh params/cb as its first outputs; the bundle

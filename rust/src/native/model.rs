@@ -20,58 +20,24 @@
 //! (verified against `vqref` oracles in rust/tests/native_oracle.rs).
 //!
 //! Everything operates on flat contiguous f32/i32 buffers parsed from the
-//! positional `HostTensor` inputs; no hidden executor state.
+//! positional `HostTensor` inputs; no hidden executor state. Batch rows are
+//! fully independent: [`State::rows`] splits the state tensors into
+//! disjoint per-row views ([`RowState`]) so the step layer can run one
+//! batch lane per pool thread (`super::kernels`) with bit-identical
+//! results at any thread count. All matmul-family math routes through
+//! [`super::kernels`].
 
 use anyhow::{bail, Result};
 
 use crate::manifest::ModelConfig;
 use crate::tensor::HostTensor;
 
+use super::kernels::{self, dot, matvec, matvec_add};
 use super::layout::Layout;
 
 // ---------------------------------------------------------------------------
-// flat math helpers
+// flat math helpers (non-matmul; matmuls live in `super::kernels`)
 // ---------------------------------------------------------------------------
-
-#[inline]
-pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
-}
-
-/// out = x @ w, with w row-major [x.len(), out.len()]. Overwrites out.
-pub(crate) fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
-    let o = out.len();
-    debug_assert_eq!(w.len(), x.len() * o);
-    out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * o..(i + 1) * o];
-        for (acc, &wv) in out.iter_mut().zip(row) {
-            *acc += xi * wv;
-        }
-    }
-}
-
-/// out += x @ w (residual add), same layout as [`matvec`].
-pub(crate) fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
-    let o = out.len();
-    debug_assert_eq!(w.len(), x.len() * o);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * o..(i + 1) * o];
-        for (acc, &wv) in out.iter_mut().zip(row) {
-            *acc += xi * wv;
-        }
-    }
-}
 
 pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
     let n = x.len().max(1);
@@ -236,6 +202,23 @@ pub(crate) struct State {
     pub layers: Vec<LayerState>,
 }
 
+/// One layer of one batch row's recurrent state: disjoint mutable views
+/// into the `[B, ...]` state tensors (outer dim B is the split axis).
+pub(crate) struct RowLayerState<'a> {
+    pub win_k: &'a mut [f32],   // [2L, H, dk]
+    pub win_v: &'a mut [f32],   // [2L, H, dv]
+    pub win_z: &'a mut [i32],   // [2L, H]
+    pub cache_u: &'a mut [f32], // [H, S, dv]
+    pub cache_l: &'a mut [f32], // [H, S]
+}
+
+/// One batch row of [`State`]: the unit of batch-lane parallelism. Rows
+/// never alias, so the step layer hands one `RowState` per pool thread.
+pub(crate) struct RowState<'a> {
+    pub pos: &'a mut i32,
+    pub layers: Vec<RowLayerState<'a>>,
+}
+
 impl State {
     pub fn parse(cfg: &ModelConfig, tensors: &[HostTensor]) -> Result<Self> {
         let expected = 1 + 5 * cfg.n_layers;
@@ -255,6 +238,38 @@ impl State {
             });
         }
         Ok(Self { pos, layers })
+    }
+
+    /// Split into per-row views along the leading batch dimension. Each
+    /// returned [`RowState`] borrows a disjoint slice of every leaf.
+    pub fn rows(&mut self) -> Vec<RowState<'_>> {
+        let b = self.pos.len();
+        let n_layers = self.layers.len();
+        let mut rows: Vec<RowState<'_>> = self
+            .pos
+            .iter_mut()
+            .map(|pos| RowState { pos, layers: Vec::with_capacity(n_layers) })
+            .collect();
+        if b == 0 {
+            return rows;
+        }
+        for lst in &mut self.layers {
+            let mut wk = lst.win_k.chunks_mut(lst.win_k.len() / b);
+            let mut wv = lst.win_v.chunks_mut(lst.win_v.len() / b);
+            let mut wz = lst.win_z.chunks_mut(lst.win_z.len() / b);
+            let mut cu = lst.cache_u.chunks_mut(lst.cache_u.len() / b);
+            let mut cl = lst.cache_l.chunks_mut(lst.cache_l.len() / b);
+            for row in rows.iter_mut() {
+                row.layers.push(RowLayerState {
+                    win_k: wk.next().expect("win_k rows"),
+                    win_v: wv.next().expect("win_v rows"),
+                    win_z: wz.next().expect("win_z rows"),
+                    cache_u: cu.next().expect("cache_u rows"),
+                    cache_l: cl.next().expect("cache_l rows"),
+                });
+            }
+        }
+        rows
     }
 
     /// Serialize back to leaf order (same order as [`Layout::state_leaves`]).
@@ -304,21 +319,39 @@ impl TrainAccum {
             key_sums: (0..cfg.n_layers).map(|_| vec![0.0; hs * cfg.d_k]).collect(),
         }
     }
+
+    /// Fold another accumulator in (elementwise adds). Batch rows
+    /// accumulate privately under the pool and are merged in row order, so
+    /// the result never depends on the thread count.
+    pub fn merge(&mut self, other: &TrainAccum) {
+        self.commit_sum += other.commit_sum;
+        self.commit_n += other.commit_n;
+        for (a, b) in self.code_counts.iter_mut().zip(&other.code_counts) {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        for (a, b) in self.key_sums.iter_mut().zip(&other.key_sums) {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
 // the per-token step (VQ attention path)
 // ---------------------------------------------------------------------------
 
-/// One decode step for batch row `row`: feeds `token`, advances the state,
-/// returns `(logits [V], y [dm])` where `y` is the final normed hidden
-/// (the readout features, kept for the native training step's gradient).
-pub(crate) fn forward_token(
+/// One decode step for one batch row view: feeds `token`, advances the row
+/// state, returns `(logits [V], y [dm])` where `y` is the final normed
+/// hidden. This is the unit the pool parallelizes over — it touches only
+/// its own [`RowState`] plus shared read-only weights.
+pub(crate) fn forward_token_row(
     cfg: &ModelConfig,
     p: &Params,
     cb: &Codebooks,
-    st: &mut State,
-    row: usize,
+    rst: &mut RowState<'_>,
     token: i32,
     mut accum: Option<&mut TrainAccum>,
 ) -> (Vec<f32>, Vec<f32>) {
@@ -333,7 +366,7 @@ pub(crate) fn forward_token(
     let v_sz = cfg.vocab_size;
     let dff = 2 * dm;
 
-    let pos = st.pos[row].max(0) as usize;
+    let pos = (*rst.pos).max(0) as usize;
     let n = pos / l;
     let li = pos % l;
     let tok = (token.max(0) as usize).min(v_sz - 1);
@@ -349,7 +382,7 @@ pub(crate) fn forward_token(
     let mut u1 = vec![0.0f32; dff];
     let q_scale = 1.0 / (dk as f32).sqrt();
 
-    for (layer_ix, (lp, lst)) in p.layers.iter().zip(st.layers.iter_mut()).enumerate() {
+    for (layer_ix, (lp, lst)) in p.layers.iter().zip(rst.layers.iter_mut()).enumerate() {
         let lcb = &cb.layers[layer_ix];
         rmsnorm(&x, &lp.attn_norm, &mut h);
         matvec(&lp.wq, &h, &mut q);
@@ -388,9 +421,9 @@ pub(crate) fn forward_token(
             for j in start..start + l {
                 let slot = j % w2l;
                 for hd in 0..h_n {
-                    let win_ix = (row * w2l + slot) * h_n + hd;
+                    let win_ix = slot * h_n + hd;
                     let zc = lst.win_z[win_ix].max(0) as usize % s;
-                    let cl_ix = (row * h_n + hd) * s + zc;
+                    let cl_ix = hd * s + zc;
                     let cnt = lst.cache_l[cl_ix] + 1.0;
                     let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
                     let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
@@ -408,7 +441,7 @@ pub(crate) fn forward_token(
         for hd in 0..h_n {
             let z = zs[hd];
             let k_hat = &lcb[(hd * s + z) * dk..(hd * s + z + 1) * dk];
-            let win_ix = (row * w2l + slot) * h_n + hd;
+            let win_ix = slot * h_n + hd;
             lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(k_hat);
             lst.win_v[win_ix * dv..(win_ix + 1) * dv]
                 .copy_from_slice(&v[hd * dv..(hd + 1) * dv]);
@@ -427,7 +460,7 @@ pub(crate) fn forward_token(
             let qh = &q[hd * dk..(hd + 1) * dk];
             if cfg.use_cache {
                 for c in 0..s {
-                    let cl_ix = (row * h_n + hd) * s + c;
+                    let cl_ix = hd * s + c;
                     let cl = lst.cache_l[cl_ix];
                     if cl > 0.0 {
                         let crow = &lcb[(hd * s + c) * dk..(hd * s + c + 1) * dk];
@@ -438,7 +471,7 @@ pub(crate) fn forward_token(
             }
             for j in lo..=pos {
                 let jslot = j % w2l;
-                let win_ix = (row * w2l + jslot) * h_n + hd;
+                let win_ix = jslot * h_n + hd;
                 let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
                 scores.push(dot(qh, kw) + lp.bias[hd * w2l + (pos - j)]);
                 vals.push((win_ix * dv, false));
@@ -478,8 +511,24 @@ pub(crate) fn forward_token(
     rmsnorm(&x, &p.out_norm, &mut y);
     let mut logits = p.bout.clone();
     matvec_add(&p.wout, &y, &mut logits);
-    st.pos[row] = (pos + 1) as i32;
+    *rst.pos = (pos + 1) as i32;
     (logits, y)
+}
+
+/// Whole-state convenience wrapper around [`forward_token_row`] for tests
+/// and oracles: splits `st` into row views and advances `row` only.
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn forward_token(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    st: &mut State,
+    row: usize,
+    token: i32,
+    accum: Option<&mut TrainAccum>,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rows = st.rows();
+    forward_token_row(cfg, p, cb, &mut rows[row], token, accum)
 }
 
 // ---------------------------------------------------------------------------
@@ -489,10 +538,17 @@ pub(crate) fn forward_token(
 /// Dense causal attention over the window (unquantized keys, no bias, no
 /// cross-window memory): the paper's "Full" throughput baseline. Returns
 /// per-token `(logits, y)` for one batch row. O(T^2) by construction.
+///
+/// All projections/FFN/readout run as whole-window blocked GEMMs
+/// ([`kernels::gemm_par`], row-parallel over tokens) and the per-token
+/// causal attention fans out one token per pool work item — queries only
+/// read the precomputed `ks`/`vs`, so tokens are independent. `nt` is the
+/// thread budget (0 = all cores); results are identical at any `nt`.
 pub(crate) fn forward_window_dense(
     cfg: &ModelConfig,
     p: &Params,
     tokens: &[i32],
+    nt: usize,
 ) -> Vec<(Vec<f32>, Vec<f32>)> {
     let dm = cfg.d_model;
     let h_n = cfg.n_heads;
@@ -500,77 +556,102 @@ pub(crate) fn forward_window_dense(
     let dv = cfg.d_v;
     let v_sz = cfg.vocab_size;
     let dff = 2 * dm;
+    let (hdk, hdv) = (h_n * dk, h_n * dv);
     let t_len = tokens.len();
     let q_scale = 1.0 / (dk as f32).sqrt();
 
-    let mut xs: Vec<Vec<f32>> = tokens
-        .iter()
-        .map(|&tok| {
-            let tok = (tok.max(0) as usize).min(v_sz - 1);
-            p.embed[tok * dm..(tok + 1) * dm].to_vec()
-        })
-        .collect();
+    // flat [T, dm] residual stream
+    let mut xs = vec![0.0f32; t_len * dm];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let tok = (tok.max(0) as usize).min(v_sz - 1);
+        xs[t * dm..(t + 1) * dm].copy_from_slice(&p.embed[tok * dm..(tok + 1) * dm]);
+    }
 
-    let mut h = vec![0.0f32; dm];
+    let mut hs = vec![0.0f32; t_len * dm];
+    let mut qs = vec![0.0f32; t_len * hdk];
+    let mut ks = vec![0.0f32; t_len * hdk];
+    let mut vs = vec![0.0f32; t_len * hdv];
+    let mut attns = vec![0.0f32; t_len * hdv];
+    let mut deltas = vec![0.0f32; t_len * dm];
+    let mut gs = vec![0.0f32; t_len * dff];
+    let mut u1s = vec![0.0f32; t_len * dff];
+
     for lp in &p.layers {
-        let mut qs = vec![0.0f32; t_len * h_n * dk];
-        let mut ks = vec![0.0f32; t_len * h_n * dk];
-        let mut vs = vec![0.0f32; t_len * h_n * dv];
-        for (t, x) in xs.iter().enumerate() {
-            rmsnorm(x, &lp.attn_norm, &mut h);
-            matvec(&lp.wq, &h, &mut qs[t * h_n * dk..(t + 1) * h_n * dk]);
-            matvec(&lp.wk, &h, &mut ks[t * h_n * dk..(t + 1) * h_n * dk]);
-            matvec(&lp.wv, &h, &mut vs[t * h_n * dv..(t + 1) * h_n * dv]);
+        for t in 0..t_len {
+            rmsnorm(&xs[t * dm..(t + 1) * dm], &lp.attn_norm, &mut hs[t * dm..(t + 1) * dm]);
         }
+        kernels::gemm_par(nt, t_len, dm, hdk, &hs, &lp.wq, &mut qs);
+        kernels::gemm_par(nt, t_len, dm, hdk, &hs, &lp.wk, &mut ks);
+        kernels::gemm_par(nt, t_len, dm, hdv, &hs, &lp.wv, &mut vs);
         for qv in qs.iter_mut() {
             *qv *= q_scale;
         }
-        let mut attn = vec![0.0f32; h_n * dv];
-        let mut scores: Vec<f32> = Vec::with_capacity(t_len);
-        for (t, x) in xs.iter_mut().enumerate() {
-            attn.fill(0.0);
-            for hd in 0..h_n {
-                let qh = &qs[(t * h_n + hd) * dk..(t * h_n + hd + 1) * dk];
-                scores.clear();
-                for j in 0..=t {
-                    let kj = &ks[(j * h_n + hd) * dk..(j * h_n + hd + 1) * dk];
-                    scores.push(dot(qh, kj));
-                }
-                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut zsum = 0.0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - m).exp();
-                    zsum += *sc;
-                }
-                let out_h = &mut attn[hd * dv..(hd + 1) * dv];
-                for (j, &e) in scores.iter().enumerate() {
-                    let w = e / zsum;
-                    let vj = &vs[(j * h_n + hd) * dv..(j * h_n + hd + 1) * dv];
-                    for (o, &vv) in out_h.iter_mut().zip(vj) {
-                        *o += w * vv;
+
+        // causal attention: one token per work item (reads qs/ks/vs, writes
+        // its own attns row — disjoint, so the schedule cannot matter)
+        {
+            let mut items: Vec<&mut [f32]> = attns.chunks_mut(hdv).collect();
+            kernels::parallel_for_items(nt, &mut items, |t, attn| {
+                attn.fill(0.0);
+                let mut scores: Vec<f32> = Vec::with_capacity(t + 1);
+                for hd in 0..h_n {
+                    let qh = &qs[t * hdk + hd * dk..t * hdk + (hd + 1) * dk];
+                    scores.clear();
+                    for j in 0..=t {
+                        let kj = &ks[j * hdk + hd * dk..j * hdk + (hd + 1) * dk];
+                        scores.push(dot(qh, kj));
+                    }
+                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut zsum = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - m).exp();
+                        zsum += *sc;
+                    }
+                    let out_h = &mut attn[hd * dv..(hd + 1) * dv];
+                    for (j, &e) in scores.iter().enumerate() {
+                        let w = e / zsum;
+                        let vj = &vs[j * hdv + hd * dv..j * hdv + (hd + 1) * dv];
+                        for (o, &vv) in out_h.iter_mut().zip(vj) {
+                            *o += w * vv;
+                        }
                     }
                 }
-            }
-            matvec_add(&lp.wo, &attn, x);
-            rmsnorm(x, &lp.ffn_norm, &mut h);
-            let mut g = vec![0.0f32; dff];
-            let mut u1 = vec![0.0f32; dff];
-            matvec(&lp.wg, &h, &mut g);
-            matvec(&lp.w1, &h, &mut u1);
-            for (gv, uv) in g.iter_mut().zip(&u1) {
-                *gv = silu(*gv) * uv;
-            }
-            matvec_add(&lp.w2, &g, x);
+            });
+        }
+        kernels::gemm_par(nt, t_len, hdv, dm, &attns, &lp.wo, &mut deltas);
+        for (x, &d) in xs.iter_mut().zip(&deltas) {
+            *x += d;
+        }
+
+        // gated FFN, whole window at once
+        for t in 0..t_len {
+            rmsnorm(&xs[t * dm..(t + 1) * dm], &lp.ffn_norm, &mut hs[t * dm..(t + 1) * dm]);
+        }
+        kernels::gemm_par(nt, t_len, dm, dff, &hs, &lp.wg, &mut gs);
+        kernels::gemm_par(nt, t_len, dm, dff, &hs, &lp.w1, &mut u1s);
+        for (gv, &uv) in gs.iter_mut().zip(&u1s) {
+            *gv = silu(*gv) * uv;
+        }
+        kernels::gemm_par(nt, t_len, dff, dm, &gs, &lp.w2, &mut deltas);
+        for (x, &d) in xs.iter_mut().zip(&deltas) {
+            *x += d;
         }
     }
 
-    xs.iter()
-        .map(|x| {
-            let mut y = vec![0.0f32; dm];
-            rmsnorm(x, &p.out_norm, &mut y);
-            let mut logits = p.bout.clone();
-            matvec_add(&p.wout, &y, &mut logits);
-            (logits, y)
+    // readout, whole window at once
+    let mut ys = vec![0.0f32; t_len * dm];
+    for t in 0..t_len {
+        rmsnorm(&xs[t * dm..(t + 1) * dm], &p.out_norm, &mut ys[t * dm..(t + 1) * dm]);
+    }
+    let mut logits = vec![0.0f32; t_len * v_sz];
+    kernels::gemm_par(nt, t_len, dm, v_sz, &ys, &p.wout, &mut logits);
+    (0..t_len)
+        .map(|t| {
+            let mut lg = logits[t * v_sz..(t + 1) * v_sz].to_vec();
+            for (o, &b) in lg.iter_mut().zip(&p.bout) {
+                *o += b;
+            }
+            (lg, ys[t * dm..(t + 1) * dm].to_vec())
         })
         .collect()
 }
@@ -614,5 +695,38 @@ mod tests {
         assert!(silu(0.0).abs() < 1e-9);
         assert!(silu(10.0) > 9.9);
         assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn state_rows_views_are_disjoint_and_complete() {
+        let cfg = crate::native::preset_config("quickstart").unwrap();
+        let layout = Layout::new(cfg.clone());
+        let zeros: Vec<HostTensor> = layout
+            .state_leaves("state")
+            .iter()
+            .map(|l| HostTensor::zeros(l.dtype, &l.shape))
+            .collect();
+        let mut st = State::parse(&cfg, &zeros).unwrap();
+        let b = cfg.batch_size;
+        {
+            let mut rows = st.rows();
+            assert_eq!(rows.len(), b);
+            for (r, row) in rows.iter_mut().enumerate() {
+                *row.pos = r as i32 + 1;
+                for lst in row.layers.iter_mut() {
+                    lst.win_k[0] = r as f32;
+                    lst.cache_l[0] = 10.0 + r as f32;
+                }
+            }
+        }
+        for r in 0..b {
+            assert_eq!(st.pos[r], r as i32 + 1);
+            for lst in &st.layers {
+                let kstride = lst.win_k.len() / b;
+                let lstride = lst.cache_l.len() / b;
+                assert_eq!(lst.win_k[r * kstride], r as f32);
+                assert_eq!(lst.cache_l[r * lstride], 10.0 + r as f32);
+            }
+        }
     }
 }

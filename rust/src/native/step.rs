@@ -17,6 +17,12 @@
 //! identity inside [`super::NativeExecutor`]) so the per-step cost of
 //! re-decoding the params group from raw bytes is paid once per distinct
 //! weight set, not once per call.
+//!
+//! Every entry point takes a thread budget `nt` (0 = all cores, from
+//! `super::NativeOptions`) and parallelizes over batch lanes: the state is
+//! split into disjoint per-row views (`model::State::rows`) and one row
+//! runs per pool work item. Merges happen in fixed row order, so outputs
+//! are bit-identical at any `nt`.
 
 use anyhow::{bail, Result};
 
@@ -25,8 +31,11 @@ use crate::tensor::HostTensor;
 use super::autodiff::{
     flatten_params, train_forward_backward, unflatten_params, Carry64, ParamIx, QuantMode,
 };
+use super::kernels;
 use super::layout::Layout;
-use super::model::{forward_token, forward_window_dense, Codebooks, Params, State, TrainAccum};
+use super::model::{
+    forward_token_row, forward_window_dense, Codebooks, Params, RowState, State, TrainAccum,
+};
 
 /// Adam hyperparameters (§3.4.2; the schedule supplies the LR).
 const ADAM_B1: f64 = 0.9;
@@ -80,10 +89,12 @@ impl SplitSpec {
 }
 
 /// `<preset>.decode`: (params, cb, state, token[B]) -> (state, logits[B,V]).
+/// One batch lane per pool work item; lanes share only read-only weights.
 pub(crate) fn run_decode(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
+    nt: usize,
 ) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -93,10 +104,15 @@ pub(crate) fn run_decode(
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
     let mut logits = vec![0.0f32; b * v];
-    for row in 0..b {
-        let (row_logits, _) =
-            forward_token(cfg, &weights.params, &weights.cb, &mut st, row, tokens[row], None);
-        logits[row * v..(row + 1) * v].copy_from_slice(&row_logits);
+    {
+        let mut work: Vec<(RowState<'_>, &mut [f32])> =
+            st.rows().into_iter().zip(logits.chunks_mut(v)).collect();
+        debug_assert_eq!(work.len(), b);
+        kernels::parallel_for_items(nt, &mut work, |row, (rst, out)| {
+            let (row_logits, _) =
+                forward_token_row(cfg, &weights.params, &weights.cb, rst, tokens[row], None);
+            out.copy_from_slice(&row_logits);
+        });
     }
     let mut outputs = st.dump(layout, "state");
     outputs.push(HostTensor::from_f32(&[b, v], &logits));
@@ -105,37 +121,46 @@ pub(crate) fn run_decode(
 
 /// Run the f32 streaming forward over a [B, W+1] window, advancing `st`
 /// (evaluation path; training uses the differentiable f64 twin in
-/// [`super::autodiff`]). Returns per token (logits [V], target id).
+/// [`super::autodiff`]). Returns per token (logits [V], target id), in
+/// row-major order regardless of how rows were scheduled over threads.
 fn forward_window(
     layout: &Layout,
     p: &Params,
     cb: &Codebooks,
     st: &mut State,
     tokens: &[i32],
+    nt: usize,
 ) -> Vec<(Vec<f32>, usize)> {
     let cfg = &layout.cfg;
     let (b, w, v) = (cfg.batch_size, cfg.window_len, cfg.vocab_size);
-    let mut steps = Vec::with_capacity(b * w);
-    for row in 0..b {
-        let row_tokens = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
-        if cfg.attn_type == "full" {
-            // dense baseline: quadratic within the window, no carry memory
-            for (t, (logits, _)) in
-                forward_window_dense(cfg, p, &row_tokens[..w]).into_iter().enumerate()
-            {
-                let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
-                steps.push((logits, target));
+    let dense = cfg.attn_type == "full";
+    // single-lane presets hand the whole thread budget to the dense window
+    // kernels; multi-lane runs split the budget at the row level instead
+    let inner_nt = if b > 1 { 1 } else { nt };
+    let mut per_row: Vec<Vec<(Vec<f32>, usize)>> = (0..b).map(|_| Vec::new()).collect();
+    {
+        let mut work: Vec<_> = st.rows().into_iter().zip(per_row.iter_mut()).collect();
+        kernels::parallel_for_items(nt, &mut work, |row, (rst, out)| {
+            let row_tokens = &tokens[row * (w + 1)..(row + 1) * (w + 1)];
+            let target = |t: usize| (row_tokens[t + 1].max(0) as usize).min(v - 1);
+            if dense {
+                // dense baseline: quadratic within the window, no carry memory
+                **out = forward_window_dense(cfg, p, &row_tokens[..w], inner_nt)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(t, (logits, _))| (logits, target(t)))
+                    .collect();
+                *rst.pos += w as i32;
+            } else {
+                out.reserve(w);
+                for t in 0..w {
+                    let (logits, _) = forward_token_row(cfg, p, cb, rst, row_tokens[t], None);
+                    out.push((logits, target(t)));
+                }
             }
-            st.pos[row] += w as i32;
-        } else {
-            for t in 0..w {
-                let (logits, _) = forward_token(cfg, p, cb, st, row, row_tokens[t], None);
-                let target = (row_tokens[t + 1].max(0) as usize).min(v - 1);
-                steps.push((logits, target));
-            }
-        }
+        });
     }
-    steps
+    per_row.into_iter().flatten().collect()
 }
 
 /// Average per-(layer,head) codebook usage perplexity exp(H(p)).
@@ -223,6 +248,7 @@ pub(crate) fn run_train(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
+    nt: usize,
 ) -> Result<(Vec<HostTensor>, ParsedWeights)> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -263,8 +289,16 @@ pub(crate) fn run_train(
         .map(|l| l.iter().map(|&x| x as f64).collect())
         .collect();
     let mut carry = Carry64::from_state(&st);
-    let out =
-        train_forward_backward(cfg, &px, &flat, &cb64, &mut carry, &tokens, QuantMode::Nearest);
+    let out = train_forward_backward(
+        cfg,
+        &px,
+        &flat,
+        &cb64,
+        &mut carry,
+        &tokens,
+        QuantMode::Nearest,
+        nt,
+    );
     carry.write_state(&mut st);
 
     // --- global-norm clip + Adam ------------------------------------------
@@ -327,6 +361,7 @@ pub(crate) fn run_eval(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
+    nt: usize,
 ) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -334,7 +369,7 @@ pub(crate) fn run_eval(
     let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
-    let steps = forward_window(layout, &weights.params, &weights.cb, &mut st, &tokens);
+    let steps = forward_window(layout, &weights.params, &weights.cb, &mut st, &tokens, nt);
     let mut total_ce = 0.0f64;
     for (logits, target) in &steps {
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
@@ -350,22 +385,25 @@ pub(crate) fn run_eval(
     Ok(outputs)
 }
 
-/// Dispatch on the spec entry; shared by [`super::NativeExecutor`]. Returns
-/// the step outputs plus, for train, the freshly produced weights (so the
-/// executor can re-seed its identity-keyed cache without re-parsing).
+/// Dispatch on the spec entry; shared by [`super::NativeExecutor`]. `nt` is
+/// the executor's thread budget (`NativeOptions::num_threads`; 0 = all
+/// cores). Returns the step outputs plus, for train, the freshly produced
+/// weights (so the executor can re-seed its identity-keyed cache without
+/// re-parsing).
 pub(crate) fn run_entry(
     entry: &str,
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
+    nt: usize,
 ) -> Result<(Vec<HostTensor>, Option<ParsedWeights>)> {
     match entry {
-        "decode" => Ok((run_decode(layout, weights, inputs)?, None)),
+        "decode" => Ok((run_decode(layout, weights, inputs, nt)?, None)),
         "train" => {
-            let (outputs, new_weights) = run_train(layout, weights, inputs)?;
+            let (outputs, new_weights) = run_train(layout, weights, inputs, nt)?;
             Ok((outputs, Some(new_weights)))
         }
-        "eval" | "bench" => Ok((run_eval(layout, weights, inputs)?, None)),
+        "eval" | "bench" => Ok((run_eval(layout, weights, inputs, nt)?, None)),
         other => bail!("native backend: unknown entry '{other}'"),
     }
 }

@@ -9,8 +9,9 @@
 //! Two implementations ship:
 //! * [`crate::native::NativeBackend`] — pure-rust f32 Transformer-VQ model
 //!   (always available; no artifacts, no FFI, no python).
-//! * [`crate::runtime::PjrtBackend`] — AOT-compiled XLA artifacts via the
-//!   PJRT C API (`pjrt` cargo feature; requires `make artifacts`).
+//! * `crate::runtime::PjrtBackend` — AOT-compiled XLA artifacts via the
+//!   PJRT C API (`pjrt` cargo feature; requires `make artifacts` — not an
+//!   intra-doc link because the type only exists with that feature on).
 
 use anyhow::{bail, Result};
 
@@ -36,6 +37,35 @@ pub trait Executor {
 }
 
 /// Factory of executors + initial state for presets.
+///
+/// The whole contract in one worked example — load a step function, seed
+/// the state, run one decode step through the assemble → run → absorb
+/// cycle (this compiles and runs as a doc-test):
+///
+/// ```
+/// use transformer_vq::native::NativeBackend;
+/// use transformer_vq::runtime::{Backend, StateBundle};
+/// use transformer_vq::tensor::HostTensor;
+///
+/// // 1. a Backend is a factory of executors plus per-preset init state
+/// let backend = NativeBackend::new();
+/// let exe = backend.load("quickstart.decode")?;
+///
+/// // 2. all state flows through StateBundle: zeros are valid for every
+/// //    group, then the weights come from init_state
+/// let mut bundle = StateBundle::zeros_for(exe.spec());
+/// bundle.set_named(backend.init_state("quickstart")?);
+/// let batch = exe.spec().config.batch_size;
+/// bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &vec![72; batch])]);
+///
+/// // 3. executors are pure: positional tensors in, positional tensors out,
+/// //    validated against the spec — no hidden state between calls
+/// let outputs = exe.run(&bundle.assemble(exe.spec())?)?;
+/// bundle.absorb(exe.spec(), outputs)?;
+/// let logits = &bundle.group("logits")?[0];
+/// assert_eq!(logits.shape, vec![batch, exe.spec().config.vocab_size]);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait Backend {
     /// Human-readable platform tag (e.g. "native-cpu", "Host").
     fn platform(&self) -> String;
@@ -100,6 +130,18 @@ pub fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[HostTensor]) -
 /// `pjrt` feature is on and `<artifacts_dir>/manifest.json` exists,
 /// otherwise the native pure-rust engine (which needs nothing on disk).
 pub fn auto_backend(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Box<dyn Backend>> {
+    auto_backend_threads(artifacts_dir, 0)
+}
+
+/// [`auto_backend`] with an explicit native thread budget (`num_threads`;
+/// 0 = the `TVQ_NUM_THREADS` / all-cores default). This is how
+/// `TrainConfig::num_threads` / the CLI `--threads` flag reach the native
+/// executors; the PJRT backend has no equivalent knob, so on that path the
+/// budget is ignored.
+pub fn auto_backend_threads(
+    artifacts_dir: impl AsRef<std::path::Path>,
+    num_threads: usize,
+) -> Result<Box<dyn Backend>> {
     let dir = artifacts_dir.as_ref();
     #[cfg(feature = "pjrt")]
     {
@@ -109,7 +151,11 @@ pub fn auto_backend(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Box<dy
         }
     }
     let _ = dir;
-    Ok(Box::new(crate::native::NativeBackend::new()))
+    let mut options = crate::native::NativeOptions::default();
+    if num_threads > 0 {
+        options.num_threads = num_threads;
+    }
+    Ok(Box::new(crate::native::NativeBackend::new().with_options(options)))
 }
 
 #[cfg(test)]

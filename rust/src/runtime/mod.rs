@@ -1,8 +1,9 @@
 //! Execution runtime: the [`Backend`]/[`Executor`] abstraction the whole
 //! serving path programs against, plus the state plumbing between steps.
 //!
-//! * [`backend`] — the trait layer (positional `HostTensor` in/out,
-//!   manifest-spec validated) and [`auto_backend`] selection.
+//! * `backend` — the trait layer ([`Backend`]/[`Executor`], positional
+//!   `HostTensor` in/out, manifest-spec validated) and the
+//!   [`auto_backend`]/[`auto_backend_threads`] selection helpers.
 //! * [`StateBundle`] — grouped model state (params/opt/cb/carry/state/…)
 //!   threaded through step executions as host tensors.
 //! * `pjrt` (feature `pjrt`) — the original PJRT path: load AOT HLO
@@ -18,7 +19,7 @@ mod literal;
 mod pjrt;
 mod state;
 
-pub use backend::{auto_backend, validate_inputs, Backend, Executor};
+pub use backend::{auto_backend, auto_backend_threads, validate_inputs, Backend, Executor};
 pub use state::StateBundle;
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,100 @@
+//! The thread budget is a throughput knob, never a semantics knob: every
+//! native step must produce bit-identical outputs at `num_threads = 1` and
+//! `num_threads = N`. Batch lanes are disjoint row views, GEMM row bands
+//! keep per-row accumulation order fixed, and all merges walk rows in
+//! fixed order — these tests pin that contract at the executor surface.
+
+use transformer_vq::native::{NativeBackend, NativeOptions};
+use transformer_vq::runtime::{Backend, StateBundle};
+use transformer_vq::tensor::HostTensor;
+
+fn backend(nt: usize) -> NativeBackend {
+    NativeBackend::new().with_options(NativeOptions { num_threads: nt })
+}
+
+/// Bit pattern of every f32 output tensor, for exact comparison.
+fn bits(tensors: &[HostTensor]) -> Vec<Vec<u32>> {
+    tensors
+        .iter()
+        .filter_map(|t| t.as_f32().ok())
+        .map(|v| v.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// Drive `steps` decode steps and return all outputs of the last one.
+fn decode_outputs(nt: usize, steps: usize) -> Vec<HostTensor> {
+    let b = backend(nt);
+    let exe = b.load("quickstart.decode").unwrap();
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(b.init_state("quickstart").unwrap());
+    let batch = exe.spec().config.batch_size;
+    let mut last = Vec::new();
+    for s in 0..steps {
+        let tokens: Vec<i32> = (0..batch).map(|r| (31 * s + 7 * r) as i32 % 251).collect();
+        bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &tokens)]);
+        let inputs = bundle.assemble(exe.spec()).unwrap();
+        last = exe.run(&inputs).unwrap();
+        bundle.absorb(exe.spec(), last.clone()).unwrap();
+    }
+    last
+}
+
+#[test]
+fn decode_logits_bit_identical_across_thread_counts() {
+    let base = decode_outputs(1, 5);
+    for nt in [2usize, 4] {
+        let got = decode_outputs(nt, 5);
+        assert_eq!(bits(&base), bits(&got), "decode outputs diverged at num_threads={nt}");
+    }
+}
+
+/// One full train step (backprop + Adam + EMA): new params, codebooks,
+/// optimizer state, carry, and metrics must all match bit for bit.
+fn train_outputs(nt: usize) -> Vec<HostTensor> {
+    let b = backend(nt);
+    let exe = b.load("quickstart.train").unwrap();
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(b.init_state("quickstart").unwrap());
+    let cfg = &exe.spec().config;
+    let (batch, w) = (cfg.batch_size, cfg.window_len);
+    let tokens: Vec<i32> = (0..batch * (w + 1)).map(|i| (i * 37 % 251) as i32).collect();
+    bundle.set_group("tokens", vec![HostTensor::from_i32(&[batch, w + 1], &tokens)]);
+    bundle.set_group("lr", vec![HostTensor::scalar_f32(1e-3)]);
+    bundle.set_group("seed", vec![HostTensor::scalar_i32(0)]);
+    let inputs = bundle.assemble(exe.spec()).unwrap();
+    exe.run(&inputs).unwrap()
+}
+
+#[test]
+fn train_step_bit_identical_across_thread_counts() {
+    let base = train_outputs(1);
+    for nt in [2usize, 4] {
+        let got = train_outputs(nt);
+        assert_eq!(bits(&base), bits(&got), "train outputs diverged at num_threads={nt}");
+    }
+}
+
+/// The dense "Full" bench path (token-parallel attention + row-banded
+/// GEMMs) under a whole eval window.
+fn dense_bench_outputs(nt: usize) -> Vec<HostTensor> {
+    let b = backend(nt);
+    let name = "tput-shga-full-T256";
+    let exe = b.load(name).unwrap();
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(b.init_state(name).unwrap());
+    let cfg = &exe.spec().config;
+    let (batch, w) = (cfg.batch_size, cfg.window_len);
+    let tokens: Vec<i32> = (0..batch * (w + 1)).map(|i| (i * 13 % 251) as i32).collect();
+    bundle.set_group("tokens", vec![HostTensor::from_i32(&[batch, w + 1], &tokens)]);
+    let inputs = bundle.assemble(exe.spec()).unwrap();
+    exe.run(&inputs).unwrap()
+}
+
+#[test]
+fn dense_bench_bit_identical_across_thread_counts() {
+    let base = dense_bench_outputs(1);
+    for nt in [2usize, 4] {
+        let got = dense_bench_outputs(nt);
+        assert_eq!(bits(&base), bits(&got), "dense bench diverged at num_threads={nt}");
+    }
+}
