@@ -39,6 +39,11 @@ fn main() -> Result<()> {
     let prompt_ids: Vec<i32> =
         tok.encode(prompt.as_bytes()).into_iter().map(i32::from).collect();
     let b = sampler.batch_size();
+    eprintln!(
+        "session path: prompts ingest via chunked prefill ({} tokens/executor call), \
+         then all {b} slots decode together",
+        sampler.prefill_chunk()
+    );
 
     for top_p in [0.8f32, 0.999] {
         let mut rng = Rng::new(42);

@@ -1,7 +1,8 @@
-//! Serving demo: start the continuous-batching coordinator in-process, fire
-//! concurrent client requests at it, and report latency/throughput — the
-//! serving-side payoff of linear-time attention (no per-token cost growth,
-//! so slots interleave freely).
+//! Serving demo: start the continuous-batching coordinator in-process,
+//! multiplex concurrent v2 streaming requests over TCP (chunked prefill,
+//! per-token deltas, one mid-stream cancel), and report TTFT/latency —
+//! the serving-side payoff of linear-time attention (no per-token cost
+//! growth, so slots interleave freely and prompts ingest in chunks).
 //!
 //! Usage: cargo run --release --example serve -- [preset] [n_requests]
 
@@ -9,7 +10,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
-use transformer_vq::coordinator::{handle_conn, Client, Engine, WireRequest};
+use transformer_vq::coordinator::{serve_on, Client, Engine, EventFrame, GenerateFrame};
 use transformer_vq::metrics::LatencyHistogram;
 use transformer_vq::runtime::auto_backend;
 use transformer_vq::sample::Sampler;
@@ -22,7 +23,7 @@ fn main() -> Result<()> {
     let artifacts = transformer_vq::artifacts_dir();
     let ckpt = std::path::PathBuf::from(format!("runs/train_lm-{preset}/ckpt-final/state.tvq"));
     let preset_c = preset.clone();
-    let (handle, _join) = Engine::spawn(
+    let (handle, join) = Engine::spawn(
         move || {
             // backends may not be Send; build on the engine thread
             let backend = auto_backend(&artifacts)?;
@@ -35,21 +36,15 @@ fn main() -> Result<()> {
         0,
     )?;
 
-    // TCP front-end on an ephemeral port
+    // TCP front-end on an ephemeral port, graceful shutdown armed
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
-    {
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
         let handle = handle.clone();
-        std::thread::spawn(move || {
-            for stream in listener.incoming().flatten() {
-                let h = handle.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(stream, h);
-                });
-            }
-        });
-    }
-    eprintln!("serving {preset} on {addr}; firing {n_requests} concurrent requests");
+        std::thread::spawn(move || serve_on(listener, handle, Some(sd_rx)))
+    };
+    eprintln!("serving {preset} on {addr}; {n_requests} multiplexed streaming requests");
 
     let t0 = Instant::now();
     let (tx, rx) = mpsc::channel();
@@ -57,41 +52,87 @@ fn main() -> Result<()> {
         let addr = addr.clone();
         let tx = tx.clone();
         std::thread::spawn(move || {
-            let run = || -> Result<(f64, usize)> {
+            let run = || -> Result<(f64, f64, usize, bool)> {
                 let mut client = Client::connect(&addr)?;
+                let mut frame = GenerateFrame::new(
+                    format!("req-{i}"),
+                    format!("request {i}: the "),
+                    24 + (i % 4) * 16, // mixed lengths
+                );
+                frame.seed = Some(1000 + i as u64);
+                client.generate(&frame)?;
                 let t = Instant::now();
-                let resp = client.request(&WireRequest {
-                    prompt: format!("request {i}: the "),
-                    max_tokens: 24 + (i % 4) * 16, // mixed lengths
-                    temperature: 1.0,
-                    top_p: 0.95,
-                })?;
-                anyhow::ensure!(resp.ok, "{:?}", resp.error);
-                Ok((t.elapsed().as_secs_f64(), resp.tokens.unwrap().len()))
+                let mut ttft = None;
+                let mut cancelled = false;
+                loop {
+                    match client.next_event()? {
+                        EventFrame::Delta { index, .. } => {
+                            ttft.get_or_insert_with(|| t.elapsed().as_secs_f64());
+                            // demo cancellation: request 0 bails mid-stream
+                            if i == 0 && index == 4 && !cancelled {
+                                client.cancel(&frame.id)?;
+                                cancelled = true;
+                            }
+                        }
+                        EventFrame::Done { reason, tokens, .. } => {
+                            let lat = t.elapsed().as_secs_f64();
+                            return Ok((
+                                ttft.unwrap_or(lat),
+                                lat,
+                                tokens.len(),
+                                reason == "cancelled",
+                            ));
+                        }
+                        EventFrame::Error { error, .. } => anyhow::bail!("{error}"),
+                        EventFrame::Started { .. } | EventFrame::Stats(_) => {}
+                    }
+                }
             };
             tx.send(run()).unwrap();
         });
     }
     drop(tx);
 
-    let mut hist = LatencyHistogram::new();
+    let mut ttft_hist = LatencyHistogram::new();
+    let mut lat_hist = LatencyHistogram::new();
     let mut total_tokens = 0usize;
     let mut done = 0;
+    let mut cancelled = 0;
     while let Ok(r) = rx.recv() {
-        let (secs, toks) = r?;
-        hist.record(std::time::Duration::from_secs_f64(secs));
+        let (ttft, lat, toks, was_cancelled) = r?;
+        ttft_hist.record(std::time::Duration::from_secs_f64(ttft));
+        lat_hist.record(std::time::Duration::from_secs_f64(lat));
         total_tokens += toks;
         done += 1;
+        cancelled += was_cancelled as usize;
     }
     let wall = t0.elapsed().as_secs_f64();
+
+    // graceful shutdown: drain, join, report engine-side stats
+    let stats = handle.stats().map_err(anyhow::Error::msg)?;
+    let _ = sd_tx.send(());
+    server.join().expect("server thread")?;
+    let final_stats = join.join().expect("engine thread");
+
     println!("== serving summary ==");
-    println!("requests:        {done}/{n_requests}");
+    println!("requests:        {done}/{n_requests} ({cancelled} cancelled mid-stream)");
     println!(
         "generated:       {total_tokens} tokens in {wall:.2}s ({:.0} tok/s aggregate)",
         total_tokens as f64 / wall
     );
-    println!("latency  mean:   {:?}", hist.mean());
-    println!("latency  p50:    {:?}", hist.quantile(0.5));
-    println!("latency  p99:    {:?}", hist.quantile(0.99));
+    println!("TTFT     mean:   {:?}", ttft_hist.mean());
+    println!("TTFT     p99:    {:?}", ttft_hist.quantile(0.99));
+    println!("latency  mean:   {:?}", lat_hist.mean());
+    println!("latency  p50:    {:?}", lat_hist.quantile(0.5));
+    println!("latency  p99:    {:?}", lat_hist.quantile(0.99));
+    println!(
+        "engine:          {} prefill + {} decode tokens, {} steps, \
+         utilization {:.0}%, mean TTFT {:.1} ms",
+        stats.prefill_tokens,
+        stats.decode_tokens,
+        stats.steps,
+        100.0 * final_stats.utilization(4),
+        final_stats.mean_ttft_ms(),
+    );
     Ok(())
 }

@@ -1,0 +1,230 @@
+//! Native serving perf baseline: chunked prefill vs the old token-by-token
+//! prompt path, plus streaming TTFT and steady-state decode throughput
+//! under concurrent clients.
+//!
+//! The paper's serving claim is that every slot decodes in O(S + 2L)
+//! forever; the session API built on it ingests prompts in chunks
+//! (`Sampler::prefill`) instead of one full-batch `step` per prompt token.
+//! Phase 1 measures that directly on the sampler: a P-token prompt costs
+//! P full-batch decode steps on the old path (B lanes computed, B×V
+//! logits discarded per token) vs ceil(P/C) single-lane prefill calls with
+//! one readout. Phase 2 drives the whole stack — engine + TCP + NDJSON v2
+//! frames — with N concurrent streaming clients and reports TTFT and
+//! aggregate decode tok/s, asserting on the way that streamed deltas
+//! concatenate to each request's final text.
+//!
+//! Emits `BENCH_native_serve.json` (path overridable) so CI tracks the
+//! serving trajectory next to the decode/train artifacts. See DESIGN.md §8
+//! for how to read it.
+//!
+//! Usage: cargo run --release --example servebench --
+//!        [preset] [prompt_len] [n_clients] [out.json]
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+use transformer_vq::coordinator::{serve_on, Client, Engine, EventFrame, GenerateFrame};
+use transformer_vq::json::Json;
+use transformer_vq::native::{kernels, NativeBackend};
+use transformer_vq::sample::Sampler;
+
+/// Best-of-`reps` wall seconds for `f` (min is robust to scheduler noise).
+fn best_secs(reps: usize, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f()?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "quickstart".into());
+    let prompt_len: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let n_clients: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let out_path = args
+        .get(3)
+        .map(String::as_str)
+        .unwrap_or("BENCH_native_serve.json");
+
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, &preset)?;
+    let batch = sampler.batch_size();
+    let chunk = sampler.prefill_chunk();
+    let prompt: Vec<i32> = (0..prompt_len as i32).map(|t| 32 + (t * 7 + 13) % 94).collect();
+    eprintln!(
+        "servebench: {preset} (B={batch}, prefill chunk {chunk}), \
+         prompt {prompt_len} tokens, {n_clients} streaming clients"
+    );
+
+    // --- phase 1: prompt ingestion, old path vs chunked prefill ------------
+    // old path: what the pre-session engine did per prompt token — one
+    // full-batch decode step, computing and discarding B×V logits
+    let mut baseline_logits = Vec::new();
+    let baseline_secs = best_secs(3, || {
+        sampler.reset_all();
+        for &t in &prompt {
+            baseline_logits = sampler.step(&vec![t; batch])?.swap_remove(0);
+        }
+        Ok(())
+    })?;
+    // new path: chunked single-lane prefill, logits only after the last token
+    let mut prefill_logits = Vec::new();
+    let prefill_secs = best_secs(3, || {
+        sampler.reset_all();
+        prefill_logits = sampler.prefill(0, &prompt)?;
+        Ok(())
+    })?;
+    assert_eq!(
+        baseline_logits, prefill_logits,
+        "prefill must reproduce the stepwise path bit-for-bit"
+    );
+    let baseline_tps = prompt_len as f64 / baseline_secs;
+    let prefill_tps = prompt_len as f64 / prefill_secs;
+    let speedup = prefill_tps / baseline_tps;
+    println!("prompt ingestion ({prompt_len} tokens):");
+    println!("  token-by-token (old engine path): {baseline_tps:>10.0} tok/s");
+    println!("  chunked prefill (session path):   {prefill_tps:>10.0} tok/s");
+    println!("  speedup: {speedup:.2}x");
+
+    // --- phase 2: streaming serving under N concurrent clients -------------
+    let max_tokens = 96usize;
+    let preset_c = preset.clone();
+    let (handle, join) = Engine::spawn(
+        move || Sampler::new(&NativeBackend::new(), &preset_c),
+        0,
+    )?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
+        let handle = handle.clone();
+        std::thread::spawn(move || serve_on(listener, handle, Some(sd_rx)))
+    };
+
+    let prompt_str: String = prompt.iter().map(|&t| (t as u8) as char).collect();
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        let prompt_str = prompt_str.clone();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let run = || -> Result<(f64, f64, usize)> {
+                let mut client = Client::connect(&addr)?;
+                let mut frame =
+                    GenerateFrame::new(format!("bench-{i}"), prompt_str, max_tokens);
+                frame.seed = Some(7 + i as u64);
+                let t_submit = Instant::now();
+                client.generate(&frame)?;
+                let mut ttft = None;
+                let mut first_delta = None;
+                let mut delta_text = String::new();
+                let mut delta_tokens: Vec<i32> = Vec::new();
+                loop {
+                    match client.next_event()? {
+                        EventFrame::Delta { token, text, .. } => {
+                            ttft.get_or_insert_with(|| {
+                                t_submit.elapsed().as_secs_f64() * 1e3
+                            });
+                            first_delta.get_or_insert_with(Instant::now);
+                            delta_text.push_str(&text);
+                            delta_tokens.push(token);
+                        }
+                        EventFrame::Done { text, tokens, .. } => {
+                            // CI smoke assertion: streamed deltas concatenate
+                            // to the final output
+                            anyhow::ensure!(
+                                tokens == delta_tokens,
+                                "delta tokens != done tokens"
+                            );
+                            anyhow::ensure!(
+                                text.starts_with(&delta_text)
+                                    && text[delta_text.len()..]
+                                        .chars()
+                                        .all(|c| c == '\u{FFFD}'),
+                                "concatenated delta text does not match done text"
+                            );
+                            let decode_secs = first_delta
+                                .map(|t| t.elapsed().as_secs_f64())
+                                .unwrap_or(0.0);
+                            return Ok((
+                                ttft.unwrap_or(0.0),
+                                decode_secs,
+                                tokens.len(),
+                            ));
+                        }
+                        EventFrame::Error { error, .. } => anyhow::bail!("{error}"),
+                        EventFrame::Started { .. } | EventFrame::Stats(_) => {}
+                    }
+                }
+            };
+            tx.send(run()).unwrap();
+        });
+    }
+    drop(tx);
+
+    let mut ttfts = Vec::new();
+    let mut decode_tokens = 0usize;
+    let mut decode_secs_max = 0.0f64;
+    while let Ok(r) = rx.recv() {
+        let (ttft_ms, decode_secs, toks) = r?;
+        ttfts.push(ttft_ms);
+        decode_tokens += toks;
+        decode_secs_max = decode_secs_max.max(decode_secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let decode_tps = if decode_secs_max > 0.0 {
+        decode_tokens as f64 / decode_secs_max
+    } else {
+        0.0
+    };
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ttft_mean = ttfts.iter().sum::<f64>() / ttfts.len().max(1) as f64;
+    let ttft_max = ttfts.last().copied().unwrap_or(0.0);
+
+    let _ = sd_tx.send(());
+    server.join().expect("server thread")?;
+    let stats = join.join().expect("engine thread");
+
+    println!("streaming ({n_clients} clients, {max_tokens} tokens each):");
+    println!("  TTFT mean {ttft_mean:.1} ms, max {ttft_max:.1} ms");
+    println!("  steady-state decode: {decode_tps:.0} tok/s aggregate");
+    println!(
+        "  engine: {} prefill + {} decode tokens over {} steps in {wall:.2}s",
+        stats.prefill_tokens, stats.decode_tokens, stats.steps
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("native_serve")),
+        ("preset", Json::str(preset)),
+        ("batch", Json::num(batch as f64)),
+        ("prefill_chunk", Json::num(chunk as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("cores", Json::num(kernels::default_threads() as f64)),
+        ("baseline_prefill_tok_s", Json::num(baseline_tps)),
+        ("chunked_prefill_tok_s", Json::num(prefill_tps)),
+        ("prefill_speedup", Json::num(speedup)),
+        ("n_clients", Json::num(n_clients as f64)),
+        ("max_tokens", Json::num(max_tokens as f64)),
+        ("ttft_ms_mean", Json::num(ttft_mean)),
+        ("ttft_ms_max", Json::num(ttft_max)),
+        ("decode_tok_s", Json::num(decode_tps)),
+        ("engine_prefill_tokens", Json::num(stats.prefill_tokens as f64)),
+        ("engine_decode_tokens", Json::num(stats.decode_tokens as f64)),
+        ("engine_steps", Json::num(stats.steps as f64)),
+        ("utilization", Json::num(stats.utilization(batch))),
+    ]);
+    std::fs::write(out_path, j.dump())?;
+    println!("wrote {out_path}");
+
+    assert!(
+        speedup >= 1.5,
+        "chunked prefill must clearly beat the token-by-token path, got {speedup:.2}x"
+    );
+    println!("servebench OK: chunked prefill {speedup:.2}x over token-by-token ingestion");
+    Ok(())
+}

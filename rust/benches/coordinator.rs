@@ -16,14 +16,9 @@ fn main() {
 
     // --- wire protocol micro-benchmarks (no artifacts needed) -------------
     let mut table = Table::new(&["bench", "mean", "ops/s"]);
-    let req_line = WireRequest {
-        prompt: "a moderately sized prompt for parsing".into(),
-        max_tokens: 64,
-        temperature: 1.0,
-        top_p: 0.95,
-    }
-    .to_json()
-    .dump();
+    let req_line = WireRequest::new("a moderately sized prompt for parsing", 64)
+        .to_json()
+        .dump();
     let stats = bencher.run("wire request parse", || {
         let r = WireRequest::parse(&req_line).unwrap();
         std::hint::black_box(r);
@@ -37,6 +32,7 @@ fn main() {
         prompt_tokens: Some(16),
         queue_ms: Some(0.1),
         gen_ms: Some(5.0),
+        reason: Some("length".into()),
         error: None,
     };
     let stats = bencher.run("wire response serialize", || {
@@ -90,7 +86,7 @@ fn main() {
                     prompt: vec![(i % 200) as i32 + 32],
                     max_tokens: 16 + (i % 5) * 16,
                     params: SampleParams::default(),
-                    stop_token: None,
+                    ..GenRequest::default()
                 });
                 tx.send(r.map(|x| x.tokens.len())).unwrap();
             });

@@ -1,29 +1,74 @@
-//! Continuous-batching engine.
+//! Continuous-batching engine over slot sessions.
 //!
 //! One dedicated OS thread owns the `Sampler` (PJRT execution is blocking
-//! CPU work); callers submit `GenRequest`s over an mpsc channel and block on
-//! a per-request response channel. The engine admits requests into free
-//! batch slots at every step boundary, so short and long generations
-//! interleave without head-of-line blocking — the serving pattern the
-//! paper's linear-time sampling enables (a quadratic-cache model would pay
-//! O(T) per token for its longest-running slot; here every slot is
-//! O(S + 2L) forever).
+//! CPU work); callers submit [`GenRequest`]s over an mpsc channel and
+//! receive a stream of [`GenEvent`]s on a per-request channel (started →
+//! delta per token → done/error). The engine admits requests into free
+//! batch slots at every step boundary and ingests prompts via *chunked
+//! prefill*: a prefilling slot advances [`Sampler::prefill_chunk`] prompt
+//! tokens per engine step — in the same `step_lanes` call where co-resident
+//! decoders advance one sampled token — so a 512-token prompt costs
+//! ~512/C steps of head-of-line drag instead of 512, and idle lanes cost
+//! nothing at all.
+//!
+//! Per-request outputs are a pure function of (prompt, params, seed):
+//! batch rows never interact, chunk boundaries depend only on the prompt,
+//! and each request samples from its own seeded rng — so a fixed `seed`
+//! reproduces bit-identical tokens regardless of which other requests
+//! share the batch. That is the serving-side payoff of the paper's
+//! linear-time attention: every slot decodes in O(S + 2L) forever, making
+//! continuous batching and cheap multi-token ingestion natural.
+//!
+//! Cooperative cancellation ([`CancelToken`]) and per-request deadlines are
+//! checked at step boundaries; [`EngineHandle::shutdown`] drains in-flight
+//! requests with `Done(reason = Shutdown)` and returns the final
+//! [`EngineStats`] through the engine thread's join handle.
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::rng::Rng;
-use crate::sample::{nucleus_sample, SampleParams, Sampler};
+use crate::sample::{nucleus_sample, LaneInput, SampleParams, Sampler};
 
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Token ids to ingest before generating. Must be non-empty — the
+    /// protocol layer rejects empty prompts and so does the engine.
     pub prompt: Vec<i32>,
     pub max_tokens: usize,
     pub params: SampleParams,
-    /// Optional stop token (generation halts when sampled).
-    pub stop_token: Option<i32>,
+    /// Generation halts when any of these token ids is sampled. The stop
+    /// token stays in the output (its delta has already streamed).
+    pub stop_tokens: Vec<i32>,
+    /// Generation halts when the generated tail ends with any of these
+    /// sequences (token ids; the server encodes stop strings byte-wise).
+    pub stop_seqs: Vec<Vec<i32>>,
+    /// Fixed sampling seed: same request + same seed → bit-identical
+    /// output, independent of co-resident slots. `None` derives an
+    /// unreproducible stream from the engine root rng.
+    pub seed: Option<u64>,
+    /// Wall-clock budget measured from submission; on expiry the request
+    /// finishes with [`FinishReason::Deadline`] and its partial output.
+    pub deadline: Option<Duration>,
 }
 
+impl Default for GenRequest {
+    fn default() -> Self {
+        Self {
+            prompt: Vec::new(),
+            max_tokens: 16,
+            params: SampleParams::default(),
+            stop_tokens: Vec::new(),
+            stop_seqs: Vec::new(),
+            seed: None,
+            deadline: None,
+        }
+    }
+}
+
+/// Blocking one-shot view of a finished request (v1 wire compatibility).
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub tokens: Vec<i32>,
@@ -32,32 +77,124 @@ pub struct GenResponse {
     pub gen_ms: f64,
 }
 
-struct Pending {
-    req: GenRequest,
-    tx: mpsc::Sender<Result<GenResponse, String>>,
-    enqueued: Instant,
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_tokens`.
+    Length,
+    /// Sampled a stop token or completed a stop sequence.
+    Stop,
+    /// Cancelled via [`CancelToken::cancel`].
+    Cancelled,
+    /// Ran past the request deadline.
+    Deadline,
+    /// Engine shut down while the request was queued or in flight.
+    Shutdown,
 }
 
-struct Slot {
-    req: GenRequest,
-    tx: mpsc::Sender<Result<GenResponse, String>>,
-    enqueued: Instant,
-    started: Instant,
-    /// Index of the prompt token being fed this step.
-    prompt_pos: usize,
-    generated: Vec<i32>,
-    /// Token to feed at the next step.
-    current: i32,
-    rng: Rng,
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Shutdown => "shutdown",
+        }
+    }
 }
 
-#[derive(Debug, Default, Clone)]
+/// Terminal summary of one request, carried by [`GenEvent::Done`].
+#[derive(Debug, Clone)]
+pub struct GenOutcome {
+    pub reason: FinishReason,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub queue_ms: f64,
+    /// Submission → first generated token (None if none was generated).
+    pub ttft_ms: Option<f64>,
+    pub gen_ms: f64,
+}
+
+/// Per-request event stream, in order: one `Started`, then a `Delta` per
+/// generated token, then exactly one `Done` — or an `Error` at any point.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    Started { prompt_tokens: usize, queue_ms: f64 },
+    Delta { index: usize, token: i32 },
+    Done(GenOutcome),
+    Error(String),
+}
+
+/// Cloneable cancellation flag; the engine checks it at step boundaries
+/// (and on queued requests before they take a slot).
+#[derive(Clone)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Caller-side handle to one submitted request: an event receiver plus the
+/// cancellation flag.
+pub struct RequestHandle {
+    events: mpsc::Receiver<GenEvent>,
+    cancel: CancelToken,
+}
+
+impl RequestHandle {
+    /// Next event (blocking). Errors only if the engine died.
+    pub fn recv(&self) -> Result<GenEvent, String> {
+        self.events.recv().map_err(|_| "engine dropped request".to_string())
+    }
+
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Drain events until the request finishes; returns the outcome.
+    pub fn wait(self) -> Result<GenOutcome, String> {
+        loop {
+            match self.recv()? {
+                GenEvent::Done(o) => return Ok(o),
+                GenEvent::Error(e) => return Err(e),
+                GenEvent::Started { .. } | GenEvent::Delta { .. } => {}
+            }
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct EngineStats {
+    /// Requests that ran to a natural finish (length / stop / deadline).
     pub requests_completed: u64,
-    pub tokens_generated: u64,
+    /// Requests cancelled by the client or drained at shutdown.
+    pub requests_cancelled: u64,
+    /// Requests that errored (empty prompt, slot reset failure, step error).
+    pub requests_failed: u64,
+    /// Prompt tokens ingested via chunked prefill.
+    pub prefill_tokens: u64,
+    /// Tokens sampled and streamed.
+    pub decode_tokens: u64,
     pub steps: u64,
     /// Sum over steps of active slots (batch-utilization numerator).
     pub active_slot_steps: u64,
+    /// Time-to-first-token aggregates (submission → first sampled token).
+    pub ttft_ms_sum: f64,
+    pub ttft_ms_count: u64,
+    pub ttft_ms_max: f64,
+    /// Snapshot-only (stats queries): queue depth / occupied slots now.
+    pub queued: u64,
+    pub active: u64,
 }
 
 impl EngineStats {
@@ -67,21 +204,115 @@ impl EngineStats {
         }
         self.active_slot_steps as f64 / (self.steps * batch as u64) as f64
     }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.ttft_ms_count == 0 {
+            0.0
+        } else {
+            self.ttft_ms_sum / self.ttft_ms_count as f64
+        }
+    }
 }
 
-/// Cloneable handle: submit requests, block for responses. Thread-safe.
+enum Msg {
+    Submit(Pending),
+    Stats(mpsc::Sender<EngineStats>),
+    Shutdown,
+}
+
+struct Pending {
+    req: GenRequest,
+    tx: mpsc::Sender<GenEvent>,
+    cancel: CancelToken,
+    enqueued: Instant,
+}
+
+struct Slot {
+    req: GenRequest,
+    tx: mpsc::Sender<GenEvent>,
+    cancel: CancelToken,
+    enqueued: Instant,
+    started: Instant,
+    deadline: Option<Instant>,
+    /// Prompt tokens ingested so far (prefill phase).
+    prompt_pos: usize,
+    generated: Vec<i32>,
+    /// Last sampled token (decode phase): fed at the next step.
+    current: i32,
+    decoding: bool,
+    ttft_ms: Option<f64>,
+    rng: Rng,
+}
+
+impl Slot {
+    fn finish(self, reason: FinishReason, stats: &mut EngineStats) {
+        match reason {
+            FinishReason::Length | FinishReason::Stop | FinishReason::Deadline => {
+                stats.requests_completed += 1
+            }
+            FinishReason::Cancelled | FinishReason::Shutdown => stats.requests_cancelled += 1,
+        }
+        let outcome = GenOutcome {
+            reason,
+            prompt_tokens: self.req.prompt.len(),
+            queue_ms: (self.started - self.enqueued).as_secs_f64() * 1e3,
+            ttft_ms: self.ttft_ms,
+            gen_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            tokens: self.generated,
+        };
+        let _ = self.tx.send(GenEvent::Done(outcome));
+    }
+
+    fn fail(self, msg: String, stats: &mut EngineStats) {
+        stats.requests_failed += 1;
+        let _ = self.tx.send(GenEvent::Error(msg));
+    }
+}
+
+/// Cloneable handle: submit requests, stream events, query stats, shut
+/// down. Thread-safe.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Pending>,
+    tx: mpsc::Sender<Msg>,
 }
 
 impl EngineHandle {
-    /// Submit and wait for completion (blocking; call from worker threads).
-    pub fn generate(&self, req: GenRequest) -> Result<GenResponse, String> {
+    /// Submit a request; events stream on the returned handle.
+    pub fn submit(&self, req: GenRequest) -> Result<RequestHandle, String> {
         let (tx, rx) = mpsc::channel();
-        let pending = Pending { req, tx, enqueued: Instant::now() };
-        self.tx.send(pending).map_err(|_| "engine shut down".to_string())?;
-        rx.recv().map_err(|_| "engine dropped request".to_string())?
+        let cancel = CancelToken(Arc::new(AtomicBool::new(false)));
+        let pending =
+            Pending { req, tx, cancel: cancel.clone(), enqueued: Instant::now() };
+        self.tx
+            .send(Msg::Submit(pending))
+            .map_err(|_| "engine shut down".to_string())?;
+        Ok(RequestHandle { events: rx, cancel })
+    }
+
+    /// Submit and block for completion (v1 one-shot semantics). Requests
+    /// drained by shutdown/cancel return their partial output.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse, String> {
+        let o = self.submit(req)?.wait()?;
+        Ok(GenResponse {
+            tokens: o.tokens,
+            prompt_tokens: o.prompt_tokens,
+            queue_ms: o.queue_ms,
+            gen_ms: o.gen_ms,
+        })
+    }
+
+    /// Live engine statistics (answered at the next step boundary).
+    pub fn stats(&self) -> Result<EngineStats, String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| "engine shut down".to_string())?;
+        rx.recv().map_err(|_| "engine shut down".to_string())
+    }
+
+    /// Ask the engine to drain: in-flight and queued requests finish with
+    /// `Done(reason = Shutdown)`, then the engine thread returns its stats
+    /// (join the handle from [`Engine::spawn`] to collect them).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
     }
 }
 
@@ -99,7 +330,7 @@ impl Engine {
     where
         F: FnOnce() -> anyhow::Result<Sampler> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Pending>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
         let join = std::thread::spawn(move || {
             let mut sampler = match factory() {
@@ -122,54 +353,123 @@ impl Engine {
     }
 }
 
-fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Pending>) -> EngineStats {
+fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats {
     let b = sampler.batch_size();
+    let chunk = sampler.prefill_chunk().max(1);
     let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+    let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut stats = EngineStats::default();
     let mut rng_root = Rng::new(seed);
+    let mut disconnected = false;
     sampler.reset_all();
 
     loop {
-        // --- admit into free slots ----------------------------------------
-        for i in 0..b {
-            if slots[i].is_none() {
-                match rx.try_recv() {
-                    Ok(p) => {
-                        if let Err(e) = sampler.reset_slot(i) {
-                            let _ = p.tx.send(Err(format!("{e:#}")));
-                            continue;
-                        }
-                        slots[i] = Some(admit(p, &mut rng_root));
-                    }
-                    Err(_) => break,
+        // --- drain the control channel without blocking -------------------
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(p)) => queue.push_back(p),
+                Ok(Msg::Stats(tx)) => {
+                    let _ = tx.send(snapshot(&stats, &slots, &queue));
+                }
+                Ok(Msg::Shutdown) => {
+                    drain_shutdown(&mut slots, &mut queue, &mut stats);
+                    return stats;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
                 }
             }
         }
+
+        // --- cancellations and deadlines at the step boundary -------------
+        // (queued requests too: a deadline is a latency bound from
+        // submission, so it must fire even while waiting for a slot)
+        queue.retain(|p| {
+            let reason = if p.cancel.is_cancelled() {
+                Some(FinishReason::Cancelled)
+            } else if p.req.deadline.is_some_and(|d| Instant::now() >= p.enqueued + d) {
+                Some(FinishReason::Deadline)
+            } else {
+                None
+            };
+            match reason {
+                Some(r) => {
+                    finish_pending(p, r, &mut stats);
+                    false
+                }
+                None => true,
+            }
+        });
+        for slot in slots.iter_mut() {
+            let reason = match slot.as_ref() {
+                Some(s) if s.cancel.is_cancelled() => Some(FinishReason::Cancelled),
+                Some(s) if s.deadline.is_some_and(|d| Instant::now() >= d) => {
+                    Some(FinishReason::Deadline)
+                }
+                _ => None,
+            };
+            if let Some(r) = reason {
+                slot.take().expect("checked Some").finish(r, &mut stats);
+            }
+        }
+
+        // --- admit queued requests into free slots ------------------------
+        // keep popping on a failed admit (bad request, reset error): the
+        // slot stays free and the next queued request must not be stranded
+        for i in 0..b {
+            while slots[i].is_none() {
+                let Some(p) = queue.pop_front() else { break };
+                slots[i] = admit(i, p, sampler, &mut rng_root, &mut stats);
+            }
+        }
+
         let n_active = slots.iter().filter(|s| s.is_some()).count();
         if n_active == 0 {
-            // idle: block for the next request (or shut down)
+            if !queue.is_empty() {
+                continue; // runnable work queued: never block on recv here
+            }
+            if disconnected {
+                return stats; // every handle dropped, nothing left to do
+            }
+            // idle: block for the next message (or shut down)
             match rx.recv() {
-                Ok(p) => {
-                    let _ = sampler.reset_slot(0);
-                    slots[0] = Some(admit(p, &mut rng_root));
+                Ok(Msg::Submit(p)) => queue.push_back(p),
+                Ok(Msg::Stats(tx)) => {
+                    let _ = tx.send(snapshot(&stats, &slots, &queue));
+                }
+                Ok(Msg::Shutdown) => {
+                    drain_shutdown(&mut slots, &mut queue, &mut stats);
+                    return stats;
                 }
                 Err(_) => return stats,
             }
             continue;
         }
 
-        // --- one decode step over all slots --------------------------------
-        let tokens: Vec<i32> = slots
-            .iter()
-            .map(|s| s.as_ref().map(|s| s.current).unwrap_or(0))
-            .collect();
-        let logits = match sampler.step(&tokens) {
+        // --- one session step: decode lanes feed their last sampled token,
+        //     prefill lanes ingest their next prompt chunk — fused into a
+        //     single step_lanes call so prompts never stall decoders for
+        //     more than one step
+        let mut lanes: Vec<LaneInput> = Vec::with_capacity(n_active);
+        for (i, slot) in slots.iter().enumerate() {
+            let Some(s) = slot.as_ref() else { continue };
+            let tokens = if s.decoding {
+                vec![s.current]
+            } else {
+                let k = (s.req.prompt.len() - s.prompt_pos).min(chunk);
+                s.req.prompt[s.prompt_pos..s.prompt_pos + k].to_vec()
+            };
+            lanes.push(LaneInput { slot: i, tokens });
+        }
+        let lane_logits = match sampler.step_lanes(&lanes) {
             Ok(l) => l,
             Err(e) => {
                 // fail every active request; engine stays alive
                 for slot in slots.iter_mut() {
                     if let Some(s) = slot.take() {
-                        let _ = s.tx.send(Err(format!("{e:#}")));
+                        s.fail(format!("{e:#}"), &mut stats);
                     }
                 }
                 continue;
@@ -178,46 +478,132 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Pending>) -> EngineS
         stats.steps += 1;
         stats.active_slot_steps += n_active as u64;
 
-        for (i, slot) in slots.iter_mut().enumerate() {
-            let Some(s) = slot.as_mut() else { continue };
-            if s.prompt_pos + 1 < s.req.prompt.len() {
-                // prefill: feed the next prompt token
-                s.prompt_pos += 1;
-                s.current = s.req.prompt[s.prompt_pos];
-                continue;
+        for (lane, logits) in lanes.iter().zip(&lane_logits) {
+            let slot = &mut slots[lane.slot];
+            let s = slot.as_mut().expect("lane built from occupied slot");
+            if !s.decoding {
+                s.prompt_pos += lane.tokens.len();
+                stats.prefill_tokens += lane.tokens.len() as u64;
+                if s.prompt_pos < s.req.prompt.len() {
+                    continue; // more prompt chunks to ingest
+                }
+                // prompt complete: this step's logits seed the first sample
+                s.decoding = true;
+                let ttft = s.enqueued.elapsed().as_secs_f64() * 1e3;
+                s.ttft_ms = Some(ttft);
+                stats.ttft_ms_sum += ttft;
+                stats.ttft_ms_count += 1;
+                if ttft > stats.ttft_ms_max {
+                    stats.ttft_ms_max = ttft;
+                }
             }
-            // generation
-            let tok = nucleus_sample(&logits[i], s.req.params, &mut s.rng);
+            let tok = nucleus_sample(logits, s.req.params, &mut s.rng);
             s.generated.push(tok);
             s.current = tok;
-            stats.tokens_generated += 1;
-            let hit_stop = s.req.stop_token == Some(tok);
+            stats.decode_tokens += 1;
+            let _ = s.tx.send(GenEvent::Delta { index: s.generated.len() - 1, token: tok });
+            let hit_stop = s.req.stop_tokens.contains(&tok)
+                || s
+                    .req
+                    .stop_seqs
+                    .iter()
+                    .any(|q| !q.is_empty() && s.generated.ends_with(q));
             if s.generated.len() >= s.req.max_tokens || hit_stop {
-                let s = slot.take().unwrap();
-                stats.requests_completed += 1;
-                let resp = GenResponse {
-                    prompt_tokens: s.req.prompt.len(),
-                    queue_ms: (s.started - s.enqueued).as_secs_f64() * 1e3,
-                    gen_ms: s.started.elapsed().as_secs_f64() * 1e3,
-                    tokens: s.generated,
-                };
-                let _ = s.tx.send(Ok(resp));
+                let reason = if hit_stop { FinishReason::Stop } else { FinishReason::Length };
+                slot.take().expect("just borrowed").finish(reason, &mut stats);
             }
         }
     }
 }
 
-fn admit(p: Pending, rng_root: &mut Rng) -> Slot {
-    let prompt = if p.req.prompt.is_empty() { vec![0] } else { p.req.prompt.clone() };
-    let current = prompt[0];
-    Slot {
-        req: GenRequest { prompt, ..p.req },
+/// Validate and seat one request: reset the slot, emit `Started`, seed the
+/// per-request rng. Returns `None` (and reports to the caller) when the
+/// request cannot start — the slot stays free for the next one.
+fn admit(
+    slot_ix: usize,
+    p: Pending,
+    sampler: &mut Sampler,
+    rng_root: &mut Rng,
+    stats: &mut EngineStats,
+) -> Option<Slot> {
+    if p.cancel.is_cancelled() {
+        finish_pending(&p, FinishReason::Cancelled, stats);
+        return None;
+    }
+    if p.req.prompt.is_empty() {
+        stats.requests_failed += 1;
+        let _ = p.tx.send(GenEvent::Error("empty prompt".to_string()));
+        return None;
+    }
+    if let Err(e) = sampler.reset_slot(slot_ix) {
+        stats.requests_failed += 1;
+        let _ = p.tx.send(GenEvent::Error(format!("reset slot {slot_ix}: {e:#}")));
+        return None;
+    }
+    let started = Instant::now();
+    let queue_ms = (started - p.enqueued).as_secs_f64() * 1e3;
+    let _ = p.tx.send(GenEvent::Started { prompt_tokens: p.req.prompt.len(), queue_ms });
+    let rng = match p.req.seed {
+        Some(s) => Rng::new(s),
+        None => rng_root.fork(0xC0FFEE),
+    };
+    let mut req = p.req;
+    req.max_tokens = req.max_tokens.max(1);
+    Some(Slot {
+        deadline: req.deadline.map(|d| p.enqueued + d),
+        req,
         tx: p.tx,
+        cancel: p.cancel,
         enqueued: p.enqueued,
-        started: Instant::now(),
+        started,
         prompt_pos: 0,
         generated: Vec::new(),
-        current,
-        rng: rng_root.fork(0xC0FFEE),
+        current: 0,
+        decoding: false,
+        ttft_ms: None,
+        rng,
+    })
+}
+
+fn snapshot(stats: &EngineStats, slots: &[Option<Slot>], queue: &VecDeque<Pending>) -> EngineStats {
+    let mut s = stats.clone();
+    s.queued = queue.len() as u64;
+    s.active = slots.iter().filter(|x| x.is_some()).count() as u64;
+    s
+}
+
+/// Finish a request that never took a slot: `Done` with empty output.
+/// Shares the reason → counter mapping with [`Slot::finish`].
+fn finish_pending(p: &Pending, reason: FinishReason, stats: &mut EngineStats) {
+    match reason {
+        FinishReason::Length | FinishReason::Stop | FinishReason::Deadline => {
+            stats.requests_completed += 1
+        }
+        FinishReason::Cancelled | FinishReason::Shutdown => stats.requests_cancelled += 1,
+    }
+    let _ = p.tx.send(GenEvent::Done(GenOutcome {
+        reason,
+        tokens: Vec::new(),
+        prompt_tokens: p.req.prompt.len(),
+        queue_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+        ttft_ms: None,
+        gen_ms: 0.0,
+    }));
+}
+
+/// Shutdown drain: every in-flight slot and queued request finishes with
+/// `Done(reason = Shutdown)` (partial tokens for slots, empty for queued).
+fn drain_shutdown(
+    slots: &mut [Option<Slot>],
+    queue: &mut VecDeque<Pending>,
+    stats: &mut EngineStats,
+) {
+    for slot in slots.iter_mut() {
+        if let Some(s) = slot.take() {
+            s.finish(FinishReason::Shutdown, stats);
+        }
+    }
+    for p in queue.drain(..) {
+        finish_pending(&p, FinishReason::Shutdown, stats);
     }
 }

@@ -2,31 +2,53 @@
 //! linear-time sampler (vLLM-router-style L3).
 //!
 //! * [`engine`] — the continuous-batching [`Engine`]: one dedicated thread
-//!   owns the sampler, requests enter over channels into free batch slots.
-//! * [`protocol`] — newline-delimited JSON wire format
+//!   owns the sampler; requests enter over channels, stream back as
+//!   per-token [`GenEvent`]s, and support cancellation, deadlines, stop
+//!   conditions, and graceful shutdown.
+//! * [`protocol`] — newline-delimited JSON wire format: multiplexed v2
+//!   frames ([`ClientFrame`]/[`EventFrame`]) plus v1 one-shot back-compat
 //!   ([`WireRequest`]/[`WireResponse`]).
-//! * [`server`] — the TCP front-end ([`serve`]), thread-per-connection.
+//! * [`server`] — the TCP front-end ([`serve`]/[`serve_until`]),
+//!   thread-per-connection with a per-connection writer thread
+//!   multiplexing event frames.
 //!
 //! The decode artifact is compiled for a fixed batch size B; the engine
-//! treats its B rows as *slots*. Requests are admitted into free slots at
-//! any step boundary (continuous batching): a slot runs prompt prefill
-//! (teacher-forcing one token per step — decode is token-level, so prefill
-//! needs no separate graph), then nucleus-samples until done, then is
-//! zeroed (`Sampler::reset_slot`) and immediately reusable. Per-token cost
-//! is O(S + 2L) regardless of how long each sequence has run — the
-//! compressive cache never grows.
+//! treats its B rows as *slots*. A request's session is:
+//!
+//! ```text
+//! queued --admit--> prefill --prompt done--> decode --length/stop--> done
+//!    \                  \                       \--deadline--------> done
+//!     \                  \----cancel/shutdown----\------------------> done
+//!      \--cancel/shutdown--------------------------------------------> done
+//! ```
+//!
+//! Prompts are ingested via *chunked prefill* ([`Sampler::prefill_chunk`]
+//! tokens per engine step, fused into the same `step_lanes` call that
+//! advances co-resident decoders one token), so long prompts cost ~P/C
+//! steps of head-of-line drag instead of P, and only occupied lanes
+//! compute at all. Per-token cost is O(S + 2L) regardless of how long each
+//! sequence has run — the compressive cache never grows. See DESIGN.md §8
+//! for the serving model and the `BENCH_native_serve.json` artifact.
 //!
 //! Threading: the engine's single step thread is the *coordinator*
 //! concurrency level; *compute* concurrency lives below it, inside each
-//! native step, which fans batch slots out across the kernel pool
+//! native step, which fans batch lanes out across the kernel pool
 //! (`native::kernels`, DESIGN.md §7). The two compose — one step thread,
-//! many kernel lanes — so slot admission order, and therefore sampling,
-//! stays deterministic while the hardware stays busy.
+//! many kernel lanes — so per-request sampling stays deterministic (fixed
+//! `seed` → bit-identical output, whatever else shares the batch) while
+//! the hardware stays busy.
+//!
+//! [`Sampler::prefill_chunk`]: crate::sample::Sampler::prefill_chunk
 
 pub mod engine;
 pub mod protocol;
 pub mod server;
 
-pub use engine::{Engine, EngineHandle, EngineStats, GenRequest, GenResponse};
-pub use protocol::{WireRequest, WireResponse};
-pub use server::{handle_conn, serve, Client};
+pub use engine::{
+    CancelToken, Engine, EngineHandle, EngineStats, FinishReason, GenEvent, GenOutcome,
+    GenRequest, GenResponse, RequestHandle,
+};
+pub use protocol::{
+    ClientFrame, EventFrame, GenerateFrame, WireRequest, WireResponse, MAX_MAX_TOKENS,
+};
+pub use server::{handle_conn, serve, serve_on, serve_until, Client};

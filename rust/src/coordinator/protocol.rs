@@ -1,41 +1,179 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol: newline-delimited JSON frames over TCP, v2 (multiplexed
+//! sessions) with v1 (one-shot) back-compat on the same connection.
 //!
-//! Request:  {"prompt": "...", "max_tokens": 32, "temperature": 1.0,
-//!            "top_p": 0.95}
-//! Response: {"ok": true, "text": "...", "tokens": [...],
-//!            "prompt_tokens": 5, "queue_ms": 0.3, "gen_ms": 12.5}
-//! Errors:   {"ok": false, "error": "..."}
+//! ## v2 client → server frames ([`ClientFrame`])
+//!
+//! ```json
+//! {"op":"generate","id":"r1","prompt":"the ","max_tokens":32,
+//!  "temperature":1.0,"top_p":0.95,"seed":7,"stop":["\n\n",0],
+//!  "deadline_ms":5000}
+//! {"op":"cancel","id":"r1"}
+//! {"op":"stats"}
+//! ```
+//!
+//! `id` is client-assigned and scopes every event frame; many generates
+//! multiplex over one connection. `"op":"generate"` may be omitted when
+//! `id` is present. `stop` mixes byte-sequence strings and token ids.
+//!
+//! ## v2 server → client frames ([`EventFrame`])
+//!
+//! ```json
+//! {"id":"r1","event":"started","prompt_tokens":4,"queue_ms":0.2}
+//! {"id":"r1","event":"delta","index":0,"token":104,"text":"h"}
+//! {"id":"r1","event":"done","reason":"length","text":"...","tokens":[...],
+//!  "prompt_tokens":4,"queue_ms":0.2,"ttft_ms":3.1,"gen_ms":12.5}
+//! {"id":"r1","event":"error","error":"..."}
+//! {"event":"stats", ...engine counters...}
+//! ```
+//!
+//! Delta texts are produced by an incremental UTF-8 decoder
+//! ([`crate::tokenizer::Utf8Stream`]): concatenating every `delta.text`
+//! yields exactly `done.text`.
+//!
+//! ## v1 (back-compat)
+//!
+//! A line with `prompt` but neither `op` nor `id` is a blocking one-shot
+//! [`WireRequest`]; the response is a single [`WireResponse`] line
+//! (`{"ok":true,...}`). v1 requests may also carry `stop` and `seed`.
+//! Empty prompts are rejected at this layer in both versions.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::json::Json;
 
-#[derive(Debug, Clone)]
+use super::engine::EngineStats;
+
+/// Upper bound on `max_tokens` (v2 rejects above it, v1 clamps into it).
+pub const MAX_MAX_TOKENS: usize = 4096;
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().map_err(|e| anyhow!("bad '{key}': {e:#}")),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_usize().map_err(|e| anyhow!("bad '{key}': {e:#}")),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let n = v.as_u64().map_err(|e| anyhow!("bad '{key}': {e:#}"))?;
+            // JSON numbers are f64: integers from 2^53 up silently round
+            // during parsing (2^53 + 1 arrives as 2^53), which would
+            // corrupt a seed while claiming reproducibility — so the whole
+            // ambiguous range is rejected
+            if n >= (1u64 << 53) {
+                bail!("'{key}' {n} must be below 2^53 to round-trip JSON exactly");
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+/// Parse `stop`: a string, a token id, or an array mixing both.
+fn parse_stop(j: &Json) -> Result<(Vec<i32>, Vec<String>)> {
+    let mut tokens = Vec::new();
+    let mut strs = Vec::new();
+    let Some(v) = j.get("stop") else {
+        return Ok((tokens, strs));
+    };
+    let items: Vec<&Json> = match v {
+        Json::Arr(a) => a.iter().collect(),
+        other => vec![other],
+    };
+    for it in items {
+        match it {
+            Json::Num(n) => {
+                if n.fract() != 0.0 || *n < 0.0 || *n > i32::MAX as f64 {
+                    bail!("bad stop token id {n}");
+                }
+                tokens.push(*n as i32);
+            }
+            Json::Str(s) if !s.is_empty() => strs.push(s.clone()),
+            other => bail!("stop entries must be token ids or non-empty strings, got {other:?}"),
+        }
+    }
+    Ok((tokens, strs))
+}
+
+fn stop_to_json(tokens: &[i32], strs: &[String]) -> Json {
+    let mut items: Vec<Json> = tokens.iter().map(|&t| Json::num(t as f64)).collect();
+    items.extend(strs.iter().map(|s| Json::str(s.clone())));
+    Json::Arr(items)
+}
+
+// ---------------------------------------------------------------------------
+// v1 one-shot request/response
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct WireRequest {
     pub prompt: String,
     pub max_tokens: usize,
     pub temperature: f32,
     pub top_p: f32,
+    pub seed: Option<u64>,
+    pub stop_tokens: Vec<i32>,
+    pub stop_strs: Vec<String>,
 }
 
 impl WireRequest {
+    pub fn new(prompt: impl Into<String>, max_tokens: usize) -> Self {
+        Self {
+            prompt: prompt.into(),
+            max_tokens,
+            temperature: 1.0,
+            top_p: 0.95,
+            ..Default::default()
+        }
+    }
+
     pub fn parse(line: &str) -> Result<Self> {
-        let j = Json::parse(line)?;
+        Self::from_json(&Json::parse(line)?)
+    }
+
+    /// Lenient v1 parse: odd-typed tuning keys fall back to defaults and
+    /// `max_tokens` clamps into range — but an empty or missing prompt is
+    /// rejected, and so are a malformed `stop` or `seed` (silently
+    /// dropping a stop condition or corrupting a seed would be unsafe).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let prompt = j.req("prompt")?.as_str()?.to_string();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let (stop_tokens, stop_strs) = parse_stop(j)?;
         Ok(Self {
-            prompt: j.req("prompt")?.as_str()?.to_string(),
-            max_tokens: j.usize_or("max_tokens", 64),
+            prompt,
+            max_tokens: j.usize_or("max_tokens", 64).clamp(1, MAX_MAX_TOKENS),
             temperature: j.f64_or("temperature", 1.0) as f32,
             top_p: j.f64_or("top_p", 0.95) as f32,
+            seed: opt_u64(j, "seed")?,
+            stop_tokens,
+            stop_strs,
         })
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("prompt", Json::str(self.prompt.clone())),
             ("max_tokens", Json::num(self.max_tokens as f64)),
             ("temperature", Json::num(self.temperature as f64)),
             ("top_p", Json::num(self.top_p as f64)),
-        ])
+        ];
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        if !self.stop_tokens.is_empty() || !self.stop_strs.is_empty() {
+            pairs.push(("stop", stop_to_json(&self.stop_tokens, &self.stop_strs)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -47,6 +185,7 @@ pub struct WireResponse {
     pub prompt_tokens: Option<usize>,
     pub queue_ms: Option<f64>,
     pub gen_ms: Option<f64>,
+    pub reason: Option<String>,
     pub error: Option<String>,
 }
 
@@ -75,6 +214,9 @@ impl WireResponse {
         if let Some(g) = self.gen_ms {
             pairs.push(("gen_ms", Json::num(g)));
         }
+        if let Some(r) = &self.reason {
+            pairs.push(("reason", Json::str(r.clone())));
+        }
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e.clone())));
         }
@@ -92,8 +234,306 @@ impl WireResponse {
             prompt_tokens: j.get("prompt_tokens").and_then(|x| x.as_usize().ok()),
             queue_ms: j.get("queue_ms").and_then(|x| x.as_f64().ok()),
             gen_ms: j.get("gen_ms").and_then(|x| x.as_f64().ok()),
+            reason: j.get("reason").and_then(|x| x.as_str().ok()).map(String::from),
             error: j.get("error").and_then(|x| x.as_str().ok()).map(String::from),
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2 client frames
+// ---------------------------------------------------------------------------
+
+/// One v2 `generate` op: a client-identified streaming session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateFrame {
+    pub id: String,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub seed: Option<u64>,
+    pub stop_tokens: Vec<i32>,
+    pub stop_strs: Vec<String>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl GenerateFrame {
+    pub fn new(id: impl Into<String>, prompt: impl Into<String>, max_tokens: usize) -> Self {
+        Self {
+            id: id.into(),
+            prompt: prompt.into(),
+            max_tokens,
+            temperature: 1.0,
+            top_p: 0.95,
+            seed: None,
+            stop_tokens: Vec::new(),
+            stop_strs: Vec::new(),
+            deadline_ms: None,
+        }
+    }
+
+    /// Strict v2 parse: wrong types, out-of-range `max_tokens`, empty
+    /// `id`/`prompt` are all errors (answered with an error frame; the
+    /// connection survives).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let id = j.req("id")?.as_str()?.to_string();
+        if id.is_empty() {
+            bail!("empty id");
+        }
+        let prompt = j.req("prompt")?.as_str()?.to_string();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let max_tokens = opt_usize(j, "max_tokens", 64)?;
+        if max_tokens == 0 || max_tokens > MAX_MAX_TOKENS {
+            bail!("max_tokens {max_tokens} outside 1..={MAX_MAX_TOKENS}");
+        }
+        let (stop_tokens, stop_strs) = parse_stop(j)?;
+        Ok(Self {
+            id,
+            prompt,
+            max_tokens,
+            temperature: opt_f64(j, "temperature", 1.0)? as f32,
+            top_p: opt_f64(j, "top_p", 0.95)? as f32,
+            seed: opt_u64(j, "seed")?,
+            stop_tokens,
+            stop_strs,
+            deadline_ms: opt_u64(j, "deadline_ms")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("op", Json::str("generate")),
+            ("id", Json::str(self.id.clone())),
+            ("prompt", Json::str(self.prompt.clone())),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("temperature", Json::num(self.temperature as f64)),
+            ("top_p", Json::num(self.top_p as f64)),
+        ];
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        if !self.stop_tokens.is_empty() || !self.stop_strs.is_empty() {
+            pairs.push(("stop", stop_to_json(&self.stop_tokens, &self.stop_strs)));
+        }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(d as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Any inbound line: a v2 op, or a v1 one-shot request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientFrame {
+    Generate(GenerateFrame),
+    Cancel { id: String },
+    Stats,
+    /// v1 back-compat: `prompt` present, no `op`, no `id`.
+    OneShot(WireRequest),
+}
+
+impl ClientFrame {
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = Json::parse(line)?;
+        if j.as_obj().is_err() {
+            bail!("frame must be a JSON object");
+        }
+        match j.get("op") {
+            Some(op) => match op.as_str().map_err(|e| anyhow!("bad 'op': {e:#}"))? {
+                "generate" => Ok(ClientFrame::Generate(GenerateFrame::from_json(&j)?)),
+                "cancel" => {
+                    let id = j.req("id")?.as_str()?.to_string();
+                    if id.is_empty() {
+                        bail!("empty id");
+                    }
+                    Ok(ClientFrame::Cancel { id })
+                }
+                "stats" => Ok(ClientFrame::Stats),
+                other => bail!("unknown op '{other}'"),
+            },
+            None if j.get("id").is_some() => {
+                Ok(ClientFrame::Generate(GenerateFrame::from_json(&j)?))
+            }
+            None => Ok(ClientFrame::OneShot(WireRequest::from_json(&j)?)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2 server frames
+// ---------------------------------------------------------------------------
+
+/// One outbound v2 frame. `Error { id: None }` reports a connection-level
+/// problem (e.g. an unparseable line).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventFrame {
+    Started {
+        id: String,
+        prompt_tokens: usize,
+        queue_ms: f64,
+    },
+    Delta {
+        id: String,
+        index: usize,
+        token: i32,
+        text: String,
+    },
+    Done {
+        id: String,
+        reason: String,
+        text: String,
+        tokens: Vec<i32>,
+        prompt_tokens: usize,
+        queue_ms: f64,
+        ttft_ms: Option<f64>,
+        gen_ms: f64,
+    },
+    Error {
+        id: Option<String>,
+        error: String,
+    },
+    Stats(EngineStats),
+}
+
+impl EventFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            EventFrame::Started { id, prompt_tokens, queue_ms } => Json::obj(vec![
+                ("id", Json::str(id.clone())),
+                ("event", Json::str("started")),
+                ("prompt_tokens", Json::num(*prompt_tokens as f64)),
+                ("queue_ms", Json::num(*queue_ms)),
+            ]),
+            EventFrame::Delta { id, index, token, text } => Json::obj(vec![
+                ("id", Json::str(id.clone())),
+                ("event", Json::str("delta")),
+                ("index", Json::num(*index as f64)),
+                ("token", Json::num(*token as f64)),
+                ("text", Json::str(text.clone())),
+            ]),
+            EventFrame::Done {
+                id,
+                reason,
+                text,
+                tokens,
+                prompt_tokens,
+                queue_ms,
+                ttft_ms,
+                gen_ms,
+            } => {
+                let mut pairs = vec![
+                    ("id", Json::str(id.clone())),
+                    ("event", Json::str("done")),
+                    ("reason", Json::str(reason.clone())),
+                    ("text", Json::str(text.clone())),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("prompt_tokens", Json::num(*prompt_tokens as f64)),
+                    ("queue_ms", Json::num(*queue_ms)),
+                    ("gen_ms", Json::num(*gen_ms)),
+                ];
+                if let Some(t) = ttft_ms {
+                    pairs.push(("ttft_ms", Json::num(*t)));
+                }
+                Json::obj(pairs)
+            }
+            EventFrame::Error { id, error } => {
+                let mut pairs = vec![("event", Json::str("error")), ("error", Json::str(error.clone()))];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::str(id.clone())));
+                }
+                Json::obj(pairs)
+            }
+            EventFrame::Stats(s) => Json::obj(vec![
+                ("event", Json::str("stats")),
+                ("requests_completed", Json::num(s.requests_completed as f64)),
+                ("requests_cancelled", Json::num(s.requests_cancelled as f64)),
+                ("requests_failed", Json::num(s.requests_failed as f64)),
+                ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+                ("decode_tokens", Json::num(s.decode_tokens as f64)),
+                ("steps", Json::num(s.steps as f64)),
+                ("active_slot_steps", Json::num(s.active_slot_steps as f64)),
+                ("ttft_ms_sum", Json::num(s.ttft_ms_sum)),
+                ("ttft_ms_count", Json::num(s.ttft_ms_count as f64)),
+                ("ttft_ms_max", Json::num(s.ttft_ms_max)),
+                ("queued", Json::num(s.queued as f64)),
+                ("active", Json::num(s.active as f64)),
+            ]),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = Json::parse(line)?;
+        let event = j.req("event")?.as_str()?.to_string();
+        let id = || -> Result<String> { Ok(j.req("id")?.as_str()?.to_string()) };
+        match event.as_str() {
+            "started" => Ok(EventFrame::Started {
+                id: id()?,
+                prompt_tokens: j.req("prompt_tokens")?.as_usize()?,
+                queue_ms: j.req("queue_ms")?.as_f64()?,
+            }),
+            "delta" => Ok(EventFrame::Delta {
+                id: id()?,
+                index: j.req("index")?.as_usize()?,
+                token: j.req("token")?.as_f64()? as i32,
+                text: j.req("text")?.as_str()?.to_string(),
+            }),
+            "done" => Ok(EventFrame::Done {
+                id: id()?,
+                reason: j.req("reason")?.as_str()?.to_string(),
+                text: j.req("text")?.as_str()?.to_string(),
+                tokens: j
+                    .req("tokens")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_f64()? as i32))
+                    .collect::<Result<Vec<i32>>>()?,
+                prompt_tokens: j.req("prompt_tokens")?.as_usize()?,
+                queue_ms: j.req("queue_ms")?.as_f64()?,
+                ttft_ms: j.get("ttft_ms").and_then(|v| v.as_f64().ok()),
+                gen_ms: j.req("gen_ms")?.as_f64()?,
+            }),
+            "error" => Ok(EventFrame::Error {
+                id: j.get("id").and_then(|v| v.as_str().ok()).map(String::from),
+                error: j.req("error")?.as_str()?.to_string(),
+            }),
+            "stats" => Ok(EventFrame::Stats(EngineStats {
+                requests_completed: j.req("requests_completed")?.as_u64()?,
+                requests_cancelled: j.req("requests_cancelled")?.as_u64()?,
+                requests_failed: j.req("requests_failed")?.as_u64()?,
+                prefill_tokens: j.req("prefill_tokens")?.as_u64()?,
+                decode_tokens: j.req("decode_tokens")?.as_u64()?,
+                steps: j.req("steps")?.as_u64()?,
+                active_slot_steps: j.req("active_slot_steps")?.as_u64()?,
+                ttft_ms_sum: j.req("ttft_ms_sum")?.as_f64()?,
+                ttft_ms_count: j.req("ttft_ms_count")?.as_u64()?,
+                ttft_ms_max: j.req("ttft_ms_max")?.as_f64()?,
+                queued: j.req("queued")?.as_u64()?,
+                active: j.req("active")?.as_u64()?,
+            })),
+            other => bail!("unknown event '{other}'"),
+        }
+    }
+
+    /// Serialize as one NDJSON line (no trailing newline).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// The request id this frame belongs to, if any.
+    pub fn id(&self) -> Option<&str> {
+        match self {
+            EventFrame::Started { id, .. }
+            | EventFrame::Delta { id, .. }
+            | EventFrame::Done { id, .. } => Some(id),
+            EventFrame::Error { id, .. } => id.as_deref(),
+            EventFrame::Stats(_) => None,
+        }
     }
 }
 
@@ -107,6 +547,7 @@ mod tests {
         assert_eq!(r.max_tokens, 64);
         assert!((r.top_p - 0.95).abs() < 1e-6);
         assert_eq!(r.prompt, "hi");
+        assert!(r.stop_tokens.is_empty() && r.stop_strs.is_empty());
     }
 
     #[test]
@@ -116,10 +557,12 @@ mod tests {
             max_tokens: 7,
             temperature: 0.5,
             top_p: 0.9,
+            seed: Some(11),
+            stop_tokens: vec![0, 10],
+            stop_strs: vec!["\n\n".into()],
         };
         let r2 = WireRequest::parse(&r.to_json().dump()).unwrap();
-        assert_eq!(r2.prompt, r.prompt);
-        assert_eq!(r2.max_tokens, 7);
+        assert_eq!(r2, r);
     }
 
     #[test]
@@ -131,6 +574,7 @@ mod tests {
             prompt_tokens: Some(1),
             queue_ms: Some(0.5),
             gen_ms: Some(2.0),
+            reason: Some("length".into()),
             error: None,
         };
         let s = r.to_json().dump();
@@ -138,10 +582,118 @@ mod tests {
         let back = WireResponse::parse(&s).unwrap();
         assert!(back.ok);
         assert_eq!(back.tokens.unwrap(), vec![1, 2]);
+        assert_eq!(back.reason.as_deref(), Some("length"));
     }
 
     #[test]
     fn missing_prompt_is_error() {
         assert!(WireRequest::parse(r#"{"max_tokens": 4}"#).is_err());
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_both_versions() {
+        assert!(WireRequest::parse(r#"{"prompt": ""}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"op":"generate","id":"a","prompt":""}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"id":"a","prompt":""}"#).is_err());
+    }
+
+    #[test]
+    fn client_frame_dispatch() {
+        // v1: prompt, no op/id
+        match ClientFrame::parse(r#"{"prompt":"hi"}"#).unwrap() {
+            ClientFrame::OneShot(r) => assert_eq!(r.prompt, "hi"),
+            other => panic!("expected v1, got {other:?}"),
+        }
+        // implicit generate via id
+        match ClientFrame::parse(r#"{"id":"a","prompt":"hi","seed":3}"#).unwrap() {
+            ClientFrame::Generate(g) => {
+                assert_eq!(g.id, "a");
+                assert_eq!(g.seed, Some(3));
+            }
+            other => panic!("expected generate, got {other:?}"),
+        }
+        assert_eq!(
+            ClientFrame::parse(r#"{"op":"cancel","id":"a"}"#).unwrap(),
+            ClientFrame::Cancel { id: "a".into() }
+        );
+        assert_eq!(ClientFrame::parse(r#"{"op":"stats"}"#).unwrap(), ClientFrame::Stats);
+    }
+
+    #[test]
+    fn v2_strictness() {
+        // unknown op
+        assert!(ClientFrame::parse(r#"{"op":"frobnicate"}"#).is_err());
+        // op of wrong type
+        assert!(ClientFrame::parse(r#"{"op":5}"#).is_err());
+        // not an object
+        assert!(ClientFrame::parse("[1,2,3]").is_err());
+        // oversized / zero max_tokens
+        assert!(ClientFrame::parse(r#"{"id":"a","prompt":"p","max_tokens":999999}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"id":"a","prompt":"p","max_tokens":0}"#).is_err());
+        // wrong-typed tuning keys are errors in v2 (defaults in v1)
+        assert!(ClientFrame::parse(r#"{"id":"a","prompt":"p","temperature":"hot"}"#).is_err());
+        assert!(WireRequest::parse(r#"{"prompt":"p","temperature":"hot"}"#).is_ok());
+        // malformed stop is an error in both
+        assert!(ClientFrame::parse(r#"{"id":"a","prompt":"p","stop":[true]}"#).is_err());
+        assert!(WireRequest::parse(r#"{"prompt":"p","stop":[true]}"#).is_err());
+        // seeds at/above 2^53 would round through the f64 JSON number and
+        // silently change the stream: rejected in both versions
+        let big = r#"{"id":"a","prompt":"p","seed":9007199254740993}"#;
+        assert!(ClientFrame::parse(big).is_err());
+        assert!(WireRequest::parse(r#"{"prompt":"p","seed":9007199254740993}"#).is_err());
+        let fine = WireRequest::parse(r#"{"prompt":"p","seed":9007199254740991}"#).unwrap();
+        assert_eq!(fine.seed, Some((1 << 53) - 1));
+        // v1 clamps oversized max_tokens instead
+        let r = WireRequest::parse(r#"{"prompt":"p","max_tokens":999999}"#).unwrap();
+        assert_eq!(r.max_tokens, MAX_MAX_TOKENS);
+    }
+
+    #[test]
+    fn generate_frame_roundtrip() {
+        let g = GenerateFrame {
+            id: "req-1".into(),
+            prompt: "once upon\n".into(),
+            max_tokens: 33,
+            temperature: 0.7,
+            top_p: 0.9,
+            seed: Some(42),
+            stop_tokens: vec![0],
+            stop_strs: vec!["the end".into()],
+            deadline_ms: Some(1500),
+        };
+        match ClientFrame::parse(&g.to_json().dump()).unwrap() {
+            ClientFrame::Generate(back) => assert_eq!(back, g),
+            other => panic!("expected generate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn event_frame_roundtrips() {
+        let frames = vec![
+            EventFrame::Started { id: "a".into(), prompt_tokens: 4, queue_ms: 0.25 },
+            EventFrame::Delta { id: "a".into(), index: 2, token: 104, text: "h".into() },
+            EventFrame::Done {
+                id: "a".into(),
+                reason: "stop".into(),
+                text: "hi".into(),
+                tokens: vec![104, 105],
+                prompt_tokens: 4,
+                queue_ms: 0.25,
+                ttft_ms: Some(3.5),
+                gen_ms: 11.0,
+            },
+            EventFrame::Error { id: None, error: "bad frame".into() },
+            EventFrame::Error { id: Some("a".into()), error: "boom".into() },
+            EventFrame::Stats(EngineStats {
+                requests_completed: 3,
+                decode_tokens: 99,
+                prefill_tokens: 512,
+                ..Default::default()
+            }),
+        ];
+        for f in frames {
+            let back = EventFrame::parse(&f.dump()).unwrap();
+            assert_eq!(back, f, "round-trip failed for {f:?}");
+        }
     }
 }

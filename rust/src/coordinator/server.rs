@@ -1,90 +1,326 @@
-//! TCP front-end: newline-delimited JSON requests routed to the engine.
-//! Thread-per-connection (connections are few and long-lived; the real
-//! concurrency lives in the engine's continuous batcher).
+//! TCP front-end: newline-delimited JSON frames routed to the engine.
+//! Thread-per-connection for the read side, plus one writer thread and one
+//! event-forwarder thread per in-flight streaming request (connections are
+//! few and long-lived; the real concurrency lives in the engine's
+//! continuous batcher).
+//!
+//! A connection multiplexes any number of v2 streaming requests (client
+//! ids scope the frames), `cancel`/`stats` ops, and v1 one-shot requests.
+//! Malformed lines are answered with an error frame and the connection
+//! stays alive. When a client disconnects, its in-flight requests are
+//! cancelled — slots free up instead of generating into the void.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::json::Json;
 use crate::sample::SampleParams;
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{ByteTokenizer, Tokenizer, Utf8Stream};
 
-use super::engine::{EngineHandle, GenRequest};
-use super::protocol::{WireRequest, WireResponse};
+use super::engine::{CancelToken, EngineHandle, GenEvent, GenRequest, RequestHandle};
+use super::protocol::{ClientFrame, EventFrame, GenerateFrame, WireRequest, WireResponse};
 
-/// Serve until the process is killed. Byte-level tokenizer converts
-/// prompts/outputs (the decode artifacts are byte-vocab).
+fn encode_bytes(s: &str) -> Vec<i32> {
+    ByteTokenizer
+        .encode(s.as_bytes())
+        .into_iter()
+        .map(|t| t as i32)
+        .collect()
+}
+
+fn gen_request_v2(g: &GenerateFrame) -> GenRequest {
+    GenRequest {
+        prompt: encode_bytes(&g.prompt),
+        max_tokens: g.max_tokens,
+        params: SampleParams { temperature: g.temperature, top_p: g.top_p },
+        stop_tokens: g.stop_tokens.clone(),
+        stop_seqs: g.stop_strs.iter().map(String::as_str).map(encode_bytes).collect(),
+        seed: g.seed,
+        deadline: g.deadline_ms.map(Duration::from_millis),
+    }
+}
+
+fn gen_request_v1(r: &WireRequest) -> GenRequest {
+    GenRequest {
+        prompt: encode_bytes(&r.prompt),
+        max_tokens: r.max_tokens,
+        params: SampleParams { temperature: r.temperature, top_p: r.top_p },
+        stop_tokens: r.stop_tokens.clone(),
+        stop_seqs: r.stop_strs.iter().map(String::as_str).map(encode_bytes).collect(),
+        seed: r.seed,
+        deadline: None,
+    }
+}
+
+/// Serve forever on `addr` (no shutdown path; `tvq serve` and the demos
+/// use [`serve_until`]).
 pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("coordinator listening on {addr}");
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-        let handle = handle.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, handle) {
-                eprintln!("conn {peer}: {e:#}");
+    serve_on(listener, handle, None)
+}
+
+/// Serve on `addr` until `shutdown` fires (a `()` send — or the sender
+/// dropping — signals shutdown). On signal the listener closes and the
+/// engine is asked to drain: every in-flight or queued request finishes
+/// with a `done(reason="shutdown")` frame, delivered over its connection.
+/// Join the engine thread (from [`super::Engine::spawn`]) after this
+/// returns to collect the final [`super::EngineStats`].
+pub fn serve_until(addr: &str, handle: EngineHandle, shutdown: mpsc::Receiver<()>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("coordinator listening on {addr} (graceful shutdown armed)");
+    serve_on(listener, handle, Some(shutdown))
+}
+
+/// [`serve`]/[`serve_until`] over a pre-bound listener (tests and demos
+/// bind port 0 themselves to learn the ephemeral address).
+pub fn serve_on(
+    listener: TcpListener,
+    handle: EngineHandle,
+    shutdown: Option<mpsc::Receiver<()>>,
+) -> Result<()> {
+    let Some(rx) = shutdown else {
+        for stream in listener.incoming() {
+            spawn_conn(stream?, handle.clone());
+        }
+        return Ok(());
+    };
+    listener.set_nonblocking(true)?;
+    loop {
+        match rx.try_recv() {
+            Ok(()) | Err(mpsc::TryRecvError::Disconnected) => break,
+            Err(mpsc::TryRecvError::Empty) => {}
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // accepted sockets must not inherit the listener's
+                // non-blocking mode — connection threads block on reads
+                stream.set_nonblocking(false)?;
+                spawn_conn(stream, handle.clone());
             }
-        });
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
+    // drain: requests finish with done(reason="shutdown"); the per-request
+    // forwarder threads deliver those frames over still-open connections
+    handle.shutdown();
     Ok(())
 }
 
-pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
-    let mut write = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let tok = crate::tokenizer::ByteTokenizer;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+fn spawn_conn(stream: TcpStream, handle: EngineHandle) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    std::thread::spawn(move || {
+        if let Err(e) = handle_conn(stream, handle) {
+            eprintln!("conn {peer}: {e:#}");
         }
-        let resp = match WireRequest::parse(&line) {
-            Err(e) => WireResponse::error(format!("bad request: {e:#}")),
-            Ok(req) => {
-                let gen_req = GenRequest {
-                    prompt: tok
-                        .encode(req.prompt.as_bytes())
-                        .into_iter()
-                        .map(|t| t as i32)
-                        .collect(),
-                    max_tokens: req.max_tokens.clamp(1, 4096),
-                    params: SampleParams {
-                        temperature: req.temperature,
-                        top_p: req.top_p,
-                    },
-                    stop_token: None,
-                };
-                match handle.generate(gen_req) {
-                    Err(e) => WireResponse::error(e),
-                    Ok(r) => {
-                        let bytes: Vec<u16> =
-                            r.tokens.iter().map(|&t| t as u16).collect();
-                        WireResponse {
-                            ok: true,
-                            text: Some(
-                                String::from_utf8_lossy(&tok.decode(&bytes))
-                                    .into_owned(),
-                            ),
-                            tokens: Some(r.tokens),
-                            prompt_tokens: Some(r.prompt_tokens),
-                            queue_ms: Some(r.queue_ms),
-                            gen_ms: Some(r.gen_ms),
-                            error: None,
+    });
+}
+
+/// Serve one connection: parse frames off the read side, route them to the
+/// engine, multiplex event frames back through a single writer thread.
+pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
+    let write_half = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    // one writer thread serializes frames from every in-flight request
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = write_half;
+        for mut line in out_rx {
+            line.push('\n');
+            if w.write_all(line.as_bytes()).is_err() {
+                break; // client gone; senders see the drop and stop
+            }
+        }
+    });
+    // requests still streaming on this connection, by client id
+    let live: Arc<Mutex<HashMap<String, CancelToken>>> = Arc::new(Mutex::new(HashMap::new()));
+
+    let result = (|| -> Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match ClientFrame::parse(&line) {
+                Err(e) => {
+                    // v1 lines (a JSON object with neither op nor id) get a
+                    // v1-shaped {"ok":false} so old clients keep parsing;
+                    // everything else gets a v2 error frame — carrying the
+                    // request id whenever the line yielded one, so an
+                    // id-demultiplexing client sees its request fail
+                    // instead of waiting forever
+                    let msg = format!("bad frame: {e:#}");
+                    let parsed = Json::parse(&line).ok();
+                    let is_v1 = parsed
+                        .as_ref()
+                        .map(|j| {
+                            j.as_obj().is_ok() && j.get("op").is_none() && j.get("id").is_none()
+                        })
+                        .unwrap_or(false);
+                    let out = if is_v1 {
+                        WireResponse::error(msg).to_json().dump()
+                    } else {
+                        let id = parsed
+                            .as_ref()
+                            .and_then(|j| j.get("id"))
+                            .and_then(|v| v.as_str().ok())
+                            .map(String::from);
+                        EventFrame::Error { id, error: msg }.dump()
+                    };
+                    let _ = out_tx.send(out);
+                }
+                Ok(ClientFrame::Generate(g)) => spawn_generate(g, &handle, &live, &out_tx),
+                Ok(ClientFrame::Cancel { id }) => {
+                    let token = live.lock().unwrap().get(&id).cloned();
+                    match token {
+                        Some(t) => t.cancel(),
+                        None => {
+                            let frame = EventFrame::Error {
+                                id: Some(id),
+                                error: "unknown or finished id".to_string(),
+                            };
+                            let _ = out_tx.send(frame.dump());
                         }
                     }
                 }
+                Ok(ClientFrame::Stats) => {
+                    let frame = match handle.stats() {
+                        Ok(s) => EventFrame::Stats(s),
+                        Err(e) => EventFrame::Error { id: None, error: e },
+                    };
+                    let _ = out_tx.send(frame.dump());
+                }
+                // v1 one-shot: blocking, in request order (v1 clients
+                // pipeline by line order and responses carry no id)
+                Ok(ClientFrame::OneShot(req)) => {
+                    let _ = out_tx.send(one_shot(&handle, &req).to_json().dump());
+                }
             }
-        };
-        let mut out = resp.to_json().dump();
-        out.push('\n');
-        write.write_all(out.as_bytes())?;
+        }
+        Ok(())
+    })();
+
+    // client went away (EOF or read error): free its slots
+    for (_, t) in live.lock().unwrap().drain() {
+        t.cancel();
     }
-    Ok(())
+    drop(out_tx);
+    let _ = writer.join();
+    result
 }
 
-/// Minimal blocking client (used by examples/serve.rs and tests).
+fn spawn_generate(
+    g: GenerateFrame,
+    handle: &EngineHandle,
+    live: &Arc<Mutex<HashMap<String, CancelToken>>>,
+    out_tx: &mpsc::Sender<String>,
+) {
+    let id = g.id.clone();
+    if live.lock().unwrap().contains_key(&id) {
+        let frame = EventFrame::Error {
+            id: Some(id),
+            error: "duplicate id: a request with this id is still running".to_string(),
+        };
+        let _ = out_tx.send(frame.dump());
+        return;
+    }
+    let rh = match handle.submit(gen_request_v2(&g)) {
+        Ok(rh) => rh,
+        Err(e) => {
+            let _ = out_tx.send(EventFrame::Error { id: Some(id), error: e }.dump());
+            return;
+        }
+    };
+    live.lock().unwrap().insert(id.clone(), rh.cancel_token());
+    let out_tx = out_tx.clone();
+    let live = Arc::clone(live);
+    std::thread::spawn(move || {
+        forward_events(rh, &id, &out_tx);
+        live.lock().unwrap().remove(&id);
+    });
+}
+
+/// Pump one request's engine events to the connection writer as v2 frames.
+/// Delta texts come from an incremental UTF-8 decoder, so concatenating
+/// them reproduces the done text exactly (up to the final flush of an
+/// incomplete multi-byte tail, which only the done frame can carry).
+fn forward_events(rh: RequestHandle, id: &str, out_tx: &mpsc::Sender<String>) {
+    let mut text = Utf8Stream::new();
+    let mut acc = String::new();
+    loop {
+        let ev = match rh.recv() {
+            Ok(ev) => ev,
+            Err(e) => {
+                let _ = out_tx.send(EventFrame::Error { id: Some(id.to_string()), error: e }.dump());
+                return;
+            }
+        };
+        let frame = match ev {
+            GenEvent::Started { prompt_tokens, queue_ms } => {
+                EventFrame::Started { id: id.to_string(), prompt_tokens, queue_ms }
+            }
+            GenEvent::Delta { index, token } => {
+                let chunk = text.push((token.clamp(0, 255)) as u8);
+                acc.push_str(&chunk);
+                EventFrame::Delta { id: id.to_string(), index, token, text: chunk }
+            }
+            GenEvent::Done(o) => {
+                acc.push_str(&text.flush());
+                let frame = EventFrame::Done {
+                    id: id.to_string(),
+                    reason: o.reason.as_str().to_string(),
+                    text: acc,
+                    tokens: o.tokens,
+                    prompt_tokens: o.prompt_tokens,
+                    queue_ms: o.queue_ms,
+                    ttft_ms: o.ttft_ms,
+                    gen_ms: o.gen_ms,
+                };
+                let _ = out_tx.send(frame.dump());
+                return;
+            }
+            GenEvent::Error(e) => {
+                let _ = out_tx.send(EventFrame::Error { id: Some(id.to_string()), error: e }.dump());
+                return;
+            }
+        };
+        if out_tx.send(frame.dump()).is_err() {
+            return; // connection gone
+        }
+    }
+}
+
+fn one_shot(handle: &EngineHandle, req: &WireRequest) -> WireResponse {
+    match handle.submit(gen_request_v1(req)).and_then(RequestHandle::wait) {
+        Err(e) => WireResponse::error(e),
+        Ok(o) => {
+            let bytes: Vec<u16> = o.tokens.iter().map(|&t| t as u16).collect();
+            WireResponse {
+                ok: true,
+                text: Some(String::from_utf8_lossy(&ByteTokenizer.decode(&bytes)).into_owned()),
+                tokens: Some(o.tokens),
+                prompt_tokens: Some(o.prompt_tokens),
+                queue_ms: Some(o.queue_ms),
+                gen_ms: Some(o.gen_ms),
+                reason: Some(o.reason.as_str().to_string()),
+                error: None,
+            }
+        }
+    }
+}
+
+/// Minimal blocking client (examples, benches, tests). One v1 `request` or
+/// any number of v2 streaming ops per connection — but don't interleave a
+/// v1 `request` with in-flight v2 streams: v1 responses carry no id, so
+/// this client matches them by line order.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
@@ -97,12 +333,42 @@ impl Client {
         Ok(Self { stream, reader })
     }
 
-    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
-        let mut line = req.to_json().dump();
+    fn send_line(&mut self, mut line: String) -> Result<()> {
         line.push('\n');
         self.stream.write_all(line.as_bytes())?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        WireResponse::parse(&resp)
+        Ok(())
+    }
+
+    /// v1 one-shot: send, block for the single response line.
+    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.send_line(req.to_json().dump())?;
+        WireResponse::parse(&self.next_line()?)
+    }
+
+    /// Start a v2 streaming generate; events arrive via [`Client::next_event`].
+    pub fn generate(&mut self, g: &GenerateFrame) -> Result<()> {
+        self.send_line(g.to_json().dump())
+    }
+
+    pub fn cancel(&mut self, id: &str) -> Result<()> {
+        let j = Json::obj(vec![("op", Json::str("cancel")), ("id", Json::str(id))]);
+        self.send_line(j.dump())
+    }
+
+    /// Request a stats frame (answered among the event stream).
+    pub fn stats(&mut self) -> Result<()> {
+        self.send_line(Json::obj(vec![("op", Json::str("stats"))]).dump())
+    }
+
+    pub fn next_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "connection closed");
+        Ok(line)
+    }
+
+    /// Next v2 event frame (blocking).
+    pub fn next_event(&mut self) -> Result<EventFrame> {
+        EventFrame::parse(&self.next_line()?)
     }
 }

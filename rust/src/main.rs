@@ -14,7 +14,7 @@
 use anyhow::{bail, Result};
 
 use transformer_vq::config::TrainConfig;
-use transformer_vq::coordinator::{serve, Engine};
+use transformer_vq::coordinator::{serve_until, Engine};
 use transformer_vq::rng::Rng;
 use transformer_vq::runtime::{auto_backend, auto_backend_threads};
 use transformer_vq::sample::{SampleParams, Sampler};
@@ -33,6 +33,8 @@ COMMANDS
   generate  --preset P [--checkpoint D] [--prompt S] [--tokens N]
             [--temperature F] [--top-p F] [--seed S] [--threads N]
   serve     --preset P [--addr HOST:PORT] [--checkpoint D] [--threads N]
+            (streaming NDJSON protocol v2 + v1 one-shot; type 'quit' on
+            stdin for graceful shutdown with drained requests and stats)
   inspect
 
 --threads N pins the native backend's per-step thread budget (default:
@@ -182,7 +184,7 @@ fn main() -> Result<()> {
             let dir_c = dir.clone();
             // backends may not be Send (the PJRT client is Rc-based), so
             // the engine constructs its backend on its own thread
-            let (handle, _join) = Engine::spawn(
+            let (handle, join) = Engine::spawn(
                 move || {
                     let backend = auto_backend(&dir_c)?;
                     let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
@@ -194,7 +196,47 @@ fn main() -> Result<()> {
                 },
                 0,
             )?;
-            serve(&addr, handle)?;
+            // graceful shutdown: type "quit" (or "shutdown") on stdin. The
+            // vendored dependency set has no signal-handling crate, so
+            // ctrl-c still kills the process hard; the stdin path drains
+            // in-flight requests with done(reason="shutdown") frames.
+            let (sd_tx, sd_rx) = std::sync::mpsc::channel();
+            std::thread::spawn(move || {
+                let stdin = std::io::stdin();
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match std::io::BufRead::read_line(&mut stdin.lock(), &mut line) {
+                        Ok(0) | Err(_) => {
+                            // stdin closed (daemon mode): keep serving
+                            std::thread::park();
+                        }
+                        Ok(_) => {
+                            if matches!(line.trim(), "quit" | "shutdown" | "exit") {
+                                let _ = sd_tx.send(());
+                                return;
+                            }
+                        }
+                    }
+                }
+            });
+            eprintln!("type 'quit' to drain in-flight requests and report stats");
+            serve_until(&addr, handle.clone(), sd_rx)?;
+            let stats = join.join().unwrap_or_default();
+            // brief grace so connection writer threads flush done frames
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            eprintln!(
+                "engine stats: {} completed, {} cancelled, {} failed; \
+                 {} prefill tokens, {} decode tokens over {} steps \
+                 (mean TTFT {:.1} ms)",
+                stats.requests_completed,
+                stats.requests_cancelled,
+                stats.requests_failed,
+                stats.prefill_tokens,
+                stats.decode_tokens,
+                stats.steps,
+                stats.mean_ttft_ms(),
+            );
         }
         other => {
             bail!("unknown command '{other}'\n{USAGE}");

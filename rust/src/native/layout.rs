@@ -198,6 +198,50 @@ impl Layout {
         }
     }
 
+    /// Chunk capacity `C` of the prefill entry's `tokens[B, C]` input: one
+    /// eval window's worth of tokens per call, so a prompt of length P
+    /// costs ceil(P / C) executor round-trips instead of P.
+    pub fn prefill_chunk(&self) -> usize {
+        self.cfg.window_len
+    }
+
+    /// `<preset>.prefill` spec: (params, cb, state, tokens[B, C], lens[B])
+    /// -> (state, logits[B, V]).
+    ///
+    /// The session entry point behind `Sampler::prefill` /
+    /// `Sampler::decode_active`: row `b` ingests its first `lens[b]` tokens
+    /// of `tokens[b, :]` (0 = lane inactive, state untouched) and computes
+    /// logits only after its last ingested token — chunked prompt
+    /// ingestion and active-lane-only decode are the same artifact, just
+    /// different `lens`.
+    pub fn prefill_spec(&self, name: &str) -> ArtifactSpec {
+        let c = &self.cfg;
+        let mut inputs = self.param_leaves();
+        inputs.extend(self.cb_leaves());
+        inputs.extend(self.state_leaves("state"));
+        inputs.push(Self::leaf(
+            "tokens",
+            String::new(),
+            vec![c.batch_size, self.prefill_chunk()],
+            DType::I32,
+        ));
+        inputs.push(Self::leaf("lens", String::new(), vec![c.batch_size], DType::I32));
+        let mut outputs = self.state_leaves("state");
+        outputs.push(Self::leaf(
+            "logits",
+            String::new(),
+            vec![c.batch_size, c.vocab_size],
+            DType::F32,
+        ));
+        ArtifactSpec {
+            entry: "prefill".into(),
+            hlo: format!("native://{name}"),
+            config: c.clone(),
+            inputs,
+            outputs,
+        }
+    }
+
     /// `<preset>.train` spec:
     /// (params, cb, opt, carry, tokens, lr, seed) ->
     /// (params, cb, opt, carry, metrics[6]).
@@ -370,6 +414,27 @@ mod tests {
         for (_, leaf) in d.input_group("state") {
             assert_eq!(leaf.shape.first(), Some(&layout.cfg.batch_size));
         }
+        // prefill shares the decode state layout (the sampler drives both
+        // against one StateBundle) and takes a [B, C] chunk + per-row lens
+        let p = layout.prefill_spec("quickstart.prefill");
+        assert_eq!(p.entry, "prefill");
+        assert_eq!(
+            p.input_group_names(),
+            vec!["params", "cb", "state", "tokens", "lens"]
+        );
+        let ds = d.input_group("state");
+        let ps = p.input_group("state");
+        assert_eq!(ds.len(), ps.len());
+        for ((_, a), (_, b)) in ds.iter().zip(&ps) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.path, b.path);
+        }
+        let (_, toks) = p.input_group("tokens")[0];
+        assert_eq!(
+            toks.shape,
+            vec![layout.cfg.batch_size, layout.prefill_chunk()]
+        );
+        assert_eq!(p.output_group("logits").len(), 1);
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //! * `autodiff` — the f64 differentiable twin of the forward + exact
 //!   reverse sweep (straight-through quantizer, commit loss, cache-fold
 //!   adjoints), finite-difference checked in its tests.
-//! * `step` — decode / train / eval step functions (full-model Adam
-//!   backprop + §3.4.1 EMA codebook learning).
+//! * `step` — decode / prefill / train / eval step functions (full-model
+//!   Adam backprop + §3.4.1 EMA codebook learning). The prefill entry is
+//!   the serving session path: multi-token chunked prompt ingestion with
+//!   per-lane lengths, logits only for each lane's last token, inactive
+//!   lanes untouched (see DESIGN.md §8).
 //!
 //! Presets mirror `config.rs` recipes (quickstart, enwik8-tiny, ablations,
 //! …) plus a `tput-*` bench grid comparing the VQ linear path against a
@@ -257,6 +260,10 @@ impl NativeBackend {
         if cfg.attn_type != "full" {
             // dense attention has no O(1) per-token recurrence to decode with
             self.artifacts.insert(
+                format!("{preset}.prefill"),
+                ArtifactEntry { entry: "prefill".into(), cfg: cfg.clone() },
+            );
+            self.artifacts.insert(
                 format!("{preset}.decode"),
                 ArtifactEntry { entry: "decode".into(), cfg },
             );
@@ -271,6 +278,7 @@ impl NativeBackend {
         let layout = Layout::new(a.cfg.clone());
         Ok(match a.entry.as_str() {
             "decode" => layout.decode_spec(name),
+            "prefill" => layout.prefill_spec(name),
             "train" => layout.train_spec(name),
             entry => layout.eval_spec(name, entry),
         })
@@ -490,6 +498,79 @@ mod tests {
         let b = NativeBackend::new();
         assert!(b.has_artifact("enwik8-tiny-full.train"));
         assert!(!b.has_artifact("enwik8-tiny-full.decode"));
+        assert!(!b.has_artifact("enwik8-tiny-full.prefill"));
+        assert!(b.has_artifact("quickstart.prefill"));
+    }
+
+    /// The prefill entry must be an exact multi-token transliteration of
+    /// the decode recurrence: ingesting a prompt in one chunked call gives
+    /// bit-identical state and last-token logits to feeding the same
+    /// tokens one decode step at a time, and rows with lens == 0 pass
+    /// through completely untouched.
+    #[test]
+    fn prefill_matches_stepwise_decode_and_skips_inactive_lanes() {
+        let b = NativeBackend::new();
+        let decode = b.load("quickstart.decode").unwrap();
+        let prefill = b.load("quickstart.prefill").unwrap();
+        let batch = decode.spec().config.batch_size;
+        let vocab = decode.spec().config.vocab_size;
+        let chunk = Layout::new(decode.spec().config.clone()).prefill_chunk();
+        // prompt longer than one block so the window wraps and the cache
+        // folds at least once, shorter than the chunk so one call ingests it
+        let prompt: Vec<i32> = (0..chunk as i32 - 3).map(|t| (t * 7 + 13) % 251).collect();
+
+        // --- stepwise reference: feed every row the prompt token by token
+        let mut ref_bundle = StateBundle::zeros_for(decode.spec());
+        ref_bundle.set_named(b.init_state("quickstart").unwrap());
+        let mut ref_logits = Vec::new();
+        for &t in &prompt {
+            ref_bundle.set_group("token", vec![HostTensor::from_i32(&[batch], &vec![t; batch])]);
+            let inputs = ref_bundle.assemble(decode.spec()).unwrap();
+            let outputs = decode.run(&inputs).unwrap();
+            ref_bundle.absorb(decode.spec(), outputs).unwrap();
+            ref_logits = ref_bundle.group("logits").unwrap()[0].as_f32().unwrap();
+        }
+
+        // --- prefill: rows 0 and 2 ingest the prompt in one call; 1 and 3 idle
+        let mut bundle = StateBundle::zeros_for(prefill.spec());
+        bundle.set_named(b.init_state("quickstart").unwrap());
+        let mut toks = vec![0i32; batch * chunk];
+        let mut lens = vec![0i32; batch];
+        for row in [0usize, 2] {
+            toks[row * chunk..row * chunk + prompt.len()].copy_from_slice(&prompt);
+            lens[row] = prompt.len() as i32;
+        }
+        bundle.set_group("tokens", vec![HostTensor::from_i32(&[batch, chunk], &toks)]);
+        bundle.set_group("lens", vec![HostTensor::from_i32(&[batch], &lens)]);
+        let inputs = bundle.assemble(prefill.spec()).unwrap();
+        let outputs = prefill.run(&inputs).unwrap();
+        bundle.absorb(prefill.spec(), outputs).unwrap();
+
+        let logits = bundle.group("logits").unwrap()[0].as_f32().unwrap();
+        assert_eq!(
+            &logits[0..vocab],
+            &ref_logits[0..vocab],
+            "prefill logits differ from stepwise decode"
+        );
+        // active rows reach pos = prompt len, idle rows stay untouched at 0
+        let pos = bundle.group("state").unwrap()[0].as_i32().unwrap();
+        assert_eq!(pos, vec![prompt.len() as i32, 0, prompt.len() as i32, 0]);
+        assert!(logits[vocab..2 * vocab].iter().all(|&x| x == 0.0));
+        // per-row state of an active row matches the stepwise reference
+        let ref_state = ref_bundle.group("state").unwrap();
+        let new_state = bundle.group("state").unwrap();
+        for (r, n) in ref_state.iter().zip(new_state.iter()).skip(1) {
+            let stride = r.data.len() / batch;
+            assert_eq!(
+                r.data[..stride],
+                n.data[..stride],
+                "row-0 state leaf diverged from stepwise decode"
+            );
+            assert!(
+                n.data[stride..2 * stride].iter().all(|&x| x == 0),
+                "idle row-1 state was touched"
+            );
+        }
     }
 
     #[test]

@@ -353,8 +353,26 @@ pub(crate) fn forward_token_row(
     cb: &Codebooks,
     rst: &mut RowState<'_>,
     token: i32,
-    mut accum: Option<&mut TrainAccum>,
+    accum: Option<&mut TrainAccum>,
 ) -> (Vec<f32>, Vec<f32>) {
+    let (logits, y) = forward_token_row_opts(cfg, p, cb, rst, token, accum, true);
+    (logits.expect("want_logits=true"), y)
+}
+
+/// [`forward_token_row`] with the readout made optional: prompt-ingestion
+/// (prefill) advances the recurrent state for every token but only the
+/// last one needs logits, so skipping the final RMSNorm + `wout` matvec
+/// per intermediate token is pure savings. With `want_logits=false` the
+/// returned logits are `None` and `y` is empty.
+pub(crate) fn forward_token_row_opts(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    rst: &mut RowState<'_>,
+    token: i32,
+    mut accum: Option<&mut TrainAccum>,
+    want_logits: bool,
+) -> (Option<Vec<f32>>, Vec<f32>) {
     debug_assert_ne!(cfg.attn_type, "full", "dense path uses forward_window_dense");
     let dm = cfg.d_model;
     let h_n = cfg.n_heads;
@@ -507,12 +525,15 @@ pub(crate) fn forward_token_row(
         matvec_add(&lp.w2, &g, &mut x);
     }
 
+    *rst.pos = (pos + 1) as i32;
+    if !want_logits {
+        return (None, Vec::new());
+    }
     let mut y = vec![0.0f32; dm];
     rmsnorm(&x, &p.out_norm, &mut y);
     let mut logits = p.bout.clone();
     matvec_add(&p.wout, &y, &mut logits);
-    *rst.pos = (pos + 1) as i32;
-    (logits, y)
+    (Some(logits), y)
 }
 
 /// Whole-state convenience wrapper around [`forward_token_row`] for tests

@@ -34,7 +34,8 @@ use super::autodiff::{
 use super::kernels;
 use super::layout::Layout;
 use super::model::{
-    forward_token_row, forward_window_dense, Codebooks, Params, RowState, State, TrainAccum,
+    forward_token_row, forward_token_row_opts, forward_window_dense, Codebooks, Params, RowState,
+    State, TrainAccum,
 };
 
 /// Adam hyperparameters (§3.4.2; the schedule supplies the LR).
@@ -112,6 +113,56 @@ pub(crate) fn run_decode(
             let (row_logits, _) =
                 forward_token_row(cfg, &weights.params, &weights.cb, rst, tokens[row], None);
             out.copy_from_slice(&row_logits);
+        });
+    }
+    let mut outputs = st.dump(layout, "state");
+    outputs.push(HostTensor::from_f32(&[b, v], &logits));
+    Ok(outputs)
+}
+
+/// `<preset>.prefill`: (params, cb, state, tokens[B, C], lens[B]) ->
+/// (state, logits[B, V]) — the slot-session entry point.
+///
+/// Row `b` ingests `tokens[b, ..lens[b]]` through the same per-token
+/// recurrence as decode, but computes logits only after its *last* token
+/// (intermediate readouts are skipped — prompt ingestion discards them
+/// anyway). Rows with `lens[b] == 0` are untouched: their state, including
+/// `pos`, passes through bit-identically, which is what lets the engine
+/// step only occupied lanes. Logits rows of inactive lanes are zero.
+pub(crate) fn run_prefill(
+    layout: &Layout,
+    weights: &ParsedWeights,
+    inputs: &[HostTensor],
+    nt: usize,
+) -> Result<Vec<HostTensor>> {
+    let cfg = &layout.cfg;
+    let sp = SplitSpec::of(layout);
+    let (b, v, c) = (cfg.batch_size, cfg.vocab_size, layout.prefill_chunk());
+    let st_base = sp.n_params + sp.n_cb;
+    let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
+    let tokens = inputs[st_base + sp.n_state].as_i32()?;
+    let lens = inputs[st_base + sp.n_state + 1].as_i32()?;
+    for (row, &len) in lens.iter().enumerate() {
+        if len < 0 || len as usize > c {
+            bail!("prefill: lens[{row}] = {len} outside 0..={c}");
+        }
+    }
+
+    let mut logits = vec![0.0f32; b * v];
+    {
+        let mut work: Vec<(RowState<'_>, &mut [f32])> =
+            st.rows().into_iter().zip(logits.chunks_mut(v)).collect();
+        kernels::parallel_for_items(nt, &mut work, |row, (rst, out)| {
+            let len = lens[row] as usize;
+            let row_tokens = &tokens[row * c..row * c + len];
+            for (i, &tok) in row_tokens.iter().enumerate() {
+                let want = i + 1 == len;
+                let (row_logits, _) =
+                    forward_token_row_opts(cfg, &weights.params, &weights.cb, rst, tok, None, want);
+                if let Some(l) = row_logits {
+                    out.copy_from_slice(&l);
+                }
+            }
         });
     }
     let mut outputs = st.dump(layout, "state");
@@ -399,6 +450,7 @@ pub(crate) fn run_entry(
 ) -> Result<(Vec<HostTensor>, Option<ParsedWeights>)> {
     match entry {
         "decode" => Ok((run_decode(layout, weights, inputs, nt)?, None)),
+        "prefill" => Ok((run_prefill(layout, weights, inputs, nt)?, None)),
         "train" => {
             let (outputs, new_weights) = run_train(layout, weights, inputs, nt)?;
             Ok((outputs, Some(new_weights)))

@@ -2,9 +2,16 @@
 //! (sampler, continuous-batching engine, trainer, benches) programs against.
 //!
 //! An [`Executor`] is one loaded step function (train / eval / decode /
-//! bench): positional [`HostTensor`]s in, positional `HostTensor`s out,
-//! shapes and dtypes validated against its [`ArtifactSpec`]. A [`Backend`]
-//! is a factory of executors plus the initial-state source for a preset.
+//! prefill / bench): positional [`HostTensor`]s in, positional
+//! `HostTensor`s out, shapes and dtypes validated against its
+//! [`ArtifactSpec`]. A [`Backend`] is a factory of executors plus the
+//! initial-state source for a preset.
+//!
+//! The `<preset>.prefill` entry is optional per backend: the serving
+//! session layer ([`crate::sample::Sampler`]) probes for it and falls back
+//! to token-by-token `decode` stepping when absent — so a backend that
+//! only ships decode still serves, just without chunked prompt ingestion
+//! (DESIGN.md §8).
 //!
 //! Two implementations ship:
 //! * [`crate::native::NativeBackend`] — pure-rust f32 Transformer-VQ model
@@ -70,8 +77,8 @@ pub trait Backend {
     /// Human-readable platform tag (e.g. "native-cpu", "Host").
     fn platform(&self) -> String;
 
-    /// Load one artifact by name (`<preset>.{train,eval,decode}` or a
-    /// bench name like `tput-shga-vq-matmul-T256`).
+    /// Load one artifact by name (`<preset>.{train,eval,decode,prefill}`
+    /// or a bench name like `tput-shga-vq-matmul-T256`).
     fn load(&self, name: &str) -> Result<Box<dyn Executor>>;
 
     /// The spec of an artifact without loading/compiling it (cheap —

@@ -1,14 +1,28 @@
-//! Linear-time sampling runtime.
+//! Linear-time sampling runtime with slot sessions.
 //!
-//! Drives a `<preset>.decode` executor (native or PJRT, via the
-//! [`crate::runtime::Backend`] abstraction) token by token. The compressive
+//! Drives a `<preset>.decode` / `<preset>.prefill` executor pair (native or
+//! PJRT, via the [`crate::runtime::Backend`] abstraction). The compressive
 //! cache state lives in the "state" group of the bundle ([B, ...] tensors:
 //! rolling 2L key/value window + per-shortcode running means, per layer), so
 //! per-token cost is O(S + 2L) — generation is linear in sequence length,
 //! unlike a quadratic-attention sampler whose KV cache grows with T.
 //!
-//! The sampler exposes per-slot control (reset/zero one batch row) so the
-//! serving coordinator can run continuous batching on top of it.
+//! The serving coordinator treats the B batch rows as *slots* and talks to
+//! them through the session API:
+//! * [`Sampler::prefill`] — chunked multi-token prompt ingestion into one
+//!   slot (logits computed only after the last token; other slots
+//!   untouched),
+//! * [`Sampler::decode_active`] — one decode step over exactly the
+//!   occupied lanes,
+//! * [`Sampler::step_lanes`] — the primitive under both: each lane ingests
+//!   1..=[`Sampler::prefill_chunk`] tokens in a single executor call, so a
+//!   prefilling slot advances a whole chunk while co-resident decoders
+//!   advance one token, in the same step.
+//!
+//! When the backend has no `.prefill` artifact (the PJRT path), the session
+//! API transparently falls back to full-batch token-by-token
+//! [`Sampler::step`] calls — same results for the addressed lanes, old cost
+//! model.
 
 mod nucleus;
 
@@ -22,6 +36,9 @@ use crate::tensor::HostTensor;
 
 pub struct Sampler {
     pub exe: Box<dyn Executor>,
+    /// `<preset>.prefill` when the backend offers it (native always does);
+    /// `None` falls back to token-by-token full-batch stepping.
+    prefill_exe: Option<Box<dyn Executor>>,
     pub bundle: StateBundle,
     preset: String,
 }
@@ -38,14 +55,32 @@ impl Default for SampleParams {
     }
 }
 
+/// One occupied lane's decode input: which slot, which token to feed.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotToken {
+    pub slot: usize,
+    pub token: i32,
+}
+
+/// One lane of a session step: `slot` ingests `tokens`
+/// (1..=[`Sampler::prefill_chunk`] of them); logits come back for the last
+/// token only.
+#[derive(Debug, Clone)]
+pub struct LaneInput {
+    pub slot: usize,
+    pub tokens: Vec<i32>,
+}
+
 impl Sampler {
-    /// Load `<preset>.decode` from any backend and initialize its state
-    /// (params/codebooks from the backend, decode state zeroed).
+    /// Load `<preset>.decode` (and `<preset>.prefill` if the backend has
+    /// it) from any backend and initialize the shared state (params and
+    /// codebooks from the backend, decode state zeroed).
     pub fn new(backend: &dyn Backend, preset: &str) -> Result<Self> {
         let exe = backend.load(&format!("{preset}.decode"))?;
+        let prefill_exe = backend.load(&format!("{preset}.prefill")).ok();
         let mut bundle = StateBundle::zeros_for(exe.spec());
         bundle.set_named(backend.init_state(preset)?);
-        Ok(Self { exe, bundle, preset: preset.to_string() })
+        Ok(Self { exe, prefill_exe, bundle, preset: preset.to_string() })
     }
 
     /// Overwrite model weights from a training checkpoint (TVQ with params/cb
@@ -72,7 +107,26 @@ impl Sampler {
         &self.preset
     }
 
+    /// Max tokens one lane can ingest per [`Sampler::step_lanes`] call: the
+    /// chunk width `C` of the prefill artifact's `tokens[B, C]` input, or 1
+    /// on the token-by-token fallback path.
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_exe
+            .as_ref()
+            .and_then(|e| {
+                e.spec()
+                    .input_group("tokens")
+                    .first()
+                    .and_then(|(_, l)| l.shape.get(1).copied())
+            })
+            .unwrap_or(1)
+    }
+
     /// Feed one token per batch row; returns logits [B, V] row-major.
+    ///
+    /// This is the lockstep full-batch primitive (every row advances,
+    /// logits for every row). Serving paths prefer the session API below,
+    /// which skips idle lanes and intermediate readouts.
     pub fn step(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         let b = self.batch_size();
         if tokens.len() != b {
@@ -86,6 +140,124 @@ impl Sampler {
         let logits = self.bundle.group("logits")?[0].as_f32()?;
         let v = self.vocab_size();
         Ok((0..b).map(|i| logits[i * v..(i + 1) * v].to_vec()).collect())
+    }
+
+    /// One session step: every lane ingests its tokens (a prefill chunk or
+    /// a single decode token), and logits come back per lane for its last
+    /// token. Lanes not listed are untouched on the native path. Returns
+    /// one logits row per input lane, in input order.
+    pub fn step_lanes(&mut self, lanes: &[LaneInput]) -> Result<Vec<Vec<f32>>> {
+        if lanes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.batch_size();
+        let c = self.prefill_chunk();
+        let mut seen = vec![false; b];
+        for lane in lanes {
+            if lane.slot >= b {
+                bail!("step_lanes: slot {} out of range (batch {b})", lane.slot);
+            }
+            if seen[lane.slot] {
+                bail!("step_lanes: slot {} appears twice", lane.slot);
+            }
+            seen[lane.slot] = true;
+            if lane.tokens.is_empty() || lane.tokens.len() > c {
+                bail!(
+                    "step_lanes: lane for slot {} has {} tokens (want 1..={c})",
+                    lane.slot,
+                    lane.tokens.len()
+                );
+            }
+        }
+        if self.prefill_exe.is_some() {
+            self.step_lanes_native(lanes)
+        } else {
+            self.step_lanes_fallback(lanes)
+        }
+    }
+
+    fn step_lanes_native(&mut self, lanes: &[LaneInput]) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch_size();
+        let v = self.vocab_size();
+        let c = self.prefill_chunk();
+        let mut toks = vec![0i32; b * c];
+        let mut lens = vec![0i32; b];
+        for lane in lanes {
+            toks[lane.slot * c..lane.slot * c + lane.tokens.len()]
+                .copy_from_slice(&lane.tokens);
+            lens[lane.slot] = lane.tokens.len() as i32;
+        }
+        self.bundle
+            .set_group("tokens", vec![HostTensor::from_i32(&[b, c], &toks)]);
+        self.bundle
+            .set_group("lens", vec![HostTensor::from_i32(&[b], &lens)]);
+        let exe = self.prefill_exe.as_ref().expect("native session path");
+        let inputs = self.bundle.assemble(exe.spec())?;
+        let outputs = exe.run(&inputs)?;
+        self.bundle.absorb(exe.spec(), outputs)?;
+        let logits = self.bundle.group("logits")?[0].as_f32()?;
+        Ok(lanes
+            .iter()
+            .map(|l| logits[l.slot * v..(l.slot + 1) * v].to_vec())
+            .collect())
+    }
+
+    /// No prefill artifact: emulate lanes with full-batch token steps. This
+    /// advances *every* row's state (idle rows are fed token 0), matching
+    /// the pre-session engine's cost model; serving resets a slot on
+    /// admission, so the garbage in unoccupied rows is never observed.
+    fn step_lanes_fallback(&mut self, lanes: &[LaneInput]) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch_size();
+        let max_len = lanes.iter().map(|l| l.tokens.len()).max().unwrap_or(0);
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); lanes.len()];
+        for t in 0..max_len {
+            let mut tokens = vec![0i32; b];
+            for lane in lanes {
+                if t < lane.tokens.len() {
+                    tokens[lane.slot] = lane.tokens[t];
+                }
+            }
+            let logits = self.step(&tokens)?;
+            for (o, lane) in out.iter_mut().zip(lanes) {
+                if t + 1 == lane.tokens.len() {
+                    *o = logits[lane.slot].clone();
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Chunked prompt ingestion into one slot: feeds `tokens` through the
+    /// recurrence [`Sampler::prefill_chunk`] tokens per executor call and
+    /// returns the logits after the last one — the distribution the first
+    /// generated token samples from. Other slots are untouched (native
+    /// path). Cost is O(P) state updates but only O(P / C) executor
+    /// round-trips and a single readout.
+    pub fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("prefill: empty prompt for slot {slot}");
+        }
+        let c = self.prefill_chunk().max(1);
+        let mut logits = Vec::new();
+        for chunk in tokens.chunks(c) {
+            logits = self
+                .step_lanes(&[LaneInput { slot, tokens: chunk.to_vec() }])?
+                .pop()
+                .expect("one lane in, one logits row out");
+        }
+        Ok(logits)
+    }
+
+    /// One decode step over exactly the occupied lanes: feeds each
+    /// `(slot, token)` and returns logits per lane, in input order.
+    /// Unlisted slots are untouched (native path) — no logits are computed
+    /// or discarded for empty lanes.
+    pub fn decode_active(&mut self, active: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
+        let lanes: Vec<LaneInput> = active
+            .iter()
+            .map(|st| LaneInput { slot: st.slot, tokens: vec![st.token] })
+            .collect();
+        self.step_lanes(&lanes)
     }
 
     /// Zero the decode state of every slot.
@@ -122,8 +294,11 @@ impl Sampler {
         Ok(())
     }
 
-    /// Convenience: generate `n_tokens` continuations for a batch of prompts
-    /// (all slots used; prompts teacher-forced token by token). Returns
+    /// Convenience: generate `n_tokens` continuations for a batch of
+    /// prompts (all slots used). Prompts are ingested via chunked prefill
+    /// (all rows in flight at once, each with its own prompt), then all
+    /// rows decode together; on backends without a prefill artifact the
+    /// old token-by-token teacher-forcing loop runs instead. Returns
     /// per-row generated token ids.
     pub fn generate(
         &mut self,
@@ -137,6 +312,67 @@ impl Sampler {
             bail!("generate: {} prompts for batch size {b}", prompts.len());
         }
         self.reset_all();
+        if self.prefill_exe.is_none() {
+            return self.generate_stepwise(prompts, n_tokens, params, rng);
+        }
+        let prompts: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| if p.is_empty() { vec![0] } else { p.clone() })
+            .collect();
+
+        // phase 1: chunked prefill, every row in flight with its own prompt
+        let c = self.prefill_chunk();
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let mut pos = vec![0usize; b];
+        loop {
+            let mut lanes = Vec::new();
+            for (row, p) in prompts.iter().enumerate() {
+                if pos[row] < p.len() {
+                    let k = (p.len() - pos[row]).min(c);
+                    lanes.push(LaneInput {
+                        slot: row,
+                        tokens: p[pos[row]..pos[row] + k].to_vec(),
+                    });
+                }
+            }
+            if lanes.is_empty() {
+                break;
+            }
+            let lane_logits = self.step_lanes(&lanes)?;
+            for (lane, l) in lanes.iter().zip(lane_logits) {
+                pos[lane.slot] += lane.tokens.len();
+                if pos[lane.slot] == prompts[lane.slot].len() {
+                    logits[lane.slot] = l;
+                }
+            }
+        }
+
+        // phase 2: batched decode, sampling rows in fixed row order per step
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::with_capacity(n_tokens); b];
+        for t in 0..n_tokens {
+            let mut active = Vec::with_capacity(b);
+            for (row, out) in outputs.iter_mut().enumerate() {
+                let tok = nucleus_sample(&logits[row], params, rng);
+                out.push(tok);
+                active.push(SlotToken { slot: row, token: tok });
+            }
+            if t + 1 < n_tokens {
+                logits = self.decode_active(&active)?;
+            }
+        }
+        Ok(outputs)
+    }
+
+    /// Pre-session generate: teacher-force prompts one token per full-batch
+    /// step (the only option without a prefill artifact).
+    fn generate_stepwise(
+        &mut self,
+        prompts: &[Vec<i32>],
+        n_tokens: usize,
+        params: SampleParams,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_size();
         let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0).max(1);
         let mut outputs = vec![Vec::with_capacity(n_tokens); b];
         let mut current: Vec<i32> = prompts

@@ -31,9 +31,112 @@ impl Tokenizer for ByteTokenizer {
     }
 }
 
+/// Incremental UTF-8 decoder for byte-token streams (the serving path's
+/// `delta` frames): push bytes as they are sampled, get back the maximal
+/// decodable prefix each time. Incomplete multi-byte sequences are held
+/// (at most 3 bytes) until their continuation arrives; invalid bytes
+/// become U+FFFD immediately. By construction, the concatenation of every
+/// emitted chunk plus [`Utf8Stream::flush`] is exactly the text of the
+/// whole stream — so streamed deltas concatenate to the final text.
+#[derive(Debug, Default)]
+pub struct Utf8Stream {
+    pending: Vec<u8>,
+}
+
+impl Utf8Stream {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one byte; returns whatever became decodable ("" while waiting
+    /// on a multi-byte sequence).
+    pub fn push(&mut self, byte: u8) -> String {
+        self.push_bytes(&[byte])
+    }
+
+    pub fn push_bytes(&mut self, bytes: &[u8]) -> String {
+        self.pending.extend_from_slice(bytes);
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    return out;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.pending[..valid]).expect("valid prefix"));
+                    match e.error_len() {
+                        // invalid sequence of known length: replace and continue
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            self.pending.drain(..valid + bad);
+                        }
+                        // incomplete tail: hold it for the next push
+                        None => {
+                            self.pending.drain(..valid);
+                            return out;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// End of stream: decode whatever is still held (an incomplete tail
+    /// becomes replacement characters, like `from_utf8_lossy`).
+    pub fn flush(&mut self) -> String {
+        let s = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn utf8_stream_ascii_passthrough() {
+        let mut s = Utf8Stream::new();
+        let mut out = String::new();
+        for b in b"hello" {
+            out.push_str(&s.push(*b));
+        }
+        out.push_str(&s.flush());
+        assert_eq!(out, "hello");
+    }
+
+    #[test]
+    fn utf8_stream_reassembles_multibyte() {
+        let mut s = Utf8Stream::new();
+        let text = "héllo 🎉é";
+        let mut out = String::new();
+        let mut chunk_lens = Vec::new();
+        for b in text.as_bytes() {
+            let c = s.push(*b);
+            chunk_lens.push(c.len());
+            out.push_str(&c);
+        }
+        out.push_str(&s.flush());
+        assert_eq!(out, text);
+        // multi-byte sequences emit nothing until their last byte
+        assert!(chunk_lens.contains(&0));
+    }
+
+    #[test]
+    fn utf8_stream_replaces_invalid_and_incomplete() {
+        let mut s = Utf8Stream::new();
+        let mut out = String::new();
+        out.push_str(&s.push_bytes(&[0x61, 0xFF, 0x62])); // a, invalid, b
+        assert_eq!(out, "a\u{FFFD}b");
+        // dangling lead byte flushes to a replacement char
+        assert_eq!(s.push(0xC3), "");
+        assert_eq!(s.flush(), "\u{FFFD}");
+        // flush is idempotent once drained
+        assert_eq!(s.flush(), "");
+    }
 
     #[test]
     fn byte_roundtrip() {

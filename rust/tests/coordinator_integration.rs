@@ -1,35 +1,59 @@
-//! Coordinator integration tests: continuous-batching engine + TCP server
-//! over the native backend's decode executor. No artifacts required — this
-//! is the end-to-end serving path on a fresh checkout.
+//! Coordinator integration tests: session engine (chunked prefill,
+//! streaming, cancellation, deadlines, shutdown) + TCP server over the
+//! native backend. No artifacts required — this is the end-to-end serving
+//! path on a fresh checkout.
 
 use std::sync::mpsc;
 use std::time::Duration;
 
-use transformer_vq::coordinator::{handle_conn, Client, Engine, GenRequest, WireRequest};
+use transformer_vq::coordinator::{
+    serve_on, Client, Engine, EngineHandle, EngineStats, EventFrame, FinishReason, GenEvent,
+    GenRequest, GenerateFrame, WireRequest,
+};
 use transformer_vq::native::NativeBackend;
-use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::sample::{SampleParams, Sampler, SlotToken};
 
-fn spawn_engine() -> transformer_vq::coordinator::EngineHandle {
-    let (handle, _join) = Engine::spawn(
+fn spawn_engine() -> (EngineHandle, std::thread::JoinHandle<EngineStats>) {
+    Engine::spawn(
         move || {
             let backend = NativeBackend::new();
             Sampler::new(&backend, "quickstart")
         },
         42,
     )
-    .unwrap();
-    handle
+    .unwrap()
+}
+
+/// Engine + TCP server on an ephemeral port with a shutdown channel.
+struct TestServer {
+    addr: String,
+    #[allow(dead_code)]
+    handle: EngineHandle,
+    shutdown: mpsc::Sender<()>,
+    engine: std::thread::JoinHandle<EngineStats>,
+    server: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn spawn_server() -> TestServer {
+    let (handle, engine) = spawn_engine();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
+        let handle = handle.clone();
+        std::thread::spawn(move || serve_on(listener, handle, Some(sd_rx)))
+    };
+    TestServer { addr, handle, shutdown: sd_tx, engine, server }
 }
 
 #[test]
 fn engine_serves_single_request() {
-    let handle = spawn_engine();
+    let (handle, _join) = spawn_engine();
     let resp = handle
         .generate(GenRequest {
             prompt: vec![104, 105], // "hi"
             max_tokens: 8,
-            params: SampleParams::default(),
-            stop_token: None,
+            ..GenRequest::default()
         })
         .unwrap();
     assert_eq!(resp.tokens.len(), 8);
@@ -39,7 +63,7 @@ fn engine_serves_single_request() {
 
 #[test]
 fn engine_batches_concurrent_requests() {
-    let handle = spawn_engine();
+    let (handle, _join) = spawn_engine();
     let (tx, rx) = mpsc::channel();
     // more concurrent requests than slots (batch=4): exercises queueing +
     // slot reuse (continuous batching)
@@ -50,8 +74,7 @@ fn engine_batches_concurrent_requests() {
             let resp = handle.generate(GenRequest {
                 prompt: vec![65 + i],
                 max_tokens: 4 + (i as usize % 3) * 4, // mixed lengths
-                params: SampleParams::default(),
-                stop_token: None,
+                ..GenRequest::default()
             });
             tx.send((i, resp)).unwrap();
         });
@@ -68,7 +91,7 @@ fn engine_batches_concurrent_requests() {
 
 #[test]
 fn engine_stop_token_halts_generation() {
-    let handle = spawn_engine();
+    let (handle, _join) = spawn_engine();
     // stop on every token id: generation must stop at length 1
     let mut hit_short = false;
     for stop in 0..6 {
@@ -77,7 +100,8 @@ fn engine_stop_token_halts_generation() {
                 prompt: vec![10],
                 max_tokens: 64,
                 params: SampleParams { temperature: 1.0, top_p: 1.0 },
-                stop_token: Some(stop),
+                stop_tokens: vec![stop],
+                ..GenRequest::default()
             })
             .unwrap();
         if resp.tokens.len() < 64 {
@@ -91,43 +115,520 @@ fn engine_stop_token_halts_generation() {
 }
 
 #[test]
-fn tcp_server_roundtrip() {
-    let handle = spawn_engine();
-    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let stream = stream.unwrap();
-            let h = handle.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, h);
-            });
-        }
-    });
-    std::thread::sleep(Duration::from_millis(50));
-    let mut client = Client::connect(&addr).unwrap();
-    let resp = client
-        .request(&WireRequest {
-            prompt: "the ".into(),
+fn engine_stop_sequence_halts_generation() {
+    let (handle, _join) = spawn_engine();
+    let base = GenRequest {
+        prompt: vec![104, 105],
+        max_tokens: 16,
+        seed: Some(99),
+        ..GenRequest::default()
+    };
+    // learn the seeded output, then replay with its tokens 2..4 as a stop
+    // sequence: the replay must halt the first time that tail appears
+    let free = handle.generate(base.clone()).unwrap();
+    assert_eq!(free.tokens.len(), 16);
+    let stop_seq = free.tokens[2..4].to_vec();
+    let first_hit = (1..free.tokens.len())
+        .find(|&i| free.tokens[..=i].ends_with(&stop_seq))
+        .unwrap();
+    let stopped = handle
+        .submit(GenRequest { stop_seqs: vec![stop_seq.clone()], ..base })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(stopped.reason, FinishReason::Stop);
+    assert_eq!(stopped.tokens, free.tokens[..=first_hit].to_vec());
+    assert!(stopped.tokens.ends_with(&stop_seq));
+}
+
+#[test]
+fn streaming_events_are_ordered_and_complete() {
+    let (handle, _join) = spawn_engine();
+    let rh = handle
+        .submit(GenRequest {
+            prompt: vec![1, 2, 3],
             max_tokens: 6,
-            temperature: 1.0,
-            top_p: 0.9,
+            seed: Some(5),
+            ..GenRequest::default()
         })
         .unwrap();
+    let mut deltas = Vec::new();
+    let mut started = false;
+    let outcome = loop {
+        match rh.recv().unwrap() {
+            GenEvent::Started { prompt_tokens, .. } => {
+                assert!(!started, "duplicate started");
+                assert_eq!(prompt_tokens, 3);
+                started = true;
+            }
+            GenEvent::Delta { index, token } => {
+                assert!(started, "delta before started");
+                assert_eq!(index, deltas.len(), "delta indices must be contiguous");
+                deltas.push(token);
+            }
+            GenEvent::Done(o) => break o,
+            GenEvent::Error(e) => panic!("unexpected error: {e}"),
+        }
+    };
+    assert_eq!(outcome.reason, FinishReason::Length);
+    assert_eq!(outcome.tokens, deltas, "done tokens must equal streamed deltas");
+    assert_eq!(outcome.tokens.len(), 6);
+    assert!(outcome.ttft_ms.is_some());
+}
+
+#[test]
+fn seeded_requests_are_bit_identical_across_runs_and_batchmates() {
+    let req = GenRequest {
+        prompt: (0..100).map(|t| (t * 3) % 251).collect(),
+        max_tokens: 12,
+        seed: Some(1234),
+        ..GenRequest::default()
+    };
+    // run 1: alone on a fresh engine
+    let (handle, _join) = spawn_engine();
+    let alone = handle.generate(req.clone()).unwrap();
+    drop(handle);
+    // run 2: fresh engine, same request sharing the batch with two others
+    let (handle, _join) = spawn_engine();
+    let noise1 = handle
+        .submit(GenRequest {
+            prompt: vec![7; 300],
+            max_tokens: 40,
+            ..GenRequest::default()
+        })
+        .unwrap();
+    let noise2 = handle
+        .submit(GenRequest { prompt: vec![9], max_tokens: 40, ..GenRequest::default() })
+        .unwrap();
+    let crowded = handle.generate(req).unwrap();
+    assert_eq!(
+        alone.tokens, crowded.tokens,
+        "fixed seed must be bit-identical regardless of co-resident slots"
+    );
+    noise1.wait().unwrap();
+    noise2.wait().unwrap();
+}
+
+#[test]
+fn cancel_frees_slot_for_next_request() {
+    let (handle, _join) = spawn_engine();
+    let rh = handle
+        .submit(GenRequest {
+            prompt: vec![42],
+            max_tokens: 4096,
+            ..GenRequest::default()
+        })
+        .unwrap();
+    // let it stream a little, then cancel
+    let mut seen = 0;
+    loop {
+        match rh.recv().unwrap() {
+            GenEvent::Delta { .. } => {
+                seen += 1;
+                if seen == 3 {
+                    rh.cancel();
+                }
+            }
+            GenEvent::Done(o) => {
+                assert_eq!(o.reason, FinishReason::Cancelled);
+                assert!(o.tokens.len() >= 3, "partial output survives the cancel");
+                assert!(o.tokens.len() < 4096);
+                break;
+            }
+            GenEvent::Started { .. } => {}
+            GenEvent::Error(e) => panic!("{e}"),
+        }
+    }
+    // the slot is free again: a fresh request completes
+    let resp = handle
+        .generate(GenRequest { prompt: vec![1], max_tokens: 4, ..GenRequest::default() })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+}
+
+#[test]
+fn deadline_finishes_request_with_partial_output() {
+    let (handle, _join) = spawn_engine();
+    let o = handle
+        .submit(GenRequest {
+            prompt: vec![3],
+            max_tokens: 4096,
+            deadline: Some(Duration::from_millis(50)),
+            ..GenRequest::default()
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(o.reason, FinishReason::Deadline);
+    assert!(o.tokens.len() < 4096);
+}
+
+#[test]
+fn deadline_fires_while_still_queued() {
+    let (handle, _join) = spawn_engine();
+    // fill every slot (batch = 4) with long generations
+    let long: Vec<_> = (0..4)
+        .map(|i| {
+            handle
+                .submit(GenRequest {
+                    prompt: vec![i],
+                    max_tokens: 4096,
+                    ..GenRequest::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    // a queued request with a tight deadline must not wait for a slot
+    let t0 = std::time::Instant::now();
+    let o = handle
+        .submit(GenRequest {
+            prompt: vec![9],
+            max_tokens: 8,
+            deadline: Some(Duration::from_millis(40)),
+            ..GenRequest::default()
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(o.reason, FinishReason::Deadline);
+    assert!(o.tokens.is_empty(), "never reached a slot");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "deadline did not bound queue latency"
+    );
+    for rh in long {
+        rh.cancel();
+        rh.wait().unwrap();
+    }
+}
+
+#[test]
+fn failed_admissions_do_not_starve_queued_requests() {
+    let (handle, _join) = spawn_engine();
+    // enough empty-prompt (failing) requests to burn every slot's admit
+    // attempt, then a valid one: it must still be served
+    let bad: Vec<_> = (0..5)
+        .map(|_| {
+            handle
+                .submit(GenRequest { prompt: vec![], max_tokens: 4, ..GenRequest::default() })
+                .unwrap()
+        })
+        .collect();
+    let resp = handle
+        .generate(GenRequest { prompt: vec![1], max_tokens: 4, ..GenRequest::default() })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+    for rh in bad {
+        assert!(rh.wait().is_err(), "empty prompt must error");
+    }
+}
+
+#[test]
+fn empty_prompt_is_an_engine_error() {
+    let (handle, _join) = spawn_engine();
+    let err = handle
+        .generate(GenRequest { prompt: vec![], max_tokens: 4, ..GenRequest::default() })
+        .unwrap_err();
+    assert!(err.contains("empty prompt"), "got: {err}");
+}
+
+#[test]
+fn engine_stats_track_prefill_and_decode() {
+    let (handle, _join) = spawn_engine();
+    let resp = handle
+        .generate(GenRequest {
+            prompt: (0..100).map(|t| t % 251).collect(),
+            max_tokens: 5,
+            ..GenRequest::default()
+        })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 5);
+    let stats = handle.stats().unwrap();
+    assert_eq!(stats.requests_completed, 1);
+    assert_eq!(stats.prefill_tokens, 100);
+    assert_eq!(stats.decode_tokens, 5);
+    assert_eq!(stats.ttft_ms_count, 1);
+    assert!(stats.mean_ttft_ms() > 0.0);
+    // chunked prefill: 100 prompt tokens + 5 sampled must take far fewer
+    // engine steps than the 104 the token-by-token path needed
+    assert!(
+        stats.steps <= 10,
+        "chunked prefill should need ~ceil(100/64)+5 steps, took {}",
+        stats.steps
+    );
+}
+
+#[test]
+fn shutdown_drains_inflight_and_reports_stats() {
+    let (handle, join) = spawn_engine();
+    let rh = handle
+        .submit(GenRequest {
+            prompt: vec![8],
+            max_tokens: 4096,
+            ..GenRequest::default()
+        })
+        .unwrap();
+    // wait until it is actually generating, then shut down
+    loop {
+        match rh.recv().unwrap() {
+            GenEvent::Delta { index: 2, .. } => break,
+            GenEvent::Error(e) => panic!("{e}"),
+            _ => {}
+        }
+    }
+    handle.shutdown();
+    let o = loop {
+        match rh.recv().unwrap() {
+            GenEvent::Done(o) => break o,
+            GenEvent::Delta { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    assert_eq!(o.reason, FinishReason::Shutdown);
+    assert!(!o.tokens.is_empty());
+    let stats = join.join().unwrap();
+    assert_eq!(stats.requests_cancelled, 1);
+    assert!(stats.decode_tokens as usize >= o.tokens.len());
+}
+
+// ---------------------------------------------------------------------------
+// wire-level tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_server_v1_roundtrip() {
+    let srv = spawn_server();
+    let mut client = Client::connect(&srv.addr).unwrap();
+    let resp = client.request(&WireRequest::new("the ", 6)).unwrap();
     assert!(resp.ok, "{:?}", resp.error);
     assert_eq!(resp.tokens.unwrap().len(), 6);
     assert_eq!(resp.prompt_tokens, Some(4));
     assert!(resp.gen_ms.unwrap() > 0.0);
+    assert_eq!(resp.reason.as_deref(), Some("length"));
 
-    // malformed request -> structured error, connection stays usable
+    // bad v1 request (valid JSON, missing prompt) -> v1-shaped error,
+    // connection stays usable
     use std::io::{BufRead, Write};
-    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
-    raw.write_all(b"{not json}\n").unwrap();
+    let mut raw = std::net::TcpStream::connect(&srv.addr).unwrap();
+    raw.write_all(b"{\"max_tokens\": 4}\n").unwrap();
     let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
-    assert!(line.contains("\"ok\":false"));
+    assert!(line.contains("\"ok\":false"), "got: {line}");
+    // malformed JSON -> v2 error frame, still alive
+    raw.write_all(b"{not json}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"event\":\"error\""), "got: {line}");
+    raw.write_all(b"{\"prompt\":\"ok\",\"max_tokens\":2}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "got: {line}");
 }
+
+#[test]
+fn v1_seeded_requests_reproduce_over_the_wire() {
+    let srv = spawn_server();
+    let mut req = WireRequest::new("abc", 10);
+    req.seed = Some(777);
+    let mut c1 = Client::connect(&srv.addr).unwrap();
+    let r1 = c1.request(&req).unwrap();
+    let mut c2 = Client::connect(&srv.addr).unwrap();
+    let r2 = c2.request(&req).unwrap();
+    assert_eq!(r1.tokens, r2.tokens);
+}
+
+#[test]
+fn v2_stop_tokens_work_over_the_wire() {
+    let srv = spawn_server();
+    let mut client = Client::connect(&srv.addr).unwrap();
+    let mut frame = GenerateFrame::new("free", "hi", 12);
+    frame.seed = Some(31);
+    client.generate(&frame).unwrap();
+    let free = read_done(&mut client, "free");
+    let free_tokens = match &free {
+        EventFrame::Done { tokens, .. } => tokens.clone(),
+        other => panic!("expected done, got {other:?}"),
+    };
+    assert_eq!(free_tokens.len(), 12);
+    // same seed, but stop on the third sampled token id; the replay must
+    // halt at that id's *first* occurrence in the seeded stream
+    let stop = free_tokens[2];
+    let first_hit = free_tokens.iter().position(|&t| t == stop).unwrap();
+    let mut frame = GenerateFrame::new("stopped", "hi", 12);
+    frame.seed = Some(31);
+    frame.stop_tokens = vec![stop];
+    client.generate(&frame).unwrap();
+    match read_done(&mut client, "stopped") {
+        EventFrame::Done { reason, tokens, .. } => {
+            assert_eq!(reason, "stop");
+            assert_eq!(tokens, free_tokens[..first_hit + 1].to_vec());
+        }
+        other => panic!("expected done, got {other:?}"),
+    }
+}
+
+/// Read frames for `id` until its done/error arrives (ignoring frames of
+/// other in-flight requests).
+fn read_done(client: &mut Client, id: &str) -> EventFrame {
+    loop {
+        let ev = client.next_event().unwrap();
+        match &ev {
+            EventFrame::Done { id: fid, .. } | EventFrame::Error { id: Some(fid), .. }
+                if fid == id =>
+            {
+                return ev;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The acceptance scenario: two streaming requests multiplexed over one
+/// connection, interleaved deltas, a mid-stream cancel that frees the slot
+/// for a third request — and a fixed seed reproducing bit-identically on a
+/// separate run.
+#[test]
+fn multiplexed_streaming_with_midstream_cancel() {
+    let run = || -> (Vec<i32>, Vec<i32>) {
+        let srv = spawn_server();
+        let mut client = Client::connect(&srv.addr).unwrap();
+        let mut a = GenerateFrame::new("a", "aaaa", 4000);
+        a.seed = Some(1);
+        let mut b = GenerateFrame::new("b", "bbbb", 24);
+        b.seed = Some(2);
+        client.generate(&a).unwrap();
+        client.generate(&b).unwrap();
+
+        let mut a_tokens = Vec::new();
+        let mut b_tokens = Vec::new();
+        let mut b_text = String::new();
+        let mut interleavings = 0usize;
+        let mut last_id = String::new();
+        let mut cancelled = false;
+        let (mut a_done, mut b_done) = (None, None);
+        while a_done.is_none() || b_done.is_none() {
+            match client.next_event().unwrap() {
+                EventFrame::Delta { id, token, text, .. } => {
+                    if id != last_id {
+                        interleavings += 1;
+                        last_id = id.clone();
+                    }
+                    if id == "a" {
+                        a_tokens.push(token);
+                        // cancel a mid-stream once it has streamed a few
+                        if a_tokens.len() == 5 && !cancelled {
+                            client.cancel("a").unwrap();
+                            cancelled = true;
+                        }
+                    } else {
+                        b_tokens.push(token);
+                        b_text.push_str(&text);
+                    }
+                }
+                EventFrame::Done { id, reason, tokens, text, .. } => {
+                    if id == "a" {
+                        assert_eq!(reason, "cancelled");
+                        assert!(tokens.len() >= 5 && tokens.len() < 4000);
+                        a_done = Some(tokens);
+                    } else {
+                        assert_eq!(reason, "length");
+                        assert_eq!(tokens, b_tokens, "b: delta tokens != done tokens");
+                        // streamed deltas concatenate to the final text
+                        // (modulo a trailing incomplete-UTF-8 flush)
+                        assert!(
+                            text.starts_with(&b_text)
+                                && text[b_text.len()..].chars().all(|c| c == '\u{FFFD}'),
+                            "b: delta text {b_text:?} vs done text {text:?}"
+                        );
+                        b_done = Some(tokens);
+                    }
+                }
+                EventFrame::Started { .. } => {}
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        // both requests really did stream concurrently on one connection
+        assert!(interleavings >= 3, "expected interleaved deltas, got {interleavings}");
+        assert_eq!(b_done.as_ref().unwrap().len(), 24);
+
+        // the cancel freed a slot: a third request on the same connection
+        let mut c = GenerateFrame::new("c", "cccc", 8);
+        c.seed = Some(3);
+        client.generate(&c).unwrap();
+        match read_done(&mut client, "c") {
+            EventFrame::Done { reason, tokens, .. } => {
+                assert_eq!(reason, "length");
+                assert_eq!(tokens.len(), 8);
+            }
+            other => panic!("expected done for c, got {other:?}"),
+        }
+        (a_tokens, b_done.unwrap())
+    };
+    // bit-identical across two completely separate runs (fixed seeds)
+    let (a1, b1) = run();
+    let (a2, b2) = run();
+    assert_eq!(b1, b2, "seeded request b must be bit-identical across runs");
+    // a was cancelled at a timing-dependent point, but the prefix it did
+    // generate is seed-determined
+    let n = a1.len().min(a2.len());
+    assert_eq!(a1[..n], a2[..n], "seeded request a must agree on the common prefix");
+}
+
+#[test]
+fn stats_op_reports_engine_counters() {
+    let srv = spawn_server();
+    let mut client = Client::connect(&srv.addr).unwrap();
+    let resp = client.request(&WireRequest::new("warm", 4)).unwrap();
+    assert!(resp.ok);
+    client.stats().unwrap();
+    match client.next_event().unwrap() {
+        EventFrame::Stats(s) => {
+            assert_eq!(s.requests_completed, 1);
+            assert_eq!(s.decode_tokens, 4);
+            assert_eq!(s.prefill_tokens, 4);
+            assert_eq!(s.active, 0);
+        }
+        other => panic!("expected stats frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn graceful_shutdown_drains_streaming_clients() {
+    let srv = spawn_server();
+    let mut client = Client::connect(&srv.addr).unwrap();
+    let mut g = GenerateFrame::new("long", "the ", 4000);
+    g.seed = Some(4);
+    client.generate(&g).unwrap();
+    // wait until it streams, then pull the plug
+    loop {
+        if let EventFrame::Delta { index: 3, .. } = client.next_event().unwrap() {
+            break;
+        }
+    }
+    srv.shutdown.send(()).unwrap();
+    srv.server.join().unwrap().unwrap();
+    // the in-flight request finishes with done(reason="shutdown")
+    loop {
+        match client.next_event().unwrap() {
+            EventFrame::Done { reason, tokens, .. } => {
+                assert_eq!(reason, "shutdown");
+                assert!(!tokens.is_empty());
+                break;
+            }
+            EventFrame::Delta { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    // and the engine thread joined with real stats
+    let stats = srv.engine.join().unwrap();
+    assert_eq!(stats.requests_cancelled, 1);
+    assert!(stats.decode_tokens > 0);
+}
+
+// ---------------------------------------------------------------------------
+// sampler-level session tests
+// ---------------------------------------------------------------------------
 
 #[test]
 fn sampler_generate_deterministic_given_seed() {
@@ -144,6 +645,7 @@ fn sampler_generate_deterministic_given_seed() {
         .generate(&prompts, 12, SampleParams::default(), &mut r2)
         .unwrap();
     assert_eq!(out1, out2);
+    assert!(out1.iter().all(|o| o.len() == 12));
 }
 
 #[test]
@@ -167,4 +669,77 @@ fn sampler_reset_slot_isolates_state() {
     let after = sampler.step(&vec![9; b]).unwrap();
     assert_eq!(before[1], after[1], "slot 1 was disturbed by slot 0 reset");
     assert_ne!(before[0], after[0], "slot 0 reset had no effect");
+}
+
+#[test]
+fn sampler_prefill_matches_stepwise_and_decode_continues_identically() {
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
+    let b = sampler.batch_size();
+    // prompt longer than one chunk so the chunk loop runs
+    let prompt: Vec<i32> = (0..150).map(|t| (t * 5 + 1) % 251).collect();
+    assert!(prompt.len() > sampler.prefill_chunk());
+
+    // stepwise reference on slot 0 (full-batch steps, all rows same token)
+    sampler.reset_all();
+    let mut ref_logits = Vec::new();
+    for &t in &prompt {
+        ref_logits = sampler.step(&vec![t; b]).unwrap().swap_remove(0);
+    }
+    let ref_next = sampler.step(&vec![7; b]).unwrap().swap_remove(0);
+
+    // chunked prefill then an active-lane decode step
+    sampler.reset_all();
+    let logits = sampler.prefill(0, &prompt).unwrap();
+    assert_eq!(logits, ref_logits, "prefill logits != stepwise logits");
+    let next = sampler
+        .decode_active(&[SlotToken { slot: 0, token: 7 }])
+        .unwrap()
+        .swap_remove(0);
+    assert_eq!(next, ref_next, "decode after prefill diverged from stepwise");
+}
+
+#[test]
+fn sampler_decode_active_leaves_other_slots_untouched() {
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
+    sampler.reset_all();
+    sampler
+        .decode_active(&[SlotToken { slot: 1, token: 42 }])
+        .unwrap();
+    sampler
+        .decode_active(&[SlotToken { slot: 1, token: 43 }])
+        .unwrap();
+    let pos = sampler.bundle.group("state").unwrap()[0].as_i32().unwrap();
+    assert_eq!(pos, vec![0, 2, 0, 0], "only slot 1 may advance");
+}
+
+#[test]
+fn sampler_step_lanes_validates_input() {
+    let backend = NativeBackend::new();
+    let mut sampler = Sampler::new(&backend, "quickstart").unwrap();
+    sampler.reset_all();
+    use transformer_vq::sample::LaneInput;
+    // out-of-range slot
+    assert!(sampler
+        .step_lanes(&[LaneInput { slot: 99, tokens: vec![1] }])
+        .is_err());
+    // duplicate slot
+    assert!(sampler
+        .step_lanes(&[
+            LaneInput { slot: 0, tokens: vec![1] },
+            LaneInput { slot: 0, tokens: vec![2] }
+        ])
+        .is_err());
+    // empty lane
+    assert!(sampler
+        .step_lanes(&[LaneInput { slot: 0, tokens: vec![] }])
+        .is_err());
+    // oversized chunk
+    let too_big = vec![1i32; sampler.prefill_chunk() + 1];
+    assert!(sampler
+        .step_lanes(&[LaneInput { slot: 0, tokens: too_big }])
+        .is_err());
+    // empty lane list is a no-op
+    assert_eq!(sampler.step_lanes(&[]).unwrap().len(), 0);
 }
