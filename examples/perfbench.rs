@@ -16,6 +16,14 @@
 //! are bit-identical across thread counts (enforced by
 //! rust/tests/parallel_determinism.rs); only the wall clock may differ.
 //!
+//! Finally it sweeps the PR-5 performance axes on `DecodeSession` (the
+//! allocation-free stateful loop, no tensor round-trip): SIMD on vs off
+//! at B = 1, and batched-lane vs per-lane decode at B ∈ {1, 4, 8}, each
+//! reporting aggregate tok/s at positions 512/2k/8k. The headline ratios
+//! (`simd_speedup`, `batched_speedup_b8`) are asserted *softly* — values
+//! always land in the artifact, a miss prints a warning instead of
+//! failing CI, since both depend on CI hardware.
+//!
 //! Emits `BENCH_native_decode.json` (path overridable) so CI can track the
 //! perf trajectory across PRs. See DESIGN.md §7 for how to read it.
 //!
@@ -23,7 +31,9 @@
 
 use anyhow::Result;
 use transformer_vq::json::Json;
-use transformer_vq::native::{kernels, NativeBackend, NativeOptions};
+use transformer_vq::native::{
+    kernels, preset_config, DecodeSession, NativeBackend, NativeOptions, SimdMode,
+};
 use transformer_vq::runtime::{Backend, StateBundle};
 use transformer_vq::tensor::HostTensor;
 
@@ -37,7 +47,7 @@ fn median_ns(window: &[f64]) -> f64 {
 /// `num_threads` = None uses the backend default (env / all cores).
 fn drive(preset: &str, max_pos: usize, num_threads: Option<usize>) -> Result<Vec<f64>> {
     let backend = match num_threads {
-        Some(nt) => NativeBackend::new().with_options(NativeOptions { num_threads: nt }),
+        Some(nt) => NativeBackend::new().with_options(NativeOptions::with_threads(nt)),
         None => NativeBackend::new(),
     };
     let exe = backend.load(&format!("{preset}.decode"))?;
@@ -63,6 +73,38 @@ fn tps_at(step_ns: &[f64], positions: &[usize], window: usize, batch: usize) -> 
         .iter()
         .map(|&p| 1e9 * batch as f64 / median_ns(&step_ns[p - window..p]))
         .collect()
+}
+
+/// Drive a [`DecodeSession`] (the stateful loop — no tensor round-trip)
+/// for `max_pos` steps at the given batch size / SIMD mode / lane
+/// strategy; returns per-step wall ns.
+fn drive_session(
+    preset: &str,
+    batch: usize,
+    max_pos: usize,
+    simd: SimdMode,
+    batched: bool,
+) -> Result<Vec<f64>> {
+    let mut cfg = preset_config(preset)?;
+    cfg.batch_size = batch;
+    let name = format!("lanebench-b{batch}");
+    let backend = NativeBackend::with_preset(&name, cfg, 0x1A7E).with_options(NativeOptions {
+        num_threads: 0,
+        simd,
+        batched_decode: batched,
+    });
+    let mut sess = DecodeSession::new(&backend, &name)?;
+    let mut tokens = vec![0i32; batch];
+    let mut step_ns: Vec<f64> = Vec::with_capacity(max_pos);
+    for pos in 0..max_pos {
+        for (r, t) in tokens.iter_mut().enumerate() {
+            *t = ((pos + r) % 251) as i32;
+        }
+        let t0 = std::time::Instant::now();
+        sess.step(&tokens)?;
+        step_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    Ok(step_ns)
 }
 
 fn main() -> Result<()> {
@@ -164,6 +206,92 @@ fn main() -> Result<()> {
         println!("speedup at 4 threads (seq >= 2k): {s:.2}x");
     }
 
+    // --- PR-5 axes on DecodeSession: SIMD on/off, batched vs per-lane ------
+    let session_positions: Vec<usize> = [512usize, 2048, 8192]
+        .into_iter()
+        .filter(|&p| p <= max_pos && p >= window)
+        .collect();
+    let session_max = session_positions.last().copied().unwrap_or(0);
+    // the mode the rest of this artifact actually ran under: auto-detected
+    // unless the TVQ_SIMD escape hatch forced scalar (so curve labels and
+    // simd_mode stay truthful under `TVQ_SIMD=0 perfbench` runs too)
+    let detected = SimdMode::from_env();
+    let mut simd_curves: Vec<(SimdMode, Vec<f64>)> = Vec::new();
+    let mut lane_curves: Vec<(usize, bool, Vec<f64>)> = Vec::new();
+    let mut simd_speedup = None;
+    let mut batched_speedup_b8 = None;
+    if session_max > 0 {
+        let mut simd_modes = vec![detected];
+        if detected != SimdMode::Scalar {
+            simd_modes.push(SimdMode::Scalar);
+        }
+        println!("\nsimd on/off (DecodeSession, B=1, batched lanes):");
+        print!("{:>9}", "simd");
+        for p in &session_positions {
+            print!(" {:>11}", format!("tok/s@{p}"));
+        }
+        println!();
+        for &simd in &simd_modes {
+            let ns = drive_session(preset, 1, session_max, simd, true)?;
+            let tps = tps_at(&ns, &session_positions, window, 1);
+            print!("{:>9}", simd.name());
+            for t in &tps {
+                print!(" {t:>11.0}");
+            }
+            println!();
+            simd_curves.push((simd, tps));
+        }
+        if simd_curves.len() == 2 {
+            let on = simd_curves[0].1.last().copied().unwrap_or(0.0);
+            let off = simd_curves[1].1.last().copied().unwrap_or(f64::INFINITY);
+            simd_speedup = Some(on / off);
+        }
+
+        println!("\nbatched vs per-lane (DecodeSession, simd={}):", detected.name());
+        print!("{:>9} {:>9}", "batch", "lanes");
+        for p in &session_positions {
+            print!(" {:>11}", format!("tok/s@{p}"));
+        }
+        println!();
+        for &bsz in &[1usize, 4, 8] {
+            for &batched in &[true, false] {
+                let ns = drive_session(preset, bsz, session_max, detected, batched)?;
+                let tps = tps_at(&ns, &session_positions, window, bsz);
+                print!("{bsz:>9} {:>9}", if batched { "batched" } else { "per-lane" });
+                for t in &tps {
+                    print!(" {t:>11.0}");
+                }
+                println!();
+                lane_curves.push((bsz, batched, tps));
+            }
+        }
+        let last_of = |bsz: usize, batched: bool| {
+            lane_curves
+                .iter()
+                .find(|(b, m, _)| *b == bsz && *m == batched)
+                .and_then(|(_, _, tps)| tps.last().copied())
+        };
+        if let (Some(on), Some(off)) = (last_of(8, true), last_of(8, false)) {
+            batched_speedup_b8 = Some(on / off);
+        }
+
+        // soft assertions: always recorded, warn (don't fail) on a miss —
+        // both ratios depend on CI hardware (ISSUE 5 acceptance targets)
+        if let Some(s) = simd_speedup {
+            let verdict = if s >= 1.5 { "OK" } else { "BELOW TARGET (soft)" };
+            println!(
+                "simd speedup at B=1, pos {session_max}: {s:.2}x (target >= 1.5x) {verdict}"
+            );
+        }
+        if let Some(s) = batched_speedup_b8 {
+            let verdict = if s >= 2.0 { "OK" } else { "BELOW TARGET (soft)" };
+            println!(
+                "batched-lane speedup at B=8, pos {session_max}: {s:.2}x \
+                 (target >= 2x) {verdict}"
+            );
+        }
+    }
+
     let jarr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
     let jpos = |v: &[usize]| Json::Arr(v.iter().map(|&p| Json::num(p as f64)).collect());
     let mut fields = vec![
@@ -195,6 +323,45 @@ fn main() -> Result<()> {
     ];
     if let Some(s) = speedup_4t {
         fields.push(("speedup_threads4_vs_1", Json::num(s)));
+    }
+    fields.push(("simd_mode", Json::str(detected.name())));
+    fields.push(("batched_decode_default", Json::num(1.0)));
+    fields.push(("session_positions", jpos(&session_positions)));
+    fields.push((
+        "simd_curves",
+        Json::Arr(
+            simd_curves
+                .iter()
+                .map(|(mode, tps)| {
+                    Json::obj(vec![
+                        ("simd", Json::str(mode.name())),
+                        ("batch", Json::num(1.0)),
+                        ("tokens_per_sec", jarr(tps)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    fields.push((
+        "lane_curves",
+        Json::Arr(
+            lane_curves
+                .iter()
+                .map(|(bsz, batched, tps)| {
+                    Json::obj(vec![
+                        ("batch", Json::num(*bsz as f64)),
+                        ("mode", Json::str(if *batched { "batched" } else { "per_lane" })),
+                        ("tokens_per_sec", jarr(tps)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    if let Some(s) = simd_speedup {
+        fields.push(("simd_speedup", Json::num(s)));
+    }
+    if let Some(s) = batched_speedup_b8 {
+        fields.push(("batched_speedup_b8", Json::num(s)));
     }
     let j = Json::obj(fields);
     std::fs::write(out_path, j.dump())?;

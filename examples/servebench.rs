@@ -13,6 +13,12 @@
 //! aggregate decode tok/s, asserting on the way that streamed deltas
 //! concatenate to each request's final text.
 //!
+//! Phase 2 runs twice — once with the default batched-lane decode (all
+//! occupied slots advance through each layer together, one GEMM per
+//! projection) and once with the per-lane fallback — so the artifact
+//! records how serving throughput under concurrent streams responds to
+//! lane batching; the SIMD mode in effect is recorded alongside.
+//!
 //! Emits `BENCH_native_serve.json` (path overridable) so CI tracks the
 //! serving trajectory next to the decode/train artifacts. See DESIGN.md §8
 //! for how to read it.
@@ -24,10 +30,121 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
-use transformer_vq::coordinator::{serve_on, Client, Engine, EventFrame, GenerateFrame};
+use transformer_vq::coordinator::{
+    serve_on, Client, Engine, EngineStats, EventFrame, GenerateFrame,
+};
 use transformer_vq::json::Json;
-use transformer_vq::native::{kernels, NativeBackend};
+use transformer_vq::native::{kernels, NativeBackend, NativeOptions};
 use transformer_vq::sample::Sampler;
+
+/// Aggregate results of one streaming run.
+struct StreamingRun {
+    ttft_ms_mean: f64,
+    ttft_ms_max: f64,
+    decode_tps: f64,
+    wall: f64,
+    stats: EngineStats,
+}
+
+/// Spawn an engine (with the given native options) + TCP server, run
+/// `n_clients` concurrent streaming generations of `max_tokens` each, and
+/// collect TTFT / steady-state decode throughput. Asserts per client that
+/// streamed deltas concatenate to the final output.
+fn streaming_phase(
+    preset: &str,
+    prompt_str: &str,
+    n_clients: usize,
+    max_tokens: usize,
+    options: NativeOptions,
+) -> Result<StreamingRun> {
+    let preset_c = preset.to_string();
+    let (handle, join) = Engine::spawn(
+        move || Sampler::new(&NativeBackend::new().with_options(options), &preset_c),
+        0,
+    )?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
+        let handle = handle.clone();
+        std::thread::spawn(move || serve_on(listener, handle, Some(sd_rx)))
+    };
+
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        let prompt_str = prompt_str.to_string();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let run = || -> Result<(f64, f64, usize)> {
+                let mut client = Client::connect(&addr)?;
+                let mut frame = GenerateFrame::new(format!("bench-{i}"), prompt_str, max_tokens);
+                frame.seed = Some(7 + i as u64);
+                let t_submit = Instant::now();
+                client.generate(&frame)?;
+                let mut ttft = None;
+                let mut first_delta = None;
+                let mut delta_text = String::new();
+                let mut delta_tokens: Vec<i32> = Vec::new();
+                loop {
+                    match client.next_event()? {
+                        EventFrame::Delta { token, text, .. } => {
+                            ttft.get_or_insert_with(|| t_submit.elapsed().as_secs_f64() * 1e3);
+                            first_delta.get_or_insert_with(Instant::now);
+                            delta_text.push_str(&text);
+                            delta_tokens.push(token);
+                        }
+                        EventFrame::Done { text, tokens, .. } => {
+                            // CI smoke assertion: streamed deltas concatenate
+                            // to the final output
+                            anyhow::ensure!(tokens == delta_tokens, "delta tokens != done tokens");
+                            anyhow::ensure!(
+                                text.starts_with(&delta_text)
+                                    && text[delta_text.len()..]
+                                        .chars()
+                                        .all(|c| c == '\u{FFFD}'),
+                                "concatenated delta text does not match done text"
+                            );
+                            let decode_secs = first_delta
+                                .map(|t| t.elapsed().as_secs_f64())
+                                .unwrap_or(0.0);
+                            return Ok((ttft.unwrap_or(0.0), decode_secs, tokens.len()));
+                        }
+                        EventFrame::Error { error, .. } => anyhow::bail!("{error}"),
+                        EventFrame::Started { .. } | EventFrame::Stats(_) => {}
+                    }
+                }
+            };
+            tx.send(run()).unwrap();
+        });
+    }
+    drop(tx);
+
+    let mut ttfts = Vec::new();
+    let mut decode_tokens = 0usize;
+    let mut decode_secs_max = 0.0f64;
+    while let Ok(r) = rx.recv() {
+        let (ttft_ms, decode_secs, toks) = r?;
+        ttfts.push(ttft_ms);
+        decode_tokens += toks;
+        decode_secs_max = decode_secs_max.max(decode_secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let decode_tps = if decode_secs_max > 0.0 {
+        decode_tokens as f64 / decode_secs_max
+    } else {
+        0.0
+    };
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ttft_ms_mean = ttfts.iter().sum::<f64>() / ttfts.len().max(1) as f64;
+    let ttft_ms_max = ttfts.last().copied().unwrap_or(0.0);
+
+    let _ = sd_tx.send(());
+    server.join().expect("server thread")?;
+    let stats = join.join().expect("engine thread");
+    Ok(StreamingRun { ttft_ms_mean, ttft_ms_max, decode_tps, wall, stats })
+}
 
 /// Best-of-`reps` wall seconds for `f` (min is robust to scheduler noise).
 fn best_secs(reps: usize, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
@@ -90,112 +207,36 @@ fn main() -> Result<()> {
     println!("  chunked prefill (session path):   {prefill_tps:>10.0} tok/s");
     println!("  speedup: {speedup:.2}x");
 
-    // --- phase 2: streaming serving under N concurrent clients -------------
+    // --- phase 2: streaming serving under N concurrent clients, batched
+    // lanes (the default) vs the per-lane fallback ---------------------------
     let max_tokens = 96usize;
-    let preset_c = preset.clone();
-    let (handle, join) = Engine::spawn(
-        move || Sampler::new(&NativeBackend::new(), &preset_c),
-        0,
-    )?;
-    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?.to_string();
-    let (sd_tx, sd_rx) = mpsc::channel();
-    let server = {
-        let handle = handle.clone();
-        std::thread::spawn(move || serve_on(listener, handle, Some(sd_rx)))
-    };
-
     let prompt_str: String = prompt.iter().map(|&t| (t as u8) as char).collect();
-    let t0 = Instant::now();
-    let (tx, rx) = mpsc::channel();
-    for i in 0..n_clients {
-        let addr = addr.clone();
-        let prompt_str = prompt_str.clone();
-        let tx = tx.clone();
-        std::thread::spawn(move || {
-            let run = || -> Result<(f64, f64, usize)> {
-                let mut client = Client::connect(&addr)?;
-                let mut frame =
-                    GenerateFrame::new(format!("bench-{i}"), prompt_str, max_tokens);
-                frame.seed = Some(7 + i as u64);
-                let t_submit = Instant::now();
-                client.generate(&frame)?;
-                let mut ttft = None;
-                let mut first_delta = None;
-                let mut delta_text = String::new();
-                let mut delta_tokens: Vec<i32> = Vec::new();
-                loop {
-                    match client.next_event()? {
-                        EventFrame::Delta { token, text, .. } => {
-                            ttft.get_or_insert_with(|| {
-                                t_submit.elapsed().as_secs_f64() * 1e3
-                            });
-                            first_delta.get_or_insert_with(Instant::now);
-                            delta_text.push_str(&text);
-                            delta_tokens.push(token);
-                        }
-                        EventFrame::Done { text, tokens, .. } => {
-                            // CI smoke assertion: streamed deltas concatenate
-                            // to the final output
-                            anyhow::ensure!(
-                                tokens == delta_tokens,
-                                "delta tokens != done tokens"
-                            );
-                            anyhow::ensure!(
-                                text.starts_with(&delta_text)
-                                    && text[delta_text.len()..]
-                                        .chars()
-                                        .all(|c| c == '\u{FFFD}'),
-                                "concatenated delta text does not match done text"
-                            );
-                            let decode_secs = first_delta
-                                .map(|t| t.elapsed().as_secs_f64())
-                                .unwrap_or(0.0);
-                            return Ok((
-                                ttft.unwrap_or(0.0),
-                                decode_secs,
-                                tokens.len(),
-                            ));
-                        }
-                        EventFrame::Error { error, .. } => anyhow::bail!("{error}"),
-                        EventFrame::Started { .. } | EventFrame::Stats(_) => {}
-                    }
-                }
-            };
-            tx.send(run()).unwrap();
-        });
-    }
-    drop(tx);
-
-    let mut ttfts = Vec::new();
-    let mut decode_tokens = 0usize;
-    let mut decode_secs_max = 0.0f64;
-    while let Ok(r) = rx.recv() {
-        let (ttft_ms, decode_secs, toks) = r?;
-        ttfts.push(ttft_ms);
-        decode_tokens += toks;
-        decode_secs_max = decode_secs_max.max(decode_secs);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let decode_tps = if decode_secs_max > 0.0 {
-        decode_tokens as f64 / decode_secs_max
+    let defaults = NativeOptions::default();
+    let batched = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, defaults)?;
+    let per_lane_opts = NativeOptions { batched_decode: false, ..defaults };
+    let per_lane = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, per_lane_opts)?;
+    let batched_serve_speedup = if per_lane.decode_tps > 0.0 {
+        batched.decode_tps / per_lane.decode_tps
     } else {
         0.0
     };
-    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let ttft_mean = ttfts.iter().sum::<f64>() / ttfts.len().max(1) as f64;
-    let ttft_max = ttfts.last().copied().unwrap_or(0.0);
-
-    let _ = sd_tx.send(());
-    server.join().expect("server thread")?;
-    let stats = join.join().expect("engine thread");
 
     println!("streaming ({n_clients} clients, {max_tokens} tokens each):");
-    println!("  TTFT mean {ttft_mean:.1} ms, max {ttft_max:.1} ms");
-    println!("  steady-state decode: {decode_tps:.0} tok/s aggregate");
     println!(
-        "  engine: {} prefill + {} decode tokens over {} steps in {wall:.2}s",
-        stats.prefill_tokens, stats.decode_tokens, stats.steps
+        "  batched lanes:  TTFT mean {:.1} ms, max {:.1} ms; decode {:.0} tok/s aggregate",
+        batched.ttft_ms_mean, batched.ttft_ms_max, batched.decode_tps
+    );
+    println!(
+        "  per-lane:       TTFT mean {:.1} ms, max {:.1} ms; decode {:.0} tok/s aggregate",
+        per_lane.ttft_ms_mean, per_lane.ttft_ms_max, per_lane.decode_tps
+    );
+    println!("  batched-vs-per-lane serve speedup: {batched_serve_speedup:.2}x");
+    println!(
+        "  engine (batched run): {} prefill + {} decode tokens over {} steps in {:.2}s",
+        batched.stats.prefill_tokens,
+        batched.stats.decode_tokens,
+        batched.stats.steps,
+        batched.wall
     );
 
     let j = Json::obj(vec![
@@ -205,18 +246,22 @@ fn main() -> Result<()> {
         ("prefill_chunk", Json::num(chunk as f64)),
         ("prompt_len", Json::num(prompt_len as f64)),
         ("cores", Json::num(kernels::default_threads() as f64)),
+        ("simd_mode", Json::str(defaults.simd.name())),
         ("baseline_prefill_tok_s", Json::num(baseline_tps)),
         ("chunked_prefill_tok_s", Json::num(prefill_tps)),
         ("prefill_speedup", Json::num(speedup)),
         ("n_clients", Json::num(n_clients as f64)),
         ("max_tokens", Json::num(max_tokens as f64)),
-        ("ttft_ms_mean", Json::num(ttft_mean)),
-        ("ttft_ms_max", Json::num(ttft_max)),
-        ("decode_tok_s", Json::num(decode_tps)),
-        ("engine_prefill_tokens", Json::num(stats.prefill_tokens as f64)),
-        ("engine_decode_tokens", Json::num(stats.decode_tokens as f64)),
-        ("engine_steps", Json::num(stats.steps as f64)),
-        ("utilization", Json::num(stats.utilization(batch))),
+        ("ttft_ms_mean", Json::num(batched.ttft_ms_mean)),
+        ("ttft_ms_max", Json::num(batched.ttft_ms_max)),
+        ("decode_tok_s", Json::num(batched.decode_tps)),
+        ("ttft_ms_mean_per_lane", Json::num(per_lane.ttft_ms_mean)),
+        ("decode_tok_s_per_lane", Json::num(per_lane.decode_tps)),
+        ("batched_serve_speedup", Json::num(batched_serve_speedup)),
+        ("engine_prefill_tokens", Json::num(batched.stats.prefill_tokens as f64)),
+        ("engine_decode_tokens", Json::num(batched.stats.decode_tokens as f64)),
+        ("engine_steps", Json::num(batched.stats.steps as f64)),
+        ("utilization", Json::num(batched.stats.utilization(batch))),
     ]);
     std::fs::write(out_path, j.dump())?;
     println!("wrote {out_path}");

@@ -39,7 +39,7 @@ fn sweep_point(
     cfg.window_len = seq;
     let name = format!("bench-{preset}-seq{seq}");
     let backend = NativeBackend::with_preset(&name, cfg, 0x5EED)
-        .with_options(NativeOptions { num_threads: nt });
+        .with_options(NativeOptions::with_threads(nt));
     let mut trainer = Trainer::new(&backend, &name, LrSchedule::constant(1e-3))?;
     let (b, w) = (trainer.batch_size(), trainer.window_len());
     let mut batcher = TbpttBatcher::new(corpus_tokens.to_vec(), b, w)?;

@@ -39,7 +39,11 @@ COMMANDS
 
 --threads N pins the native backend's per-step thread budget (default:
 all cores; also settable via TVQ_NUM_THREADS). Results are bit-identical
-at any thread count.
+at any thread count. --simd auto|off picks the f32 kernel ISA (default
+auto-detects AVX2+FMA; also TVQ_SIMD=0 to force the scalar fallback —
+bits are deterministic per mode, modes agree to kernel tolerance).
+--batched-decode on|off toggles advancing all active decode lanes through
+each layer together (default on; also TVQ_BATCHED_DECODE=0).
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -110,6 +114,24 @@ fn main() -> Result<()> {
         // the knob reaches every executor regardless of which thread
         // builds the backend (the serve engine constructs it off-thread)
         std::env::set_var("TVQ_NUM_THREADS", num_threads.to_string());
+    }
+    // same env-var relay for the other NativeOptions knobs; unknown
+    // values are an error, not a silent fall-through to the default
+    if let Some(simd) = args.opt("simd") {
+        let v = match simd.as_str() {
+            "off" | "0" | "scalar" => "0",
+            "auto" | "on" | "1" => "1",
+            other => bail!("bad value for --simd: '{other}' (want auto|on|off|scalar)"),
+        };
+        std::env::set_var("TVQ_SIMD", v);
+    }
+    if let Some(batched) = args.opt("batched-decode") {
+        let v = match batched.as_str() {
+            "off" | "0" | "false" => "0",
+            "on" | "1" | "true" => "1",
+            other => bail!("bad value for --batched-decode: '{other}' (want on|off)"),
+        };
+        std::env::set_var("TVQ_BATCHED_DECODE", v);
     }
 
     match cmd.as_str() {

@@ -1253,7 +1253,7 @@ fn backward_row(
     }
 }
 
-/// f64 twin of `model::nearest_code_f32`.
+/// f64 twin of `kernels::nearest_code`.
 fn nearest_code(x: &[f64], codebook: &[f64], s: usize, dk: usize) -> usize {
     let mut best = 0;
     let mut best_d = f64::INFINITY;

@@ -6,7 +6,10 @@
 //!
 //! Every matmul-family call site in the native engine (`model`, `step`,
 //! `autodiff`) routes through this module, so loop order, tiling, and
-//! unrolling decisions live in exactly one place. All kernels operate on
+//! unrolling decisions live in exactly one place. The f32 serving-path
+//! call sites dispatch through [`super::simd::SimdMode`], which selects
+//! between these scalar kernels and their AVX2+FMA twins once at executor
+//! init (`TVQ_SIMD=0` forces scalar). All kernels operate on
 //! flat row-major slices and are individually sequential and deterministic:
 //! for a fixed input, the floating-point accumulation order never depends
 //! on the thread count, which is what lets the engine promise bit-identical
@@ -131,8 +134,8 @@ pub fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
 /// while it is reused across all `m` output rows; `a` is read in storage
 /// order; `c` rows accumulate in place. Complexity O(m·k·n). Each output
 /// row's accumulation order is a function of the loop structure only —
-/// never of how rows are distributed over threads — so [`gemm_par`] is
-/// bit-identical to this kernel.
+/// never of how rows are distributed over threads — so the row-banded
+/// [`super::simd::SimdMode::gemm_par`] is bit-identical to this kernel.
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -184,34 +187,26 @@ pub fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
     }
 }
 
-/// Row-parallel [`gemm`]: output rows of `c` are split into contiguous
-/// bands, one work item per band, executed on the pool with `num_threads`
-/// lanes (0 = all cores). Every row is computed by the same sequential
-/// [`gemm_add`] loop regardless of which thread owns its band, so the
-/// result is bit-identical to the sequential kernel at any thread count.
-pub fn gemm_par(
-    num_threads: usize,
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-) {
-    debug_assert_eq!(c.len(), m * n);
-    let nt = effective_threads(num_threads);
-    if nt <= 1 || m <= 1 {
-        gemm(m, k, n, a, b, c);
-        return;
+/// Index of the nearest codebook row (L2) among `s` rows of width `dk`:
+/// one squared-distance pass per row, strict `<` so the first of tied rows
+/// wins. This is the scalar reference for the quantizer scan; the AVX2
+/// twin lives in [`super::simd`]. Complexity O(s·dk).
+pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for c in 0..s {
+        let row = &codebook[c * dk..(c + 1) * dk];
+        let mut d = 0.0f32;
+        for (a, b) in x.iter().zip(row) {
+            let t = a - b;
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
     }
-    let band = m.div_ceil(nt);
-    let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
-    parallel_for_items(nt, &mut items, |_, (ci, cband)| {
-        let i0 = *ci * band;
-        let rows = cband.len() / n;
-        cband.fill(0.0);
-        gemm_add(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, cband);
-    });
+    best
 }
 
 // ---------------------------------------------------------------------------
@@ -321,7 +316,7 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-fn effective_threads(num_threads: usize) -> usize {
+pub(crate) fn effective_threads(num_threads: usize) -> usize {
     if num_threads == 0 {
         default_threads()
     } else {
@@ -561,27 +556,6 @@ mod tests {
         let want = naive_gemm(m, k, n, &a, &b);
         for (&got, &w) in c.iter().zip(&want) {
             assert!((got as f64 - (w + 1.0)).abs() < 1e-4, "{got} vs {}", w + 1.0);
-        }
-    }
-
-    /// gemm_par must be *bit-identical* to gemm at every thread count:
-    /// row bands change ownership, never accumulation order.
-    #[test]
-    fn gemm_par_bit_identical_across_thread_counts() {
-        let mut rng = Rng::new(42);
-        let (m, k, n) = (13, TILE_K + 5, TILE_N + 3);
-        let a = rand_vec(&mut rng, m * k);
-        let b = rand_vec(&mut rng, k * n);
-        let mut base = vec![0.0f32; m * n];
-        gemm(m, k, n, &a, &b, &mut base);
-        for nt in [1, 2, 3, 4, 8] {
-            let mut c = vec![f32::NAN; m * n];
-            gemm_par(nt, m, k, n, &a, &b, &mut c);
-            assert_eq!(
-                base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-                c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-                "gemm_par(nt={nt}) diverged from sequential gemm"
-            );
         }
     }
 

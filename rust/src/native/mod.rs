@@ -25,19 +25,34 @@
 //! …) plus a `tput-*` bench grid comparing the VQ linear path against a
 //! dense quadratic "Full" baseline, so the paper-table harness runs natively.
 //!
-//! The thread budget is a [`NativeOptions`] knob: `NativeBackend::new()`
-//! reads `TVQ_NUM_THREADS` (0/unset = all cores), and
-//! [`NativeBackend::with_options`] pins it explicitly (used by the bench
-//! thread-scaling sweeps and the `--threads` CLI flag).
+//! Runtime knobs live in [`NativeOptions`], resolved once at backend
+//! construction and fixed for every executor it loads:
+//! * `num_threads` — pool budget (`TVQ_NUM_THREADS` / `--threads`; 0 =
+//!   all cores). Bit-identical results at any value.
+//! * `simd` — instruction set for the f32 kernels ([`SimdMode`]; AVX2+FMA
+//!   auto-detected, `TVQ_SIMD=0` forces the scalar fallback). Bits are
+//!   deterministic *per mode*; modes agree to ≤ 1e-5 kernel tolerance.
+//! * `batched_decode` — decode/prefill advance all active lanes through
+//!   each layer together (one GEMM per projection, weights streamed once
+//!   per step; the default) vs. one lane per pool item
+//!   (`TVQ_BATCHED_DECODE=0`).
+//!
+//! [`DecodeSession`] is the allocation-free stateful decode loop on top
+//! of the same model code: weights parsed once, state and scratch arenas
+//! owned by the session, zero heap allocations per steady-state token.
 
 pub mod kernels;
 pub mod layout;
+pub mod simd;
 
 mod autodiff;
 mod model;
+mod session;
 mod step;
 
 pub use layout::Layout;
+pub use session::DecodeSession;
+pub use simd::SimdMode;
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -159,7 +174,8 @@ struct ArtifactEntry {
 }
 
 /// Runtime knobs for the native backend, threaded into every executor it
-/// loads.
+/// loads. Resolved once (env lookups, CPU feature detection) at backend
+/// construction — executors never re-probe mid-flight.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NativeOptions {
     /// Thread budget per step: batch lanes (and, on the dense path, token
@@ -167,16 +183,39 @@ pub struct NativeOptions {
     /// all cores. Results are bit-identical at any value — this is purely
     /// a throughput knob.
     pub num_threads: usize,
+    /// Instruction set for the f32 kernels. Bit-determinism is guaranteed
+    /// *within* a mode; scalar and AVX2+FMA agree to kernel tolerance
+    /// (≤ 1e-5), not bits.
+    pub simd: SimdMode,
+    /// Advance all active decode/prefill lanes through each layer
+    /// together (one GEMM per projection — weights stream from memory
+    /// once per step instead of once per lane). On by default; the
+    /// per-lane fallback remains for comparison benches and as an escape
+    /// hatch. Within either path, results are bit-deterministic.
+    pub batched_decode: bool,
+}
+
+impl NativeOptions {
+    /// Default options with an explicit thread budget (bench sweeps).
+    pub fn with_threads(num_threads: usize) -> Self {
+        Self { num_threads, ..Self::default() }
+    }
 }
 
 impl Default for NativeOptions {
-    /// `TVQ_NUM_THREADS` if set and parseable, else 0 (= all cores).
+    /// `TVQ_NUM_THREADS` if set and parseable, else 0 (= all cores);
+    /// SIMD per `TVQ_SIMD` (unset = auto-detect, `0` = scalar); batched
+    /// decode unless `TVQ_BATCHED_DECODE=0`.
     fn default() -> Self {
         let num_threads = std::env::var("TVQ_NUM_THREADS")
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(0);
-        Self { num_threads }
+        let batched_decode = !matches!(
+            std::env::var("TVQ_BATCHED_DECODE").ok().as_deref(),
+            Some("0") | Some("off") | Some("false")
+        );
+        Self { num_threads, simd: SimdMode::from_env(), batched_decode }
     }
 }
 
@@ -284,6 +323,11 @@ impl NativeBackend {
         })
     }
 
+    /// The options every executor loaded from this backend inherits.
+    pub(crate) fn options(&self) -> NativeOptions {
+        self.options
+    }
+
     /// Config used to initialize `preset` (either a trainable preset name
     /// or a full bench-artifact name).
     fn init_config(&self, preset: &str) -> Result<(&ModelConfig, u64)> {
@@ -317,7 +361,8 @@ impl Backend for NativeBackend {
             spec,
             layout,
             cache: Mutex::new(None),
-            num_threads: self.options.num_threads,
+            scratch: Mutex::new(step::DecodeArena::default()),
+            options: self.options,
         }))
     }
 
@@ -358,10 +403,17 @@ pub struct NativeExecutor {
     spec: ArtifactSpec,
     layout: Layout,
     cache: Mutex<Option<WeightCacheEntry>>,
-    /// Thread budget per step ([`NativeOptions::num_threads`]; 0 = all
-    /// cores). Purely a throughput knob — outputs are bit-identical at
-    /// any value.
-    num_threads: usize,
+    /// Reusable decode scratch (batched arena and/or per-lane arenas):
+    /// taken out for the duration of a step and parked back after, so
+    /// steady-state serving through the executor surface stops
+    /// re-allocating activation matrices every call (a rare concurrent
+    /// second caller just builds fresh arenas rather than blocking).
+    scratch: Mutex<step::DecodeArena>,
+    /// Runtime knobs fixed at executor init (thread budget, SIMD mode,
+    /// decode batching). Thread count and batching are throughput knobs;
+    /// the SIMD mode additionally picks which deterministic bit-stream
+    /// the executor produces (see [`SimdMode`]).
+    options: NativeOptions,
 }
 
 impl NativeExecutor {
@@ -407,8 +459,20 @@ impl Executor for NativeExecutor {
         validate_inputs(&self.name, &self.spec, inputs)?;
         let n_weights = step::weight_tensor_count(&self.layout);
         let weights = self.weights_for(inputs, n_weights)?;
-        let (outputs, new_weights) =
-            step::run_entry(&self.spec.entry, &self.layout, &weights, inputs, self.num_threads)?;
+        // take the parked scratch arenas for this step, park them back
+        // after — decode/prefill reuse them instead of re-allocating per
+        // call (on error the taken arenas are still returned first)
+        let mut arena = std::mem::take(&mut *self.scratch.lock().unwrap());
+        let result = step::run_entry(
+            &self.spec.entry,
+            &self.layout,
+            &weights,
+            inputs,
+            &self.options,
+            &mut arena,
+        );
+        *self.scratch.lock().unwrap() = arena;
+        let (outputs, new_weights) = result?;
         debug_assert_eq!(outputs.len(), self.spec.outputs.len());
         if let Some(nw) = new_weights {
             // train emits fresh params/cb as its first outputs; the bundle

@@ -24,19 +24,39 @@
 //! fully independent: [`State::rows`] splits the state tensors into
 //! disjoint per-row views ([`RowState`]) so the step layer can run one
 //! batch lane per pool thread (`super::kernels`) with bit-identical
-//! results at any thread count. All matmul-family math routes through
-//! [`super::kernels`].
+//! results at any thread count. All matmul-family math dispatches through
+//! [`super::simd::SimdMode`] (scalar or AVX2+FMA, fixed per executor).
+//!
+//! Two token-step drivers share one per-row recurrent stage
+//! (`attn_row_stage`: quantize → cache fold → window write → attention):
+//!
+//! * [`forward_token_row`] — one lane at a time; the pool's per-lane
+//!   work item.
+//! * [`forward_step_batched`] — the B active lanes advance through each
+//!   layer *together*: every projection, the FFN, and the readout run as
+//!   one `[B_active, ·] × W` GEMM, so each weight matrix is streamed from
+//!   memory once per step instead of once per lane. Per-row accumulation
+//!   order in the GEMM kernels is independent of how many rows share the
+//!   call, so a lane's bits never depend on its co-resident lanes.
+//!
+//! All per-token temporaries live in caller-owned scratch arenas
+//! ([`Scratch`] per lane, [`BatchScratch`] per batched stepper): the
+//! steady-state token loop performs **zero heap allocations** (pinned by
+//! `rust/tests/zero_alloc_decode.rs` with a counting global allocator).
 
 use anyhow::{bail, Result};
+
+use std::sync::Arc;
 
 use crate::manifest::ModelConfig;
 use crate::tensor::HostTensor;
 
-use super::kernels::{self, dot, matvec, matvec_add};
+use super::kernels;
 use super::layout::Layout;
+use super::simd::SimdMode;
 
 // ---------------------------------------------------------------------------
-// flat math helpers (non-matmul; matmuls live in `super::kernels`)
+// flat math helpers (non-matmul; matmuls live in `super::kernels`/`simd`)
 // ---------------------------------------------------------------------------
 
 pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
@@ -54,25 +74,6 @@ pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
 #[inline]
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
-}
-
-/// Index of the nearest codebook row (L2) among `s` rows of width `dk`.
-pub(crate) fn nearest_code_f32(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
-    let mut best = 0;
-    let mut best_d = f32::INFINITY;
-    for c in 0..s {
-        let row = &codebook[c * dk..(c + 1) * dk];
-        let mut d = 0.0f32;
-        for (a, b) in x.iter().zip(row) {
-            let t = a - b;
-            d += t * t;
-        }
-        if d < best_d {
-            best_d = d;
-            best = c;
-        }
-    }
-    best
 }
 
 // ---------------------------------------------------------------------------
@@ -166,9 +167,14 @@ impl Params {
 }
 
 /// Per-layer codebooks, each flat [H, S, dk].
+///
+/// Layers are `Arc`-shared so cloning a weight set (the executor's
+/// identity cache, the train step's "full"-attention passthrough) is O(L)
+/// pointer bumps; the EMA update builds fresh buffers for the layers it
+/// rewrites instead of deep-cloning the whole codebook first.
 #[derive(Clone)]
 pub(crate) struct Codebooks {
-    pub layers: Vec<Vec<f32>>,
+    pub layers: Vec<Arc<Vec<f32>>>,
 }
 
 impl Codebooks {
@@ -176,7 +182,12 @@ impl Codebooks {
         if tensors.len() != cfg.n_layers {
             bail!("cb group has {} tensors, expected {}", tensors.len(), cfg.n_layers);
         }
-        Ok(Self { layers: tensors.iter().map(|t| t.as_f32()).collect::<Result<_>>()? })
+        Ok(Self {
+            layers: tensors
+                .iter()
+                .map(|t| t.as_f32().map(Arc::new))
+                .collect::<Result<_>>()?,
+        })
     }
 
     pub fn dump(&self, layout: &Layout) -> Vec<HostTensor> {
@@ -194,6 +205,43 @@ pub(crate) struct LayerState {
     pub win_z: Vec<i32>,   // [B, 2L, H]
     pub cache_u: Vec<f32>, // [B, H, S, dv]
     pub cache_l: Vec<f32>, // [B, H, S]
+}
+
+impl LayerState {
+    /// Mutable view of one batch row of this layer (leading dim `b` is
+    /// the split axis). Allocation-free — the batched serial path builds
+    /// one of these per active lane per layer on the stack.
+    pub fn row(&mut self, row: usize, b: usize) -> RowLayerState<'_> {
+        let (ks, vs) = (self.win_k.len() / b, self.win_v.len() / b);
+        let zs = self.win_z.len() / b;
+        let (us, ls) = (self.cache_u.len() / b, self.cache_l.len() / b);
+        RowLayerState {
+            win_k: &mut self.win_k[row * ks..(row + 1) * ks],
+            win_v: &mut self.win_v[row * vs..(row + 1) * vs],
+            win_z: &mut self.win_z[row * zs..(row + 1) * zs],
+            cache_u: &mut self.cache_u[row * us..(row + 1) * us],
+            cache_l: &mut self.cache_l[row * ls..(row + 1) * ls],
+        }
+    }
+
+    /// All `b` disjoint row views at once (the parallel batched path's
+    /// fan-out input; allocates the Vec, so only used when `nt > 1`).
+    pub fn rows(&mut self, b: usize) -> Vec<RowLayerState<'_>> {
+        let mut wk = self.win_k.chunks_mut(self.win_k.len() / b);
+        let mut wv = self.win_v.chunks_mut(self.win_v.len() / b);
+        let mut wz = self.win_z.chunks_mut(self.win_z.len() / b);
+        let mut cu = self.cache_u.chunks_mut(self.cache_u.len() / b);
+        let mut cl = self.cache_l.chunks_mut(self.cache_l.len() / b);
+        (0..b)
+            .map(|_| RowLayerState {
+                win_k: wk.next().expect("win_k rows"),
+                win_v: wv.next().expect("win_v rows"),
+                win_z: wz.next().expect("win_z rows"),
+                cache_u: cu.next().expect("cache_u rows"),
+                cache_l: cl.next().expect("cache_l rows"),
+            })
+            .collect()
+    }
 }
 
 /// Decode / TBPTT-carry state (group "state"/"carry"), all leaves [B, ...].
@@ -238,6 +286,24 @@ impl State {
             });
         }
         Ok(Self { pos, layers })
+    }
+
+    /// Fresh all-zeros decode state for `cfg` (all-zeros == "new
+    /// sequence", the same convention as `StateBundle::zeros_for`).
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        let b = cfg.batch_size;
+        let w2l = 2 * cfg.block_len;
+        let (h, s) = (cfg.n_heads, cfg.n_code);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerState {
+                win_k: vec![0.0; b * w2l * h * cfg.d_k],
+                win_v: vec![0.0; b * w2l * h * cfg.d_v],
+                win_z: vec![0; b * w2l * h],
+                cache_u: vec![0.0; b * h * s * cfg.d_v],
+                cache_l: vec![0.0; b * h * s],
+            })
+            .collect();
+        Self { pos: vec![0; b], layers }
     }
 
     /// Split into per-row views along the leading batch dimension. Each
@@ -340,30 +406,200 @@ impl TrainAccum {
 }
 
 // ---------------------------------------------------------------------------
+// scratch arenas (per-token temporaries, owned by the caller)
+// ---------------------------------------------------------------------------
+
+/// Per-lane scratch: every temporary one token step needs, preallocated
+/// once and reused forever, so the steady-state token loop never touches
+/// the heap. Ownership rule: one `Scratch` per concurrently stepping lane
+/// (each pool work item gets its own; they are never shared or aliased).
+pub(crate) struct Scratch {
+    pub x: Vec<f32>,    // [dm] residual stream
+    pub h: Vec<f32>,    // [dm] normed hidden
+    pub q: Vec<f32>,    // [H*dk]
+    pub k: Vec<f32>,    // [H*dk]
+    pub v: Vec<f32>,    // [H*dv]
+    pub attn: Vec<f32>, // [H*dv]
+    pub zs: Vec<usize>, // [H] shortcodes
+    pub g: Vec<f32>,    // [dff]
+    pub u1: Vec<f32>,   // [dff]
+    /// Attention score buffer; capacity S + 2L bounds every head's count.
+    pub scores: Vec<f32>,
+    /// Value source per score: offset into cache_u (true) or win_v (false).
+    pub vals: Vec<(usize, bool)>,
+    pub y: Vec<f32>,      // [dm] final normed hidden
+    pub logits: Vec<f32>, // [V]
+}
+
+impl Scratch {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let dff = 2 * cfg.d_model;
+        let cap = cfg.n_code + 2 * cfg.block_len;
+        Self {
+            x: vec![0.0; cfg.d_model],
+            h: vec![0.0; cfg.d_model],
+            q: vec![0.0; cfg.n_heads * cfg.d_k],
+            k: vec![0.0; cfg.n_heads * cfg.d_k],
+            v: vec![0.0; cfg.n_heads * cfg.d_v],
+            attn: vec![0.0; cfg.n_heads * cfg.d_v],
+            zs: vec![0; cfg.n_heads],
+            g: vec![0.0; dff],
+            u1: vec![0.0; dff],
+            scores: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+            y: vec![0.0; cfg.d_model],
+            logits: vec![0.0; cfg.vocab_size],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // the per-token step (VQ attention path)
 // ---------------------------------------------------------------------------
 
-/// One decode step for one batch row view: feeds `token`, advances the row
-/// state, returns `(logits [V], y [dm])` where `y` is the final normed
-/// hidden. This is the unit the pool parallelizes over — it touches only
-/// its own [`RowState`] plus shared read-only weights.
-pub(crate) fn forward_token_row(
+/// The per-row recurrent stage of one layer's token step, shared verbatim
+/// by the per-lane and batched drivers — which is what keeps decode,
+/// prefill, and batched decode bit-identical per row: quantize the keys,
+/// fold block n-2 into the compressive cache at block boundaries
+/// (Remark 3.9), write the current token's window slot, and accumulate the
+/// attention output (cache scores + exact 2L window, Thm 3.7). Touches
+/// only this row's layer state plus read-only weights; `scores`/`vals`
+/// stay within their preallocated S + 2L capacity.
+#[allow(clippy::too_many_arguments)]
+fn attn_row_stage(
     cfg: &ModelConfig,
-    p: &Params,
-    cb: &Codebooks,
-    rst: &mut RowState<'_>,
-    token: i32,
-    accum: Option<&mut TrainAccum>,
-) -> (Vec<f32>, Vec<f32>) {
-    let (logits, y) = forward_token_row_opts(cfg, p, cb, rst, token, accum, true);
-    (logits.expect("want_logits=true"), y)
+    lp: &LayerParams,
+    lcb: &[f32],
+    lst: &mut RowLayerState<'_>,
+    layer_ix: usize,
+    pos: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    attn: &mut [f32],
+    zs: &mut [usize],
+    scores: &mut Vec<f32>,
+    vals: &mut Vec<(usize, bool)>,
+    mut accum: Option<&mut TrainAccum>,
+    simd: SimdMode,
+) {
+    let h_n = cfg.n_heads;
+    let dk = cfg.d_k;
+    let dv = cfg.d_v;
+    let s = cfg.n_code;
+    let l = cfg.block_len;
+    let w2l = 2 * l;
+    let n = pos / l;
+    let li = pos % l;
+
+    // quantize keys per head
+    for hd in 0..h_n {
+        let kh = &k[hd * dk..(hd + 1) * dk];
+        let head_cb = &lcb[hd * s * dk..(hd + 1) * s * dk];
+        let z = simd.nearest_code(kh, head_cb, s, dk);
+        zs[hd] = z;
+        if let Some(acc) = accum.as_deref_mut() {
+            let k_hat = &head_cb[z * dk..(z + 1) * dk];
+            let mut d2 = 0.0f64;
+            for (a, b) in kh.iter().zip(k_hat) {
+                d2 += ((a - b) as f64).powi(2);
+            }
+            acc.commit_sum += d2;
+            acc.commit_n += 1.0;
+            acc.code_counts[layer_ix][hd * s + z] += 1.0;
+            let sums = &mut acc.key_sums[layer_ix][(hd * s + z) * dk..(hd * s + z + 1) * dk];
+            for (sv, &kv) in sums.iter_mut().zip(kh) {
+                *sv += kv as f64;
+            }
+        }
+    }
+
+    // --- roll block n-2 into the compressive cache (Remark 3.9): it
+    // leaves the bias band exactly when block n begins, and its window
+    // slots are about to be overwritten by block n's tokens.
+    if cfg.use_cache && li == 0 && n >= 2 {
+        let start = (n - 2) * l;
+        for j in start..start + l {
+            let slot = j % w2l;
+            for hd in 0..h_n {
+                let win_ix = slot * h_n + hd;
+                let zc = lst.win_z[win_ix].max(0) as usize % s;
+                let cl_ix = hd * s + zc;
+                let cnt = lst.cache_l[cl_ix] + 1.0;
+                let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
+                let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
+                // incremental running mean (Remark 3.9)
+                for (uu, &vv) in u.iter_mut().zip(val) {
+                    *uu += (vv - *uu) / cnt;
+                }
+                lst.cache_l[cl_ix] = cnt;
+            }
+        }
+    }
+
+    // --- write the current token into its window slot ------------------
+    let slot = pos % w2l;
+    for hd in 0..h_n {
+        let z = zs[hd];
+        let k_hat = &lcb[(hd * s + z) * dk..(hd * s + z + 1) * dk];
+        let win_ix = slot * h_n + hd;
+        lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(k_hat);
+        lst.win_v[win_ix * dv..(win_ix + 1) * dv].copy_from_slice(&v[hd * dv..(hd + 1) * dv]);
+        lst.win_z[win_ix] = z as i32;
+    }
+
+    // --- attention: cache scores (codebook + log counts) + exact window
+    let lo = if n == 0 { 0 } else { (n - 1) * l };
+    attn.fill(0.0);
+    for hd in 0..h_n {
+        scores.clear();
+        vals.clear();
+        let qh = &q[hd * dk..(hd + 1) * dk];
+        if cfg.use_cache {
+            for c in 0..s {
+                let cl_ix = hd * s + c;
+                let cl = lst.cache_l[cl_ix];
+                if cl > 0.0 {
+                    let crow = &lcb[(hd * s + c) * dk..(hd * s + c + 1) * dk];
+                    scores.push(simd.dot(qh, crow) + cl.ln());
+                    vals.push((cl_ix * dv, true));
+                }
+            }
+        }
+        for j in lo..=pos {
+            let jslot = j % w2l;
+            let win_ix = jslot * h_n + hd;
+            let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
+            scores.push(simd.dot(qh, kw) + lp.bias[hd * w2l + (pos - j)]);
+            vals.push((win_ix * dv, false));
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut zsum = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - m).exp();
+            zsum += *sc;
+        }
+        let out_h = &mut attn[hd * dv..(hd + 1) * dv];
+        for (&e, &(off, from_cache)) in scores.iter().zip(vals.iter()) {
+            let w = e / zsum;
+            let val = if from_cache {
+                &lst.cache_u[off..off + dv]
+            } else {
+                &lst.win_v[off..off + dv]
+            };
+            for (o, &vv) in out_h.iter_mut().zip(val) {
+                *o += w * vv;
+            }
+        }
+    }
 }
 
-/// [`forward_token_row`] with the readout made optional: prompt-ingestion
-/// (prefill) advances the recurrent state for every token but only the
-/// last one needs logits, so skipping the final RMSNorm + `wout` matvec
-/// per intermediate token is pure savings. With `want_logits=false` the
-/// returned logits are `None` and `y` is empty.
+/// One decode step for one batch row view: feeds `token`, advances the
+/// row state. With `want_logits`, `sc.logits` (bout + readout) and `sc.y`
+/// (final normed hidden) hold the results on return; without it the
+/// readout is skipped entirely (prompt ingestion discards intermediate
+/// logits anyway). Allocation-free: all temporaries live in `sc`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_token_row_opts(
     cfg: &ModelConfig,
     p: &Params,
@@ -372,172 +608,81 @@ pub(crate) fn forward_token_row_opts(
     token: i32,
     mut accum: Option<&mut TrainAccum>,
     want_logits: bool,
-) -> (Option<Vec<f32>>, Vec<f32>) {
+    sc: &mut Scratch,
+    simd: SimdMode,
+) {
     debug_assert_ne!(cfg.attn_type, "full", "dense path uses forward_window_dense");
     let dm = cfg.d_model;
-    let h_n = cfg.n_heads;
-    let dk = cfg.d_k;
-    let dv = cfg.d_v;
-    let s = cfg.n_code;
-    let l = cfg.block_len;
-    let w2l = 2 * l;
     let v_sz = cfg.vocab_size;
-    let dff = 2 * dm;
-
     let pos = (*rst.pos).max(0) as usize;
-    let n = pos / l;
-    let li = pos % l;
     let tok = (token.max(0) as usize).min(v_sz - 1);
+    let q_scale = 1.0 / (cfg.d_k as f32).sqrt();
 
-    let mut x = p.embed[tok * dm..(tok + 1) * dm].to_vec();
-    let mut h = vec![0.0f32; dm];
-    let mut q = vec![0.0f32; h_n * dk];
-    let mut k = vec![0.0f32; h_n * dk];
-    let mut v = vec![0.0f32; h_n * dv];
-    let mut attn = vec![0.0f32; h_n * dv];
-    let mut zs = vec![0usize; h_n];
-    let mut g = vec![0.0f32; dff];
-    let mut u1 = vec![0.0f32; dff];
-    let q_scale = 1.0 / (dk as f32).sqrt();
-
+    sc.x.copy_from_slice(&p.embed[tok * dm..(tok + 1) * dm]);
     for (layer_ix, (lp, lst)) in p.layers.iter().zip(rst.layers.iter_mut()).enumerate() {
-        let lcb = &cb.layers[layer_ix];
-        rmsnorm(&x, &lp.attn_norm, &mut h);
-        matvec(&lp.wq, &h, &mut q);
-        matvec(&lp.wk, &h, &mut k);
-        matvec(&lp.wv, &h, &mut v);
-        for qv in q.iter_mut() {
+        let lcb = &cb.layers[layer_ix][..];
+        rmsnorm(&sc.x, &lp.attn_norm, &mut sc.h);
+        simd.matvec(&lp.wq, &sc.h, &mut sc.q);
+        simd.matvec(&lp.wk, &sc.h, &mut sc.k);
+        simd.matvec(&lp.wv, &sc.h, &mut sc.v);
+        for qv in sc.q.iter_mut() {
             *qv *= q_scale;
         }
-        // quantize keys per head
-        for hd in 0..h_n {
-            let kh = &k[hd * dk..(hd + 1) * dk];
-            let head_cb = &lcb[hd * s * dk..(hd + 1) * s * dk];
-            let z = nearest_code_f32(kh, head_cb, s, dk);
-            zs[hd] = z;
-            if let Some(acc) = accum.as_deref_mut() {
-                let k_hat = &head_cb[z * dk..(z + 1) * dk];
-                let mut d2 = 0.0f64;
-                for (a, b) in kh.iter().zip(k_hat) {
-                    d2 += ((a - b) as f64).powi(2);
-                }
-                acc.commit_sum += d2;
-                acc.commit_n += 1.0;
-                acc.code_counts[layer_ix][hd * s + z] += 1.0;
-                let sums = &mut acc.key_sums[layer_ix][(hd * s + z) * dk..(hd * s + z + 1) * dk];
-                for (sv, &kv) in sums.iter_mut().zip(kh) {
-                    *sv += kv as f64;
-                }
-            }
-        }
-
-        // --- roll block n-2 into the compressive cache (Remark 3.9): it
-        // leaves the bias band exactly when block n begins, and its window
-        // slots are about to be overwritten by block n's tokens.
-        if cfg.use_cache && li == 0 && n >= 2 {
-            let start = (n - 2) * l;
-            for j in start..start + l {
-                let slot = j % w2l;
-                for hd in 0..h_n {
-                    let win_ix = slot * h_n + hd;
-                    let zc = lst.win_z[win_ix].max(0) as usize % s;
-                    let cl_ix = hd * s + zc;
-                    let cnt = lst.cache_l[cl_ix] + 1.0;
-                    let u = &mut lst.cache_u[cl_ix * dv..(cl_ix + 1) * dv];
-                    let val = &lst.win_v[win_ix * dv..(win_ix + 1) * dv];
-                    // incremental running mean (Remark 3.9)
-                    for (uu, &vv) in u.iter_mut().zip(val) {
-                        *uu += (vv - *uu) / cnt;
-                    }
-                    lst.cache_l[cl_ix] = cnt;
-                }
-            }
-        }
-
-        // --- write the current token into its window slot ------------------
-        let slot = pos % w2l;
-        for hd in 0..h_n {
-            let z = zs[hd];
-            let k_hat = &lcb[(hd * s + z) * dk..(hd * s + z + 1) * dk];
-            let win_ix = slot * h_n + hd;
-            lst.win_k[win_ix * dk..(win_ix + 1) * dk].copy_from_slice(k_hat);
-            lst.win_v[win_ix * dv..(win_ix + 1) * dv]
-                .copy_from_slice(&v[hd * dv..(hd + 1) * dv]);
-            lst.win_z[win_ix] = z as i32;
-        }
-
-        // --- attention: cache scores (codebook + log counts) + exact window
-        let lo = if n == 0 { 0 } else { (n - 1) * l };
-        attn.fill(0.0);
-        let mut scores: Vec<f32> = Vec::with_capacity(s + w2l);
-        // value source: offset into cache_u (from_cache) or win_v
-        let mut vals: Vec<(usize, bool)> = Vec::with_capacity(s + w2l);
-        for hd in 0..h_n {
-            scores.clear();
-            vals.clear();
-            let qh = &q[hd * dk..(hd + 1) * dk];
-            if cfg.use_cache {
-                for c in 0..s {
-                    let cl_ix = hd * s + c;
-                    let cl = lst.cache_l[cl_ix];
-                    if cl > 0.0 {
-                        let crow = &lcb[(hd * s + c) * dk..(hd * s + c + 1) * dk];
-                        scores.push(dot(qh, crow) + cl.ln());
-                        vals.push((cl_ix * dv, true));
-                    }
-                }
-            }
-            for j in lo..=pos {
-                let jslot = j % w2l;
-                let win_ix = jslot * h_n + hd;
-                let kw = &lst.win_k[win_ix * dk..(win_ix + 1) * dk];
-                scores.push(dot(qh, kw) + lp.bias[hd * w2l + (pos - j)]);
-                vals.push((win_ix * dv, false));
-            }
-            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut zsum = 0.0f32;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - m).exp();
-                zsum += *sc;
-            }
-            let out_h = &mut attn[hd * dv..(hd + 1) * dv];
-            for (&e, &(off, from_cache)) in scores.iter().zip(&vals) {
-                let w = e / zsum;
-                let val = if from_cache {
-                    &lst.cache_u[off..off + dv]
-                } else {
-                    &lst.win_v[off..off + dv]
-                };
-                for (o, &vv) in out_h.iter_mut().zip(val) {
-                    *o += w * vv;
-                }
-            }
-        }
-        matvec_add(&lp.wo, &attn, &mut x);
+        attn_row_stage(
+            cfg,
+            lp,
+            lcb,
+            lst,
+            layer_ix,
+            pos,
+            &sc.q,
+            &sc.k,
+            &sc.v,
+            &mut sc.attn,
+            &mut sc.zs,
+            &mut sc.scores,
+            &mut sc.vals,
+            accum.as_deref_mut(),
+            simd,
+        );
+        simd.matvec_add(&lp.wo, &sc.attn, &mut sc.x);
 
         // --- gated FFN ------------------------------------------------------
-        rmsnorm(&x, &lp.ffn_norm, &mut h);
-        matvec(&lp.wg, &h, &mut g);
-        matvec(&lp.w1, &h, &mut u1);
-        for (gv, uv) in g.iter_mut().zip(&u1) {
+        rmsnorm(&sc.x, &lp.ffn_norm, &mut sc.h);
+        simd.matvec(&lp.wg, &sc.h, &mut sc.g);
+        simd.matvec(&lp.w1, &sc.h, &mut sc.u1);
+        for (gv, uv) in sc.g.iter_mut().zip(&sc.u1) {
             *gv = silu(*gv) * uv;
         }
-        matvec_add(&lp.w2, &g, &mut x);
+        simd.matvec_add(&lp.w2, &sc.g, &mut sc.x);
     }
 
     *rst.pos = (pos + 1) as i32;
-    if !want_logits {
-        return (None, Vec::new());
+    if want_logits {
+        rmsnorm(&sc.x, &p.out_norm, &mut sc.y);
+        sc.logits.copy_from_slice(&p.bout);
+        simd.matvec_add(&p.wout, &sc.y, &mut sc.logits);
     }
-    let mut y = vec![0.0f32; dm];
-    rmsnorm(&x, &p.out_norm, &mut y);
-    let mut logits = p.bout.clone();
-    matvec_add(&p.wout, &y, &mut logits);
-    (Some(logits), y)
+}
+
+/// [`forward_token_row_opts`] with the readout always on.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_token_row(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    rst: &mut RowState<'_>,
+    token: i32,
+    accum: Option<&mut TrainAccum>,
+    sc: &mut Scratch,
+    simd: SimdMode,
+) {
+    forward_token_row_opts(cfg, p, cb, rst, token, accum, true, sc, simd);
 }
 
 /// Whole-state convenience wrapper around [`forward_token_row`] for tests
-/// and oracles: splits `st` into row views and advances `row` only.
+/// and oracles: splits `st` into row views, advances `row` only, returns
+/// owned `(logits, y)`.
 #[cfg_attr(not(test), allow(dead_code))]
 pub(crate) fn forward_token(
     cfg: &ModelConfig,
@@ -548,8 +693,318 @@ pub(crate) fn forward_token(
     token: i32,
     accum: Option<&mut TrainAccum>,
 ) -> (Vec<f32>, Vec<f32>) {
+    let mut sc = Scratch::new(cfg);
     let mut rows = st.rows();
-    forward_token_row(cfg, p, cb, &mut rows[row], token, accum)
+    forward_token_row(cfg, p, cb, &mut rows[row], token, accum, &mut sc, SimdMode::from_env());
+    (sc.logits.clone(), sc.y.clone())
+}
+
+/// One full-batch token step on the per-lane driver: every row advances
+/// through [`forward_token_row`] as its own (possibly pooled) work item,
+/// writing its logits row into `logits` (`[B, V]`). `scratch` holds one
+/// arena per row and is reused across calls — the shared implementation
+/// behind the executor's per-lane fallback and `DecodeSession`'s per-lane
+/// mode, so the two surfaces cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_step_per_lane(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    st: &mut State,
+    tokens: &[i32],
+    logits: &mut [f32],
+    scratch: &mut [Scratch],
+    nt: usize,
+    simd: SimdMode,
+) {
+    let v = cfg.vocab_size;
+    let mut work: Vec<(RowState<'_>, &mut [f32], &mut Scratch)> = st
+        .rows()
+        .into_iter()
+        .zip(logits.chunks_mut(v).zip(scratch.iter_mut()))
+        .map(|(rst, (out, sc))| (rst, out, sc))
+        .collect();
+    kernels::parallel_for_items(nt, &mut work, |row, (rst, out, sc)| {
+        forward_token_row(cfg, p, cb, rst, tokens[row], None, sc, simd);
+        out.copy_from_slice(&sc.logits);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the batched token step: B active lanes through each layer together
+// ---------------------------------------------------------------------------
+
+/// One active lane of a batched step: which slot, which token, and
+/// whether this lane needs logits after the step.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LaneStep {
+    pub slot: usize,
+    pub token: i32,
+    pub want_logits: bool,
+}
+
+/// Per-lane temporaries of the batched stepper's recurrent stage.
+pub(crate) struct RowTemp {
+    zs: Vec<usize>,
+    scores: Vec<f32>,
+    vals: Vec<(usize, bool)>,
+}
+
+impl RowTemp {
+    fn new(cfg: &ModelConfig) -> Self {
+        let cap = cfg.n_code + 2 * cfg.block_len;
+        Self {
+            zs: vec![0; cfg.n_heads],
+            scores: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+}
+
+/// Scratch arena for [`forward_step_batched`]: activation matrices sized
+/// for the full batch (`[B, ·]`, row-compacted to the active lanes each
+/// step) plus per-lane recurrent temporaries. Ownership rule: one
+/// `BatchScratch` per batched stepper (executor call or `DecodeSession`);
+/// the stepper hands disjoint rows of it to pool threads, never whole
+/// aliases.
+pub(crate) struct BatchScratch {
+    pos: Vec<usize>,  // [m] positions of the active lanes
+    xs: Vec<f32>,     // [B, dm] residual stream
+    hs: Vec<f32>,     // [B, dm] normed hidden
+    qs: Vec<f32>,     // [B, H*dk]
+    ks: Vec<f32>,     // [B, H*dk]
+    vs: Vec<f32>,     // [B, H*dv]
+    attns: Vec<f32>,  // [B, H*dv]
+    gs: Vec<f32>,     // [B, dff]
+    u1s: Vec<f32>,    // [B, dff]
+    ys: Vec<f32>,     // [B, dm] readout inputs (compacted to want rows)
+    lg: Vec<f32>,     // [B, V] readout outputs (compacted)
+    sel: Vec<usize>,  // lane indices wanting logits
+    row: Vec<RowTemp>,
+}
+
+impl BatchScratch {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let b = cfg.batch_size;
+        let dm = cfg.d_model;
+        let dff = 2 * dm;
+        let (hdk, hdv) = (cfg.n_heads * cfg.d_k, cfg.n_heads * cfg.d_v);
+        Self {
+            pos: Vec::with_capacity(b),
+            xs: vec![0.0; b * dm],
+            hs: vec![0.0; b * dm],
+            qs: vec![0.0; b * hdk],
+            ks: vec![0.0; b * hdk],
+            vs: vec![0.0; b * hdv],
+            attns: vec![0.0; b * hdv],
+            gs: vec![0.0; b * dff],
+            u1s: vec![0.0; b * dff],
+            ys: vec![0.0; b * dm],
+            lg: vec![0.0; b * cfg.vocab_size],
+            sel: Vec::with_capacity(b),
+            row: (0..b).map(|_| RowTemp::new(cfg)).collect(),
+        }
+    }
+}
+
+/// One per-row work item of the batched stepper's parallel recurrent
+/// stage: a disjoint row view of the layer state plus this lane's rows of
+/// the activation matrices.
+struct AttnItem<'a> {
+    rls: RowLayerState<'a>,
+    pos: usize,
+    q: &'a [f32],
+    k: &'a [f32],
+    v: &'a [f32],
+    attn: &'a mut [f32],
+    temp: &'a mut RowTemp,
+}
+
+/// One token step for the `lanes` (strictly increasing `slot`s) of `st`,
+/// advancing all of them through each layer *together*: projections, the
+/// gated FFN, and the readout run as `[m, ·] × W` GEMMs over the active
+/// lanes, so every weight matrix streams from memory once per step
+/// instead of once per lane. The recurrent stage (quantize / cache fold /
+/// window write / attention) runs per row via [`attn_row_stage`] — the
+/// same code the per-lane driver uses — and the GEMM kernels' per-row
+/// accumulation order is independent of `m`, so each lane's output is
+/// bit-identical whichever co-resident lanes share the step (decode ≡
+/// prefill ≡ single-lane, oracle-tested in `super`'s tests).
+///
+/// Logits rows of `logits_out` (`[B, V]`) are written only for lanes with
+/// `want_logits`; other rows are untouched. Inactive slots' state passes
+/// through bit-untouched. With `nt <= 1` the step performs zero heap
+/// allocations; with `nt > 1` lanes and GEMM row bands fan out on the
+/// pool (bit-identical results, per-call dispatch allocations).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_step_batched(
+    cfg: &ModelConfig,
+    p: &Params,
+    cb: &Codebooks,
+    st: &mut State,
+    lanes: &[LaneStep],
+    logits_out: &mut [f32],
+    bs: &mut BatchScratch,
+    nt: usize,
+    simd: SimdMode,
+) {
+    debug_assert_ne!(cfg.attn_type, "full", "dense path uses forward_window_dense");
+    let m = lanes.len();
+    if m == 0 {
+        return;
+    }
+    let b_total = st.pos.len();
+    let dm = cfg.d_model;
+    let v_sz = cfg.vocab_size;
+    let dff = 2 * dm;
+    let (hdk, hdv) = (cfg.n_heads * cfg.d_k, cfg.n_heads * cfg.d_v);
+    let q_scale = 1.0 / (cfg.d_k as f32).sqrt();
+    debug_assert_eq!(logits_out.len(), b_total * v_sz);
+    let par = kernels::effective_threads(nt) > 1 && m > 1;
+
+    // gather positions + embed the tokens into the compacted residual rows
+    bs.pos.clear();
+    for (i, lane) in lanes.iter().enumerate() {
+        debug_assert!(lane.slot < b_total, "lane slot out of range");
+        debug_assert!(i == 0 || lanes[i - 1].slot < lane.slot, "lanes not ascending");
+        bs.pos.push(st.pos[lane.slot].max(0) as usize);
+        let tok = (lane.token.max(0) as usize).min(v_sz - 1);
+        bs.xs[i * dm..(i + 1) * dm].copy_from_slice(&p.embed[tok * dm..(tok + 1) * dm]);
+    }
+
+    for (layer_ix, lp) in p.layers.iter().enumerate() {
+        let lcb = &cb.layers[layer_ix][..];
+        {
+            let (xs, hs) = (&bs.xs, &mut bs.hs);
+            for i in 0..m {
+                rmsnorm(&xs[i * dm..(i + 1) * dm], &lp.attn_norm, &mut hs[i * dm..(i + 1) * dm]);
+            }
+        }
+        simd.gemm_par(nt, m, dm, hdk, &bs.hs[..m * dm], &lp.wq, &mut bs.qs[..m * hdk]);
+        simd.gemm_par(nt, m, dm, hdk, &bs.hs[..m * dm], &lp.wk, &mut bs.ks[..m * hdk]);
+        simd.gemm_par(nt, m, dm, hdv, &bs.hs[..m * dm], &lp.wv, &mut bs.vs[..m * hdv]);
+        for qv in bs.qs[..m * hdk].iter_mut() {
+            *qv *= q_scale;
+        }
+
+        // recurrent stage, one row at a time (serial: allocation-free;
+        // parallel: one pool work item per active lane)
+        let lst = &mut st.layers[layer_ix];
+        if !par {
+            for (i, lane) in lanes.iter().enumerate() {
+                let pos = bs.pos[i];
+                let mut rls = lst.row(lane.slot, b_total);
+                let rt = &mut bs.row[i];
+                attn_row_stage(
+                    cfg,
+                    lp,
+                    lcb,
+                    &mut rls,
+                    layer_ix,
+                    pos,
+                    &bs.qs[i * hdk..(i + 1) * hdk],
+                    &bs.ks[i * hdk..(i + 1) * hdk],
+                    &bs.vs[i * hdv..(i + 1) * hdv],
+                    &mut bs.attns[i * hdv..(i + 1) * hdv],
+                    &mut rt.zs,
+                    &mut rt.scores,
+                    &mut rt.vals,
+                    None,
+                    simd,
+                );
+            }
+        } else {
+            let mut view_it = lst.rows(b_total).into_iter().enumerate();
+            let (qs, ks, vs) = (&bs.qs[..m * hdk], &bs.ks[..m * hdk], &bs.vs[..m * hdv]);
+            let mut attn_it = bs.attns[..m * hdv].chunks_mut(hdv);
+            let mut temp_it = bs.row[..m].iter_mut();
+            let mut items: Vec<AttnItem<'_>> = Vec::with_capacity(m);
+            for (i, lane) in lanes.iter().enumerate() {
+                let rls = loop {
+                    let (ix, v) = view_it.next().expect("row view for active slot");
+                    if ix == lane.slot {
+                        break v;
+                    }
+                };
+                items.push(AttnItem {
+                    rls,
+                    pos: bs.pos[i],
+                    q: &qs[i * hdk..(i + 1) * hdk],
+                    k: &ks[i * hdk..(i + 1) * hdk],
+                    v: &vs[i * hdv..(i + 1) * hdv],
+                    attn: attn_it.next().expect("attn row"),
+                    temp: temp_it.next().expect("row temp"),
+                });
+            }
+            kernels::parallel_for_items(nt, &mut items, |_, it| {
+                attn_row_stage(
+                    cfg,
+                    lp,
+                    lcb,
+                    &mut it.rls,
+                    layer_ix,
+                    it.pos,
+                    it.q,
+                    it.k,
+                    it.v,
+                    it.attn,
+                    &mut it.temp.zs,
+                    &mut it.temp.scores,
+                    &mut it.temp.vals,
+                    None,
+                    simd,
+                );
+            });
+        }
+        simd.gemm_add_par(nt, m, hdv, dm, &bs.attns[..m * hdv], &lp.wo, &mut bs.xs[..m * dm]);
+
+        // --- gated FFN, all active lanes at once ---------------------------
+        {
+            let (xs, hs) = (&bs.xs, &mut bs.hs);
+            for i in 0..m {
+                rmsnorm(&xs[i * dm..(i + 1) * dm], &lp.ffn_norm, &mut hs[i * dm..(i + 1) * dm]);
+            }
+        }
+        simd.gemm_par(nt, m, dm, dff, &bs.hs[..m * dm], &lp.wg, &mut bs.gs[..m * dff]);
+        simd.gemm_par(nt, m, dm, dff, &bs.hs[..m * dm], &lp.w1, &mut bs.u1s[..m * dff]);
+        for (gv, &uv) in bs.gs[..m * dff].iter_mut().zip(&bs.u1s[..m * dff]) {
+            *gv = silu(*gv) * uv;
+        }
+        simd.gemm_add_par(nt, m, dff, dm, &bs.gs[..m * dff], &lp.w2, &mut bs.xs[..m * dm]);
+    }
+
+    for (i, lane) in lanes.iter().enumerate() {
+        st.pos[lane.slot] = (bs.pos[i] + 1) as i32;
+    }
+
+    // --- readout, only for the lanes that asked ---------------------------
+    bs.sel.clear();
+    for (i, lane) in lanes.iter().enumerate() {
+        if lane.want_logits {
+            bs.sel.push(i);
+        }
+    }
+    if bs.sel.is_empty() {
+        return;
+    }
+    let nw = bs.sel.len();
+    {
+        let (xs, ys) = (&bs.xs, &mut bs.ys);
+        for (j, &i) in bs.sel.iter().enumerate() {
+            rmsnorm(&xs[i * dm..(i + 1) * dm], &p.out_norm, &mut ys[j * dm..(j + 1) * dm]);
+        }
+    }
+    simd.gemm_par(nt, nw, dm, v_sz, &bs.ys[..nw * dm], &p.wout, &mut bs.lg[..nw * v_sz]);
+    for (j, &i) in bs.sel.iter().enumerate() {
+        let slot = lanes[i].slot;
+        let dst = &mut logits_out[slot * v_sz..(slot + 1) * v_sz];
+        // Σ + bout (the per-lane path seeds its accumulator with bout
+        // instead, so the two drivers agree to tolerance, not bits; each
+        // driver's own order is fixed)
+        for ((d, &t), &bo) in dst.iter_mut().zip(&bs.lg[j * v_sz..(j + 1) * v_sz]).zip(&p.bout) {
+            *d = t + bo;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -561,15 +1016,17 @@ pub(crate) fn forward_token(
 /// per-token `(logits, y)` for one batch row. O(T^2) by construction.
 ///
 /// All projections/FFN/readout run as whole-window blocked GEMMs
-/// ([`kernels::gemm_par`], row-parallel over tokens) and the per-token
+/// ([`SimdMode::gemm_par`], row-parallel over tokens) and the per-token
 /// causal attention fans out one token per pool work item — queries only
 /// read the precomputed `ks`/`vs`, so tokens are independent. `nt` is the
-/// thread budget (0 = all cores); results are identical at any `nt`.
+/// thread budget (0 = all cores); results are identical at any `nt`
+/// within a fixed `simd` mode.
 pub(crate) fn forward_window_dense(
     cfg: &ModelConfig,
     p: &Params,
     tokens: &[i32],
     nt: usize,
+    simd: SimdMode,
 ) -> Vec<(Vec<f32>, Vec<f32>)> {
     let dm = cfg.d_model;
     let h_n = cfg.n_heads;
@@ -601,9 +1058,9 @@ pub(crate) fn forward_window_dense(
         for t in 0..t_len {
             rmsnorm(&xs[t * dm..(t + 1) * dm], &lp.attn_norm, &mut hs[t * dm..(t + 1) * dm]);
         }
-        kernels::gemm_par(nt, t_len, dm, hdk, &hs, &lp.wq, &mut qs);
-        kernels::gemm_par(nt, t_len, dm, hdk, &hs, &lp.wk, &mut ks);
-        kernels::gemm_par(nt, t_len, dm, hdv, &hs, &lp.wv, &mut vs);
+        simd.gemm_par(nt, t_len, dm, hdk, &hs, &lp.wq, &mut qs);
+        simd.gemm_par(nt, t_len, dm, hdk, &hs, &lp.wk, &mut ks);
+        simd.gemm_par(nt, t_len, dm, hdv, &hs, &lp.wv, &mut vs);
         for qv in qs.iter_mut() {
             *qv *= q_scale;
         }
@@ -620,7 +1077,7 @@ pub(crate) fn forward_window_dense(
                     scores.clear();
                     for j in 0..=t {
                         let kj = &ks[j * hdk + hd * dk..j * hdk + (hd + 1) * dk];
-                        scores.push(dot(qh, kj));
+                        scores.push(simd.dot(qh, kj));
                     }
                     let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                     let mut zsum = 0.0f32;
@@ -639,7 +1096,7 @@ pub(crate) fn forward_window_dense(
                 }
             });
         }
-        kernels::gemm_par(nt, t_len, hdv, dm, &attns, &lp.wo, &mut deltas);
+        simd.gemm_par(nt, t_len, hdv, dm, &attns, &lp.wo, &mut deltas);
         for (x, &d) in xs.iter_mut().zip(&deltas) {
             *x += d;
         }
@@ -648,12 +1105,12 @@ pub(crate) fn forward_window_dense(
         for t in 0..t_len {
             rmsnorm(&xs[t * dm..(t + 1) * dm], &lp.ffn_norm, &mut hs[t * dm..(t + 1) * dm]);
         }
-        kernels::gemm_par(nt, t_len, dm, dff, &hs, &lp.wg, &mut gs);
-        kernels::gemm_par(nt, t_len, dm, dff, &hs, &lp.w1, &mut u1s);
+        simd.gemm_par(nt, t_len, dm, dff, &hs, &lp.wg, &mut gs);
+        simd.gemm_par(nt, t_len, dm, dff, &hs, &lp.w1, &mut u1s);
         for (gv, &uv) in gs.iter_mut().zip(&u1s) {
             *gv = silu(*gv) * uv;
         }
-        kernels::gemm_par(nt, t_len, dff, dm, &gs, &lp.w2, &mut deltas);
+        simd.gemm_par(nt, t_len, dff, dm, &gs, &lp.w2, &mut deltas);
         for (x, &d) in xs.iter_mut().zip(&deltas) {
             *x += d;
         }
@@ -665,7 +1122,7 @@ pub(crate) fn forward_window_dense(
         rmsnorm(&xs[t * dm..(t + 1) * dm], &p.out_norm, &mut ys[t * dm..(t + 1) * dm]);
     }
     let mut logits = vec![0.0f32; t_len * v_sz];
-    kernels::gemm_par(nt, t_len, dm, v_sz, &ys, &p.wout, &mut logits);
+    simd.gemm_par(nt, t_len, dm, v_sz, &ys, &p.wout, &mut logits);
     (0..t_len)
         .map(|t| {
             let mut lg = logits[t * v_sz..(t + 1) * v_sz].to_vec();
@@ -687,9 +1144,9 @@ mod tests {
         let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let x = [10.0, 100.0];
         let mut out = vec![0.0; 3];
-        matvec(&w, &x, &mut out);
+        kernels::matvec(&w, &x, &mut out);
         assert_eq!(out, vec![410.0, 520.0, 630.0]);
-        matvec_add(&w, &x, &mut out);
+        kernels::matvec_add(&w, &x, &mut out);
         assert_eq!(out, vec![820.0, 1040.0, 1260.0]);
     }
 
@@ -707,8 +1164,106 @@ mod tests {
     #[test]
     fn nearest_code_flat_matches_vqref() {
         let cb_flat = [0.0, 0.0, 10.0, 10.0];
-        assert_eq!(nearest_code_f32(&[1.0, -1.0], &cb_flat, 2, 2), 0);
-        assert_eq!(nearest_code_f32(&[9.0, 11.0], &cb_flat, 2, 2), 1);
+        assert_eq!(kernels::nearest_code(&[1.0, -1.0], &cb_flat, 2, 2), 0);
+        assert_eq!(kernels::nearest_code(&[9.0, 11.0], &cb_flat, 2, 2), 1);
+    }
+
+    /// The batched stepper and the per-lane driver must agree per row (to
+    /// tolerance — their readout accumulation orders differ), including
+    /// across block boundaries where the cache fold fires, and inactive
+    /// lanes must pass through bit-untouched.
+    #[test]
+    fn batched_step_matches_per_lane_rows() {
+        let cfg = crate::native::preset_config("quickstart").unwrap();
+        let layout = Layout::new(cfg.clone());
+        let init = layout.init_state(7);
+        let find = |name: &str| {
+            init.iter().find(|(n, _)| n == name).map(|(_, t)| t.clone()).expect("init leaf")
+        };
+        let n_params = layout.param_leaves().len();
+        let mut tensors: Vec<HostTensor> = Vec::new();
+        for leaf in layout.param_leaves() {
+            tensors.push(find(&format!("params{}", leaf.path)));
+        }
+        let p = Params::parse(&cfg, &tensors[..n_params]).unwrap();
+        let mut cb_tensors = Vec::new();
+        for leaf in layout.cb_leaves() {
+            cb_tensors.push(find(&format!("cb{}", leaf.path)));
+        }
+        let cb = Codebooks::parse(&cfg, &cb_tensors).unwrap();
+
+        let b = cfg.batch_size;
+        let v = cfg.vocab_size;
+        let steps = 4 * cfg.block_len + 3; // crosses >= 2 fold boundaries
+        let simd = SimdMode::from_env();
+
+        // reference: per-lane driver, every lane stepped individually
+        let mut st_ref = State::zeros(&cfg);
+        let mut sc = Scratch::new(&cfg);
+        let mut ref_logits = vec![0.0f32; b * v];
+        for t in 0..steps {
+            let mut rows = st_ref.rows();
+            for (r, row) in rows.iter_mut().enumerate() {
+                let tok = ((7 * t + 3 * r) % v) as i32;
+                forward_token_row(&cfg, &p, &cb, row, tok, None, &mut sc, simd);
+                ref_logits[r * v..(r + 1) * v].copy_from_slice(&sc.logits);
+            }
+        }
+
+        // batched: same tokens, all lanes per step in one call
+        let mut st = State::zeros(&cfg);
+        let mut bs = BatchScratch::new(&cfg);
+        let mut logits = vec![0.0f32; b * v];
+        for t in 0..steps {
+            let lanes: Vec<LaneStep> = (0..b)
+                .map(|r| LaneStep {
+                    slot: r,
+                    token: ((7 * t + 3 * r) % v) as i32,
+                    want_logits: true,
+                })
+                .collect();
+            forward_step_batched(&cfg, &p, &cb, &mut st, &lanes, &mut logits, &mut bs, 1, simd);
+        }
+        assert_eq!(st.pos, st_ref.pos);
+        for (i, (a, r)) in logits.iter().zip(&ref_logits).enumerate() {
+            assert!(
+                (a - r).abs() <= 1e-4 * (1.0 + r.abs()),
+                "batched logits[{i}] = {a} vs per-lane {r}"
+            );
+        }
+
+        // a batched step over a *subset* of lanes must leave the others
+        // bit-untouched and reproduce the same rows as the full batch
+        let mut st_sub = State::zeros(&cfg);
+        let mut logits_sub = vec![0.0f32; b * v];
+        for t in 0..steps {
+            let lanes: Vec<LaneStep> = [0usize, 2]
+                .iter()
+                .map(|&r| LaneStep {
+                    slot: r,
+                    token: ((7 * t + 3 * r) % v) as i32,
+                    want_logits: true,
+                })
+                .collect();
+            forward_step_batched(
+                &cfg, &p, &cb, &mut st_sub, &lanes, &mut logits_sub, &mut bs, 1, simd,
+            );
+        }
+        assert_eq!(st_sub.pos, vec![steps as i32, 0, steps as i32, 0]);
+        for r in [0usize, 2] {
+            assert_eq!(
+                logits_sub[r * v..(r + 1) * v]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                logits[r * v..(r + 1) * v].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "row {r} bits depend on co-resident lanes"
+            );
+        }
+        for lst in &st_sub.layers {
+            let stride = lst.win_k.len() / b;
+            assert!(lst.win_k[stride..2 * stride].iter().all(|&x| x == 0.0));
+        }
     }
 
     #[test]

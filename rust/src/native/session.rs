@@ -1,0 +1,258 @@
+//! Stateful decode sessions over the native model — the allocation-free
+//! steady-state serving loop.
+//!
+//! The [`crate::runtime::Executor`] contract is pure: every call re-parses
+//! the state group from positional tensors and serializes it back, which
+//! is what lets any backend slot into the coordinator, but it puts tensor
+//! encode/decode traffic on the per-token path. [`DecodeSession`] is the
+//! native engine's direct loop for callers that own their state: weights
+//! are parsed once at construction, the recurrent `State` and the
+//! scratch arenas live inside the session, and a steady-state
+//! [`DecodeSession::step`] performs **zero heap allocations** on the
+//! default configuration (batched decode, `num_threads <= 1`) — pinned by
+//! `rust/tests/zero_alloc_decode.rs` with a counting global allocator.
+//!
+//! With `num_threads > 1` the step is bit-identical but the pool dispatch
+//! allocates a few bookkeeping objects per call; the per-lane fallback
+//! additionally rebuilds its row views per step. Those are the only
+//! exceptions to the allocation-free rule, and both are per-step O(B),
+//! not O(model).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Backend;
+use crate::tensor::HostTensor;
+
+use super::model::{
+    forward_step_batched, forward_step_per_lane, BatchScratch, LaneStep, Scratch, State,
+};
+use super::step::{parse_weights, ParsedWeights};
+use super::{Layout, NativeBackend, NativeOptions};
+
+use crate::manifest::ModelConfig;
+
+/// A persistent decode loop over one native preset: parsed weights +
+/// recurrent state + preallocated scratch, stepped one token per lane at
+/// a time. Inherits [`NativeOptions`] (thread budget, SIMD mode, batched
+/// vs per-lane decode) from the backend it was built from.
+pub struct DecodeSession {
+    cfg: ModelConfig,
+    opts: NativeOptions,
+    weights: ParsedWeights,
+    st: State,
+    /// Batched-mode arena; `Some` iff `opts.batched_decode` (the lane mode
+    /// is fixed at construction, so only one arena kind is ever allocated).
+    bs: Option<BatchScratch>,
+    /// Per-lane arenas; one per slot iff `!opts.batched_decode`.
+    scratch: Vec<Scratch>,
+    lanes: Vec<LaneStep>,
+    logits: Vec<f32>,
+}
+
+impl DecodeSession {
+    /// Build a session for `preset` with the backend's init weights and a
+    /// fresh all-zeros state. The preset must offer a `.decode` artifact
+    /// (i.e. VQ attention — dense presets have no per-token recurrence).
+    pub fn new(backend: &NativeBackend, preset: &str) -> Result<Self> {
+        let spec = backend.spec(&format!("{preset}.decode"))?;
+        let cfg = spec.config;
+        let layout = Layout::new(cfg.clone());
+        let tensors: Vec<HostTensor> =
+            backend.init_state(preset)?.into_iter().map(|(_, t)| t).collect();
+        let weights = parse_weights(&layout, &tensors)?;
+        let b = cfg.batch_size;
+        let opts = backend.options();
+        let (bs, scratch) = if opts.batched_decode {
+            (Some(BatchScratch::new(&cfg)), Vec::new())
+        } else {
+            (None, (0..b).map(|_| Scratch::new(&cfg)).collect())
+        };
+        Ok(Self {
+            opts,
+            weights,
+            st: State::zeros(&cfg),
+            bs,
+            scratch,
+            lanes: Vec::with_capacity(b),
+            logits: vec![0.0; b * cfg.vocab_size],
+            cfg,
+        })
+    }
+
+    /// Overwrite model weights from a training checkpoint (a TVQ file
+    /// with params/cb groups, e.g. `<run_dir>/state.tvq` saved by
+    /// `train::save_checkpoint`) — the same contract as
+    /// `Sampler::load_weights`, so a trained model serves through the
+    /// allocation-free loop too. Resets all lanes (weights changed, so
+    /// any in-flight recurrent state is for the wrong model).
+    pub fn load_weights(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut staged = crate::runtime::StateBundle::new();
+        staged.load_groups(path)?;
+        let mut tensors: Vec<HostTensor> = staged.group("params")?.to_vec();
+        tensors.extend(staged.group("cb")?.iter().cloned());
+        self.weights = parse_weights(&Layout::new(self.cfg.clone()), &tensors)?;
+        self.reset();
+        Ok(())
+    }
+
+    /// The model configuration this session runs.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.cfg.batch_size
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.cfg.vocab_size
+    }
+
+    /// Positions of all lanes (tokens ingested per slot since reset).
+    pub fn positions(&self) -> &[i32] {
+        &self.st.pos
+    }
+
+    /// Zero every lane's recurrent state (all-zeros == fresh sequence).
+    pub fn reset(&mut self) {
+        self.st = State::zeros(&self.cfg);
+    }
+
+    /// Feed one token per lane and return the logits, row-major `[B, V]`.
+    /// Steady-state cost is O(S + 2L) per lane and — on the default
+    /// batched path with `num_threads <= 1` — zero heap allocations.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<&[f32]> {
+        let b = self.cfg.batch_size;
+        if tokens.len() != b {
+            bail!("step: {} tokens for batch size {b}", tokens.len());
+        }
+        if self.opts.batched_decode {
+            self.lanes.clear();
+            for (r, &t) in tokens.iter().enumerate() {
+                self.lanes.push(LaneStep { slot: r, token: t, want_logits: true });
+            }
+            let bs = self.bs.as_mut().expect("batched session owns a BatchScratch");
+            forward_step_batched(
+                &self.cfg,
+                &self.weights.params,
+                &self.weights.cb,
+                &mut self.st,
+                &self.lanes,
+                &mut self.logits,
+                bs,
+                self.opts.num_threads,
+                self.opts.simd,
+            );
+        } else {
+            forward_step_per_lane(
+                &self.cfg,
+                &self.weights.params,
+                &self.weights.cb,
+                &mut self.st,
+                tokens,
+                &mut self.logits,
+                &mut self.scratch,
+                self.opts.num_threads,
+                self.opts.simd,
+            );
+        }
+        Ok(&self.logits)
+    }
+
+    /// Logits of the most recent [`DecodeSession::step`], `[B, V]`.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::StateBundle;
+
+    /// The session must be an exact transliteration of the decode
+    /// executor: same tokens, bit-identical logits, step for step.
+    #[test]
+    fn session_matches_decode_executor_bitwise() {
+        let backend = NativeBackend::new();
+        let exe = backend.load("quickstart.decode").unwrap();
+        let mut bundle = StateBundle::zeros_for(exe.spec());
+        bundle.set_named(backend.init_state("quickstart").unwrap());
+        let b = exe.spec().config.batch_size;
+        let mut sess = DecodeSession::new(&backend, "quickstart").unwrap();
+        for t in 0..40i32 {
+            let tokens: Vec<i32> = (0..b as i32).map(|r| (17 * t + 5 * r) % 251).collect();
+            bundle.set_group("token", vec![HostTensor::from_i32(&[b], &tokens)]);
+            let inputs = bundle.assemble(exe.spec()).unwrap();
+            let outputs = exe.run(&inputs).unwrap();
+            bundle.absorb(exe.spec(), outputs).unwrap();
+            let exe_logits = bundle.group("logits").unwrap()[0].as_f32().unwrap();
+            let sess_logits = sess.step(&tokens).unwrap();
+            assert_eq!(
+                exe_logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sess_logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "session diverged from executor at step {t}"
+            );
+        }
+        assert_eq!(sess.positions(), vec![40; b]);
+        sess.reset();
+        assert_eq!(sess.positions(), vec![0; b]);
+    }
+
+    /// `load_weights` must install checkpoint weights exactly: a session
+    /// loading preset B's weights from a TVQ file becomes bit-identical
+    /// to a session constructed on preset B, and its lanes reset.
+    #[test]
+    fn load_weights_installs_checkpoint_and_resets() {
+        let cfg = crate::native::preset_config("quickstart").unwrap();
+        let backend_a = NativeBackend::with_preset("sess-a", cfg.clone(), 11);
+        let backend_b = NativeBackend::with_preset("sess-b", cfg, 22);
+
+        // write preset B's weights the way checkpoints do (params + cb)
+        let exe_b = backend_b.load("sess-b.decode").unwrap();
+        let mut bundle = StateBundle::zeros_for(exe_b.spec());
+        bundle.set_named(backend_b.init_state("sess-b").unwrap());
+        let dir = crate::testutil::TempDir::new();
+        let path = dir.join("state.tvq");
+        bundle.save_groups(&path, exe_b.spec(), &["params", "cb"]).unwrap();
+
+        let mut sess = DecodeSession::new(&backend_a, "sess-a").unwrap();
+        let mut sess_b = DecodeSession::new(&backend_b, "sess-b").unwrap();
+        let b = sess.batch_size();
+        let tokens: Vec<i32> = (0..b as i32).map(|r| 40 + r).collect();
+        sess.step(&tokens).unwrap();
+        sess.load_weights(&path).unwrap();
+        assert_eq!(sess.positions(), vec![0; b], "load_weights must reset lanes");
+        for t in 0..10i32 {
+            let toks: Vec<i32> = (0..b as i32).map(|r| (29 * t + 3 * r) % 251).collect();
+            let got: Vec<u32> = sess.step(&toks).unwrap().iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> =
+                sess_b.step(&toks).unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "loaded-checkpoint session diverged at step {t}");
+        }
+    }
+
+    /// Per-lane sessions run the same loop the pre-batching engine did;
+    /// they must agree with the batched session to readout tolerance.
+    #[test]
+    fn per_lane_session_agrees_with_batched() {
+        let batched = NativeBackend::new()
+            .with_options(NativeOptions { batched_decode: true, ..NativeOptions::default() });
+        let per_lane = NativeBackend::new()
+            .with_options(NativeOptions { batched_decode: false, ..NativeOptions::default() });
+        let mut s1 = DecodeSession::new(&batched, "quickstart").unwrap();
+        let mut s2 = DecodeSession::new(&per_lane, "quickstart").unwrap();
+        let b = s1.batch_size();
+        for t in 0..40i32 {
+            let tokens: Vec<i32> = (0..b as i32).map(|r| (13 * t + 7 * r) % 251).collect();
+            s1.step(&tokens).unwrap();
+            s2.step(&tokens).unwrap();
+            for (i, (a, c)) in s1.logits().iter().zip(s2.logits()).enumerate() {
+                assert!(
+                    (a - c).abs() <= 1e-4 * (1.0 + c.abs()),
+                    "batched vs per-lane logits[{i}] at step {t}: {a} vs {c}"
+                );
+            }
+        }
+    }
+}

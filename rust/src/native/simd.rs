@@ -1,0 +1,655 @@
+//! Runtime-dispatched SIMD micro-kernels for the f32 serving path.
+//!
+//! [`SimdMode`] is the ISA choice for every f32 matmul-family kernel in the
+//! native engine: [`SimdMode::Scalar`] routes to the portable kernels in
+//! [`super::kernels`], [`SimdMode::Avx2Fma`] to the `std::arch` AVX2+FMA
+//! implementations in this module. The mode is chosen **once** — at
+//! [`super::NativeBackend`] construction via [`SimdMode::from_env`]
+//! (`TVQ_SIMD=0` is the escape hatch, anything else auto-detects with
+//! `is_x86_feature_detected!`) — and threaded into every executor through
+//! [`super::NativeOptions`], so a running process never mixes ISAs on one
+//! executor.
+//!
+//! # Determinism contract
+//!
+//! *Within* a fixed mode every kernel has a fixed floating-point
+//! accumulation order that depends only on the operand shapes — never on
+//! the thread count, the batch row's position, or how many rows share a
+//! GEMM — so all the engine's bit-identity guarantees (decode ≡ prefill
+//! per row, identical outputs at any `num_threads`) hold per mode.
+//! *Across* modes, results may differ in the last few ulps: the AVX2 path
+//! uses fused multiply-add and 8-lane partial sums, the scalar path
+//! 4-way unrolled separate multiply/add. SIMD-vs-scalar equivalence is
+//! pinned by tolerance oracles (≤ 1e-5, `rust/tests/simd_oracle.rs`),
+//! not bit equality; CI runs the whole test suite under both modes.
+//!
+//! The f64 training kernels (`autodiff`) stay scalar: gradients are
+//! FD-checked against f64 references and are not on the serving hot path.
+
+use super::kernels;
+
+/// Instruction-set choice for the f32 kernels, fixed per executor at init.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Portable scalar kernels ([`super::kernels`]); always available.
+    Scalar,
+    /// AVX2 + FMA `std::arch` kernels (x86_64 only, runtime-detected).
+    Avx2Fma,
+}
+
+impl SimdMode {
+    /// Best mode the running CPU supports (AVX2+FMA where detected,
+    /// scalar everywhere else).
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return SimdMode::Avx2Fma;
+            }
+        }
+        SimdMode::Scalar
+    }
+
+    /// Every mode this machine can execute: scalar always, plus the
+    /// detected ISA when it differs. Test suites iterate this so a future
+    /// ISA variant is covered everywhere by updating [`SimdMode::detect`]
+    /// alone.
+    pub fn available() -> Vec<SimdMode> {
+        let mut modes = vec![SimdMode::Scalar];
+        if SimdMode::detect() != SimdMode::Scalar {
+            modes.push(SimdMode::detect());
+        }
+        modes
+    }
+
+    /// [`SimdMode::detect`] gated by the `TVQ_SIMD` escape hatch:
+    /// `0`/`off`/`scalar` forces the scalar kernels, anything else (or
+    /// unset) auto-detects.
+    pub fn from_env() -> Self {
+        match std::env::var("TVQ_SIMD").ok().as_deref() {
+            Some("0") | Some("off") | Some("scalar") => SimdMode::Scalar,
+            _ => SimdMode::detect(),
+        }
+    }
+
+    /// Stable name for logs and bench artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2Fma => "avx2_fma",
+        }
+    }
+
+    /// Dot product of two equal-length f32 slices (fixed accumulation
+    /// order per mode). Length equality is a hard assert: the AVX2 body
+    /// does unchecked loads over `a.len()`, so this safe wrapper is the
+    /// bounds boundary.
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot: length mismatch");
+        match self {
+            SimdMode::Scalar => kernels::dot(a, b),
+            SimdMode::Avx2Fma => accel::dot(a, b),
+        }
+    }
+
+    /// `out = x @ w`, `w` row-major `[x.len(), out.len()]`.
+    #[inline]
+    pub fn matvec(self, w: &[f32], x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        self.matvec_add(w, x, out);
+    }
+
+    /// `out += x @ w` (residual add), same layout as [`SimdMode::matvec`].
+    /// The shape relation is a hard assert — it is the bounds boundary
+    /// for the AVX2 body's unchecked loads.
+    #[inline]
+    pub fn matvec_add(self, w: &[f32], x: &[f32], out: &mut [f32]) {
+        assert_eq!(w.len(), x.len() * out.len(), "matvec_add: shape mismatch");
+        match self {
+            SimdMode::Scalar => kernels::matvec_add(w, x, out),
+            SimdMode::Avx2Fma => accel::matvec_add(w, x, out),
+        }
+    }
+
+    /// `c = a @ b`: row-major `a [m,k]`, `b [k,n]`, `c [m,n]`.
+    #[inline]
+    pub fn gemm(self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        c.fill(0.0);
+        self.gemm_add(m, k, n, a, b, c);
+    }
+
+    /// `c += a @ b`, same layout, blocking, and (per mode) accumulation
+    /// order as [`SimdMode::gemm`]. Each output row's accumulation order
+    /// is independent of `m`, so batching more rows into one call never
+    /// changes any row's bits.
+    /// Operand lengths are hard asserts — the bounds boundary for the
+    /// AVX2 body's unchecked loads.
+    #[inline]
+    pub fn gemm_add(self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        assert_eq!(a.len(), m * k, "gemm_add: lhs length");
+        assert_eq!(b.len(), k * n, "gemm_add: rhs length");
+        assert_eq!(c.len(), m * n, "gemm_add: out length");
+        match self {
+            SimdMode::Scalar => kernels::gemm_add(m, k, n, a, b, c),
+            SimdMode::Avx2Fma => accel::gemm_add(m, k, n, a, b, c),
+        }
+    }
+
+    /// Row-parallel [`SimdMode::gemm`]: contiguous bands of output rows,
+    /// one pool work item per band (`num_threads` lanes, 0 = all cores).
+    /// Bit-identical to the sequential kernel at any thread count — bands
+    /// change ownership, never per-row accumulation order. With
+    /// `num_threads <= 1` or `m <= 1` this is the sequential kernel, no
+    /// pool and no allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_par(
+        self,
+        num_threads: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) {
+        c.fill(0.0);
+        self.gemm_add_par(num_threads, m, k, n, a, b, c);
+    }
+
+    /// Row-parallel [`SimdMode::gemm_add`] (accumulating twin of
+    /// [`SimdMode::gemm_par`]): `c += a @ b` with output rows banded over
+    /// the pool. Same bit-identity argument — band ownership never changes
+    /// per-row accumulation order. Sequential (and allocation-free) when
+    /// `num_threads <= 1` or `m <= 1`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_add_par(
+        self,
+        num_threads: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) {
+        debug_assert_eq!(c.len(), m * n);
+        let nt = kernels::effective_threads(num_threads);
+        if nt <= 1 || m <= 1 {
+            self.gemm_add(m, k, n, a, b, c);
+            return;
+        }
+        let band = m.div_ceil(nt);
+        let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
+        kernels::parallel_for_items(nt, &mut items, |_, (ci, cband)| {
+            let i0 = *ci * band;
+            let rows = cband.len() / n;
+            self.gemm_add(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, cband);
+        });
+    }
+
+    /// Index of the nearest codebook row (L2) among `s` rows of width
+    /// `dk`. Ties break toward the lower index in both modes; near-ties
+    /// may resolve differently across modes (last-ulp distance
+    /// differences), which the quantizer treats like any other cross-mode
+    /// divergence.
+    /// Operand lengths are hard asserts — the bounds boundary for the
+    /// AVX2 body's unchecked loads (the scalar path would merely
+    /// zip-truncate, so this also keeps the modes semantically aligned).
+    #[inline]
+    pub fn nearest_code(self, x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+        assert!(x.len() >= dk, "nearest_code: key shorter than dk");
+        assert_eq!(codebook.len(), s * dk, "nearest_code: codebook length");
+        match self {
+            SimdMode::Scalar => kernels::nearest_code(x, codebook, s, dk),
+            SimdMode::Avx2Fma => accel::nearest_code(x, codebook, s, dk),
+        }
+    }
+}
+
+/// Safe shims the `Avx2Fma` dispatch arms call: on x86_64 they enter the
+/// `avx2` bodies (sound because `Avx2Fma` is only ever constructed after
+/// `is_x86_feature_detected!` confirmed both features — see
+/// [`SimdMode::detect`]); elsewhere they fall back to the scalar kernels
+/// so the enum stays cross-platform without `cfg` in every caller.
+#[cfg(target_arch = "x86_64")]
+mod accel {
+    use super::avx2;
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: reachable only through SimdMode::Avx2Fma (feature-checked).
+        unsafe { avx2::dot(a, b) }
+    }
+
+    #[inline]
+    pub fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::matvec_add(w, x, out) }
+    }
+
+    #[inline]
+    pub fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::gemm_add(m, k, n, a, b, c) }
+    }
+
+    #[inline]
+    pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+        // SAFETY: as above.
+        unsafe { avx2::nearest_code(x, codebook, s, dk) }
+    }
+}
+
+/// Non-x86_64 builds: `Avx2Fma` is never produced by [`SimdMode::detect`],
+/// but the enum variant still exists — route it to the scalar kernels.
+#[cfg(not(target_arch = "x86_64"))]
+mod accel {
+    use super::kernels;
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        kernels::dot(a, b)
+    }
+
+    #[inline]
+    pub fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
+        kernels::matvec_add(w, x, out)
+    }
+
+    #[inline]
+    pub fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        kernels::gemm_add(m, k, n, a, b, c)
+    }
+
+    #[inline]
+    pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+        kernels::nearest_code(x, codebook, s, dk)
+    }
+}
+
+/// AVX2+FMA kernel bodies. Private: every entry point is `unsafe fn` with
+/// `#[target_feature]`, and the only caller is the [`SimdMode::Avx2Fma`]
+/// dispatch above, which exists only after `is_x86_feature_detected!`
+/// confirmed both features.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of one 8-lane register, fixed reduction tree:
+    /// (lo128 + hi128), then pairwise within 128 bits.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Dot product: two independent 8-lane FMA accumulators over 16-elem
+    /// steps, one 8-elem step, scalar tail. Accumulation order is a
+    /// function of `a.len()` only.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut acc = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            acc += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        acc
+    }
+
+    /// One output-row panel of the axpy matmul:
+    /// `crow[j] += Σ_{kk in k0..k1} arow[kk] · b[kk*n + j]` for
+    /// `j in j0..j1`, with the k loop 4-way unrolled (broadcast + FMA)
+    /// and the j loop 8-wide with a scalar tail. Shared by
+    /// [`matvec_add`] (one row, whole width) and [`gemm_add`] (per
+    /// cache panel), so per-element accumulation order is identical in
+    /// both whenever the panel boundaries line up (`TILE_K % 4 == 0`,
+    /// `TILE_N % 8 == 0` — asserted in the tests).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `arow[k0..k1]` and `b[kk*n + j0 .. kk*n + j1]`
+    /// in bounds for all `kk`; `crow` valid for `j0..j1`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn row_panel(
+        b: *const f32,
+        n: usize,
+        arow: *const f32,
+        k0: usize,
+        k1: usize,
+        j0: usize,
+        j1: usize,
+        crow: *mut f32,
+    ) {
+        let w = j1 - j0;
+        let w8 = w / 8 * 8;
+        let cp = crow.add(j0);
+        let mut kk = k0;
+        while kk + 4 <= k1 {
+            let (a0, a1, a2, a3) =
+                (*arow.add(kk), *arow.add(kk + 1), *arow.add(kk + 2), *arow.add(kk + 3));
+            let r0 = b.add(kk * n + j0);
+            let r1 = b.add((kk + 1) * n + j0);
+            let r2 = b.add((kk + 2) * n + j0);
+            let r3 = b.add((kk + 3) * n + j0);
+            let x0 = _mm256_set1_ps(a0);
+            let x1 = _mm256_set1_ps(a1);
+            let x2 = _mm256_set1_ps(a2);
+            let x3 = _mm256_set1_ps(a3);
+            let mut j = 0usize;
+            while j < w8 {
+                let mut o = _mm256_loadu_ps(cp.add(j));
+                o = _mm256_fmadd_ps(x0, _mm256_loadu_ps(r0.add(j)), o);
+                o = _mm256_fmadd_ps(x1, _mm256_loadu_ps(r1.add(j)), o);
+                o = _mm256_fmadd_ps(x2, _mm256_loadu_ps(r2.add(j)), o);
+                o = _mm256_fmadd_ps(x3, _mm256_loadu_ps(r3.add(j)), o);
+                _mm256_storeu_ps(cp.add(j), o);
+                j += 8;
+            }
+            while j < w {
+                *cp.add(j) +=
+                    a0 * *r0.add(j) + a1 * *r1.add(j) + a2 * *r2.add(j) + a3 * *r3.add(j);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < k1 {
+            let xi = *arow.add(kk);
+            if xi != 0.0 {
+                let xv = _mm256_set1_ps(xi);
+                let r = b.add(kk * n + j0);
+                let mut j = 0usize;
+                while j < w8 {
+                    let o =
+                        _mm256_fmadd_ps(xv, _mm256_loadu_ps(r.add(j)), _mm256_loadu_ps(cp.add(j)));
+                    _mm256_storeu_ps(cp.add(j), o);
+                    j += 8;
+                }
+                while j < w {
+                    *cp.add(j) += xi * *r.add(j);
+                    j += 1;
+                }
+            }
+            kk += 1;
+        }
+    }
+
+    /// `out += x @ w`: one [`row_panel`] over the whole width.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `w.len() == x.len() * out.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), x.len() * out.len());
+        row_panel(w.as_ptr(), out.len(), x.as_ptr(), 0, x.len(), 0, out.len(), out.as_mut_ptr());
+    }
+
+    /// `c += a @ b` with the same `TILE_K × TILE_N` cache blocking as the
+    /// scalar [`super::kernels::gemm_add`]; the per-row inner kernel is
+    /// [`row_panel`], so every output row's accumulation order is fixed
+    /// by (k, n) alone — independent of `m` and of band ownership.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; slice lengths must match `m·k`, `k·n`, `m·n`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        use super::kernels::{TILE_K, TILE_N};
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE_N).min(n);
+                for i in 0..m {
+                    row_panel(
+                        b.as_ptr(),
+                        n,
+                        a.as_ptr().add(i * k),
+                        k0,
+                        k1,
+                        j0,
+                        j1,
+                        c.as_mut_ptr().add(i * n),
+                    );
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+    }
+
+    /// Nearest codebook row: per-code squared distance via 8-lane
+    /// `(x - c)² ` FMA accumulate + scalar tail; argmin tracked exactly
+    /// like the scalar kernel (strict `<`, first index wins ties).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `x.len() >= dk` and `codebook.len() == s * dk`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
+        debug_assert!(x.len() >= dk);
+        debug_assert_eq!(codebook.len(), s * dk);
+        let d8 = dk / 8 * 8;
+        let xp = x.as_ptr();
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..s {
+            let row = codebook.as_ptr().add(c * dk);
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i < d8 {
+                let diff = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(row.add(i)));
+                acc = _mm256_fmadd_ps(diff, diff, acc);
+                i += 8;
+            }
+            let mut d = hsum(acc);
+            while i < dk {
+                let t = *xp.add(i) - *row.add(i);
+                d += t * t;
+                i += 1;
+            }
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn available_modes() -> Vec<SimdMode> {
+        SimdMode::available()
+    }
+
+    /// The panel boundaries that make matvec and gemm accumulation orders
+    /// coincide per element (see `row_panel` docs).
+    #[test]
+    fn tile_sizes_align_with_unroll_widths() {
+        assert_eq!(kernels::TILE_K % 4, 0);
+        assert_eq!(kernels::TILE_N % 8, 0);
+    }
+
+    #[test]
+    fn env_escape_hatch_names() {
+        assert_eq!(SimdMode::Scalar.name(), "scalar");
+        assert_eq!(SimdMode::Avx2Fma.name(), "avx2_fma");
+    }
+
+    /// Per-mode golden check against an f64 reference over shapes that
+    /// exercise the 16/8/scalar-tail boundaries. (The cross-mode
+    /// tolerance oracles live in rust/tests/simd_oracle.rs.)
+    #[test]
+    fn all_modes_match_f64_reference() {
+        let mut rng = Rng::new(0x51D);
+        let shapes =
+            [(1usize, 1usize), (4, 7), (8, 8), (15, 9), (16, 17), (63, 65), (64, 128), (130, 257)];
+        for mode in available_modes() {
+            for &(k, n) in &shapes {
+                let w = rand_vec(&mut rng, k * n);
+                let x = rand_vec(&mut rng, k);
+                let mut out = vec![0.0f32; n];
+                mode.matvec(&w, &x, &mut out);
+                for j in 0..n {
+                    let want: f64 =
+                        (0..k).map(|i| x[i] as f64 * w[i * n + j] as f64).sum();
+                    assert!(
+                        (out[j] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "{} matvec({k},{n})[{j}] = {} want {want}",
+                        mode.name(),
+                        out[j]
+                    );
+                }
+                let d = mode.dot(&x, &w[..k]);
+                let want: f64 = (0..k).map(|i| x[i] as f64 * w[i] as f64).sum();
+                assert!((d as f64 - want).abs() < 1e-4 * (1.0 + want.abs()), "{} dot", mode.name());
+            }
+        }
+    }
+
+    /// gemm must equal matvec applied row by row — same math, batched.
+    #[test]
+    fn gemm_rows_match_matvec_per_mode() {
+        let mut rng = Rng::new(0xBA7C);
+        for mode in available_modes() {
+            for &(m, k, n) in &[(1usize, 5usize, 9usize), (3, 16, 8), (8, 64, 256), (5, 130, 33)] {
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut c = vec![0.0f32; m * n];
+                mode.gemm(m, k, n, &a, &b, &mut c);
+                for i in 0..m {
+                    let mut row = vec![0.0f32; n];
+                    mode.matvec(&b, &a[i * k..(i + 1) * k], &mut row);
+                    for j in 0..n {
+                        let got = c[i * n + j];
+                        let want = row[j];
+                        assert!(
+                            (got as f64 - want as f64).abs() < 1e-5 * (1.0 + want.abs() as f64),
+                            "{} gemm({m},{k},{n}) row {i} col {j}: {got} vs {want}",
+                            mode.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A row's bits must not depend on how many rows share the GEMM call
+    /// — the invariant that makes batched decode ≡ per-row prefill.
+    #[test]
+    fn gemm_row_bits_independent_of_batch_size() {
+        let mut rng = Rng::new(0xF00D);
+        for mode in available_modes() {
+            let (k, n) = (64usize, 96usize);
+            let a = rand_vec(&mut rng, 8 * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut full = vec![0.0f32; 8 * n];
+            mode.gemm(8, k, n, &a, &b, &mut full);
+            for m in [1usize, 3, 8] {
+                let mut part = vec![0.0f32; m * n];
+                mode.gemm(m, k, n, &a[..m * k], &b, &mut part);
+                for (i, (&g, &f)) in part.iter().zip(&full[..m * n]).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        f.to_bits(),
+                        "{} row bits changed with batch size at m={m}, flat {i}",
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_par_bit_identical_across_thread_counts_per_mode() {
+        let mut rng = Rng::new(0x9A9A);
+        for mode in available_modes() {
+            let (m, k, n) = (13usize, 69usize, 131usize);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut base = vec![0.0f32; m * n];
+            mode.gemm(m, k, n, &a, &b, &mut base);
+            for nt in [1usize, 2, 3, 8] {
+                let mut c = vec![f32::NAN; m * n];
+                mode.gemm_par(nt, m, k, n, &a, &b, &mut c);
+                assert_eq!(
+                    base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{} gemm_par(nt={nt}) diverged",
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_code_agrees_across_modes_on_clear_margins() {
+        let mut rng = Rng::new(0xC0DE);
+        for mode in available_modes() {
+            for &(s, dk) in &[(2usize, 2usize), (8, 7), (16, 8), (32, 16), (11, 19)] {
+                let cb = rand_vec(&mut rng, s * dk);
+                for _ in 0..16 {
+                    let x = rand_vec(&mut rng, dk);
+                    let got = mode.nearest_code(&x, &cb, s, dk);
+                    let want = kernels::nearest_code(&x, &cb, s, dk);
+                    // exact agreement expected away from ties; on a
+                    // near-tie both picks must have ~equal f64 distance
+                    if got != want {
+                        let d = |c: usize| -> f64 {
+                            (0..dk)
+                                .map(|i| (x[i] as f64 - cb[c * dk + i] as f64).powi(2))
+                                .sum()
+                        };
+                        assert!(
+                            (d(got) - d(want)).abs() < 1e-5 * (1.0 + d(want)),
+                            "{}: picked {got} (d={}) vs scalar {want} (d={})",
+                            mode.name(),
+                            d(got),
+                            d(want)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -18,13 +18,20 @@
 //! re-decoding the params group from raw bytes is paid once per distinct
 //! weight set, not once per call.
 //!
-//! Every entry point takes a thread budget `nt` (0 = all cores, from
-//! `super::NativeOptions`) and parallelizes over batch lanes: the state is
-//! split into disjoint per-row views (`model::State::rows`) and one row
-//! runs per pool work item. Merges happen in fixed row order, so outputs
-//! are bit-identical at any `nt`.
+//! Every entry point takes the executor's [`super::NativeOptions`]
+//! (thread budget, SIMD mode, decode batching). Decode and prefill run
+//! **batched** by default — all active lanes advance through each layer
+//! together via `model::forward_step_batched`, one GEMM per projection —
+//! with a per-lane fallback (`batched_decode = false` /
+//! `TVQ_BATCHED_DECODE=0`) that fans one whole row per pool work item.
+//! The eval/train windows parallelize over batch lanes as before. Merges
+//! happen in fixed row order and per-row kernel accumulation order never
+//! depends on thread count, so outputs are bit-identical at any
+//! `num_threads` within a fixed SIMD mode.
 
 use anyhow::{bail, Result};
+
+use std::sync::Arc;
 
 use crate::tensor::HostTensor;
 
@@ -34,9 +41,11 @@ use super::autodiff::{
 use super::kernels;
 use super::layout::Layout;
 use super::model::{
-    forward_token_row, forward_token_row_opts, forward_window_dense, Codebooks, Params, RowState,
-    State, TrainAccum,
+    forward_step_batched, forward_step_per_lane, forward_token_row, forward_token_row_opts,
+    forward_window_dense, BatchScratch, Codebooks, LaneStep, Params, RowState, Scratch, State,
+    TrainAccum,
 };
+use super::NativeOptions;
 
 /// Adam hyperparameters (§3.4.2; the schedule supplies the LR).
 const ADAM_B1: f64 = 0.9;
@@ -50,6 +59,16 @@ const EMA_EPS: f32 = 1e-5;
 pub(crate) struct ParsedWeights {
     pub params: Params,
     pub cb: Codebooks,
+}
+
+/// Reusable decode scratch parked on the executor between calls — the
+/// batched arena and/or the per-lane arenas, whichever the entry uses —
+/// so steady-state serving through the executor surface re-allocates
+/// neither (each is built lazily on first use and reused thereafter).
+#[derive(Default)]
+pub(crate) struct DecodeArena {
+    pub batch: Option<BatchScratch>,
+    pub lanes: Option<Vec<Scratch>>,
 }
 
 /// Number of leading input (and, for train, output) tensors that hold the
@@ -90,12 +109,18 @@ impl SplitSpec {
 }
 
 /// `<preset>.decode`: (params, cb, state, token[B]) -> (state, logits[B,V]).
-/// One batch lane per pool work item; lanes share only read-only weights.
+///
+/// Batched by default: the B lanes move through each layer together so
+/// every weight matrix streams once per step. The per-lane fallback runs
+/// one whole row per pool work item. Both paths produce identical rows to
+/// within last-ulp readout ordering (oracle-tested in `model`'s tests);
+/// each path is bit-deterministic at any thread count.
 pub(crate) fn run_decode(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
-    nt: usize,
+    opts: &NativeOptions,
+    arena: &mut DecodeArena,
 ) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -105,15 +130,37 @@ pub(crate) fn run_decode(
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
     let mut logits = vec![0.0f32; b * v];
-    {
-        let mut work: Vec<(RowState<'_>, &mut [f32])> =
-            st.rows().into_iter().zip(logits.chunks_mut(v)).collect();
-        debug_assert_eq!(work.len(), b);
-        kernels::parallel_for_items(nt, &mut work, |row, (rst, out)| {
-            let (row_logits, _) =
-                forward_token_row(cfg, &weights.params, &weights.cb, rst, tokens[row], None);
-            out.copy_from_slice(&row_logits);
-        });
+    if opts.batched_decode {
+        let lanes: Vec<LaneStep> = (0..b)
+            .map(|r| LaneStep { slot: r, token: tokens[r], want_logits: true })
+            .collect();
+        let bs = arena.batch.get_or_insert_with(|| BatchScratch::new(cfg));
+        forward_step_batched(
+            cfg,
+            &weights.params,
+            &weights.cb,
+            &mut st,
+            &lanes,
+            &mut logits,
+            bs,
+            opts.num_threads,
+            opts.simd,
+        );
+    } else {
+        let scratch = arena
+            .lanes
+            .get_or_insert_with(|| (0..b).map(|_| Scratch::new(cfg)).collect());
+        forward_step_per_lane(
+            cfg,
+            &weights.params,
+            &weights.cb,
+            &mut st,
+            &tokens,
+            &mut logits,
+            scratch,
+            opts.num_threads,
+            opts.simd,
+        );
     }
     let mut outputs = st.dump(layout, "state");
     outputs.push(HostTensor::from_f32(&[b, v], &logits));
@@ -133,7 +180,8 @@ pub(crate) fn run_prefill(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
-    nt: usize,
+    opts: &NativeOptions,
+    arena: &mut DecodeArena,
 ) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -149,18 +197,66 @@ pub(crate) fn run_prefill(
     }
 
     let mut logits = vec![0.0f32; b * v];
-    {
-        let mut work: Vec<(RowState<'_>, &mut [f32])> =
-            st.rows().into_iter().zip(logits.chunks_mut(v)).collect();
-        kernels::parallel_for_items(nt, &mut work, |row, (rst, out)| {
+    if opts.batched_decode {
+        // token-major: at step t every lane still ingesting advances one
+        // token, all through shared GEMMs; a lane computes logits only at
+        // its own last token. Per-row results are identical to the
+        // lane-major order below because rows never interact.
+        let max_len = lens.iter().map(|&l| l as usize).max().unwrap_or(0);
+        let bs = arena.batch.get_or_insert_with(|| BatchScratch::new(cfg));
+        let mut lanes: Vec<LaneStep> = Vec::with_capacity(b);
+        for t in 0..max_len {
+            lanes.clear();
+            for row in 0..b {
+                let len = lens[row] as usize;
+                if t < len {
+                    lanes.push(LaneStep {
+                        slot: row,
+                        token: tokens[row * c + t],
+                        want_logits: t + 1 == len,
+                    });
+                }
+            }
+            forward_step_batched(
+                cfg,
+                &weights.params,
+                &weights.cb,
+                &mut st,
+                &lanes,
+                &mut logits,
+                bs,
+                opts.num_threads,
+                opts.simd,
+            );
+        }
+    } else {
+        let scratch = arena
+            .lanes
+            .get_or_insert_with(|| (0..b).map(|_| Scratch::new(cfg)).collect());
+        let mut work: Vec<(RowState<'_>, &mut [f32], &mut Scratch)> = st
+            .rows()
+            .into_iter()
+            .zip(logits.chunks_mut(v).zip(scratch.iter_mut()))
+            .map(|(rst, (out, sc))| (rst, out, sc))
+            .collect();
+        kernels::parallel_for_items(opts.num_threads, &mut work, |row, (rst, out, sc)| {
             let len = lens[row] as usize;
             let row_tokens = &tokens[row * c..row * c + len];
             for (i, &tok) in row_tokens.iter().enumerate() {
                 let want = i + 1 == len;
-                let (row_logits, _) =
-                    forward_token_row_opts(cfg, &weights.params, &weights.cb, rst, tok, None, want);
-                if let Some(l) = row_logits {
-                    out.copy_from_slice(&l);
+                forward_token_row_opts(
+                    cfg,
+                    &weights.params,
+                    &weights.cb,
+                    rst,
+                    tok,
+                    None,
+                    want,
+                    sc,
+                    opts.simd,
+                );
+                if want {
+                    out.copy_from_slice(&sc.logits);
                 }
             }
         });
@@ -180,10 +276,11 @@ fn forward_window(
     cb: &Codebooks,
     st: &mut State,
     tokens: &[i32],
-    nt: usize,
+    opts: &NativeOptions,
 ) -> Vec<(Vec<f32>, usize)> {
     let cfg = &layout.cfg;
     let (b, w, v) = (cfg.batch_size, cfg.window_len, cfg.vocab_size);
+    let (nt, simd) = (opts.num_threads, opts.simd);
     let dense = cfg.attn_type == "full";
     // single-lane presets hand the whole thread budget to the dense window
     // kernels; multi-lane runs split the budget at the row level instead
@@ -196,17 +293,18 @@ fn forward_window(
             let target = |t: usize| (row_tokens[t + 1].max(0) as usize).min(v - 1);
             if dense {
                 // dense baseline: quadratic within the window, no carry memory
-                **out = forward_window_dense(cfg, p, &row_tokens[..w], inner_nt)
+                **out = forward_window_dense(cfg, p, &row_tokens[..w], inner_nt, simd)
                     .into_iter()
                     .enumerate()
                     .map(|(t, (logits, _))| (logits, target(t)))
                     .collect();
                 *rst.pos += w as i32;
             } else {
+                let mut sc = Scratch::new(cfg);
                 out.reserve(w);
                 for t in 0..w {
-                    let (logits, _) = forward_token_row(cfg, p, cb, rst, row_tokens[t], None);
-                    out.push((logits, target(t)));
+                    forward_token_row(cfg, p, cb, rst, row_tokens[t], None, &mut sc, simd);
+                    out.push((sc.logits.clone(), target(t)));
                 }
             }
         });
@@ -246,46 +344,58 @@ fn code_perplexity(layout: &Layout, accum: &TrainAccum) -> f64 {
 }
 
 /// §3.4.1 EMA k-means codebook update from this window's assignments.
+///
+/// Builds the updated codebook directly from the EMA statistics — each
+/// element is written exactly once (rewritten rows from `es / smoothed`,
+/// untouched rows copied from `old_cb`) — instead of deep-cloning the full
+/// codebook first and then overwriting nearly all of it, which is what
+/// the previous `weights.cb.clone()` in the train step did every window.
 fn ema_update(
     layout: &Layout,
     accum: &TrainAccum,
-    cb: &mut Codebooks,
+    old_cb: &Codebooks,
     ema_count: &mut [Vec<f32>],
     ema_sum: &mut [Vec<f32>],
-) {
+) -> Codebooks {
     let cfg = &layout.cfg;
     let (s, dk) = (cfg.n_code, cfg.d_k);
     let gamma = cfg.ema_rate as f32;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
     for l in 0..cfg.n_layers {
         let counts = &accum.code_counts[l];
         let sums = &accum.key_sums[l];
         let ec = &mut ema_count[l];
         let es = &mut ema_sum[l];
-        let cbl = &mut cb.layers[l];
+        let old = &old_cb.layers[l];
         for (e, &c) in ec.iter_mut().zip(counts) {
             *e = gamma * *e + (1.0 - gamma) * c as f32;
         }
         for (e, &ks) in es.iter_mut().zip(sums) {
             *e = gamma * *e + (1.0 - gamma) * ks as f32;
         }
+        let mut cbl = vec![0.0f32; old.len()];
         for hd in 0..cfg.n_heads {
             let head = &ec[hd * s..(hd + 1) * s];
             let total: f32 = head.iter().sum();
-            if total <= 0.0 {
-                continue;
-            }
             for c in 0..s {
-                let smoothed = (head[c] + EMA_EPS) / (total + s as f32 * EMA_EPS) * total;
-                if smoothed <= 0.0 {
-                    continue;
-                }
                 let base = (hd * s + c) * dk;
-                for d in 0..dk {
-                    cbl[base + d] = es[base + d] / smoothed;
+                let smoothed = if total > 0.0 {
+                    (head[c] + EMA_EPS) / (total + s as f32 * EMA_EPS) * total
+                } else {
+                    0.0
+                };
+                if smoothed > 0.0 {
+                    for d in 0..dk {
+                        cbl[base + d] = es[base + d] / smoothed;
+                    }
+                } else {
+                    cbl[base..base + dk].copy_from_slice(&old[base..base + dk]);
                 }
             }
         }
+        layers.push(Arc::new(cbl));
     }
+    Codebooks { layers }
 }
 
 /// `<preset>.train`: one full §3.4.2 TBPTT update — backprop through the
@@ -299,8 +409,9 @@ pub(crate) fn run_train(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
-    nt: usize,
+    opts: &NativeOptions,
 ) -> Result<(Vec<HostTensor>, ParsedWeights)> {
+    let nt = opts.num_threads;
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
     let opt_base = sp.n_params + sp.n_cb;
@@ -375,11 +486,13 @@ pub(crate) fn run_train(
     let new_params = unflatten_params(&px, &flat);
 
     // --- EMA codebook learning (gradient-free, §3.4.1) --------------------
-    let mut new_cb = weights.cb.clone();
     let code_ppl = code_perplexity(layout, &out.accum);
-    if cfg.attn_type != "full" {
-        ema_update(layout, &out.accum, &mut new_cb, &mut ema_count, &mut ema_sum);
-    }
+    let new_cb = if cfg.attn_type != "full" {
+        ema_update(layout, &out.accum, &weights.cb, &mut ema_count, &mut ema_sum)
+    } else {
+        // dense presets never rewrite codebooks: share the Arc'd layers
+        weights.cb.clone()
+    };
 
     let loss = out.ce + cfg.commit_coef * out.commit;
     let metrics = [
@@ -412,7 +525,7 @@ pub(crate) fn run_eval(
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
-    nt: usize,
+    opts: &NativeOptions,
 ) -> Result<Vec<HostTensor>> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
@@ -420,7 +533,7 @@ pub(crate) fn run_eval(
     let mut st = State::parse(cfg, &inputs[st_base..st_base + sp.n_state])?;
     let tokens = inputs[st_base + sp.n_state].as_i32()?;
 
-    let steps = forward_window(layout, &weights.params, &weights.cb, &mut st, &tokens, nt);
+    let steps = forward_window(layout, &weights.params, &weights.cb, &mut st, &tokens, opts);
     let mut total_ce = 0.0f64;
     for (logits, target) in &steps {
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
@@ -436,26 +549,27 @@ pub(crate) fn run_eval(
     Ok(outputs)
 }
 
-/// Dispatch on the spec entry; shared by [`super::NativeExecutor`]. `nt` is
-/// the executor's thread budget (`NativeOptions::num_threads`; 0 = all
-/// cores). Returns the step outputs plus, for train, the freshly produced
-/// weights (so the executor can re-seed its identity-keyed cache without
-/// re-parsing).
+/// Dispatch on the spec entry; shared by [`super::NativeExecutor`].
+/// `opts` carries the executor's runtime knobs (thread budget, SIMD mode,
+/// decode batching — all fixed at executor init). Returns the step
+/// outputs plus, for train, the freshly produced weights (so the executor
+/// can re-seed its identity-keyed cache without re-parsing).
 pub(crate) fn run_entry(
     entry: &str,
     layout: &Layout,
     weights: &ParsedWeights,
     inputs: &[HostTensor],
-    nt: usize,
+    opts: &NativeOptions,
+    arena: &mut DecodeArena,
 ) -> Result<(Vec<HostTensor>, Option<ParsedWeights>)> {
     match entry {
-        "decode" => Ok((run_decode(layout, weights, inputs, nt)?, None)),
-        "prefill" => Ok((run_prefill(layout, weights, inputs, nt)?, None)),
+        "decode" => Ok((run_decode(layout, weights, inputs, opts, arena)?, None)),
+        "prefill" => Ok((run_prefill(layout, weights, inputs, opts, arena)?, None)),
         "train" => {
-            let (outputs, new_weights) = run_train(layout, weights, inputs, nt)?;
+            let (outputs, new_weights) = run_train(layout, weights, inputs, opts)?;
             Ok((outputs, Some(new_weights)))
         }
-        "eval" | "bench" => Ok((run_eval(layout, weights, inputs, nt)?, None)),
+        "eval" | "bench" => Ok((run_eval(layout, weights, inputs, opts)?, None)),
         other => bail!("native backend: unknown entry '{other}'"),
     }
 }

@@ -19,6 +19,14 @@
 //!   prefilling slot advances a whole chunk while co-resident decoders
 //!   advance one token, in the same step.
 //!
+//! On the native backend the prefill/decode entries additionally advance
+//! all addressed lanes through each model layer *together* (batched-lane
+//! decode: one GEMM per projection, weights streamed once per step — see
+//! DESIGN.md §7), so packing co-resident lanes into one [`Sampler::step_lanes`]
+//! call is not just fewer executor round-trips but higher arithmetic
+//! intensity per step. Lane results are bit-independent of co-residents
+//! either way.
+//!
 //! When the backend has no `.prefill` artifact (the PJRT path), the session
 //! API transparently falls back to full-batch token-by-token
 //! [`Sampler::step`] calls — same results for the addressed lanes, old cost

@@ -1,15 +1,27 @@
 //! The thread budget is a throughput knob, never a semantics knob: every
 //! native step must produce bit-identical outputs at `num_threads = 1` and
-//! `num_threads = N`. Batch lanes are disjoint row views, GEMM row bands
-//! keep per-row accumulation order fixed, and all merges walk rows in
-//! fixed order — these tests pin that contract at the executor surface.
+//! `num_threads = N`, *within each SIMD mode*. Batch lanes are disjoint
+//! row views, GEMM row bands keep per-row accumulation order fixed, and
+//! all merges walk rows in fixed order — these tests pin that contract at
+//! the executor surface for every ISA path this machine can run (scalar
+//! always; AVX2+FMA where detected), and additionally pin that batched
+//! and per-lane decode are each deterministic in the thread count.
 
-use transformer_vq::native::{NativeBackend, NativeOptions};
+use transformer_vq::native::{NativeBackend, NativeOptions, SimdMode};
 use transformer_vq::runtime::{Backend, StateBundle};
 use transformer_vq::tensor::HostTensor;
 
-fn backend(nt: usize) -> NativeBackend {
-    NativeBackend::new().with_options(NativeOptions { num_threads: nt })
+fn backend(nt: usize, simd: SimdMode, batched: bool) -> NativeBackend {
+    NativeBackend::new().with_options(NativeOptions {
+        num_threads: nt,
+        simd,
+        batched_decode: batched,
+    })
+}
+
+/// Every SIMD mode this machine can execute.
+fn modes() -> Vec<SimdMode> {
+    SimdMode::available()
 }
 
 /// Bit pattern of every f32 output tensor, for exact comparison.
@@ -22,8 +34,8 @@ fn bits(tensors: &[HostTensor]) -> Vec<Vec<u32>> {
 }
 
 /// Drive `steps` decode steps and return all outputs of the last one.
-fn decode_outputs(nt: usize, steps: usize) -> Vec<HostTensor> {
-    let b = backend(nt);
+fn decode_outputs(nt: usize, simd: SimdMode, batched: bool, steps: usize) -> Vec<HostTensor> {
+    let b = backend(nt, simd, batched);
     let exe = b.load("quickstart.decode").unwrap();
     let mut bundle = StateBundle::zeros_for(exe.spec());
     bundle.set_named(b.init_state("quickstart").unwrap());
@@ -41,17 +53,29 @@ fn decode_outputs(nt: usize, steps: usize) -> Vec<HostTensor> {
 
 #[test]
 fn decode_logits_bit_identical_across_thread_counts() {
-    let base = decode_outputs(1, 5);
-    for nt in [2usize, 4] {
-        let got = decode_outputs(nt, 5);
-        assert_eq!(bits(&base), bits(&got), "decode outputs diverged at num_threads={nt}");
+    for simd in modes() {
+        for batched in [true, false] {
+            let base = decode_outputs(1, simd, batched, 5);
+            for nt in [2usize, 4] {
+                let got = decode_outputs(nt, simd, batched, 5);
+                assert_eq!(
+                    bits(&base),
+                    bits(&got),
+                    "decode outputs diverged at num_threads={nt} \
+                     (simd={}, batched={batched})",
+                    simd.name()
+                );
+            }
+        }
     }
 }
 
 /// One full train step (backprop + Adam + EMA): new params, codebooks,
-/// optimizer state, carry, and metrics must all match bit for bit.
+/// optimizer state, carry, and metrics must all match bit for bit. (The
+/// train path is f64 autodiff — SIMD-mode independent — so one mode
+/// suffices.)
 fn train_outputs(nt: usize) -> Vec<HostTensor> {
-    let b = backend(nt);
+    let b = NativeBackend::new().with_options(NativeOptions::with_threads(nt));
     let exe = b.load("quickstart.train").unwrap();
     let mut bundle = StateBundle::zeros_for(exe.spec());
     bundle.set_named(b.init_state("quickstart").unwrap());
@@ -75,9 +99,9 @@ fn train_step_bit_identical_across_thread_counts() {
 }
 
 /// The dense "Full" bench path (token-parallel attention + row-banded
-/// GEMMs) under a whole eval window.
-fn dense_bench_outputs(nt: usize) -> Vec<HostTensor> {
-    let b = backend(nt);
+/// GEMMs) under a whole eval window, per SIMD mode.
+fn dense_bench_outputs(nt: usize, simd: SimdMode) -> Vec<HostTensor> {
+    let b = backend(nt, simd, true);
     let name = "tput-shga-full-T256";
     let exe = b.load(name).unwrap();
     let mut bundle = StateBundle::zeros_for(exe.spec());
@@ -92,9 +116,16 @@ fn dense_bench_outputs(nt: usize) -> Vec<HostTensor> {
 
 #[test]
 fn dense_bench_bit_identical_across_thread_counts() {
-    let base = dense_bench_outputs(1);
-    for nt in [2usize, 4] {
-        let got = dense_bench_outputs(nt);
-        assert_eq!(bits(&base), bits(&got), "dense bench diverged at num_threads={nt}");
+    for simd in modes() {
+        let base = dense_bench_outputs(1, simd);
+        for nt in [2usize, 4] {
+            let got = dense_bench_outputs(nt, simd);
+            assert_eq!(
+                bits(&base),
+                bits(&got),
+                "dense bench diverged at num_threads={nt} (simd={})",
+                simd.name()
+            );
+        }
     }
 }

@@ -1,0 +1,171 @@
+//! SIMD-vs-scalar kernel oracles: for every f32 kernel the engine
+//! dispatches through `SimdMode`, the AVX2+FMA implementation must agree
+//! with the scalar reference to ≤ 1e-5 relative tolerance over random
+//! shapes — including remainder lanes (lengths not divisible by the
+//! 4/8/16-wide unroll widths) and shapes straddling the GEMM tile
+//! boundaries. Also pins that each mode is bit-deterministic (same
+//! inputs → same bits on repeat), which is the per-mode half of the
+//! ISA-dispatch determinism contract (DESIGN.md §7).
+//!
+//! On machines without AVX2+FMA these tests reduce to scalar-vs-scalar
+//! and pass trivially; CI exercises both dispatch outcomes by running the
+//! whole suite under `TVQ_SIMD=0` and `TVQ_SIMD=1`.
+
+use transformer_vq::native::kernels;
+use transformer_vq::native::SimdMode;
+use transformer_vq::rng::Rng;
+use transformer_vq::testutil::check_property;
+
+const TOL: f64 = 1e-5;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// A dimension that frequently lands on unroll remainders: mixes exact
+/// multiples of 16/8/4 with off-by-one-to-three sizes and tile-straddling
+/// sizes.
+fn tricky_dim(rng: &mut Rng, max: usize) -> usize {
+    let base = 1 + rng.below(max as u64) as usize;
+    match rng.below(4) {
+        0 => base / 8 * 8 + 1,            // just past a vector boundary
+        1 => base / 16 * 16,              // exact multiple (incl. 0 -> bump)
+        2 => base,                        // arbitrary
+        _ => (base / 4 * 4).saturating_sub(1), // just short of a quad
+    }
+    .max(1)
+}
+
+fn close(got: f32, want: f32, what: &str) {
+    let (g, w) = (got as f64, want as f64);
+    assert!(
+        (g - w).abs() <= TOL * (1.0 + w.abs()),
+        "{what}: simd {g} vs scalar {w} (diff {})",
+        (g - w).abs()
+    );
+}
+
+#[test]
+fn prop_dot_simd_matches_scalar() {
+    let simd = SimdMode::detect();
+    check_property("dot: simd == scalar (tol 1e-5)", 40, |rng| {
+        let n = tricky_dim(rng, 300) - 1; // include n = 0
+        let a = rand_vec(rng, n);
+        let b = rand_vec(rng, n);
+        let got = simd.dot(&a, &b);
+        let want = SimdMode::Scalar.dot(&a, &b);
+        close(got, want, &format!("dot(n={n})"));
+        // per-mode bit determinism on repeat
+        assert_eq!(got.to_bits(), simd.dot(&a, &b).to_bits());
+    });
+}
+
+#[test]
+fn prop_matvec_simd_matches_scalar() {
+    let simd = SimdMode::detect();
+    check_property("matvec/matvec_add: simd == scalar (tol 1e-5)", 40, |rng| {
+        let k = tricky_dim(rng, 160);
+        let n = tricky_dim(rng, 300);
+        let w = rand_vec(rng, k * n);
+        let x = rand_vec(rng, k);
+        let mut got = rand_vec(rng, n); // non-zero start exercises _add
+        let mut want = got.clone();
+        simd.matvec_add(&w, &x, &mut got);
+        SimdMode::Scalar.matvec_add(&w, &x, &mut want);
+        for (j, (&g, &v)) in got.iter().zip(&want).enumerate() {
+            close(g, v, &format!("matvec_add({k},{n})[{j}]"));
+        }
+        simd.matvec(&w, &x, &mut got);
+        SimdMode::Scalar.matvec(&w, &x, &mut want);
+        for (j, (&g, &v)) in got.iter().zip(&want).enumerate() {
+            close(g, v, &format!("matvec({k},{n})[{j}]"));
+        }
+    });
+}
+
+#[test]
+fn prop_gemm_simd_matches_scalar() {
+    let simd = SimdMode::detect();
+    check_property("gemm/gemm_add: simd == scalar (tol 1e-5)", 25, |rng| {
+        let m = 1 + rng.below(9) as usize;
+        // straddle TILE_K / TILE_N with some probability
+        let k = if rng.below(2) == 0 {
+            kernels::TILE_K - 2 + rng.below(5) as usize
+        } else {
+            tricky_dim(rng, 100)
+        };
+        let n = if rng.below(2) == 0 {
+            kernels::TILE_N - 3 + rng.below(7) as usize
+        } else {
+            tricky_dim(rng, 300)
+        };
+        let a = rand_vec(rng, m * k);
+        let b = rand_vec(rng, k * n);
+        let mut got = rand_vec(rng, m * n);
+        let mut want = got.clone();
+        simd.gemm_add(m, k, n, &a, &b, &mut got);
+        SimdMode::Scalar.gemm_add(m, k, n, &a, &b, &mut want);
+        for (j, (&g, &v)) in got.iter().zip(&want).enumerate() {
+            close(g, v, &format!("gemm_add({m},{k},{n})[{j}]"));
+        }
+        simd.gemm(m, k, n, &a, &b, &mut got);
+        SimdMode::Scalar.gemm(m, k, n, &a, &b, &mut want);
+        for (j, (&g, &v)) in got.iter().zip(&want).enumerate() {
+            close(g, v, &format!("gemm({m},{k},{n})[{j}]"));
+        }
+    });
+}
+
+#[test]
+fn prop_nearest_code_simd_matches_scalar() {
+    let simd = SimdMode::detect();
+    check_property("nearest_code: simd pick is a scalar argmin (tol)", 40, |rng| {
+        let s = 1 + rng.below(40) as usize;
+        let dk = tricky_dim(rng, 40);
+        let cb = rand_vec(rng, s * dk);
+        let x = rand_vec(rng, dk);
+        let got = simd.nearest_code(&x, &cb, s, dk);
+        let want = kernels::nearest_code(&x, &cb, s, dk);
+        if got != want {
+            // last-ulp distance ties may resolve differently across
+            // modes; the picked code must then be equidistant in f64
+            let d = |c: usize| -> f64 {
+                (0..dk).map(|i| (x[i] as f64 - cb[c * dk + i] as f64).powi(2)).sum()
+            };
+            assert!(
+                (d(got) - d(want)).abs() <= TOL * (1.0 + d(want)),
+                "nearest_code(s={s},dk={dk}): simd picked {got} (d={}), \
+                 scalar {want} (d={})",
+                d(got),
+                d(want)
+            );
+        }
+    });
+}
+
+/// gemm_par must equal the sequential kernel bit for bit at any thread
+/// count in both modes (band ownership never changes accumulation order).
+#[test]
+fn prop_gemm_par_nt_invariant_per_mode() {
+    check_property("gemm_par: nt-invariant bits per mode", 10, |rng| {
+        let m = 2 + rng.below(14) as usize;
+        let k = tricky_dim(rng, 130);
+        let n = tricky_dim(rng, 200);
+        let a = rand_vec(rng, m * k);
+        let b = rand_vec(rng, k * n);
+        for mode in [SimdMode::Scalar, SimdMode::detect()] {
+            let mut base = vec![0.0f32; m * n];
+            mode.gemm(m, k, n, &a, &b, &mut base);
+            for nt in [1usize, 2, 4] {
+                let mut c = vec![f32::NAN; m * n];
+                mode.gemm_par(nt, m, k, n, &a, &b, &mut c);
+                assert_eq!(
+                    base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{} gemm_par(m={m},k={k},n={n},nt={nt})",
+                    mode.name()
+                );
+            }
+        }
+    });
+}

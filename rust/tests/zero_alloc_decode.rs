@@ -1,0 +1,107 @@
+//! Steady-state decode performs zero heap allocations per token.
+//!
+//! A counting global allocator wraps the system allocator; after a warmup
+//! that crosses several block boundaries (so the compressive-cache fold
+//! path is inside the measured regime, not just the easy window-append
+//! steps), a full window's worth of further `DecodeSession::step` calls
+//! must not allocate at all. This pins the scratch-arena design of
+//! `native::model`: every per-token temporary — activations, attention
+//! scores/values, readout logits — lives in preallocated buffers owned by
+//! the session.
+//!
+//! Scope: the contract is per the session's default configuration,
+//! batched decode at `num_threads = 1`. With `num_threads > 1` the pool
+//! dispatch itself allocates a few bookkeeping objects per step (see
+//! DESIGN.md §7), so this file pins the single-thread path only.
+//!
+//! This integration test deliberately contains exactly one `#[test]`: the
+//! allocation counter is process-global, and a concurrently running test
+//! would pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates every operation to `System`; only adds a relaxed
+// counter bump on the allocating entry points.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use transformer_vq::native::{DecodeSession, NativeBackend, NativeOptions};
+
+#[test]
+fn steady_state_decode_allocates_nothing_per_token() {
+    // pin the contract's configuration explicitly: batched lanes at one
+    // thread (TVQ_BATCHED_DECODE=0 in the environment must not flip this
+    // test onto the per-lane path, which rebuilds row views per step);
+    // the SIMD mode stays env-controlled so CI covers both ISAs
+    let backend = NativeBackend::new().with_options(NativeOptions {
+        num_threads: 1,
+        batched_decode: true,
+        ..NativeOptions::default()
+    });
+    let mut sess = DecodeSession::new(&backend, "quickstart").unwrap();
+    let b = sess.batch_size();
+    let block_len = sess.config().block_len;
+
+    // token buffer allocated once, refilled in place each step
+    let mut tokens = vec![0i32; b];
+    let mut fill = |step: usize, tokens: &mut [i32]| {
+        for (r, t) in tokens.iter_mut().enumerate() {
+            *t = ((step * 31 + r * 7) % 251) as i32;
+        }
+    };
+
+    // warmup: past pos = 2L the cache fold fires every L steps, so the
+    // measured window below contains fold steps — the "hardest" steady
+    // state — not just window appends
+    let warmup = 4 * block_len + 3;
+    for s in 0..warmup {
+        fill(s, &mut tokens);
+        sess.step(&tokens).unwrap();
+    }
+    assert!(sess.positions().iter().all(|&p| p as usize == warmup));
+
+    let measured = 2 * block_len;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for s in warmup..warmup + measured {
+        fill(s, &mut tokens);
+        sess.step(&tokens).unwrap();
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state decode allocated {} times over {measured} steps \
+         ({} tokens) — the scratch arenas have a leak back to the heap",
+        after - before,
+        measured * b
+    );
+
+    // sanity: the session still produces finite logits after measurement
+    assert!(sess.logits().iter().all(|x| x.is_finite()));
+}
