@@ -24,6 +24,11 @@
 //! always land in the artifact, a miss prints a warning instead of
 //! failing CI, since both depend on CI hardware.
 //!
+//! The PR-6 axis sweeps weight precision (f32/bf16/int8, see DESIGN.md §7
+//! for the bytes/token roofline) at B ∈ {1, 8} over the same positions;
+//! `bf16_speedup` (target >= 1.3x) and `int8_speedup` (target >= 1.6x) at
+//! B = 1 are soft-asserted the same way.
+//!
 //! Emits `BENCH_native_decode.json` (path overridable) so CI can track the
 //! perf trajectory across PRs. See DESIGN.md §7 for how to read it.
 //!
@@ -32,7 +37,7 @@
 use anyhow::Result;
 use transformer_vq::json::Json;
 use transformer_vq::native::{
-    kernels, preset_config, DecodeSession, NativeBackend, NativeOptions, SimdMode,
+    kernels, preset_config, DecodeSession, NativeBackend, NativeOptions, Precision, SimdMode,
 };
 use transformer_vq::runtime::{Backend, StateBundle};
 use transformer_vq::tensor::HostTensor;
@@ -84,6 +89,7 @@ fn drive_session(
     max_pos: usize,
     simd: SimdMode,
     batched: bool,
+    precision: Precision,
 ) -> Result<Vec<f64>> {
     let mut cfg = preset_config(preset)?;
     cfg.batch_size = batch;
@@ -92,6 +98,7 @@ fn drive_session(
         num_threads: 0,
         simd,
         batched_decode: batched,
+        precision,
     });
     let mut sess = DecodeSession::new(&backend, &name)?;
     let mut tokens = vec![0i32; batch];
@@ -218,8 +225,11 @@ fn main() -> Result<()> {
     let detected = SimdMode::from_env();
     let mut simd_curves: Vec<(SimdMode, Vec<f64>)> = Vec::new();
     let mut lane_curves: Vec<(usize, bool, Vec<f64>)> = Vec::new();
+    let mut precision_curves: Vec<(Precision, usize, Vec<f64>)> = Vec::new();
     let mut simd_speedup = None;
     let mut batched_speedup_b8 = None;
+    let mut bf16_speedup = None;
+    let mut int8_speedup = None;
     if session_max > 0 {
         let mut simd_modes = vec![detected];
         if detected != SimdMode::Scalar {
@@ -232,7 +242,7 @@ fn main() -> Result<()> {
         }
         println!();
         for &simd in &simd_modes {
-            let ns = drive_session(preset, 1, session_max, simd, true)?;
+            let ns = drive_session(preset, 1, session_max, simd, true, Precision::F32)?;
             let tps = tps_at(&ns, &session_positions, window, 1);
             print!("{:>9}", simd.name());
             for t in &tps {
@@ -255,7 +265,7 @@ fn main() -> Result<()> {
         println!();
         for &bsz in &[1usize, 4, 8] {
             for &batched in &[true, false] {
-                let ns = drive_session(preset, bsz, session_max, detected, batched)?;
+                let ns = drive_session(preset, bsz, session_max, detected, batched, Precision::F32)?;
                 let tps = tps_at(&ns, &session_positions, window, bsz);
                 print!("{bsz:>9} {:>9}", if batched { "batched" } else { "per-lane" });
                 for t in &tps {
@@ -288,6 +298,56 @@ fn main() -> Result<()> {
             println!(
                 "batched-lane speedup at B=8, pos {session_max}: {s:.2}x \
                  (target >= 2x) {verdict}"
+            );
+        }
+
+        // --- PR-6 axis: weight precision f32/bf16/int8 ---------------------
+        println!(
+            "\nprecision sweep (DecodeSession, simd={}, batched lanes):",
+            detected.name()
+        );
+        print!("{:>9} {:>9}", "precision", "batch");
+        for p in &session_positions {
+            print!(" {:>11}", format!("tok/s@{p}"));
+        }
+        println!();
+        for &bsz in &[1usize, 8] {
+            for &precision in &[Precision::F32, Precision::Bf16, Precision::Int8] {
+                let ns = drive_session(preset, bsz, session_max, detected, true, precision)?;
+                let tps = tps_at(&ns, &session_positions, window, bsz);
+                print!("{:>9} {bsz:>9}", precision.name());
+                for t in &tps {
+                    print!(" {t:>11.0}");
+                }
+                println!();
+                precision_curves.push((precision, bsz, tps));
+            }
+        }
+        // headline ratios: reduced-precision vs f32, B=1, largest position
+        let prec_last = |precision: Precision, bsz: usize| {
+            precision_curves
+                .iter()
+                .find(|(p, b, _)| *p == precision && *b == bsz)
+                .and_then(|(_, _, tps)| tps.last().copied())
+        };
+        if let (Some(base), Some(b16), Some(i8t)) = (
+            prec_last(Precision::F32, 1),
+            prec_last(Precision::Bf16, 1),
+            prec_last(Precision::Int8, 1),
+        ) {
+            bf16_speedup = Some(b16 / base);
+            int8_speedup = Some(i8t / base);
+        }
+        if let Some(s) = bf16_speedup {
+            let verdict = if s >= 1.3 { "OK" } else { "BELOW TARGET (soft)" };
+            println!(
+                "bf16 speedup at B=1, pos {session_max}: {s:.2}x (target >= 1.3x) {verdict}"
+            );
+        }
+        if let Some(s) = int8_speedup {
+            let verdict = if s >= 1.6 { "OK" } else { "BELOW TARGET (soft)" };
+            println!(
+                "int8 speedup at B=1, pos {session_max}: {s:.2}x (target >= 1.6x) {verdict}"
             );
         }
     }
@@ -357,11 +417,32 @@ fn main() -> Result<()> {
                 .collect(),
         ),
     ));
+    fields.push((
+        "precision_curves",
+        Json::Arr(
+            precision_curves
+                .iter()
+                .map(|(precision, bsz, tps)| {
+                    Json::obj(vec![
+                        ("precision", Json::str(precision.name())),
+                        ("batch", Json::num(*bsz as f64)),
+                        ("tokens_per_sec", jarr(tps)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
     if let Some(s) = simd_speedup {
         fields.push(("simd_speedup", Json::num(s)));
     }
     if let Some(s) = batched_speedup_b8 {
         fields.push(("batched_speedup_b8", Json::num(s)));
+    }
+    if let Some(s) = bf16_speedup {
+        fields.push(("bf16_speedup", Json::num(s)));
+    }
+    if let Some(s) = int8_speedup {
+        fields.push(("int8_speedup", Json::num(s)));
     }
     let j = Json::obj(fields);
     std::fs::write(out_path, j.dump())?;

@@ -44,6 +44,9 @@ auto-detects AVX2+FMA; also TVQ_SIMD=0 to force the scalar fallback —
 bits are deterministic per mode, modes agree to kernel tolerance).
 --batched-decode on|off toggles advancing all active decode lanes through
 each layer together (default on; also TVQ_BATCHED_DECODE=0).
+--precision f32|bf16|int8 picks the decode/prefill weight precision
+(default f32; also TVQ_PRECISION). Weights quantize once at install;
+accumulation stays f32, bits are deterministic per precision mode.
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -132,6 +135,15 @@ fn main() -> Result<()> {
             other => bail!("bad value for --batched-decode: '{other}' (want on|off)"),
         };
         std::env::set_var("TVQ_BATCHED_DECODE", v);
+    }
+    if let Some(p) = args.opt("precision") {
+        let v = match p.as_str() {
+            "f32" | "full" => "f32",
+            "bf16" => "bf16",
+            "int8" | "i8" => "int8",
+            other => bail!("bad value for --precision: '{other}' (want f32|bf16|int8)"),
+        };
+        std::env::set_var("TVQ_PRECISION", v);
     }
 
     match cmd.as_str() {

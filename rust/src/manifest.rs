@@ -153,7 +153,10 @@ impl ArtifactSpec {
 
     /// Total input bytes (all leaves), for state-size reporting.
     pub fn input_bytes(&self) -> usize {
-        self.inputs.iter().map(|l| l.element_count() * 4).sum()
+        self.inputs
+            .iter()
+            .map(|l| l.element_count() * l.dtype.size_bytes())
+            .sum()
     }
 }
 
@@ -253,6 +256,38 @@ mod tests {
         assert_eq!(a.config.n_code, 32);
         assert!((a.config.commit_coef - 1e-4).abs() < 1e-12);
         assert_eq!(a.input_bytes(), 256 * 64 * 4 + 4 * 65 * 4);
+    }
+
+    #[test]
+    fn parses_reduced_precision_dtypes() {
+        // same artifact, but with bf16 weight + i8 weight + f32 scale leaves:
+        // the manifest layer must round-trip the new dtypes and size them
+        // by their actual element width (2 and 1 bytes, not a hardcoded 4)
+        let text = sample_manifest_json()
+            .replace(
+                r#"{"group": "params", "path": "['embed']", "shape": [256, 64], "dtype": "f32"}"#,
+                r#"{"group": "params", "path": "['embed']", "shape": [256, 64], "dtype": "bf16"},
+                   {"group": "params", "path": "['wout']", "shape": [64, 256], "dtype": "i8"},
+                   {"group": "params", "path": "['wout_scale']", "shape": [64], "dtype": "f32"}"#,
+            );
+        let m = Manifest::parse(&text, PathBuf::from("/x")).unwrap();
+        let a = m.get("p.train").unwrap();
+        let params = a.input_group("params");
+        assert_eq!(params.len(), 3);
+        assert_eq!(params[0].1.dtype, DType::Bf16);
+        assert_eq!(params[1].1.dtype, DType::I8);
+        assert_eq!(params[2].1.dtype, DType::F32);
+        assert_eq!(
+            a.input_bytes(),
+            256 * 64 * 2 + 64 * 256 + 64 * 4 + 4 * 65 * 4
+        );
+    }
+
+    #[test]
+    fn unknown_dtype_error_lists_accepted() {
+        let text = sample_manifest_json().replace("\"dtype\": \"i32\"", "\"dtype\": \"f64\"");
+        let err = format!("{:#}", Manifest::parse(&text, PathBuf::from("/x")).unwrap_err());
+        assert!(err.contains("f64") && err.contains("bf16") && err.contains("i8"), "{err}");
     }
 
     #[test]

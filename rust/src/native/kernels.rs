@@ -38,6 +38,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::tensor::bf16_to_f32;
+
 // ---------------------------------------------------------------------------
 // tiling parameters
 // ---------------------------------------------------------------------------
@@ -207,6 +209,282 @@ pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
         }
     }
     best
+}
+
+// ---------------------------------------------------------------------------
+// reduced-precision kernels: bf16 / int8 weights, f32 accumulation
+// ---------------------------------------------------------------------------
+//
+// Twins of the f32 kernels above for quantized *weight* operands (the
+// streamed right-hand matrix); activations and accumulators stay f32, and
+// loop structure, unrolling, and accumulation order mirror the f32 kernels
+// exactly, so every per-mode bit-determinism argument carries over.
+//
+// bf16 widens by zero-extending the mantissa ([`bf16_to_f32`], a bit
+// shift), which makes these kernels *bit-identical* to the f32 kernels run
+// on the dequantized weights. int8 folds the per-k-row scale into the
+// broadcast activation scalar (`x[i] * scale[i]`), keeping one multiply
+// per inner-loop element; that folding reassociates one multiplication
+// (`(x·s)·q` vs `x·(s·q)`), so int8 results agree with f32-on-dequantized
+// to rounding tolerance rather than bitwise — still bit-deterministic
+// within the mode. The int8 codebook scan performs no such folding
+// (`x - s·q` is exactly the dequantized subtraction), so its distances and
+// argmin match the f32 scan over the dequantized codebook bit for bit.
+
+/// bf16 twin of [`matvec_add`]: `out += x @ w` with `w` stored as bf16,
+/// row-major `[x.len(), out.len()]`. Bit-identical to
+/// `matvec_add(dequantized(w), x, out)`.
+pub fn matvec_add_bf16(w: &[u16], x: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n);
+    let mut i = 0;
+    while i + 4 <= k {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            i += 4;
+            continue;
+        }
+        let r0 = &w[i * n..(i + 1) * n];
+        let r1 = &w[(i + 1) * n..(i + 2) * n];
+        let r2 = &w[(i + 2) * n..(i + 3) * n];
+        let r3 = &w[(i + 3) * n..(i + 4) * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += x0 * bf16_to_f32(r0[j])
+                + x1 * bf16_to_f32(r1[j])
+                + x2 * bf16_to_f32(r2[j])
+                + x3 * bf16_to_f32(r3[j]);
+        }
+        i += 4;
+    }
+    while i < k {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &w[i * n..(i + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * bf16_to_f32(wv);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// bf16 twin of [`gemm_add`]: `c += a @ b` with `b` stored as bf16. Same
+/// [`TILE_K`] × [`TILE_N`] blocking and loop order.
+pub fn gemm_add_bf16(m: usize, k: usize, n: usize, a: &[f32], b: &[u16], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE_N).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                let mut kk = k0;
+                while kk + 4 <= k1 {
+                    let (x0, x1, x2, x3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    let r0 = &b[kk * n + j0..kk * n + j1];
+                    let r1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                    let r2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                    let r3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                    for (j, o) in crow.iter_mut().enumerate() {
+                        *o += x0 * bf16_to_f32(r0[j])
+                            + x1 * bf16_to_f32(r1[j])
+                            + x2 * bf16_to_f32(r2[j])
+                            + x3 * bf16_to_f32(r3[j]);
+                    }
+                    kk += 4;
+                }
+                while kk < k1 {
+                    let xi = arow[kk];
+                    if xi != 0.0 {
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in crow.iter_mut().zip(brow) {
+                            *o += xi * bf16_to_f32(bv);
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// int8 twin of [`matvec_add`]: `out += x @ dequant(w)` with `w` stored as
+/// int8 row-major `[x.len(), out.len()]` and one f32 `scale` per k-row.
+/// The scale is folded into the broadcast scalar (`x[i] * scale[i]`), so
+/// the inner loop stays one multiply-add per element.
+pub fn matvec_add_i8(w: &[i8], scale: &[f32], x: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(scale.len(), k);
+    let mut i = 0;
+    while i + 4 <= k {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+            i += 4;
+            continue;
+        }
+        let (s0, s1, s2, s3) =
+            (x0 * scale[i], x1 * scale[i + 1], x2 * scale[i + 2], x3 * scale[i + 3]);
+        let r0 = &w[i * n..(i + 1) * n];
+        let r1 = &w[(i + 1) * n..(i + 2) * n];
+        let r2 = &w[(i + 2) * n..(i + 3) * n];
+        let r3 = &w[(i + 3) * n..(i + 4) * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += s0 * (r0[j] as f32)
+                + s1 * (r1[j] as f32)
+                + s2 * (r2[j] as f32)
+                + s3 * (r3[j] as f32);
+        }
+        i += 4;
+    }
+    while i < k {
+        let xi = x[i];
+        if xi != 0.0 {
+            let si = xi * scale[i];
+            let row = &w[i * n..(i + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += si * (wv as f32);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// int8 twin of [`gemm_add`]: `c += a @ dequant(b)` with `b` stored as
+/// int8 and one f32 `scale` per k-row, folded into the broadcast scalar.
+pub fn gemm_add_i8(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[i8],
+    scale: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(scale.len(), k);
+    debug_assert_eq!(c.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TILE_N).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                let mut kk = k0;
+                while kk + 4 <= k1 {
+                    let (x0, x1, x2, x3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    let (s0, s1, s2, s3) = (
+                        x0 * scale[kk],
+                        x1 * scale[kk + 1],
+                        x2 * scale[kk + 2],
+                        x3 * scale[kk + 3],
+                    );
+                    let r0 = &b[kk * n + j0..kk * n + j1];
+                    let r1 = &b[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                    let r2 = &b[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                    let r3 = &b[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                    for (j, o) in crow.iter_mut().enumerate() {
+                        *o += s0 * (r0[j] as f32)
+                            + s1 * (r1[j] as f32)
+                            + s2 * (r2[j] as f32)
+                            + s3 * (r3[j] as f32);
+                    }
+                    kk += 4;
+                }
+                while kk < k1 {
+                    let xi = arow[kk];
+                    if xi != 0.0 {
+                        let si = xi * scale[kk];
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in crow.iter_mut().zip(brow) {
+                            *o += si * (bv as f32);
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// int8 twin of [`nearest_code`]: nearest row (L2) among `s` int8 rows of
+/// width `dk` with one f32 `scale` per row. Each element dequantizes as
+/// `scale[c] * q` — the exact value the dequantized f32 codebook holds —
+/// so distances and the strict-`<` argmin match
+/// `nearest_code(x, dequantized, s, dk)` bit for bit.
+pub fn nearest_code_i8(x: &[f32], codebook: &[i8], scale: &[f32], s: usize, dk: usize) -> usize {
+    debug_assert_eq!(codebook.len(), s * dk);
+    debug_assert_eq!(scale.len(), s);
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for c in 0..s {
+        let row = &codebook[c * dk..(c + 1) * dk];
+        let sc = scale[c];
+        let mut d = 0.0f32;
+        for (a, &b) in x.iter().zip(row) {
+            let t = a - sc * (b as f32);
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Quantize `w.len() / n` rows of width `n` to int8 with one f32 scale per
+/// row: `scale[i] = max_j |w[i,j]| / 127`, `q[i,j] = round(w[i,j] /
+/// scale[i])` clamped to the symmetric range `[-127, 127]` (-128 is never
+/// produced). An all-zero row gets scale 0 and all-zero codes. The pass is
+/// deterministic, and stable on its own output: requantizing
+/// `scale[i] * q[i,j]` reproduces the codes `q` exactly (the scale agrees
+/// to within one f32 rounding step).
+pub fn quantize_rows_i8(w: &[f32], n: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(n > 0 && w.len() % n == 0, "bad row width {n} for {} elements", w.len());
+    let k = w.len() / n;
+    let mut q = vec![0i8; w.len()];
+    let mut scale = vec![0.0f32; k];
+    for i in 0..k {
+        let row = &w[i * n..(i + 1) * n];
+        let mut amax = 0.0f32;
+        for &v in row {
+            amax = amax.max(v.abs());
+        }
+        if amax == 0.0 {
+            continue; // scale 0, codes 0: dequantizes to the exact zeros
+        }
+        let s = amax / 127.0;
+        scale[i] = s;
+        for (qv, &v) in q[i * n..(i + 1) * n].iter_mut().zip(row) {
+            *qv = (v / s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scale)
+}
+
+/// Dequantize int8 rows back to f32: `out[i,j] = scale[i] * q[i,j]`. This
+/// single multiply is the canonical dequantized value — the same one the
+/// int8 kernels reconstruct in-register.
+pub fn dequantize_rows_i8(q: &[i8], scale: &[f32], n: usize) -> Vec<f32> {
+    assert!(n > 0 && q.len() % n == 0, "bad row width {n} for {} elements", q.len());
+    debug_assert_eq!(scale.len(), q.len() / n);
+    q.iter().enumerate().map(|(ix, &v)| scale[ix / n] * (v as f32)).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -609,6 +887,112 @@ mod tests {
         let d = dot64(&x, &w[..k]);
         let want: f64 = (0..k).map(|i| x[i] * w[i]).sum();
         assert!((d - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bf16_kernels_bit_match_f32_on_dequantized_weights() {
+        use crate::tensor::f32_to_bf16;
+        let mut rng = Rng::new(0xBF16);
+        for &(m, k, n) in &[(1usize, 5usize, 9usize), (3, 64, 128), (4, 67, 131), (2, 130, 31)] {
+            let wf = rand_vec(&mut rng, k * n);
+            let wq: Vec<u16> = wf.iter().map(|&v| f32_to_bf16(v)).collect();
+            let deq: Vec<f32> = wq.iter().map(|&v| bf16_to_f32(v)).collect();
+            let x = rand_vec(&mut rng, k);
+            let mut got = rand_vec(&mut rng, n);
+            let mut want = got.clone();
+            matvec_add_bf16(&wq, &x, &mut got);
+            matvec_add(&deq, &x, &mut want);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "matvec_add_bf16({k},{n})"
+            );
+            let a = rand_vec(&mut rng, m * k);
+            let mut cg = rand_vec(&mut rng, m * n);
+            let mut cw = cg.clone();
+            gemm_add_bf16(m, k, n, &a, &wq, &mut cg);
+            gemm_add(m, k, n, &a, &deq, &mut cw);
+            assert_eq!(
+                cg.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                cw.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "gemm_add_bf16({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_kernels_match_f32_on_dequantized_weights() {
+        let mut rng = Rng::new(0x18);
+        for &(m, k, n) in &[(1usize, 5usize, 9usize), (3, 64, 128), (4, 67, 131), (2, 130, 31)] {
+            let wf = rand_vec(&mut rng, k * n);
+            let (q, scale) = quantize_rows_i8(&wf, n);
+            let deq = dequantize_rows_i8(&q, &scale, n);
+            let x = rand_vec(&mut rng, k);
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            matvec_add_i8(&q, &scale, &x, &mut got);
+            matvec_add(&deq, &x, &mut want);
+            // scale folding reassociates one multiply -> tolerance, not bits
+            for (j, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g as f64 - w as f64).abs() <= 1e-5 * (1.0 + w.abs() as f64),
+                    "matvec_add_i8({k},{n})[{j}]: {g} vs {w}"
+                );
+            }
+            let a = rand_vec(&mut rng, m * k);
+            let mut cg = vec![0.0f32; m * n];
+            let mut cw = vec![0.0f32; m * n];
+            gemm_add_i8(m, k, n, &a, &q, &scale, &mut cg);
+            gemm_add(m, k, n, &a, &deq, &mut cw);
+            for (j, (&g, &w)) in cg.iter().zip(&cw).enumerate() {
+                assert!(
+                    (g as f64 - w as f64).abs() <= 1e-5 * (1.0 + w.abs() as f64),
+                    "gemm_add_i8({m},{k},{n})[{j}]: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_code_i8_exactly_matches_f32_scan_on_dequantized() {
+        let mut rng = Rng::new(0x5CA1E);
+        for _ in 0..50 {
+            let s = 1 + (rng.next_u64() % 40) as usize;
+            let dk = 1 + (rng.next_u64() % 33) as usize;
+            let cb = rand_vec(&mut rng, s * dk);
+            let (q, scale) = quantize_rows_i8(&cb, dk);
+            let deq = dequantize_rows_i8(&q, &scale, dk);
+            let x = rand_vec(&mut rng, dk);
+            assert_eq!(
+                nearest_code_i8(&x, &q, &scale, s, dk),
+                nearest_code(&x, &deq, s, dk),
+                "s={s} dk={dk}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_rows_i8_error_bound_and_stability() {
+        let mut rng = Rng::new(0x1A8);
+        let n = 37;
+        let mut w = rand_vec(&mut rng, 5 * n);
+        w[2 * n..3 * n].fill(0.0); // an all-zero row
+        let (q, scale) = quantize_rows_i8(&w, n);
+        assert_eq!(scale[2], 0.0);
+        assert!(q[2 * n..3 * n].iter().all(|&v| v == 0));
+        let deq = dequantize_rows_i8(&q, &scale, n);
+        for (i, (&v, &d)) in w.iter().zip(&deq).enumerate() {
+            let s = scale[i / n];
+            // half a step plus the float rounding of the divide and the
+            // dequant multiply (each ≤ 127·2^-24 steps)
+            assert!((v - d).abs() <= s * 0.5001, "[{i}]: {v} vs {d} (scale {s})");
+        }
+        // requantizing the dequantized rows reproduces the codes exactly
+        let (q2, scale2) = quantize_rows_i8(&deq, n);
+        assert_eq!(q, q2);
+        for (&a, &b) in scale.iter().zip(&scale2) {
+            assert!((a - b).abs() <= a.abs() * 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

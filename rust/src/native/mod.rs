@@ -36,6 +36,13 @@
 //!   each layer together (one GEMM per projection, weights streamed once
 //!   per step; the default) vs. one lane per pool item
 //!   (`TVQ_BATCHED_DECODE=0`).
+//! * `precision` — weight precision for decode/prefill ([`Precision`];
+//!   `TVQ_PRECISION=bf16|int8` / `--precision`). Weights are quantized
+//!   once at install time and streamed as bf16 or int8-with-row-scales
+//!   while all accumulation stays f32; train/eval always run f32/f64.
+//!   Bits are deterministic per (SIMD × precision) pair at any thread
+//!   count; reduced modes agree with f32 to pinned tolerances
+//!   (`rust/tests/precision_oracle.rs`).
 //!
 //! [`DecodeSession`] is the allocation-free stateful decode loop on top
 //! of the same model code: weights parsed once, state and scratch arenas
@@ -52,7 +59,7 @@ mod step;
 
 pub use layout::Layout;
 pub use session::DecodeSession;
-pub use simd::SimdMode;
+pub use simd::{MatRef, Precision, SimdMode};
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -193,6 +200,13 @@ pub struct NativeOptions {
     /// per-lane fallback remains for comparison benches and as an escape
     /// hatch. Within either path, results are bit-deterministic.
     pub batched_decode: bool,
+    /// Weight precision for the decode/prefill hot path. Reduced modes
+    /// quantize the matmul weights (and, for int8, the codebooks) once at
+    /// weight-install time and stream the narrow encodings in-kernel;
+    /// accumulation stays f32 everywhere. Train/eval/bench entries ignore
+    /// this and always run full f32/f64. Bit-determinism holds per
+    /// (SIMD × precision) pair at any thread count.
+    pub precision: Precision,
 }
 
 impl NativeOptions {
@@ -205,7 +219,8 @@ impl NativeOptions {
 impl Default for NativeOptions {
     /// `TVQ_NUM_THREADS` if set and parseable, else 0 (= all cores);
     /// SIMD per `TVQ_SIMD` (unset = auto-detect, `0` = scalar); batched
-    /// decode unless `TVQ_BATCHED_DECODE=0`.
+    /// decode unless `TVQ_BATCHED_DECODE=0`; precision per
+    /// `TVQ_PRECISION` (unset = f32).
     fn default() -> Self {
         let num_threads = std::env::var("TVQ_NUM_THREADS")
             .ok()
@@ -215,7 +230,12 @@ impl Default for NativeOptions {
             std::env::var("TVQ_BATCHED_DECODE").ok().as_deref(),
             Some("0") | Some("off") | Some("false")
         );
-        Self { num_threads, simd: SimdMode::from_env(), batched_decode }
+        Self {
+            num_threads,
+            simd: SimdMode::from_env(),
+            batched_decode,
+            precision: Precision::from_env(),
+        }
     }
 }
 
@@ -427,7 +447,14 @@ impl NativeExecutor {
                 return Ok(Arc::clone(&entry.weights));
             }
         }
-        let weights = Arc::new(step::parse_weights(&self.layout, tensors)?);
+        // Reduced precision applies only to the serving hot path; train,
+        // eval, and bench entries always parse full-precision weights.
+        let precision = if matches!(self.spec.entry.as_str(), "decode" | "prefill") {
+            self.options.precision
+        } else {
+            Precision::F32
+        };
+        let weights = Arc::new(step::parse_weights(&self.layout, tensors, precision)?);
         *guard = Some(WeightCacheEntry {
             key,
             _pins: tensors[..n_weights].to_vec(),

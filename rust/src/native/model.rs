@@ -49,11 +49,11 @@ use anyhow::{bail, Result};
 use std::sync::Arc;
 
 use crate::manifest::ModelConfig;
-use crate::tensor::HostTensor;
+use crate::tensor::{bf16_to_f32, f32_to_bf16, HostTensor};
 
 use super::kernels;
 use super::layout::Layout;
-use super::simd::SimdMode;
+use super::simd::{MatRef, Precision, SimdMode};
 
 // ---------------------------------------------------------------------------
 // flat math helpers (non-matmul; matmuls live in `super::kernels`/`simd`)
@@ -196,6 +196,152 @@ impl Codebooks {
             .zip(layout.cb_leaves())
             .map(|(v, leaf)| HostTensor::from_f32(&leaf.shape, v))
             .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reduced-precision weight twins (decode/prefill only; built at parse time)
+// ---------------------------------------------------------------------------
+
+/// One weight matrix quantized at install time for the reduced-precision
+/// decode path. Building a `QuantMat` also rewrites the f32 mirror in
+/// place with the **dequantized** values, so every f32 consumer of the
+/// mirror (window writes of `k_hat`, cache scores, the scalar attention
+/// arithmetic) sees exactly the values the quantized matmuls reconstruct
+/// in-register — the whole forward pass is consistent within a precision
+/// mode, which is what makes its bit-determinism contract meaningful.
+pub(crate) enum QuantMat {
+    /// bf16 codes (upper half of each f32); widening is exact, so the
+    /// kernels are bit-identical to f32 kernels on the mirror.
+    Bf16(Vec<u16>),
+    /// int8 codes with one f32 scale per k-row (symmetric round-to-
+    /// nearest, `kernels::quantize_rows_i8`).
+    Int8 { q: Vec<i8>, scale: Vec<f32> },
+}
+
+impl QuantMat {
+    /// Quantize `w` (row-major, row width `n`) for `precision`, rewriting
+    /// `w` with its dequantized image. `None` for [`Precision::F32`].
+    fn build(w: &mut [f32], n: usize, precision: Precision) -> Option<QuantMat> {
+        match precision {
+            Precision::F32 => None,
+            Precision::Bf16 => {
+                let q: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+                for (wv, &b) in w.iter_mut().zip(&q) {
+                    *wv = bf16_to_f32(b);
+                }
+                Some(QuantMat::Bf16(q))
+            }
+            Precision::Int8 => {
+                let (q, scale) = kernels::quantize_rows_i8(w, n);
+                w.copy_from_slice(&kernels::dequantize_rows_i8(&q, &scale, n));
+                Some(QuantMat::Int8 { q, scale })
+            }
+        }
+    }
+
+    /// Borrowed kernel operand view.
+    pub fn as_ref(&self) -> MatRef<'_> {
+        match self {
+            QuantMat::Bf16(q) => MatRef::Bf16(q),
+            QuantMat::Int8 { q, scale } => MatRef::I8 { q, scale },
+        }
+    }
+}
+
+/// Weight operand for one matmul site: the quantized twin when the
+/// executor runs reduced precision, the f32 matrix otherwise.
+#[inline]
+fn wref<'a>(q: Option<&'a QuantMat>, f: &'a [f32]) -> MatRef<'a> {
+    match q {
+        Some(qm) => qm.as_ref(),
+        None => MatRef::F32(f),
+    }
+}
+
+/// Quantized twins of one layer's matmul weights (norm gains and the
+/// relative-position bias stay f32 — they are vectors, not streamed
+/// matrices).
+pub(crate) struct QuantLayer {
+    pub wq: QuantMat,
+    pub wk: QuantMat,
+    pub wv: QuantMat,
+    pub wo: QuantMat,
+    pub wg: QuantMat,
+    pub w1: QuantMat,
+    pub w2: QuantMat,
+}
+
+/// One layer's codebook quantized per code row (int8 mode only): the
+/// `[H, S, dk]` flat codebook as i8 codes plus one f32 scale per
+/// `[H, S]` row, streamed by [`SimdMode::nearest_code_i8`].
+pub(crate) struct QuantCb {
+    pub q: Vec<i8>,      // [H*S*dk]
+    pub scale: Vec<f32>, // [H*S]
+}
+
+/// Every quantized weight the reduced-precision decode path streams:
+/// projections + FFN per layer, the readout, and (int8 only) the
+/// codebooks. Embeddings stay f32 — the embed is a row lookup, not a
+/// matmul — as do biases and norm gains.
+pub(crate) struct QuantParams {
+    pub layers: Vec<QuantLayer>,
+    pub wout: QuantMat,
+    /// int8 codebook scans; empty in bf16 mode (the scan runs the f32
+    /// kernel over the round-tripped mirror, already bf16-precision).
+    pub cb: Vec<QuantCb>,
+}
+
+impl QuantParams {
+    /// Quantize all matmul weights of `p`/`cb` for `precision`, rewriting
+    /// the f32 mirrors with their dequantized images (see [`QuantMat`]).
+    /// `None` for [`Precision::F32`] — the f32 path is untouched,
+    /// bit-for-bit.
+    pub fn build(
+        cfg: &ModelConfig,
+        p: &mut Params,
+        cb: &mut Codebooks,
+        precision: Precision,
+    ) -> Option<QuantParams> {
+        if precision == Precision::F32 {
+            return None;
+        }
+        let dm = cfg.d_model;
+        let dff = 2 * dm;
+        let (hdk, hdv) = (cfg.n_heads * cfg.d_k, cfg.n_heads * cfg.d_v);
+        let must = |m: Option<QuantMat>| m.expect("non-f32 precision");
+        let layers = p
+            .layers
+            .iter_mut()
+            .map(|lp| QuantLayer {
+                wq: must(QuantMat::build(&mut lp.wq, hdk, precision)),
+                wk: must(QuantMat::build(&mut lp.wk, hdk, precision)),
+                wv: must(QuantMat::build(&mut lp.wv, hdv, precision)),
+                wo: must(QuantMat::build(&mut lp.wo, dm, precision)),
+                wg: must(QuantMat::build(&mut lp.wg, dff, precision)),
+                w1: must(QuantMat::build(&mut lp.w1, dff, precision)),
+                w2: must(QuantMat::build(&mut lp.w2, dm, precision)),
+            })
+            .collect();
+        let wout = must(QuantMat::build(&mut p.wout, cfg.vocab_size, precision));
+        let mut cbq = Vec::new();
+        for arc in cb.layers.iter_mut() {
+            let v = std::sync::Arc::make_mut(arc);
+            match precision {
+                Precision::F32 => unreachable!(),
+                Precision::Bf16 => {
+                    for x in v.iter_mut() {
+                        *x = bf16_to_f32(f32_to_bf16(*x));
+                    }
+                }
+                Precision::Int8 => {
+                    let (q, scale) = kernels::quantize_rows_i8(v, cfg.d_k);
+                    v.copy_from_slice(&kernels::dequantize_rows_i8(&q, &scale, cfg.d_k));
+                    cbq.push(QuantCb { q, scale });
+                }
+            }
+        }
+        Some(QuantParams { layers, wout, cb: cbq })
     }
 }
 
@@ -470,6 +616,7 @@ fn attn_row_stage(
     cfg: &ModelConfig,
     lp: &LayerParams,
     lcb: &[f32],
+    qcb: Option<&QuantCb>,
     lst: &mut RowLayerState<'_>,
     layer_ix: usize,
     pos: usize,
@@ -492,11 +639,23 @@ fn attn_row_stage(
     let n = pos / l;
     let li = pos % l;
 
-    // quantize keys per head
+    // quantize keys per head: in int8 mode the scan streams the i8
+    // codebook (argmin bitwise equal to the f32 scan over `lcb`, which
+    // already holds the dequantized image — see `QuantMat`), otherwise
+    // the f32 scan over `lcb` directly.
     for hd in 0..h_n {
         let kh = &k[hd * dk..(hd + 1) * dk];
         let head_cb = &lcb[hd * s * dk..(hd + 1) * s * dk];
-        let z = simd.nearest_code(kh, head_cb, s, dk);
+        let z = match qcb {
+            Some(qc) => simd.nearest_code_i8(
+                kh,
+                &qc.q[hd * s * dk..(hd + 1) * s * dk],
+                &qc.scale[hd * s..(hd + 1) * s],
+                s,
+                dk,
+            ),
+            None => simd.nearest_code(kh, head_cb, s, dk),
+        };
         zs[hd] = z;
         if let Some(acc) = accum.as_deref_mut() {
             let k_hat = &head_cb[z * dk..(z + 1) * dk];
@@ -604,6 +763,7 @@ pub(crate) fn forward_token_row_opts(
     cfg: &ModelConfig,
     p: &Params,
     cb: &Codebooks,
+    quant: Option<&QuantParams>,
     rst: &mut RowState<'_>,
     token: i32,
     mut accum: Option<&mut TrainAccum>,
@@ -621,10 +781,11 @@ pub(crate) fn forward_token_row_opts(
     sc.x.copy_from_slice(&p.embed[tok * dm..(tok + 1) * dm]);
     for (layer_ix, (lp, lst)) in p.layers.iter().zip(rst.layers.iter_mut()).enumerate() {
         let lcb = &cb.layers[layer_ix][..];
+        let ql = quant.map(|qp| &qp.layers[layer_ix]);
         rmsnorm(&sc.x, &lp.attn_norm, &mut sc.h);
-        simd.matvec(&lp.wq, &sc.h, &mut sc.q);
-        simd.matvec(&lp.wk, &sc.h, &mut sc.k);
-        simd.matvec(&lp.wv, &sc.h, &mut sc.v);
+        simd.matvec_q(wref(ql.map(|q| &q.wq), &lp.wq), &sc.h, &mut sc.q);
+        simd.matvec_q(wref(ql.map(|q| &q.wk), &lp.wk), &sc.h, &mut sc.k);
+        simd.matvec_q(wref(ql.map(|q| &q.wv), &lp.wv), &sc.h, &mut sc.v);
         for qv in sc.q.iter_mut() {
             *qv *= q_scale;
         }
@@ -632,6 +793,7 @@ pub(crate) fn forward_token_row_opts(
             cfg,
             lp,
             lcb,
+            quant.and_then(|qp| qp.cb.get(layer_ix)),
             lst,
             layer_ix,
             pos,
@@ -645,23 +807,23 @@ pub(crate) fn forward_token_row_opts(
             accum.as_deref_mut(),
             simd,
         );
-        simd.matvec_add(&lp.wo, &sc.attn, &mut sc.x);
+        simd.matvec_add_q(wref(ql.map(|q| &q.wo), &lp.wo), &sc.attn, &mut sc.x);
 
         // --- gated FFN ------------------------------------------------------
         rmsnorm(&sc.x, &lp.ffn_norm, &mut sc.h);
-        simd.matvec(&lp.wg, &sc.h, &mut sc.g);
-        simd.matvec(&lp.w1, &sc.h, &mut sc.u1);
+        simd.matvec_q(wref(ql.map(|q| &q.wg), &lp.wg), &sc.h, &mut sc.g);
+        simd.matvec_q(wref(ql.map(|q| &q.w1), &lp.w1), &sc.h, &mut sc.u1);
         for (gv, uv) in sc.g.iter_mut().zip(&sc.u1) {
             *gv = silu(*gv) * uv;
         }
-        simd.matvec_add(&lp.w2, &sc.g, &mut sc.x);
+        simd.matvec_add_q(wref(ql.map(|q| &q.w2), &lp.w2), &sc.g, &mut sc.x);
     }
 
     *rst.pos = (pos + 1) as i32;
     if want_logits {
         rmsnorm(&sc.x, &p.out_norm, &mut sc.y);
         sc.logits.copy_from_slice(&p.bout);
-        simd.matvec_add(&p.wout, &sc.y, &mut sc.logits);
+        simd.matvec_add_q(wref(quant.map(|qp| &qp.wout), &p.wout), &sc.y, &mut sc.logits);
     }
 }
 
@@ -671,13 +833,14 @@ pub(crate) fn forward_token_row(
     cfg: &ModelConfig,
     p: &Params,
     cb: &Codebooks,
+    quant: Option<&QuantParams>,
     rst: &mut RowState<'_>,
     token: i32,
     accum: Option<&mut TrainAccum>,
     sc: &mut Scratch,
     simd: SimdMode,
 ) {
-    forward_token_row_opts(cfg, p, cb, rst, token, accum, true, sc, simd);
+    forward_token_row_opts(cfg, p, cb, quant, rst, token, accum, true, sc, simd);
 }
 
 /// Whole-state convenience wrapper around [`forward_token_row`] for tests
@@ -695,7 +858,17 @@ pub(crate) fn forward_token(
 ) -> (Vec<f32>, Vec<f32>) {
     let mut sc = Scratch::new(cfg);
     let mut rows = st.rows();
-    forward_token_row(cfg, p, cb, &mut rows[row], token, accum, &mut sc, SimdMode::from_env());
+    forward_token_row(
+        cfg,
+        p,
+        cb,
+        None,
+        &mut rows[row],
+        token,
+        accum,
+        &mut sc,
+        SimdMode::from_env(),
+    );
     (sc.logits.clone(), sc.y.clone())
 }
 
@@ -710,6 +883,7 @@ pub(crate) fn forward_step_per_lane(
     cfg: &ModelConfig,
     p: &Params,
     cb: &Codebooks,
+    quant: Option<&QuantParams>,
     st: &mut State,
     tokens: &[i32],
     logits: &mut [f32],
@@ -725,7 +899,7 @@ pub(crate) fn forward_step_per_lane(
         .map(|(rst, (out, sc))| (rst, out, sc))
         .collect();
     kernels::parallel_for_items(nt, &mut work, |row, (rst, out, sc)| {
-        forward_token_row(cfg, p, cb, rst, tokens[row], None, sc, simd);
+        forward_token_row(cfg, p, cb, quant, rst, tokens[row], None, sc, simd);
         out.copy_from_slice(&sc.logits);
     });
 }
@@ -841,6 +1015,7 @@ pub(crate) fn forward_step_batched(
     cfg: &ModelConfig,
     p: &Params,
     cb: &Codebooks,
+    quant: Option<&QuantParams>,
     st: &mut State,
     lanes: &[LaneStep],
     logits_out: &mut [f32],
@@ -874,15 +1049,41 @@ pub(crate) fn forward_step_batched(
 
     for (layer_ix, lp) in p.layers.iter().enumerate() {
         let lcb = &cb.layers[layer_ix][..];
+        let ql = quant.map(|qp| &qp.layers[layer_ix]);
+        let qcb = quant.and_then(|qp| qp.cb.get(layer_ix));
         {
             let (xs, hs) = (&bs.xs, &mut bs.hs);
             for i in 0..m {
                 rmsnorm(&xs[i * dm..(i + 1) * dm], &lp.attn_norm, &mut hs[i * dm..(i + 1) * dm]);
             }
         }
-        simd.gemm_par(nt, m, dm, hdk, &bs.hs[..m * dm], &lp.wq, &mut bs.qs[..m * hdk]);
-        simd.gemm_par(nt, m, dm, hdk, &bs.hs[..m * dm], &lp.wk, &mut bs.ks[..m * hdk]);
-        simd.gemm_par(nt, m, dm, hdv, &bs.hs[..m * dm], &lp.wv, &mut bs.vs[..m * hdv]);
+        simd.gemm_par_q(
+            nt,
+            m,
+            dm,
+            hdk,
+            &bs.hs[..m * dm],
+            wref(ql.map(|q| &q.wq), &lp.wq),
+            &mut bs.qs[..m * hdk],
+        );
+        simd.gemm_par_q(
+            nt,
+            m,
+            dm,
+            hdk,
+            &bs.hs[..m * dm],
+            wref(ql.map(|q| &q.wk), &lp.wk),
+            &mut bs.ks[..m * hdk],
+        );
+        simd.gemm_par_q(
+            nt,
+            m,
+            dm,
+            hdv,
+            &bs.hs[..m * dm],
+            wref(ql.map(|q| &q.wv), &lp.wv),
+            &mut bs.vs[..m * hdv],
+        );
         for qv in bs.qs[..m * hdk].iter_mut() {
             *qv *= q_scale;
         }
@@ -899,6 +1100,7 @@ pub(crate) fn forward_step_batched(
                     cfg,
                     lp,
                     lcb,
+                    qcb,
                     &mut rls,
                     layer_ix,
                     pos,
@@ -941,6 +1143,7 @@ pub(crate) fn forward_step_batched(
                     cfg,
                     lp,
                     lcb,
+                    qcb,
                     &mut it.rls,
                     layer_ix,
                     it.pos,
@@ -956,7 +1159,15 @@ pub(crate) fn forward_step_batched(
                 );
             });
         }
-        simd.gemm_add_par(nt, m, hdv, dm, &bs.attns[..m * hdv], &lp.wo, &mut bs.xs[..m * dm]);
+        simd.gemm_add_par_q(
+            nt,
+            m,
+            hdv,
+            dm,
+            &bs.attns[..m * hdv],
+            wref(ql.map(|q| &q.wo), &lp.wo),
+            &mut bs.xs[..m * dm],
+        );
 
         // --- gated FFN, all active lanes at once ---------------------------
         {
@@ -965,12 +1176,36 @@ pub(crate) fn forward_step_batched(
                 rmsnorm(&xs[i * dm..(i + 1) * dm], &lp.ffn_norm, &mut hs[i * dm..(i + 1) * dm]);
             }
         }
-        simd.gemm_par(nt, m, dm, dff, &bs.hs[..m * dm], &lp.wg, &mut bs.gs[..m * dff]);
-        simd.gemm_par(nt, m, dm, dff, &bs.hs[..m * dm], &lp.w1, &mut bs.u1s[..m * dff]);
+        simd.gemm_par_q(
+            nt,
+            m,
+            dm,
+            dff,
+            &bs.hs[..m * dm],
+            wref(ql.map(|q| &q.wg), &lp.wg),
+            &mut bs.gs[..m * dff],
+        );
+        simd.gemm_par_q(
+            nt,
+            m,
+            dm,
+            dff,
+            &bs.hs[..m * dm],
+            wref(ql.map(|q| &q.w1), &lp.w1),
+            &mut bs.u1s[..m * dff],
+        );
         for (gv, &uv) in bs.gs[..m * dff].iter_mut().zip(&bs.u1s[..m * dff]) {
             *gv = silu(*gv) * uv;
         }
-        simd.gemm_add_par(nt, m, dff, dm, &bs.gs[..m * dff], &lp.w2, &mut bs.xs[..m * dm]);
+        simd.gemm_add_par_q(
+            nt,
+            m,
+            dff,
+            dm,
+            &bs.gs[..m * dff],
+            wref(ql.map(|q| &q.w2), &lp.w2),
+            &mut bs.xs[..m * dm],
+        );
     }
 
     for (i, lane) in lanes.iter().enumerate() {
@@ -994,7 +1229,15 @@ pub(crate) fn forward_step_batched(
             rmsnorm(&xs[i * dm..(i + 1) * dm], &p.out_norm, &mut ys[j * dm..(j + 1) * dm]);
         }
     }
-    simd.gemm_par(nt, nw, dm, v_sz, &bs.ys[..nw * dm], &p.wout, &mut bs.lg[..nw * v_sz]);
+    simd.gemm_par_q(
+        nt,
+        nw,
+        dm,
+        v_sz,
+        &bs.ys[..nw * dm],
+        wref(quant.map(|qp| &qp.wout), &p.wout),
+        &mut bs.lg[..nw * v_sz],
+    );
     for (j, &i) in bs.sel.iter().enumerate() {
         let slot = lanes[i].slot;
         let dst = &mut logits_out[slot * v_sz..(slot + 1) * v_sz];
@@ -1205,7 +1448,7 @@ mod tests {
             let mut rows = st_ref.rows();
             for (r, row) in rows.iter_mut().enumerate() {
                 let tok = ((7 * t + 3 * r) % v) as i32;
-                forward_token_row(&cfg, &p, &cb, row, tok, None, &mut sc, simd);
+                forward_token_row(&cfg, &p, &cb, None, row, tok, None, &mut sc, simd);
                 ref_logits[r * v..(r + 1) * v].copy_from_slice(&sc.logits);
             }
         }
@@ -1222,7 +1465,9 @@ mod tests {
                     want_logits: true,
                 })
                 .collect();
-            forward_step_batched(&cfg, &p, &cb, &mut st, &lanes, &mut logits, &mut bs, 1, simd);
+            forward_step_batched(
+                &cfg, &p, &cb, None, &mut st, &lanes, &mut logits, &mut bs, 1, simd,
+            );
         }
         assert_eq!(st.pos, st_ref.pos);
         for (i, (a, r)) in logits.iter().zip(&ref_logits).enumerate() {
@@ -1246,7 +1491,7 @@ mod tests {
                 })
                 .collect();
             forward_step_batched(
-                &cfg, &p, &cb, &mut st_sub, &lanes, &mut logits_sub, &mut bs, 1, simd,
+                &cfg, &p, &cb, None, &mut st_sub, &lanes, &mut logits_sub, &mut bs, 1, simd,
             );
         }
         assert_eq!(st_sub.pos, vec![steps as i32, 0, steps as i32, 0]);

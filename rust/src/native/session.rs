@@ -34,7 +34,9 @@ use crate::manifest::ModelConfig;
 /// A persistent decode loop over one native preset: parsed weights +
 /// recurrent state + preallocated scratch, stepped one token per lane at
 /// a time. Inherits [`NativeOptions`] (thread budget, SIMD mode, batched
-/// vs per-lane decode) from the backend it was built from.
+/// vs per-lane decode, weight precision) from the backend it was built
+/// from; under `Precision::Bf16`/`Int8` the weights are quantized once
+/// here at parse time, so the per-token loop stays allocation-free.
 pub struct DecodeSession {
     cfg: ModelConfig,
     opts: NativeOptions,
@@ -59,9 +61,9 @@ impl DecodeSession {
         let layout = Layout::new(cfg.clone());
         let tensors: Vec<HostTensor> =
             backend.init_state(preset)?.into_iter().map(|(_, t)| t).collect();
-        let weights = parse_weights(&layout, &tensors)?;
-        let b = cfg.batch_size;
         let opts = backend.options();
+        let weights = parse_weights(&layout, &tensors, opts.precision)?;
+        let b = cfg.batch_size;
         let (bs, scratch) = if opts.batched_decode {
             (Some(BatchScratch::new(&cfg)), Vec::new())
         } else {
@@ -90,7 +92,7 @@ impl DecodeSession {
         staged.load_groups(path)?;
         let mut tensors: Vec<HostTensor> = staged.group("params")?.to_vec();
         tensors.extend(staged.group("cb")?.iter().cloned());
-        self.weights = parse_weights(&Layout::new(self.cfg.clone()), &tensors)?;
+        self.weights = parse_weights(&Layout::new(self.cfg.clone()), &tensors, self.opts.precision)?;
         self.reset();
         Ok(())
     }
@@ -136,6 +138,7 @@ impl DecodeSession {
                 &self.cfg,
                 &self.weights.params,
                 &self.weights.cb,
+                self.weights.quant.as_ref(),
                 &mut self.st,
                 &self.lanes,
                 &mut self.logits,
@@ -148,6 +151,7 @@ impl DecodeSession {
                 &self.cfg,
                 &self.weights.params,
                 &self.weights.cb,
+                self.weights.quant.as_ref(),
                 &mut self.st,
                 tokens,
                 &mut self.logits,

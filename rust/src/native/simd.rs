@@ -1,4 +1,6 @@
-//! Runtime-dispatched SIMD micro-kernels for the f32 serving path.
+//! Runtime-dispatched SIMD micro-kernels for the serving path: f32 plus
+//! the reduced-precision (bf16 / int8-with-row-scales) weight variants,
+//! all with f32 accumulation.
 //!
 //! [`SimdMode`] is the ISA choice for every f32 matmul-family kernel in the
 //! native engine: [`SimdMode::Scalar`] routes to the portable kernels in
@@ -26,7 +28,88 @@
 //! The f64 training kernels (`autodiff`) stay scalar: gradients are
 //! FD-checked against f64 references and are not on the serving hot path.
 
+use anyhow::{bail, Result};
+
 use super::kernels;
+
+/// Weight-precision choice for the native decode/prefill hot path, fixed
+/// per executor at init exactly like [`SimdMode`]: env `TVQ_PRECISION`
+/// (CLI `--precision`), threaded through [`super::NativeOptions`].
+///
+/// Weights are quantized **once at install time** (executor weight-parse /
+/// `DecodeSession::new` / `load_weights`); the hot path then streams bf16
+/// or per-row-scaled int8 weight bytes while every accumulator stays f32.
+/// Training, autodiff, eval, and the dense baseline always run f32/f64
+/// regardless of this knob. Bits are deterministic per
+/// (SimdMode × Precision) pair at any thread count; modes agree with the
+/// f32 path to the tolerances pinned by `rust/tests/precision_oracle.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 weights (the default; bit-compatible with prior releases).
+    F32,
+    /// bf16 weights (upper half of f32), widened by a bit shift in-kernel.
+    Bf16,
+    /// int8 weights with one f32 scale per k-row (symmetric, round-to-
+    /// nearest), dequantized in-register.
+    Int8,
+}
+
+impl Precision {
+    /// `TVQ_PRECISION` env knob: `bf16` or `int8`/`i8` select the reduced
+    /// paths; anything else (or unset) is full f32. Env parsing is lenient
+    /// (like [`SimdMode::from_env`]); the CLI flag is strict.
+    pub fn from_env() -> Self {
+        match std::env::var("TVQ_PRECISION").ok().as_deref() {
+            Some("bf16") => Precision::Bf16,
+            Some("int8") | Some("i8") => Precision::Int8,
+            _ => Precision::F32,
+        }
+    }
+
+    /// Strict parse for CLI flags and bench arguments.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "full" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            "int8" | "i8" => Precision::Int8,
+            other => bail!("unknown precision '{other}' (want f32|bf16|int8)"),
+        })
+    }
+
+    /// Stable name for logs and bench artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Borrowed view of a weight matrix for the precision-dispatched kernels:
+/// the streamed right-hand operand in f32, bf16, or per-k-row-scaled int8.
+/// Activations (`a`/`x`) and accumulators (`c`/`out`) are always f32.
+#[derive(Clone, Copy)]
+pub enum MatRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    I8 { q: &'a [i8], scale: &'a [f32] },
+}
+
+impl MatRef<'_> {
+    /// Element count of the viewed matrix (scales excluded).
+    pub fn len(&self) -> usize {
+        match self {
+            MatRef::F32(w) => w.len(),
+            MatRef::Bf16(w) => w.len(),
+            MatRef::I8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Instruction-set choice for the f32 kernels, fixed per executor at init.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -205,6 +288,153 @@ impl SimdMode {
             SimdMode::Avx2Fma => accel::nearest_code(x, codebook, s, dk),
         }
     }
+
+    // ------------------------------------------------------------------
+    // Precision-dispatched twins: same shapes and (per mode × precision)
+    // the same fixed accumulation order as the f32 kernels above, with the
+    // weight operand as a [`MatRef`]. `MatRef::F32` routes to the plain
+    // kernels, so existing f32 behavior is bit-for-bit unchanged. The bf16
+    // arms are bit-identical to the f32 kernels run on the widened
+    // weights; the int8 arms fold each k-row's scale into the broadcast
+    // scalar (tolerance-level agreement, still bit-deterministic).
+    // ------------------------------------------------------------------
+
+    /// Precision-dispatched [`SimdMode::matvec`]: `out = x @ w`.
+    #[inline]
+    pub fn matvec_q(self, w: MatRef, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        self.matvec_add_q(w, x, out);
+    }
+
+    /// Precision-dispatched [`SimdMode::matvec_add`]: `out += x @ w`.
+    /// Shape relations are hard asserts (bounds boundary for the AVX2
+    /// bodies' unchecked loads), including the int8 per-k-row scale length.
+    #[inline]
+    pub fn matvec_add_q(self, w: MatRef, x: &[f32], out: &mut [f32]) {
+        match w {
+            MatRef::F32(w) => self.matvec_add(w, x, out),
+            MatRef::Bf16(w) => {
+                assert_eq!(w.len(), x.len() * out.len(), "matvec_add_q: shape mismatch");
+                match self {
+                    SimdMode::Scalar => kernels::matvec_add_bf16(w, x, out),
+                    SimdMode::Avx2Fma => accel::matvec_add_bf16(w, x, out),
+                }
+            }
+            MatRef::I8 { q, scale } => {
+                assert_eq!(q.len(), x.len() * out.len(), "matvec_add_q: shape mismatch");
+                assert_eq!(scale.len(), x.len(), "matvec_add_q: scale length");
+                match self {
+                    SimdMode::Scalar => kernels::matvec_add_i8(q, scale, x, out),
+                    SimdMode::Avx2Fma => accel::matvec_add_i8(q, scale, x, out),
+                }
+            }
+        }
+    }
+
+    /// Precision-dispatched [`SimdMode::gemm`]: `c = a @ b`.
+    #[inline]
+    pub fn gemm_q(self, m: usize, k: usize, n: usize, a: &[f32], b: MatRef, c: &mut [f32]) {
+        c.fill(0.0);
+        self.gemm_add_q(m, k, n, a, b, c);
+    }
+
+    /// Precision-dispatched [`SimdMode::gemm_add`]: `c += a @ b`. Keeps
+    /// the row-bits-independent-of-`m` invariant in every precision (same
+    /// tiling, per-row inner kernel).
+    #[inline]
+    pub fn gemm_add_q(self, m: usize, k: usize, n: usize, a: &[f32], b: MatRef, c: &mut [f32]) {
+        match b {
+            MatRef::F32(b) => self.gemm_add(m, k, n, a, b, c),
+            MatRef::Bf16(b) => {
+                assert_eq!(a.len(), m * k, "gemm_add_q: lhs length");
+                assert_eq!(b.len(), k * n, "gemm_add_q: rhs length");
+                assert_eq!(c.len(), m * n, "gemm_add_q: out length");
+                match self {
+                    SimdMode::Scalar => kernels::gemm_add_bf16(m, k, n, a, b, c),
+                    SimdMode::Avx2Fma => accel::gemm_add_bf16(m, k, n, a, b, c),
+                }
+            }
+            MatRef::I8 { q, scale } => {
+                assert_eq!(a.len(), m * k, "gemm_add_q: lhs length");
+                assert_eq!(q.len(), k * n, "gemm_add_q: rhs length");
+                assert_eq!(scale.len(), k, "gemm_add_q: scale length");
+                assert_eq!(c.len(), m * n, "gemm_add_q: out length");
+                match self {
+                    SimdMode::Scalar => kernels::gemm_add_i8(m, k, n, a, q, scale, c),
+                    SimdMode::Avx2Fma => accel::gemm_add_i8(m, k, n, a, q, scale, c),
+                }
+            }
+        }
+    }
+
+    /// Precision-dispatched [`SimdMode::gemm_par`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_par_q(
+        self,
+        num_threads: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: MatRef,
+        c: &mut [f32],
+    ) {
+        c.fill(0.0);
+        self.gemm_add_par_q(num_threads, m, k, n, a, b, c);
+    }
+
+    /// Precision-dispatched [`SimdMode::gemm_add_par`]: identical banding
+    /// (contiguous output rows, one pool item per band), so the bit-
+    /// identity-at-any-thread-count argument carries over unchanged to
+    /// every precision — bands change ownership, never per-row order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_add_par_q(
+        self,
+        num_threads: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: MatRef,
+        c: &mut [f32],
+    ) {
+        debug_assert_eq!(c.len(), m * n);
+        let nt = kernels::effective_threads(num_threads);
+        if nt <= 1 || m <= 1 {
+            self.gemm_add_q(m, k, n, a, b, c);
+            return;
+        }
+        let band = m.div_ceil(nt);
+        let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
+        kernels::parallel_for_items(nt, &mut items, |_, (ci, cband)| {
+            let i0 = *ci * band;
+            let rows = cband.len() / n;
+            self.gemm_add_q(rows, k, n, &a[i0 * k..(i0 + rows) * k], b, cband);
+        });
+    }
+
+    /// [`SimdMode::nearest_code`] over an int8 codebook with one f32 scale
+    /// per code row. No scale folding in the distance accumulation, so in
+    /// both modes the result is **bitwise** the f32 scan run on the
+    /// dequantized codebook (same subtraction, same reduction tree) —
+    /// strict `<`, first index wins ties.
+    #[inline]
+    pub fn nearest_code_i8(
+        self,
+        x: &[f32],
+        codebook: &[i8],
+        scale: &[f32],
+        s: usize,
+        dk: usize,
+    ) -> usize {
+        assert!(x.len() >= dk, "nearest_code_i8: key shorter than dk");
+        assert_eq!(codebook.len(), s * dk, "nearest_code_i8: codebook length");
+        assert_eq!(scale.len(), s, "nearest_code_i8: scale length");
+        match self {
+            SimdMode::Scalar => kernels::nearest_code_i8(x, codebook, scale, s, dk),
+            SimdMode::Avx2Fma => accel::nearest_code_i8(x, codebook, scale, s, dk),
+        }
+    }
 }
 
 /// Safe shims the `Avx2Fma` dispatch arms call: on x86_64 they enter the
@@ -239,6 +469,45 @@ mod accel {
         // SAFETY: as above.
         unsafe { avx2::nearest_code(x, codebook, s, dk) }
     }
+
+    #[inline]
+    pub fn matvec_add_bf16(w: &[u16], x: &[f32], out: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::matvec_add_bf16(w, x, out) }
+    }
+
+    #[inline]
+    pub fn gemm_add_bf16(m: usize, k: usize, n: usize, a: &[f32], b: &[u16], c: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::gemm_add_bf16(m, k, n, a, b, c) }
+    }
+
+    #[inline]
+    pub fn matvec_add_i8(w: &[i8], scale: &[f32], x: &[f32], out: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::matvec_add_i8(w, scale, x, out) }
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_add_i8(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[i8],
+        scale: &[f32],
+        c: &mut [f32],
+    ) {
+        // SAFETY: as above.
+        unsafe { avx2::gemm_add_i8(m, k, n, a, b, scale, c) }
+    }
+
+    #[inline]
+    pub fn nearest_code_i8(x: &[f32], codebook: &[i8], scale: &[f32], s: usize, dk: usize) -> usize {
+        // SAFETY: as above.
+        unsafe { avx2::nearest_code_i8(x, codebook, scale, s, dk) }
+    }
 }
 
 /// Non-x86_64 builds: `Avx2Fma` is never produced by [`SimdMode::detect`],
@@ -265,6 +534,40 @@ mod accel {
     #[inline]
     pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
         kernels::nearest_code(x, codebook, s, dk)
+    }
+
+    #[inline]
+    pub fn matvec_add_bf16(w: &[u16], x: &[f32], out: &mut [f32]) {
+        kernels::matvec_add_bf16(w, x, out)
+    }
+
+    #[inline]
+    pub fn gemm_add_bf16(m: usize, k: usize, n: usize, a: &[f32], b: &[u16], c: &mut [f32]) {
+        kernels::gemm_add_bf16(m, k, n, a, b, c)
+    }
+
+    #[inline]
+    pub fn matvec_add_i8(w: &[i8], scale: &[f32], x: &[f32], out: &mut [f32]) {
+        kernels::matvec_add_i8(w, scale, x, out)
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_add_i8(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[i8],
+        scale: &[f32],
+        c: &mut [f32],
+    ) {
+        kernels::gemm_add_i8(m, k, n, a, b, scale, c)
+    }
+
+    #[inline]
+    pub fn nearest_code_i8(x: &[f32], codebook: &[i8], scale: &[f32], s: usize, dk: usize) -> usize {
+        kernels::nearest_code_i8(x, codebook, scale, s, dk)
     }
 }
 
@@ -487,6 +790,377 @@ mod avx2 {
         }
         best
     }
+
+    // ------------------------------------------------------------------
+    // Reduced-precision bodies. Same loop structure as the f32 bodies
+    // above; only the weight load widens. bf16 widening is a zero-extend +
+    // 16-bit shift (exact), so these are bit-identical to the f32 bodies
+    // run on the dequantized weights. int8 widening is sign-extend +
+    // convert (exact for |q| ≤ 127); the matmuls fold the per-k-row scale
+    // into the broadcast scalar, the codebook scan does not fold (to stay
+    // bitwise equal to the f32 scan on the dequantized codebook).
+    // ------------------------------------------------------------------
+
+    /// Widen 8 bf16 values (16 bytes) to 8 f32 lanes: zero-extend each
+    /// u16 into an i32 lane, shift into the upper half, bit-cast. Exact.
+    ///
+    /// # Safety
+    /// Requires AVX2; 16 readable bytes at `p`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn widen_bf16(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16))
+    }
+
+    /// Widen 8 int8 values (8 bytes) to 8 f32 lanes (sign-extend +
+    /// convert; exact for every i8). No scale applied here.
+    ///
+    /// # Safety
+    /// Requires AVX2; 8 readable bytes at `p`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn widen_i8(p: *const i8) -> __m256 {
+        let b = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b))
+    }
+
+    /// [`row_panel`] with a bf16 weight matrix: identical unrolling and
+    /// accumulation order, weight loads via [`widen_bf16`]; scalar tails
+    /// widen one value at a time. Bit-identical to [`row_panel`] on the
+    /// dequantized weights.
+    ///
+    /// # Safety
+    /// As [`row_panel`], with `b` in bf16 elements.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn row_panel_bf16(
+        b: *const u16,
+        n: usize,
+        arow: *const f32,
+        k0: usize,
+        k1: usize,
+        j0: usize,
+        j1: usize,
+        crow: *mut f32,
+    ) {
+        use crate::tensor::bf16_to_f32;
+        let w = j1 - j0;
+        let w8 = w / 8 * 8;
+        let cp = crow.add(j0);
+        let mut kk = k0;
+        while kk + 4 <= k1 {
+            let (a0, a1, a2, a3) =
+                (*arow.add(kk), *arow.add(kk + 1), *arow.add(kk + 2), *arow.add(kk + 3));
+            let r0 = b.add(kk * n + j0);
+            let r1 = b.add((kk + 1) * n + j0);
+            let r2 = b.add((kk + 2) * n + j0);
+            let r3 = b.add((kk + 3) * n + j0);
+            let x0 = _mm256_set1_ps(a0);
+            let x1 = _mm256_set1_ps(a1);
+            let x2 = _mm256_set1_ps(a2);
+            let x3 = _mm256_set1_ps(a3);
+            let mut j = 0usize;
+            while j < w8 {
+                let mut o = _mm256_loadu_ps(cp.add(j));
+                o = _mm256_fmadd_ps(x0, widen_bf16(r0.add(j)), o);
+                o = _mm256_fmadd_ps(x1, widen_bf16(r1.add(j)), o);
+                o = _mm256_fmadd_ps(x2, widen_bf16(r2.add(j)), o);
+                o = _mm256_fmadd_ps(x3, widen_bf16(r3.add(j)), o);
+                _mm256_storeu_ps(cp.add(j), o);
+                j += 8;
+            }
+            while j < w {
+                *cp.add(j) += a0 * bf16_to_f32(*r0.add(j))
+                    + a1 * bf16_to_f32(*r1.add(j))
+                    + a2 * bf16_to_f32(*r2.add(j))
+                    + a3 * bf16_to_f32(*r3.add(j));
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < k1 {
+            let xi = *arow.add(kk);
+            if xi != 0.0 {
+                let xv = _mm256_set1_ps(xi);
+                let r = b.add(kk * n + j0);
+                let mut j = 0usize;
+                while j < w8 {
+                    let o = _mm256_fmadd_ps(xv, widen_bf16(r.add(j)), _mm256_loadu_ps(cp.add(j)));
+                    _mm256_storeu_ps(cp.add(j), o);
+                    j += 8;
+                }
+                while j < w {
+                    *cp.add(j) += xi * bf16_to_f32(*r.add(j));
+                    j += 1;
+                }
+            }
+            kk += 1;
+        }
+    }
+
+    /// [`row_panel`] with an int8 weight matrix and one f32 scale per
+    /// k-row: the scale is folded into each broadcast scalar
+    /// (`a[kk] * scale[kk]`) before the FMA loop, so the inner loop stays
+    /// one FMA per 8 weights. Same unrolling and accumulation order as
+    /// [`row_panel`]; agreement with f32-on-dequantized is at tolerance
+    /// (one reassociation per product), bit-deterministic per mode.
+    ///
+    /// # Safety
+    /// As [`row_panel`], with `b` in i8 elements and `scale[k0..k1]`
+    /// readable.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn row_panel_i8(
+        b: *const i8,
+        n: usize,
+        arow: *const f32,
+        scale: *const f32,
+        k0: usize,
+        k1: usize,
+        j0: usize,
+        j1: usize,
+        crow: *mut f32,
+    ) {
+        let w = j1 - j0;
+        let w8 = w / 8 * 8;
+        let cp = crow.add(j0);
+        let mut kk = k0;
+        while kk + 4 <= k1 {
+            let s0 = *arow.add(kk) * *scale.add(kk);
+            let s1 = *arow.add(kk + 1) * *scale.add(kk + 1);
+            let s2 = *arow.add(kk + 2) * *scale.add(kk + 2);
+            let s3 = *arow.add(kk + 3) * *scale.add(kk + 3);
+            let r0 = b.add(kk * n + j0);
+            let r1 = b.add((kk + 1) * n + j0);
+            let r2 = b.add((kk + 2) * n + j0);
+            let r3 = b.add((kk + 3) * n + j0);
+            let x0 = _mm256_set1_ps(s0);
+            let x1 = _mm256_set1_ps(s1);
+            let x2 = _mm256_set1_ps(s2);
+            let x3 = _mm256_set1_ps(s3);
+            let mut j = 0usize;
+            while j < w8 {
+                let mut o = _mm256_loadu_ps(cp.add(j));
+                o = _mm256_fmadd_ps(x0, widen_i8(r0.add(j)), o);
+                o = _mm256_fmadd_ps(x1, widen_i8(r1.add(j)), o);
+                o = _mm256_fmadd_ps(x2, widen_i8(r2.add(j)), o);
+                o = _mm256_fmadd_ps(x3, widen_i8(r3.add(j)), o);
+                _mm256_storeu_ps(cp.add(j), o);
+                j += 8;
+            }
+            while j < w {
+                *cp.add(j) += s0 * (*r0.add(j) as f32)
+                    + s1 * (*r1.add(j) as f32)
+                    + s2 * (*r2.add(j) as f32)
+                    + s3 * (*r3.add(j) as f32);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < k1 {
+            let xi = *arow.add(kk);
+            if xi != 0.0 {
+                let si = xi * *scale.add(kk);
+                let xv = _mm256_set1_ps(si);
+                let r = b.add(kk * n + j0);
+                let mut j = 0usize;
+                while j < w8 {
+                    let o = _mm256_fmadd_ps(xv, widen_i8(r.add(j)), _mm256_loadu_ps(cp.add(j)));
+                    _mm256_storeu_ps(cp.add(j), o);
+                    j += 8;
+                }
+                while j < w {
+                    *cp.add(j) += si * (*r.add(j) as f32);
+                    j += 1;
+                }
+            }
+            kk += 1;
+        }
+    }
+
+    /// `out += x @ w`, bf16 weights: one [`row_panel_bf16`] over the
+    /// whole width.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `w.len() == x.len() * out.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn matvec_add_bf16(w: &[u16], x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), x.len() * out.len());
+        row_panel_bf16(
+            w.as_ptr(),
+            out.len(),
+            x.as_ptr(),
+            0,
+            x.len(),
+            0,
+            out.len(),
+            out.as_mut_ptr(),
+        );
+    }
+
+    /// `c += a @ b`, bf16 weights, with the same `TILE_K × TILE_N`
+    /// blocking as [`gemm_add`].
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; slice lengths must match `m·k`, `k·n`, `m·n`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn gemm_add_bf16(m: usize, k: usize, n: usize, a: &[f32], b: &[u16], c: &mut [f32]) {
+        use super::kernels::{TILE_K, TILE_N};
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE_N).min(n);
+                for i in 0..m {
+                    row_panel_bf16(
+                        b.as_ptr(),
+                        n,
+                        a.as_ptr().add(i * k),
+                        k0,
+                        k1,
+                        j0,
+                        j1,
+                        c.as_mut_ptr().add(i * n),
+                    );
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+    }
+
+    /// `out += x @ w`, int8 weights with per-k-row scales: one
+    /// [`row_panel_i8`] over the whole width.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `w.len() == x.len() * out.len()` and
+    /// `scale.len() == x.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn matvec_add_i8(w: &[i8], scale: &[f32], x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), x.len() * out.len());
+        debug_assert_eq!(scale.len(), x.len());
+        row_panel_i8(
+            w.as_ptr(),
+            out.len(),
+            x.as_ptr(),
+            scale.as_ptr(),
+            0,
+            x.len(),
+            0,
+            out.len(),
+            out.as_mut_ptr(),
+        );
+    }
+
+    /// `c += a @ b`, int8 weights with per-k-row scales, same blocking as
+    /// [`gemm_add`].
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; slice lengths must match `m·k`, `k·n`, `k`,
+    /// `m·n`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_add_i8(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[i8],
+        scale: &[f32],
+        c: &mut [f32],
+    ) {
+        use super::kernels::{TILE_K, TILE_N};
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(scale.len(), k);
+        debug_assert_eq!(c.len(), m * n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TILE_N).min(n);
+                for i in 0..m {
+                    row_panel_i8(
+                        b.as_ptr(),
+                        n,
+                        a.as_ptr().add(i * k),
+                        scale.as_ptr(),
+                        k0,
+                        k1,
+                        j0,
+                        j1,
+                        c.as_mut_ptr().add(i * n),
+                    );
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+    }
+
+    /// [`nearest_code`] over an int8 codebook with one f32 scale per code
+    /// row. The row is dequantized in-register (`scale · widen(q)`, one
+    /// IEEE multiply per lane — the same value a scalar dequantization
+    /// would produce), then the distance accumulation is instruction-for-
+    /// instruction the f32 scan, so the argmin matches [`nearest_code`]
+    /// on the dequantized codebook **bitwise**.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `x.len() >= dk`, `codebook.len() == s * dk`,
+    /// `scale.len() == s`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn nearest_code_i8(
+        x: &[f32],
+        codebook: &[i8],
+        scale: &[f32],
+        s: usize,
+        dk: usize,
+    ) -> usize {
+        debug_assert!(x.len() >= dk);
+        debug_assert_eq!(codebook.len(), s * dk);
+        debug_assert_eq!(scale.len(), s);
+        let d8 = dk / 8 * 8;
+        let xp = x.as_ptr();
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..s {
+            let row = codebook.as_ptr().add(c * dk);
+            let sc = *scale.as_ptr().add(c);
+            let scv = _mm256_set1_ps(sc);
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i < d8 {
+                let deq = _mm256_mul_ps(scv, widen_i8(row.add(i)));
+                let diff = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), deq);
+                acc = _mm256_fmadd_ps(diff, diff, acc);
+                i += 8;
+            }
+            let mut d = hsum(acc);
+            while i < dk {
+                let t = *xp.add(i) - sc * (*row.add(i) as f32);
+                d += t * t;
+                i += 1;
+            }
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -618,6 +1292,171 @@ mod tests {
                     "{} gemm_par(nt={nt}) diverged",
                     mode.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn precision_parse_and_names() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("full").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("i8").unwrap(), Precision::Int8);
+        let err = Precision::parse("fp8").unwrap_err().to_string();
+        assert!(err.contains("fp8") && err.contains("bf16"), "{err}");
+        assert_eq!(Precision::Bf16.name(), "bf16");
+        assert_eq!(Precision::Int8.name(), "int8");
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    /// bf16 widening is exact, and the bf16 bodies share the f32 bodies'
+    /// loop structure per mode — so the dispatched bf16 kernels must be
+    /// **bit-identical** to the f32 kernels run on the dequantized
+    /// weights, in both modes, across tile/tail boundaries.
+    #[test]
+    fn bf16_dispatch_bit_matches_f32_on_dequantized_per_mode() {
+        use crate::tensor::{bf16_to_f32, f32_to_bf16};
+        let mut rng = Rng::new(0xBF16);
+        for mode in available_modes() {
+            for &(m, k, n) in &[(1usize, 5usize, 9usize), (3, 64, 128), (4, 67, 131), (2, 130, 31)]
+            {
+                let a = rand_vec(&mut rng, m * k);
+                let wq: Vec<u16> =
+                    rand_vec(&mut rng, k * n).iter().map(|&v| f32_to_bf16(v)).collect();
+                let wd: Vec<f32> = wq.iter().map(|&b| bf16_to_f32(b)).collect();
+
+                let mut out_q = vec![0.0f32; n];
+                let mut out_f = vec![0.0f32; n];
+                mode.matvec_add_q(MatRef::Bf16(&wq), &a[..k], &mut out_q);
+                mode.matvec_add(&wd, &a[..k], &mut out_f);
+                for j in 0..n {
+                    assert_eq!(
+                        out_q[j].to_bits(),
+                        out_f[j].to_bits(),
+                        "{} bf16 matvec ({k},{n})[{j}]",
+                        mode.name()
+                    );
+                }
+
+                let mut c_q = vec![0.0f32; m * n];
+                let mut c_f = vec![0.0f32; m * n];
+                mode.gemm_add_q(m, k, n, &a, MatRef::Bf16(&wq), &mut c_q);
+                mode.gemm_add(m, k, n, &a, &wd, &mut c_f);
+                for i in 0..m * n {
+                    assert_eq!(
+                        c_q[i].to_bits(),
+                        c_f[i].to_bits(),
+                        "{} bf16 gemm ({m},{k},{n}) flat {i}",
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The int8 kernels fold the per-k-row scale into the broadcast
+    /// scalar, so agreement with f32-on-dequantized is at tolerance (one
+    /// reassociation per product) — but repeated runs must be bit-stable.
+    #[test]
+    fn i8_dispatch_matches_f32_on_dequantized_per_mode() {
+        let mut rng = Rng::new(0x18D);
+        for mode in available_modes() {
+            for &(m, k, n) in &[(1usize, 5usize, 9usize), (3, 64, 128), (4, 67, 131)] {
+                let a = rand_vec(&mut rng, m * k);
+                let w = rand_vec(&mut rng, k * n);
+                let (q, scale) = kernels::quantize_rows_i8(&w, n);
+                let wd = kernels::dequantize_rows_i8(&q, &scale, n);
+                let b = MatRef::I8 { q: &q, scale: &scale };
+
+                let mut c_q = vec![0.0f32; m * n];
+                let mut c_f = vec![0.0f32; m * n];
+                mode.gemm_add_q(m, k, n, &a, b, &mut c_q);
+                mode.gemm_add(m, k, n, &a, &wd, &mut c_f);
+                for i in 0..m * n {
+                    let (g, f) = (c_q[i] as f64, c_f[i] as f64);
+                    assert!(
+                        (g - f).abs() < 1e-5 * (1.0 + f.abs()),
+                        "{} i8 gemm ({m},{k},{n}) flat {i}: {g} vs {f}",
+                        mode.name()
+                    );
+                }
+
+                let mut rerun = vec![0.0f32; m * n];
+                mode.gemm_add_q(m, k, n, &a, b, &mut rerun);
+                assert_eq!(
+                    c_q.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    rerun.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{} i8 gemm not run-to-run deterministic",
+                    mode.name()
+                );
+
+                let mut out_q = vec![0.0f32; n];
+                mode.matvec_add_q(b, &a[..k], &mut out_q);
+                for j in 0..n {
+                    assert_eq!(
+                        out_q[j].to_bits(),
+                        c_q[j].to_bits(),
+                        "{} i8 matvec vs gemm row 0 col {j}",
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The parallel banding is shared across precisions, so the
+    /// any-thread-count bit identity must hold for every (mode, MatRef).
+    #[test]
+    fn gemm_add_par_q_bit_identical_across_thread_counts() {
+        use crate::tensor::f32_to_bf16;
+        let mut rng = Rng::new(0x9B9B);
+        let (m, k, n) = (13usize, 69usize, 131usize);
+        let a = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let wq: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+        let (q8, scale) = kernels::quantize_rows_i8(&w, n);
+        for mode in available_modes() {
+            for (tag, b) in [
+                ("f32", MatRef::F32(&w)),
+                ("bf16", MatRef::Bf16(&wq)),
+                ("int8", MatRef::I8 { q: &q8, scale: &scale }),
+            ] {
+                let mut base = vec![0.0f32; m * n];
+                mode.gemm_q(m, k, n, &a, b, &mut base);
+                for nt in [1usize, 2, 3, 8] {
+                    let mut c = vec![f32::NAN; m * n];
+                    mode.gemm_par_q(nt, m, k, n, &a, b, &mut c);
+                    assert_eq!(
+                        base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "{} {tag} gemm_par_q(nt={nt}) diverged",
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// No scale folding in the int8 scan, so in every mode the argmin is
+    /// exactly the same mode's f32 scan over the dequantized codebook.
+    #[test]
+    fn nearest_code_i8_matches_f32_scan_on_dequantized_per_mode() {
+        let mut rng = Rng::new(0xC1D8);
+        for mode in available_modes() {
+            for &(s, dk) in &[(2usize, 2usize), (8, 7), (16, 8), (32, 16), (11, 19)] {
+                let cb = rand_vec(&mut rng, s * dk);
+                let (q, scale) = kernels::quantize_rows_i8(&cb, dk);
+                let deq = kernels::dequantize_rows_i8(&q, &scale, dk);
+                for _ in 0..16 {
+                    let x = rand_vec(&mut rng, dk);
+                    assert_eq!(
+                        mode.nearest_code_i8(&x, &q, &scale, s, dk),
+                        mode.nearest_code(&x, &deq, s, dk),
+                        "{} ({s},{dk})",
+                        mode.name()
+                    );
+                }
             }
         }
     }

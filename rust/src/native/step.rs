@@ -42,9 +42,10 @@ use super::kernels;
 use super::layout::Layout;
 use super::model::{
     forward_step_batched, forward_step_per_lane, forward_token_row, forward_token_row_opts,
-    forward_window_dense, BatchScratch, Codebooks, LaneStep, Params, RowState, Scratch, State,
-    TrainAccum,
+    forward_window_dense, BatchScratch, Codebooks, LaneStep, Params, QuantParams, RowState,
+    Scratch, State, TrainAccum,
 };
+use super::simd::Precision;
 use super::NativeOptions;
 
 /// Adam hyperparameters (§3.4.2; the schedule supplies the LR).
@@ -56,9 +57,15 @@ const ADAM_EPS: f64 = 1e-8;
 const EMA_EPS: f32 = 1e-5;
 
 /// Parsed params + codebooks — the executor's identity-keyed cache entry.
+///
+/// Under a reduced [`Precision`], `quant` holds the int8/bf16 weight twins
+/// built once at parse time and `params`/`cb` hold the **dequantized**
+/// mirrors (see [`QuantParams::build`]); under [`Precision::F32`], `quant`
+/// is `None` and `params`/`cb` are the raw weights, bit-untouched.
 pub(crate) struct ParsedWeights {
     pub params: Params,
     pub cb: Codebooks,
+    pub quant: Option<QuantParams>,
 }
 
 /// Reusable decode scratch parked on the executor between calls — the
@@ -78,14 +85,20 @@ pub(crate) fn weight_tensor_count(layout: &Layout) -> usize {
     sp.n_params + sp.n_cb
 }
 
-/// Parse the weight tensors of `inputs` into a cacheable [`ParsedWeights`].
-pub(crate) fn parse_weights(layout: &Layout, inputs: &[HostTensor]) -> Result<ParsedWeights> {
+/// Parse the weight tensors of `inputs` into a cacheable [`ParsedWeights`],
+/// quantizing the matmul weights once here (never on the hot path) when
+/// `precision` is reduced.
+pub(crate) fn parse_weights(
+    layout: &Layout,
+    inputs: &[HostTensor],
+    precision: Precision,
+) -> Result<ParsedWeights> {
     let cfg = &layout.cfg;
     let sp = SplitSpec::of(layout);
-    Ok(ParsedWeights {
-        params: Params::parse(cfg, &inputs[..sp.n_params])?,
-        cb: Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?,
-    })
+    let mut params = Params::parse(cfg, &inputs[..sp.n_params])?;
+    let mut cb = Codebooks::parse(cfg, &inputs[sp.n_params..sp.n_params + sp.n_cb])?;
+    let quant = QuantParams::build(cfg, &mut params, &mut cb, precision);
+    Ok(ParsedWeights { params, cb, quant })
 }
 
 struct SplitSpec {
@@ -139,6 +152,7 @@ pub(crate) fn run_decode(
             cfg,
             &weights.params,
             &weights.cb,
+            weights.quant.as_ref(),
             &mut st,
             &lanes,
             &mut logits,
@@ -154,6 +168,7 @@ pub(crate) fn run_decode(
             cfg,
             &weights.params,
             &weights.cb,
+            weights.quant.as_ref(),
             &mut st,
             &tokens,
             &mut logits,
@@ -221,6 +236,7 @@ pub(crate) fn run_prefill(
                 cfg,
                 &weights.params,
                 &weights.cb,
+                weights.quant.as_ref(),
                 &mut st,
                 &lanes,
                 &mut logits,
@@ -248,6 +264,7 @@ pub(crate) fn run_prefill(
                     cfg,
                     &weights.params,
                     &weights.cb,
+                    weights.quant.as_ref(),
                     rst,
                     tok,
                     None,
@@ -303,7 +320,7 @@ fn forward_window(
                 let mut sc = Scratch::new(cfg);
                 out.reserve(w);
                 for t in 0..w {
-                    forward_token_row(cfg, p, cb, rst, row_tokens[t], None, &mut sc, simd);
+                    forward_token_row(cfg, p, cb, None, rst, row_tokens[t], None, &mut sc, simd);
                     out.push((sc.logits.clone(), target(t)));
                 }
             }
@@ -516,7 +533,9 @@ pub(crate) fn run_train(
     outputs.push(HostTensor::from_i32(&[1], &[adam_t]));
     outputs.extend(st.dump(layout, "carry"));
     outputs.push(HostTensor::from_f32(&[6], &metrics));
-    Ok((outputs, ParsedWeights { params: new_params, cb: new_cb }))
+    // training always produces f32 weights; a decode executor re-seeding
+    // its cache from these re-quantizes at install time (`seed_cache`)
+    Ok((outputs, ParsedWeights { params: new_params, cb: new_cb, quant: None }))
 }
 
 /// `<preset>.eval` / `tput-*` bench: forward-only over a window.

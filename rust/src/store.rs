@@ -111,6 +111,34 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_reduced_precision() {
+        // bf16 and i8 tensors persist through the same header/raw-bytes
+        // format: nbytes is validated against shape * the dtype's actual
+        // element width (2 and 1), and values come back bit-exact
+        use crate::tensor::f32_to_bf16;
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("q.tvq");
+        let bf: Vec<u16> = [1.0f32, -0.5, 3.25, 1e-3, -7.0, 0.0]
+            .iter()
+            .map(|&x| f32_to_bf16(x))
+            .collect();
+        let tensors = vec![
+            ("w".to_string(), HostTensor::from_bf16(&[2, 3], &bf)),
+            ("q".to_string(), HostTensor::from_i8(&[5], &[-127, -1, 0, 1, 127])),
+            ("scale".to_string(), HostTensor::from_f32(&[1], &[0.25])),
+        ];
+        write_tvq(&p, &tensors).unwrap();
+        let back = read_tvq(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        assert_eq!(back[0].1.as_bf16().unwrap(), bf);
+        assert_eq!(back[1].1.as_i8().unwrap(), vec![-127, -1, 0, 1, 127]);
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let dir = crate::testutil::TempDir::new();
         let p = dir.join("bad.tvq");

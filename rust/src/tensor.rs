@@ -60,16 +60,29 @@ impl PartialEq for Bytes {
 }
 
 /// Element type of a [`HostTensor`]. Mirrors the TVQ store / manifest dtypes.
+///
+/// `Bf16` is the upper half of an f32 (1 sign, 8 exponent, 7 mantissa bits;
+/// see [`f32_to_bf16`]/[`bf16_to_f32`]); `I8` is a plain signed byte —
+/// per-row f32 quantization scales travel as a separate `F32` tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
     U32,
+    Bf16,
+    I8,
 }
+
+/// The dtype names accepted by [`DType::parse`], for error messages.
+pub const DTYPE_NAMES: &[&str] = &["f32", "i32", "u32", "bf16", "i8"];
 
 impl DType {
     pub fn size_bytes(self) -> usize {
-        4
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::Bf16 => 2,
+            DType::I8 => 1,
+        }
     }
 
     pub fn name(self) -> &'static str {
@@ -77,6 +90,8 @@ impl DType {
             DType::F32 => "f32",
             DType::I32 => "i32",
             DType::U32 => "u32",
+            DType::Bf16 => "bf16",
+            DType::I8 => "i8",
         }
     }
 
@@ -85,9 +100,26 @@ impl DType {
             "f32" => DType::F32,
             "i32" => DType::I32,
             "u32" => DType::U32,
-            other => bail!("unknown dtype {other}"),
+            "bf16" => DType::Bf16,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype '{other}' (accepted: {})", DTYPE_NAMES.join(", ")),
         })
     }
+}
+
+/// f32 -> bf16 by truncation (keep the upper 16 bits). Deterministic and
+/// monotone; relative error < 2^-7 for normal values. Round-to-nearest
+/// would halve the mean error but costs a carry chain per element — the
+/// quantized planes are built once per weight install, and truncation
+/// makes the bf16 value a bitwise prefix of the f32 it came from, which
+/// keeps `bf16(bf16(x)) == bf16(x)` trivially exact.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    (x.to_bits() >> 16) as u16
+}
+
+/// bf16 -> f32 by zero-extending the mantissa (exact; a bit shift).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
 }
 
 /// Dense, C-contiguous host tensor. Data stored as raw little-endian bytes so
@@ -127,6 +159,21 @@ impl HostTensor {
         Self { dtype: DType::I32, shape: shape.to_vec(), data: Bytes::new(data) }
     }
 
+    pub fn from_bf16(shape: &[usize], values: &[u16]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 2);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::Bf16, shape: shape.to_vec(), data: Bytes::new(data) }
+    }
+
+    pub fn from_i8(shape: &[usize], values: &[i8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data: Vec<u8> = values.iter().map(|&v| v as u8).collect();
+        Self { dtype: DType::I8, shape: shape.to_vec(), data: Bytes::new(data) }
+    }
+
     pub fn scalar_f32(v: f32) -> Self {
         Self::from_f32(&[], &[v])
     }
@@ -159,6 +206,24 @@ impl HostTensor {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    pub fn as_bf16(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::Bf16 {
+            bail!("tensor is {:?}, not bf16", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != DType::I8 {
+            bail!("tensor is {:?}, not i8", self.dtype);
+        }
+        Ok(self.data.iter().map(|&b| b as i8).collect())
     }
 
     /// First element as f32 (for scalar metric tensors).
@@ -212,6 +277,56 @@ mod tests {
     fn dtype_mismatch_errors() {
         let t = HostTensor::from_i32(&[1], &[3]);
         assert!(t.as_f32().is_err());
+        assert!(t.as_bf16().is_err());
+        assert!(t.as_i8().is_err());
+    }
+
+    #[test]
+    fn roundtrip_bf16_and_i8() {
+        let b = [f32_to_bf16(1.5), f32_to_bf16(-3.0), f32_to_bf16(0.0)];
+        let t = HostTensor::from_bf16(&[3], &b);
+        assert_eq!(t.as_bf16().unwrap(), b.to_vec());
+        assert_eq!(t.nbytes(), 6);
+        assert_eq!(bf16_to_f32(b[0]), 1.5); // exactly representable
+        let q = [-127i8, 0, 1, 127];
+        let t = HostTensor::from_i8(&[4], &q);
+        assert_eq!(t.as_i8().unwrap(), q.to_vec());
+        assert_eq!(t.nbytes(), 4);
+    }
+
+    #[test]
+    fn bf16_truncation_properties() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 1.5, 3.14159, -2.7e-3, 6.5e4] {
+            let r = bf16_to_f32(f32_to_bf16(x));
+            // truncation: |x - r| < 2^-7 |x|, sign and zero preserved
+            assert!((x - r).abs() <= x.abs() / 128.0, "{x} -> {r}");
+            assert_eq!(x.is_sign_negative(), r.is_sign_negative());
+            // idempotent: the round-trip value is a bf16 fixed point
+            assert_eq!(f32_to_bf16(r), f32_to_bf16(x));
+        }
+    }
+
+    #[test]
+    fn dtype_parse_lists_accepted_names_on_error() {
+        for name in DTYPE_NAMES {
+            let d = DType::parse(name).unwrap();
+            assert_eq!(d.name(), *name);
+        }
+        let err = DType::parse("f64").unwrap_err().to_string();
+        for name in DTYPE_NAMES {
+            assert!(err.contains(name), "error '{err}' should list '{name}'");
+        }
+    }
+
+    #[test]
+    fn size_bytes_per_dtype() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I32.size_bytes(), 4);
+        assert_eq!(DType::U32.size_bytes(), 4);
+        assert_eq!(DType::Bf16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(HostTensor::zeros(DType::Bf16, &[3, 5]).nbytes(), 30);
+        assert_eq!(HostTensor::zeros(DType::I8, &[3, 5]).nbytes(), 15);
     }
 
     #[test]

@@ -16,6 +16,9 @@ fn backend(nt: usize, simd: SimdMode, batched: bool) -> NativeBackend {
         num_threads: nt,
         simd,
         batched_decode: batched,
+        // precision stays env-controlled so the TVQ_PRECISION CI axis
+        // exercises this whole suite in every weight-precision mode
+        ..NativeOptions::default()
     })
 }
 

@@ -1,0 +1,219 @@
+//! Quality and determinism oracles for the reduced-precision decode path.
+//!
+//! The contract under test (DESIGN.md §7): with `Precision::Bf16` or
+//! `Precision::Int8`, weights quantize once at install time, every
+//! accumulation stays f32, and the decode loop is bit-deterministic per
+//! (SIMD × precision) pair at any thread count — while the logits stay
+//! within a pinned tolerance of the f32 reference.
+//!
+//! Tolerance derivation (documented so a regression is a decision, not a
+//! constant bump):
+//!
+//! * bf16 truncates a weight to 8 mantissa bits → per-weight relative
+//!   error < 2^-7 ≈ 0.8%. Each matmul output is a sum of ~d_model such
+//!   products whose errors partially cancel; layernorm re-centres every
+//!   sublayer, so layer-to-layer drift stays proportional, not additive.
+//!   Budget: |Δlogit| ≤ 0.25 + 0.05·|logit|.
+//! * int8 stores round(w/scale) with scale = max|row|/127 → per-weight
+//!   absolute error ≤ scale/2 ≈ 0.4% of the row max, which is coarser
+//!   than bf16 and hits the codebook scan too. Budget:
+//!   |Δlogit| ≤ 0.50 + 0.10·|logit|.
+//!
+//! Every tolerance check is paired with an "engaged" check — the reduced
+//! mode must differ from f32 in at least one bit — so a dispatch bug that
+//! silently falls back to f32 cannot pass as "within tolerance".
+
+use transformer_vq::native::{
+    kernels, DecodeSession, NativeBackend, NativeOptions, Precision, SimdMode,
+};
+use transformer_vq::rng::Rng;
+
+fn session(precision: Precision, nt: usize) -> DecodeSession {
+    let backend = NativeBackend::new().with_options(NativeOptions {
+        num_threads: nt,
+        precision,
+        // SIMD stays env-controlled so the TVQ_SIMD CI axis runs this
+        // suite on both ISAs
+        ..NativeOptions::default()
+    });
+    DecodeSession::new(&backend, "quickstart").unwrap()
+}
+
+fn tokens_at(t: i32, b: usize) -> Vec<i32> {
+    (0..b as i32).map(|r| (23 * t + 11 * r) % 251).collect()
+}
+
+/// Run `steps` decode steps and return the full per-step logit bit
+/// streams, concatenated — the unit every assertion below compares.
+fn logit_bits(sess: &mut DecodeSession, steps: i32) -> Vec<u32> {
+    let b = sess.batch_size();
+    let mut bits = Vec::new();
+    for t in 0..steps {
+        let l = sess.step(&tokens_at(t, b)).unwrap();
+        bits.extend(l.iter().map(|x| x.to_bits()));
+    }
+    bits
+}
+
+fn assert_close_to_f32(precision: Precision, tol_abs: f32, tol_rel: f32) {
+    let steps = 24;
+    let mut f32_sess = session(Precision::F32, 1);
+    let mut q_sess = session(precision, 1);
+    let b = f32_sess.batch_size();
+    let mut any_bit_diff = false;
+    for t in 0..steps {
+        let toks = tokens_at(t, b);
+        let want: Vec<f32> = f32_sess.step(&toks).unwrap().to_vec();
+        let got = q_sess.step(&toks).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol_abs + tol_rel * w.abs(),
+                "{} logits[{i}] at step {t}: {g} vs f32 {w}",
+                precision.name()
+            );
+            any_bit_diff |= g.to_bits() != w.to_bits();
+        }
+    }
+    assert!(
+        any_bit_diff,
+        "{} decode is bit-identical to f32 over {steps} steps — the \
+         reduced-precision path is not engaged",
+        precision.name()
+    );
+}
+
+#[test]
+fn bf16_decode_tracks_f32_within_budget() {
+    assert_close_to_f32(Precision::Bf16, 0.25, 0.05);
+}
+
+#[test]
+fn int8_decode_tracks_f32_within_budget() {
+    assert_close_to_f32(Precision::Int8, 0.50, 0.10);
+}
+
+/// Per precision mode, decode bits must not depend on the thread count
+/// or the run: quantization happens once at weight-install time and the
+/// parallel kernels band rows exactly like the f32 path.
+#[test]
+fn reduced_precision_decode_is_bit_deterministic() {
+    for precision in [Precision::Bf16, Precision::Int8] {
+        let reference = logit_bits(&mut session(precision, 1), 16);
+        // same mode, fresh session: run-to-run determinism
+        assert_eq!(
+            reference,
+            logit_bits(&mut session(precision, 1), 16),
+            "{} decode differs across runs",
+            precision.name()
+        );
+        for nt in [2usize, 4] {
+            assert_eq!(
+                reference,
+                logit_bits(&mut session(precision, nt), 16),
+                "{} decode differs at num_threads={nt}",
+                precision.name()
+            );
+        }
+    }
+}
+
+/// The per-lane fallback must hold the same per-mode bit-determinism
+/// contract as the batched path (they share the quantized planes).
+#[test]
+fn reduced_precision_per_lane_matches_batched_tolerance() {
+    for precision in [Precision::Bf16, Precision::Int8] {
+        let batched = NativeBackend::new().with_options(NativeOptions {
+            precision,
+            batched_decode: true,
+            num_threads: 1,
+            ..NativeOptions::default()
+        });
+        let per_lane = NativeBackend::new().with_options(NativeOptions {
+            precision,
+            batched_decode: false,
+            num_threads: 1,
+            ..NativeOptions::default()
+        });
+        let mut s1 = DecodeSession::new(&batched, "quickstart").unwrap();
+        let mut s2 = DecodeSession::new(&per_lane, "quickstart").unwrap();
+        let b = s1.batch_size();
+        for t in 0..16i32 {
+            let toks = tokens_at(t, b);
+            s1.step(&toks).unwrap();
+            s2.step(&toks).unwrap();
+            for (i, (a, c)) in s1.logits().iter().zip(s2.logits()).enumerate() {
+                assert!(
+                    (a - c).abs() <= 1e-4 * (1.0 + c.abs()),
+                    "{} batched vs per-lane logits[{i}] at step {t}: {a} vs {c}",
+                    precision.name()
+                );
+            }
+        }
+    }
+}
+
+/// Int8 codebook scan oracle. Two layers of agreement:
+///
+/// 1. Exactness: on the *dequantized* codebook the int8 scan must pick
+///    the same code as the f32 scan, bitwise, in every SIMD mode — the
+///    scalar and AVX2 paths dequantize with the same IEEE multiply.
+/// 2. Quality: when the query sits near an *original* f32 code and the
+///    codes are separated by more than the quantization error, the int8
+///    scan must still find that code.
+#[test]
+fn int8_nearest_code_agrees_with_f32_scan() {
+    let (s, dk) = (16usize, 8usize);
+    let mut rng = Rng::new(0x51C8);
+    let mut modes = vec![SimdMode::Scalar];
+    let detected = SimdMode::from_env();
+    if detected != SimdMode::Scalar {
+        modes.push(detected);
+    }
+
+    // exactness on a random codebook, queries near codes and far away
+    let cb: Vec<f32> = (0..s * dk).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+    let (q, scale) = kernels::quantize_rows_i8(&cb, dk);
+    let deq = kernels::dequantize_rows_i8(&q, &scale, dk);
+    for trial in 0..64 {
+        let x: Vec<f32> = if trial % 2 == 0 {
+            let base = (trial / 2) % s;
+            (0..dk).map(|j| deq[base * dk + j] + (rng.f32() - 0.5) * 0.2).collect()
+        } else {
+            (0..dk).map(|_| (rng.f32() - 0.5) * 4.0).collect()
+        };
+        let want = kernels::nearest_code(&x, &deq, s, dk);
+        for &mode in &modes {
+            assert_eq!(
+                mode.nearest_code_i8(&x, &q, &scale, s, dk),
+                want,
+                "int8 scan vs f32 scan on dequantized codebook \
+                 (trial {trial}, {mode:?})"
+            );
+        }
+    }
+
+    // quality: well-separated codes survive quantization. Row i peaks at
+    // coordinate i%dk with amplitude i+1, so inter-code distances dwarf
+    // the ≤ scale/2 = (i+1)/254 per-coordinate quantization error.
+    let mut sep = vec![0.0f32; s * dk];
+    for i in 0..s {
+        sep[i * dk + i % dk] = (i + 1) as f32;
+    }
+    let (qs, sc) = kernels::quantize_rows_i8(&sep, dk);
+    for i in 0..s {
+        let x: Vec<f32> =
+            (0..dk).map(|j| sep[i * dk + j] + (rng.f32() - 0.5) * 0.05).collect();
+        assert_eq!(
+            kernels::nearest_code(&x, &sep, s, dk),
+            i,
+            "separated-codebook construction broken at code {i}"
+        );
+        for &mode in &modes {
+            assert_eq!(
+                mode.nearest_code_i8(&x, &qs, &sc, s, dk),
+                i,
+                "int8 scan lost well-separated code {i} ({mode:?})"
+            );
+        }
+    }
+}

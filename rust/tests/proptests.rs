@@ -7,8 +7,9 @@ use transformer_vq::json::Json;
 use transformer_vq::metrics::LatencyHistogram;
 use transformer_vq::rng::Rng;
 use transformer_vq::schedule::LrSchedule;
+use transformer_vq::native::kernels::{dequantize_rows_i8, quantize_rows_i8};
 use transformer_vq::store::{read_tvq, write_tvq};
-use transformer_vq::tensor::HostTensor;
+use transformer_vq::tensor::{bf16_to_f32, f32_to_bf16, HostTensor};
 use transformer_vq::testutil::{check_property, TempDir};
 use transformer_vq::tokenizer::{Bpe, ByteTokenizer, Tokenizer};
 use transformer_vq::vqref;
@@ -157,12 +158,24 @@ fn prop_tvq_roundtrip() {
             let ndim = rng.below(4) as usize;
             let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5) as usize).collect();
             let n: usize = shape.iter().product();
-            let t = if rng.f64() < 0.5 {
-                let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-                HostTensor::from_f32(&shape, &vals)
-            } else {
-                let vals: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
-                HostTensor::from_i32(&shape, &vals)
+            let t = match rng.below(4) {
+                0 => {
+                    let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                    HostTensor::from_f32(&shape, &vals)
+                }
+                1 => {
+                    let vals: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
+                    HostTensor::from_i32(&shape, &vals)
+                }
+                2 => {
+                    let vals: Vec<u16> =
+                        (0..n).map(|_| f32_to_bf16(rng.normal() as f32)).collect();
+                    HostTensor::from_bf16(&shape, &vals)
+                }
+                _ => {
+                    let vals: Vec<i8> = (0..n).map(|_| rng.next_u64() as i8).collect();
+                    HostTensor::from_i8(&shape, &vals)
+                }
             };
             tensors.push((format!("t/{i}"), t));
         }
@@ -174,6 +187,50 @@ fn prop_tvq_roundtrip() {
             assert_eq!(a.0, b.0);
             assert_eq!(a.1, b.1);
         }
+    });
+}
+
+#[test]
+fn prop_bf16_roundtrip_error_bound_and_idempotency() {
+    check_property("bf16 truncation: rel error < 2^-7, idempotent", 30, |rng| {
+        for _ in 0..200 {
+            let x = (rng.normal() * 10f64.powi(rng.below(7) as i32 - 3)) as f32;
+            let b = f32_to_bf16(x);
+            let y = bf16_to_f32(b);
+            // truncating 16 mantissa bits moves the value by < 2^-7 · |x|
+            assert!((x - y).abs() <= x.abs() / 128.0, "bf16 error: {x} -> {y}");
+            // a value already on the bf16 grid must be a fixed point
+            assert_eq!(f32_to_bf16(y), b, "bf16 round-trip not idempotent at {x}");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_quantize_error_bound_and_code_stability() {
+    check_property("int8 per-row quantize: |err| <= scale/2, codes stable", 30, |rng| {
+        let n = 1 + rng.below(64) as usize;
+        let rows = 1 + rng.below(8) as usize;
+        let w: Vec<f32> = (0..rows * n)
+            .map(|_| (rng.normal() * 10f64.powi(rng.below(5) as i32 - 2)) as f32)
+            .collect();
+        let (q, scale) = quantize_rows_i8(&w, n);
+        assert_eq!(q.len(), w.len());
+        assert_eq!(scale.len(), rows);
+        let deq = dequantize_rows_i8(&q, &scale, n);
+        for (ix, (&orig, &back)) in w.iter().zip(&deq).enumerate() {
+            let s = scale[ix / n];
+            // round-to-nearest on w/scale puts the residual within half a
+            // quantization step, plus the float rounding of the divide
+            // and the dequant multiply (each ≤ 127·2^-24 steps)
+            assert!(
+                (orig - back).abs() <= s * 0.5001,
+                "int8 residual at {ix}: {orig} vs {back} (scale {s})"
+            );
+        }
+        // requantizing the dequantized weights must reproduce the codes
+        // exactly (scale may differ by an ulp; the integer grid may not)
+        let (q2, _) = quantize_rows_i8(&deq, n);
+        assert_eq!(q, q2, "int8 codes unstable under requantization");
     });
 }
 
