@@ -1,0 +1,338 @@
+//! A hand-rolled Rust lexer for the static audit (`tvq audit`).
+//!
+//! The rules in [`super::rules`] reason about *token streams*, never raw
+//! text, so the word `unsafe` inside a comment, a string, a raw string, a
+//! byte string, or a char literal can never trip a rule — pinned by the
+//! proptests in `rust/tests/proptests.rs`. Like `crate::json`, this is a
+//! byte-cursor scanner with no dependencies and no recursion on input.
+//!
+//! Scope: enough Rust to be comment/string-exact on this codebase. Tokens
+//! are idents, lifetimes, numbers, the four literal families, the two
+//! comment families (doc comments are line/block comments whose text
+//! starts with `///`, `//!`, `/**`, or `/*!`), and single-char puncts.
+//! Known simplification: a non-ASCII *unescaped* char literal (`'é'`)
+//! would be mis-read as a lifetime; the tree has none, and escapes
+//! (`'\u{e9}'`) are handled exactly.
+
+/// Token kind. Comments are first-class tokens (rules need to *find*
+/// them for `SAFETY:`/`tvq-allow` handling, not skip them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lifetime,
+    Num,
+    /// `"..."` or `b"..."` (escapes kept verbatim in `text`).
+    Str,
+    /// `r"..."`, `r#"..."#`, `br#"..."#` at any hash depth.
+    RawStr,
+    /// `'x'` or `b'x'`, including escaped forms.
+    Char,
+    LineComment,
+    BlockComment,
+    /// One punctuation byte; multi-char operators arrive as a sequence.
+    Punct,
+}
+
+/// One token: kind, verbatim text, and the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+/// Lex `src` to a token vector. Never fails: unterminated literals and
+/// comments extend to end-of-input (the audit walks real, compiling
+/// files; degrading gracefully matters only for the fuzz harness).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let push = |toks: &mut Vec<Tok>, kind: Kind, text: &str, line: usize| {
+        toks.push(Tok { kind, text: text.to_string(), line });
+    };
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' || c == 0x0c {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //! doc comments)
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            push(&mut toks, Kind::LineComment, &src[start..i], line);
+            continue;
+        }
+        // block comment, nesting like rustc
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let start = i;
+            let tok_line = line;
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            push(&mut toks, Kind::BlockComment, &src[start..i.min(n)], tok_line);
+            continue;
+        }
+        // raw strings r"..", r#".."#, br#".."# — and raw idents r#name
+        if c == b'r' || c == b'b' {
+            let after_r = if c == b'r' {
+                Some(i + 1)
+            } else if b.get(i + 1) == Some(&b'r') {
+                Some(i + 2)
+            } else {
+                None
+            };
+            if let Some(mut j) = after_r {
+                let mut hashes = 0usize;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    let start = i;
+                    let tok_line = line;
+                    i = j + 1;
+                    while i < n {
+                        if b[i] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && b.get(i + 1 + k) == Some(&b'#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break;
+                            }
+                            i += 1;
+                        } else {
+                            if b[i] == b'\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                    push(&mut toks, Kind::RawStr, &src[start..i.min(n)], tok_line);
+                    continue;
+                }
+                if c == b'r' && hashes == 1 && j < n && is_ident_start(b[j]) {
+                    // raw identifier: emit the bare name so rule
+                    // comparisons see `r#fn` as `fn`
+                    let start = j;
+                    let mut e = j;
+                    while e < n && is_ident_char(b[e]) {
+                        e += 1;
+                    }
+                    push(&mut toks, Kind::Ident, &src[start..e], line);
+                    i = e;
+                    continue;
+                }
+            }
+        }
+        // byte string / byte char: step past the prefix, then share the
+        // plain string/char scanners below
+        let mut c = c;
+        if c == b'b' && matches!(b.get(i + 1), Some(&b'"') | Some(&b'\'')) {
+            i += 1;
+            c = b[i];
+        }
+        if c == b'"' {
+            let start = i;
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => {
+                        if b.get(i + 1) == Some(&b'\n') {
+                            line += 1;
+                        }
+                        i += 2;
+                    }
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            i = i.min(n);
+            push(&mut toks, Kind::Str, &src[start..i], tok_line);
+            continue;
+        }
+        if c == b'\'' {
+            let n1 = b.get(i + 1).copied().unwrap_or(0);
+            let closes = b.get(i + 2) == Some(&b'\'');
+            if n1 != b'\\' && is_ident_start(n1) && !closes {
+                // lifetime: 'a, 'static, '_
+                let start = i;
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                push(&mut toks, Kind::Lifetime, &src[start..i], line);
+                continue;
+            }
+            let start = i;
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => i += 2,
+                    b'\'' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => break, // unterminated; leave the newline
+                    _ => i += 1,
+                }
+            }
+            i = i.min(n);
+            push(&mut toks, Kind::Char, &src[start..i], line);
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            push(&mut toks, Kind::Ident, &src[start..i], line);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            let hex = c == b'0' && matches!(b.get(start + 1), Some(&b'x') | Some(&b'X'));
+            while i < n {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    i += 1;
+                } else if d == b'.' && b.get(i + 1).is_some_and(|x| x.is_ascii_digit()) {
+                    // 1.5 but not the range 0..n (that '.' has no digit)
+                    i += 1;
+                } else if (d == b'+' || d == b'-') && matches!(b[i - 1], b'e' | b'E') && !hex {
+                    i += 1; // exponent sign: 1e-5
+                } else {
+                    break;
+                }
+            }
+            push(&mut toks, Kind::Num, &src[start..i], line);
+            continue;
+        }
+        // single ASCII punct (>= 0x80 was consumed by the ident arm)
+        push(&mut toks, Kind::Punct, &src[i..i + 1], line);
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_rule_tokens() {
+        let src = r##"
+// unsafe unwrap HashMap
+/* vec! collect /* nested spawn */ still comment */
+fn ok() {
+    let s = "unsafe { unwrap() }";
+    let r = r#"panic! " expect"#;
+    let b = b"Instant::now";
+    let c = 'u';
+}
+"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn", "ok", "let", "s", "let", "r", "let", "b", "let", "c"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> &'static str { let c = 'x'; x }");
+        let lifetimes: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Lifetime).map(|t| t.text.as_str()).collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'static"]);
+        let chars: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Char).map(|t| t.text.as_str()).collect();
+        assert_eq!(chars, vec!["'x'"]);
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_swallow_code() {
+        let ids = idents(r"fn f() { let q = '\''; let n = '\n'; let u = '\u{FFFD}'; marker }");
+        assert!(ids.contains(&"marker".to_string()), "got {ids:?}");
+    }
+
+    #[test]
+    fn raw_strings_at_any_hash_depth() {
+        let src = "let a = r\"x\"; let b = r##\"says \"#hi\"# ok\"##; tail";
+        let ids = idents(src);
+        assert!(ids.contains(&"tail".to_string()), "got {ids:?}");
+        let raws = lex(src).into_iter().filter(|t| t.kind == Kind::RawStr).count();
+        assert_eq!(raws, 2);
+    }
+
+    #[test]
+    fn line_numbers_track_every_literal_family() {
+        let src = "fn a() {}\n/* b\nc */\nlet s = \"x\ny\";\nfn z() {}\n";
+        let toks = lex(src);
+        let z = toks.iter().find(|t| t.text == "z").expect("z token");
+        assert_eq!(z.line, 6);
+        let s = toks.iter().find(|t| t.kind == Kind::Str).expect("str token");
+        assert_eq!(s.line, 4);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let toks = lex("for i in 0..10 { x.0 = 1.5e-3; y = 0xFF; }");
+        let nums: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Num).map(|t| t.text.as_str()).collect();
+        assert_eq!(nums, vec!["0", "10", "0", "1.5e-3", "0xFF"]);
+    }
+
+    #[test]
+    fn lexer_consumes_adversarial_input_without_panicking() {
+        for src in ["\"", "'", "r#\"", "/*", "b'", "1e", "'\\", "r#", "#!["] {
+            let _ = lex(src);
+        }
+    }
+}

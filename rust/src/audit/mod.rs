@@ -1,0 +1,145 @@
+//! `tvq audit` — static enforcement of the engine's contracts.
+//!
+//! The engine's guarantees (bit-identical output at any thread count,
+//! SIMD mode, and precision; allocation-free steady-state decode; a
+//! panic-free serving path) are pinned dynamically by the tier-1 suites,
+//! but dynamic tests only cover the paths they drive. This module is the
+//! static side: a pure-std analysis pass over `rust/src` + `examples`
+//! that runs as the `tvq audit` subcommand and as the tier-1 integration
+//! test `rust/tests/static_audit.rs`. DESIGN.md §9 is the prose spec.
+//!
+//! Rules (see [`rules`] for exact semantics):
+//!
+//! * R1 `unsafe_confinement` — `unsafe` only in `native/{simd,kernels}.rs`,
+//!   and every site immediately preceded by a `// SAFETY:` comment or a
+//!   `# Safety` doc section.
+//! * R2 `determinism` — `native/*` may not use `HashMap`/`HashSet`,
+//!   `Instant`, or thread `spawn` outside the kernels.rs pool.
+//! * R3 `zero_alloc` — steady-state decode fns may not allocate
+//!   (`Vec::new`, `vec!`, `to_vec`, `collect`, `format!`, `Box::new`,
+//!   `String::from`).
+//! * R4 `panic_surface` — no `unwrap`/`expect`/`panic!`/`unreachable!`
+//!   in `coordinator/`, `sample/`, `tokenizer/`.
+//! * R5 `wiring` — every `NativeOptions` field and `TVQ_*` env var is
+//!   surfaced in `main.rs` and documented in README.md/DESIGN.md.
+//!
+//! Violations are suppressed in place with `// tvq-allow(rule): reason`;
+//! an empty reason is itself a finding. Analysis is token-based on a
+//! hand-rolled lexer ([`lexer`]), so rule words inside comments, strings,
+//! raw strings, and char literals never fire, and `#[cfg(test)]` mods and
+//! `#[test]` fns are skipped entirely.
+
+mod lexer;
+mod rules;
+
+pub use lexer::{lex, Kind, Tok};
+pub use rules::{
+    audit_file, audit_wiring, suppressed, FileAudit, Finding, SourceFile, Suppression, RULES,
+};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Everything one audit run produced.
+#[derive(Debug)]
+pub struct AuditReport {
+    pub files_scanned: usize,
+    /// Surviving findings, sorted by (file, line).
+    pub findings: Vec<Finding>,
+    /// Every `tvq-allow` in the tree (all carry non-empty reasons — an
+    /// empty reason would have been a finding instead).
+    pub suppressions: Vec<Suppression>,
+}
+
+impl AuditReport {
+    /// Multi-line `file:line: [rule] message` rendering of the findings.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+        }
+        out.push_str(&format!(
+            "tvq audit: {} files, {} findings, {} suppressions\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressions.len()
+        ));
+        out
+    }
+}
+
+/// Walk `<root>/rust/src` + `<root>/examples`, run every rule, apply
+/// suppressions, and return the report. `root` is the repository root
+/// (the directory holding `README.md` and `DESIGN.md`).
+pub fn run_audit(root: &Path) -> Result<AuditReport> {
+    let mut files: Vec<SourceFile> = Vec::new();
+    for base in ["rust/src", "examples"] {
+        collect_rs(root, &root.join(base), &mut files)?;
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut suppressions: Vec<Suppression> = Vec::new();
+    for f in &files {
+        let fa = rules::audit_file(&f.rel, &f.text);
+        findings.extend(fa.findings);
+        suppressions.extend(fa.suppressions);
+    }
+
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap_or_default();
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+    for w in rules::audit_wiring(&files, &readme, &design) {
+        if !rules::suppressed(&w, &suppressions) {
+            findings.push(w);
+        }
+    }
+
+    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(AuditReport { files_scanned: files.len(), findings, suppressions })
+}
+
+/// Recursively collect `.rs` files under `dir` as repo-relative
+/// [`SourceFile`]s, forward-slashed for rule matching.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("audit: read_dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("audit: read {}", path.display()))?;
+            out.push(SourceFile { rel, text });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_findings_and_summary() {
+        let report = AuditReport {
+            files_scanned: 2,
+            findings: vec![Finding {
+                file: "rust/src/x.rs".to_string(),
+                line: 3,
+                rule: "determinism",
+                msg: "nope".to_string(),
+            }],
+            suppressions: Vec::new(),
+        };
+        let text = report.render();
+        assert!(text.contains("rust/src/x.rs:3: [determinism] nope"), "{text}");
+        assert!(text.contains("2 files, 1 findings, 0 suppressions"), "{text}");
+    }
+}

@@ -1,0 +1,941 @@
+//! The audit rules (DESIGN.md §9) over [`super::lexer`] token streams.
+//!
+//! Per-file rules: R1 `unsafe_confinement`, R2 `determinism`, R3
+//! `zero_alloc`, R4 `panic_surface` — run by [`audit_file`], which also
+//! parses `// tvq-allow(rule): reason` suppressions and applies them.
+//! Cross-file rule: R5 `wiring` — run by [`audit_wiring`] over the whole
+//! file set plus README/DESIGN text.
+//!
+//! Structure shared by the rules is computed once per file: attribute
+//! token spans (`#[...]`), test spans (`#[test]` fns and `#[cfg(test)]`
+//! mods, skipped by every rule), and `fn` name -> body spans (R3 scoping).
+
+use super::lexer::{lex, Kind, Tok};
+
+/// Rule identifiers, as written inside `tvq-allow(...)`.
+pub const RULES: [&str; 5] =
+    ["unsafe_confinement", "determinism", "zero_alloc", "panic_surface", "wiring"];
+
+/// Files where `unsafe` is allowed at all (R1).
+const UNSAFE_ALLOWED: [&str; 2] = ["rust/src/native/simd.rs", "rust/src/native/kernels.rs"];
+
+/// One audit violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: usize,
+    /// One of [`RULES`], or `"suppression"` for malformed `tvq-allow`s.
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// One parsed `// tvq-allow(rule): reason` comment. It silences findings
+/// of `rule` on its own line and on the next line that carries code
+/// tokens (so it can sit above the offending statement or ride at the
+/// end of it).
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    /// First line after `line` with a non-comment token (0 = none).
+    pub next_code_line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Result of auditing one file: surviving findings + its suppressions.
+#[derive(Debug)]
+pub struct FileAudit {
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// One source file handed to [`audit_wiring`].
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub rel: String,
+    pub text: String,
+}
+
+/// True when `sups` contains a suppression covering `f`.
+pub fn suppressed(f: &Finding, sups: &[Suppression]) -> bool {
+    sups.iter().any(|s| {
+        s.file == f.file
+            && s.rule == f.rule
+            && (f.line == s.line || f.line == s.next_code_line)
+    })
+}
+
+fn is_p(t: &Tok, c: u8) -> bool {
+    t.kind == Kind::Punct && t.text.as_bytes() == [c]
+}
+
+fn is_id(t: &Tok, name: &str) -> bool {
+    t.kind == Kind::Ident && t.text == name
+}
+
+fn is_comment(t: &Tok) -> bool {
+    matches!(t.kind, Kind::LineComment | Kind::BlockComment)
+}
+
+/// Index of the `}` matching the `{` at `open` (token indices).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if is_p(&toks[i], b'{') {
+            depth += 1;
+        } else if is_p(&toks[i], b'}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Per-file structure the rules share.
+struct Model {
+    toks: Vec<Tok>,
+    in_attr: Vec<bool>,
+    in_test: Vec<bool>,
+    /// (fn name, body token span inclusive, index of the `fn` keyword).
+    fns: Vec<(String, usize, usize, usize)>,
+}
+
+fn build_model(src: &str) -> Model {
+    let toks = lex(src);
+    let nt = toks.len();
+    let mut in_attr = vec![false; nt];
+    let mut in_test = vec![false; nt];
+    // attribute spans `#[...]` / `#![...]`, and whether they name `test`
+    let mut attrs: Vec<(usize, usize, bool)> = Vec::new();
+    let mut i = 0usize;
+    while i < nt {
+        if is_p(&toks[i], b'#') {
+            let mut j = i + 1;
+            if j < nt && is_p(&toks[j], b'!') {
+                j += 1;
+            }
+            if j < nt && is_p(&toks[j], b'[') {
+                let mut depth = 0usize;
+                let mut e = j;
+                while e < nt {
+                    if is_p(&toks[e], b'[') {
+                        depth += 1;
+                    } else if is_p(&toks[e], b']') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    e += 1;
+                }
+                let e = e.min(nt - 1);
+                let has_test = toks[i..=e].iter().any(|t| is_id(t, "test"));
+                for f in in_attr.iter_mut().take(e + 1).skip(i) {
+                    *f = true;
+                }
+                attrs.push((i, e, has_test));
+                i = e + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    // test spans: a `test`-naming attribute, then (skipping attrs and
+    // comments) the item it decorates up to its matching `}`
+    for &(s, e, has_test) in &attrs {
+        if !has_test {
+            continue;
+        }
+        let mut j = e + 1;
+        while j < nt && (in_attr[j] || is_comment(&toks[j])) {
+            j += 1;
+        }
+        let mut open = None;
+        while j < nt {
+            if is_p(&toks[j], b'{') {
+                open = Some(j);
+                break;
+            }
+            if is_p(&toks[j], b';') {
+                break;
+            }
+            j += 1;
+        }
+        if let Some(open) = open {
+            let close = match_brace(&toks, open);
+            for f in in_test.iter_mut().take(close + 1).skip(s) {
+                *f = true;
+            }
+        }
+    }
+    // fn spans (name -> body) for R3's per-function scoping
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < nt {
+        if is_id(&toks[i], "fn") && !in_attr[i] {
+            if let Some(name_tok) = toks.get(i + 1) {
+                if name_tok.kind == Kind::Ident {
+                    let mut j = i + 1;
+                    let mut open = None;
+                    while j < nt {
+                        if is_p(&toks[j], b'{') {
+                            open = Some(j);
+                            break;
+                        }
+                        if is_p(&toks[j], b';') {
+                            break; // trait method / extern decl: no body
+                        }
+                        j += 1;
+                    }
+                    if let Some(open) = open {
+                        let close = match_brace(&toks, open);
+                        fns.push((name_tok.text.clone(), open, close, i));
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    Model { toks, in_attr, in_test, fns }
+}
+
+/// Parse the inside of a `tvq-allow...` comment body (after the slashes).
+/// Returns `(rule, reason)` or `None` when malformed.
+fn parse_allow(body: &str) -> Option<(String, String)> {
+    let rest = body.strip_prefix("tvq-allow")?;
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = &rest[..close];
+    if rule.is_empty() || !rule.bytes().all(|c| c.is_ascii_lowercase() || c == b'_') {
+        return None;
+    }
+    let after = rest[close + 1..].trim_start();
+    let after = after.strip_prefix(':')?;
+    Some((rule.to_string(), after.trim().to_string()))
+}
+
+fn parse_suppressions(file: &str, toks: &[Tok]) -> (Vec<Suppression>, Vec<Finding>) {
+    let mut sups = Vec::new();
+    let mut findings = Vec::new();
+    for t in toks {
+        if t.kind != Kind::LineComment {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim();
+        if !body.starts_with("tvq-allow") {
+            continue;
+        }
+        match parse_allow(body) {
+            None => findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "suppression",
+                msg: format!("malformed tvq-allow comment: `{body}`"),
+            }),
+            Some((rule, _)) if !RULES.contains(&rule.as_str()) => findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "suppression",
+                msg: format!("tvq-allow names unknown rule `{rule}`"),
+            }),
+            Some((_, reason)) if reason.is_empty() => findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "suppression",
+                msg: "tvq-allow must carry a non-empty reason".to_string(),
+            }),
+            Some((rule, reason)) => {
+                let next_code_line = toks
+                    .iter()
+                    .filter(|t2| t2.line > t.line && !is_comment(t2))
+                    .map(|t2| t2.line)
+                    .min()
+                    .unwrap_or(0);
+                sups.push(Suppression {
+                    file: file.to_string(),
+                    line: t.line,
+                    next_code_line,
+                    rule,
+                    reason,
+                });
+            }
+        }
+    }
+    (sups, findings)
+}
+
+/// R1 acceptance walk: from the `unsafe` token, walk backwards through
+/// attribute tokens and same-statement tokens; the first comment run hit
+/// must contain `SAFETY:` (line comments) or `# Safety` (doc comments).
+/// Statement boundaries (`;`, `{`, `}`) end the search.
+fn preceded_by_safety(m: &Model, idx: usize) -> bool {
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = &m.toks[k];
+        if m.in_attr[k] {
+            continue;
+        }
+        if is_comment(t) {
+            // gather the contiguous comment run above (attrs transparent)
+            let mut run_has = t.text.contains("SAFETY:") || t.text.contains("# Safety");
+            while k > 0 && (is_comment(&m.toks[k - 1]) || m.in_attr[k - 1]) {
+                k -= 1;
+                if !m.in_attr[k] {
+                    let c = &m.toks[k].text;
+                    run_has = run_has || c.contains("SAFETY:") || c.contains("# Safety");
+                }
+            }
+            return run_has;
+        }
+        if t.kind == Kind::Punct && matches!(t.text.as_str(), ";" | "{" | "}") {
+            return false;
+        }
+    }
+    false
+}
+
+/// `Ident(recv) :: [<...> ::] Ident(meth)` starting at token `i`.
+fn path_call(toks: &[Tok], i: usize, recv: &str, meth: &str) -> bool {
+    if !is_id(&toks[i], recv) {
+        return false;
+    }
+    let mut j = i + 1;
+    let p = |j: usize, c: u8| j < toks.len() && is_p(&toks[j], c);
+    if !(p(j, b':') && p(j + 1, b':')) {
+        return false;
+    }
+    j += 2;
+    if p(j, b'<') {
+        let mut depth = 0usize;
+        while j < toks.len() {
+            if p(j, b'<') {
+                depth += 1;
+            } else if p(j, b'>') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if !(p(j, b':') && p(j + 1, b':')) {
+            return false;
+        }
+        j += 2;
+    }
+    j < toks.len() && is_id(&toks[j], meth)
+}
+
+/// R3 scope: is `fn_name` in `rel` a steady-state decode path?
+fn zero_alloc_scope(rel: &str, fn_name: &str) -> bool {
+    match rel {
+        "rust/src/native/simd.rs" | "rust/src/native/kernels.rs" => true,
+        "rust/src/native/model.rs" => {
+            fn_name.starts_with("forward_token")
+                || fn_name.starts_with("forward_step")
+                || fn_name == "attn_row_stage"
+        }
+        "rust/src/native/session.rs" => fn_name == "step",
+        _ => false,
+    }
+}
+
+fn on_serving_path(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/")
+        || rel.starts_with("rust/src/sample/")
+        || rel.starts_with("rust/src/tokenizer/")
+}
+
+/// Run R1–R4 plus suppression parsing on one file; suppressions are
+/// applied (matched findings removed), malformed suppressions are
+/// findings themselves and cannot be suppressed.
+pub fn audit_file(rel: &str, src: &str) -> FileAudit {
+    let m = build_model(src);
+    let nt = m.toks.len();
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        findings.push(Finding { file: rel.to_string(), line, rule, msg });
+    };
+
+    // R1 unsafe confinement
+    for i in 0..nt {
+        if is_id(&m.toks[i], "unsafe") && !m.in_test[i] {
+            if !UNSAFE_ALLOWED.contains(&rel) {
+                push(
+                    m.toks[i].line,
+                    "unsafe_confinement",
+                    "`unsafe` outside native/simd.rs and native/kernels.rs".to_string(),
+                );
+            } else if !preceded_by_safety(&m, i) {
+                push(
+                    m.toks[i].line,
+                    "unsafe_confinement",
+                    "`unsafe` site without an immediately preceding SAFETY comment".to_string(),
+                );
+            }
+        }
+    }
+
+    // R2 determinism: hot-path modules
+    if rel.starts_with("rust/src/native/") {
+        for i in 0..nt {
+            let t = &m.toks[i];
+            if t.kind != Kind::Ident || m.in_test[i] {
+                continue;
+            }
+            match t.text.as_str() {
+                "HashMap" | "HashSet" => push(
+                    t.line,
+                    "determinism",
+                    format!(
+                        "`{}` in a hot-path module (randomized hashing breaks bit \
+                         determinism; use BTreeMap/BTreeSet)",
+                        t.text
+                    ),
+                ),
+                "Instant" => push(
+                    t.line,
+                    "determinism",
+                    "`Instant` in a hot-path module (wall-clock reads are nondeterministic)"
+                        .to_string(),
+                ),
+                "spawn" if rel != "rust/src/native/kernels.rs" => push(
+                    t.line,
+                    "determinism",
+                    "thread spawn outside the kernels.rs pool".to_string(),
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    // R3 zero-alloc: scoped steady-state decode fns
+    for (name, b0, b1, kw) in &m.fns {
+        if m.in_test[*kw] || !zero_alloc_scope(rel, name) {
+            continue;
+        }
+        for i in *b0..=(*b1).min(nt.saturating_sub(1)) {
+            let t = &m.toks[i];
+            if t.kind != Kind::Ident || m.in_test[i] {
+                continue;
+            }
+            let bang = i + 1 < nt && is_p(&m.toks[i + 1], b'!');
+            let hit = match t.text.as_str() {
+                "collect" | "to_vec" => true,
+                "vec" | "format" => bang,
+                "Vec" => path_call(&m.toks, i, "Vec", "new"),
+                "Box" => path_call(&m.toks, i, "Box", "new"),
+                "String" => path_call(&m.toks, i, "String", "from"),
+                _ => false,
+            };
+            if hit {
+                let what = if bang { format!("{}!", t.text) } else { t.text.clone() };
+                push(
+                    t.line,
+                    "zero_alloc",
+                    format!("`{what}` allocates in a steady-state decode path (fn `{name}`)"),
+                );
+            }
+        }
+    }
+
+    // R4 panic surface: serving path
+    if on_serving_path(rel) {
+        for i in 0..nt {
+            let t = &m.toks[i];
+            if t.kind != Kind::Ident || m.in_test[i] {
+                continue;
+            }
+            let bang = i + 1 < nt && is_p(&m.toks[i + 1], b'!');
+            match t.text.as_str() {
+                "unwrap" | "expect" => push(
+                    t.line,
+                    "panic_surface",
+                    format!("`{}` on the serving path (degrade to an error frame instead)", t.text),
+                ),
+                "panic" | "unreachable" if bang => push(
+                    t.line,
+                    "panic_surface",
+                    format!("`{}!` on the serving path", t.text),
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    drop(push);
+    let (sups, sup_findings) = parse_suppressions(rel, &m.toks);
+    let mut kept: Vec<Finding> = findings.into_iter().filter(|f| !suppressed(f, &sups)).collect();
+    kept.extend(sup_findings);
+    FileAudit { findings: kept, suppressions: sups }
+}
+
+/// Extract `NativeOptions` field names (with lines) from `native/mod.rs`.
+fn native_options_fields(src: &str) -> Vec<(String, usize)> {
+    let toks = lex(src);
+    let nt = toks.len();
+    let mut out = Vec::new();
+    for i in 1..nt {
+        if !(is_id(&toks[i], "NativeOptions") && is_id(&toks[i - 1], "struct")) {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < nt && !is_p(&toks[j], b'{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < nt {
+            let t = &toks[j];
+            if is_p(t, b'{') {
+                depth += 1;
+            } else if is_p(t, b'}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth == 1
+                && t.kind == Kind::Ident
+                && t.text != "pub"
+                && t.text != "crate"
+                && j + 1 < nt
+                && is_p(&toks[j + 1], b':')
+                && !(j + 2 < nt && is_p(&toks[j + 2], b':'))
+            {
+                out.push((t.text.clone(), t.line));
+            }
+            j += 1;
+        }
+        break;
+    }
+    out
+}
+
+/// `TVQ_*` names inside string-literal tokens, skipping test spans.
+fn tvq_vars(src: &str) -> Vec<(String, usize)> {
+    let m = build_model(src);
+    let mut out = Vec::new();
+    for (i, t) in m.toks.iter().enumerate() {
+        if !matches!(t.kind, Kind::Str | Kind::RawStr) || m.in_test[i] {
+            continue;
+        }
+        let b = t.text.as_bytes();
+        let mut k = 0usize;
+        while k + 4 <= b.len() {
+            if &b[k..k + 4] == b"TVQ_" {
+                let mut e = k + 4;
+                while e < b.len()
+                    && (b[e].is_ascii_uppercase() || b[e].is_ascii_digit() || b[e] == b'_')
+                {
+                    e += 1;
+                }
+                if e > k + 4 {
+                    out.push((t.text[k..e].to_string(), t.line));
+                }
+                k = e;
+            } else {
+                k += 1;
+            }
+        }
+    }
+    out
+}
+
+/// R5 wiring: every `NativeOptions` field and every `TVQ_*` env var
+/// referenced in non-test code must be surfaced in `main.rs` and
+/// documented in README.md/DESIGN.md. Returns *raw* findings — the
+/// caller applies suppressions (see [`suppressed`]).
+pub fn audit_wiring(files: &[SourceFile], readme: &str, design: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let main_text = files
+        .iter()
+        .find(|f| f.rel == "rust/src/main.rs")
+        .map(|f| f.text.as_str())
+        .unwrap_or("");
+    let main_lc = main_text.to_lowercase();
+    let docs_lc = format!("{}\n{}", readme, design).to_lowercase();
+
+    if let Some(modfile) = files.iter().find(|f| f.rel == "rust/src/native/mod.rs") {
+        for (field, line) in native_options_fields(&modfile.text) {
+            let keys = [field.clone(), field.replace('_', "-"), format!("tvq_{field}")];
+            if !keys.iter().any(|k| main_lc.contains(k)) {
+                findings.push(Finding {
+                    file: modfile.rel.clone(),
+                    line,
+                    rule: "wiring",
+                    msg: format!("NativeOptions field `{field}` is not surfaced in main.rs"),
+                });
+            }
+            if !keys.iter().any(|k| docs_lc.contains(k)) {
+                findings.push(Finding {
+                    file: modfile.rel.clone(),
+                    line,
+                    rule: "wiring",
+                    msg: format!(
+                        "NativeOptions field `{field}` is not documented in README.md/DESIGN.md"
+                    ),
+                });
+            }
+        }
+    }
+
+    // first non-test string-literal occurrence of each TVQ_* var
+    let mut seen: std::collections::BTreeMap<String, (String, usize)> =
+        std::collections::BTreeMap::new();
+    for f in files {
+        for (var, line) in tvq_vars(&f.text) {
+            seen.entry(var).or_insert_with(|| (f.rel.clone(), line));
+        }
+    }
+    for (var, (rel, line)) in &seen {
+        if !main_text.contains(var.as_str()) {
+            findings.push(Finding {
+                file: rel.clone(),
+                line: *line,
+                rule: "wiring",
+                msg: format!("env var `{var}` is not mentioned in main.rs"),
+            });
+        }
+        if !readme.contains(var.as_str()) && !design.contains(var.as_str()) {
+            findings.push(Finding {
+                file: rel.clone(),
+                line: *line,
+                rule: "wiring",
+                msg: format!("env var `{var}` is not documented in README.md/DESIGN.md"),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(fa: &FileAudit) -> Vec<&str> {
+        fa.findings.iter().map(|f| f.rule).collect()
+    }
+
+    // --- R1 ---------------------------------------------------------------
+
+    #[test]
+    fn r1_fires_outside_the_kernel_allowlist() {
+        let src = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let fa = audit_file("rust/src/native/model.rs", src);
+        assert_eq!(rules_of(&fa), vec!["unsafe_confinement"], "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r1_fires_on_missing_safety_comment_in_allowed_file() {
+        let src = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let fa = audit_file("rust/src/native/simd.rs", src);
+        assert_eq!(rules_of(&fa), vec!["unsafe_confinement"], "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r1_accepts_safety_comment_and_safety_doc_section() {
+        let src = "\
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid
+    unsafe { *p }
+}
+
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid.
+#[inline]
+pub unsafe fn g(p: *const u8) -> u8 {
+    *p
+}
+";
+        let fa = audit_file("rust/src/native/simd.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r1_mid_statement_unsafe_sees_the_statement_comment() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: p valid for the whole call
+    let v = 1 + unsafe { *p };
+    v
+}
+";
+        let fa = audit_file("rust/src/native/kernels.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r1_is_silenced_by_tvq_allow() {
+        let src = "\
+pub fn f(p: *const u8) -> u8 {
+    // tvq-allow(unsafe_confinement): documented at the call site instead
+    unsafe { *p }
+}
+";
+        let fa = audit_file("rust/src/native/simd.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+        assert_eq!(fa.suppressions.len(), 1);
+    }
+
+    // --- R2 ---------------------------------------------------------------
+
+    #[test]
+    fn r2_fires_on_hashmap_instant_and_spawn_in_native() {
+        let src = "\
+use std::collections::HashMap;
+fn f() {
+    let _m: HashMap<u32, u32> = HashMap::new();
+    let _t = std::time::Instant::now();
+    std::thread::spawn(|| {});
+}
+";
+        let fa = audit_file("rust/src/native/model.rs", src);
+        // HashMap appears three times (use, type, ::new) + Instant + spawn
+        assert_eq!(rules_of(&fa), vec!["determinism"; 5], "{:?}", fa.findings);
+        // same tokens are fine outside native/*
+        let fa = audit_file("rust/src/train/mod.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r2_allows_spawn_in_the_pool_and_is_suppressible() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(audit_file("rust/src/native/kernels.rs", src).findings.is_empty());
+        let allowed = "\
+fn f() {
+    // tvq-allow(determinism): one-shot init thread, joined before serving
+    std::thread::spawn(|| {});
+}
+";
+        let fa = audit_file("rust/src/native/model.rs", allowed);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    // --- R3 ---------------------------------------------------------------
+
+    #[test]
+    fn r3_fires_per_banned_form_in_scoped_fns() {
+        let src = "\
+pub fn forward_step_x(n: usize) {
+    let a: Vec<u32> = (0..n).collect();
+    let b = a.to_vec();
+    let c = vec![0u8; n];
+    let d = format!(\"{n}\");
+    let e = Vec::<u8>::new();
+    let f = Box::new(n);
+    let g = String::from(\"x\");
+    let _ = (b, c, d, e, f, g);
+}
+";
+        let fa = audit_file("rust/src/native/model.rs", src);
+        assert_eq!(rules_of(&fa), vec!["zero_alloc"; 7], "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r3_scoping_ignores_out_of_scope_fns_and_tests() {
+        let src = "\
+pub fn load_weights(n: usize) -> Vec<u32> {
+    (0..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _v: Vec<u32> = (0..4).collect();
+    }
+}
+";
+        // model.rs: only forward_*/attn_row_stage are in scope
+        assert!(audit_file("rust/src/native/model.rs", src).findings.is_empty());
+        // session.rs: only fn `step` is in scope
+        assert!(audit_file("rust/src/native/session.rs", src).findings.is_empty());
+        // simd.rs: every non-test fn is in scope -> fires once
+        let fa = audit_file("rust/src/native/simd.rs", src);
+        assert_eq!(rules_of(&fa), vec!["zero_alloc"], "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r3_is_silenced_by_tvq_allow_above_or_on_the_line() {
+        let src = "\
+pub fn step(n: usize) {
+    // tvq-allow(zero_alloc): install-time path, not per-token
+    let _v: Vec<u32> = (0..n).collect();
+    let _w = vec![0u8; n]; // tvq-allow(zero_alloc): cold resize branch
+}
+";
+        let fa = audit_file("rust/src/native/session.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+        assert_eq!(fa.suppressions.len(), 2);
+    }
+
+    // --- R4 ---------------------------------------------------------------
+
+    #[test]
+    fn r4_fires_on_the_serving_path_only() {
+        let src = "\
+fn f(o: Option<u32>) -> u32 {
+    let a = o.unwrap();
+    let b = o.expect(\"present\");
+    if a == 0 {
+        panic!(\"zero\");
+    }
+    match b {
+        0 => unreachable!(),
+        x => x,
+    }
+}
+";
+        for rel in [
+            "rust/src/coordinator/server.rs",
+            "rust/src/sample/mod.rs",
+            "rust/src/tokenizer/bpe.rs",
+        ] {
+            let fa = audit_file(rel, src);
+            assert_eq!(rules_of(&fa), vec!["panic_surface"; 4], "{rel}: {:?}", fa.findings);
+        }
+        assert!(audit_file("rust/src/native/mod.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn r4_skips_test_code_and_honors_tvq_allow() {
+        let src = "\
+fn f(o: Option<u32>) -> u32 {
+    // tvq-allow(panic_surface): invariant established two lines up
+    o.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1u32).unwrap();
+    }
+}
+";
+        let fa = audit_file("rust/src/coordinator/engine.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap_or_else(|| 0) }\n";
+        let fa = audit_file("rust/src/coordinator/server.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    // --- suppression syntax ------------------------------------------------
+
+    #[test]
+    fn suppression_without_reason_or_with_unknown_rule_is_a_finding() {
+        let src = "\
+fn f() {
+    // tvq-allow(zero_alloc):
+    // tvq-allow(zero_aloc): typo in the rule name
+    // tvq-allow zero_alloc: missing parens
+}
+";
+        let fa = audit_file("rust/src/native/model.rs", src);
+        assert_eq!(rules_of(&fa), vec!["suppression"; 3], "{:?}", fa.findings);
+        assert!(fa.suppressions.is_empty());
+    }
+
+    #[test]
+    fn suppression_in_comments_or_strings_never_silences() {
+        // a tvq-allow *inside a string literal* is not a suppression
+        let src = "\
+fn step() {
+    let _s = \"// tvq-allow(zero_alloc): not a comment\";
+    let _v: Vec<u32> = (0..4).collect();
+}
+";
+        let fa = audit_file("rust/src/native/session.rs", src);
+        assert_eq!(rules_of(&fa), vec!["zero_alloc"], "{:?}", fa.findings);
+    }
+
+    // --- R5 ---------------------------------------------------------------
+
+    const MODF: &str = "\
+pub struct NativeOptions {
+    pub num_threads: usize,
+    pub fancy_knob: bool,
+}
+";
+
+    fn wiring_files(extra: &str) -> Vec<SourceFile> {
+        vec![
+            SourceFile { rel: "rust/src/native/mod.rs".into(), text: MODF.to_string() },
+            SourceFile { rel: "rust/src/main.rs".into(), text: extra.to_string() },
+        ]
+    }
+
+    #[test]
+    fn r5_fires_on_unwired_fields_and_env_vars() {
+        let files = vec![
+            SourceFile { rel: "rust/src/native/mod.rs".into(), text: MODF.to_string() },
+            SourceFile {
+                rel: "rust/src/lib.rs".into(),
+                text: "fn f() { let _ = std::env::var(\"TVQ_MYSTERY\"); }\n".to_string(),
+            },
+            SourceFile { rel: "rust/src/main.rs".into(), text: "// num-threads\n".to_string() },
+        ];
+        let findings = audit_wiring(&files, "docs mention num_threads only", "");
+        let msgs: Vec<&str> = findings.iter().map(|f| f.msg.as_str()).collect();
+        assert_eq!(findings.len(), 4, "{msgs:?}");
+        assert!(msgs.iter().filter(|m| m.contains("fancy_knob")).count() == 2, "{msgs:?}");
+        assert!(msgs.iter().filter(|m| m.contains("TVQ_MYSTERY")).count() == 2, "{msgs:?}");
+    }
+
+    #[test]
+    fn r5_passes_when_wired_via_kebab_flag_and_env_name() {
+        let files = wiring_files("// --num-threads and --fancy-knob flags\n");
+        let findings =
+            audit_wiring(&files, "README: TVQ_NUM_THREADS and the fancy-knob toggle", "");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn r5_skips_env_vars_in_test_code_and_honors_suppressions() {
+        let testonly = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::env::set_var(\"TVQ_FIXTURE_ONLY\", \"1\");
+    }
+}
+";
+        let mut files = wiring_files("// --num-threads --fancy-knob\n");
+        files.push(SourceFile { rel: "rust/src/json.rs".into(), text: testonly.to_string() });
+        let findings = audit_wiring(&files, "num_threads fancy_knob", "");
+        assert!(findings.is_empty(), "{findings:?}");
+
+        // suppression applied by the caller, as run_audit does
+        let sup_src = "\
+pub struct NativeOptions {
+    // tvq-allow(wiring): internal tuning field, deliberately not a flag
+    pub hidden: usize,
+}
+";
+        let files = vec![
+            SourceFile { rel: "rust/src/native/mod.rs".into(), text: sup_src.to_string() },
+            SourceFile { rel: "rust/src/main.rs".into(), text: String::new() },
+        ];
+        let fa = audit_file("rust/src/native/mod.rs", sup_src);
+        let findings: Vec<Finding> = audit_wiring(&files, "", "")
+            .into_iter()
+            .filter(|f| !suppressed(f, &fa.suppressions))
+            .collect();
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -411,7 +411,9 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                 _ => None,
             };
             if let Some(r) = reason {
-                slot.take().expect("checked Some").finish(r, &mut stats);
+                if let Some(s) = slot.take() {
+                    s.finish(r, &mut stats);
+                }
             }
         }
 
@@ -480,7 +482,9 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
 
         for (lane, logits) in lanes.iter().zip(&lane_logits) {
             let slot = &mut slots[lane.slot];
-            let s = slot.as_mut().expect("lane built from occupied slot");
+            // lanes are built from occupied slots, but a panic here would
+            // take the whole engine thread down with every other request
+            let Some(s) = slot.as_mut() else { continue };
             if !s.decoding {
                 s.prompt_pos += lane.tokens.len();
                 stats.prefill_tokens += lane.tokens.len() as u64;
@@ -510,7 +514,9 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                     .any(|q| !q.is_empty() && s.generated.ends_with(q));
             if s.generated.len() >= s.req.max_tokens || hit_stop {
                 let reason = if hit_stop { FinishReason::Stop } else { FinishReason::Length };
-                slot.take().expect("just borrowed").finish(reason, &mut stats);
+                if let Some(done) = slot.take() {
+                    done.finish(reason, &mut stats);
+                }
             }
         }
     }

@@ -25,6 +25,17 @@ use crate::tokenizer::{ByteTokenizer, Tokenizer, Utf8Stream};
 use super::engine::{CancelToken, EngineHandle, GenEvent, GenRequest, RequestHandle};
 use super::protocol::{ClientFrame, EventFrame, GenerateFrame, WireRequest, WireResponse};
 
+/// Lock the per-connection live-request map, recovering from poisoning: a
+/// panicked forwarder thread must degrade to dropped frames on one
+/// connection, not cascade panics through every thread that touches the
+/// map (the panic-surface contract of DESIGN.md §9). The map's invariant
+/// is trivial (id -> cancel token), so a poisoned guard is still valid.
+fn lock_live(
+    live: &Mutex<HashMap<String, CancelToken>>,
+) -> std::sync::MutexGuard<'_, HashMap<String, CancelToken>> {
+    live.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 fn encode_bytes(s: &str) -> Vec<i32> {
     ByteTokenizer
         .encode(s.as_bytes())
@@ -179,7 +190,7 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
                 }
                 Ok(ClientFrame::Generate(g)) => spawn_generate(g, &handle, &live, &out_tx),
                 Ok(ClientFrame::Cancel { id }) => {
-                    let token = live.lock().unwrap().get(&id).cloned();
+                    let token = lock_live(&live).get(&id).cloned();
                     match token {
                         Some(t) => t.cancel(),
                         None => {
@@ -209,7 +220,7 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
     })();
 
     // client went away (EOF or read error): free its slots
-    for (_, t) in live.lock().unwrap().drain() {
+    for (_, t) in lock_live(&live).drain() {
         t.cancel();
     }
     drop(out_tx);
@@ -224,7 +235,7 @@ fn spawn_generate(
     out_tx: &mpsc::Sender<String>,
 ) {
     let id = g.id.clone();
-    if live.lock().unwrap().contains_key(&id) {
+    if lock_live(live).contains_key(&id) {
         let frame = EventFrame::Error {
             id: Some(id),
             error: "duplicate id: a request with this id is still running".to_string(),
@@ -239,12 +250,12 @@ fn spawn_generate(
             return;
         }
     };
-    live.lock().unwrap().insert(id.clone(), rh.cancel_token());
+    lock_live(live).insert(id.clone(), rh.cancel_token());
     let out_tx = out_tx.clone();
     let live = Arc::clone(live);
     std::thread::spawn(move || {
         forward_events(rh, &id, &out_tx);
-        live.lock().unwrap().remove(&id);
+        lock_live(&live).remove(&id);
     });
 }
 

@@ -22,6 +22,7 @@
 //! Backend selection is automatic ([`runtime::auto_backend`]): PJRT when
 //! compiled artifacts exist and the feature is on, native otherwise.
 
+pub mod audit;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -5,6 +5,7 @@
 //!   generate   sample from a trained checkpoint via linear-time decoding
 //!   serve      continuous-batching inference server (JSON-lines TCP)
 //!   inspect    list artifacts offered by the active backend
+//!   audit      static contract audit of the source tree (DESIGN.md §9)
 //!
 //! Benchmarks reproducing the paper's tables live in examples/ and
 //! rust/benches/ (see DESIGN.md §4 for the exhibit -> target map).
@@ -36,7 +37,12 @@ COMMANDS
             (streaming NDJSON protocol v2 + v1 one-shot; type 'quit' on
             stdin for graceful shutdown with drained requests and stats)
   inspect
+  audit     [--root DIR]  static contract audit: unsafe confinement,
+            determinism, zero-alloc decode, panic surface, CLI/doc wiring
+            (DESIGN.md §9; suppress with '// tvq-allow(rule): reason')
 
+--artifacts DIR (or TVQ_ARTIFACTS) points at the compiled artifact store
+(default ./artifacts).
 --threads N pins the native backend's per-step thread budget (default:
 all cores; also settable via TVQ_NUM_THREADS). Results are bit-identical
 at any thread count. --simd auto|off picks the f32 kernel ISA (default
@@ -147,6 +153,14 @@ fn main() -> Result<()> {
     }
 
     match cmd.as_str() {
+        "audit" => {
+            let root = std::path::PathBuf::from(args.str("root", "."));
+            let report = transformer_vq::audit::run_audit(&root)?;
+            print!("{}", report.render());
+            if !report.findings.is_empty() {
+                bail!("audit failed with {} finding(s)", report.findings.len());
+            }
+        }
         "inspect" => {
             let backend = auto_backend(&dir)?;
             println!("backend: {}", backend.platform());

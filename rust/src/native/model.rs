@@ -897,6 +897,8 @@ pub(crate) fn forward_step_per_lane(
         .into_iter()
         .zip(logits.chunks_mut(v).zip(scratch.iter_mut()))
         .map(|(rst, (out, sc))| (rst, out, sc))
+        // tvq-allow(zero_alloc): per-lane fallback driver rebuilds O(B)
+        // row views per step; the contract covers the batched default
         .collect();
     kernels::parallel_for_items(nt, &mut work, |row, (rst, out, sc)| {
         forward_token_row(cfg, p, cb, quant, rst, tokens[row], None, sc, simd);

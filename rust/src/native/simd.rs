@@ -138,6 +138,8 @@ impl SimdMode {
     /// ISA variant is covered everywhere by updating [`SimdMode::detect`]
     /// alone.
     pub fn available() -> Vec<SimdMode> {
+        // tvq-allow(zero_alloc): test-harness enumeration helper, never on
+        // the decode path
         let mut modes = vec![SimdMode::Scalar];
         if SimdMode::detect() != SimdMode::Scalar {
             modes.push(SimdMode::detect());
@@ -263,6 +265,8 @@ impl SimdMode {
             return;
         }
         let band = m.div_ceil(nt);
+        // tvq-allow(zero_alloc): O(nt) band bookkeeping, reached only when
+        // nt > 1 — outside the zero-alloc steady-state contract (§7)
         let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
         kernels::parallel_for_items(nt, &mut items, |_, (ci, cband)| {
             let i0 = *ci * band;
@@ -405,6 +409,8 @@ impl SimdMode {
             return;
         }
         let band = m.div_ceil(nt);
+        // tvq-allow(zero_alloc): O(nt) band bookkeeping, reached only when
+        // nt > 1 — outside the zero-alloc steady-state contract (§7)
         let mut items: Vec<(usize, &mut [f32])> = c.chunks_mut(band * n).enumerate().collect();
         kernels::parallel_for_items(nt, &mut items, |_, (ci, cband)| {
             let i0 = *ci * band;
@@ -448,43 +454,63 @@ mod accel {
 
     #[inline]
     pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-        // SAFETY: reachable only through SimdMode::Avx2Fma (feature-checked).
+        // SAFETY: reachable only through SimdMode::Avx2Fma, which
+        // `SimdMode::detect` constructs only after
+        // `is_x86_feature_detected!` confirmed AVX2+FMA. The body's
+        // unchecked 8-lane loads stay in bounds because `SimdMode::dot`
+        // hard-asserted `a.len() == b.len()` before dispatching here.
         unsafe { avx2::dot(a, b) }
     }
 
     #[inline]
     pub fn matvec_add(w: &[f32], x: &[f32], out: &mut [f32]) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::matvec_add` hard-asserted
+        // `w.len() == x.len() * out.len()`, which bounds every row the
+        // body's unchecked loads touch.
         unsafe { avx2::matvec_add(w, x, out) }
     }
 
     #[inline]
     pub fn gemm_add(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::gemm_add` hard-asserted `a.len() == m * k`,
+        // `b.len() == k * n`, `c.len() == m * n` — the bounds the tiled
+        // body's unchecked loads rely on.
         unsafe { avx2::gemm_add(m, k, n, a, b, c) }
     }
 
     #[inline]
     pub fn nearest_code(x: &[f32], codebook: &[f32], s: usize, dk: usize) -> usize {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::nearest_code` hard-asserted `x.len() >= dk` and
+        // `codebook.len() == s * dk`, bounding every row scan.
         unsafe { avx2::nearest_code(x, codebook, s, dk) }
     }
 
     #[inline]
     pub fn matvec_add_bf16(w: &[u16], x: &[f32], out: &mut [f32]) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::matvec_add_q` hard-asserted
+        // `w.len() == x.len() * out.len()` for the bf16 weight plane; the
+        // u16 lanes are widened in-register (no extra memory reads).
         unsafe { avx2::matvec_add_bf16(w, x, out) }
     }
 
     #[inline]
     pub fn gemm_add_bf16(m: usize, k: usize, n: usize, a: &[f32], b: &[u16], c: &mut [f32]) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::gemm_add_q` hard-asserted `a.len() == m * k`,
+        // `b.len() == k * n`, `c.len() == m * n` on the bf16 arm.
         unsafe { avx2::gemm_add_bf16(m, k, n, a, b, c) }
     }
 
     #[inline]
     pub fn matvec_add_i8(w: &[i8], scale: &[f32], x: &[f32], out: &mut [f32]) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::matvec_add_q` hard-asserted
+        // `w.len() == x.len() * out.len()` and `scale.len() == x.len()`
+        // on the int8 arm, bounding both the code and the scale reads.
         unsafe { avx2::matvec_add_i8(w, scale, x, out) }
     }
 
@@ -499,13 +525,18 @@ mod accel {
         scale: &[f32],
         c: &mut [f32],
     ) {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::gemm_add_q` hard-asserted `a.len() == m * k`,
+        // `b.len() == k * n`, `scale.len() == k`, `c.len() == m * n` on
+        // the int8 arm.
         unsafe { avx2::gemm_add_i8(m, k, n, a, b, scale, c) }
     }
 
     #[inline]
     pub fn nearest_code_i8(x: &[f32], codebook: &[i8], scale: &[f32], s: usize, dk: usize) -> usize {
-        // SAFETY: as above.
+        // SAFETY: AVX2+FMA confirmed by `SimdMode::detect` (see `dot`);
+        // `SimdMode::nearest_code_i8` hard-asserted `x.len() >= dk`,
+        // `codebook.len() == s * dk`, `scale.len() == s`.
         unsafe { avx2::nearest_code_i8(x, codebook, scale, s, dk) }
     }
 }
@@ -581,6 +612,9 @@ mod avx2 {
 
     /// Horizontal sum of one 8-lane register, fixed reduction tree:
     /// (lo128 + hi128), then pairwise within 128 bits.
+    ///
+    /// # Safety
+    /// Requires AVX2 (register-only shuffles/adds; no memory access).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     unsafe fn hsum(v: __m256) -> f32 {

@@ -199,7 +199,10 @@ impl Sampler {
             .set_group("tokens", vec![HostTensor::from_i32(&[b, c], &toks)]);
         self.bundle
             .set_group("lens", vec![HostTensor::from_i32(&[b], &lens)]);
-        let exe = self.prefill_exe.as_ref().expect("native session path");
+        let exe = self
+            .prefill_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("step_lanes_native without a prefill artifact"))?;
         let inputs = self.bundle.assemble(exe.spec())?;
         let outputs = exe.run(&inputs)?;
         self.bundle.absorb(exe.spec(), outputs)?;
@@ -251,7 +254,7 @@ impl Sampler {
             logits = self
                 .step_lanes(&[LaneInput { slot, tokens: chunk.to_vec() }])?
                 .pop()
-                .expect("one lane in, one logits row out");
+                .ok_or_else(|| anyhow::anyhow!("step_lanes: one lane in, no logits row out"))?;
         }
         Ok(logits)
     }

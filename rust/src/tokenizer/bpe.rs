@@ -113,8 +113,9 @@ impl Tokenizer for Bpe {
             let mut best: Option<(usize, usize)> = None; // (rank, position)
             for (pos, w) in tokens.windows(2).enumerate() {
                 if let Some(&rank) = self.ranks.get(&(w[0], w[1])) {
-                    if best.is_none() || rank < best.unwrap().0 {
-                        best = Some((rank, pos));
+                    match best {
+                        Some((r, _)) if r <= rank => {}
+                        _ => best = Some((rank, pos)),
                     }
                 }
             }

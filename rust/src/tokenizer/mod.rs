@@ -66,7 +66,9 @@ impl Utf8Stream {
                 }
                 Err(e) => {
                     let valid = e.valid_up_to();
-                    out.push_str(std::str::from_utf8(&self.pending[..valid]).expect("valid prefix"));
+                    // `valid_up_to` bounds a well-formed prefix, so the
+                    // lossy pass is exact here — and it cannot panic
+                    out.push_str(&String::from_utf8_lossy(&self.pending[..valid]));
                     match e.error_len() {
                         // invalid sequence of known length: replace and continue
                         Some(bad) => {

@@ -1,0 +1,65 @@
+//! Tier-1 gate: `tvq audit` must exit clean on this repository.
+//!
+//! This is the static twin of the dynamic contract suites (determinism,
+//! zero-alloc, SIMD oracles): every `unsafe` site is confined and
+//! documented, hot paths stay deterministic and allocation-free, the
+//! serving path cannot panic, and every knob is wired through the CLI and
+//! docs. A red run here prints the exact `file:line: [rule] message`
+//! findings — fix the site or add a `// tvq-allow(rule): reason` with a
+//! real justification (empty reasons are themselves findings).
+
+use std::path::Path;
+
+use transformer_vq::audit::{run_audit, RULES};
+
+fn repo_root() -> &'static Path {
+    // CARGO_MANIFEST_DIR = <repo>/rust, the audit walks from <repo>
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ sits inside the repo root")
+}
+
+#[test]
+fn audit_exits_clean_on_the_whole_tree() {
+    let report = run_audit(repo_root()).expect("audit walks rust/src + examples");
+    assert!(
+        report.files_scanned >= 40,
+        "walker found only {} files — did the layout move?",
+        report.files_scanned
+    );
+    assert!(report.findings.is_empty(), "static audit failed:\n{}", report.render());
+}
+
+#[test]
+fn every_in_tree_suppression_names_a_rule_and_a_reason() {
+    let report = run_audit(repo_root()).expect("audit walks rust/src + examples");
+    // the audit rejects reasonless/unknown tvq-allow comments as findings;
+    // this pins the redundant direction so the Suppression records
+    // themselves stay trustworthy for tooling built on top of them
+    assert!(!report.suppressions.is_empty(), "expected the tree's documented tvq-allow sites");
+    for s in &report.suppressions {
+        assert!(
+            RULES.contains(&s.rule.as_str()),
+            "{}:{} suppresses unknown rule `{}`",
+            s.file,
+            s.line,
+            s.rule
+        );
+        assert!(
+            !s.reason.trim().is_empty(),
+            "{}:{} has a tvq-allow with an empty reason",
+            s.file,
+            s.line
+        );
+    }
+}
+
+#[test]
+fn audit_actually_walked_the_hot_paths() {
+    // guard against the walker silently skipping the very modules the
+    // rules exist for (e.g. after a future src/ re-layout)
+    let report = run_audit(repo_root()).expect("audit walks rust/src + examples");
+    let zero_alloc_sites = report.suppressions.iter().filter(|s| s.rule == "zero_alloc").count();
+    assert!(
+        zero_alloc_sites >= 4,
+        "expected the documented install-time/pool allocation sites, found {zero_alloc_sites}"
+    );
+}
