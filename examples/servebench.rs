@@ -8,16 +8,21 @@
 //! Phase 1 measures that directly on the sampler: a P-token prompt costs
 //! P full-batch decode steps on the old path (B lanes computed, B×V
 //! logits discarded per token) vs ceil(P/C) single-lane prefill calls with
-//! one readout. Phase 2 drives the whole stack — engine + TCP + NDJSON v2
-//! frames — with N concurrent streaming clients and reports TTFT and
-//! aggregate decode tok/s, asserting on the way that streamed deltas
-//! concatenate to each request's final text.
+//! one readout. Phase 2 times lane snapshot/restore (session state as a
+//! value, DESIGN.md §10) and records the wire size. Phase 3 times a
+//! prompt-prefix-cache hit against a cold prefill and pins bit-identity
+//! by continuing one decode step both ways. Phase 4 drives the whole
+//! stack — engine + TCP + NDJSON v2 frames — with N concurrent streaming
+//! clients and reports TTFT and aggregate decode tok/s, asserting on the
+//! way that streamed deltas concatenate to each request's final text.
 //!
-//! Phase 2 runs twice — once with the default batched-lane decode (all
-//! occupied slots advance through each layer together, one GEMM per
-//! projection) and once with the per-lane fallback — so the artifact
-//! records how serving throughput under concurrent streams responds to
-//! lane batching; the SIMD mode in effect is recorded alongside.
+//! Phase 4 runs three times — default batched-lane decode (all occupied
+//! slots advance through each layer together, one GEMM per projection),
+//! the per-lane fallback, and batched again with the prefix cache on — so
+//! the artifact records how serving throughput responds to lane batching
+//! and how TTFT responds to prefix caching (with a cross-run assert that
+//! the cache never changes a sampled token); the SIMD mode in effect is
+//! recorded alongside.
 //!
 //! Emits `BENCH_native_serve.json` (path overridable) so CI tracks the
 //! serving trajectory next to the decode/train artifacts. See DESIGN.md §8
@@ -34,7 +39,7 @@ use transformer_vq::coordinator::{
     serve_on, Client, Engine, EngineStats, EventFrame, GenerateFrame,
 };
 use transformer_vq::json::Json;
-use transformer_vq::native::{kernels, NativeBackend, NativeOptions};
+use transformer_vq::native::{kernels, preset_config, LaneSnapshot, NativeBackend, NativeOptions};
 use transformer_vq::sample::Sampler;
 
 /// Aggregate results of one streaming run.
@@ -44,6 +49,10 @@ struct StreamingRun {
     decode_tps: f64,
     wall: f64,
     stats: EngineStats,
+    /// Per-client generated tokens, client order — lets the caller assert
+    /// that a configuration change (e.g. the prefix cache) did not change
+    /// a single sampled token.
+    outputs: Vec<Vec<i32>>,
 }
 
 /// Spawn an engine (with the given native options) + TCP server, run
@@ -56,10 +65,17 @@ fn streaming_phase(
     n_clients: usize,
     max_tokens: usize,
     options: NativeOptions,
+    prefix_cache: usize,
 ) -> Result<StreamingRun> {
     let preset_c = preset.to_string();
     let (handle, join) = Engine::spawn(
-        move || Sampler::new(&NativeBackend::new().with_options(options), &preset_c),
+        move || {
+            let mut s = Sampler::new(&NativeBackend::new().with_options(options), &preset_c)?;
+            if prefix_cache > 0 {
+                s.enable_prefix_cache(prefix_cache);
+            }
+            Ok(s)
+        },
         0,
     )?;
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -77,7 +93,7 @@ fn streaming_phase(
         let prompt_str = prompt_str.to_string();
         let tx = tx.clone();
         std::thread::spawn(move || {
-            let run = || -> Result<(f64, f64, usize)> {
+            let run = || -> Result<(f64, f64, Vec<i32>)> {
                 let mut client = Client::connect(&addr)?;
                 let mut frame = GenerateFrame::new(format!("bench-{i}"), prompt_str, max_tokens);
                 frame.seed = Some(7 + i as u64);
@@ -109,26 +125,28 @@ fn streaming_phase(
                             let decode_secs = first_delta
                                 .map(|t| t.elapsed().as_secs_f64())
                                 .unwrap_or(0.0);
-                            return Ok((ttft.unwrap_or(0.0), decode_secs, tokens.len()));
+                            return Ok((ttft.unwrap_or(0.0), decode_secs, tokens));
                         }
                         EventFrame::Error { error, .. } => anyhow::bail!("{error}"),
                         EventFrame::Started { .. } | EventFrame::Stats(_) => {}
                     }
                 }
             };
-            tx.send(run()).unwrap();
+            tx.send((i, run())).unwrap();
         });
     }
     drop(tx);
 
     let mut ttfts = Vec::new();
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); n_clients];
     let mut decode_tokens = 0usize;
     let mut decode_secs_max = 0.0f64;
-    while let Ok(r) = rx.recv() {
+    while let Ok((i, r)) = rx.recv() {
         let (ttft_ms, decode_secs, toks) = r?;
         ttfts.push(ttft_ms);
-        decode_tokens += toks;
+        decode_tokens += toks.len();
         decode_secs_max = decode_secs_max.max(decode_secs);
+        outputs[i] = toks;
     }
     let wall = t0.elapsed().as_secs_f64();
     let decode_tps = if decode_secs_max > 0.0 {
@@ -143,7 +161,7 @@ fn streaming_phase(
     let _ = sd_tx.send(());
     server.join().expect("server thread")?;
     let stats = join.join().expect("engine thread");
-    Ok(StreamingRun { ttft_ms_mean, ttft_ms_max, decode_tps, wall, stats })
+    Ok(StreamingRun { ttft_ms_mean, ttft_ms_max, decode_tps, wall, stats, outputs })
 }
 
 /// Best-of-`reps` wall seconds for `f` (min is robust to scheduler noise).
@@ -207,14 +225,74 @@ fn main() -> Result<()> {
     println!("  chunked prefill (session path):   {prefill_tps:>10.0} tok/s");
     println!("  speedup: {speedup:.2}x");
 
-    // --- phase 2: streaming serving under N concurrent clients, batched
-    // lanes (the default) vs the per-lane fallback ---------------------------
+    // --- phase 2: snapshot/restore — session state as a value --------------
+    // The per-lane state is O(model), so shipping a lane out of a live
+    // session (and back) should cost microseconds. Measured on a lane
+    // holding the full prompt, i.e. the worst realistic state.
+    let cfg = preset_config(&preset)?;
+    sampler.reset_all();
+    sampler.prefill(0, &prompt)?;
+    let mut wire: Vec<u8> = Vec::new();
+    let snapshot_secs = best_secs(5, || {
+        wire = sampler.snapshot_slot(0)?.encode(&cfg)?;
+        Ok(())
+    })?;
+    let restore_secs = best_secs(5, || {
+        let snap = LaneSnapshot::decode(&cfg, &wire)?;
+        sampler.restore_slot(0, &snap)
+    })?;
+    println!("snapshot/restore (one lane, {} bytes on the wire):", wire.len());
+    println!("  snapshot+encode: {:>8.1} us", snapshot_secs * 1e6);
+    println!("  decode+restore:  {:>8.1} us", restore_secs * 1e6);
+
+    // --- phase 3: prefix-cache hit vs cold prefill on the sampler ----------
+    // A hit replaces ceil(P/C) prefill dispatches with one lane restore;
+    // the restored state plus stored logits must be bit-identical to a
+    // cold prefill, pinned here by continuing one decode step both ways.
+    sampler.enable_prefix_cache(4);
+    sampler.reset_all();
+    let cold_logits = sampler.prefill(0, &prompt)?;
+    sampler.prefix_insert(&prompt, 0, &cold_logits)?;
+    let cont = vec![32i32; batch];
+    let cold_next = sampler.step(&cont)?.swap_remove(0);
+    let mut hit_logits = Vec::new();
+    let hit_secs = best_secs(5, || {
+        sampler.reset_all();
+        let (matched, logits) = sampler
+            .prefix_lookup(0, &prompt)?
+            .ok_or_else(|| anyhow::anyhow!("expected a prefix-cache hit"))?;
+        anyhow::ensure!(matched == prompt.len(), "partial hit on an exact prompt");
+        hit_logits = logits.ok_or_else(|| anyhow::anyhow!("exact hit must carry logits"))?;
+        Ok(())
+    })?;
+    let hit_next = sampler.step(&cont)?.swap_remove(0);
+    assert_eq!(
+        (cold_logits, cold_next),
+        (hit_logits, hit_next),
+        "prefix-cache hit must be bit-identical to a cold prefill"
+    );
+    let hit_speedup = prefill_secs / hit_secs.max(1e-9);
+    println!("prompt ingestion via prefix-cache hit:");
+    println!("  lookup+restore: {:>8.1} us ({hit_speedup:.0}x over cold prefill)", hit_secs * 1e6);
+
+    // --- phase 4: streaming serving under N concurrent clients, batched
+    // lanes (the default) vs the per-lane fallback vs prefix-cache on -------
     let max_tokens = 96usize;
     let prompt_str: String = prompt.iter().map(|&t| (t as u8) as char).collect();
     let defaults = NativeOptions::default();
-    let batched = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, defaults)?;
+    let batched = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, defaults, 0)?;
     let per_lane_opts = NativeOptions { batched_decode: false, ..defaults };
-    let per_lane = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, per_lane_opts)?;
+    let per_lane =
+        streaming_phase(&preset, &prompt_str, n_clients, max_tokens, per_lane_opts, 0)?;
+    let cached = streaming_phase(&preset, &prompt_str, n_clients, max_tokens, defaults, 8)?;
+    // same seeds, same prompts: the cache may change *when* logits appear,
+    // never *which* tokens are sampled
+    assert_eq!(
+        cached.outputs, batched.outputs,
+        "prefix cache changed sampled tokens under identical seeds"
+    );
+    let prefix_hit_rate = cached.stats.prefix_hit_tokens as f64
+        / (cached.stats.prefill_tokens + cached.stats.prefix_hit_tokens).max(1) as f64;
     let batched_serve_speedup = if per_lane.decode_tps > 0.0 {
         batched.decode_tps / per_lane.decode_tps
     } else {
@@ -231,6 +309,16 @@ fn main() -> Result<()> {
         per_lane.ttft_ms_mean, per_lane.ttft_ms_max, per_lane.decode_tps
     );
     println!("  batched-vs-per-lane serve speedup: {batched_serve_speedup:.2}x");
+    println!(
+        "  prefix cache:   TTFT mean {:.1} ms ({:+.1} ms vs off); {} hits, {} of {} prompt \
+         tokens served from cache ({:.0}%)",
+        cached.ttft_ms_mean,
+        cached.ttft_ms_mean - batched.ttft_ms_mean,
+        cached.stats.prefix_hits,
+        cached.stats.prefix_hit_tokens,
+        cached.stats.prefill_tokens + cached.stats.prefix_hit_tokens,
+        prefix_hit_rate * 100.0
+    );
     println!(
         "  engine (batched run): {} prefill + {} decode tokens over {} steps in {:.2}s",
         batched.stats.prefill_tokens,
@@ -258,6 +346,16 @@ fn main() -> Result<()> {
         ("ttft_ms_mean_per_lane", Json::num(per_lane.ttft_ms_mean)),
         ("decode_tok_s_per_lane", Json::num(per_lane.decode_tps)),
         ("batched_serve_speedup", Json::num(batched_serve_speedup)),
+        ("snapshot_bytes", Json::num(wire.len() as f64)),
+        ("snapshot_encode_us", Json::num(snapshot_secs * 1e6)),
+        ("snapshot_restore_us", Json::num(restore_secs * 1e6)),
+        ("prefix_hit_us", Json::num(hit_secs * 1e6)),
+        ("prefix_hit_speedup", Json::num(hit_speedup)),
+        ("ttft_ms_mean_cached", Json::num(cached.ttft_ms_mean)),
+        ("decode_tok_s_cached", Json::num(cached.decode_tps)),
+        ("prefix_hits", Json::num(cached.stats.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::num(cached.stats.prefix_hit_tokens as f64)),
+        ("prefix_hit_rate", Json::num(prefix_hit_rate)),
         ("engine_prefill_tokens", Json::num(batched.stats.prefill_tokens as f64)),
         ("engine_decode_tokens", Json::num(batched.stats.decode_tokens as f64)),
         ("engine_steps", Json::num(batched.stats.steps as f64)),

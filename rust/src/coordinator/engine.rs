@@ -185,6 +185,10 @@ pub struct EngineStats {
     pub prefill_tokens: u64,
     /// Tokens sampled and streamed.
     pub decode_tokens: u64,
+    /// Admissions served (fully or partly) from the prompt-prefix cache.
+    pub prefix_hits: u64,
+    /// Prompt tokens restored from cached snapshots instead of prefilled.
+    pub prefix_hit_tokens: u64,
     pub steps: u64,
     /// Sum over steps of active slots (batch-utilization numerator).
     pub active_slot_steps: u64,
@@ -240,6 +244,9 @@ struct Slot {
     /// Last sampled token (decode phase): fed at the next step.
     current: i32,
     decoding: bool,
+    /// Logits restored from an exact prefix-cache hit: consumed (one
+    /// sample) before the slot joins its first lane, instead of prefill.
+    pending_logits: Option<Vec<f32>>,
     ttft_ms: Option<f64>,
     rng: Rng,
 }
@@ -427,6 +434,21 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
             }
         }
 
+        // --- exact-cache-hit fast path: an admitted slot whose whole
+        //     prompt was served from the prefix cache samples its first
+        //     token from the stored logits *before* any lane is built —
+        //     zero prefill steps, and `current` is valid by lane time
+        for slot in slots.iter_mut() {
+            let Some(s) = slot.as_mut() else { continue };
+            let Some(l) = s.pending_logits.take() else { continue };
+            s.decoding = true;
+            if let Some(reason) = sample_token(s, &l, &mut stats) {
+                if let Some(done) = slot.take() {
+                    done.finish(reason, &mut stats);
+                }
+            }
+        }
+
         let n_active = slots.iter().filter(|s| s.is_some()).count();
         if n_active == 0 {
             if !queue.is_empty() {
@@ -491,34 +513,54 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                 if s.prompt_pos < s.req.prompt.len() {
                     continue; // more prompt chunks to ingest
                 }
-                // prompt complete: this step's logits seed the first sample
+                // prompt complete: cache the prefilled state (a later
+                // request with this prompt as a prefix restores it instead
+                // of re-prefilling), then this step's logits seed the
+                // first sample. Cache insertion is best-effort — a failure
+                // must not kill the request.
                 s.decoding = true;
-                let ttft = s.enqueued.elapsed().as_secs_f64() * 1e3;
-                s.ttft_ms = Some(ttft);
-                stats.ttft_ms_sum += ttft;
-                stats.ttft_ms_count += 1;
-                if ttft > stats.ttft_ms_max {
-                    stats.ttft_ms_max = ttft;
-                }
+                let _ = sampler.prefix_insert(&s.req.prompt, lane.slot, logits);
             }
-            let tok = nucleus_sample(logits, s.req.params, &mut s.rng);
-            s.generated.push(tok);
-            s.current = tok;
-            stats.decode_tokens += 1;
-            let _ = s.tx.send(GenEvent::Delta { index: s.generated.len() - 1, token: tok });
-            let hit_stop = s.req.stop_tokens.contains(&tok)
-                || s
-                    .req
-                    .stop_seqs
-                    .iter()
-                    .any(|q| !q.is_empty() && s.generated.ends_with(q));
-            if s.generated.len() >= s.req.max_tokens || hit_stop {
-                let reason = if hit_stop { FinishReason::Stop } else { FinishReason::Length };
+            if let Some(reason) = sample_token(s, logits, &mut stats) {
                 if let Some(done) = slot.take() {
                     done.finish(reason, &mut stats);
                 }
             }
         }
+    }
+}
+
+/// Sample one token from `logits` into slot `s` — shared by the normal
+/// post-step path and the exact-cache-hit fast path. Records TTFT on the
+/// first sample, streams the `Delta`, and returns `Some(reason)` when the
+/// request just finished (stop match or length).
+fn sample_token(s: &mut Slot, logits: &[f32], stats: &mut EngineStats) -> Option<FinishReason> {
+    if s.ttft_ms.is_none() {
+        let ttft = s.enqueued.elapsed().as_secs_f64() * 1e3;
+        s.ttft_ms = Some(ttft);
+        stats.ttft_ms_sum += ttft;
+        stats.ttft_ms_count += 1;
+        if ttft > stats.ttft_ms_max {
+            stats.ttft_ms_max = ttft;
+        }
+    }
+    let tok = nucleus_sample(logits, s.req.params, &mut s.rng);
+    s.generated.push(tok);
+    s.current = tok;
+    stats.decode_tokens += 1;
+    let _ = s.tx.send(GenEvent::Delta { index: s.generated.len() - 1, token: tok });
+    let hit_stop = s.req.stop_tokens.contains(&tok)
+        || s
+            .req
+            .stop_seqs
+            .iter()
+            .any(|q| !q.is_empty() && s.generated.ends_with(q));
+    if hit_stop {
+        Some(FinishReason::Stop)
+    } else if s.generated.len() >= s.req.max_tokens {
+        Some(FinishReason::Length)
+    } else {
+        None
     }
 }
 
@@ -546,6 +588,45 @@ fn admit(
         let _ = p.tx.send(GenEvent::Error(format!("reset slot {slot_ix}: {e:#}")));
         return None;
     }
+    // prompt-prefix cache: restore the longest cached prefix so prefill
+    // covers only the suffix; an exact hit skips prefill entirely (its
+    // stored logits are sampled from before the first lane is built). Any
+    // failure scrubs the slot and falls back to a cold prefill.
+    let mut prompt_pos = 0usize;
+    let mut pending_logits = None;
+    match sampler.prefix_lookup(slot_ix, &p.req.prompt) {
+        Ok(Some((matched, logits))) => match logits {
+            Some(l) if !l.is_empty() => {
+                stats.prefix_hits += 1;
+                stats.prefix_hit_tokens += matched as u64;
+                prompt_pos = matched;
+                pending_logits = Some(l);
+            }
+            _ if matched < p.req.prompt.len() => {
+                stats.prefix_hits += 1;
+                stats.prefix_hit_tokens += matched as u64;
+                prompt_pos = matched;
+            }
+            // exact match but unusable stored logits: the restored state
+            // already consumed the last prompt token, so start cold
+            _ => {
+                if let Err(e) = sampler.reset_slot(slot_ix) {
+                    stats.requests_failed += 1;
+                    let _ = p.tx.send(GenEvent::Error(format!("reset slot {slot_ix}: {e:#}")));
+                    return None;
+                }
+            }
+        },
+        Ok(None) => {}
+        Err(_) => {
+            // restore may have written partial state — scrub before prefill
+            if let Err(e) = sampler.reset_slot(slot_ix) {
+                stats.requests_failed += 1;
+                let _ = p.tx.send(GenEvent::Error(format!("reset slot {slot_ix}: {e:#}")));
+                return None;
+            }
+        }
+    }
     let started = Instant::now();
     let queue_ms = (started - p.enqueued).as_secs_f64() * 1e3;
     let _ = p.tx.send(GenEvent::Started { prompt_tokens: p.req.prompt.len(), queue_ms });
@@ -562,10 +643,11 @@ fn admit(
         cancel: p.cancel,
         enqueued: p.enqueued,
         started,
-        prompt_pos: 0,
+        prompt_pos,
         generated: Vec::new(),
         current: 0,
         decoding: false,
+        pending_logits,
         ttft_ms: None,
         rng,
     })

@@ -456,6 +456,8 @@ impl EventFrame {
                 ("requests_failed", Json::num(s.requests_failed as f64)),
                 ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
                 ("decode_tokens", Json::num(s.decode_tokens as f64)),
+                ("prefix_hits", Json::num(s.prefix_hits as f64)),
+                ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
                 ("steps", Json::num(s.steps as f64)),
                 ("active_slot_steps", Json::num(s.active_slot_steps as f64)),
                 ("ttft_ms_sum", Json::num(s.ttft_ms_sum)),
@@ -508,6 +510,12 @@ impl EventFrame {
                 requests_failed: j.req("requests_failed")?.as_u64()?,
                 prefill_tokens: j.req("prefill_tokens")?.as_u64()?,
                 decode_tokens: j.req("decode_tokens")?.as_u64()?,
+                // absent in frames from pre-prefix-cache engines
+                prefix_hits: j.get("prefix_hits").and_then(|v| v.as_u64().ok()).unwrap_or(0),
+                prefix_hit_tokens: j
+                    .get("prefix_hit_tokens")
+                    .and_then(|v| v.as_u64().ok())
+                    .unwrap_or(0),
                 steps: j.req("steps")?.as_u64()?,
                 active_slot_steps: j.req("active_slot_steps")?.as_u64()?,
                 ttft_ms_sum: j.req("ttft_ms_sum")?.as_f64()?,

@@ -33,7 +33,10 @@ COMMANDS
             [--threads N]
   generate  --preset P [--checkpoint D] [--prompt S] [--tokens N]
             [--temperature F] [--top-p F] [--seed S] [--threads N]
+            [--beams N]  (prefill the prompt once, fork the state into N
+            divergent sampling lanes — N at most the preset's batch size)
   serve     --preset P [--addr HOST:PORT] [--checkpoint D] [--threads N]
+            [--prefix-cache N]
             (streaming NDJSON protocol v2 + v1 one-shot; type 'quit' on
             stdin for graceful shutdown with drained requests and stats)
   inspect
@@ -53,6 +56,10 @@ each layer together (default on; also TVQ_BATCHED_DECODE=0).
 --precision f32|bf16|int8 picks the decode/prefill weight precision
 (default f32; also TVQ_PRECISION). Weights quantize once at install;
 accumulation stays f32, bits are deterministic per precision mode.
+--prefix-cache N caches up to N prefilled prompt states as O(model) lane
+snapshots (also TVQ_PREFIX_CACHE=N; default off). A request whose prompt
+starts with a cached prompt prefills only the suffix — bit-identical to
+a cold prefill. The cache clears when a checkpoint is loaded.
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -151,6 +158,14 @@ fn main() -> Result<()> {
         };
         std::env::set_var("TVQ_PRECISION", v);
     }
+    if let Some(n) = args.opt("prefix-cache") {
+        let cap: usize = n
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad value for --prefix-cache: {e}"))?;
+        // Sampler::new reads this at construction (serve builds the
+        // sampler on the engine thread, so a flag must relay via env)
+        std::env::set_var("TVQ_PREFIX_CACHE", cap.to_string());
+    }
 
     match cmd.as_str() {
         "audit" => {
@@ -209,17 +224,30 @@ fn main() -> Result<()> {
             let prompt_ids: Vec<i32> =
                 tok.encode(prompt.as_bytes()).into_iter().map(i32::from).collect();
             let b = sampler.batch_size();
-            let prompts = vec![prompt_ids; b];
-            let mut rng = Rng::new(args.num("seed", 0u64)?);
             let params = SampleParams {
                 temperature: args.num("temperature", 1.0f32)?,
                 top_p: args.num("top-p", 0.95f32)?,
             };
-            let outs = sampler.generate(&prompts, args.num("tokens", 64)?, params, &mut rng)?;
+            let n_tokens: usize = args.num("tokens", 64)?;
+            let seed: u64 = args.num("seed", 0)?;
+            let beams: usize = args.num("beams", 0)?;
+            let outs = if beams > 0 {
+                if beams > b {
+                    bail!("--beams {beams} exceeds the preset batch size {b}");
+                }
+                // prefill once, fork the prefilled state into `beams`
+                // lanes with independent per-beam rng streams
+                sampler.generate_beams(&prompt_ids, beams, n_tokens, params, seed)?
+            } else {
+                let prompts = vec![prompt_ids; b];
+                let mut rng = Rng::new(seed);
+                sampler.generate(&prompts, n_tokens, params, &mut rng)?
+            };
+            let label = if beams > 0 { "beam" } else { "sample" };
             for (i, o) in outs.iter().enumerate() {
                 let bytes: Vec<u16> = o.iter().map(|&t| t as u16).collect();
                 println!(
-                    "--- sample {i} ---\n{}{}",
+                    "--- {label} {i} ---\n{}{}",
                     prompt,
                     String::from_utf8_lossy(&tok.decode(&bytes))
                 );
@@ -276,7 +304,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "engine stats: {} completed, {} cancelled, {} failed; \
                  {} prefill tokens, {} decode tokens over {} steps \
-                 (mean TTFT {:.1} ms)",
+                 (mean TTFT {:.1} ms; prefix cache: {} hits, {} tokens)",
                 stats.requests_completed,
                 stats.requests_cancelled,
                 stats.requests_failed,
@@ -284,6 +312,8 @@ fn main() -> Result<()> {
                 stats.decode_tokens,
                 stats.steps,
                 stats.mean_ttft_ms(),
+                stats.prefix_hits,
+                stats.prefix_hit_tokens,
             );
         }
         other => {

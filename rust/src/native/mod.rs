@@ -51,6 +51,7 @@
 pub mod kernels;
 pub mod layout;
 pub mod simd;
+pub mod snapshot;
 
 mod autodiff;
 mod model;
@@ -60,6 +61,7 @@ mod step;
 pub use layout::Layout;
 pub use session::DecodeSession;
 pub use simd::{MatRef, Precision, SimdMode};
+pub use snapshot::{LaneLayer, LaneSnapshot, SessionSnapshot};
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

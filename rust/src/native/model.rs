@@ -484,6 +484,26 @@ impl State {
         rows
     }
 
+    /// Copy row `src`'s slice of every leaf over row `dst` (lane forking:
+    /// the forked lane continues bit-identically to its parent). Rows are
+    /// contiguous along the leading batch dimension, so this is five
+    /// `copy_within` calls per layer plus the position.
+    pub fn copy_row(&mut self, src: usize, dst: usize) {
+        fn row_copy<T: Copy>(v: &mut [T], b: usize, src: usize, dst: usize) {
+            let stride = v.len() / b;
+            v.copy_within(src * stride..(src + 1) * stride, dst * stride);
+        }
+        let b = self.pos.len();
+        self.pos[dst] = self.pos[src];
+        for l in &mut self.layers {
+            row_copy(&mut l.win_k, b, src, dst);
+            row_copy(&mut l.win_v, b, src, dst);
+            row_copy(&mut l.win_z, b, src, dst);
+            row_copy(&mut l.cache_u, b, src, dst);
+            row_copy(&mut l.cache_l, b, src, dst);
+        }
+    }
+
     /// Serialize back to leaf order (same order as [`Layout::state_leaves`]).
     pub fn dump(&self, layout: &Layout, group: &str) -> Vec<HostTensor> {
         let leaves = layout.state_leaves(group);

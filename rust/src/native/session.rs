@@ -26,6 +26,7 @@ use crate::tensor::HostTensor;
 use super::model::{
     forward_step_batched, forward_step_per_lane, BatchScratch, LaneStep, Scratch, State,
 };
+use super::snapshot::{LaneSnapshot, SessionSnapshot};
 use super::step::{parse_weights, ParsedWeights};
 use super::{Layout, NativeBackend, NativeOptions};
 
@@ -166,6 +167,56 @@ impl DecodeSession {
     /// Logits of the most recent [`DecodeSession::step`], `[B, V]`.
     pub fn logits(&self) -> &[f32] {
         &self.logits
+    }
+
+    /// Capture lane `lane`'s decode state as a value (the stream extras —
+    /// RNG, UTF-8 remainder, stop tail — live above the session; fill
+    /// them on the returned snapshot before [`LaneSnapshot::encode`]).
+    /// Restoring the snapshot into any same-config session running the
+    /// same (SIMD × precision) axis continues bit-identically.
+    pub fn snapshot_lane(&self, lane: usize) -> Result<LaneSnapshot> {
+        LaneSnapshot::from_state(&self.cfg, &self.st, lane)
+    }
+
+    /// Overwrite lane `lane` with a snapshot. Validates config/shape
+    /// compatibility before touching anything; other lanes are untouched.
+    pub fn restore_lane(&mut self, lane: usize, snap: &LaneSnapshot) -> Result<()> {
+        snap.apply_to_state(&self.cfg, &mut self.st, lane)
+    }
+
+    /// Copy lane `src`'s state over lane `dst` — the forked lane then
+    /// decodes bit-identically to its parent until their token streams
+    /// diverge (beam fan-out: prefill once, fork N times).
+    pub fn fork_lane(&mut self, src: usize, dst: usize) -> Result<()> {
+        let b = self.cfg.batch_size;
+        if src >= b || dst >= b {
+            bail!("fork_lane: {src} -> {dst} out of range (batch {b})");
+        }
+        if src != dst {
+            self.st.copy_row(src, dst);
+        }
+        Ok(())
+    }
+
+    /// Capture every lane (whole-session snapshot).
+    pub fn snapshot(&self) -> Result<SessionSnapshot> {
+        let lanes = (0..self.cfg.batch_size)
+            .map(|lane| self.snapshot_lane(lane))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SessionSnapshot { lanes })
+    }
+
+    /// Restore every lane from a whole-session snapshot (lane count must
+    /// match this session's batch size).
+    pub fn restore(&mut self, snap: &SessionSnapshot) -> Result<()> {
+        let b = self.cfg.batch_size;
+        if snap.lanes.len() != b {
+            bail!("session snapshot has {} lanes, batch is {b}", snap.lanes.len());
+        }
+        for (lane, ls) in snap.lanes.iter().enumerate() {
+            self.restore_lane(lane, ls)?;
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,653 @@
+//! Versioned binary snapshots of per-lane decode state (DESIGN.md §10).
+//!
+//! Transformer-VQ's decode state is *fixed size* (Thm 3.7): a rolling
+//! `2L` window plus the `S`-slot compressive cache per layer, regardless
+//! of how many tokens a lane has consumed. That makes a lane snapshot an
+//! O(model) value — it can be stored, restored, forked, or migrated to
+//! another process, and the restored lane continues **bit-identically**
+//! to the uninterrupted run (pinned by `rust/tests/snapshot_oracle.rs`
+//! across SimdMode × Precision × batched/per-lane × thread count).
+//!
+//! A [`LaneSnapshot`] captures one batch row: `pos` plus every state leaf
+//! (`win_k`/`win_v`/`win_z`, `cache_u`/`cache_l` per layer), and the
+//! serving-side stream extras a migration needs — the sampling RNG state,
+//! the [`crate::tokenizer::Utf8Stream`] remainder, and the generated-token
+//! tail that stop-sequence matching inspects. A [`SessionSnapshot`] is all
+//! `B` lanes of a session. What is deliberately *not* captured: weights
+//! and codebooks (re-derived from the checkpoint at restore; the config
+//! guard plus same-(SIMD × precision) restore keeps bit-identity), scratch
+//! arenas (pure caches), and engine bookkeeping like wall-clock deadlines.
+//!
+//! ## Wire format (version 1, little-endian)
+//!
+//! ```text
+//! lane record:                      session record:
+//!   magic   b"TVQS"                  magic   b"TVQM"
+//!   version u32 = 1                  version u32 = 1
+//!   config  8 × u32 guard            lanes   u32
+//!   flags   u32 (bit0 = rng)         per lane: u32 len + lane record
+//!   pos     i32                      fnv64   u64 checksum
+//!   per layer: win_k f32[..],
+//!     win_v f32[..], win_z i32[..],
+//!     cache_u f32[..], cache_l f32[..]
+//!   rng     4 × u64 (iff bit0)
+//!   utf8    u32 len + bytes
+//!   stop    u32 len + i32[..]
+//!   fnv64   u64 checksum
+//! ```
+//!
+//! The config guard is `(n_layers, n_heads, d_k, d_v, n_code, block_len,
+//! vocab_size, use_cache)` — every dimension the state leaf sizes derive
+//! from — so a snapshot can never be silently applied to a mismatched
+//! model. The trailing checksum is FNV-1a-64 over all preceding bytes;
+//! each FNV step is a bijection of the hash state, so *any* single-byte
+//! corruption is detected. Decoding is total: truncated, bit-flipped,
+//! wrong-version, or wrong-config bytes produce a clean `Err`, never a
+//! panic or partial state mutation (property-tested in
+//! `rust/tests/proptests.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelConfig;
+use crate::tensor::HostTensor;
+
+use super::model::State;
+
+const LANE_MAGIC: &[u8; 4] = b"TVQS";
+const SESSION_MAGIC: &[u8; 4] = b"TVQM";
+const VERSION: u32 = 1;
+const FLAG_RNG: u32 = 1;
+/// Sanity bound on the UTF-8 remainder (a real decoder holds ≤ 3 bytes).
+const MAX_UTF8_PENDING: usize = 64;
+/// Sanity bound on the stop-sequence tail carried for match progress.
+const MAX_STOP_TAIL: usize = 4096;
+
+/// One layer of one lane's recurrent state (per-lane sizes, i.e. the
+/// `[B, ...]` leaves with the batch dimension stripped).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneLayer {
+    /// Rolling key window, `[2L, H, d_k]`.
+    pub win_k: Vec<f32>,
+    /// Rolling value window, `[2L, H, d_v]`.
+    pub win_v: Vec<f32>,
+    /// Window shortcodes, `[2L, H]`.
+    pub win_z: Vec<i32>,
+    /// Compressive cache values, `[H, S, d_v]`.
+    pub cache_u: Vec<f32>,
+    /// Compressive cache counts, `[H, S]`.
+    pub cache_l: Vec<f32>,
+}
+
+/// One batch lane's complete decode state as a value: model recurrence
+/// plus the serving-stream extras (RNG, UTF-8 remainder, stop tail).
+/// Encode with [`LaneSnapshot::encode`]; the session/sampler layers fill
+/// the extras before encoding and re-apply them after decoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneSnapshot {
+    /// Tokens ingested since reset.
+    pub pos: i32,
+    /// Per-layer recurrent state, outermost layer first.
+    pub layers: Vec<LaneLayer>,
+    /// xoshiro256** sampling-stream state, if the lane carries one.
+    pub rng: Option<[u64; 4]>,
+    /// Undecoded UTF-8 tail held by the lane's streaming decoder.
+    pub utf8_pending: Vec<u8>,
+    /// Recent generated tokens, newest last — enough to resume
+    /// stop-sequence matching (`generated.ends_with(seq)`).
+    pub stop_tail: Vec<i32>,
+}
+
+/// All lanes of one session, restorable into any same-config session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// One snapshot per batch row, row order.
+    pub lanes: Vec<LaneSnapshot>,
+}
+
+/// Per-lane element counts of the five state leaves, derived from config:
+/// `(win_k, win_v, win_z, cache_u, cache_l)`.
+fn lane_dims(cfg: &ModelConfig) -> (usize, usize, usize, usize, usize) {
+    let w2l = 2 * cfg.block_len;
+    let (h, s) = (cfg.n_heads, cfg.n_code);
+    (w2l * h * cfg.d_k, w2l * h * cfg.d_v, w2l * h, h * s * cfg.d_v, h * s)
+}
+
+/// The 8-word config guard written into every lane record.
+fn config_guard(cfg: &ModelConfig) -> [u32; 8] {
+    [
+        cfg.n_layers as u32,
+        cfg.n_heads as u32,
+        cfg.d_k as u32,
+        cfg.d_v as u32,
+        cfg.n_code as u32,
+        cfg.block_len as u32,
+        cfg.vocab_size as u32,
+        cfg.use_cache as u32,
+    ]
+}
+
+const GUARD_NAMES: [&str; 8] =
+    ["n_layers", "n_heads", "d_k", "d_v", "n_code", "block_len", "vocab_size", "use_cache"];
+
+/// 64-bit FNV-1a. Every step is a bijection of the running state, so any
+/// single-byte difference in the input changes the digest.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// byte writer / bounds-checked reader
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Cursor over untrusted bytes: every read is bounds-checked and errors
+/// cleanly on shortfall.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.off..end];
+                self.off = end;
+                Ok(s)
+            }
+            None => bail!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.buf.len() - self.off
+            ),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let b = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("snapshot has {} trailing bytes after the payload", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+/// Split off and verify the trailing FNV-1a-64 checksum; returns the
+/// payload it covers.
+fn checked_payload<'a>(bytes: &'a [u8], what: &str) -> Result<&'a [u8]> {
+    if bytes.len() < 8 {
+        bail!("{what} snapshot too short for a checksum ({} bytes)", bytes.len());
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 8);
+    let mut a = [0u8; 8];
+    a.copy_from_slice(tail);
+    let stored = u64::from_le_bytes(a);
+    let computed = fnv64(payload);
+    if stored != computed {
+        bail!("{what} snapshot checksum mismatch (corrupt or truncated bytes)");
+    }
+    Ok(payload)
+}
+
+/// Verify magic + version + config guard at the head of `r`.
+fn check_header(r: &mut Reader<'_>, cfg: &ModelConfig) -> Result<()> {
+    let magic = r.take(4)?;
+    if magic != LANE_MAGIC {
+        bail!("not a lane snapshot (bad magic {magic:02x?})");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported lane snapshot version {version} (this build reads {VERSION})");
+    }
+    let want = config_guard(cfg);
+    for (name, &w) in GUARD_NAMES.iter().zip(&want) {
+        let got = r.u32()?;
+        if got != w {
+            bail!("snapshot config mismatch: {name} is {got}, this model has {w}");
+        }
+    }
+    Ok(())
+}
+
+impl LaneSnapshot {
+    /// Validate that the leaf sizes agree with `cfg` (encode-side guard so
+    /// a mis-built snapshot can never produce undecodable bytes).
+    fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        if self.layers.len() != cfg.n_layers {
+            bail!("lane snapshot has {} layers, config has {}", self.layers.len(), cfg.n_layers);
+        }
+        let (wk, wv, wz, cu, cl) = lane_dims(cfg);
+        for (l, lay) in self.layers.iter().enumerate() {
+            let sizes = [
+                (lay.win_k.len(), wk, "win_k"),
+                (lay.win_v.len(), wv, "win_v"),
+                (lay.win_z.len(), wz, "win_z"),
+                (lay.cache_u.len(), cu, "cache_u"),
+                (lay.cache_l.len(), cl, "cache_l"),
+            ];
+            for (got, want, name) in sizes {
+                if got != want {
+                    bail!("lane snapshot layer {l}: {name} has {got} elems, config wants {want}");
+                }
+            }
+        }
+        if self.utf8_pending.len() > MAX_UTF8_PENDING {
+            bail!("lane snapshot utf8 remainder is {} bytes (max {MAX_UTF8_PENDING})", self.utf8_pending.len());
+        }
+        if self.stop_tail.len() > MAX_STOP_TAIL {
+            bail!("lane snapshot stop tail is {} tokens (max {MAX_STOP_TAIL})", self.stop_tail.len());
+        }
+        Ok(())
+    }
+
+    /// Serialize to the version-1 lane record (see the module docs).
+    pub fn encode(&self, cfg: &ModelConfig) -> Result<Vec<u8>> {
+        self.validate(cfg)?;
+        let mut out = Vec::new();
+        out.extend_from_slice(LANE_MAGIC);
+        put_u32(&mut out, VERSION);
+        for w in config_guard(cfg) {
+            put_u32(&mut out, w);
+        }
+        let flags = if self.rng.is_some() { FLAG_RNG } else { 0 };
+        put_u32(&mut out, flags);
+        put_u32(&mut out, self.pos as u32);
+        for lay in &self.layers {
+            put_f32s(&mut out, &lay.win_k);
+            put_f32s(&mut out, &lay.win_v);
+            put_i32s(&mut out, &lay.win_z);
+            put_f32s(&mut out, &lay.cache_u);
+            put_f32s(&mut out, &lay.cache_l);
+        }
+        if let Some(s) = self.rng {
+            for w in s {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        put_u32(&mut out, self.utf8_pending.len() as u32);
+        out.extend_from_slice(&self.utf8_pending);
+        put_u32(&mut out, self.stop_tail.len() as u32);
+        put_i32s(&mut out, &self.stop_tail);
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode a version-1 lane record for a model running `cfg`. Total on
+    /// hostile input: truncation, corruption, version skew, and config
+    /// mismatch all produce clean errors.
+    pub fn decode(cfg: &ModelConfig, bytes: &[u8]) -> Result<Self> {
+        let payload = checked_payload(bytes, "lane")?;
+        let mut r = Reader::new(payload);
+        check_header(&mut r, cfg)?;
+        let flags = r.u32()?;
+        if flags & !FLAG_RNG != 0 {
+            bail!("lane snapshot has unknown flag bits {:#x}", flags & !FLAG_RNG);
+        }
+        let pos = r.i32()?;
+        let (wk, wv, wz, cu, cl) = lane_dims(cfg);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LaneLayer {
+                win_k: r.f32s(wk)?,
+                win_v: r.f32s(wv)?,
+                win_z: r.i32s(wz)?,
+                cache_u: r.f32s(cu)?,
+                cache_l: r.f32s(cl)?,
+            });
+        }
+        let rng = if flags & FLAG_RNG != 0 {
+            Some([r.u64()?, r.u64()?, r.u64()?, r.u64()?])
+        } else {
+            None
+        };
+        let n_utf8 = r.u32()? as usize;
+        if n_utf8 > MAX_UTF8_PENDING {
+            bail!("lane snapshot utf8 remainder claims {n_utf8} bytes (max {MAX_UTF8_PENDING})");
+        }
+        let utf8_pending = r.take(n_utf8)?.to_vec();
+        let n_stop = r.u32()? as usize;
+        if n_stop > MAX_STOP_TAIL {
+            bail!("lane snapshot stop tail claims {n_stop} tokens (max {MAX_STOP_TAIL})");
+        }
+        let stop_tail = r.i32s(n_stop)?;
+        r.done()?;
+        Ok(Self { pos, layers, rng, utf8_pending, stop_tail })
+    }
+
+    /// Capture lane `lane` of a native [`State`] (extras left empty).
+    pub(crate) fn from_state(cfg: &ModelConfig, st: &State, lane: usize) -> Result<Self> {
+        let b = st.pos.len();
+        if lane >= b {
+            bail!("snapshot lane {lane} out of range (batch {b})");
+        }
+        let row = |v: &[f32]| -> Vec<f32> {
+            let stride = v.len() / b;
+            v[lane * stride..(lane + 1) * stride].to_vec()
+        };
+        let row_i = |v: &[i32]| -> Vec<i32> {
+            let stride = v.len() / b;
+            v[lane * stride..(lane + 1) * stride].to_vec()
+        };
+        let snap = Self {
+            pos: st.pos[lane],
+            layers: st
+                .layers
+                .iter()
+                .map(|l| LaneLayer {
+                    win_k: row(&l.win_k),
+                    win_v: row(&l.win_v),
+                    win_z: row_i(&l.win_z),
+                    cache_u: row(&l.cache_u),
+                    cache_l: row(&l.cache_l),
+                })
+                .collect(),
+            rng: None,
+            utf8_pending: Vec::new(),
+            stop_tail: Vec::new(),
+        };
+        snap.validate(cfg)?;
+        Ok(snap)
+    }
+
+    /// Overwrite lane `lane` of a native [`State`] with this snapshot.
+    /// Validates fully before writing, so a mismatched snapshot never
+    /// leaves the lane half-mutated.
+    pub(crate) fn apply_to_state(&self, cfg: &ModelConfig, st: &mut State, lane: usize) -> Result<()> {
+        self.validate(cfg)?;
+        let b = st.pos.len();
+        if lane >= b {
+            bail!("restore lane {lane} out of range (batch {b})");
+        }
+        if st.layers.len() != self.layers.len() {
+            bail!("state has {} layers, snapshot has {}", st.layers.len(), self.layers.len());
+        }
+        st.pos[lane] = self.pos;
+        for (dst, src) in st.layers.iter_mut().zip(&self.layers) {
+            write_row(&mut dst.win_k, b, lane, &src.win_k)?;
+            write_row(&mut dst.win_v, b, lane, &src.win_v)?;
+            write_row_i(&mut dst.win_z, b, lane, &src.win_z)?;
+            write_row(&mut dst.cache_u, b, lane, &src.cache_u)?;
+            write_row(&mut dst.cache_l, b, lane, &src.cache_l)?;
+        }
+        Ok(())
+    }
+
+    /// Capture lane `lane` from state-group tensors in leaf order (`pos`,
+    /// then `win_k, win_v, win_z, cache_u, cache_l` per layer — the order
+    /// of `Layout::state_leaves` and `StateBundle`'s "state" group).
+    pub fn from_tensors(cfg: &ModelConfig, tensors: &[HostTensor], lane: usize) -> Result<Self> {
+        let st = State::parse(cfg, tensors)?;
+        Self::from_state(cfg, &st, lane)
+    }
+
+    /// Overwrite lane `lane` of state-group tensors (same leaf order as
+    /// [`LaneSnapshot::from_tensors`]) in place, byte-exactly.
+    pub fn apply_to_tensors(
+        &self,
+        cfg: &ModelConfig,
+        tensors: &mut [HostTensor],
+        lane: usize,
+    ) -> Result<()> {
+        self.validate(cfg)?;
+        let expected = 1 + 5 * cfg.n_layers;
+        if tensors.len() != expected {
+            bail!("state group has {} tensors, expected {expected}", tensors.len());
+        }
+        let b = cfg.batch_size;
+        if lane >= b {
+            bail!("restore lane {lane} out of range (batch {b})");
+        }
+        write_tensor_row_i32(&mut tensors[0], b, lane, &[self.pos])?;
+        for (l, lay) in self.layers.iter().enumerate() {
+            let base = 1 + 5 * l;
+            write_tensor_row_f32(&mut tensors[base], b, lane, &lay.win_k)?;
+            write_tensor_row_f32(&mut tensors[base + 1], b, lane, &lay.win_v)?;
+            write_tensor_row_i32(&mut tensors[base + 2], b, lane, &lay.win_z)?;
+            write_tensor_row_f32(&mut tensors[base + 3], b, lane, &lay.cache_u)?;
+            write_tensor_row_f32(&mut tensors[base + 4], b, lane, &lay.cache_l)?;
+        }
+        Ok(())
+    }
+}
+
+fn write_row(dst: &mut [f32], b: usize, lane: usize, src: &[f32]) -> Result<()> {
+    let stride = dst.len() / b;
+    if stride != src.len() {
+        bail!("state row stride {stride} != snapshot leaf len {}", src.len());
+    }
+    dst[lane * stride..(lane + 1) * stride].copy_from_slice(src);
+    Ok(())
+}
+
+fn write_row_i(dst: &mut [i32], b: usize, lane: usize, src: &[i32]) -> Result<()> {
+    let stride = dst.len() / b;
+    if stride != src.len() {
+        bail!("state row stride {stride} != snapshot leaf len {}", src.len());
+    }
+    dst[lane * stride..(lane + 1) * stride].copy_from_slice(src);
+    Ok(())
+}
+
+fn write_tensor_row_f32(t: &mut HostTensor, b: usize, lane: usize, vals: &[f32]) -> Result<()> {
+    let stride = t.data.len() / b;
+    if stride != vals.len() * 4 {
+        bail!("state leaf row is {stride} bytes, snapshot leaf is {} f32s", vals.len());
+    }
+    let mut bytes = Vec::with_capacity(stride);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    t.data[lane * stride..(lane + 1) * stride].copy_from_slice(&bytes);
+    Ok(())
+}
+
+fn write_tensor_row_i32(t: &mut HostTensor, b: usize, lane: usize, vals: &[i32]) -> Result<()> {
+    let stride = t.data.len() / b;
+    if stride != vals.len() * 4 {
+        bail!("state leaf row is {stride} bytes, snapshot leaf is {} i32s", vals.len());
+    }
+    let mut bytes = Vec::with_capacity(stride);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    t.data[lane * stride..(lane + 1) * stride].copy_from_slice(&bytes);
+    Ok(())
+}
+
+impl SessionSnapshot {
+    /// Serialize all lanes to the version-1 session record.
+    pub fn encode(&self, cfg: &ModelConfig) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        out.extend_from_slice(SESSION_MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.lanes.len() as u32);
+        for lane in &self.lanes {
+            let blob = lane.encode(cfg)?;
+            put_u32(&mut out, blob.len() as u32);
+            out.extend_from_slice(&blob);
+        }
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode a version-1 session record for a model running `cfg`. Total
+    /// on hostile input, like [`LaneSnapshot::decode`].
+    pub fn decode(cfg: &ModelConfig, bytes: &[u8]) -> Result<Self> {
+        let payload = checked_payload(bytes, "session")?;
+        let mut r = Reader::new(payload);
+        let magic = r.take(4)?;
+        if magic != SESSION_MAGIC {
+            bail!("not a session snapshot (bad magic {magic:02x?})");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported session snapshot version {version} (this build reads {VERSION})");
+        }
+        let n = r.u32()? as usize;
+        // each lane record is > 48 header bytes; bound n before allocating
+        if n > payload.len() / 48 {
+            bail!("session snapshot claims {n} lanes in {} bytes", payload.len());
+        }
+        let mut lanes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = r.u32()? as usize;
+            let blob = r.take(len)?;
+            lanes.push(LaneSnapshot::decode(cfg, blob)?);
+        }
+        r.done()?;
+        Ok(Self { lanes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::preset_config;
+
+    fn sample_lane(cfg: &ModelConfig, salt: i32) -> LaneSnapshot {
+        let (wk, wv, wz, cu, cl) = lane_dims(cfg);
+        let f = |n: usize, k: i32| -> Vec<f32> {
+            (0..n).map(|i| (i as f32 + k as f32) * 0.25 - 3.0).collect()
+        };
+        let iv = |n: usize, k: i32| -> Vec<i32> { (0..n).map(|i| i as i32 % 7 + k).collect() };
+        LaneSnapshot {
+            pos: 41 + salt,
+            layers: (0..cfg.n_layers)
+                .map(|l| LaneLayer {
+                    win_k: f(wk, salt + l as i32),
+                    win_v: f(wv, salt + 2 * l as i32),
+                    win_z: iv(wz, salt),
+                    cache_u: f(cu, salt + 3),
+                    cache_l: f(cl, salt + 4),
+                })
+                .collect(),
+            rng: Some([1, 2, 3, 0xdead_beef + salt as u64]),
+            utf8_pending: vec![0xC3],
+            stop_tail: vec![104, 105, salt],
+        }
+    }
+
+    #[test]
+    fn lane_roundtrip_is_identity() {
+        let cfg = preset_config("quickstart").unwrap();
+        let snap = sample_lane(&cfg, 5);
+        let bytes = snap.encode(&cfg).unwrap();
+        let back = LaneSnapshot::decode(&cfg, &bytes).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn session_roundtrip_is_identity() {
+        let cfg = preset_config("quickstart").unwrap();
+        let sess = SessionSnapshot {
+            lanes: (0..cfg.batch_size).map(|i| sample_lane(&cfg, i as i32)).collect(),
+        };
+        let bytes = sess.encode(&cfg).unwrap();
+        assert_eq!(SessionSnapshot::decode(&cfg, &bytes).unwrap(), sess);
+    }
+
+    #[test]
+    fn every_truncation_errors_cleanly() {
+        let cfg = preset_config("quickstart").unwrap();
+        let bytes = sample_lane(&cfg, 1).encode(&cfg).unwrap();
+        for keep in [0, 3, 7, 11, 47, 48, bytes.len() / 2, bytes.len() - 1] {
+            assert!(LaneSnapshot::decode(&cfg, &bytes[..keep]).is_err(), "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum() {
+        let cfg = preset_config("quickstart").unwrap();
+        let bytes = sample_lane(&cfg, 2).encode(&cfg).unwrap();
+        for byte_ix in [0usize, 5, 40, bytes.len() / 3, bytes.len() - 9, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[byte_ix] ^= 0x10;
+            assert!(LaneSnapshot::decode(&cfg, &bad).is_err(), "flip at {byte_ix}");
+        }
+    }
+
+    #[test]
+    fn version_and_config_mismatch_error() {
+        let cfg = preset_config("quickstart").unwrap();
+        let snap = sample_lane(&cfg, 3);
+        // re-encode with a bumped version and a fixed-up checksum: the
+        // structural version check must fire, not the corruption check
+        let mut bytes = snap.encode(&cfg).unwrap();
+        bytes[4] = 2;
+        let len = bytes.len();
+        let sum = fnv64(&bytes[..len - 8]);
+        bytes[len - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = LaneSnapshot::decode(&cfg, &bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // a config with different dims must be rejected by the guard
+        let other = preset_config("ablate-S64").unwrap();
+        let good = snap.encode(&cfg).unwrap();
+        let err = LaneSnapshot::decode(&other, &good).unwrap_err();
+        assert!(err.to_string().contains("config mismatch"), "{err}");
+    }
+
+    #[test]
+    fn lane_magic_is_not_a_session() {
+        let cfg = preset_config("quickstart").unwrap();
+        let bytes = sample_lane(&cfg, 4).encode(&cfg).unwrap();
+        assert!(SessionSnapshot::decode(&cfg, &bytes).is_err());
+    }
+}

@@ -27,6 +27,22 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw xoshiro256** state (snapshot/migration: a restored rng
+    /// continues the exact stream this one would have produced).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an rng from [`Rng::state`]. An all-zero state is the
+    /// xoshiro fixed point (it only emits zeros), so it falls back to a
+    /// freshly seeded stream instead.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        if s == [0; 4] {
+            return Rng::new(0);
+        }
+        Self { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

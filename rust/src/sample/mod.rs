@@ -33,14 +33,19 @@
 //! model.
 
 mod nucleus;
+mod prefix_cache;
 
 pub use nucleus::{nucleus_sample, softmax_with_temperature};
+pub use prefix_cache::PrefixCacheStats;
 
 use anyhow::{bail, Result};
 
+use crate::native::LaneSnapshot;
 use crate::rng::Rng;
 use crate::runtime::{Backend, Executor, StateBundle};
 use crate::tensor::HostTensor;
+
+use prefix_cache::PrefixCache;
 
 pub struct Sampler {
     pub exe: Box<dyn Executor>,
@@ -49,6 +54,9 @@ pub struct Sampler {
     prefill_exe: Option<Box<dyn Executor>>,
     pub bundle: StateBundle,
     preset: String,
+    /// Prompt-prefix cache over lane snapshots (`Some` when enabled via
+    /// `TVQ_PREFIX_CACHE` or [`Sampler::enable_prefix_cache`]).
+    prefix_cache: Option<PrefixCache>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -88,11 +96,20 @@ impl Sampler {
         let prefill_exe = backend.load(&format!("{preset}.prefill")).ok();
         let mut bundle = StateBundle::zeros_for(exe.spec());
         bundle.set_named(backend.init_state(preset)?);
-        Ok(Self { exe, prefill_exe, bundle, preset: preset.to_string() })
+        // TVQ_PREFIX_CACHE=<capacity> enables the prompt-prefix cache
+        // (0/unset = off); the CLI relays --prefix-cache N here
+        let prefix_cache = std::env::var("TVQ_PREFIX_CACHE")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .map(PrefixCache::new);
+        Ok(Self { exe, prefill_exe, bundle, preset: preset.to_string(), prefix_cache })
     }
 
     /// Overwrite model weights from a training checkpoint (TVQ with params/cb
-    /// groups, e.g. saved by train::save_checkpoint).
+    /// groups, e.g. saved by train::save_checkpoint). Invalidates the
+    /// prefix cache: snapshots taken under the old weights are not valid
+    /// prefix states for the new model.
     pub fn load_weights(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let mut staged = StateBundle::new();
         staged.load_groups(path)?;
@@ -100,7 +117,23 @@ impl Sampler {
             let ts = staged.group(g)?.to_vec();
             self.bundle.set_group(g, ts);
         }
+        if let Some(cache) = self.prefix_cache.as_mut() {
+            cache.clear();
+        }
         Ok(())
+    }
+
+    /// Turn the prompt-prefix cache on with room for `capacity` prompts
+    /// (replacing any existing cache). See [`prefix_cache`][mod] docs.
+    ///
+    /// [mod]: self::PrefixCacheStats
+    pub fn enable_prefix_cache(&mut self, capacity: usize) {
+        self.prefix_cache = Some(PrefixCache::new(capacity));
+    }
+
+    /// Hit/miss/eviction counters of the prefix cache, `None` when off.
+    pub fn prefix_cache_stats(&self) -> Option<PrefixCacheStats> {
+        self.prefix_cache.as_ref().map(|c| c.stats())
     }
 
     pub fn batch_size(&self) -> usize {
@@ -305,6 +338,85 @@ impl Sampler {
         Ok(())
     }
 
+    /// Capture one slot's decode state as a [`LaneSnapshot`] (fixed-size
+    /// regardless of how many tokens the slot has consumed — Thm 3.7).
+    /// Encode with [`LaneSnapshot::encode`] for storage or migration.
+    pub fn snapshot_slot(&self, slot: usize) -> Result<LaneSnapshot> {
+        let cfg = &self.exe.spec().config;
+        let tensors = self.bundle.group("state")?;
+        LaneSnapshot::from_tensors(cfg, tensors, slot)
+    }
+
+    /// Overwrite one slot's decode state from a snapshot, byte-exactly:
+    /// the restored slot continues bit-identically to the snapshotted run
+    /// (same backend, same SIMD × precision axis). Other slots untouched.
+    pub fn restore_slot(&mut self, slot: usize, snap: &LaneSnapshot) -> Result<()> {
+        let cfg = self.exe.spec().config.clone();
+        let group = self
+            .bundle
+            .group_mut("state")
+            .ok_or_else(|| anyhow::anyhow!("no state group"))?;
+        snap.apply_to_tensors(&cfg, group, slot)
+    }
+
+    /// Copy slot `src`'s decode state over slot `dst` (beam fan-out:
+    /// prefill a prompt once, fork it into N divergent sampling lanes).
+    pub fn fork_slot(&mut self, src: usize, dst: usize) -> Result<()> {
+        let b = self.batch_size();
+        if src >= b || dst >= b {
+            bail!("fork_slot: {src} -> {dst} out of range (batch {b})");
+        }
+        if src == dst {
+            return Ok(());
+        }
+        let group = self
+            .bundle
+            .group_mut("state")
+            .ok_or_else(|| anyhow::anyhow!("no state group"))?;
+        for t in group.iter_mut() {
+            if t.shape.first() != Some(&b) {
+                bail!("state leaf not batched: {:?}", t.shape);
+            }
+            let stride = t.data.len() / b;
+            t.data.copy_within(src * stride..(src + 1) * stride, dst * stride);
+        }
+        Ok(())
+    }
+
+    /// Prefix-cache lookup + restore: finds the longest cached prompt that
+    /// prefixes `prompt`, restores its snapshot into `slot`, and returns
+    /// `(matched_tokens, stored_logits)` — logits are `Some` only on an
+    /// exact match (prefill can be skipped entirely). `Ok(None)` when the
+    /// cache is off or nothing matches; the slot is untouched then.
+    pub fn prefix_lookup(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<Option<(usize, Option<Vec<f32>>)>> {
+        let Some(cache) = self.prefix_cache.as_mut() else {
+            return Ok(None);
+        };
+        let Some(hit) = cache.lookup(prompt) else {
+            return Ok(None);
+        };
+        self.restore_slot(slot, &hit.snap)?;
+        Ok(Some((hit.matched, hit.logits)))
+    }
+
+    /// Store `slot`'s current state (which must hold exactly the prefilled
+    /// `prompt`) plus the last-token `logits` in the prefix cache. No-op
+    /// when the cache is off.
+    pub fn prefix_insert(&mut self, prompt: &[i32], slot: usize, logits: &[f32]) -> Result<()> {
+        if self.prefix_cache.is_none() || prompt.is_empty() {
+            return Ok(());
+        }
+        let snap = self.snapshot_slot(slot)?;
+        if let Some(cache) = self.prefix_cache.as_mut() {
+            cache.insert(prompt, snap, logits.to_vec());
+        }
+        Ok(())
+    }
+
     /// Convenience: generate `n_tokens` continuations for a batch of
     /// prompts (all slots used). Prompts are ingested via chunked prefill
     /// (all rows in flight at once, each with its own prompt), then all
@@ -335,6 +447,26 @@ impl Sampler {
         let c = self.prefill_chunk();
         let mut logits: Vec<Vec<f32>> = vec![Vec::new(); b];
         let mut pos = vec![0usize; b];
+        // prefix cache: restore the longest cached prefix per row so the
+        // loop below prefills only the suffix (nothing at all on an exact
+        // match, whose stored logits seed the first sample directly)
+        if self.prefix_cache.is_some() {
+            for row in 0..b {
+                if let Some((matched, l)) = self.prefix_lookup(row, &prompts[row])? {
+                    match l {
+                        Some(l) if !l.is_empty() => {
+                            pos[row] = matched;
+                            logits[row] = l;
+                        }
+                        _ if matched < prompts[row].len() => pos[row] = matched,
+                        // exact match but unusable stored logits: the
+                        // restored state has already consumed the last
+                        // token, so fall back to a cold prefill
+                        _ => self.reset_slot(row)?,
+                    }
+                }
+            }
+        }
         loop {
             let mut lanes = Vec::new();
             for (row, p) in prompts.iter().enumerate() {
@@ -355,6 +487,14 @@ impl Sampler {
                 if pos[lane.slot] == prompts[lane.slot].len() {
                     logits[lane.slot] = l;
                 }
+            }
+        }
+        // cache the fully prefilled prompts (snapshot is O(model), so this
+        // is cheap relative to the prefill it saves next time)
+        if self.prefix_cache.is_some() {
+            for row in 0..b {
+                let l = logits[row].clone();
+                self.prefix_insert(&prompts[row], row, &l)?;
             }
         }
 
@@ -405,6 +545,52 @@ impl Sampler {
                         tok
                     }
                 };
+            }
+        }
+        Ok(outputs)
+    }
+
+    /// Beam fan-out sampling: prefill `prompt` once into slot 0, fork the
+    /// prefilled state into `n_beams` lanes ([`Sampler::fork_slot`] —
+    /// O(model) per fork, Thm 3.7), then decode all beams together with
+    /// per-beam rng streams derived from `seed`. With a near-greedy
+    /// `params` every beam is bit-identical; with sampling they diverge
+    /// from the first token while sharing the prompt's prefill cost.
+    /// Returns one generated-token sequence per beam.
+    pub fn generate_beams(
+        &mut self,
+        prompt: &[i32],
+        n_beams: usize,
+        n_tokens: usize,
+        params: SampleParams,
+        seed: u64,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_size();
+        if n_beams == 0 || n_beams > b {
+            bail!("generate_beams: {n_beams} beams for batch size {b}");
+        }
+        if self.prefill_exe.is_none() {
+            bail!("generate_beams needs a prefill artifact (lane forking)");
+        }
+        self.reset_all();
+        let prompt: Vec<i32> = if prompt.is_empty() { vec![0] } else { prompt.to_vec() };
+        let logits0 = self.prefill(0, &prompt)?;
+        for dst in 1..n_beams {
+            self.fork_slot(0, dst)?;
+        }
+        let mut root = Rng::new(seed);
+        let mut rngs: Vec<Rng> = (0..n_beams).map(|i| root.fork(i as u64)).collect();
+        let mut logits: Vec<Vec<f32>> = vec![logits0; n_beams];
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::with_capacity(n_tokens); n_beams];
+        for t in 0..n_tokens {
+            let mut active = Vec::with_capacity(n_beams);
+            for (beam, out) in outputs.iter_mut().enumerate() {
+                let tok = nucleus_sample(&logits[beam], params, &mut rngs[beam]);
+                out.push(tok);
+                active.push(SlotToken { slot: beam, token: tok });
+            }
+            if t + 1 < n_tokens {
+                logits = self.decode_active(&active)?;
             }
         }
         Ok(outputs)

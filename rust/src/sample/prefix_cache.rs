@@ -1,0 +1,211 @@
+//! Prompt-prefix cache over lane snapshots (DESIGN.md §10).
+//!
+//! Transformer-VQ's fixed-size decode state makes prefix caching O(model)
+//! per entry instead of O(prompt): after a prompt is prefilled, the lane's
+//! [`LaneSnapshot`] *is* the prompt's entire attention state. A later
+//! request whose prompt starts with a cached prompt restores the snapshot
+//! and prefills only the suffix; an exact match also reuses the stored
+//! last-token logits and skips prefill entirely. Restore is byte-exact,
+//! so a cache hit is bit-identical to a cold prefill (pinned by
+//! `rust/tests/snapshot_oracle.rs`).
+//!
+//! Entries are keyed by an FNV-1a-64 hash of the prompt token bytes (fast
+//! exact-match reject) with the full token sequence stored alongside —
+//! equality and prefix tests always compare tokens, so hash collisions
+//! can never serve the wrong state. Eviction is LRU under a fixed
+//! capacity; `Sampler::load_weights` clears the cache (a snapshot taken
+//! under old weights is not a valid prefix state for the new model).
+//! Enable via `TVQ_PREFIX_CACHE=<capacity>` / `--prefix-cache N` or
+//! `Sampler::enable_prefix_cache` (off by default).
+
+use crate::native::LaneSnapshot;
+
+/// Counters exposed by `Sampler::prefix_cache_stats` (all monotonic
+/// except nothing — cleared only with the cache itself).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Exact-prompt hits (prefill skipped entirely).
+    pub hits: u64,
+    /// Proper-prefix hits (only the suffix was prefilled).
+    pub partial_hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Prompt tokens served from snapshots instead of prefill.
+    pub hit_tokens: u64,
+    /// Entries stored (refreshes of an existing prompt included).
+    pub insertions: u64,
+    /// Entries dropped by LRU pressure.
+    pub evictions: u64,
+}
+
+/// A successful lookup: the snapshot to restore, how many prompt tokens
+/// it covers, and — for exact matches — the stored last-token logits.
+pub(crate) struct PrefixHit {
+    pub snap: LaneSnapshot,
+    pub matched: usize,
+    pub logits: Option<Vec<f32>>,
+}
+
+struct Entry {
+    hash: u64,
+    prompt: Vec<i32>,
+    snap: LaneSnapshot,
+    logits: Vec<f32>,
+    last_used: u64,
+}
+
+/// LRU map from prompt token sequences to prefilled lane snapshots.
+pub(crate) struct PrefixCache {
+    cap: usize,
+    tick: u64,
+    entries: Vec<Entry>,
+    stats: PrefixCacheStats,
+}
+
+/// FNV-1a-64 over the little-endian bytes of the token ids.
+fn prompt_hash(prompt: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in prompt {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+impl PrefixCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { cap: capacity.max(1), tick: 0, entries: Vec::new(), stats: PrefixCacheStats::default() }
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.stats
+    }
+
+    /// Drop every entry (weights changed: cached states are stale).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Longest cached prompt that is a prefix of `prompt`; bumps its LRU
+    /// stamp and the hit/miss counters.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<PrefixHit> {
+        let h = prompt_hash(prompt);
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let exact = e.hash == h && e.prompt == prompt;
+            let is_prefix = exact
+                || (e.prompt.len() < prompt.len() && prompt[..e.prompt.len()] == e.prompt[..]);
+            if is_prefix && best.is_none_or(|b| e.prompt.len() > self.entries[b].prompt.len()) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else {
+            self.stats.misses += 1;
+            return None;
+        };
+        self.tick += 1;
+        let e = &mut self.entries[i];
+        e.last_used = self.tick;
+        let full = e.prompt.len() == prompt.len();
+        if full {
+            self.stats.hits += 1;
+        } else {
+            self.stats.partial_hits += 1;
+        }
+        self.stats.hit_tokens += e.prompt.len() as u64;
+        Some(PrefixHit {
+            snap: e.snap.clone(),
+            matched: e.prompt.len(),
+            logits: if full { Some(e.logits.clone()) } else { None },
+        })
+    }
+
+    /// Store (or refresh) the snapshot + last-token logits for `prompt`,
+    /// evicting the least-recently-used entry at capacity.
+    pub fn insert(&mut self, prompt: &[i32], snap: LaneSnapshot, logits: Vec<f32>) {
+        if prompt.is_empty() {
+            return;
+        }
+        self.tick += 1;
+        let h = prompt_hash(prompt);
+        if let Some(e) = self.entries.iter_mut().find(|e| e.hash == h && e.prompt == prompt) {
+            e.snap = snap;
+            e.logits = logits;
+            e.last_used = self.tick;
+            self.stats.insertions += 1;
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            if let Some(ix) = (0..self.entries.len()).min_by_key(|&i| self.entries[i].last_used) {
+                self.entries.swap_remove(ix);
+                self.stats.evictions += 1;
+            }
+        }
+        self.entries.push(Entry {
+            hash: h,
+            prompt: prompt.to_vec(),
+            snap,
+            logits,
+            last_used: self.tick,
+        });
+        self.stats.insertions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(pos: i32) -> LaneSnapshot {
+        LaneSnapshot {
+            pos,
+            layers: Vec::new(),
+            rng: None,
+            utf8_pending: Vec::new(),
+            stop_tail: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn exact_and_prefix_lookups() {
+        let mut c = PrefixCache::new(4);
+        c.insert(&[1, 2, 3], snap(3), vec![0.5]);
+        c.insert(&[1, 2], snap(2), vec![0.25]);
+        // exact: longest match is the full prompt, logits returned
+        let hit = c.lookup(&[1, 2, 3]).unwrap();
+        assert_eq!((hit.matched, hit.snap.pos), (3, 3));
+        assert_eq!(hit.logits.as_deref(), Some(&[0.5][..]));
+        // proper prefix: longest cached prefix wins, no logits
+        let hit = c.lookup(&[1, 2, 3, 4]).unwrap();
+        assert_eq!((hit.matched, hit.snap.pos), (3, 3));
+        assert!(hit.logits.is_none());
+        // shorter entry serves prompts the longer one can't
+        let hit = c.lookup(&[1, 2, 9]).unwrap();
+        assert_eq!((hit.matched, hit.snap.pos), (2, 2));
+        assert!(c.lookup(&[9, 9]).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.partial_hits, s.misses, s.hit_tokens), (1, 2, 1, 8));
+    }
+
+    #[test]
+    fn lru_eviction_under_capacity() {
+        let mut c = PrefixCache::new(2);
+        c.insert(&[1], snap(1), vec![]);
+        c.insert(&[2], snap(1), vec![]);
+        assert!(c.lookup(&[1]).is_some()); // touch [1] so [2] is LRU
+        c.insert(&[3], snap(1), vec![]);
+        assert!(c.lookup(&[2]).is_none(), "LRU entry must be evicted");
+        assert!(c.lookup(&[1]).is_some() && c.lookup(&[3]).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let mut c = PrefixCache::new(2);
+        c.insert(&[1, 2], snap(2), vec![]);
+        c.clear();
+        assert!(c.lookup(&[1, 2]).is_none());
+    }
+}

@@ -1,9 +1,94 @@
-//! Test utilities: self-cleaning temp dirs and a tiny property-testing
+//! Test utilities: self-cleaning temp dirs, a tiny property-testing
 //! driver over the in-repo deterministic [`crate::rng::Rng`] (the vendored
-//! dependency set has no proptest/tempfile).
+//! dependency set has no proptest/tempfile), and [`DecodeAxis`] — one
+//! point in the native decode determinism matrix (SIMD × precision ×
+//! batching × thread count), so cross-axis suites sweep every combination
+//! this machine can run instead of hand-rolling backend constructors.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::native::{DecodeSession, NativeBackend, NativeOptions, Precision, SimdMode};
+
+/// One point in the decode determinism matrix. The native contract
+/// (DESIGN.md §7) is that bits are deterministic *per* (SIMD × precision ×
+/// batching) triple at *any* thread count; suites that pin it iterate
+/// [`DecodeAxis::sweep`] so every combination is exercised with the same
+/// driver code.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeAxis {
+    pub simd: SimdMode,
+    pub precision: Precision,
+    /// Batched lane advancement vs. the per-lane fallback.
+    pub batched: bool,
+    pub num_threads: usize,
+}
+
+impl DecodeAxis {
+    /// Every (SIMD × precision × batching) triple this machine can
+    /// execute, crossed with `threads`. SIMD modes come from runtime
+    /// detection (scalar always; AVX2+FMA where available).
+    pub fn sweep(threads: &[usize]) -> Vec<DecodeAxis> {
+        let mut axes = Vec::new();
+        for simd in SimdMode::available() {
+            for precision in [Precision::F32, Precision::Bf16, Precision::Int8] {
+                for batched in [true, false] {
+                    for &num_threads in threads {
+                        axes.push(DecodeAxis { simd, precision, batched, num_threads });
+                    }
+                }
+            }
+        }
+        axes
+    }
+
+    /// The axis the environment selects (`TVQ_SIMD`, `TVQ_PRECISION`,
+    /// `TVQ_BATCHED_DECODE`, `TVQ_NUM_THREADS`) — what a plain
+    /// `NativeBackend::new()` would run. CI-matrix suites start here and
+    /// override only the field under test, so the TVQ_* legs still steer
+    /// the rest.
+    pub fn from_env() -> DecodeAxis {
+        let d = NativeOptions::default();
+        DecodeAxis {
+            simd: d.simd,
+            precision: d.precision,
+            batched: d.batched_decode,
+            num_threads: d.num_threads,
+        }
+    }
+
+    pub fn with_threads(self, num_threads: usize) -> Self {
+        Self { num_threads, ..self }
+    }
+
+    pub fn options(&self) -> NativeOptions {
+        NativeOptions {
+            num_threads: self.num_threads,
+            simd: self.simd,
+            batched_decode: self.batched,
+            precision: self.precision,
+        }
+    }
+
+    /// Human-readable point label for assertion messages.
+    pub fn label(&self) -> String {
+        format!(
+            "simd={} precision={} batched={} nt={}",
+            self.simd.name(),
+            self.precision.name(),
+            self.batched,
+            self.num_threads
+        )
+    }
+
+    pub fn backend(&self) -> NativeBackend {
+        NativeBackend::new().with_options(self.options())
+    }
+
+    pub fn session(&self, preset: &str) -> anyhow::Result<DecodeSession> {
+        DecodeSession::new(&self.backend(), preset)
+    }
+}
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);
 

@@ -93,6 +93,19 @@ impl Utf8Stream {
         self.pending.clear();
         s
     }
+
+    /// The undecoded tail currently held (≤ 3 bytes of an incomplete
+    /// multi-byte sequence) — captured by lane snapshots so a migrated
+    /// stream emits exactly the same deltas as the unmigrated one.
+    pub fn pending(&self) -> &[u8] {
+        &self.pending
+    }
+
+    /// Rebuild a stream holding `pending` undecoded bytes (the inverse of
+    /// [`Utf8Stream::pending`], for snapshot restore).
+    pub fn from_pending(pending: &[u8]) -> Self {
+        Self { pending: pending.to_vec() }
+    }
 }
 
 #[cfg(test)]

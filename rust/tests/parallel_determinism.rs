@@ -10,16 +10,12 @@
 use transformer_vq::native::{NativeBackend, NativeOptions, SimdMode};
 use transformer_vq::runtime::{Backend, StateBundle};
 use transformer_vq::tensor::HostTensor;
+use transformer_vq::testutil::DecodeAxis;
 
 fn backend(nt: usize, simd: SimdMode, batched: bool) -> NativeBackend {
-    NativeBackend::new().with_options(NativeOptions {
-        num_threads: nt,
-        simd,
-        batched_decode: batched,
-        // precision stays env-controlled so the TVQ_PRECISION CI axis
-        // exercises this whole suite in every weight-precision mode
-        ..NativeOptions::default()
-    })
+    // precision stays env-controlled so the TVQ_PRECISION CI axis
+    // exercises this whole suite in every weight-precision mode
+    DecodeAxis { simd, batched, num_threads: nt, ..DecodeAxis::from_env() }.backend()
 }
 
 /// Every SIMD mode this machine can execute.

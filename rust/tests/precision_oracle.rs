@@ -23,20 +23,17 @@
 //! mode must differ from f32 in at least one bit — so a dispatch bug that
 //! silently falls back to f32 cannot pass as "within tolerance".
 
-use transformer_vq::native::{
-    kernels, DecodeSession, NativeBackend, NativeOptions, Precision, SimdMode,
-};
+use transformer_vq::native::{kernels, DecodeSession, Precision, SimdMode};
 use transformer_vq::rng::Rng;
+use transformer_vq::testutil::DecodeAxis;
 
 fn session(precision: Precision, nt: usize) -> DecodeSession {
-    let backend = NativeBackend::new().with_options(NativeOptions {
-        num_threads: nt,
-        precision,
-        // SIMD stays env-controlled so the TVQ_SIMD CI axis runs this
-        // suite on both ISAs
-        ..NativeOptions::default()
-    });
-    DecodeSession::new(&backend, "quickstart").unwrap()
+    // SIMD stays env-controlled so the TVQ_SIMD CI axis runs this
+    // suite on both ISAs
+    DecodeAxis { precision, ..DecodeAxis::from_env() }
+        .with_threads(nt)
+        .session("quickstart")
+        .unwrap()
 }
 
 fn tokens_at(t: i32, b: usize) -> Vec<i32> {
@@ -122,20 +119,13 @@ fn reduced_precision_decode_is_bit_deterministic() {
 #[test]
 fn reduced_precision_per_lane_matches_batched_tolerance() {
     for precision in [Precision::Bf16, Precision::Int8] {
-        let batched = NativeBackend::new().with_options(NativeOptions {
-            precision,
-            batched_decode: true,
-            num_threads: 1,
-            ..NativeOptions::default()
-        });
-        let per_lane = NativeBackend::new().with_options(NativeOptions {
-            precision,
-            batched_decode: false,
-            num_threads: 1,
-            ..NativeOptions::default()
-        });
-        let mut s1 = DecodeSession::new(&batched, "quickstart").unwrap();
-        let mut s2 = DecodeSession::new(&per_lane, "quickstart").unwrap();
+        let env = DecodeAxis::from_env().with_threads(1);
+        let mut s1 = DecodeAxis { precision, batched: true, ..env }
+            .session("quickstart")
+            .unwrap();
+        let mut s2 = DecodeAxis { precision, batched: false, ..env }
+            .session("quickstart")
+            .unwrap();
         let b = s1.batch_size();
         for t in 0..16i32 {
             let toks = tokens_at(t, b);

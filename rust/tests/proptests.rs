@@ -5,10 +5,12 @@
 use transformer_vq::audit::{audit_file, lex};
 use transformer_vq::data::{markov, TbpttBatcher};
 use transformer_vq::json::Json;
+use transformer_vq::manifest::ModelConfig;
 use transformer_vq::metrics::LatencyHistogram;
 use transformer_vq::rng::Rng;
 use transformer_vq::schedule::LrSchedule;
 use transformer_vq::native::kernels::{dequantize_rows_i8, quantize_rows_i8};
+use transformer_vq::native::{preset_config, LaneLayer, LaneSnapshot, SessionSnapshot};
 use transformer_vq::store::{read_tvq, write_tvq};
 use transformer_vq::tensor::{bf16_to_f32, f32_to_bf16, HostTensor};
 use transformer_vq::testutil::{check_property, TempDir};
@@ -348,6 +350,96 @@ fn prop_audit_lexer_total_on_arbitrary_bytes() {
         }
         // the rule pass built on it is equally total on garbage
         let _ = audit_file("rust/src/native/garbage.rs", &src);
+    });
+}
+
+/// A structurally valid lane snapshot with rng-chosen leaf values and
+/// serving extras (RNG stream present/absent, UTF-8 remainder, stop tail).
+fn random_lane_snapshot(cfg: &ModelConfig, rng: &mut Rng) -> LaneSnapshot {
+    fn floats(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect()
+    }
+    let w2l = 2 * cfg.block_len;
+    let (h, s) = (cfg.n_heads, cfg.n_code);
+    let layers = (0..cfg.n_layers)
+        .map(|_| LaneLayer {
+            win_k: floats(rng, w2l * h * cfg.d_k),
+            win_v: floats(rng, w2l * h * cfg.d_v),
+            win_z: (0..w2l * h).map(|_| rng.below(s as u64) as i32).collect(),
+            cache_u: floats(rng, h * s * cfg.d_v),
+            cache_l: floats(rng, h * s),
+        })
+        .collect();
+    LaneSnapshot {
+        pos: rng.below(1 << 20) as i32,
+        layers,
+        rng: if rng.below(2) == 0 {
+            Some([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+        } else {
+            None
+        },
+        utf8_pending: (0..rng.below(4)).map(|_| rng.below(256) as u8).collect(),
+        stop_tail: (0..rng.below(9))
+            .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_snapshot_wire_roundtrip_is_identity() {
+    let cfg = preset_config("quickstart").unwrap();
+    check_property("snapshot wire round-trip", 24, |rng| {
+        let lanes: Vec<LaneSnapshot> =
+            (0..1 + rng.below(4)).map(|_| random_lane_snapshot(&cfg, rng)).collect();
+        // lane level: decode(encode(x)) == x and re-encoding is byte-stable
+        let wire = lanes[0].encode(&cfg).unwrap();
+        let back = LaneSnapshot::decode(&cfg, &wire).unwrap();
+        assert_eq!(back, lanes[0], "lane snapshot round-trip changed the value");
+        assert_eq!(back.encode(&cfg).unwrap(), wire, "lane re-encoding is not byte-stable");
+        // session level: same contract over a random lane count
+        let snap = SessionSnapshot { lanes };
+        let wire = snap.encode(&cfg).unwrap();
+        let back = SessionSnapshot::decode(&cfg, &wire).unwrap();
+        assert_eq!(back, snap, "session snapshot round-trip changed the value");
+        assert_eq!(back.encode(&cfg).unwrap(), wire, "session re-encoding is not byte-stable");
+    });
+}
+
+/// Totality: no hostile byte string may panic the decoder, and every
+/// corruption class (truncation, bit flip, garbage, wrong config) must
+/// come back as a clean `Err`. Bit flips are always caught because the
+/// FNV-1a checksum step is a bijection of the running state — any
+/// single-byte change in the payload changes the digest.
+#[test]
+fn prop_snapshot_decode_is_total_on_hostile_bytes() {
+    let cfg = preset_config("quickstart").unwrap();
+    let other = preset_config("ablate-S64").unwrap();
+    check_property("snapshot decode totality", 48, |rng| {
+        let snap = SessionSnapshot { lanes: vec![random_lane_snapshot(&cfg, rng)] };
+        let wire = snap.encode(&cfg).unwrap();
+        let (kind, mangled): (&str, Vec<u8>) = match rng.below(4) {
+            0 => ("truncation", wire[..rng.below(wire.len() as u64) as usize].to_vec()),
+            1 => {
+                let mut w = wire.clone();
+                let bit = rng.below(8 * w.len() as u64);
+                w[(bit / 8) as usize] ^= 1 << (bit % 8);
+                ("bit flip", w)
+            }
+            2 => ("garbage", (0..rng.below(512)).map(|_| rng.below(256) as u8).collect()),
+            _ => {
+                // valid bytes, wrong model: the config guard must reject
+                let err = SessionSnapshot::decode(&other, &wire).unwrap_err();
+                assert!(
+                    err.to_string().contains("config mismatch"),
+                    "wrong-config decode gave the wrong error: {err}"
+                );
+                return;
+            }
+        };
+        let lane_err = LaneSnapshot::decode(&cfg, &mangled);
+        let sess_err = SessionSnapshot::decode(&cfg, &mangled);
+        assert!(lane_err.is_err(), "lane decode accepted {kind}");
+        assert!(sess_err.is_err(), "session decode accepted {kind}");
     });
 }
 

@@ -1,0 +1,403 @@
+//! Bit-identity oracle for session snapshot/restore (DESIGN.md §10).
+//!
+//! The contract under test: a lane's decode state is a fixed-size value
+//! (Thm 3.7), and capturing it — through the whole encode → bytes →
+//! decode → restore pipeline — then continuing must be **bit-identical**
+//! to never having snapshotted at all, at every point of the decode
+//! determinism matrix (SIMD × precision × batched/per-lane × thread
+//! count, swept via [`DecodeAxis`]). On top of the codec, the same oracle
+//! pins the three consumers:
+//!
+//! * lane forking (`fork_lane` / `Sampler::generate_beams`) — a forked
+//!   lane decodes bit-identically to its parent until the token streams
+//!   diverge, and distinct sampling seeds do diverge;
+//! * the prompt-prefix cache — a cache hit (exact or partial) produces
+//!   bit-identical generations to a cold prefill, with LRU eviction and
+//!   weights-change invalidation behaving as documented;
+//! * mid-stream migration — snapshotting in the middle of a UTF-8
+//!   multi-byte sequence and mid-stop-sequence-match, restoring into a
+//!   *different* session, preserves the delta text, the stop step, the
+//!   logit bits, and the RNG stream exactly.
+
+use transformer_vq::native::{preset_config, LaneSnapshot, NativeBackend, SessionSnapshot};
+use transformer_vq::rng::Rng;
+use transformer_vq::runtime::{Backend, StateBundle};
+use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::testutil::{DecodeAxis, TempDir};
+use transformer_vq::tokenizer::Utf8Stream;
+
+fn toks_at(t: i32, b: usize) -> Vec<i32> {
+    (0..b as i32).map(|r| (19 * t + 13 * r) % 251).collect()
+}
+
+fn other_toks(t: i32, b: usize) -> Vec<i32> {
+    (0..b as i32).map(|r| (41 * t + 3 * r + 101) % 251).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The tentpole assertion: snapshot → encode → decode → restore →
+/// continue is bit-identical to straight-through decode, for every
+/// (SIMD × precision × batching × thread-count) combination this machine
+/// can run. Steps past `2L` so the window wraps and the compressive
+/// cache folds at least once before the snapshot point.
+#[test]
+fn snapshot_restore_continues_bit_identically_across_all_axes() {
+    let (k1, k2) = (24i32, 8i32);
+    for axis in DecodeAxis::sweep(&[1, 2, 4]) {
+        let mut straight = axis.session("quickstart").unwrap();
+        let mut source = axis.session("quickstart").unwrap();
+        let b = straight.batch_size();
+        for t in 0..k1 {
+            let toks = toks_at(t, b);
+            straight.step(&toks).unwrap();
+            source.step(&toks).unwrap();
+        }
+        let snap = source.snapshot().unwrap();
+        let wire = snap.encode(source.config()).unwrap();
+        let decoded = SessionSnapshot::decode(source.config(), &wire).unwrap();
+        assert_eq!(decoded, snap, "wire round-trip changed the snapshot ({})", axis.label());
+        let mut restored = axis.session("quickstart").unwrap();
+        restored.restore(&decoded).unwrap();
+        assert_eq!(restored.positions(), straight.positions(), "{}", axis.label());
+        for t in k1..k1 + k2 {
+            let toks = toks_at(t, b);
+            let want = bits(straight.step(&toks).unwrap());
+            let got = bits(restored.step(&toks).unwrap());
+            assert_eq!(
+                got,
+                want,
+                "restored session diverged at step {t} ({})",
+                axis.label()
+            );
+        }
+    }
+}
+
+/// A restored lane's bits must not depend on what its co-resident lanes
+/// hold: restoring a snapshot into a session whose *other* lanes carry a
+/// completely different history leaves the restored lane's logit stream
+/// bit-identical to the uninterrupted original.
+#[test]
+fn restored_lane_is_bit_independent_of_co_resident_lanes() {
+    for batched in [true, false] {
+        let axis = DecodeAxis { batched, ..DecodeAxis::from_env() }.with_threads(1);
+        let mut orig = axis.session("quickstart").unwrap();
+        let b = orig.batch_size();
+        let v = orig.vocab_size();
+        for t in 0..20 {
+            orig.step(&toks_at(t, b)).unwrap();
+        }
+        let snap = orig.snapshot_lane(0).unwrap();
+        // host session: every lane has lived a different life (different
+        // tokens AND a different number of steps)
+        let mut host = axis.session("quickstart").unwrap();
+        for t in 0..13 {
+            host.step(&other_toks(t, b)).unwrap();
+        }
+        host.restore_lane(0, &snap).unwrap();
+        assert_eq!(host.positions()[0], orig.positions()[0], "batched={batched}");
+        for t in 20..28 {
+            // lane 0 sees the same token in both sessions; co-residents differ
+            let orig_t = toks_at(t, b);
+            let mut host_t = other_toks(t, b);
+            host_t[0] = orig_t[0];
+            let want = bits(&orig.step(&orig_t).unwrap()[..v]);
+            let got = bits(&host.step(&host_t).unwrap()[..v]);
+            assert_eq!(
+                got, want,
+                "restored lane 0 influenced by co-residents at step {t} (batched={batched})"
+            );
+        }
+    }
+}
+
+/// `fork_lane` must copy the parent's state exactly: fed identical
+/// tokens, parent and forks stay bitwise equal; fed different tokens,
+/// they diverge (the copy is a copy, not a reference).
+#[test]
+fn forked_lanes_decode_bit_identically_until_streams_diverge() {
+    let axis = DecodeAxis::from_env().with_threads(1);
+    let mut sess = axis.session("quickstart").unwrap();
+    let b = sess.batch_size();
+    let v = sess.vocab_size();
+    // distinct per-lane histories, then fork lane 0 over every other lane
+    for t in 0..20 {
+        sess.step(&toks_at(t, b)).unwrap();
+    }
+    for dst in 1..b {
+        sess.fork_lane(0, dst).unwrap();
+    }
+    assert_eq!(sess.positions(), vec![20; b]);
+    // identical tokens → identical rows, bit for bit
+    for t in 0..6 {
+        let tok = (7 * t + 91) % 251;
+        let logits = sess.step(&vec![tok; b]).unwrap();
+        let row0 = bits(&logits[..v]);
+        for lane in 1..b {
+            assert_eq!(
+                bits(&logits[lane * v..(lane + 1) * v]),
+                row0,
+                "fork of lane 0 diverged at step {t} (lane {lane})"
+            );
+        }
+    }
+    // different tokens → the forks are independent states, not views
+    let toks: Vec<i32> = (0..b as i32).map(|r| 30 + 11 * r).collect();
+    let logits = sess.step(&toks).unwrap();
+    assert_ne!(
+        bits(&logits[..v]),
+        bits(&logits[v..2 * v]),
+        "lanes still agree after divergent tokens — fork is aliasing state"
+    );
+}
+
+/// Beam fan-out through the `Sampler`: with a near-greedy distribution
+/// every beam is bit-identical to the others and to an unforked batch
+/// generation of the same prompt; with real sampling, per-beam seeds
+/// diverge while the whole run stays reproducible.
+#[test]
+fn generate_beams_is_greedy_exact_and_seed_divergent() {
+    let backend = NativeBackend::new();
+    let mut s = Sampler::new(&backend, "quickstart").unwrap();
+    let b = s.batch_size();
+    let prompt: Vec<i32> = (0..12).map(|i| (17 * i + 31) % 251).collect();
+
+    // near-greedy: top_p below any single probability → argmax every step
+    let greedy = SampleParams { temperature: 1.0, top_p: 1e-6 };
+    let beams = s.generate_beams(&prompt, b, 16, greedy, 1234).unwrap();
+    assert_eq!(beams.len(), b);
+    for (i, beam) in beams.iter().enumerate().skip(1) {
+        assert_eq!(beam, &beams[0], "greedy beam {i} diverged from beam 0");
+    }
+    // unforked reference: the same prompt prefilled in every batch row
+    let mut rng = Rng::new(0);
+    let unforked = s.generate(&vec![prompt.clone(); b], 16, greedy, &mut rng).unwrap();
+    assert_eq!(unforked[0], beams[0], "forked beam differs from unforked lane");
+
+    // real sampling: per-beam rng streams must actually diverge...
+    let sampled = SampleParams { temperature: 1.0, top_p: 0.95 };
+    let run1 = s.generate_beams(&prompt, b, 24, sampled, 42).unwrap();
+    assert!(
+        run1.iter().any(|beam| beam != &run1[0]),
+        "distinct per-beam seeds never diverged over 24 tokens"
+    );
+    // ...while the whole fan-out stays a pure function of the seed
+    let run2 = s.generate_beams(&prompt, b, 24, sampled, 42).unwrap();
+    assert_eq!(run1, run2, "generate_beams is not reproducible for a fixed seed");
+}
+
+/// An exact prefix-cache hit and a cold prefill must produce bit-identical
+/// generations (same tokens from the same seed), and the hit/miss
+/// counters must reflect what happened.
+#[test]
+fn prefix_cache_hit_is_bit_identical_to_cold_prefill() {
+    let backend = NativeBackend::new();
+    let mut cold = Sampler::new(&backend, "quickstart").unwrap();
+    let mut cached = Sampler::new(&backend, "quickstart").unwrap();
+    cached.enable_prefix_cache(8);
+    let b = cold.batch_size();
+    let prompts: Vec<Vec<i32>> = (0..b)
+        .map(|row| (0..10 + row as i32).map(|i| (23 * i + 7 * row as i32 + 1) % 251).collect())
+        .collect();
+    let params = SampleParams::default();
+
+    let want = cold.generate(&prompts, 12, params, &mut Rng::new(5)).unwrap();
+    let miss = cached.generate(&prompts, 12, params, &mut Rng::new(5)).unwrap();
+    assert_eq!(miss, want, "cache-enabled cold run differs from cache-off run");
+    let hit = cached.generate(&prompts, 12, params, &mut Rng::new(5)).unwrap();
+    assert_eq!(hit, want, "cache hit not bit-identical to cold prefill");
+
+    let stats = cached.prefix_cache_stats().unwrap();
+    assert_eq!(stats.misses, b as u64, "first run must miss on every row");
+    assert_eq!(stats.hits, b as u64, "second run must hit exactly on every row");
+    let total_prompt: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+    assert_eq!(stats.hit_tokens, total_prompt);
+}
+
+/// A partial hit restores the cached prefix and prefills only the suffix;
+/// the result is still bit-identical to a cold prefill of the full prompt.
+#[test]
+fn partial_prefix_hit_prefills_only_the_suffix() {
+    let backend = NativeBackend::new();
+    let mut cold = Sampler::new(&backend, "quickstart").unwrap();
+    let mut cached = Sampler::new(&backend, "quickstart").unwrap();
+    cached.enable_prefix_cache(8);
+    let b = cold.batch_size();
+    let base: Vec<i32> = (0..20).map(|i| (29 * i + 3) % 251).collect();
+    let mut extended = base.clone();
+    extended.extend((0..8).map(|i| (31 * i + 5) % 251));
+    let params = SampleParams::default();
+
+    cached.generate(&vec![base.clone(); b], 4, params, &mut Rng::new(1)).unwrap();
+    let want = cold.generate(&vec![extended.clone(); b], 12, params, &mut Rng::new(2)).unwrap();
+    let got = cached.generate(&vec![extended.clone(); b], 12, params, &mut Rng::new(2)).unwrap();
+    assert_eq!(got, want, "partial-prefix hit not bit-identical to cold prefill");
+
+    let stats = cached.prefix_cache_stats().unwrap();
+    assert_eq!(stats.partial_hits, b as u64, "every row should hit the base prefix");
+    assert_eq!(stats.hit_tokens, (b * base.len()) as u64);
+}
+
+/// Capacity pressure evicts the least-recently-used prompt, and loading a
+/// checkpoint invalidates everything (a snapshot taken under old weights
+/// must never serve the new model — that would be a wrong-bits hit).
+#[test]
+fn prefix_cache_lru_evicts_and_load_weights_invalidates() {
+    let backend = NativeBackend::new();
+    let mut s = Sampler::new(&backend, "quickstart").unwrap();
+    s.enable_prefix_cache(1);
+    let b = s.batch_size();
+    let params = SampleParams::default();
+    let prompt_a: Vec<i32> = (0..8).map(|i| 10 + i).collect();
+    let prompt_b: Vec<i32> = (0..8).map(|i| 100 + i).collect();
+
+    s.generate(&vec![prompt_a.clone(); b], 2, params, &mut Rng::new(1)).unwrap();
+    s.generate(&vec![prompt_b.clone(); b], 2, params, &mut Rng::new(1)).unwrap();
+    assert!(
+        s.prefix_cache_stats().unwrap().evictions >= 1,
+        "capacity-1 cache never evicted across two distinct prompts"
+    );
+    // prompt A was evicted: this run must miss, not hit
+    let misses_before = s.prefix_cache_stats().unwrap().misses;
+    s.generate(&vec![prompt_a.clone(); b], 2, params, &mut Rng::new(1)).unwrap();
+    assert!(
+        s.prefix_cache_stats().unwrap().misses > misses_before,
+        "evicted prompt still produced a cache hit"
+    );
+
+    // weights-change invalidation: a checkpoint with different weights
+    // clears the cache, and post-load output matches a cold sampler with
+    // the same checkpoint
+    let cfg = preset_config("quickstart").unwrap();
+    let alt = NativeBackend::with_preset("snapck", cfg, 0xBEEF);
+    let exe = alt.load("snapck.decode").unwrap();
+    let mut bundle = StateBundle::zeros_for(exe.spec());
+    bundle.set_named(alt.init_state("snapck").unwrap());
+    let dir = TempDir::new();
+    let ckpt = dir.join("state.tvq");
+    bundle.save_groups(&ckpt, exe.spec(), &["params", "cb"]).unwrap();
+
+    s.generate(&vec![prompt_b.clone(); b], 2, params, &mut Rng::new(1)).unwrap();
+    s.load_weights(&ckpt).unwrap();
+    let hits_before = s.prefix_cache_stats().unwrap().hits;
+    let got = s.generate(&vec![prompt_b.clone(); b], 8, params, &mut Rng::new(3)).unwrap();
+    assert_eq!(
+        s.prefix_cache_stats().unwrap().hits,
+        hits_before,
+        "stale pre-checkpoint snapshot served after load_weights"
+    );
+    let mut cold = Sampler::new(&backend, "quickstart").unwrap();
+    cold.load_weights(&ckpt).unwrap();
+    let want = cold.generate(&vec![prompt_b.clone(); b], 8, params, &mut Rng::new(3)).unwrap();
+    assert_eq!(got, want, "post-checkpoint generation differs from cold sampler");
+}
+
+/// Mid-stream migration: snapshot a lane in the middle of a UTF-8
+/// multi-byte sequence AND mid-way through a stop-sequence match, move it
+/// through the wire format into a *different* session, and continue. The
+/// concatenated delta text, the step at which the stop sequence fires,
+/// the logit bits, and the RNG stream must all be identical to the
+/// uninterrupted run.
+#[test]
+fn mid_stream_migration_preserves_text_stop_and_rng() {
+    let axis = DecodeAxis::from_env().with_threads(1);
+    let text = "héllo 🎉 héllo 🎉!";
+    let script: Vec<i32> = text.bytes().map(i32::from).collect();
+    let stop_seq: Vec<i32> = "🎉!".bytes().map(i32::from).collect();
+    // cut two bytes into the *second* 🎉: the UTF-8 decoder holds a
+    // partial code point and the stop matcher is mid-match
+    let emoji_start = text.char_indices().filter(|(_, c)| *c == '🎉').nth(1).unwrap().0;
+    let cut = emoji_start + 2;
+
+    // teacher-forced serving loop over lane 0 (co-resident lanes idle on
+    // token 0), tracking exactly what the engine tracks per lane
+    struct Lane {
+        sess: transformer_vq::native::DecodeSession,
+        utf8: Utf8Stream,
+        rng: Rng,
+        generated: Vec<i32>,
+        text: String,
+        stop_step: Option<usize>,
+        logit_bits: Vec<u32>,
+    }
+    impl Lane {
+        fn feed(&mut self, i: usize, tok: i32, stop_seq: &[i32], v: usize) {
+            let b = self.sess.batch_size();
+            let mut toks = vec![0i32; b];
+            toks[0] = tok;
+            let logits = self.sess.step(&toks).unwrap();
+            self.logit_bits.extend(logits[..v].iter().map(|x| x.to_bits()));
+            // consume one rng draw per step, like a sampling loop would
+            self.rng.next_u64();
+            self.generated.push(tok);
+            self.text.push_str(&self.utf8.push(tok as u8));
+            if self.stop_step.is_none() && self.generated.ends_with(stop_seq) {
+                self.stop_step = Some(i);
+            }
+        }
+    }
+    let lane = |seed: u64| Lane {
+        sess: axis.session("quickstart").unwrap(),
+        utf8: Utf8Stream::new(),
+        rng: Rng::new(seed),
+        generated: Vec::new(),
+        text: String::new(),
+        stop_step: None,
+        logit_bits: Vec::new(),
+    };
+    let v = axis.session("quickstart").unwrap().vocab_size();
+
+    // uninterrupted reference
+    let mut a = lane(0xFACE);
+    for (i, &tok) in script.iter().enumerate() {
+        a.feed(i, tok, &stop_seq, v);
+    }
+    assert_eq!(a.text, text, "utf8 stream must reassemble the script");
+    assert_eq!(a.stop_step, Some(script.len() - 1), "stop seq must fire on the last byte");
+
+    // migrated run: same lane up to `cut`, then snapshot → wire → restore
+    // into a fresh session and fresh stream state
+    let mut b1 = lane(0xFACE);
+    for (i, &tok) in script[..cut].iter().enumerate() {
+        b1.feed(i, tok, &stop_seq, v);
+    }
+    assert!(!b1.utf8.pending().is_empty(), "cut must land mid-code-point");
+    let cfg = b1.sess.config().clone();
+    let mut snap = b1.sess.snapshot_lane(0).unwrap();
+    snap.rng = Some(b1.rng.state());
+    snap.utf8_pending = b1.utf8.pending().to_vec();
+    // carry just enough generated tail to resume stop matching
+    let tail_len = (stop_seq.len() - 1).min(b1.generated.len());
+    snap.stop_tail = b1.generated[b1.generated.len() - tail_len..].to_vec();
+    let wire = snap.encode(&cfg).unwrap();
+    let snap2 = LaneSnapshot::decode(&cfg, &wire).unwrap();
+    assert_eq!(snap2, snap, "lane wire round-trip changed the snapshot");
+
+    let mut b2 = lane(0); // everything below is overwritten by the restore
+    b2.sess.restore_lane(0, &snap2).unwrap();
+    b2.utf8 = Utf8Stream::from_pending(&snap2.utf8_pending);
+    b2.rng = Rng::from_state(snap2.rng.unwrap());
+    b2.generated = snap2.stop_tail.clone();
+    for (i, &tok) in script.iter().enumerate().skip(cut) {
+        b2.feed(i, tok, &stop_seq, v);
+    }
+    assert_eq!(
+        b1.text.clone() + &b2.text,
+        a.text,
+        "migrated deltas do not concatenate to the uninterrupted text"
+    );
+    assert_eq!(b2.stop_step, a.stop_step, "stop fired at a different step after migration");
+    assert_eq!(
+        [b1.logit_bits, b2.logit_bits].concat(),
+        a.logit_bits,
+        "migrated logit stream diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        b2.rng.next_u64(),
+        a.rng.next_u64(),
+        "restored rng is not continuing the original stream"
+    );
+}
