@@ -1,0 +1,354 @@
+//! Skewed-load traffic bench for the multi-replica serving fleet
+//! (DESIGN.md §11): a session-affinity router over N engine replicas,
+//! driven by Zipf-distributed prompt popularity and request lengths from
+//! many concurrent connections.
+//!
+//! Phase 1 pins correctness under routing: a fixed-seed request set runs
+//! once through a single engine and once through the fleet — outputs must
+//! be bit-identical, including across a forced mid-stream migration
+//! (evict at a token boundary, restore on another replica, continue).
+//!
+//! Phase 2 is the load test: `conns` client connections, each issuing
+//! `reqs_per_conn` streaming requests over TCP against the fleet server.
+//! Prompt choice follows Zipf(s=1.1) over a 64-prompt pool (popular
+//! prompts concentrate on their affinity replica's prefix state),
+//! completion lengths follow Zipf(s=1.2) over [8, 96] (short requests
+//! dominate, a heavy tail runs long), and a slice of requests carries
+//! tight deadlines so admission control has something to shed. A driver
+//! thread calls `rebalance()` throughout, so live migrations happen under
+//! fire. Reports saturation decode throughput, TTFT p50/p95/p99, shed
+//! rate, and migration counts.
+//!
+//! Emits `BENCH_native_fleet.json` (path overridable) — the fourth CI
+//! perf artifact, next to decode/train/serve.
+//!
+//! Usage: cargo run --release --example fleetbench --
+//!        [preset] [replicas] [conns] [reqs_per_conn] [out.json]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+use transformer_vq::coordinator::{
+    serve_on, Client, Engine, EventFrame, Frontend, GenRequest, GenerateFrame, RequestEvents,
+};
+use transformer_vq::data::{ZipfLengths, ZipfSampler};
+use transformer_vq::fleet::{Fleet, FleetHandle, FleetOptions};
+use transformer_vq::json::Json;
+use transformer_vq::native::NativeBackend;
+use transformer_vq::rng::Rng;
+use transformer_vq::sample::{SampleParams, Sampler};
+
+/// Deterministic 64-prompt pool, ordered hot-first (rank 0 = most popular).
+fn prompt_pool() -> Vec<String> {
+    (0..64)
+        .map(|i| {
+            let stem = match i % 4 {
+                0 => "the cache holds",
+                1 => "attention over codes",
+                2 => "linear time decode",
+                _ => "quantized keys",
+            };
+            format!("{stem} #{i:02} ")
+        })
+        .collect()
+}
+
+fn spawn_fleet(
+    preset: &str,
+    replicas: usize,
+    queue_depth: usize,
+) -> Result<(FleetHandle, transformer_vq::fleet::FleetJoin)> {
+    let preset = preset.to_string();
+    let opts = FleetOptions { replicas, queue_depth, shed_deadline_ms: Some(5) };
+    Fleet::spawn(
+        opts,
+        move |_replica| Sampler::new(&NativeBackend::new(), &preset),
+        42,
+    )
+}
+
+fn req(prompt: &str, max_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt: prompt.bytes().map(i32::from).collect(),
+        max_tokens,
+        params: SampleParams::default(),
+        seed: Some(seed),
+        ..GenRequest::default()
+    }
+}
+
+/// Phase 1: fixed-seed outputs must not depend on routing — or on a forced
+/// mid-stream migration.
+fn identity_phase(preset: &str, replicas: usize) -> Result<()> {
+    let pool = prompt_pool();
+    let cases: Vec<(String, usize, u64)> = (0..6)
+        .map(|i| (pool[i * 7 % pool.len()].clone(), 24 + 8 * (i % 3), 1000 + i as u64))
+        .collect();
+
+    // reference: one bare engine
+    let preset_c = preset.to_string();
+    let (engine, ejoin) =
+        Engine::spawn(move || Sampler::new(&NativeBackend::new(), &preset_c), 42)?;
+    let mut want = Vec::new();
+    for (p, n, s) in &cases {
+        let rh = engine.submit(req(p, *n, *s)).map_err(|e| anyhow::anyhow!(e))?;
+        want.push(rh.wait_outcome().map_err(|e| anyhow::anyhow!(e))?.tokens);
+    }
+    engine.shutdown();
+    let _ = ejoin.join();
+
+    // fleet, plain routing
+    let (fleet, join) = spawn_fleet(preset, replicas, 8)?;
+    for (i, (p, n, s)) in cases.iter().enumerate() {
+        let rh = fleet
+            .submit_session(&format!("ident-{i}"), req(p, *n, *s))
+            .map_err(|e| anyhow::anyhow!("{:?}", e))?;
+        let got = rh.wait_outcome().map_err(|e| anyhow::anyhow!(e))?.tokens;
+        anyhow::ensure!(got == want[i], "fleet output diverged from single engine (case {i})");
+    }
+
+    // fleet, forced mid-stream migration: start a long request, read one
+    // delta, bounce the session to every other replica in turn, drain
+    let (p, _, s) = &cases[0];
+    let long = req(p, 48, *s);
+    let session = "ident-migrate";
+    let rh = fleet
+        .submit_session(session, long.clone())
+        .map_err(|e| anyhow::anyhow!("{:?}", e))?;
+    let mut got = Vec::new();
+    let mut moved = 0usize;
+    loop {
+        match rh.recv_event().map_err(|e| anyhow::anyhow!(e))? {
+            transformer_vq::coordinator::GenEvent::Delta { token, .. } => {
+                got.push(token);
+                if moved < replicas.max(2) {
+                    let dst = (fleet.session_replica(session).unwrap_or(0) + 1) % replicas;
+                    if fleet.migrate(session, dst).map_err(|e| anyhow::anyhow!(e))? {
+                        moved += 1;
+                    }
+                }
+            }
+            transformer_vq::coordinator::GenEvent::Done(o) => {
+                anyhow::ensure!(o.tokens == got, "deltas disagree with final tokens");
+                break;
+            }
+            transformer_vq::coordinator::GenEvent::Error(e) => anyhow::bail!(e),
+            transformer_vq::coordinator::GenEvent::Started { .. } => {}
+        }
+    }
+    anyhow::ensure!(moved >= 1, "migration never happened — oracle did not exercise the move");
+    // the migrated stream must equal the same request run without moving
+    let rh = fleet
+        .submit_session("ident-stay", long)
+        .map_err(|e| anyhow::anyhow!("{:?}", e))?;
+    let stay = rh.wait_outcome().map_err(|e| anyhow::anyhow!(e))?.tokens;
+    anyhow::ensure!(got == stay, "mid-stream migration changed sampled tokens");
+
+    let migrations = fleet.stats().migrations;
+    fleet.shutdown_all();
+    let _ = join.join();
+    println!(
+        "identity: fleet == engine on {} cases; {migrations} forced migrations bit-identical",
+        cases.len()
+    );
+    Ok(())
+}
+
+struct ConnReport {
+    ttfts_ms: Vec<f64>,
+    tokens: usize,
+    completed: usize,
+    shed: usize,
+    errors: usize,
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "quickstart".into());
+    let replicas: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let conns: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let reqs_per_conn: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let out_path = args.get(4).map(String::as_str).unwrap_or("BENCH_native_fleet.json");
+    anyhow::ensure!(replicas >= 2, "fleetbench needs at least 2 replicas");
+
+    eprintln!("fleetbench: {preset}, {replicas} replicas, {conns} conns x {reqs_per_conn} reqs");
+    identity_phase(&preset, replicas)?;
+
+    // --- phase 2: skewed traffic over TCP ----------------------------------
+    let (fleet, join) = spawn_fleet(&preset, replicas, 4)?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || serve_on(listener, fleet, Some(sd_rx)))
+    };
+    // rebalance driver: migrations under fire
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = {
+        let fleet = fleet.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let _ = fleet.rebalance();
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        })
+    };
+
+    let pool = Arc::new(prompt_pool());
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    for c in 0..conns {
+        let addr = addr.clone();
+        let pool = Arc::clone(&pool);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let run = || -> Result<ConnReport> {
+                // per-connection deterministic traffic trace
+                let mut rng = Rng::new(9000 + c as u64);
+                let popularity = ZipfSampler::new(pool.len(), 1.1)?;
+                let lengths = ZipfLengths::new(8, 96, 1.2)?;
+                let mut rep = ConnReport {
+                    ttfts_ms: Vec::new(),
+                    tokens: 0,
+                    completed: 0,
+                    shed: 0,
+                    errors: 0,
+                };
+                let mut client = Client::connect(&addr)?;
+                for r in 0..reqs_per_conn {
+                    let prompt = &pool[popularity.sample(&mut rng)];
+                    let mut frame = GenerateFrame::new(
+                        format!("c{c}-r{r}"),
+                        prompt.clone(),
+                        lengths.sample(&mut rng),
+                    );
+                    frame.seed = Some(rng.next_u64());
+                    if r % 7 == 3 {
+                        // a slice of traffic is latency-critical: under
+                        // queueing these shed with a typed reason
+                        frame.deadline_ms = Some(2);
+                    }
+                    let t_submit = Instant::now();
+                    client.generate(&frame)?;
+                    let mut ttft = None;
+                    loop {
+                        match client.next_event()? {
+                            EventFrame::Delta { token: _, .. } => {
+                                ttft.get_or_insert_with(|| {
+                                    t_submit.elapsed().as_secs_f64() * 1e3
+                                });
+                            }
+                            EventFrame::Done { tokens, .. } => {
+                                rep.tokens += tokens.len();
+                                rep.completed += 1;
+                                if let Some(ms) = ttft {
+                                    rep.ttfts_ms.push(ms);
+                                }
+                                break;
+                            }
+                            EventFrame::Error { reason, .. } => {
+                                if reason.as_deref().is_some_and(|r| r.starts_with("shed")) {
+                                    rep.shed += 1;
+                                } else {
+                                    rep.errors += 1;
+                                }
+                                break;
+                            }
+                            EventFrame::Started { .. }
+                            | EventFrame::Stats(_)
+                            | EventFrame::FleetStats(_) => {}
+                        }
+                    }
+                }
+                Ok(rep)
+            };
+            tx.send(run()).unwrap();
+        });
+    }
+    drop(tx);
+
+    let mut ttfts: Vec<f64> = Vec::new();
+    let (mut tokens, mut completed, mut shed, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    while let Ok(r) = rx.recv() {
+        let rep = r?;
+        ttfts.extend(rep.ttfts_ms);
+        tokens += rep.tokens;
+        completed += rep.completed;
+        shed += rep.shed;
+        errors += rep.errors;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Release);
+    let _ = driver.join();
+    let fs = fleet.stats();
+    let _ = sd_tx.send(());
+    server.join().expect("server thread")?;
+    let per_replica = join.join();
+
+    anyhow::ensure!(errors == 0, "{errors} non-shed request errors under load");
+    let issued = conns * reqs_per_conn;
+    anyhow::ensure!(completed + shed == issued, "lost requests: {completed}+{shed} != {issued}");
+
+    ttfts.sort_by(|a, b| a.partial_cmp(b).expect("no NaN ttft"));
+    let pct = |p: f64| -> f64 {
+        if ttfts.is_empty() {
+            return 0.0;
+        }
+        ttfts[((ttfts.len() - 1) as f64 * p) as usize]
+    };
+    let (p50, p95, p99) = (pct(0.50), pct(0.95), pct(0.99));
+    let decode_tokens: u64 = per_replica.iter().map(|s| s.decode_tokens).sum();
+    let tps = decode_tokens as f64 / wall;
+    let shed_rate = shed as f64 / issued as f64;
+    let affinity_rate = fs.affinity_hits as f64 / fs.sessions_routed.max(1) as f64;
+
+    println!("traffic: {issued} requests over {conns} conns in {wall:.2}s");
+    println!("  completed {completed}, shed {shed} ({:.1}%)", shed_rate * 100.0);
+    println!("  saturation decode: {tps:.0} tok/s across {replicas} replicas");
+    println!("  TTFT p50 {p50:.1} ms, p95 {p95:.1} ms, p99 {p99:.1} ms");
+    println!(
+        "  router: {} routed ({:.0}% affinity), {} migrations ({} failed)",
+        fs.sessions_routed,
+        affinity_rate * 100.0,
+        fs.migrations,
+        fs.migration_failed
+    );
+    for (i, s) in per_replica.iter().enumerate() {
+        println!(
+            "  replica {i}: {} completed, {} decode tokens, {} in / {} out migrations",
+            s.requests_completed, s.decode_tokens, s.migrated_in, s.migrated_out
+        );
+    }
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("native_fleet")),
+        ("preset", Json::str(&preset)),
+        ("replicas", Json::num(replicas as f64)),
+        ("conns", Json::num(conns as f64)),
+        ("reqs_per_conn", Json::num(reqs_per_conn as f64)),
+        ("wall_s", Json::num(wall)),
+        ("requests_issued", Json::num(issued as f64)),
+        ("requests_completed", Json::num(completed as f64)),
+        ("requests_shed", Json::num(shed as f64)),
+        ("shed_rate", Json::num(shed_rate)),
+        ("client_tokens", Json::num(tokens as f64)),
+        ("decode_tok_s", Json::num(tps)),
+        ("ttft_ms_p50", Json::num(p50)),
+        ("ttft_ms_p95", Json::num(p95)),
+        ("ttft_ms_p99", Json::num(p99)),
+        ("sessions_routed", Json::num(fs.sessions_routed as f64)),
+        ("affinity_rate", Json::num(affinity_rate)),
+        ("migrations", Json::num(fs.migrations as f64)),
+        ("migration_failed", Json::num(fs.migration_failed as f64)),
+        ("shed_queue_full", Json::num(fs.shed_queue_full as f64)),
+        ("shed_deadline", Json::num(fs.shed_deadline as f64)),
+    ]);
+    std::fs::write(out_path, j.dump())?;
+    println!("wrote {out_path}");
+    println!("fleetbench OK");
+    Ok(())
+}

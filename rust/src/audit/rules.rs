@@ -351,6 +351,7 @@ fn zero_alloc_scope(rel: &str, fn_name: &str) -> bool {
 
 fn on_serving_path(rel: &str) -> bool {
     rel.starts_with("rust/src/coordinator/")
+        || rel.starts_with("rust/src/fleet/")
         || rel.starts_with("rust/src/sample/")
         || rel.starts_with("rust/src/tokenizer/")
 }
@@ -385,8 +386,14 @@ pub fn audit_file(rel: &str, src: &str) -> FileAudit {
         }
     }
 
-    // R2 determinism: hot-path modules
-    if rel.starts_with("rust/src/native/") {
+    // R2 determinism: hot-path modules. native/* bans HashMap/HashSet,
+    // Instant, and spawn. fleet/* bans HashMap/HashSet only — routing
+    // decisions (rebalance victim order, session iteration) must be
+    // reproducible, but admission deadlines are wall-clock by contract
+    // and the fleet spawns no threads itself (Engine::spawn does).
+    let r2_native = rel.starts_with("rust/src/native/");
+    let r2_fleet = rel.starts_with("rust/src/fleet/");
+    if r2_native || r2_fleet {
         for i in 0..nt {
             let t = &m.toks[i];
             if t.kind != Kind::Ident || m.in_test[i] {
@@ -402,13 +409,13 @@ pub fn audit_file(rel: &str, src: &str) -> FileAudit {
                         t.text
                     ),
                 ),
-                "Instant" => push(
+                "Instant" if r2_native => push(
                     t.line,
                     "determinism",
                     "`Instant` in a hot-path module (wall-clock reads are nondeterministic)"
                         .to_string(),
                 ),
-                "spawn" if rel != "rust/src/native/kernels.rs" => push(
+                "spawn" if r2_native && rel != "rust/src/native/kernels.rs" => push(
                     t.line,
                     "determinism",
                     "thread spawn outside the kernels.rs pool".to_string(),
@@ -708,6 +715,27 @@ fn f() {
     }
 
     #[test]
+    fn r2_fleet_bans_hash_collections_but_not_wall_clock_or_spawn() {
+        // routing tables must iterate deterministically -> HashMap fires
+        let hashy = "\
+use std::collections::HashMap;
+fn f() { let _m: HashMap<u32, u32> = HashMap::new(); }
+";
+        let fa = audit_file("rust/src/fleet/router.rs", hashy);
+        assert_eq!(rules_of(&fa), vec!["determinism"; 3], "{:?}", fa.findings);
+        // admission deadlines are wall-clock by contract, and the fleet
+        // delegates all thread spawning to Engine::spawn
+        let clocky = "\
+fn f() {
+    let _t = std::time::Instant::now();
+    let _h = crate::coordinator::Engine::spawn(|| panic_free(), 0);
+}
+";
+        let fa = audit_file("rust/src/fleet/router.rs", clocky);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
     fn r2_allows_spawn_in_the_pool_and_is_suppressible() {
         let src = "fn f() { std::thread::spawn(|| {}); }\n";
         assert!(audit_file("rust/src/native/kernels.rs", src).findings.is_empty());
@@ -798,6 +826,7 @@ fn f(o: Option<u32>) -> u32 {
 ";
         for rel in [
             "rust/src/coordinator/server.rs",
+            "rust/src/fleet/router.rs",
             "rust/src/sample/mod.rs",
             "rust/src/tokenizer/bpe.rs",
         ] {

@@ -25,7 +25,7 @@
 //! [`EngineStats`] through the engine thread's join handle.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -141,16 +141,25 @@ impl CancelToken {
 }
 
 /// Caller-side handle to one submitted request: an event receiver plus the
-/// cancellation flag.
+/// cancellation flag and the engine-assigned session key (the identity a
+/// fleet router uses to evict/migrate the live session).
 pub struct RequestHandle {
     events: mpsc::Receiver<GenEvent>,
     cancel: CancelToken,
+    key: u64,
 }
 
 impl RequestHandle {
     /// Next event (blocking). Errors only if the engine died.
     pub fn recv(&self) -> Result<GenEvent, String> {
         self.events.recv().map_err(|_| "engine dropped request".to_string())
+    }
+
+    /// Process-unique session key assigned at submission. Stable across
+    /// migrations: [`EngineHandle::evict`] on whichever replica currently
+    /// hosts the session finds it by this key.
+    pub fn key(&self) -> u64 {
+        self.key
     }
 
     pub fn cancel(&self) {
@@ -199,6 +208,17 @@ pub struct EngineStats {
     /// Snapshot-only (stats queries): queue depth / occupied slots now.
     pub queued: u64,
     pub active: u64,
+    /// Snapshot-only: slot capacity (`Sampler::batch_size`) — with `active`
+    /// and `queued` this makes router admission decisions reproducible
+    /// from a stats frame alone.
+    pub slots: u64,
+    /// Snapshot-only occupancy split: slots still ingesting their prompt
+    /// vs. slots sampling tokens.
+    pub active_prefill: u64,
+    pub active_decode: u64,
+    /// Sessions received from / handed to another replica (live migration).
+    pub migrated_in: u64,
+    pub migrated_out: u64,
 }
 
 impl EngineStats {
@@ -221,17 +241,74 @@ impl EngineStats {
 enum Msg {
     Submit(Pending),
     Stats(mpsc::Sender<EngineStats>),
+    /// Pull a live session out of this engine at the next token boundary
+    /// (slot state encoded via the snapshot wire format, or the bare
+    /// request if it was still queued). `Ok(None)` = no such session here.
+    Evict { key: u64, reply: mpsc::Sender<Result<Option<Box<MigratedSession>>, String>> },
+    /// Seat a session evicted from another replica.
+    Inject(Box<MigratedSession>),
+    /// Test/chaos hook: die *without* draining, as a crashed replica
+    /// thread would — clients observe dropped event channels, not Done.
+    Crash,
     Shutdown,
 }
 
+/// Process-global session key source: keys stay unique even when a session
+/// migrates onto a replica whose own submissions also mint keys.
+static NEXT_KEY: AtomicU64 = AtomicU64::new(1);
+
 struct Pending {
+    key: u64,
     req: GenRequest,
     tx: mpsc::Sender<GenEvent>,
     cancel: CancelToken,
     enqueued: Instant,
 }
 
+/// A live session in transit between engines: everything the engine keeps
+/// per slot, with the lane's numeric state flattened to the checksummed
+/// snapshot wire format (`native/snapshot.rs`). The sampling [`Rng`] moves
+/// by value — the stream continues bit-identically on the target. The
+/// client's event channel sender rides along, so the stream never skips or
+/// repeats a delta.
+pub struct MigratedSession {
+    pub key: u64,
+    pub req: GenRequest,
+    pub tx: mpsc::Sender<GenEvent>,
+    pub cancel: CancelToken,
+    pub enqueued: Instant,
+    pub started: Instant,
+    pub deadline: Option<Instant>,
+    pub prompt_pos: usize,
+    pub generated: Vec<i32>,
+    pub current: i32,
+    pub decoding: bool,
+    pub ttft_ms: Option<f64>,
+    pub rng: Rng,
+    /// Encoded lane state ([`crate::native::LaneSnapshot`] wire bytes);
+    /// `None` when the session was evicted from the queue before ever
+    /// taking a slot (it re-enters admission on the target).
+    pub lane_wire: Option<Vec<u8>>,
+}
+
+/// Queue entry: a fresh submission, or a mid-flight session migrated in
+/// while every slot was busy.
+enum Queued {
+    Fresh(Pending),
+    Resumed(Box<MigratedSession>),
+}
+
+impl Queued {
+    fn key(&self) -> u64 {
+        match self {
+            Queued::Fresh(p) => p.key,
+            Queued::Resumed(m) => m.key,
+        }
+    }
+}
+
 struct Slot {
+    key: u64,
     req: GenRequest,
     tx: mpsc::Sender<GenEvent>,
     cancel: CancelToken,
@@ -288,12 +365,13 @@ impl EngineHandle {
     pub fn submit(&self, req: GenRequest) -> Result<RequestHandle, String> {
         let (tx, rx) = mpsc::channel();
         let cancel = CancelToken(Arc::new(AtomicBool::new(false)));
+        let key = NEXT_KEY.fetch_add(1, Ordering::Relaxed);
         let pending =
-            Pending { req, tx, cancel: cancel.clone(), enqueued: Instant::now() };
+            Pending { key, req, tx, cancel: cancel.clone(), enqueued: Instant::now() };
         self.tx
             .send(Msg::Submit(pending))
             .map_err(|_| "engine shut down".to_string())?;
-        Ok(RequestHandle { events: rx, cancel })
+        Ok(RequestHandle { events: rx, cancel, key })
     }
 
     /// Submit and block for completion (v1 one-shot semantics). Requests
@@ -313,6 +391,40 @@ impl EngineHandle {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Msg::Stats(tx)).map_err(|_| "engine shut down".to_string())?;
         rx.recv().map_err(|_| "engine shut down".to_string())
+    }
+
+    /// Pull the live session with this key out of the engine at its next
+    /// token boundary. `Ok(Some(_))` hands over the session (the engine
+    /// forgets it; the caller must [`EngineHandle::inject`] it somewhere or
+    /// drop the client's stream). `Ok(None)` = no such session (already
+    /// finished). `Err` = the snapshot failed and the session *keeps
+    /// running in place* — migration failure never harms the stream.
+    pub fn evict(&self, key: u64) -> Result<Option<Box<MigratedSession>>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Evict { key, reply })
+            .map_err(|_| "engine shut down".to_string())?;
+        rx.recv().map_err(|_| "engine shut down".to_string())?
+    }
+
+    /// Seat a session evicted from another replica. On failure (engine shut
+    /// down) the session is handed back so the caller can re-home it.
+    pub fn inject(&self, m: Box<MigratedSession>) -> Result<(), Box<MigratedSession>> {
+        match self.tx.send(Msg::Inject(m)) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(Msg::Inject(m))) => Err(m),
+            // send() hands back exactly the message we constructed above,
+            // so this arm cannot run; Ok keeps the match total without a
+            // panic on the serving path
+            Err(mpsc::SendError(_)) => Ok(()),
+        }
+    }
+
+    /// Chaos hook: make the engine thread exit *without* draining, the way
+    /// a crashed replica would. In-flight clients see their event channel
+    /// drop (a recv error), not a graceful `Done`.
+    pub fn crash(&self) {
+        let _ = self.tx.send(Msg::Crash);
     }
 
     /// Ask the engine to drain: in-flight and queued requests finish with
@@ -360,11 +472,47 @@ impl Engine {
     }
 }
 
+/// What the control loop should do after one message.
+enum MsgOutcome {
+    Handled,
+    /// Graceful shutdown (already drained) or crash (deliberately not
+    /// drained) — either way the engine thread returns its stats now.
+    Exit,
+}
+
+/// One control message, shared by the non-blocking drain and the idle
+/// blocking receive. Messages are only processed here — at a token
+/// boundary — which is what makes eviction snapshots consistent.
+fn handle_msg(
+    msg: Msg,
+    sampler: &mut Sampler,
+    slots: &mut [Option<Slot>],
+    queue: &mut VecDeque<Queued>,
+    stats: &mut EngineStats,
+) -> MsgOutcome {
+    match msg {
+        Msg::Submit(p) => queue.push_back(Queued::Fresh(p)),
+        Msg::Stats(tx) => {
+            let _ = tx.send(snapshot(stats, slots, queue));
+        }
+        Msg::Evict { key, reply } => {
+            let _ = reply.send(evict_session(key, sampler, slots, queue, stats));
+        }
+        Msg::Inject(m) => inject_session(m, queue),
+        Msg::Crash => return MsgOutcome::Exit,
+        Msg::Shutdown => {
+            drain_shutdown(slots, queue, stats);
+            return MsgOutcome::Exit;
+        }
+    }
+    MsgOutcome::Handled
+}
+
 fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats {
     let b = sampler.batch_size();
     let chunk = sampler.prefill_chunk().max(1);
     let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
-    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut stats = EngineStats::default();
     let mut rng_root = Rng::new(seed);
     let mut disconnected = false;
@@ -374,13 +522,11 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
         // --- drain the control channel without blocking -------------------
         loop {
             match rx.try_recv() {
-                Ok(Msg::Submit(p)) => queue.push_back(p),
-                Ok(Msg::Stats(tx)) => {
-                    let _ = tx.send(snapshot(&stats, &slots, &queue));
-                }
-                Ok(Msg::Shutdown) => {
-                    drain_shutdown(&mut slots, &mut queue, &mut stats);
-                    return stats;
+                Ok(msg) => {
+                    match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats) {
+                        MsgOutcome::Handled => {}
+                        MsgOutcome::Exit => return stats,
+                    }
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -393,17 +539,29 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
         // --- cancellations and deadlines at the step boundary -------------
         // (queued requests too: a deadline is a latency bound from
         // submission, so it must fire even while waiting for a slot)
-        queue.retain(|p| {
-            let reason = if p.cancel.is_cancelled() {
+        queue.retain(|q| {
+            let (cancelled, expired) = match q {
+                Queued::Fresh(p) => (
+                    p.cancel.is_cancelled(),
+                    p.req.deadline.is_some_and(|d| Instant::now() >= p.enqueued + d),
+                ),
+                Queued::Resumed(m) => {
+                    (m.cancel.is_cancelled(), m.deadline.is_some_and(|d| Instant::now() >= d))
+                }
+            };
+            let reason = if cancelled {
                 Some(FinishReason::Cancelled)
-            } else if p.req.deadline.is_some_and(|d| Instant::now() >= p.enqueued + d) {
+            } else if expired {
                 Some(FinishReason::Deadline)
             } else {
                 None
             };
             match reason {
                 Some(r) => {
-                    finish_pending(p, r, &mut stats);
+                    match q {
+                        Queued::Fresh(p) => finish_pending(p, r, &mut stats),
+                        Queued::Resumed(m) => finish_resumed(m, r, &mut stats),
+                    }
                     false
                 }
                 None => true,
@@ -429,8 +587,11 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
         // slot stays free and the next queued request must not be stranded
         for i in 0..b {
             while slots[i].is_none() {
-                let Some(p) = queue.pop_front() else { break };
-                slots[i] = admit(i, p, sampler, &mut rng_root, &mut stats);
+                let Some(q) = queue.pop_front() else { break };
+                slots[i] = match q {
+                    Queued::Fresh(p) => admit(i, p, sampler, &mut rng_root, &mut stats),
+                    Queued::Resumed(m) => admit_resumed(i, m, sampler, &mut stats),
+                };
             }
         }
 
@@ -459,14 +620,10 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
             }
             // idle: block for the next message (or shut down)
             match rx.recv() {
-                Ok(Msg::Submit(p)) => queue.push_back(p),
-                Ok(Msg::Stats(tx)) => {
-                    let _ = tx.send(snapshot(&stats, &slots, &queue));
-                }
-                Ok(Msg::Shutdown) => {
-                    drain_shutdown(&mut slots, &mut queue, &mut stats);
-                    return stats;
-                }
+                Ok(msg) => match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats) {
+                    MsgOutcome::Handled => {}
+                    MsgOutcome::Exit => return stats,
+                },
                 Err(_) => return stats,
             }
             continue;
@@ -637,6 +794,7 @@ fn admit(
     let mut req = p.req;
     req.max_tokens = req.max_tokens.max(1);
     Some(Slot {
+        key: p.key,
         deadline: req.deadline.map(|d| p.enqueued + d),
         req,
         tx: p.tx,
@@ -653,10 +811,188 @@ fn admit(
     })
 }
 
-fn snapshot(stats: &EngineStats, slots: &[Option<Slot>], queue: &VecDeque<Pending>) -> EngineStats {
+/// Seat a session migrated in from another replica: restore its lane state
+/// from the snapshot wire bytes and continue exactly where the source
+/// stopped. The carried rng and `current` token make the continuation
+/// bit-identical; `ttft_ms` rides along so TTFT is neither lost nor
+/// double-counted ([`sample_token`] only records when it is `None`). No
+/// `Started` event — the source replica already streamed it.
+fn admit_resumed(
+    slot_ix: usize,
+    m: Box<MigratedSession>,
+    sampler: &mut Sampler,
+    stats: &mut EngineStats,
+) -> Option<Slot> {
+    let mut m = *m;
+    if m.cancel.is_cancelled() {
+        finish_resumed(&m, FinishReason::Cancelled, stats);
+        return None;
+    }
+    let wire = match m.lane_wire.take() {
+        Some(w) => w,
+        None => {
+            // inject() re-queues never-seated sessions as fresh, so a
+            // Resumed without lane bytes would silently lose generated
+            // state — refuse loudly instead
+            stats.requests_failed += 1;
+            let _ =
+                m.tx.send(GenEvent::Error("migrated session lost its lane state".to_string()));
+            return None;
+        }
+    };
+    if let Err(e) = sampler.reset_slot(slot_ix) {
+        stats.requests_failed += 1;
+        let _ = m.tx.send(GenEvent::Error(format!("reset slot {slot_ix}: {e:#}")));
+        return None;
+    }
+    if let Err(e) = sampler.restore_slot_wire(slot_ix, &wire) {
+        stats.requests_failed += 1;
+        let _ = m.tx.send(GenEvent::Error(format!("restore migrated slot {slot_ix}: {e:#}")));
+        return None;
+    }
+    stats.migrated_in += 1;
+    Some(Slot {
+        key: m.key,
+        req: m.req,
+        tx: m.tx,
+        cancel: m.cancel,
+        enqueued: m.enqueued,
+        started: m.started,
+        deadline: m.deadline,
+        prompt_pos: m.prompt_pos,
+        generated: m.generated,
+        current: m.current,
+        decoding: m.decoding,
+        pending_logits: None,
+        ttft_ms: m.ttft_ms,
+        rng: m.rng,
+    })
+}
+
+/// Pull the session with `key` out of this engine: snapshot a seated slot's
+/// lane through the checksummed wire format (freeing the slot), or lift it
+/// straight out of the queue. `Err` leaves a seated session running in
+/// place — a failed snapshot must never harm the stream.
+fn evict_session(
+    key: u64,
+    sampler: &mut Sampler,
+    slots: &mut [Option<Slot>],
+    queue: &mut VecDeque<Queued>,
+    stats: &mut EngineStats,
+) -> Result<Option<Box<MigratedSession>>, String> {
+    for (i, slot) in slots.iter_mut().enumerate() {
+        if !slot.as_ref().is_some_and(|s| s.key == key) {
+            continue;
+        }
+        if slot.as_ref().is_some_and(|s| s.pending_logits.is_some()) {
+            // unreachable at the loop top (exact-hit logits are consumed in
+            // the same iteration they are set), but moving them would need
+            // a second wire format — refuse rather than corrupt
+            return Err("slot mid-admission (unconsumed cached logits)".to_string());
+        }
+        let wire = sampler.encode_slot(i).map_err(|e| format!("snapshot slot {i}: {e:#}"))?;
+        let Some(s) = slot.take() else { continue };
+        // best-effort scrub: the lane is free for the next admission either
+        // way, and reset_slot failing must not fail the migration
+        let _ = sampler.reset_slot(i);
+        stats.migrated_out += 1;
+        return Ok(Some(Box::new(MigratedSession {
+            key: s.key,
+            req: s.req,
+            tx: s.tx,
+            cancel: s.cancel,
+            enqueued: s.enqueued,
+            started: s.started,
+            deadline: s.deadline,
+            prompt_pos: s.prompt_pos,
+            generated: s.generated,
+            current: s.current,
+            decoding: s.decoding,
+            ttft_ms: s.ttft_ms,
+            rng: s.rng,
+            lane_wire: Some(wire),
+        })));
+    }
+    if let Some(pos) = queue.iter().position(|q| q.key() == key) {
+        match queue.remove(pos) {
+            Some(Queued::Fresh(p)) => {
+                stats.migrated_out += 1;
+                // never seated: no lane state to move — the target admits
+                // it like any fresh request (rng placeholder is re-derived
+                // there; deadline is recomputed from the carried enqueued)
+                return Ok(Some(Box::new(MigratedSession {
+                    key: p.key,
+                    req: p.req,
+                    tx: p.tx,
+                    cancel: p.cancel,
+                    enqueued: p.enqueued,
+                    started: p.enqueued,
+                    deadline: None,
+                    prompt_pos: 0,
+                    generated: Vec::new(),
+                    current: 0,
+                    decoding: false,
+                    ttft_ms: None,
+                    rng: Rng::new(0),
+                    lane_wire: None,
+                })));
+            }
+            Some(Queued::Resumed(m)) => {
+                stats.migrated_out += 1;
+                return Ok(Some(m));
+            }
+            None => {}
+        }
+    }
+    Ok(None)
+}
+
+/// Queue a migrated session for admission. Never-seated sessions re-enter
+/// as fresh submissions (full admission path: prefix-cache lookup and the
+/// `Started` event, which the source never sent); live mid-stream sessions
+/// jump the line — they already waited their turn on the source replica.
+fn inject_session(m: Box<MigratedSession>, queue: &mut VecDeque<Queued>) {
+    if m.lane_wire.is_none() && !m.decoding && m.generated.is_empty() && m.prompt_pos == 0 {
+        let m = *m;
+        queue.push_back(Queued::Fresh(Pending {
+            key: m.key,
+            req: m.req,
+            tx: m.tx,
+            cancel: m.cancel,
+            enqueued: m.enqueued,
+        }));
+    } else {
+        queue.push_front(Queued::Resumed(m));
+    }
+}
+
+/// Finish a migrated session that never re-took a slot: `Done` with the
+/// tokens generated so far on its previous replica.
+fn finish_resumed(m: &MigratedSession, reason: FinishReason, stats: &mut EngineStats) {
+    match reason {
+        FinishReason::Length | FinishReason::Stop | FinishReason::Deadline => {
+            stats.requests_completed += 1
+        }
+        FinishReason::Cancelled | FinishReason::Shutdown => stats.requests_cancelled += 1,
+    }
+    let _ = m.tx.send(GenEvent::Done(GenOutcome {
+        reason,
+        tokens: m.generated.clone(),
+        prompt_tokens: m.req.prompt.len(),
+        queue_ms: (m.started - m.enqueued).as_secs_f64() * 1e3,
+        ttft_ms: m.ttft_ms,
+        gen_ms: m.started.elapsed().as_secs_f64() * 1e3,
+    }));
+}
+
+fn snapshot(stats: &EngineStats, slots: &[Option<Slot>], queue: &VecDeque<Queued>) -> EngineStats {
     let mut s = stats.clone();
     s.queued = queue.len() as u64;
     s.active = slots.iter().filter(|x| x.is_some()).count() as u64;
+    s.slots = slots.len() as u64;
+    s.active_decode =
+        slots.iter().filter(|x| x.as_ref().is_some_and(|s| s.decoding)).count() as u64;
+    s.active_prefill = s.active - s.active_decode;
     s
 }
 
@@ -683,7 +1019,7 @@ fn finish_pending(p: &Pending, reason: FinishReason, stats: &mut EngineStats) {
 /// `Done(reason = Shutdown)` (partial tokens for slots, empty for queued).
 fn drain_shutdown(
     slots: &mut [Option<Slot>],
-    queue: &mut VecDeque<Pending>,
+    queue: &mut VecDeque<Queued>,
     stats: &mut EngineStats,
 ) {
     for slot in slots.iter_mut() {
@@ -691,7 +1027,10 @@ fn drain_shutdown(
             s.finish(FinishReason::Shutdown, stats);
         }
     }
-    for p in queue.drain(..) {
-        finish_pending(&p, FinishReason::Shutdown, stats);
+    for q in queue.drain(..) {
+        match q {
+            Queued::Fresh(p) => finish_pending(&p, FinishReason::Shutdown, stats),
+            Queued::Resumed(m) => finish_resumed(&m, FinishReason::Shutdown, stats),
+        }
     }
 }

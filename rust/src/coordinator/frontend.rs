@@ -1,0 +1,121 @@
+//! The server ↔ execution seam: [`Frontend`] abstracts over what runs the
+//! requests — a bare [`EngineHandle`] (one replica, never sheds) or the
+//! fleet router ([`crate::fleet::FleetHandle`]: session affinity, admission
+//! control, live migration) — so the TCP server serves either unchanged.
+
+use crate::fleet::FleetStats;
+
+use super::engine::{
+    CancelToken, EngineHandle, EngineStats, GenEvent, GenOutcome, GenRequest, RequestHandle,
+};
+use super::protocol::{ShedReason, REASON_DUPLICATE_SESSION, REASON_REPLICA_UNAVAILABLE};
+
+/// Why a submission was refused without running. Surfaced to clients as a
+/// typed `error.reason` — backpressure is an answer, not a stall.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control refused (queue full / hopeless deadline).
+    Shed(ShedReason),
+    /// A live request with this session id already exists at the router.
+    DuplicateSession,
+    /// The engine — or every live replica — is unavailable.
+    Unavailable(String),
+}
+
+impl SubmitError {
+    /// `(human message, machine reason)` for the wire `error` frame.
+    pub fn wire(&self) -> (String, &'static str) {
+        match self {
+            SubmitError::Shed(ShedReason::QueueFull) => (
+                "shed: every eligible replica is at capacity, retry later".to_string(),
+                ShedReason::QueueFull.as_str(),
+            ),
+            SubmitError::Shed(ShedReason::Deadline) => (
+                "shed: deadline too tight for the current queue depth".to_string(),
+                ShedReason::Deadline.as_str(),
+            ),
+            SubmitError::DuplicateSession => (
+                "duplicate session: a request with this id is still running".to_string(),
+                REASON_DUPLICATE_SESSION,
+            ),
+            SubmitError::Unavailable(e) => (e.clone(), REASON_REPLICA_UNAVAILABLE),
+        }
+    }
+}
+
+/// One in-flight request's event stream, as the server consumes it.
+/// Method names deliberately differ from the inherent [`RequestHandle`]
+/// methods they wrap, so call sites never depend on resolution order.
+pub trait RequestEvents {
+    /// Next engine event (blocking). Errors when the engine/replica died.
+    fn recv_event(&self) -> Result<GenEvent, String>;
+
+    /// Cooperative-cancel token for this request.
+    fn cancel_handle(&self) -> CancelToken;
+
+    /// Drain to completion (v1 one-shot path, benches, tests).
+    fn wait_outcome(self) -> Result<GenOutcome, String>
+    where
+        Self: Sized,
+    {
+        loop {
+            match self.recv_event()? {
+                GenEvent::Done(o) => return Ok(o),
+                GenEvent::Error(e) => return Err(e),
+                GenEvent::Started { .. } | GenEvent::Delta { .. } => {}
+            }
+        }
+    }
+}
+
+impl RequestEvents for RequestHandle {
+    fn recv_event(&self) -> Result<GenEvent, String> {
+        self.recv()
+    }
+
+    fn cancel_handle(&self) -> CancelToken {
+        self.cancel_token()
+    }
+}
+
+/// What the TCP server needs from the execution tier.
+pub trait Frontend: Clone + Send + 'static {
+    type Events: RequestEvents + Send + 'static;
+
+    /// Submit under a server-assigned session id (unique per connection ×
+    /// client id). A router keys affinity, duplicate refusal, and
+    /// migration off it; a bare engine ignores it.
+    fn submit_session(&self, session: &str, req: GenRequest)
+        -> Result<Self::Events, SubmitError>;
+
+    /// Engine counters — a fleet answers with its rollup.
+    fn engine_stats(&self) -> Result<EngineStats, String>;
+
+    /// Per-replica statistics; `None` when not fronting a fleet.
+    fn fleet_stats_snapshot(&self) -> Option<FleetStats> {
+        None
+    }
+
+    /// Drain everything (graceful shutdown).
+    fn shutdown_all(&self);
+}
+
+impl Frontend for EngineHandle {
+    type Events = RequestHandle;
+
+    fn submit_session(
+        &self,
+        _session: &str,
+        req: GenRequest,
+    ) -> Result<RequestHandle, SubmitError> {
+        self.submit(req).map_err(SubmitError::Unavailable)
+    }
+
+    fn engine_stats(&self) -> Result<EngineStats, String> {
+        self.stats()
+    }
+
+    fn shutdown_all(&self) {
+        self.shutdown();
+    }
+}

@@ -10,7 +10,11 @@
 //!   ([`WireRequest`]/[`WireResponse`]).
 //! * [`server`] — the TCP front-end ([`serve`]/[`serve_until`]),
 //!   thread-per-connection with a per-connection writer thread
-//!   multiplexing event frames.
+//!   multiplexing event frames. Generic over a [`Frontend`]: a bare
+//!   [`EngineHandle`] or the fleet router ([`crate::fleet::FleetHandle`] —
+//!   session affinity, admission control, live migration; DESIGN.md §11).
+//! * [`frontend`] — the server ↔ execution seam: [`Frontend`],
+//!   [`RequestEvents`], and the typed [`SubmitError`] admission verdicts.
 //!
 //! The decode artifact is compiled for a fixed batch size B; the engine
 //! treats its B rows as *slots*. A request's session is:
@@ -41,14 +45,17 @@
 //! [`Sampler::prefill_chunk`]: crate::sample::Sampler::prefill_chunk
 
 pub mod engine;
+pub mod frontend;
 pub mod protocol;
 pub mod server;
 
 pub use engine::{
     CancelToken, Engine, EngineHandle, EngineStats, FinishReason, GenEvent, GenOutcome,
-    GenRequest, GenResponse, RequestHandle,
+    GenRequest, GenResponse, MigratedSession, RequestHandle,
 };
+pub use frontend::{Frontend, RequestEvents, SubmitError};
 pub use protocol::{
-    ClientFrame, EventFrame, GenerateFrame, WireRequest, WireResponse, MAX_MAX_TOKENS,
+    ClientFrame, EventFrame, GenerateFrame, ShedReason, WireRequest, WireResponse,
+    MAX_MAX_TOKENS, REASON_DUPLICATE_SESSION, REASON_REPLICA_UNAVAILABLE,
 };
 pub use server::{handle_conn, serve, serve_on, serve_until, Client};

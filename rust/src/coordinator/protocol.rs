@@ -9,6 +9,7 @@
 //!  "deadline_ms":5000}
 //! {"op":"cancel","id":"r1"}
 //! {"op":"stats"}
+//! {"op":"fleet_stats"}
 //! ```
 //!
 //! `id` is client-assigned and scopes every event frame; many generates
@@ -23,8 +24,15 @@
 //! {"id":"r1","event":"done","reason":"length","text":"...","tokens":[...],
 //!  "prompt_tokens":4,"queue_ms":0.2,"ttft_ms":3.1,"gen_ms":12.5}
 //! {"id":"r1","event":"error","error":"..."}
+//! {"id":"r1","event":"error","error":"...","reason":"shed_queue_full"}
 //! {"event":"stats", ...engine counters...}
+//! {"event":"fleet_stats","replicas":[...],"shed_queue_full":0, ...}
 //! ```
+//!
+//! `error.reason` is a machine-readable refusal class (admission control:
+//! [`ShedReason`] wire strings, plus `duplicate_session` /
+//! `replica_unavailable`); it is absent on ordinary failures, so existing
+//! clients keep working unchanged.
 //!
 //! Delta texts are produced by an incremental UTF-8 decoder
 //! ([`crate::tokenizer::Utf8Stream`]): concatenating every `delta.text`
@@ -39,12 +47,39 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::fleet::{FleetStats, ReplicaStats};
 use crate::json::Json;
 
 use super::engine::EngineStats;
 
 /// Upper bound on `max_tokens` (v2 rejects above it, v1 clamps into it).
 pub const MAX_MAX_TOKENS: usize = 4096;
+
+/// `error.reason` when the router refused a duplicate live session id.
+pub const REASON_DUPLICATE_SESSION: &str = "duplicate_session";
+/// `error.reason` when no live replica could accept the request.
+pub const REASON_REPLICA_UNAVAILABLE: &str = "replica_unavailable";
+
+/// Why admission control refused a request without running it. Carried on
+/// the wire as `error.reason` so clients can tell backpressure (retry
+/// later, or against another frontend) apart from request failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Every eligible replica was at `slots + queue_depth` in-flight.
+    QueueFull,
+    /// The request's deadline was too tight to survive the queue it would
+    /// have joined — shedding now beats a guaranteed `Deadline` finish.
+    Deadline,
+}
+
+impl ShedReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "shed_queue_full",
+            ShedReason::Deadline => "shed_deadline",
+        }
+    }
+}
 
 fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
     match j.get(key) {
@@ -331,6 +366,9 @@ pub enum ClientFrame {
     Generate(GenerateFrame),
     Cancel { id: String },
     Stats,
+    /// Per-replica + rollup statistics; answered with an error frame when
+    /// the server fronts a single engine rather than a fleet.
+    FleetStats,
     /// v1 back-compat: `prompt` present, no `op`, no `id`.
     OneShot(WireRequest),
 }
@@ -352,6 +390,7 @@ impl ClientFrame {
                     Ok(ClientFrame::Cancel { id })
                 }
                 "stats" => Ok(ClientFrame::Stats),
+                "fleet_stats" => Ok(ClientFrame::FleetStats),
                 other => bail!("unknown op '{other}'"),
             },
             None if j.get("id").is_some() => {
@@ -394,8 +433,13 @@ pub enum EventFrame {
     Error {
         id: Option<String>,
         error: String,
+        /// Machine-readable refusal class (`shed_queue_full`,
+        /// `shed_deadline`, `duplicate_session`, `replica_unavailable`);
+        /// `None` on ordinary failures.
+        reason: Option<String>,
     },
     Stats(EngineStats),
+    FleetStats(FleetStats),
 }
 
 impl EventFrame {
@@ -442,30 +486,49 @@ impl EventFrame {
                 }
                 Json::obj(pairs)
             }
-            EventFrame::Error { id, error } => {
-                let mut pairs = vec![("event", Json::str("error")), ("error", Json::str(error.clone()))];
+            EventFrame::Error { id, error, reason } => {
+                let mut pairs =
+                    vec![("event", Json::str("error")), ("error", Json::str(error.clone()))];
                 if let Some(id) = id {
                     pairs.push(("id", Json::str(id.clone())));
                 }
+                if let Some(r) = reason {
+                    pairs.push(("reason", Json::str(r.clone())));
+                }
                 Json::obj(pairs)
             }
-            EventFrame::Stats(s) => Json::obj(vec![
-                ("event", Json::str("stats")),
-                ("requests_completed", Json::num(s.requests_completed as f64)),
-                ("requests_cancelled", Json::num(s.requests_cancelled as f64)),
-                ("requests_failed", Json::num(s.requests_failed as f64)),
-                ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
-                ("decode_tokens", Json::num(s.decode_tokens as f64)),
-                ("prefix_hits", Json::num(s.prefix_hits as f64)),
-                ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
-                ("steps", Json::num(s.steps as f64)),
-                ("active_slot_steps", Json::num(s.active_slot_steps as f64)),
-                ("ttft_ms_sum", Json::num(s.ttft_ms_sum)),
-                ("ttft_ms_count", Json::num(s.ttft_ms_count as f64)),
-                ("ttft_ms_max", Json::num(s.ttft_ms_max)),
-                ("queued", Json::num(s.queued as f64)),
-                ("active", Json::num(s.active as f64)),
-            ]),
+            EventFrame::Stats(s) => {
+                let mut pairs = vec![("event", Json::str("stats"))];
+                pairs.extend(engine_stats_pairs(s));
+                Json::obj(pairs)
+            }
+            EventFrame::FleetStats(f) => {
+                let replicas: Vec<Json> = f
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        let mut pairs = vec![
+                            ("id", Json::num(r.id as f64)),
+                            ("alive", Json::Bool(r.alive)),
+                            ("inflight", Json::num(r.inflight as f64)),
+                        ];
+                        pairs.extend(engine_stats_pairs(&r.engine));
+                        Json::obj(pairs)
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("event", Json::str("fleet_stats")),
+                    ("replicas", Json::Arr(replicas)),
+                    ("shed_queue_full", Json::num(f.shed_queue_full as f64)),
+                    ("shed_deadline", Json::num(f.shed_deadline as f64)),
+                    ("duplicate_sessions", Json::num(f.duplicate_sessions as f64)),
+                    ("migrations", Json::num(f.migrations as f64)),
+                    ("migration_failed", Json::num(f.migration_failed as f64)),
+                    ("sessions_routed", Json::num(f.sessions_routed as f64)),
+                    ("sessions_active", Json::num(f.sessions_active as f64)),
+                    ("affinity_hits", Json::num(f.affinity_hits as f64)),
+                ])
+            }
         }
     }
 
@@ -503,27 +566,35 @@ impl EventFrame {
             "error" => Ok(EventFrame::Error {
                 id: j.get("id").and_then(|v| v.as_str().ok()).map(String::from),
                 error: j.req("error")?.as_str()?.to_string(),
+                reason: j.get("reason").and_then(|v| v.as_str().ok()).map(String::from),
             }),
-            "stats" => Ok(EventFrame::Stats(EngineStats {
-                requests_completed: j.req("requests_completed")?.as_u64()?,
-                requests_cancelled: j.req("requests_cancelled")?.as_u64()?,
-                requests_failed: j.req("requests_failed")?.as_u64()?,
-                prefill_tokens: j.req("prefill_tokens")?.as_u64()?,
-                decode_tokens: j.req("decode_tokens")?.as_u64()?,
-                // absent in frames from pre-prefix-cache engines
-                prefix_hits: j.get("prefix_hits").and_then(|v| v.as_u64().ok()).unwrap_or(0),
-                prefix_hit_tokens: j
-                    .get("prefix_hit_tokens")
-                    .and_then(|v| v.as_u64().ok())
-                    .unwrap_or(0),
-                steps: j.req("steps")?.as_u64()?,
-                active_slot_steps: j.req("active_slot_steps")?.as_u64()?,
-                ttft_ms_sum: j.req("ttft_ms_sum")?.as_f64()?,
-                ttft_ms_count: j.req("ttft_ms_count")?.as_u64()?,
-                ttft_ms_max: j.req("ttft_ms_max")?.as_f64()?,
-                queued: j.req("queued")?.as_u64()?,
-                active: j.req("active")?.as_u64()?,
-            })),
+            "stats" => Ok(EventFrame::Stats(engine_stats_from_json(&j)?)),
+            "fleet_stats" => {
+                let replicas = j
+                    .req("replicas")?
+                    .as_arr()?
+                    .iter()
+                    .map(|r| {
+                        Ok(ReplicaStats {
+                            id: r.req("id")?.as_usize()?,
+                            alive: r.req("alive")?.as_bool()?,
+                            inflight: r.req("inflight")?.as_u64()?,
+                            engine: engine_stats_from_json(r)?,
+                        })
+                    })
+                    .collect::<Result<Vec<ReplicaStats>>>()?;
+                Ok(EventFrame::FleetStats(FleetStats {
+                    replicas,
+                    shed_queue_full: j.req("shed_queue_full")?.as_u64()?,
+                    shed_deadline: j.req("shed_deadline")?.as_u64()?,
+                    duplicate_sessions: j.req("duplicate_sessions")?.as_u64()?,
+                    migrations: j.req("migrations")?.as_u64()?,
+                    migration_failed: j.req("migration_failed")?.as_u64()?,
+                    sessions_routed: j.req("sessions_routed")?.as_u64()?,
+                    sessions_active: j.req("sessions_active")?.as_u64()?,
+                    affinity_hits: j.req("affinity_hits")?.as_u64()?,
+                }))
+            }
             other => bail!("unknown event '{other}'"),
         }
     }
@@ -540,9 +611,63 @@ impl EventFrame {
             | EventFrame::Delta { id, .. }
             | EventFrame::Done { id, .. } => Some(id),
             EventFrame::Error { id, .. } => id.as_deref(),
-            EventFrame::Stats(_) => None,
+            EventFrame::Stats(_) | EventFrame::FleetStats(_) => None,
         }
     }
+}
+
+/// [`EngineStats`] as JSON pairs — shared by the `stats` frame and each
+/// per-replica object inside `fleet_stats`.
+fn engine_stats_pairs(s: &EngineStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("requests_completed", Json::num(s.requests_completed as f64)),
+        ("requests_cancelled", Json::num(s.requests_cancelled as f64)),
+        ("requests_failed", Json::num(s.requests_failed as f64)),
+        ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+        ("decode_tokens", Json::num(s.decode_tokens as f64)),
+        ("prefix_hits", Json::num(s.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
+        ("steps", Json::num(s.steps as f64)),
+        ("active_slot_steps", Json::num(s.active_slot_steps as f64)),
+        ("ttft_ms_sum", Json::num(s.ttft_ms_sum)),
+        ("ttft_ms_count", Json::num(s.ttft_ms_count as f64)),
+        ("ttft_ms_max", Json::num(s.ttft_ms_max)),
+        ("queued", Json::num(s.queued as f64)),
+        ("active", Json::num(s.active as f64)),
+        ("slots", Json::num(s.slots as f64)),
+        ("active_prefill", Json::num(s.active_prefill as f64)),
+        ("active_decode", Json::num(s.active_decode as f64)),
+        ("migrated_in", Json::num(s.migrated_in as f64)),
+        ("migrated_out", Json::num(s.migrated_out as f64)),
+    ]
+}
+
+fn engine_stats_from_json(j: &Json) -> Result<EngineStats> {
+    // back-compat reads use `.get(..).unwrap_or(0)`: fields added after
+    // protocol v2 shipped (prefix cache in PR 8, fleet occupancy/migration
+    // here) are absent in frames from older engines and default to zero
+    let opt = |key: &str| j.get(key).and_then(|v| v.as_u64().ok()).unwrap_or(0);
+    Ok(EngineStats {
+        requests_completed: j.req("requests_completed")?.as_u64()?,
+        requests_cancelled: j.req("requests_cancelled")?.as_u64()?,
+        requests_failed: j.req("requests_failed")?.as_u64()?,
+        prefill_tokens: j.req("prefill_tokens")?.as_u64()?,
+        decode_tokens: j.req("decode_tokens")?.as_u64()?,
+        prefix_hits: opt("prefix_hits"),
+        prefix_hit_tokens: opt("prefix_hit_tokens"),
+        steps: j.req("steps")?.as_u64()?,
+        active_slot_steps: j.req("active_slot_steps")?.as_u64()?,
+        ttft_ms_sum: j.req("ttft_ms_sum")?.as_f64()?,
+        ttft_ms_count: j.req("ttft_ms_count")?.as_u64()?,
+        ttft_ms_max: j.req("ttft_ms_max")?.as_f64()?,
+        queued: j.req("queued")?.as_u64()?,
+        active: j.req("active")?.as_u64()?,
+        slots: opt("slots"),
+        active_prefill: opt("active_prefill"),
+        active_decode: opt("active_decode"),
+        migrated_in: opt("migrated_in"),
+        migrated_out: opt("migrated_out"),
+    })
 }
 
 #[cfg(test)]
@@ -625,6 +750,10 @@ mod tests {
             ClientFrame::Cancel { id: "a".into() }
         );
         assert_eq!(ClientFrame::parse(r#"{"op":"stats"}"#).unwrap(), ClientFrame::Stats);
+        assert_eq!(
+            ClientFrame::parse(r#"{"op":"fleet_stats"}"#).unwrap(),
+            ClientFrame::FleetStats
+        );
     }
 
     #[test]
@@ -690,18 +819,87 @@ mod tests {
                 ttft_ms: Some(3.5),
                 gen_ms: 11.0,
             },
-            EventFrame::Error { id: None, error: "bad frame".into() },
-            EventFrame::Error { id: Some("a".into()), error: "boom".into() },
+            EventFrame::Error { id: None, error: "bad frame".into(), reason: None },
+            EventFrame::Error { id: Some("a".into()), error: "boom".into(), reason: None },
+            EventFrame::Error {
+                id: Some("a".into()),
+                error: "replica queue full".into(),
+                reason: Some(ShedReason::QueueFull.as_str().into()),
+            },
             EventFrame::Stats(EngineStats {
                 requests_completed: 3,
                 decode_tokens: 99,
                 prefill_tokens: 512,
+                slots: 4,
+                active_prefill: 1,
+                active_decode: 2,
+                migrated_in: 5,
+                migrated_out: 6,
                 ..Default::default()
+            }),
+            EventFrame::FleetStats(FleetStats {
+                replicas: vec![
+                    ReplicaStats {
+                        id: 0,
+                        alive: true,
+                        inflight: 3,
+                        engine: EngineStats { decode_tokens: 10, slots: 4, ..Default::default() },
+                    },
+                    ReplicaStats {
+                        id: 1,
+                        alive: false,
+                        inflight: 0,
+                        engine: EngineStats::default(),
+                    },
+                ],
+                shed_queue_full: 2,
+                shed_deadline: 1,
+                duplicate_sessions: 4,
+                migrations: 7,
+                migration_failed: 1,
+                sessions_routed: 30,
+                sessions_active: 3,
+                affinity_hits: 25,
             }),
         ];
         for f in frames {
             let back = EventFrame::parse(&f.dump()).unwrap();
             assert_eq!(back, f, "round-trip failed for {f:?}");
+        }
+    }
+
+    #[test]
+    fn error_reason_absent_when_none() {
+        let plain = EventFrame::Error { id: Some("a".into()), error: "x".into(), reason: None };
+        assert!(!plain.dump().contains("reason"));
+        let shed = EventFrame::Error {
+            id: Some("a".into()),
+            error: "y".into(),
+            reason: Some(ShedReason::Deadline.as_str().into()),
+        };
+        assert!(shed.dump().contains("shed_deadline"));
+    }
+
+    #[test]
+    fn stats_frame_back_compat_without_fleet_fields() {
+        // a stats line as emitted before the fleet fields existed must
+        // still parse, with the new counters defaulting to zero
+        let old = r#"{"event":"stats","requests_completed":3,"requests_cancelled":0,
+            "requests_failed":1,"prefill_tokens":100,"decode_tokens":50,
+            "steps":70,"active_slot_steps":120,"ttft_ms_sum":9.5,
+            "ttft_ms_count":3,"ttft_ms_max":4.0,"queued":2,"active":1}"#;
+        match EventFrame::parse(old).unwrap() {
+            EventFrame::Stats(s) => {
+                assert_eq!(s.requests_completed, 3);
+                assert_eq!(s.decode_tokens, 50);
+                assert_eq!(s.prefix_hits, 0);
+                assert_eq!(s.slots, 0);
+                assert_eq!(s.active_prefill, 0);
+                assert_eq!(s.active_decode, 0);
+                assert_eq!(s.migrated_in, 0);
+                assert_eq!(s.migrated_out, 0);
+            }
+            other => panic!("expected stats, got {other:?}"),
         }
     }
 }

@@ -1,18 +1,22 @@
-//! TCP front-end: newline-delimited JSON frames routed to the engine.
-//! Thread-per-connection for the read side, plus one writer thread and one
-//! event-forwarder thread per in-flight streaming request (connections are
-//! few and long-lived; the real concurrency lives in the engine's
-//! continuous batcher).
+//! TCP front-end: newline-delimited JSON frames routed to a [`Frontend`] —
+//! a single engine or the fleet router — generically. Thread-per-connection
+//! for the read side, plus one writer thread and one event-forwarder thread
+//! per in-flight streaming request (connections are few and long-lived; the
+//! real concurrency lives in the engine's continuous batcher).
 //!
 //! A connection multiplexes any number of v2 streaming requests (client
-//! ids scope the frames), `cancel`/`stats` ops, and v1 one-shot requests.
-//! Malformed lines are answered with an error frame and the connection
-//! stays alive. When a client disconnects, its in-flight requests are
-//! cancelled — slots free up instead of generating into the void.
+//! ids scope the frames), `cancel`/`stats`/`fleet_stats` ops, and v1
+//! one-shot requests. Malformed lines are answered with an error frame and
+//! the connection stays alive. When a client disconnects, its in-flight
+//! requests are cancelled — slots free up instead of generating into the
+//! void. Router-level session ids are `c<conn>:<client id>` (a per-process
+//! connection nonce), so two connections may reuse the same client id
+//! without colliding at the fleet's duplicate-session check.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
@@ -22,8 +26,12 @@ use crate::json::Json;
 use crate::sample::SampleParams;
 use crate::tokenizer::{ByteTokenizer, Tokenizer, Utf8Stream};
 
-use super::engine::{CancelToken, EngineHandle, GenEvent, GenRequest, RequestHandle};
+use super::engine::{CancelToken, GenEvent, GenRequest};
+use super::frontend::{Frontend, RequestEvents};
 use super::protocol::{ClientFrame, EventFrame, GenerateFrame, WireRequest, WireResponse};
+
+/// Distinguishes connections in router session ids (`c<nonce>:<id>`).
+static CONN_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Lock the per-connection live-request map, recovering from poisoning: a
 /// panicked forwarder thread must degrade to dropped frames on one
@@ -69,8 +77,9 @@ fn gen_request_v1(r: &WireRequest) -> GenRequest {
 }
 
 /// Serve forever on `addr` (no shutdown path; `tvq serve` and the demos
-/// use [`serve_until`]).
-pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
+/// use [`serve_until`]). `handle` is any [`Frontend`]: a single
+/// [`super::EngineHandle`] or a [`crate::fleet::FleetHandle`].
+pub fn serve<F: Frontend>(addr: &str, handle: F) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("coordinator listening on {addr}");
     serve_on(listener, handle, None)
@@ -78,11 +87,12 @@ pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
 
 /// Serve on `addr` until `shutdown` fires (a `()` send — or the sender
 /// dropping — signals shutdown). On signal the listener closes and the
-/// engine is asked to drain: every in-flight or queued request finishes
+/// frontend is asked to drain: every in-flight or queued request finishes
 /// with a `done(reason="shutdown")` frame, delivered over its connection.
-/// Join the engine thread (from [`super::Engine::spawn`]) after this
-/// returns to collect the final [`super::EngineStats`].
-pub fn serve_until(addr: &str, handle: EngineHandle, shutdown: mpsc::Receiver<()>) -> Result<()> {
+/// Join the engine thread(s) (from [`super::Engine::spawn`] /
+/// [`crate::fleet::Fleet::spawn`]) after this returns to collect the final
+/// [`super::EngineStats`].
+pub fn serve_until<F: Frontend>(addr: &str, handle: F, shutdown: mpsc::Receiver<()>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("coordinator listening on {addr} (graceful shutdown armed)");
     serve_on(listener, handle, Some(shutdown))
@@ -90,9 +100,9 @@ pub fn serve_until(addr: &str, handle: EngineHandle, shutdown: mpsc::Receiver<()
 
 /// [`serve`]/[`serve_until`] over a pre-bound listener (tests and demos
 /// bind port 0 themselves to learn the ephemeral address).
-pub fn serve_on(
+pub fn serve_on<F: Frontend>(
     listener: TcpListener,
-    handle: EngineHandle,
+    handle: F,
     shutdown: Option<mpsc::Receiver<()>>,
 ) -> Result<()> {
     let Some(rx) = shutdown else {
@@ -122,11 +132,11 @@ pub fn serve_on(
     }
     // drain: requests finish with done(reason="shutdown"); the per-request
     // forwarder threads deliver those frames over still-open connections
-    handle.shutdown();
+    handle.shutdown_all();
     Ok(())
 }
 
-fn spawn_conn(stream: TcpStream, handle: EngineHandle) {
+fn spawn_conn<F: Frontend>(stream: TcpStream, handle: F) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     std::thread::spawn(move || {
         if let Err(e) = handle_conn(stream, handle) {
@@ -136,8 +146,8 @@ fn spawn_conn(stream: TcpStream, handle: EngineHandle) {
 }
 
 /// Serve one connection: parse frames off the read side, route them to the
-/// engine, multiplex event frames back through a single writer thread.
-pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
+/// frontend, multiplex event frames back through a single writer thread.
+pub fn handle_conn<F: Frontend>(stream: TcpStream, handle: F) -> Result<()> {
     let write_half = stream.try_clone()?;
     let reader = BufReader::new(stream);
     // one writer thread serializes frames from every in-flight request
@@ -153,6 +163,11 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
     });
     // requests still streaming on this connection, by client id
     let live: Arc<Mutex<HashMap<String, CancelToken>>> = Arc::new(Mutex::new(HashMap::new()));
+    // router session ids are scoped by a per-connection nonce so client ids
+    // only need to be unique within their own connection (wire semantics
+    // unchanged from the single-engine server)
+    let conn = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut oneshot_seq = 0u64;
 
     let result = (|| -> Result<()> {
         for line in reader.lines() {
@@ -184,11 +199,11 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
                             .and_then(|j| j.get("id"))
                             .and_then(|v| v.as_str().ok())
                             .map(String::from);
-                        EventFrame::Error { id, error: msg }.dump()
+                        EventFrame::Error { id, error: msg, reason: None }.dump()
                     };
                     let _ = out_tx.send(out);
                 }
-                Ok(ClientFrame::Generate(g)) => spawn_generate(g, &handle, &live, &out_tx),
+                Ok(ClientFrame::Generate(g)) => spawn_generate(g, conn, &handle, &live, &out_tx),
                 Ok(ClientFrame::Cancel { id }) => {
                     let token = lock_live(&live).get(&id).cloned();
                     match token {
@@ -197,22 +212,36 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
                             let frame = EventFrame::Error {
                                 id: Some(id),
                                 error: "unknown or finished id".to_string(),
+                                reason: None,
                             };
                             let _ = out_tx.send(frame.dump());
                         }
                     }
                 }
                 Ok(ClientFrame::Stats) => {
-                    let frame = match handle.stats() {
+                    let frame = match handle.engine_stats() {
                         Ok(s) => EventFrame::Stats(s),
-                        Err(e) => EventFrame::Error { id: None, error: e },
+                        Err(e) => EventFrame::Error { id: None, error: e, reason: None },
+                    };
+                    let _ = out_tx.send(frame.dump());
+                }
+                Ok(ClientFrame::FleetStats) => {
+                    let frame = match handle.fleet_stats_snapshot() {
+                        Some(f) => EventFrame::FleetStats(f),
+                        None => EventFrame::Error {
+                            id: None,
+                            error: "not a fleet: this server fronts a single engine".to_string(),
+                            reason: None,
+                        },
                     };
                     let _ = out_tx.send(frame.dump());
                 }
                 // v1 one-shot: blocking, in request order (v1 clients
                 // pipeline by line order and responses carry no id)
                 Ok(ClientFrame::OneShot(req)) => {
-                    let _ = out_tx.send(one_shot(&handle, &req).to_json().dump());
+                    let session = format!("c{conn}:oneshot-{oneshot_seq}");
+                    oneshot_seq += 1;
+                    let _ = out_tx.send(one_shot(&handle, &session, &req).to_json().dump());
                 }
             }
         }
@@ -228,9 +257,10 @@ pub fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
     result
 }
 
-fn spawn_generate(
+fn spawn_generate<F: Frontend>(
     g: GenerateFrame,
-    handle: &EngineHandle,
+    conn: u64,
+    handle: &F,
     live: &Arc<Mutex<HashMap<String, CancelToken>>>,
     out_tx: &mpsc::Sender<String>,
 ) {
@@ -239,18 +269,25 @@ fn spawn_generate(
         let frame = EventFrame::Error {
             id: Some(id),
             error: "duplicate id: a request with this id is still running".to_string(),
+            reason: None,
         };
         let _ = out_tx.send(frame.dump());
         return;
     }
-    let rh = match handle.submit(gen_request_v2(&g)) {
+    let session = format!("c{conn}:{id}");
+    let rh = match handle.submit_session(&session, gen_request_v2(&g)) {
         Ok(rh) => rh,
         Err(e) => {
-            let _ = out_tx.send(EventFrame::Error { id: Some(id), error: e }.dump());
+            // admission refusals carry a machine-readable reason so clients
+            // can tell backpressure (retry) from failure
+            let (msg, reason) = e.wire();
+            let frame =
+                EventFrame::Error { id: Some(id), error: msg, reason: Some(reason.to_string()) };
+            let _ = out_tx.send(frame.dump());
             return;
         }
     };
-    lock_live(live).insert(id.clone(), rh.cancel_token());
+    lock_live(live).insert(id.clone(), rh.cancel_handle());
     let out_tx = out_tx.clone();
     let live = Arc::clone(live);
     std::thread::spawn(move || {
@@ -263,14 +300,15 @@ fn spawn_generate(
 /// Delta texts come from an incremental UTF-8 decoder, so concatenating
 /// them reproduces the done text exactly (up to the final flush of an
 /// incomplete multi-byte tail, which only the done frame can carry).
-fn forward_events(rh: RequestHandle, id: &str, out_tx: &mpsc::Sender<String>) {
+fn forward_events<E: RequestEvents>(rh: E, id: &str, out_tx: &mpsc::Sender<String>) {
     let mut text = Utf8Stream::new();
     let mut acc = String::new();
     loop {
-        let ev = match rh.recv() {
+        let ev = match rh.recv_event() {
             Ok(ev) => ev,
             Err(e) => {
-                let _ = out_tx.send(EventFrame::Error { id: Some(id.to_string()), error: e }.dump());
+                let frame = EventFrame::Error { id: Some(id.to_string()), error: e, reason: None };
+                let _ = out_tx.send(frame.dump());
                 return;
             }
         };
@@ -299,7 +337,8 @@ fn forward_events(rh: RequestHandle, id: &str, out_tx: &mpsc::Sender<String>) {
                 return;
             }
             GenEvent::Error(e) => {
-                let _ = out_tx.send(EventFrame::Error { id: Some(id.to_string()), error: e }.dump());
+                let frame = EventFrame::Error { id: Some(id.to_string()), error: e, reason: None };
+                let _ = out_tx.send(frame.dump());
                 return;
             }
         };
@@ -309,8 +348,12 @@ fn forward_events(rh: RequestHandle, id: &str, out_tx: &mpsc::Sender<String>) {
     }
 }
 
-fn one_shot(handle: &EngineHandle, req: &WireRequest) -> WireResponse {
-    match handle.submit(gen_request_v1(req)).and_then(RequestHandle::wait) {
+fn one_shot<F: Frontend>(handle: &F, session: &str, req: &WireRequest) -> WireResponse {
+    let outcome = match handle.submit_session(session, gen_request_v1(req)) {
+        Err(e) => return WireResponse::error(e.wire().0),
+        Ok(rh) => rh.wait_outcome(),
+    };
+    match outcome {
         Err(e) => WireResponse::error(e),
         Ok(o) => {
             let bytes: Vec<u16> = o.tokens.iter().map(|&t| t as u16).collect();
@@ -369,6 +412,11 @@ impl Client {
     /// Request a stats frame (answered among the event stream).
     pub fn stats(&mut self) -> Result<()> {
         self.send_line(Json::obj(vec![("op", Json::str("stats"))]).dump())
+    }
+
+    /// Request a fleet_stats frame (an error frame on single-engine servers).
+    pub fn fleet_stats(&mut self) -> Result<()> {
+        self.send_line(Json::obj(vec![("op", Json::str("fleet_stats"))]).dump())
     }
 
     pub fn next_line(&mut self) -> Result<String> {

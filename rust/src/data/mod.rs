@@ -11,6 +11,7 @@ pub mod markov;
 pub mod zipf;
 
 pub use batcher::{Batch, TbpttBatcher};
+pub use zipf::{ZipfLengths, ZipfSampler};
 
 /// A token stream plus its vocabulary size. Token values < vocab_size.
 #[derive(Debug, Clone)]

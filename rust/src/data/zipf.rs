@@ -15,6 +15,96 @@ fn zipf_weights(n: usize) -> Vec<f64> {
     (1..=n).map(|r| 1.0 / (r as f64).powf(ZIPF_S)).collect()
 }
 
+/// Seeded Zipf(s) sampler over ranks `0..n` (rank 0 is the most popular).
+///
+/// Precomputes the normalized CDF once so each draw is one uniform plus a
+/// binary search — cheap enough for a traffic generator issuing hundreds of
+/// thousands of draws (`examples/fleetbench.rs` uses it for both prompt
+/// popularity and request-length skew). Deterministic given the caller's
+/// [`Rng`]: the same seed always produces the same request trace.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// cdf[r] = P(rank <= r); last entry is exactly 1.0.
+    cdf: Vec<f64>,
+    /// Normalized pmf, kept for tail-bound tests and analytics.
+    pmf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Build a sampler over `n` ranks with exponent `s` (> 0). `n` must be
+    /// nonzero; weights 1/r^s are normalized to a proper distribution.
+    pub fn new(n: usize, s: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(n > 0, "ZipfSampler needs at least one rank");
+        anyhow::ensure!(s.is_finite() && s > 0.0, "Zipf exponent must be finite and > 0, got {s}");
+        let raw: Vec<f64> = (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        let total: f64 = raw.iter().sum();
+        let pmf: Vec<f64> = raw.iter().map(|w| w / total).collect();
+        let mut acc = 0.0;
+        let mut cdf: Vec<f64> = pmf
+            .iter()
+            .map(|p| {
+                acc += p;
+                acc
+            })
+            .collect();
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0; // absorb float rounding so sample() can never fall off the end
+        }
+        Ok(Self { cdf, pmf })
+    }
+
+    /// Draw a rank in `0..len()`. One uniform + binary search over the CDF.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // first index whose cdf >= u
+        match self.cdf.binary_search_by(|c| {
+            if *c < u { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater }
+        }) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of `rank` (0 outside the support).
+    pub fn pmf(&self, rank: usize) -> f64 {
+        self.pmf.get(rank).copied().unwrap_or(0.0)
+    }
+
+    /// Cumulative mass of ranks `0..=rank` (1.0 past the end).
+    pub fn cdf(&self, rank: usize) -> f64 {
+        self.cdf.get(rank).copied().unwrap_or(1.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+}
+
+/// Zipf-skewed request lengths in `[min, max]`: rank 0 maps to `min`, so
+/// short requests dominate — the shape real serving traffic has (most
+/// completions are short, a heavy tail runs long).
+#[derive(Debug, Clone)]
+pub struct ZipfLengths {
+    min: usize,
+    sampler: ZipfSampler,
+}
+
+impl ZipfLengths {
+    pub fn new(min: usize, max: usize, s: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(min >= 1, "lengths must be >= 1");
+        anyhow::ensure!(max >= min, "length range empty: [{min}, {max}]");
+        Ok(Self { min, sampler: ZipfSampler::new(max - min + 1, s)? })
+    }
+
+    /// Draw a length in `[min, max]`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.min + self.sampler.sample(rng)
+    }
+}
+
 fn make_word(rng: &mut Rng) -> String {
     const VOWELS: &[u8] = b"aeiouy";
     const CONS: &[u8] = b"bcdfghjklmnprstvw";
@@ -102,6 +192,56 @@ mod tests {
         let top10: usize = freqs.iter().take(10).sum();
         // Zipf s=1.07 over 2000 words: top-10 should hold a large share
         assert!(top10 * 100 / total > 25, "top10 share {}", top10 * 100 / total);
+    }
+
+    #[test]
+    fn zipf_sampler_is_deterministic_and_in_range() {
+        let z = ZipfSampler::new(100, 1.1).unwrap();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..1000 {
+            let ra = z.sample(&mut a);
+            assert_eq!(ra, z.sample(&mut b));
+            assert!(ra < z.len());
+        }
+    }
+
+    #[test]
+    fn zipf_sampler_pmf_is_a_distribution() {
+        let z = ZipfSampler::new(50, 1.3).unwrap();
+        let total: f64 = (0..z.len()).map(|r| z.pmf(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "pmf sums to {total}");
+        for r in 1..z.len() {
+            assert!(z.pmf(r) <= z.pmf(r - 1), "pmf not monotone at rank {r}");
+        }
+        assert_eq!(z.pmf(z.len()), 0.0);
+        assert_eq!(z.cdf(z.len() + 5), 1.0);
+    }
+
+    #[test]
+    fn zipf_lengths_respect_bounds_and_skew_short() {
+        let zl = ZipfLengths::new(8, 96, 1.2).unwrap();
+        let mut rng = Rng::new(11);
+        let mut short = 0usize;
+        const N: usize = 4000;
+        for _ in 0..N {
+            let l = zl.sample(&mut rng);
+            assert!((8..=96).contains(&l));
+            if l <= 16 {
+                short += 1;
+            }
+        }
+        // rank 0 = min length: the head of the Zipf must dominate
+        assert!(short * 2 > N, "only {short}/{N} short requests");
+    }
+
+    #[test]
+    fn zipf_sampler_rejects_degenerate_inputs() {
+        assert!(ZipfSampler::new(0, 1.0).is_err());
+        assert!(ZipfSampler::new(10, 0.0).is_err());
+        assert!(ZipfSampler::new(10, f64::NAN).is_err());
+        assert!(ZipfLengths::new(5, 4, 1.0).is_err());
+        assert!(ZipfLengths::new(0, 4, 1.0).is_err());
     }
 
     #[test]

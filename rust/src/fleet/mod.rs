@@ -1,0 +1,61 @@
+//! Sharded multi-replica serving fleet (DESIGN.md §11).
+//!
+//! N thread-level engine replicas behind one router: each replica is its
+//! own [`crate::coordinator::Engine`] (own thread, own `Sampler`, own
+//! prompt-prefix cache) over a shared, `Arc`-backed weight set. The router
+//! adds what a single engine cannot express:
+//!
+//! * **session affinity** — a prompt's hash pins it to a preferred replica,
+//!   so skewed (Zipf) prompt popularity concentrates each hot prompt on one
+//!   replica's prefix cache;
+//! * **admission control** — bounded per-replica in-flight limits
+//!   (`slots + queue_depth`) and deadline-aware load shedding, surfaced to
+//!   clients as typed protocol-v2 `error.reason` values instead of stalls;
+//! * **live migration** — drain a session at a token boundary, snapshot its
+//!   lane through the checksummed wire format, and continue it on another
+//!   replica bit-identically.
+//!
+//! The fixed-size Transformer-VQ decode state (Thm 3.7 block recurrence:
+//! O(S + 2L) per lane, never growing) is what makes sessions cheap to pin
+//! *and* cheap to move.
+//!
+//! Configuration comes from `tvq serve` flags or the environment:
+//! `TVQ_REPLICAS`, `TVQ_QUEUE_DEPTH`, `TVQ_SHED_DEADLINE_MS`.
+
+mod router;
+mod stats;
+
+pub use router::{Fleet, FleetHandle, FleetJoin, FleetRequest};
+pub use stats::{FleetStats, ReplicaStats};
+
+/// Fleet sizing and admission policy.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Engine replica count (`TVQ_REPLICAS`, default 1).
+    pub replicas: usize,
+    /// Extra in-flight sessions a replica accepts beyond its slot count
+    /// before the router sheds (`TVQ_QUEUE_DEPTH`, default 8).
+    pub queue_depth: usize,
+    /// Shed a request whose deadline is at or under this floor if it would
+    /// have to queue (`TVQ_SHED_DEADLINE_MS`; unset = never deadline-shed).
+    pub shed_deadline_ms: Option<u64>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        let replicas = std::env::var("TVQ_REPLICAS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(1);
+        let queue_depth = std::env::var("TVQ_QUEUE_DEPTH")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(8);
+        let shed_deadline_ms = std::env::var("TVQ_SHED_DEADLINE_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&ms| ms > 0);
+        FleetOptions { replicas, queue_depth, shed_deadline_ms }
+    }
+}

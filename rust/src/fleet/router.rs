@@ -1,0 +1,457 @@
+//! Session-affinity router over N engine replicas.
+//!
+//! Routing: a session's preferred replica is a hash of its prompt tokens
+//! modulo the fleet size — under Zipf-skewed prompt popularity the popular
+//! prompts keep landing on the same replica, whose prompt-prefix cache then
+//! serves them without prefill. When the preferred replica is saturated the
+//! session falls to the least-loaded live replica; when every replica is at
+//! `slots + queue_depth` in-flight the request is shed with a typed reason
+//! instead of stalling in an unbounded queue.
+//!
+//! Live migration: [`FleetHandle::migrate`] drains the session at a token
+//! boundary on its source replica ([`EngineHandle::evict`] — the engine
+//! thread encodes the lane through the checksummed snapshot wire format),
+//! then seats it on the target ([`EngineHandle::inject`]). The sampling rng
+//! and the last sampled token travel with it, so the continued stream is
+//! bit-identical to one that never moved (pinned by
+//! `rust/tests/snapshot_oracle.rs` and `rust/tests/fleet_integration.rs`).
+//!
+//! Determinism: routing decisions (hash, load comparisons) affect *where* a
+//! request runs, never *what* it produces — per-request outputs stay a pure
+//! function of (prompt, params, seed) exactly as in the single engine. The
+//! session map is a `BTreeMap` so iteration order (rebalance victim choice)
+//! is deterministic too.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use crate::coordinator::{
+    Engine, EngineHandle, EngineStats, Frontend, GenEvent, GenRequest, MigratedSession,
+    RequestEvents, RequestHandle, ShedReason, SubmitError,
+};
+use crate::sample::Sampler;
+
+use super::stats::{FleetStats, ReplicaStats};
+use super::FleetOptions;
+
+/// FNV-1a over the prompt's token bytes: the session-affinity key. Stable
+/// across runs (never a `RandomState` hash), so routing is reproducible.
+fn affinity_hash(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct Replica {
+    handle: EngineHandle,
+    /// Slot capacity (the engine's batch size), learned at spawn.
+    slots: usize,
+    /// Router-tracked sessions homed here (seated or queued).
+    inflight: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl Replica {
+    fn load(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    fn dec_inflight(&self) {
+        // saturating: a racing migrate + completion must never wrap to 2^64
+        let _ = self.inflight.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+}
+
+struct SessionEntry {
+    /// Engine-assigned request key ([`RequestHandle::key`]) — stable across
+    /// migrations, used to evict the live session from its replica.
+    key: u64,
+    replica: usize,
+}
+
+struct FleetInner {
+    replicas: Vec<Replica>,
+    opts: FleetOptions,
+    sessions: Mutex<BTreeMap<String, SessionEntry>>,
+    shed_queue_full: AtomicU64,
+    shed_deadline: AtomicU64,
+    duplicate_sessions: AtomicU64,
+    migrations: AtomicU64,
+    migration_failed: AtomicU64,
+    sessions_routed: AtomicU64,
+    affinity_hits: AtomicU64,
+}
+
+/// Lock the session map, recovering from poisoning (same rationale as the
+/// server's live map: the invariant is a plain id → entry association, so a
+/// poisoned guard is still valid and one panicked thread must not cascade).
+fn lock_sessions(
+    m: &Mutex<BTreeMap<String, SessionEntry>>,
+) -> MutexGuard<'_, BTreeMap<String, SessionEntry>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Removes the session entry (and decrements its replica's in-flight count)
+/// when the request's event stream is dropped — i.e. after `Done`/`Error`
+/// was consumed, or the client abandoned the stream.
+struct SessionGuard {
+    fleet: Arc<FleetInner>,
+    session: String,
+}
+
+impl Drop for SessionGuard {
+    fn drop(&mut self) {
+        let mut map = lock_sessions(&self.fleet.sessions);
+        if let Some(e) = map.remove(&self.session) {
+            if let Some(r) = self.fleet.replicas.get(e.replica) {
+                r.dec_inflight();
+            }
+        }
+    }
+}
+
+/// One routed request: the engine stream plus the router bookkeeping guard.
+pub struct FleetRequest {
+    inner: RequestHandle,
+    _guard: SessionGuard,
+}
+
+impl FleetRequest {
+    /// Engine-assigned session key (test introspection).
+    pub fn key(&self) -> u64 {
+        self.inner.key()
+    }
+}
+
+impl RequestEvents for FleetRequest {
+    fn recv_event(&self) -> Result<GenEvent, String> {
+        self.inner.recv()
+    }
+
+    fn cancel_handle(&self) -> crate::coordinator::CancelToken {
+        self.inner.cancel_token()
+    }
+}
+
+/// Joins the replica engine threads after shutdown; returns per-replica
+/// final [`EngineStats`].
+pub struct FleetJoin {
+    joins: Vec<std::thread::JoinHandle<EngineStats>>,
+}
+
+impl FleetJoin {
+    pub fn join(self) -> Vec<EngineStats> {
+        self.joins.into_iter().map(|j| j.join().unwrap_or_default()).collect()
+    }
+}
+
+pub struct Fleet;
+
+impl Fleet {
+    /// Spawn `opts.replicas` engines, each constructing its own `Sampler`
+    /// via `factory(replica_ix)` on its own thread (share parsed weights by
+    /// closing over an `Arc<StateBundle>` and calling
+    /// [`Sampler::install_weights`] — tensor payloads are `Arc`-backed, so
+    /// replicas share one copy). Per-replica root seeds derive from `seed`;
+    /// fixed-seed requests are bit-identical on any replica regardless.
+    pub fn spawn<F>(
+        opts: FleetOptions,
+        factory: F,
+        seed: u64,
+    ) -> anyhow::Result<(FleetHandle, FleetJoin)>
+    where
+        F: Fn(usize) -> anyhow::Result<Sampler> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(opts.replicas >= 1, "fleet needs at least one replica");
+        let factory = Arc::new(factory);
+        let mut replicas = Vec::with_capacity(opts.replicas);
+        let mut joins = Vec::with_capacity(opts.replicas);
+        for i in 0..opts.replicas {
+            let f = Arc::clone(&factory);
+            let (handle, join) = Engine::spawn(move || f(i), seed.wrapping_add(i as u64))?;
+            // the engine is idle right after spawn, so this stats query
+            // answers from its blocking receive; `slots` is the batch size
+            let slots = handle
+                .stats()
+                .map_err(|e| anyhow::anyhow!("replica {i} stats after spawn: {e}"))?
+                .slots as usize;
+            replicas.push(Replica {
+                handle,
+                slots,
+                inflight: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            });
+            joins.push(join);
+        }
+        let inner = FleetInner {
+            replicas,
+            opts,
+            sessions: Mutex::new(BTreeMap::new()),
+            shed_queue_full: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            duplicate_sessions: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            migration_failed: AtomicU64::new(0),
+            sessions_routed: AtomicU64::new(0),
+            affinity_hits: AtomicU64::new(0),
+        };
+        Ok((FleetHandle(Arc::new(inner)), FleetJoin { joins }))
+    }
+}
+
+/// Cloneable router handle: submit via the [`Frontend`] trait, migrate and
+/// inspect via the inherent methods. Thread-safe.
+#[derive(Clone)]
+pub struct FleetHandle(Arc<FleetInner>);
+
+impl FleetHandle {
+    pub fn replicas(&self) -> usize {
+        self.0.replicas.len()
+    }
+
+    /// Which replica currently homes `session` (test introspection).
+    pub fn session_replica(&self, session: &str) -> Option<usize> {
+        lock_sessions(&self.0.sessions).get(session).map(|e| e.replica)
+    }
+
+    /// Live-migrate `session` to replica `dst`. `Ok(true)` = moved (bit
+    /// -identical continuation); `Ok(false)` = nothing to do (session
+    /// already finished, or already on `dst`); `Err` = migration failed —
+    /// whenever possible the session keeps running where it was.
+    pub fn migrate(&self, session: &str, dst: usize) -> Result<bool, String> {
+        let inner = &self.0;
+        if dst >= inner.replicas.len() {
+            return Err(format!("no replica {dst} (fleet of {})", inner.replicas.len()));
+        }
+        let (key, src) = {
+            let map = lock_sessions(&inner.sessions);
+            match map.get(session) {
+                Some(e) => (e.key, e.replica),
+                None => return Ok(false),
+            }
+        };
+        if src == dst {
+            return Ok(false);
+        }
+        if !inner.replicas[dst].is_alive() {
+            return Err(format!("target replica {dst} is dead"));
+        }
+        // evict at the source's next token boundary; the engine keeps the
+        // session running in place if the snapshot fails
+        let m = match inner.replicas[src].handle.evict(key) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(false),
+            Err(e) => {
+                inner.migration_failed.fetch_add(1, Ordering::Relaxed);
+                return Err(format!("evict from replica {src}: {e}"));
+            }
+        };
+        if let Err(m) = inner.replicas[dst].handle.inject(m) {
+            // target died between the aliveness check and the handoff:
+            // re-home the session where it came from
+            inner.replicas[dst].alive.store(false, Ordering::Release);
+            inner.migration_failed.fetch_add(1, Ordering::Relaxed);
+            return match inner.replicas[src].handle.inject(m) {
+                Ok(()) => Err(format!("replica {dst} unavailable; session re-homed to {src}")),
+                Err(m) => {
+                    // both ends gone mid-flight: a clean per-request error,
+                    // never a hang (the guard cleans the map up on drop)
+                    let _ = m.tx.send(GenEvent::Error(
+                        "fleet lost the session's replicas mid-migration".to_string(),
+                    ));
+                    Err(format!("replicas {src} and {dst} both unavailable"))
+                }
+            };
+        }
+        {
+            let mut map = lock_sessions(&inner.sessions);
+            if let Some(e) = map.get_mut(session) {
+                e.replica = dst;
+            }
+        }
+        inner.replicas[src].dec_inflight();
+        inner.replicas[dst].inflight.fetch_add(1, Ordering::AcqRel);
+        inner.migrations.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Move one session from the most-loaded live replica to the least
+    /// -loaded one (first session in deterministic map order). Returns
+    /// whether a migration happened. The fleetbench driver calls this
+    /// periodically, which is also how forced migrations get exercised
+    /// under load.
+    pub fn rebalance(&self) -> Result<bool, String> {
+        let inner = &self.0;
+        let mut max: Option<(usize, u64)> = None;
+        let mut min: Option<(usize, u64)> = None;
+        for (i, r) in inner.replicas.iter().enumerate() {
+            if !r.is_alive() {
+                continue;
+            }
+            let l = r.load();
+            if max.is_none_or(|(_, m)| l > m) {
+                max = Some((i, l));
+            }
+            if min.is_none_or(|(_, m)| l < m) {
+                min = Some((i, l));
+            }
+        }
+        let (Some((src, hi)), Some((dst, lo))) = (max, min) else {
+            return Err("no live replicas".to_string());
+        };
+        if src == dst || hi <= lo + 1 {
+            return Ok(false); // already balanced
+        }
+        let victim = {
+            let map = lock_sessions(&inner.sessions);
+            map.iter().find(|(_, e)| e.replica == src).map(|(s, _)| s.clone())
+        };
+        match victim {
+            Some(s) => self.migrate(&s, dst),
+            None => Ok(false),
+        }
+    }
+
+    /// Chaos hook: crash replica `i`'s engine thread (no drain — in-flight
+    /// clients on it observe per-request errors) and stop routing to it.
+    pub fn crash_replica(&self, i: usize) -> Result<(), String> {
+        let inner = &self.0;
+        let r = inner.replicas.get(i).ok_or_else(|| format!("no replica {i}"))?;
+        r.handle.crash();
+        r.alive.store(false, Ordering::Release);
+        Ok(())
+    }
+
+    /// Per-replica + router statistics. Queries each live replica's engine;
+    /// a replica that stopped answering is reported (and marked) dead.
+    pub fn stats(&self) -> FleetStats {
+        let inner = &self.0;
+        let replicas = inner
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let engine = match r.handle.stats() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        r.alive.store(false, Ordering::Release);
+                        EngineStats::default()
+                    }
+                };
+                ReplicaStats { id: i, alive: r.is_alive(), inflight: r.load(), engine }
+            })
+            .collect();
+        FleetStats {
+            replicas,
+            shed_queue_full: inner.shed_queue_full.load(Ordering::Relaxed),
+            shed_deadline: inner.shed_deadline.load(Ordering::Relaxed),
+            duplicate_sessions: inner.duplicate_sessions.load(Ordering::Relaxed),
+            migrations: inner.migrations.load(Ordering::Relaxed),
+            migration_failed: inner.migration_failed.load(Ordering::Relaxed),
+            sessions_routed: inner.sessions_routed.load(Ordering::Relaxed),
+            sessions_active: lock_sessions(&inner.sessions).len() as u64,
+            affinity_hits: inner.affinity_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Frontend for FleetHandle {
+    type Events = FleetRequest;
+
+    fn submit_session(&self, session: &str, req: GenRequest) -> Result<FleetRequest, SubmitError> {
+        let inner = &self.0;
+        // hold the session lock across routing + submit so two submissions
+        // with the same id cannot both pass the duplicate check
+        let mut map = lock_sessions(&inner.sessions);
+        if map.contains_key(session) {
+            inner.duplicate_sessions.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::DuplicateSession);
+        }
+        let n = inner.replicas.len();
+        let preferred = (affinity_hash(&req.prompt) % n as u64) as usize;
+        loop {
+            let limit = |r: &Replica| (r.slots + inner.opts.queue_depth) as u64;
+            // affinity first: the preferred replica keeps this prompt's
+            // prefix state warm; fall back to the least-loaded live replica
+            let choice = if inner.replicas[preferred].is_alive()
+                && inner.replicas[preferred].load() < limit(&inner.replicas[preferred])
+            {
+                Some(preferred)
+            } else {
+                inner
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.is_alive() && r.load() < limit(r))
+                    .min_by_key(|(_, r)| r.load())
+                    .map(|(i, _)| i)
+            };
+            let Some(ix) = choice else {
+                if inner.replicas.iter().any(|r| r.is_alive()) {
+                    inner.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Shed(ShedReason::QueueFull));
+                }
+                return Err(SubmitError::Unavailable("no live replica".to_string()));
+            };
+            // deadline-aware shed: if the request would have to queue and
+            // its budget is at or under the configured floor, refuse now —
+            // a typed shed beats burning a slot to produce a Deadline finish
+            if let (Some(dl), Some(floor_ms)) = (req.deadline, inner.opts.shed_deadline_ms) {
+                let would_queue = inner.replicas[ix].load() >= inner.replicas[ix].slots as u64;
+                if would_queue && dl <= Duration::from_millis(floor_ms) {
+                    inner.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Shed(ShedReason::Deadline));
+                }
+            }
+            match inner.replicas[ix].handle.submit(req.clone()) {
+                Ok(rh) => {
+                    inner.replicas[ix].inflight.fetch_add(1, Ordering::AcqRel);
+                    inner.sessions_routed.fetch_add(1, Ordering::Relaxed);
+                    if ix == preferred {
+                        inner.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    map.insert(
+                        session.to_string(),
+                        SessionEntry { key: rh.key(), replica: ix },
+                    );
+                    drop(map);
+                    let guard =
+                        SessionGuard { fleet: Arc::clone(&self.0), session: session.to_string() };
+                    return Ok(FleetRequest { inner: rh, _guard: guard });
+                }
+                Err(_) => {
+                    // replica died since the last check: stop routing to it
+                    // and retry the remaining fleet
+                    inner.replicas[ix].alive.store(false, Ordering::Release);
+                }
+            }
+        }
+    }
+
+    fn engine_stats(&self) -> Result<EngineStats, String> {
+        Ok(self.stats().rollup())
+    }
+
+    fn fleet_stats_snapshot(&self) -> Option<FleetStats> {
+        Some(self.stats())
+    }
+
+    fn shutdown_all(&self) {
+        for r in &self.0.replicas {
+            r.handle.shutdown();
+        }
+    }
+}

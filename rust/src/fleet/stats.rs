@@ -1,0 +1,118 @@
+//! Aggregated fleet statistics: one [`EngineStats`] snapshot per replica
+//! plus router-level counters (admission sheds, duplicate refusals, live
+//! migrations, affinity hits), and a fleet-wide rollup.
+
+use crate::coordinator::EngineStats;
+
+/// One replica's view: router-tracked load plus the engine's own counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaStats {
+    pub id: usize,
+    /// False once the router observed the replica's control channel dead
+    /// (thread crash or shutdown); dead replicas stop receiving routes.
+    pub alive: bool,
+    /// Sessions currently homed here by the router (seated or queued).
+    pub inflight: u64,
+    pub engine: EngineStats,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetStats {
+    pub replicas: Vec<ReplicaStats>,
+    /// Requests refused because every eligible replica was at
+    /// `slots + queue_depth` in-flight.
+    pub shed_queue_full: u64,
+    /// Requests refused because their deadline could not survive the queue
+    /// they would have joined.
+    pub shed_deadline: u64,
+    /// Submissions refused because the session id was already live.
+    pub duplicate_sessions: u64,
+    /// Completed live migrations (evict → inject, bit-identical).
+    pub migrations: u64,
+    /// Migrations that failed (the session keeps running on its source
+    /// replica whenever possible).
+    pub migration_failed: u64,
+    /// Sessions accepted and routed to a replica.
+    pub sessions_routed: u64,
+    /// Sessions currently tracked by the router.
+    pub sessions_active: u64,
+    /// Routed sessions that landed on their prompt-affinity replica (the
+    /// prefix-cache locality win under skewed prompt popularity).
+    pub affinity_hits: u64,
+}
+
+impl FleetStats {
+    /// Fleet-wide engine view: counters and occupancy snapshots sum across
+    /// replicas; `ttft_ms_max` takes the max.
+    pub fn rollup(&self) -> EngineStats {
+        let mut out = EngineStats::default();
+        for r in &self.replicas {
+            let e = &r.engine;
+            out.requests_completed += e.requests_completed;
+            out.requests_cancelled += e.requests_cancelled;
+            out.requests_failed += e.requests_failed;
+            out.prefill_tokens += e.prefill_tokens;
+            out.decode_tokens += e.decode_tokens;
+            out.prefix_hits += e.prefix_hits;
+            out.prefix_hit_tokens += e.prefix_hit_tokens;
+            out.steps += e.steps;
+            out.active_slot_steps += e.active_slot_steps;
+            out.ttft_ms_sum += e.ttft_ms_sum;
+            out.ttft_ms_count += e.ttft_ms_count;
+            if e.ttft_ms_max > out.ttft_ms_max {
+                out.ttft_ms_max = e.ttft_ms_max;
+            }
+            out.queued += e.queued;
+            out.active += e.active;
+            out.slots += e.slots;
+            out.active_prefill += e.active_prefill;
+            out.active_decode += e.active_decode;
+            out.migrated_in += e.migrated_in;
+            out.migrated_out += e.migrated_out;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollup_sums_counters_and_maxes_ttft() {
+        let f = FleetStats {
+            replicas: vec![
+                ReplicaStats {
+                    id: 0,
+                    alive: true,
+                    inflight: 2,
+                    engine: EngineStats {
+                        decode_tokens: 10,
+                        ttft_ms_max: 5.0,
+                        slots: 4,
+                        active: 2,
+                        ..Default::default()
+                    },
+                },
+                ReplicaStats {
+                    id: 1,
+                    alive: true,
+                    inflight: 1,
+                    engine: EngineStats {
+                        decode_tokens: 7,
+                        ttft_ms_max: 9.0,
+                        slots: 4,
+                        active: 1,
+                        ..Default::default()
+                    },
+                },
+            ],
+            ..Default::default()
+        };
+        let r = f.rollup();
+        assert_eq!(r.decode_tokens, 17);
+        assert_eq!(r.slots, 8);
+        assert_eq!(r.active, 3);
+        assert!((r.ttft_ms_max - 9.0).abs() < 1e-12);
+    }
+}

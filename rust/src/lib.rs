@@ -27,6 +27,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod json;
 pub mod manifest;
 pub mod metrics;

@@ -16,8 +16,9 @@ use anyhow::{bail, Result};
 
 use transformer_vq::config::TrainConfig;
 use transformer_vq::coordinator::{serve_until, Engine};
+use transformer_vq::fleet::{Fleet, FleetOptions};
 use transformer_vq::rng::Rng;
-use transformer_vq::runtime::{auto_backend, auto_backend_threads};
+use transformer_vq::runtime::{auto_backend, auto_backend_threads, StateBundle};
 use transformer_vq::sample::{SampleParams, Sampler};
 use transformer_vq::schedule::LrSchedule;
 use transformer_vq::tokenizer::{ByteTokenizer, Tokenizer};
@@ -36,7 +37,8 @@ COMMANDS
             [--beams N]  (prefill the prompt once, fork the state into N
             divergent sampling lanes — N at most the preset's batch size)
   serve     --preset P [--addr HOST:PORT] [--checkpoint D] [--threads N]
-            [--prefix-cache N]
+            [--prefix-cache N] [--replicas N] [--queue-depth N]
+            [--shed-deadline-ms N]
             (streaming NDJSON protocol v2 + v1 one-shot; type 'quit' on
             stdin for graceful shutdown with drained requests and stats)
   inspect
@@ -60,6 +62,14 @@ accumulation stays f32, bits are deterministic per precision mode.
 snapshots (also TVQ_PREFIX_CACHE=N; default off). A request whose prompt
 starts with a cached prompt prefills only the suffix — bit-identical to
 a cold prefill. The cache clears when a checkpoint is loaded.
+--replicas N serves a fleet of N engine replicas behind a session-affinity
+router with admission control and live migration (also TVQ_REPLICAS;
+default 1 = single engine, DESIGN.md §11). The checkpoint is parsed once
+and shared across replicas. --queue-depth N bounds per-replica queued
+sessions beyond the slot count before requests shed (also TVQ_QUEUE_DEPTH;
+default 8). --shed-deadline-ms N sheds queued-bound requests whose
+deadline is at or under N ms (also TVQ_SHED_DEADLINE_MS; default off).
+Sheds surface as typed protocol-v2 error reasons, never stalls.
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -258,20 +268,33 @@ fn main() -> Result<()> {
             let addr = args.str("addr", "127.0.0.1:7433");
             let ckpt = args.opt("checkpoint");
             let dir_c = dir.clone();
-            // backends may not be Send (the PJRT client is Rc-based), so
-            // the engine constructs its backend on its own thread
-            let (handle, join) = Engine::spawn(
-                move || {
-                    let backend = auto_backend(&dir_c)?;
-                    let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
-                    if let Some(ck) = ckpt {
-                        sampler
-                            .load_weights(std::path::Path::new(&ck).join("state.tvq"))?;
-                    }
-                    Ok(sampler)
-                },
-                0,
-            )?;
+            // fleet flags relay through the env (FleetOptions::default
+            // reads them), mirroring the --threads/--simd pattern
+            if let Some(v) = args.opt("replicas") {
+                let n: usize = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad value for --replicas: {e}"))?;
+                if n == 0 {
+                    bail!("--replicas must be at least 1");
+                }
+                std::env::set_var("TVQ_REPLICAS", n.to_string());
+            }
+            if let Some(v) = args.opt("queue-depth") {
+                let n: usize = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad value for --queue-depth: {e}"))?;
+                std::env::set_var("TVQ_QUEUE_DEPTH", n.to_string());
+            }
+            if let Some(v) = args.opt("shed-deadline-ms") {
+                let n: u64 = v.parse().map_err(|e| {
+                    anyhow::anyhow!("bad value for --shed-deadline-ms: {e}")
+                })?;
+                if n == 0 {
+                    bail!("--shed-deadline-ms must be positive (omit to disable)");
+                }
+                std::env::set_var("TVQ_SHED_DEADLINE_MS", n.to_string());
+            }
+            let opts = FleetOptions::default();
             // graceful shutdown: type "quit" (or "shutdown") on stdin. The
             // vendored dependency set has no signal-handling crate, so
             // ctrl-c still kills the process hard; the stdin path drains
@@ -297,6 +320,80 @@ fn main() -> Result<()> {
                 }
             });
             eprintln!("type 'quit' to drain in-flight requests and report stats");
+            if opts.replicas > 1 {
+                // fleet path: parse the checkpoint once, share the
+                // Arc-backed bundle across replica samplers
+                let staged = match ckpt {
+                    Some(ck) => {
+                        let mut s = StateBundle::new();
+                        s.load_groups(std::path::Path::new(&ck).join("state.tvq"))?;
+                        Some(std::sync::Arc::new(s))
+                    }
+                    None => None,
+                };
+                eprintln!(
+                    "fleet: {} replicas, queue depth {}, deadline shed {}",
+                    opts.replicas,
+                    opts.queue_depth,
+                    opts.shed_deadline_ms
+                        .map_or("off".to_string(), |ms| format!("{ms} ms")),
+                );
+                let (fleet, join) = Fleet::spawn(
+                    opts,
+                    move |_replica| {
+                        let backend = auto_backend(&dir_c)?;
+                        let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
+                        if let Some(s) = &staged {
+                            sampler.install_weights(s)?;
+                        }
+                        Ok(sampler)
+                    },
+                    0,
+                )?;
+                serve_until(&addr, fleet.clone(), sd_rx)?;
+                // engines have drained; their final counters come back via
+                // join, while the router's own counters stay readable
+                let per_replica = join.join();
+                let mut fs = fleet.stats();
+                for (r, e) in fs.replicas.iter_mut().zip(per_replica) {
+                    r.engine = e;
+                }
+                let stats = fs.rollup();
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                eprintln!(
+                    "fleet stats: {} completed, {} cancelled, {} failed; \
+                     {} decode tokens over {} steps; routed {} ({} affinity), \
+                     shed {} queue-full + {} deadline, {} duplicates; \
+                     {} migrations ({} failed)",
+                    stats.requests_completed,
+                    stats.requests_cancelled,
+                    stats.requests_failed,
+                    stats.decode_tokens,
+                    stats.steps,
+                    fs.sessions_routed,
+                    fs.affinity_hits,
+                    fs.shed_queue_full,
+                    fs.shed_deadline,
+                    fs.duplicate_sessions,
+                    fs.migrations,
+                    fs.migration_failed,
+                );
+                return Ok(());
+            }
+            // backends may not be Send (the PJRT client is Rc-based), so
+            // the engine constructs its backend on its own thread
+            let (handle, join) = Engine::spawn(
+                move || {
+                    let backend = auto_backend(&dir_c)?;
+                    let mut sampler = Sampler::new(backend.as_ref(), &preset)?;
+                    if let Some(ck) = ckpt {
+                        sampler
+                            .load_weights(std::path::Path::new(&ck).join("state.tvq"))?;
+                    }
+                    Ok(sampler)
+                },
+                0,
+            )?;
             serve_until(&addr, handle.clone(), sd_rx)?;
             let stats = join.join().unwrap_or_default();
             // brief grace so connection writer threads flush done frames

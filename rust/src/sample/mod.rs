@@ -113,6 +113,15 @@ impl Sampler {
     pub fn load_weights(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let mut staged = StateBundle::new();
         staged.load_groups(path)?;
+        self.install_weights(&staged)
+    }
+
+    /// Overwrite model weights from an already-parsed bundle (params/cb
+    /// groups). Tensor payloads are `Arc`-backed, so N fleet replicas can
+    /// parse a checkpoint once and install shared clones — per-replica cost
+    /// is refcounts, not copies. Invalidates the prefix cache like
+    /// [`Sampler::load_weights`].
+    pub fn install_weights(&mut self, staged: &StateBundle) -> Result<()> {
         for g in ["params", "cb"] {
             let ts = staged.group(g)?.to_vec();
             self.bundle.set_group(g, ts);
@@ -357,6 +366,23 @@ impl Sampler {
             .group_mut("state")
             .ok_or_else(|| anyhow::anyhow!("no state group"))?;
         snap.apply_to_tensors(&cfg, group, slot)
+    }
+
+    /// [`Sampler::snapshot_slot`] flattened to the checksummed snapshot
+    /// wire format — the unit a fleet router hands from one replica to
+    /// another during live migration.
+    pub fn encode_slot(&self, slot: usize) -> Result<Vec<u8>> {
+        let snap = self.snapshot_slot(slot)?;
+        snap.encode(&self.exe.spec().config)
+    }
+
+    /// Decode + [`Sampler::restore_slot`] in one step: seat wire bytes from
+    /// [`Sampler::encode_slot`] (possibly produced by another replica with
+    /// the same preset) into `slot`, byte-exactly.
+    pub fn restore_slot_wire(&mut self, slot: usize, bytes: &[u8]) -> Result<()> {
+        let cfg = self.exe.spec().config.clone();
+        let snap = LaneSnapshot::decode(&cfg, bytes)?;
+        self.restore_slot(slot, &snap)
     }
 
     /// Copy slot `src`'s decode state over slot `dst` (beam fan-out:

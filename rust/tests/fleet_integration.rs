@@ -1,0 +1,298 @@
+//! Fleet integration tests (DESIGN.md §11): session-affinity routing must
+//! never change sampled bits, admission control must shed with typed
+//! reasons instead of stalling, live migration must be invisible in the
+//! token stream, and a dead replica must surface as a clean per-request
+//! error — not a hang. All over the native backend on a fresh checkout.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use transformer_vq::coordinator::{
+    serve_on, Client, Engine, EventFrame, Frontend, GenEvent, GenRequest, GenerateFrame,
+    RequestEvents, ShedReason, SubmitError,
+};
+use transformer_vq::fleet::{Fleet, FleetHandle, FleetJoin, FleetOptions};
+use transformer_vq::native::NativeBackend;
+use transformer_vq::sample::Sampler;
+
+fn spawn_fleet(
+    replicas: usize,
+    queue_depth: usize,
+    shed_deadline_ms: Option<u64>,
+) -> (FleetHandle, FleetJoin) {
+    Fleet::spawn(
+        FleetOptions { replicas, queue_depth, shed_deadline_ms },
+        |_replica| Sampler::new(&NativeBackend::new(), "quickstart"),
+        42,
+    )
+    .unwrap()
+}
+
+fn req(prompt: &[i32], max_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt: prompt.to_vec(),
+        max_tokens,
+        seed: Some(seed),
+        ..GenRequest::default()
+    }
+}
+
+/// The routed fleet is bit-identical to a bare engine on fixed seeds —
+/// the fleet-vs-engine oracle from the acceptance criteria.
+#[test]
+fn fleet_output_is_bit_identical_to_single_engine() {
+    let cases: Vec<(Vec<i32>, usize, u64)> = (0..8)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..3 + i % 4).map(|k| 65 + 7 * i as i32 + k as i32).collect();
+            (prompt, 6 + 2 * (i % 3), 500 + i as u64)
+        })
+        .collect();
+
+    let (engine, ejoin) = Engine::spawn(
+        || Sampler::new(&NativeBackend::new(), "quickstart"),
+        42,
+    )
+    .unwrap();
+    let want: Vec<Vec<i32>> = cases
+        .iter()
+        .map(|(p, n, s)| engine.generate(req(p, *n, *s)).unwrap().tokens)
+        .collect();
+    engine.shutdown();
+    let _ = ejoin.join();
+
+    let (fleet, join) = spawn_fleet(3, 8, None);
+    for (i, (p, n, s)) in cases.iter().enumerate() {
+        let rh = fleet.submit_session(&format!("oracle-{i}"), req(p, *n, *s)).unwrap();
+        let got = rh.wait_outcome().unwrap().tokens;
+        assert_eq!(got, want[i], "case {i}: routing changed sampled bits");
+    }
+    let stats = fleet.stats();
+    assert_eq!(stats.sessions_routed, 8);
+    assert_eq!(stats.sessions_active, 0, "guards must clear finished sessions");
+    fleet.shutdown_all();
+    let _ = join.join();
+}
+
+/// Forced mid-stream migration: bounce a live session between replicas at
+/// token boundaries; the stream must match an unmigrated run bit for bit.
+#[test]
+fn mid_stream_migration_is_bit_identical() {
+    let (fleet, join) = spawn_fleet(3, 8, None);
+    let r = req(&[72, 101, 108, 108, 111], 64, 4242);
+
+    let rh = fleet.submit_session("mover", r.clone()).unwrap();
+    let mut got = Vec::new();
+    let mut moved = 0usize;
+    loop {
+        match rh.recv_event().unwrap() {
+            GenEvent::Delta { token, .. } => {
+                got.push(token);
+                if moved < 2 {
+                    let src = fleet.session_replica("mover").unwrap_or(0);
+                    if fleet.migrate("mover", (src + 1) % 3).unwrap() {
+                        moved += 1;
+                        assert_eq!(fleet.session_replica("mover"), Some((src + 1) % 3));
+                    }
+                }
+            }
+            GenEvent::Done(o) => {
+                assert_eq!(o.tokens, got, "deltas disagree with the final outcome");
+                assert_eq!(o.reason, transformer_vq::coordinator::FinishReason::Length);
+                break;
+            }
+            GenEvent::Error(e) => panic!("migrated stream errored: {e}"),
+            GenEvent::Started { .. } => {}
+        }
+    }
+    assert!(moved >= 1, "no migration landed mid-stream");
+    assert!(fleet.stats().migrations >= moved as u64);
+
+    // same request, never migrated
+    let stay = fleet.submit_session("stayer", r).unwrap().wait_outcome().unwrap().tokens;
+    assert_eq!(got, stay, "migration changed sampled bits");
+
+    fleet.shutdown_all();
+    let per = join.join();
+    let moved_in: u64 = per.iter().map(|s| s.migrated_in).sum();
+    let moved_out: u64 = per.iter().map(|s| s.migrated_out).sum();
+    assert!(moved_in >= 1 && moved_in == moved_out, "migration counters unbalanced");
+}
+
+/// A second submission under a live session id is refused with a typed
+/// error; the id frees up once the first stream finishes.
+#[test]
+fn duplicate_session_refused_while_live_then_reusable() {
+    let (fleet, join) = spawn_fleet(2, 8, None);
+    let first = fleet.submit_session("dup", req(&[97, 98], 32, 7)).unwrap();
+    match fleet.submit_session("dup", req(&[97, 98], 4, 8)) {
+        Err(SubmitError::DuplicateSession) => {}
+        other => panic!("expected DuplicateSession, got {other:?}"),
+    }
+    assert_eq!(fleet.stats().duplicate_sessions, 1);
+    let tokens = first.wait_outcome().unwrap().tokens;
+    assert_eq!(tokens.len(), 32);
+    // consumed stream -> guard dropped -> the id is free again
+    let again = fleet.submit_session("dup", req(&[97, 98], 4, 8)).unwrap();
+    assert_eq!(again.wait_outcome().unwrap().tokens.len(), 4);
+    fleet.shutdown_all();
+    let _ = join.join();
+}
+
+/// Admission control: with zero queue depth, the slot count is the hard
+/// in-flight limit and the overflow request sheds with QueueFull.
+#[test]
+fn queue_full_shed_is_typed() {
+    // quickstart batch = 4 slots; queue_depth = 0 -> limit 4
+    let (fleet, join) = spawn_fleet(1, 0, None);
+    let mut held = Vec::new();
+    for i in 0..4 {
+        held.push(
+            fleet.submit_session(&format!("fill-{i}"), req(&[80 + i], 48, i as u64)).unwrap(),
+        );
+    }
+    match fleet.submit_session("overflow", req(&[99], 4, 9)) {
+        Err(SubmitError::Shed(ShedReason::QueueFull)) => {}
+        other => panic!("expected Shed(QueueFull), got {other:?}"),
+    }
+    assert_eq!(fleet.stats().shed_queue_full, 1);
+    for h in held {
+        h.wait_outcome().unwrap();
+    }
+    // capacity freed: the same submission is admitted now
+    fleet.submit_session("overflow", req(&[99], 4, 9)).unwrap().wait_outcome().unwrap();
+    fleet.shutdown_all();
+    let _ = join.join();
+}
+
+/// Deadline-aware shedding: a request that would queue and whose budget is
+/// under the configured floor is refused up front with a typed reason.
+#[test]
+fn deadline_shed_is_typed() {
+    let (fleet, join) = spawn_fleet(1, 2, Some(50));
+    let mut held = Vec::new();
+    for i in 0..4 {
+        held.push(
+            fleet.submit_session(&format!("busy-{i}"), req(&[70 + i], 48, i as u64)).unwrap(),
+        );
+    }
+    // all 4 slots look taken -> this deadline cannot survive the queue
+    let tight = GenRequest {
+        deadline: Some(Duration::from_millis(10)),
+        ..req(&[99], 8, 5)
+    };
+    match fleet.submit_session("tight", tight) {
+        Err(SubmitError::Shed(ShedReason::Deadline)) => {}
+        other => panic!("expected Shed(Deadline), got {other:?}"),
+    }
+    assert_eq!(fleet.stats().shed_deadline, 1);
+    // an identical request with a roomy deadline is admitted (queue slot free)
+    let roomy = GenRequest {
+        deadline: Some(Duration::from_secs(60)),
+        ..req(&[99], 8, 5)
+    };
+    fleet.submit_session("roomy", roomy).unwrap();
+    for h in held {
+        h.wait_outcome().unwrap();
+    }
+    fleet.shutdown_all();
+    let _ = join.join();
+}
+
+/// A crashed replica thread surfaces as a clean per-request error (within a
+/// bounded wait, never a hang), and later submissions route around it.
+#[test]
+fn crashed_replica_gives_clean_error_and_reroutes() {
+    let (fleet, join) = spawn_fleet(2, 8, None);
+    let rh = fleet.submit_session("victim", req(&[86, 86, 86], 64, 3)).unwrap();
+    let ix = fleet.session_replica("victim").unwrap();
+    fleet.crash_replica(ix).unwrap();
+
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        tx.send(rh.wait_outcome()).unwrap();
+    });
+    let outcome = rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("crashed replica hung the client instead of erroring");
+    assert!(outcome.is_err(), "request on a crashed replica reported success");
+
+    // the dead replica is out of rotation: all new sessions land on the
+    // survivor and complete
+    for i in 0..3 {
+        let rh = fleet.submit_session(&format!("after-{i}"), req(&[65 + i], 4, i as u64)).unwrap();
+        assert_eq!(fleet.session_replica(&format!("after-{i}")), Some(1 - ix));
+        rh.wait_outcome().unwrap();
+    }
+    let stats = fleet.stats();
+    assert!(!stats.replicas[ix].alive);
+    assert!(stats.replicas[1 - ix].alive);
+    fleet.shutdown_all();
+    let _ = join.join();
+}
+
+/// End-to-end over TCP: the NDJSON server fronting a fleet serves streams,
+/// answers `stats` (rollup) and `fleet_stats` (per-replica), and sheds with
+/// a typed `error.reason` on the wire.
+#[test]
+fn wire_level_fleet_serving_and_typed_shed() {
+    let (fleet, join) = spawn_fleet(2, 0, None);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (sd_tx, sd_rx) = mpsc::channel();
+    let server = {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || serve_on(listener, fleet, Some(sd_rx)))
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    // 2 replicas x 4 slots, queue_depth 0 -> 8 admitted, the 9th sheds
+    for i in 0..9 {
+        let mut g = GenerateFrame::new(format!("g{i}"), "hello fleet", 48);
+        g.seed = Some(100 + i as u64);
+        client.generate(&g).unwrap();
+    }
+    let (mut done, mut shed) = (0usize, 0usize);
+    while done + shed < 9 {
+        match client.next_event().unwrap() {
+            EventFrame::Done { tokens, .. } => {
+                assert_eq!(tokens.len(), 48);
+                done += 1;
+            }
+            EventFrame::Error { reason, error, .. } => {
+                assert_eq!(
+                    reason.as_deref(),
+                    Some("shed_queue_full"),
+                    "untyped wire error: {error}"
+                );
+                shed += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!((done, shed), (8, 1));
+
+    // stats -> fleet rollup; fleet_stats -> per-replica breakdown
+    client.stats().unwrap();
+    loop {
+        if let EventFrame::Stats(s) = client.next_event().unwrap() {
+            assert_eq!(s.slots, 8, "rollup must sum both replicas' slots");
+            assert_eq!(s.requests_completed, 8);
+            break;
+        }
+    }
+    client.fleet_stats().unwrap();
+    loop {
+        if let EventFrame::FleetStats(fs) = client.next_event().unwrap() {
+            assert_eq!(fs.replicas.len(), 2);
+            assert!(fs.replicas.iter().all(|r| r.alive));
+            assert_eq!(fs.shed_queue_full, 1);
+            assert_eq!(fs.sessions_routed, 8);
+            break;
+        }
+    }
+
+    sd_tx.send(()).unwrap();
+    server.join().unwrap().unwrap();
+    fleet.shutdown_all();
+    let _ = join.join();
+}

@@ -3,7 +3,7 @@
 //! many deterministic seeds; failures report the reproducing seed.
 
 use transformer_vq::audit::{audit_file, lex};
-use transformer_vq::data::{markov, TbpttBatcher};
+use transformer_vq::data::{markov, TbpttBatcher, ZipfLengths, ZipfSampler};
 use transformer_vq::json::Json;
 use transformer_vq::manifest::ModelConfig;
 use transformer_vq::metrics::LatencyHistogram;
@@ -440,6 +440,68 @@ fn prop_snapshot_decode_is_total_on_hostile_bytes() {
         let sess_err = SessionSnapshot::decode(&cfg, &mangled);
         assert!(lane_err.is_err(), "lane decode accepted {kind}");
         assert!(sess_err.is_err(), "session decode accepted {kind}");
+    });
+}
+
+#[test]
+fn prop_zipf_pmf_is_a_monotone_distribution() {
+    check_property("zipf pmf sums to 1 and decays with rank", 25, |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let s = 0.2 + rng.f64() * 2.3;
+        let z = ZipfSampler::new(n, s).unwrap();
+        let total: f64 = (0..n).map(|r| z.pmf(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "pmf sums to {total}");
+        for r in 1..n {
+            assert!(z.pmf(r) <= z.pmf(r - 1) + 1e-12, "pmf not monotone at rank {r}");
+        }
+        assert!((z.cdf(n - 1) - 1.0).abs() < 1e-12, "cdf must end at exactly 1");
+    });
+}
+
+#[test]
+fn prop_zipf_samples_deterministic_in_range_and_tail_bounded() {
+    check_property("zipf sampling: deterministic, in range, tails match cdf", 12, |rng| {
+        let n = 2 + rng.below(60) as usize;
+        let s = 0.5 + rng.f64() * 1.5;
+        let z = ZipfSampler::new(n, s).unwrap();
+        let seed = rng.next_u64();
+        let draws = 4000usize;
+        let mut counts = vec![0usize; n];
+        let mut r1 = Rng::new(seed);
+        for _ in 0..draws {
+            let k = z.sample(&mut r1);
+            assert!(k < n, "sample {k} out of range");
+            counts[k] += 1;
+        }
+        // same seed -> identical stream
+        let mut r2 = Rng::new(seed);
+        let replay: Vec<usize> = (0..16).map(|_| z.sample(&mut r2)).collect();
+        let mut r3 = Rng::new(seed);
+        let replay2: Vec<usize> = (0..16).map(|_| z.sample(&mut r3)).collect();
+        assert_eq!(replay, replay2);
+        // tail bound: empirical mass of the top half of ranks tracks the
+        // analytic cdf within a generous sampling tolerance
+        let half = n / 2;
+        let analytic = z.cdf(half);
+        let empirical = counts[..=half].iter().sum::<usize>() as f64 / draws as f64;
+        assert!(
+            (empirical - analytic).abs() < 0.1,
+            "top-half mass {empirical:.3} vs analytic {analytic:.3} (n={n}, s={s:.2})"
+        );
+    });
+}
+
+#[test]
+fn prop_zipf_lengths_stay_in_bounds() {
+    check_property("zipf request lengths honor [min, max]", 15, |rng| {
+        let min = 1 + rng.below(32) as usize;
+        let max = min + rng.below(128) as usize;
+        let s = 0.4 + rng.f64() * 1.6;
+        let z = ZipfLengths::new(min, max, s).unwrap();
+        for _ in 0..500 {
+            let l = z.sample(rng);
+            assert!((min..=max).contains(&l), "length {l} outside [{min}, {max}]");
+        }
     });
 }
 

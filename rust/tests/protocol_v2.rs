@@ -88,6 +88,7 @@ fn prop_event_frame_roundtrip() {
             3 => EventFrame::Error {
                 id: if rng.f64() < 0.5 { Some(id) } else { None },
                 error: rand_string(rng, 30),
+                reason: if rng.f64() < 0.5 { Some("shed_queue_full".into()) } else { None },
             },
             _ => EventFrame::Stats(EngineStats {
                 requests_completed: rng.below(1000),
@@ -95,6 +96,8 @@ fn prop_event_frame_roundtrip() {
                 requests_failed: rng.below(10),
                 prefill_tokens: rng.below(1 << 20),
                 decode_tokens: rng.below(1 << 20),
+                prefix_hits: rng.below(100),
+                prefix_hit_tokens: rng.below(1 << 16),
                 steps: rng.below(1 << 20),
                 active_slot_steps: rng.below(1 << 20),
                 ttft_ms_sum: rng.f64() * 1000.0,
@@ -102,6 +105,11 @@ fn prop_event_frame_roundtrip() {
                 ttft_ms_max: rng.f64() * 100.0,
                 queued: rng.below(64),
                 active: rng.below(4),
+                slots: rng.below(8),
+                active_prefill: rng.below(4),
+                active_decode: rng.below(4),
+                migrated_in: rng.below(16),
+                migrated_out: rng.below(16),
             }),
         };
         let back = EventFrame::parse(&frame.dump()).unwrap();

@@ -401,3 +401,75 @@ fn mid_stream_migration_preserves_text_stop_and_rng() {
         "restored rng is not continuing the original stream"
     );
 }
+
+/// Engine-level live migration oracle: a session evicted from one engine
+/// at a token boundary and injected into another must finish with exactly
+/// the tokens an uninterrupted engine produces, and the events keep
+/// flowing on the original client channel throughout.
+#[test]
+fn engine_evict_inject_is_bit_identical() {
+    use transformer_vq::coordinator::{Engine, GenEvent, GenRequest};
+
+    let spawn = || {
+        Engine::spawn(|| Sampler::new(&NativeBackend::new(), "quickstart"), 77).unwrap()
+    };
+    let request = GenRequest {
+        prompt: vec![104, 101, 108, 108, 111],
+        max_tokens: 64,
+        seed: Some(909),
+        ..GenRequest::default()
+    };
+
+    // the uninterrupted reference run
+    let (a, ajoin) = spawn();
+    let want = a.generate(request.clone()).unwrap().tokens;
+    a.shutdown();
+    let _ = ajoin.join();
+
+    // same request on B; evict after the first delta; inject into C
+    let (b, bjoin) = spawn();
+    let (c, cjoin) = spawn();
+    let rh = b.submit(request).unwrap();
+    let key = rh.key();
+    let mut got = Vec::new();
+    loop {
+        match rh.recv().unwrap() {
+            GenEvent::Delta { token, .. } => {
+                got.push(token);
+                break;
+            }
+            GenEvent::Started { .. } => {}
+            other => panic!("expected a delta before eviction, got {other:?}"),
+        }
+    }
+    let m = b
+        .evict(key)
+        .unwrap()
+        .expect("a decoding session must be evictable");
+    assert!(m.lane_wire.is_some(), "seated eviction must carry lane state");
+    assert!(c.inject(m).is_ok(), "idle engine refused an injected session");
+    loop {
+        match rh.recv().unwrap() {
+            GenEvent::Delta { token, .. } => got.push(token),
+            GenEvent::Done(o) => {
+                assert_eq!(o.tokens, got, "deltas disagree with the outcome");
+                break;
+            }
+            GenEvent::Error(e) => panic!("migrated stream errored: {e}"),
+            GenEvent::Started { .. } => {}
+        }
+    }
+    assert_eq!(got, want, "evict + inject changed sampled bits");
+
+    b.shutdown();
+    c.shutdown();
+    let bs = bjoin.join().unwrap_or_default();
+    let cs = cjoin.join().unwrap_or_default();
+    assert_eq!(bs.migrated_out, 1, "source engine did not count the eviction");
+    assert_eq!(cs.migrated_in, 1, "target engine did not count the injection");
+    assert_eq!(
+        (got.len() as u64),
+        bs.decode_tokens + cs.decode_tokens,
+        "decode work must split across the two engines"
+    );
+}
