@@ -1,0 +1,543 @@
+//! Chaos bench for the self-healing fleet (DESIGN.md §12): Zipf traffic
+//! under continuous deterministic fault injection, with a hard identity
+//! gate against a fault-free reference run.
+//!
+//! Phase 1 computes the reference: a fixed-seed request set runs through
+//! one bare engine with no faults attached — its outputs are the ground
+//! truth every chaos outcome is compared against.
+//!
+//! Phase 2 replays the same requests against a supervised fleet with a
+//! [`FaultPlan`] live: replicas crash and stall at token boundaries,
+//! migrations drop or corrupt snapshots in transit, and a rebalance
+//! driver keeps sessions moving under fire. The gate is absolute — every
+//! session either completes **bit-identical** to the reference or fails
+//! with a *typed* reason (shed, `replica_lost`, mid-migration loss, or
+//! detected snapshot corruption); any token mismatch, untyped error, or
+//! stream that stops making progress (per-event timeout) fails the bench.
+//! A forced-crash drill then pins the headline robustness claim: a
+//! mid-stream session whose replica is killed resumes from its vault
+//! snapshot on a survivor and still matches the reference exactly, and
+//! the supervisor's restart/recovery counters prove the self-healing
+//! actually ran.
+//!
+//! Phase 3 tortures checkpoint I/O: a real trainer saves under injected
+//! write/sync/rename failures, and after every failed save a fresh
+//! trainer must still load the last good checkpoint.
+//!
+//! Emits `BENCH_native_chaos.json` (path overridable) — the fifth CI
+//! perf artifact, next to decode/train/serve/fleet.
+//!
+//! Usage: cargo run --release --example chaosbench --
+//!        [preset] [replicas] [sessions] [faults_spec] [out.json]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use transformer_vq::coordinator::{Engine, Frontend, GenEvent, GenRequest, RequestEvents};
+use transformer_vq::data::{TbpttBatcher, ZipfLengths, ZipfSampler};
+use transformer_vq::fleet::{
+    FaultPlan, Fleet, FleetHandle, FleetOptions, Supervisor, SupervisorOptions,
+};
+use transformer_vq::json::Json;
+use transformer_vq::native::NativeBackend;
+use transformer_vq::rng::Rng;
+use transformer_vq::sample::{SampleParams, Sampler};
+use transformer_vq::schedule::LrSchedule;
+use transformer_vq::train::{load_checkpoint, save_checkpoint, save_checkpoint_with, Trainer};
+
+/// Per-event progress bound: a stream that takes longer than this between
+/// events is declared hung, and a hang fails the bench.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Deterministic 32-prompt pool, ordered hot-first.
+fn prompt_pool() -> Vec<String> {
+    (0..32)
+        .map(|i| {
+            let stem = match i % 4 {
+                0 => "the cache holds",
+                1 => "attention over codes",
+                2 => "linear time decode",
+                _ => "quantized keys",
+            };
+            format!("{stem} #{i:02} ")
+        })
+        .collect()
+}
+
+fn req(prompt: &str, max_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt: prompt.bytes().map(i32::from).collect(),
+        max_tokens,
+        params: SampleParams::default(),
+        seed: Some(seed),
+        ..GenRequest::default()
+    }
+}
+
+/// One deterministic traffic case: fixed prompt, length, and sampling
+/// seed, so the fault-free and chaos runs issue byte-identical requests.
+struct Case {
+    prompt: String,
+    max_tokens: usize,
+    seed: u64,
+}
+
+fn build_cases(n: usize) -> Result<Vec<Case>> {
+    let pool = prompt_pool();
+    let mut rng = Rng::new(0xC4A0_5EED);
+    let popularity = ZipfSampler::new(pool.len(), 1.1)?;
+    let lengths = ZipfLengths::new(8, 48, 1.2)?;
+    Ok((0..n)
+        .map(|i| Case {
+            prompt: pool[popularity.sample(&mut rng)].clone(),
+            max_tokens: lengths.sample(&mut rng),
+            seed: 5000 + i as u64,
+        })
+        .collect())
+}
+
+/// The long-running request used by the forced-crash drill.
+fn drill_req() -> GenRequest {
+    req(&prompt_pool()[0], 96, 4242)
+}
+
+/// Phase 1: run every case (and the drill request) through one bare,
+/// fault-free engine to get the reference token streams.
+fn reference_outputs(preset: &str, cases: &[Case]) -> Result<(Vec<Vec<i32>>, Vec<i32>)> {
+    let preset_c = preset.to_string();
+    let (engine, ejoin) =
+        Engine::spawn(move || Sampler::new(&NativeBackend::new(), &preset_c), 42)?;
+    let mut want = Vec::new();
+    for c in cases {
+        let rh = engine
+            .submit(req(&c.prompt, c.max_tokens, c.seed))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        want.push(rh.wait_outcome().map_err(|e| anyhow::anyhow!(e))?.tokens);
+    }
+    let rh = engine.submit(drill_req()).map_err(|e| anyhow::anyhow!(e))?;
+    let drill = rh.wait_outcome().map_err(|e| anyhow::anyhow!(e))?.tokens;
+    engine.shutdown();
+    let _ = ejoin.join();
+    Ok((want, drill))
+}
+
+/// Typed failure taxonomy for chaos outcomes. Anything not in this enum
+/// (plus bit-identical completion) fails the bench.
+#[derive(Default)]
+struct WorkerReport {
+    completed: usize,
+    /// Session completed but tokens diverged from the reference — fatal.
+    mismatches: Vec<usize>,
+    /// Typed `replica_lost` / mid-migration losses.
+    lost_typed: usize,
+    /// Target detected a corrupted in-transit snapshot (checksum trip).
+    corruption_detected: usize,
+    shed: usize,
+    /// Untyped stream errors — fatal.
+    untyped: Vec<(usize, String)>,
+    /// Streams that stopped making progress — fatal.
+    hangs: Vec<usize>,
+}
+
+fn typed_loss(e: &str) -> bool {
+    e.starts_with("replica_lost") || e.contains("mid-migration")
+}
+
+fn corruption(e: &str) -> bool {
+    // target replica's checksum verification caught the flipped byte and
+    // surfaced a clean per-request error instead of silent corruption
+    e.starts_with("restore migrated slot")
+}
+
+/// Drive one case against the fleet and classify the outcome.
+fn run_case(fleet: &FleetHandle, ix: usize, c: &Case, want: &[i32], rep: &mut WorkerReport) {
+    let rh = match fleet.submit_session(&format!("chaos-{ix}"), req(&c.prompt, c.max_tokens, c.seed))
+    {
+        Ok(rh) => rh,
+        Err(_) => {
+            // submit-time refusals are always typed (shed / duplicate /
+            // no live replica) — admission control doing its job
+            rep.shed += 1;
+            return;
+        }
+    };
+    let mut got: Vec<i32> = Vec::new();
+    loop {
+        match rh.recv_event_timeout(EVENT_TIMEOUT) {
+            Ok(Some(GenEvent::Delta { token, .. })) => got.push(token),
+            Ok(Some(GenEvent::Done(o))) => {
+                // the streamed deltas must also agree with the final
+                // tokens: recovery replays may never duplicate or skip
+                if o.tokens == want && got == o.tokens {
+                    rep.completed += 1;
+                } else {
+                    rep.mismatches.push(ix);
+                }
+                return;
+            }
+            Ok(Some(GenEvent::Error(e))) => {
+                if typed_loss(&e) {
+                    rep.lost_typed += 1;
+                } else if corruption(&e) {
+                    rep.corruption_detected += 1;
+                } else {
+                    rep.untyped.push((ix, e));
+                }
+                return;
+            }
+            Ok(Some(GenEvent::Started { .. })) => {}
+            Ok(None) => {
+                rep.hangs.push(ix);
+                return;
+            }
+            Err(e) => {
+                rep.untyped.push((ix, format!("stream dropped: {e}")));
+                return;
+            }
+        }
+    }
+}
+
+/// Forced-crash drill: submit a long request, wait until it has streamed
+/// (so an armed-vault snapshot exists), kill its home replica, and require
+/// the continuation to match the fault-free reference bit-for-bit with the
+/// recovery visible in the fleet counters.
+fn crash_drill(fleet: &FleetHandle, want: &[i32]) -> Result<()> {
+    for attempt in 0..5 {
+        let before = fleet.stats();
+        let session = format!("drill-{attempt}");
+        let rh = match fleet.submit_session(&session, drill_req()) {
+            Ok(rh) => rh,
+            Err(e) => anyhow::bail!("drill submit refused: {e:?}"),
+        };
+        let mut got: Vec<i32> = Vec::new();
+        let mut crashed_at = None;
+        let outcome = loop {
+            match rh.recv_event_timeout(EVENT_TIMEOUT).map_err(|e| anyhow::anyhow!(e))? {
+                Some(GenEvent::Delta { token, .. }) => {
+                    got.push(token);
+                    if crashed_at.is_none() && got.len() >= 2 {
+                        // the vault holds a snapshot from the last token
+                        // boundary — now kill the session's home replica
+                        if let Some(home) = fleet.session_replica(&session) {
+                            fleet.crash_replica(home).map_err(|e| anyhow::anyhow!(e))?;
+                            crashed_at = Some(got.len());
+                        }
+                    }
+                }
+                Some(GenEvent::Done(o)) => break Some(o.tokens),
+                Some(GenEvent::Error(e)) => {
+                    anyhow::ensure!(
+                        typed_loss(&e) || corruption(&e),
+                        "drill attempt {attempt} died with an untyped error: {e}"
+                    );
+                    break None; // typed loss under a race — retry the drill
+                }
+                Some(GenEvent::Started { .. }) => {}
+                None => anyhow::bail!("drill attempt {attempt} hung (no event in 60s)"),
+            }
+        };
+        let Some(tokens) = outcome else { continue };
+        anyhow::ensure!(tokens == want, "drill tokens diverged from fault-free reference");
+        anyhow::ensure!(got == tokens, "drill deltas disagree with final tokens");
+        // tokens that streamed well past the crash point can only have come
+        // from a vault resume on a survivor; a near-end crash proves
+        // nothing, so retry (the engine can emit at most ~1 in-flight
+        // delta between crash() and the thread dying)
+        let Some(n) = crashed_at else { continue };
+        if tokens.len() <= n + 2 {
+            continue;
+        }
+        // the supervisor's counters lag the stream by a poll interval or
+        // two — wait for them rather than racing them
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let after = fleet.stats();
+            if after.restarts > before.restarts
+                && after.sessions_recovered > before.sessions_recovered
+            {
+                println!(
+                    "drill: crash at token {n} survived on attempt {attempt}; \
+                     {} tokens bit-identical after resume",
+                    tokens.len()
+                );
+                return Ok(());
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "drill stream resumed but restart/recovery counters never moved"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    anyhow::bail!("forced-crash drill never observed a recovery in 5 attempts")
+}
+
+/// Phase 3: checkpoint torture. A real quickstart trainer advances and
+/// saves under injected I/O faults; after *every* attempt — failed or not
+/// — a fresh trainer must load the newest surviving checkpoint.
+fn checkpoint_torture(preset: &str, plan: &FaultPlan) -> Result<Json> {
+    let mut plan = plan.clone();
+    if plan.ckpt_io <= 0.0 {
+        plan.ckpt_io = 0.3; // the torture needs failures even if the
+                            // traffic spec left checkpoint I/O clean
+    }
+    let mut inj = plan.injector(0xCC);
+
+    let backend = NativeBackend::new();
+    let lr = 1e-3f32;
+    let mut trainer = Trainer::new(&backend, preset, LrSchedule::constant(lr))?;
+    let corpus = transformer_vq::data::build_corpus("markov", 100_000, 0)?;
+    let mut batcher =
+        TbpttBatcher::new(corpus.tokens, trainer.batch_size(), trainer.window_len())?;
+    let tmp = transformer_vq::testutil::TempDir::new();
+    let dir = tmp.path();
+
+    // baseline: one real step, one clean save — the last-good floor
+    trainer.train_on(&batcher.next_batch())?;
+    save_checkpoint(&trainer, &batcher, dir)?;
+    let mut last_good = trainer.step;
+
+    let (mut attempts, mut failures, mut loads_ok) = (0u64, 0u64, 0u64);
+    for _ in 0..12 {
+        trainer.train_on(&batcher.next_batch())?;
+        attempts += 1;
+        match save_checkpoint_with(&trainer, &batcher, dir, &mut inj) {
+            Ok(()) => last_good = trainer.step,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                anyhow::ensure!(
+                    msg.contains("injected ckpt_io fault"),
+                    "non-injected save failure during torture: {msg}"
+                );
+                failures += 1;
+            }
+        }
+        // the gate: no matter where the save died, a fresh trainer loads
+        // the newest surviving checkpoint
+        let mut probe = Trainer::new(&backend, preset, LrSchedule::constant(lr))?;
+        let meta = load_checkpoint(&mut probe, None, dir)
+            .map_err(|e| anyhow::anyhow!("checkpoint unloadable after injected fault: {e:#}"))?;
+        anyhow::ensure!(
+            meta.step >= last_good,
+            "checkpoint went backwards: loaded step {} < last good {}",
+            meta.step,
+            last_good
+        );
+        loads_ok += 1;
+    }
+    anyhow::ensure!(failures >= 1, "torture injected no I/O faults — raise ckpt_io");
+    anyhow::ensure!(loads_ok == attempts, "a reload failed after an injected fault");
+    println!(
+        "checkpoints: {attempts} torture saves ({failures} killed mid-write), \
+         {loads_ok}/{attempts} reloads OK, last good step {last_good}"
+    );
+    Ok(Json::obj(vec![
+        ("ckpt_attempts", Json::num(attempts as f64)),
+        ("ckpt_injected_failures", Json::num(failures as f64)),
+        ("ckpt_loads_ok", Json::num(loads_ok as f64)),
+    ]))
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "quickstart".into());
+    let replicas: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let sessions: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(48);
+    let spec = args
+        .get(3)
+        .cloned()
+        .unwrap_or_else(|| {
+            "seed=7,crash=0.005,slow=0.02:2ms,drop_inject=0.1,corrupt_snapshot=0.05,ckpt_io=0.25"
+                .into()
+        });
+    let out_path = args.get(4).map(String::as_str).unwrap_or("BENCH_native_chaos.json");
+    anyhow::ensure!(replicas >= 2, "chaosbench needs at least 2 replicas");
+    let plan = FaultPlan::parse(&spec).map_err(|e| anyhow::anyhow!(e))?;
+
+    eprintln!("chaosbench: {preset}, {replicas} replicas, {sessions} sessions, faults [{spec}]");
+
+    // --- phase 1: fault-free reference --------------------------------
+    let cases = build_cases(sessions)?;
+    let (want, drill_want) = reference_outputs(&preset, &cases)?;
+    println!("reference: {} cases + drill recorded fault-free", cases.len());
+
+    // --- phase 2: same traffic, faults on, supervisor attached --------
+    let preset_c = preset.to_string();
+    let opts = FleetOptions {
+        replicas,
+        queue_depth: 8,
+        shed_deadline_ms: None,
+        faults: Some(plan.clone()),
+    };
+    let (fleet, join) =
+        Fleet::spawn(opts, move |_replica| Sampler::new(&NativeBackend::new(), &preset_c), 42)?;
+    let supervisor = Supervisor::attach(
+        fleet.clone(),
+        SupervisorOptions {
+            poll: Duration::from_millis(5),
+            heartbeat_timeout: Duration::from_millis(500),
+            // at a 5ms poll the default threshold would declare a busy
+            // replica wedged after 15ms without a token — give it 200ms
+            wedge_after: 40,
+            stop_grace: Duration::from_millis(250),
+            backoff_base: Duration::from_millis(2),
+            backoff_max: Duration::from_millis(50),
+            seed: plan.seed,
+            ..SupervisorOptions::default()
+        },
+    );
+    // rebalance driver: live migrations under fire, which is what feeds
+    // the drop_inject / corrupt_snapshot seams
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = {
+        let fleet = fleet.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let _ = fleet.rebalance();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })
+    };
+
+    let cases = Arc::new(cases);
+    let want = Arc::new(want);
+    let t0 = Instant::now();
+    let workers = 8usize.min(sessions.max(1));
+    let (tx, rx) = mpsc::channel();
+    for w in 0..workers {
+        let fleet = fleet.clone();
+        let cases = Arc::clone(&cases);
+        let want = Arc::clone(&want);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let mut rep = WorkerReport::default();
+            let mut ix = w;
+            while ix < cases.len() {
+                run_case(&fleet, ix, &cases[ix], &want[ix], &mut rep);
+                ix += workers;
+            }
+            tx.send(rep).unwrap();
+        });
+    }
+    drop(tx);
+
+    let mut total = WorkerReport::default();
+    while let Ok(rep) = rx.recv() {
+        total.completed += rep.completed;
+        total.mismatches.extend(rep.mismatches);
+        total.lost_typed += rep.lost_typed;
+        total.corruption_detected += rep.corruption_detected;
+        total.shed += rep.shed;
+        total.untyped.extend(rep.untyped);
+        total.hangs.extend(rep.hangs);
+    }
+
+    crash_drill(&fleet, &drill_want)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Release);
+    let _ = driver.join();
+    let fs = fleet.stats();
+    let sup = supervisor.stop();
+    fleet.shutdown_all();
+    let report = join.join();
+
+    // --- the identity gate --------------------------------------------
+    anyhow::ensure!(
+        total.mismatches.is_empty(),
+        "{} sessions completed with WRONG tokens (cases {:?})",
+        total.mismatches.len(),
+        total.mismatches
+    );
+    anyhow::ensure!(
+        total.untyped.is_empty(),
+        "untyped failures under chaos: {:?}",
+        total.untyped
+    );
+    anyhow::ensure!(total.hangs.is_empty(), "hung streams under chaos: {:?}", total.hangs);
+    let accounted =
+        total.completed + total.lost_typed + total.corruption_detected + total.shed;
+    anyhow::ensure!(
+        accounted == sessions,
+        "lost track of sessions: {accounted} accounted != {sessions} issued"
+    );
+    anyhow::ensure!(total.completed >= sessions / 2, "chaos killed most traffic — plan too hot");
+    anyhow::ensure!(sup.restarts >= 1, "no replica restart happened — chaos never bit");
+    anyhow::ensure!(sup.sessions_recovered >= 1, "no snapshot-backed recovery happened");
+    anyhow::ensure!(
+        report.panicked_threads == 0 && report.unjoined_threads == 0,
+        "engine threads misbehaved at shutdown: {} panicked, {} unjoined",
+        report.panicked_threads,
+        report.unjoined_threads
+    );
+
+    let mut rec = sup.recovery_ms.clone();
+    rec.sort_by(|a, b| a.partial_cmp(b).expect("no NaN recovery time"));
+    let (rp50, rp95) = (percentile(&rec, 0.50), percentile(&rec, 0.95));
+    let rmax = rec.last().copied().unwrap_or(0.0);
+
+    println!("chaos traffic: {sessions} sessions in {wall:.2}s under [{spec}]");
+    println!(
+        "  {} bit-identical, {} typed losses, {} corruptions detected, {} shed",
+        total.completed, total.lost_typed, total.corruption_detected, total.shed
+    );
+    println!(
+        "  supervisor: {} restarts ({} wedges); {} retried / {} recovered / {} lost",
+        sup.restarts, sup.wedges, sup.sessions_retried, sup.sessions_recovered, sup.sessions_lost
+    );
+    println!("  recovery p50 {rp50:.1} ms, p95 {rp95:.1} ms, max {rmax:.1} ms");
+    println!(
+        "  router: {} migrations ({} failed), {} routed",
+        fs.migrations, fs.migration_failed, fs.sessions_routed
+    );
+
+    // --- phase 3: checkpoint torture ----------------------------------
+    let ckpt = checkpoint_torture(&preset, &plan)?;
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("native_chaos")),
+        ("preset", Json::str(&preset)),
+        ("replicas", Json::num(replicas as f64)),
+        ("sessions", Json::num(sessions as f64)),
+        ("faults", Json::str(&spec)),
+        ("wall_s", Json::num(wall)),
+        ("completed_bit_identical", Json::num(total.completed as f64)),
+        ("mismatches", Json::num(total.mismatches.len() as f64)),
+        ("hangs", Json::num(total.hangs.len() as f64)),
+        ("untyped_errors", Json::num(total.untyped.len() as f64)),
+        ("typed_losses", Json::num(total.lost_typed as f64)),
+        ("corruption_detected", Json::num(total.corruption_detected as f64)),
+        ("shed", Json::num(total.shed as f64)),
+        ("restarts", Json::num(sup.restarts as f64)),
+        ("wedges", Json::num(sup.wedges as f64)),
+        ("sessions_retried", Json::num(sup.sessions_retried as f64)),
+        ("sessions_recovered", Json::num(sup.sessions_recovered as f64)),
+        ("sessions_lost", Json::num(sup.sessions_lost as f64)),
+        ("recovery_ms_p50", Json::num(rp50)),
+        ("recovery_ms_p95", Json::num(rp95)),
+        ("recovery_ms_max", Json::num(rmax)),
+        ("migrations", Json::num(fs.migrations as f64)),
+        ("migration_failed", Json::num(fs.migration_failed as f64)),
+        ("ckpt_attempts", ckpt.get("ckpt_attempts").cloned().unwrap_or(Json::num(0.0))),
+        (
+            "ckpt_injected_failures",
+            ckpt.get("ckpt_injected_failures").cloned().unwrap_or(Json::num(0.0)),
+        ),
+        ("ckpt_loads_ok", ckpt.get("ckpt_loads_ok").cloned().unwrap_or(Json::num(0.0))),
+    ]);
+    std::fs::write(out_path, j.dump())?;
+    println!("wrote {out_path}");
+    println!("chaosbench OK");
+    Ok(())
+}

@@ -61,7 +61,7 @@ fn spawn_fleet(
     queue_depth: usize,
 ) -> Result<(FleetHandle, transformer_vq::fleet::FleetJoin)> {
     let preset = preset.to_string();
-    let opts = FleetOptions { replicas, queue_depth, shed_deadline_ms: Some(5) };
+    let opts = FleetOptions { replicas, queue_depth, shed_deadline_ms: Some(5), faults: None };
     Fleet::spawn(
         opts,
         move |_replica| Sampler::new(&NativeBackend::new(), &preset),
@@ -287,7 +287,14 @@ fn main() -> Result<()> {
     let fs = fleet.stats();
     let _ = sd_tx.send(());
     server.join().expect("server thread")?;
-    let per_replica = join.join();
+    let report = join.join();
+    anyhow::ensure!(
+        report.panicked_threads == 0 && report.unjoined_threads == 0,
+        "engine threads misbehaved at shutdown: {} panicked, {} unjoined",
+        report.panicked_threads,
+        report.unjoined_threads
+    );
+    let per_replica = report.per_replica;
 
     anyhow::ensure!(errors == 0, "{errors} non-shed request errors under load");
     let issued = conns * reqs_per_conn;

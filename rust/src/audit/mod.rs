@@ -22,6 +22,9 @@
 //!   in `coordinator/`, `sample/`, `tokenizer/`.
 //! * R5 `wiring` — every `NativeOptions` field and `TVQ_*` env var is
 //!   surfaced in `main.rs` and documented in README.md/DESIGN.md.
+//! * R6 `bounded_blocking` — naked `.recv()`/`.join()` in `fleet/` and
+//!   `coordinator/` non-test code must justify the unbounded park with a
+//!   `// tvq-bounded: reason` (or use the timeout variant).
 //!
 //! Violations are suppressed in place with `// tvq-allow(rule): reason`;
 //! an empty reason is itself a finding. Analysis is token-based on a

@@ -1,10 +1,11 @@
 //! The audit rules (DESIGN.md §9) over [`super::lexer`] token streams.
 //!
 //! Per-file rules: R1 `unsafe_confinement`, R2 `determinism`, R3
-//! `zero_alloc`, R4 `panic_surface` — run by [`audit_file`], which also
-//! parses `// tvq-allow(rule): reason` suppressions and applies them.
-//! Cross-file rule: R5 `wiring` — run by [`audit_wiring`] over the whole
-//! file set plus README/DESIGN text.
+//! `zero_alloc`, R4 `panic_surface`, R6 `bounded_blocking` — run by
+//! [`audit_file`], which also parses `// tvq-allow(rule): reason` (and
+//! the R6 shorthand `// tvq-bounded: reason`) suppressions and applies
+//! them. Cross-file rule: R5 `wiring` — run by [`audit_wiring`] over the
+//! whole file set plus README/DESIGN text.
 //!
 //! Structure shared by the rules is computed once per file: attribute
 //! token spans (`#[...]`), test spans (`#[test]` fns and `#[cfg(test)]`
@@ -13,8 +14,14 @@
 use super::lexer::{lex, Kind, Tok};
 
 /// Rule identifiers, as written inside `tvq-allow(...)`.
-pub const RULES: [&str; 5] =
-    ["unsafe_confinement", "determinism", "zero_alloc", "panic_surface", "wiring"];
+pub const RULES: [&str; 6] = [
+    "unsafe_confinement",
+    "determinism",
+    "zero_alloc",
+    "panic_surface",
+    "wiring",
+    "bounded_blocking",
+];
 
 /// Files where `unsafe` is allowed at all (R1).
 const UNSAFE_ALLOWED: [&str; 2] = ["rust/src/native/simd.rs", "rust/src/native/kernels.rs"];
@@ -206,6 +213,15 @@ fn build_model(src: &str) -> Model {
     Model { toks, in_attr, in_test, fns }
 }
 
+/// Parse the inside of a `tvq-bounded: reason` comment body (after the
+/// slashes) — the R6 shorthand for `tvq-allow(bounded_blocking)`.
+/// Returns the reason (possibly empty) or `None` when malformed.
+fn parse_bounded(body: &str) -> Option<String> {
+    let rest = body.strip_prefix("tvq-bounded")?;
+    let rest = rest.trim_start().strip_prefix(':')?;
+    Some(rest.trim().to_string())
+}
+
 /// Parse the inside of a `tvq-allow...` comment body (after the slashes).
 /// Returns `(rule, reason)` or `None` when malformed.
 fn parse_allow(body: &str) -> Option<(String, String)> {
@@ -229,6 +245,38 @@ fn parse_suppressions(file: &str, toks: &[Tok]) -> (Vec<Suppression>, Vec<Findin
             continue;
         }
         let body = t.text.trim_start_matches('/').trim();
+        if body.starts_with("tvq-bounded") {
+            match parse_bounded(body) {
+                None => findings.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "suppression",
+                    msg: format!("malformed tvq-bounded comment: `{body}`"),
+                }),
+                Some(reason) if reason.is_empty() => findings.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "suppression",
+                    msg: "tvq-bounded must carry a non-empty reason".to_string(),
+                }),
+                Some(reason) => {
+                    let next_code_line = toks
+                        .iter()
+                        .filter(|t2| t2.line > t.line && !is_comment(t2))
+                        .map(|t2| t2.line)
+                        .min()
+                        .unwrap_or(0);
+                    sups.push(Suppression {
+                        file: file.to_string(),
+                        line: t.line,
+                        next_code_line,
+                        rule: "bounded_blocking".to_string(),
+                        reason,
+                    });
+                }
+            }
+            continue;
+        }
         if !body.starts_with("tvq-allow") {
             continue;
         }
@@ -356,6 +404,11 @@ fn on_serving_path(rel: &str) -> bool {
         || rel.starts_with("rust/src/tokenizer/")
 }
 
+/// R6 scope: modules whose blocking parks can wedge the serving fleet.
+fn bounded_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/") || rel.starts_with("rust/src/fleet/")
+}
+
 /// Run R1–R4 plus suppression parsing on one file; suppressions are
 /// applied (matched findings removed), malformed suppressions are
 /// findings themselves and cannot be suppressed.
@@ -476,6 +529,38 @@ pub fn audit_file(rel: &str, src: &str) -> FileAudit {
                 ),
                 _ => {}
             }
+        }
+    }
+
+    // R6 bounded blocking: a naked `.recv()` / `.join()` in the fleet or
+    // coordinator can park a supervised thread forever (exactly the hang
+    // class chaosbench exists to catch). Each one must either use the
+    // timeout variant or justify its unbounded park with a
+    // `// tvq-bounded: reason` on the call or the line above it.
+    if bounded_scope(rel) {
+        for i in 1..nt {
+            let t = &m.toks[i];
+            if t.kind != Kind::Ident || m.in_test[i] {
+                continue;
+            }
+            if !matches!(t.text.as_str(), "recv" | "join") {
+                continue;
+            }
+            if !is_p(&m.toks[i - 1], b'.') {
+                continue;
+            }
+            if !(i + 1 < nt && is_p(&m.toks[i + 1], b'(')) {
+                continue;
+            }
+            push(
+                t.line,
+                "bounded_blocking",
+                format!(
+                    "naked `.{}()` can park forever; use the timeout variant or \
+                     annotate with `// tvq-bounded: reason`",
+                    t.text
+                ),
+            );
         }
     }
 
@@ -861,6 +946,92 @@ mod tests {
         let src = "fn f(o: Option<u32>) -> u32 { o.unwrap_or_else(|| 0) }\n";
         let fa = audit_file("rust/src/coordinator/server.rs", src);
         assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    // --- R6 ---------------------------------------------------------------
+
+    #[test]
+    fn r6_fires_on_naked_recv_and_join_in_scope() {
+        let src = "\
+fn f(rx: std::sync::mpsc::Receiver<u32>, h: std::thread::JoinHandle<()>) {
+    let _ = rx.recv();
+    let _ = h.join();
+}
+";
+        for rel in ["rust/src/fleet/router.rs", "rust/src/coordinator/engine.rs"] {
+            let fa = audit_file(rel, src);
+            assert_eq!(rules_of(&fa), vec!["bounded_blocking"; 2], "{rel}: {:?}", fa.findings);
+        }
+        // out of scope: train/, native/, examples are free to block
+        assert!(audit_file("rust/src/train/mod.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn r6_ignores_timeout_variants_free_fns_and_tests() {
+        let src = "\
+fn f(rx: std::sync::mpsc::Receiver<u32>) {
+    let _ = rx.recv_timeout(std::time::Duration::from_millis(5));
+    let _ = recv(1);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t(rx: std::sync::mpsc::Receiver<u32>) {
+        let _ = rx.recv();
+    }
+}
+";
+        let fa = audit_file("rust/src/fleet/router.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn r6_is_silenced_by_tvq_bounded_above_or_on_the_line() {
+        let src = "\
+fn f(rx: std::sync::mpsc::Receiver<u32>, h: std::thread::JoinHandle<()>) {
+    // tvq-bounded: sender lives on a supervised thread that always
+    // sends a terminal event before exiting
+    let _ = rx.recv();
+    let _ = h.join(); // tvq-bounded: is_finished() checked just above
+}
+";
+        let fa = audit_file("rust/src/fleet/supervisor.rs", src);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+        assert_eq!(fa.suppressions.len(), 2);
+        assert!(fa.suppressions.iter().all(|s| s.rule == "bounded_blocking"));
+        // the long-form tvq-allow spelling works too
+        let long = "\
+fn f(rx: std::sync::mpsc::Receiver<u32>) {
+    // tvq-allow(bounded_blocking): client-facing park by contract
+    let _ = rx.recv();
+}
+";
+        let fa = audit_file("rust/src/coordinator/engine.rs", long);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn tvq_bounded_without_reason_or_colon_is_a_finding() {
+        let src = "\
+fn f(rx: std::sync::mpsc::Receiver<u32>) {
+    // tvq-bounded:
+    let _ = rx.recv();
+    // tvq-bounded missing the colon
+}
+";
+        let fa = audit_file("rust/src/fleet/router.rs", src);
+        let rules = rules_of(&fa);
+        // the reasonless/malformed comments are findings and silence nothing,
+        // so the naked recv still fires
+        assert_eq!(rules.iter().filter(|r| **r == "suppression").count(), 2, "{:?}", fa.findings);
+        assert_eq!(
+            rules.iter().filter(|r| **r == "bounded_blocking").count(),
+            1,
+            "{:?}",
+            fa.findings
+        );
+        assert!(fa.suppressions.is_empty());
     }
 
     // --- suppression syntax ------------------------------------------------

@@ -25,10 +25,12 @@
 //! [`EngineStats`] through the engine thread's join handle.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::fleet::faults::FaultInjector;
+use crate::fleet::supervisor::{SessionVault, VaultHook};
 use crate::rng::Rng;
 use crate::sample::{nucleus_sample, LaneInput, SampleParams, Sampler};
 
@@ -131,12 +133,105 @@ pub enum GenEvent {
 pub struct CancelToken(Arc<AtomicBool>);
 
 impl CancelToken {
+    pub(crate) fn new() -> Self {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
     pub fn cancel(&self) {
         self.0.store(true, Ordering::Release);
     }
 
     pub fn is_cancelled(&self) -> bool {
         self.0.load(Ordering::Acquire)
+    }
+}
+
+/// The engine-side sender of one request's event stream, hardened for
+/// recovery (DESIGN.md §12). Every clone shares three atomics:
+///
+/// * an **epoch fence** — [`EventTx::refence`] mints a new epoch and
+///   invalidates every older clone, so when the supervisor resumes a
+///   session from its snapshot, a still-running stale copy (a wedged
+///   replica that wakes up, a session caught mid-migration) can never
+///   interleave events into the recovered stream;
+/// * a **delta high-water mark** — a `Delta` is forwarded only if its
+///   index is strictly above everything already forwarded, which makes
+///   recovery replay idempotent: resuming from a snapshot one token behind
+///   the client re-generates an identical delta (same rng state) and the
+///   mark drops it;
+/// * a **started flag** — at most one `Started` ever reaches the client,
+///   so re-running a never-decoded session through full admission after a
+///   crash does not duplicate the stream head.
+///
+/// A terminal `Done`/`Error` passing the fence also retires the session's
+/// [`SessionVault`] entry — the vault holds exactly the live sessions.
+#[derive(Clone)]
+pub struct EventTx {
+    tx: mpsc::Sender<GenEvent>,
+    fence: Arc<AtomicU64>,
+    epoch: u64,
+    delta_mark: Arc<AtomicI64>,
+    started_sent: Arc<AtomicBool>,
+    vault: Option<(SessionVault, u64)>,
+}
+
+impl EventTx {
+    pub(crate) fn new(tx: mpsc::Sender<GenEvent>) -> Self {
+        Self {
+            tx,
+            fence: Arc::new(AtomicU64::new(0)),
+            epoch: 0,
+            delta_mark: Arc::new(AtomicI64::new(-1)),
+            started_sent: Arc::new(AtomicBool::new(false)),
+            vault: None,
+        }
+    }
+
+    /// Tie terminal events to a vault entry (engine-side, at submission).
+    pub(crate) fn attach_vault(&mut self, vault: SessionVault, key: u64) {
+        self.vault = Some((vault, key));
+    }
+
+    /// Send an event. `Err(())` only when the stream is gone (client
+    /// dropped, or this sender belongs to a superseded epoch); deduped
+    /// `Started`/`Delta` repeats are dropped as `Ok`.
+    pub fn send(&self, ev: GenEvent) -> Result<(), ()> {
+        if self.fence.load(Ordering::Acquire) != self.epoch {
+            return Err(());
+        }
+        match &ev {
+            GenEvent::Started { .. } => {
+                if self.started_sent.swap(true, Ordering::AcqRel) {
+                    return Ok(());
+                }
+            }
+            GenEvent::Delta { index, .. } => {
+                let i = *index as i64;
+                if self.delta_mark.fetch_max(i, Ordering::AcqRel) >= i {
+                    return Ok(());
+                }
+            }
+            GenEvent::Done(_) | GenEvent::Error(_) => {
+                if let Some((vault, key)) = &self.vault {
+                    vault.remove(*key);
+                }
+            }
+        }
+        self.tx.send(ev).map_err(|_| ())
+    }
+
+    /// Highest delta index forwarded to the client (−1 = none yet). The
+    /// supervisor uses this to decide whether a session with no snapshot
+    /// can safely re-run from scratch.
+    pub fn delta_mark(&self) -> i64 {
+        self.delta_mark.load(Ordering::Acquire)
+    }
+
+    /// Mint the next epoch: the returned sender is live, every existing
+    /// clone (including `self`) is fenced out.
+    pub fn refence(&self) -> EventTx {
+        let epoch = self.fence.fetch_add(1, Ordering::AcqRel) + 1;
+        EventTx { epoch, ..self.clone() }
     }
 }
 
@@ -152,7 +247,21 @@ pub struct RequestHandle {
 impl RequestHandle {
     /// Next event (blocking). Errors only if the engine died.
     pub fn recv(&self) -> Result<GenEvent, String> {
+        // tvq-bounded: client-facing park; the sender side lives on a
+        // supervised engine thread, and recv_timeout is the bounded variant
         self.events.recv().map_err(|_| "engine dropped request".to_string())
+    }
+
+    /// Next event, bounded: `Ok(None)` on timeout (engine alive, nothing
+    /// streamed yet), `Err` when the engine dropped the stream.
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<GenEvent>, String> {
+        match self.events.recv_timeout(d) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err("engine dropped request".to_string())
+            }
+        }
     }
 
     /// Process-unique session key assigned at submission. Stable across
@@ -173,6 +282,7 @@ impl RequestHandle {
     /// Drain events until the request finishes; returns the outcome.
     pub fn wait(self) -> Result<GenOutcome, String> {
         loop {
+            // tvq-bounded: delegates to `recv`, whose park is justified there
             match self.recv()? {
                 GenEvent::Done(o) => return Ok(o),
                 GenEvent::Error(e) => return Err(e),
@@ -260,7 +370,7 @@ static NEXT_KEY: AtomicU64 = AtomicU64::new(1);
 struct Pending {
     key: u64,
     req: GenRequest,
-    tx: mpsc::Sender<GenEvent>,
+    tx: EventTx,
     cancel: CancelToken,
     enqueued: Instant,
 }
@@ -270,11 +380,14 @@ struct Pending {
 /// snapshot wire format (`native/snapshot.rs`). The sampling [`Rng`] moves
 /// by value — the stream continues bit-identically on the target. The
 /// client's event channel sender rides along, so the stream never skips or
-/// repeats a delta.
+/// repeats a delta. `Clone` exists for the [`SessionVault`]: the supervisor
+/// keeps the last token-boundary copy of every live session so it can
+/// resume them on a survivor after a replica crash.
+#[derive(Clone)]
 pub struct MigratedSession {
     pub key: u64,
     pub req: GenRequest,
-    pub tx: mpsc::Sender<GenEvent>,
+    pub tx: EventTx,
     pub cancel: CancelToken,
     pub enqueued: Instant,
     pub started: Instant,
@@ -310,7 +423,7 @@ impl Queued {
 struct Slot {
     key: u64,
     req: GenRequest,
-    tx: mpsc::Sender<GenEvent>,
+    tx: EventTx,
     cancel: CancelToken,
     enqueued: Instant,
     started: Instant,
@@ -364,10 +477,15 @@ impl EngineHandle {
     /// Submit a request; events stream on the returned handle.
     pub fn submit(&self, req: GenRequest) -> Result<RequestHandle, String> {
         let (tx, rx) = mpsc::channel();
-        let cancel = CancelToken(Arc::new(AtomicBool::new(false)));
+        let cancel = CancelToken::new();
         let key = NEXT_KEY.fetch_add(1, Ordering::Relaxed);
-        let pending =
-            Pending { key, req, tx, cancel: cancel.clone(), enqueued: Instant::now() };
+        let pending = Pending {
+            key,
+            req,
+            tx: EventTx::new(tx),
+            cancel: cancel.clone(),
+            enqueued: Instant::now(),
+        };
         self.tx
             .send(Msg::Submit(pending))
             .map_err(|_| "engine shut down".to_string())?;
@@ -390,7 +508,22 @@ impl EngineHandle {
     pub fn stats(&self) -> Result<EngineStats, String> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Msg::Stats(tx)).map_err(|_| "engine shut down".to_string())?;
+        // tvq-bounded: the engine answers at its next token boundary or the
+        // reply sender drops with the thread — no path leaves this pending
         rx.recv().map_err(|_| "engine shut down".to_string())
+    }
+
+    /// [`Self::stats`] with a reply deadline — the supervisor's heartbeat.
+    /// `Ok(None)` = the engine is alive (channel open) but did not reach a
+    /// token boundary in time, which is how a wedged replica looks.
+    pub fn stats_timeout(&self, d: Duration) -> Result<Option<EngineStats>, String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| "engine shut down".to_string())?;
+        match rx.recv_timeout(d) {
+            Ok(s) => Ok(Some(s)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err("engine shut down".to_string()),
+        }
     }
 
     /// Pull the live session with this key out of the engine at its next
@@ -404,6 +537,8 @@ impl EngineHandle {
         self.tx
             .send(Msg::Evict { key, reply })
             .map_err(|_| "engine shut down".to_string())?;
+        // tvq-bounded: answered at the next token boundary or the reply
+        // sender drops with the engine thread — same contract as stats()
         rx.recv().map_err(|_| "engine shut down".to_string())?
     }
 
@@ -435,6 +570,19 @@ impl EngineHandle {
     }
 }
 
+/// Optional engine-thread attachments (both off by default):
+///
+/// * `faults` — a deterministic [`FaultInjector`] whose crash/slow seams
+///   fire at token boundaries, only while the engine has active work;
+/// * `vault` — a [`VaultHook`] publishing a token-boundary snapshot of
+///   every live session into the fleet's [`SessionVault`], which is what
+///   makes supervised crash recovery possible.
+#[derive(Default)]
+pub struct EngineHooks {
+    pub faults: Option<FaultInjector>,
+    pub vault: Option<VaultHook>,
+}
+
 pub struct Engine;
 
 impl Engine {
@@ -445,6 +593,19 @@ impl Engine {
     pub fn spawn<F>(
         factory: F,
         seed: u64,
+    ) -> anyhow::Result<(EngineHandle, std::thread::JoinHandle<EngineStats>)>
+    where
+        F: FnOnce() -> anyhow::Result<Sampler> + Send + 'static,
+    {
+        Self::spawn_with(factory, seed, EngineHooks::default())
+    }
+
+    /// [`Self::spawn`] with chaos/recovery hooks attached to the engine
+    /// thread (fleet replicas use this; standalone engines don't need it).
+    pub fn spawn_with<F>(
+        factory: F,
+        seed: u64,
+        hooks: EngineHooks,
     ) -> anyhow::Result<(EngineHandle, std::thread::JoinHandle<EngineStats>)>
     where
         F: FnOnce() -> anyhow::Result<Sampler> + Send + 'static,
@@ -462,8 +623,10 @@ impl Engine {
                     return EngineStats::default();
                 }
             };
-            run(&mut sampler, seed, rx)
+            run(&mut sampler, seed, rx, hooks)
         });
+        // tvq-bounded: the spawned thread sends exactly one init result (or
+        // drops the sender by exiting) before any blocking work
         match init_rx.recv() {
             Ok(Ok(())) => Ok((EngineHandle { tx }, join)),
             Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
@@ -489,16 +652,34 @@ fn handle_msg(
     slots: &mut [Option<Slot>],
     queue: &mut VecDeque<Queued>,
     stats: &mut EngineStats,
+    hooks: &mut EngineHooks,
 ) -> MsgOutcome {
     match msg {
-        Msg::Submit(p) => queue.push_back(Queued::Fresh(p)),
+        Msg::Submit(mut p) => {
+            // register the session before it can produce any event: even a
+            // queued, never-seated session must be findable after a crash
+            // (it re-runs from scratch, or surfaces a typed replica_lost)
+            if let Some(h) = hooks.vault.as_ref() {
+                p.tx.attach_vault(h.vault().clone(), p.key);
+                h.publish(p.key, vault_entry_from_pending(&p));
+            }
+            queue.push_back(Queued::Fresh(p));
+        }
         Msg::Stats(tx) => {
             let _ = tx.send(snapshot(stats, slots, queue));
         }
         Msg::Evict { key, reply } => {
             let _ = reply.send(evict_session(key, sampler, slots, queue, stats));
         }
-        Msg::Inject(m) => inject_session(m, queue),
+        Msg::Inject(mut m) => {
+            // re-home the vault entry: the session now lives (and must be
+            // recovered) here, under this replica's generation
+            if let Some(h) = hooks.vault.as_ref() {
+                m.tx.attach_vault(h.vault().clone(), m.key);
+                h.publish(m.key, (*m).clone());
+            }
+            inject_session(m, queue);
+        }
         Msg::Crash => return MsgOutcome::Exit,
         Msg::Shutdown => {
             drain_shutdown(slots, queue, stats);
@@ -508,7 +689,65 @@ fn handle_msg(
     MsgOutcome::Handled
 }
 
-fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats {
+/// The vault image of a fresh submission: no lane state, nothing generated.
+/// If the replica dies before this session ever decodes a token, the
+/// supervisor re-runs it from scratch on a survivor — the `Started` dedup
+/// in [`EventTx`] makes that invisible to the client.
+fn vault_entry_from_pending(p: &Pending) -> MigratedSession {
+    MigratedSession {
+        key: p.key,
+        req: p.req.clone(),
+        tx: p.tx.clone(),
+        cancel: p.cancel.clone(),
+        enqueued: p.enqueued,
+        started: p.enqueued,
+        deadline: None,
+        prompt_pos: 0,
+        generated: Vec::new(),
+        current: 0,
+        decoding: false,
+        ttft_ms: None,
+        rng: Rng::new(0),
+        lane_wire: None,
+    }
+}
+
+/// Publish a seated slot's token-boundary snapshot into the vault (only
+/// when a supervisor armed it — unsupervised fleets skip the encode cost).
+/// Best-effort: a failed snapshot keeps the previous vault image, which is
+/// still a valid (older) resume point.
+fn vault_publish_slot(hook: &VaultHook, sampler: &mut Sampler, slot_ix: usize, s: &Slot) {
+    if !hook.armed() {
+        return;
+    }
+    let Ok(wire) = sampler.encode_slot(slot_ix) else { return };
+    hook.publish(
+        s.key,
+        MigratedSession {
+            key: s.key,
+            req: s.req.clone(),
+            tx: s.tx.clone(),
+            cancel: s.cancel.clone(),
+            enqueued: s.enqueued,
+            started: s.started,
+            deadline: s.deadline,
+            prompt_pos: s.prompt_pos,
+            generated: s.generated.clone(),
+            current: s.current,
+            decoding: s.decoding,
+            ttft_ms: s.ttft_ms,
+            rng: s.rng.clone(),
+            lane_wire: Some(wire),
+        },
+    );
+}
+
+fn run(
+    sampler: &mut Sampler,
+    seed: u64,
+    rx: mpsc::Receiver<Msg>,
+    mut hooks: EngineHooks,
+) -> EngineStats {
     let b = sampler.batch_size();
     let chunk = sampler.prefill_chunk().max(1);
     let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
@@ -523,7 +762,8 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
         loop {
             match rx.try_recv() {
                 Ok(msg) => {
-                    match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats) {
+                    match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats, &mut hooks)
+                    {
                         MsgOutcome::Handled => {}
                         MsgOutcome::Exit => return stats,
                     }
@@ -599,7 +839,7 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
         //     prompt was served from the prefix cache samples its first
         //     token from the stored logits *before* any lane is built —
         //     zero prefill steps, and `current` is valid by lane time
-        for slot in slots.iter_mut() {
+        for (i, slot) in slots.iter_mut().enumerate() {
             let Some(s) = slot.as_mut() else { continue };
             let Some(l) = s.pending_logits.take() else { continue };
             s.decoding = true;
@@ -607,6 +847,8 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                 if let Some(done) = slot.take() {
                     done.finish(reason, &mut stats);
                 }
+            } else if let Some(h) = hooks.vault.as_ref() {
+                vault_publish_slot(h, sampler, i, s);
             }
         }
 
@@ -619,14 +861,33 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                 return stats; // every handle dropped, nothing left to do
             }
             // idle: block for the next message (or shut down)
+            // tvq-bounded: an idle engine has nothing to time out *for* —
+            // it wakes on the next control message or exits when every
+            // handle drops (sender disconnect unblocks this recv)
             match rx.recv() {
-                Ok(msg) => match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats) {
-                    MsgOutcome::Handled => {}
-                    MsgOutcome::Exit => return stats,
-                },
+                Ok(msg) => {
+                    match handle_msg(msg, sampler, &mut slots, &mut queue, &mut stats, &mut hooks)
+                    {
+                        MsgOutcome::Handled => {}
+                        MsgOutcome::Exit => return stats,
+                    }
+                }
                 Err(_) => return stats,
             }
             continue;
+        }
+
+        // --- chaos seams (deterministic, token-boundary): a crash dies
+        //     without draining, exactly like Msg::Crash; a slow step stalls
+        //     before the lane batch. Both fire only while work is active,
+        //     so the fault sequence is a pure function of (plan, workload).
+        if let Some(f) = hooks.faults.as_mut() {
+            if f.crash_now() {
+                return stats;
+            }
+            if let Some(d) = f.slow_delay() {
+                std::thread::sleep(d);
+            }
         }
 
         // --- one session step: decode lanes feed their last sampled token,
@@ -682,6 +943,8 @@ fn run(sampler: &mut Sampler, seed: u64, rx: mpsc::Receiver<Msg>) -> EngineStats
                 if let Some(done) = slot.take() {
                     done.finish(reason, &mut stats);
                 }
+            } else if let Some(h) = hooks.vault.as_ref() {
+                vault_publish_slot(h, sampler, lane.slot, s);
             }
         }
     }

@@ -50,6 +50,11 @@ pub trait RequestEvents {
     /// Next engine event (blocking). Errors when the engine/replica died.
     fn recv_event(&self) -> Result<GenEvent, String>;
 
+    /// Next engine event, bounded: `Ok(None)` on timeout (stream alive,
+    /// nothing ready), `Err` when the engine/replica dropped the stream.
+    /// Chaos harnesses use this so a lost event can never hang a client.
+    fn recv_event_timeout(&self, d: std::time::Duration) -> Result<Option<GenEvent>, String>;
+
     /// Cooperative-cancel token for this request.
     fn cancel_handle(&self) -> CancelToken;
 
@@ -70,7 +75,12 @@ pub trait RequestEvents {
 
 impl RequestEvents for RequestHandle {
     fn recv_event(&self) -> Result<GenEvent, String> {
+        // tvq-bounded: delegates to `RequestHandle::recv`, justified there
         self.recv()
+    }
+
+    fn recv_event_timeout(&self, d: std::time::Duration) -> Result<Option<GenEvent>, String> {
+        self.recv_timeout(d)
     }
 
     fn cancel_handle(&self) -> CancelToken {

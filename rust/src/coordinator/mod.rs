@@ -50,12 +50,13 @@ pub mod protocol;
 pub mod server;
 
 pub use engine::{
-    CancelToken, Engine, EngineHandle, EngineStats, FinishReason, GenEvent, GenOutcome,
-    GenRequest, GenResponse, MigratedSession, RequestHandle,
+    CancelToken, Engine, EngineHandle, EngineHooks, EngineStats, EventTx, FinishReason,
+    GenEvent, GenOutcome, GenRequest, GenResponse, MigratedSession, RequestHandle,
 };
 pub use frontend::{Frontend, RequestEvents, SubmitError};
 pub use protocol::{
     ClientFrame, EventFrame, GenerateFrame, ShedReason, WireRequest, WireResponse,
-    MAX_MAX_TOKENS, REASON_DUPLICATE_SESSION, REASON_REPLICA_UNAVAILABLE,
+    MAX_MAX_TOKENS, REASON_DUPLICATE_SESSION, REASON_REPLICA_LOST,
+    REASON_REPLICA_UNAVAILABLE,
 };
 pub use server::{handle_conn, serve, serve_on, serve_until, Client};

@@ -59,6 +59,11 @@ pub const MAX_MAX_TOKENS: usize = 4096;
 pub const REASON_DUPLICATE_SESSION: &str = "duplicate_session";
 /// `error.reason` when no live replica could accept the request.
 pub const REASON_REPLICA_UNAVAILABLE: &str = "replica_unavailable";
+/// `error.reason` when a session's replica died mid-stream and no
+/// recoverable snapshot existed — the one crash outcome that cannot be
+/// silently retried (deltas already reached the client; a re-run without
+/// the sampling state could diverge).
+pub const REASON_REPLICA_LOST: &str = "replica_lost";
 
 /// Why admission control refused a request without running it. Carried on
 /// the wire as `error.reason` so clients can tell backpressure (retry
@@ -527,6 +532,10 @@ impl EventFrame {
                     ("sessions_routed", Json::num(f.sessions_routed as f64)),
                     ("sessions_active", Json::num(f.sessions_active as f64)),
                     ("affinity_hits", Json::num(f.affinity_hits as f64)),
+                    ("restarts", Json::num(f.restarts as f64)),
+                    ("session_retries", Json::num(f.session_retries as f64)),
+                    ("sessions_recovered", Json::num(f.sessions_recovered as f64)),
+                    ("sessions_lost", Json::num(f.sessions_lost as f64)),
                 ])
             }
         }
@@ -593,6 +602,13 @@ impl EventFrame {
                     sessions_routed: j.req("sessions_routed")?.as_u64()?,
                     sessions_active: j.req("sessions_active")?.as_u64()?,
                     affinity_hits: j.req("affinity_hits")?.as_u64()?,
+                    // recovery counters postdate the first fleet_stats wire
+                    // shape: absent fields read as 0 so old frames keep
+                    // parsing (back-compat pinned by tests/protocol_v2.rs)
+                    restarts: opt_u64(&j, "restarts"),
+                    session_retries: opt_u64(&j, "session_retries"),
+                    sessions_recovered: opt_u64(&j, "sessions_recovered"),
+                    sessions_lost: opt_u64(&j, "sessions_lost"),
                 }))
             }
             other => bail!("unknown event '{other}'"),
@@ -640,6 +656,12 @@ fn engine_stats_pairs(s: &EngineStats) -> Vec<(&'static str, Json)> {
         ("migrated_in", Json::num(s.migrated_in as f64)),
         ("migrated_out", Json::num(s.migrated_out as f64)),
     ]
+}
+
+/// Back-compat read of an optional numeric counter: absent → 0 (frames
+/// from engines older than the field).
+fn opt_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_u64().ok()).unwrap_or(0)
 }
 
 fn engine_stats_from_json(j: &Json) -> Result<EngineStats> {
@@ -860,6 +882,10 @@ mod tests {
                 sessions_routed: 30,
                 sessions_active: 3,
                 affinity_hits: 25,
+                restarts: 2,
+                session_retries: 5,
+                sessions_recovered: 4,
+                sessions_lost: 1,
             }),
         ];
         for f in frames {

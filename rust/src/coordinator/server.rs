@@ -253,6 +253,8 @@ pub fn handle_conn<F: Frontend>(stream: TcpStream, handle: F) -> Result<()> {
         t.cancel();
     }
     drop(out_tx);
+    // tvq-bounded: dropping out_tx above disconnects the writer's receive
+    // loop, so the thread is already on its way out when we join it
     let _ = writer.join();
     result
 }
@@ -337,7 +339,13 @@ fn forward_events<E: RequestEvents>(rh: E, id: &str, out_tx: &mpsc::Sender<Strin
                 return;
             }
             GenEvent::Error(e) => {
-                let frame = EventFrame::Error { id: Some(id.to_string()), error: e, reason: None };
+                // recovery surfaces unrecoverable crash victims with a
+                // "replica_lost: ..." message; type it on the wire so
+                // clients can distinguish it from request-level failures
+                let reason = e
+                    .starts_with(crate::coordinator::protocol::REASON_REPLICA_LOST)
+                    .then(|| crate::coordinator::protocol::REASON_REPLICA_LOST.to_string());
+                let frame = EventFrame::Error { id: Some(id.to_string()), error: e, reason };
                 let _ = out_tx.send(frame.dump());
                 return;
             }

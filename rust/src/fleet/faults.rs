@@ -1,0 +1,330 @@
+//! Deterministic fault injection (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] is a seeded, wire-specifiable schedule of failure rates,
+//! parsed from `--faults` / `TVQ_FAULTS`:
+//!
+//! ```text
+//! seed=7,crash=0.01,slow=0.05:20ms,drop_inject=0.02,corrupt_snapshot=0.01,ckpt_io=0.1
+//! ```
+//!
+//! Faults fire at **explicit seams** — replica crash at a token boundary,
+//! delayed step, migration-inject failure, snapshot byte corruption in
+//! transit, checkpoint I/O error — never by preemption. Each seam draws
+//! from its own [`Rng`] stream forked from `(plan seed, injector stream,
+//! seam tag)`, so one seam's draws never shift another's: for a fixed
+//! workload schedule, a given plan replays the exact same fault sequence,
+//! which is what lets chaosbench assert bit-identical recovery against a
+//! fault-free run (the determinism-of-injection argument, DESIGN.md §12).
+
+use std::time::Duration;
+
+use crate::rng::Rng;
+use crate::store::IoFaults;
+
+/// Seeded fault schedule. Rates are per seam visit in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed for every injector stream derived from this plan.
+    pub seed: u64,
+    /// P(replica engine thread exits, undrained) per token boundary with
+    /// active work.
+    pub crash: f64,
+    /// P(step delayed) per token boundary, and the delay applied.
+    pub slow: f64,
+    pub slow_ms: u64,
+    /// P(migration inject is dropped before reaching the target replica).
+    pub drop_inject: f64,
+    /// P(one byte of a migrating session's snapshot wire is flipped in
+    /// transit) — must surface as a typed checksum failure, never as
+    /// silently wrong tokens.
+    pub corrupt_snapshot: f64,
+    /// P(an injected I/O error at each checkpoint write point).
+    pub ckpt_io: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            crash: 0.0,
+            slow: 0.0,
+            slow_ms: 0,
+            drop_inject: 0.0,
+            corrupt_snapshot: 0.0,
+            ckpt_io: 0.0,
+        }
+    }
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f64, String> {
+    let r: f64 = v
+        .parse()
+        .map_err(|_| format!("bad value for fault '{key}': '{v}' (want a rate in [0,1])"))?;
+    if !(0.0..=1.0).contains(&r) {
+        return Err(format!("bad value for fault '{key}': {v} (want a rate in [0,1])"));
+    }
+    Ok(r)
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,...` spec. Strict: unknown keys, malformed
+    /// numbers, out-of-range rates, and missing `ms` suffixes are hard
+    /// errors naming the offending field — never a silent fallback.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad fault spec entry '{part}' (want key=value)"))?;
+            match key {
+                "seed" => {
+                    plan.seed = val.parse().map_err(|_| {
+                        format!("bad value for fault 'seed': '{val}' (want a u64)")
+                    })?;
+                }
+                "crash" => plan.crash = parse_rate(key, val)?,
+                "slow" => {
+                    let (rate, delay) = val.split_once(':').ok_or_else(|| {
+                        format!("bad value for fault 'slow': '{val}' (want rate:delay, e.g. 0.05:20ms)")
+                    })?;
+                    plan.slow = parse_rate(key, rate)?;
+                    let ms = delay.strip_suffix("ms").ok_or_else(|| {
+                        format!("bad delay for fault 'slow': '{delay}' (want e.g. 20ms)")
+                    })?;
+                    plan.slow_ms = ms.parse().map_err(|_| {
+                        format!("bad delay for fault 'slow': '{delay}' (want e.g. 20ms)")
+                    })?;
+                }
+                "drop_inject" => plan.drop_inject = parse_rate(key, val)?,
+                "corrupt_snapshot" => plan.corrupt_snapshot = parse_rate(key, val)?,
+                "ckpt_io" => plan.ckpt_io = parse_rate(key, val)?,
+                other => {
+                    return Err(format!(
+                        "unknown fault '{other}' (want seed|crash|slow|drop_inject|\
+                         corrupt_snapshot|ckpt_io)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read `TVQ_FAULTS`. Unset or empty → `Ok(None)` (no injection);
+    /// set and malformed → a hard error naming the variable.
+    pub fn from_env() -> anyhow::Result<Option<FaultPlan>> {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`Self::from_env`] against an arbitrary lookup (testable without
+    /// mutating process-global env state).
+    pub fn from_lookup(
+        lookup: impl Fn(&str) -> Option<String>,
+    ) -> anyhow::Result<Option<FaultPlan>> {
+        match lookup("TVQ_FAULTS") {
+            None => Ok(None),
+            Some(s) if s.trim().is_empty() => Ok(None),
+            Some(s) => FaultPlan::parse(&s)
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("bad value for TVQ_FAULTS: {e}")),
+        }
+    }
+
+    /// Whether any seam can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.crash > 0.0
+            || self.slow > 0.0
+            || self.drop_inject > 0.0
+            || self.corrupt_snapshot > 0.0
+            || self.ckpt_io > 0.0
+    }
+
+    /// Build the injector for one fault stream (a replica incarnation, the
+    /// router, a checkpoint writer). Each seam inside the injector draws
+    /// from its own rng forked from `(seed, stream, seam)`.
+    pub fn injector(&self, stream: u64) -> FaultInjector {
+        let mut root = Rng::new(self.seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        FaultInjector {
+            plan: self.clone(),
+            crash_rng: root.fork(1),
+            slow_rng: root.fork(2),
+            drop_rng: root.fork(3),
+            corrupt_rng: root.fork(4),
+            io_rng: root.fork(5),
+        }
+    }
+}
+
+/// Per-stream fault source: one seeded rng per seam, so the decision
+/// sequence at each seam depends only on how many times that seam was
+/// visited — not on what the other seams drew.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    crash_rng: Rng,
+    slow_rng: Rng,
+    drop_rng: Rng,
+    corrupt_rng: Rng,
+    io_rng: Rng,
+}
+
+impl FaultInjector {
+    /// Token-boundary seam: should the replica thread die right now?
+    pub fn crash_now(&mut self) -> bool {
+        self.crash_rng.f64() < self.plan.crash
+    }
+
+    /// Token-boundary seam: delay this step?
+    pub fn slow_delay(&mut self) -> Option<Duration> {
+        if self.slow_rng.f64() < self.plan.slow {
+            Some(Duration::from_millis(self.plan.slow_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Migration seam: drop the inject before it reaches the target?
+    pub fn drop_inject(&mut self) -> bool {
+        self.drop_rng.f64() < self.plan.drop_inject
+    }
+
+    /// Migration seam: flip a byte of the snapshot wire in transit?
+    pub fn corrupt_snapshot(&mut self) -> bool {
+        self.corrupt_rng.f64() < self.plan.corrupt_snapshot
+    }
+
+    /// Which byte to corrupt (uniform in `[0, n)`).
+    pub fn corrupt_index(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        self.corrupt_rng.below(n as u64) as usize
+    }
+
+    /// Checkpoint seam: fail this I/O site?
+    pub fn ckpt_io(&mut self) -> bool {
+        self.io_rng.f64() < self.plan.ckpt_io
+    }
+}
+
+/// Checkpoint writes take any [`IoFaults`]; a `FaultInjector` is one.
+impl IoFaults for FaultInjector {
+    fn check(&mut self, site: &str) -> std::io::Result<()> {
+        if self.ckpt_io() {
+            return Err(std::io::Error::other(format!("injected ckpt_io fault at {site}")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_spec() {
+        let p = FaultPlan::parse(
+            "seed=7,crash=0.01,slow=0.05:20ms,drop_inject=0.02,corrupt_snapshot=0.01,ckpt_io=0.1",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.crash, 0.01);
+        assert_eq!(p.slow, 0.05);
+        assert_eq!(p.slow_ms, 20);
+        assert_eq!(p.drop_inject, 0.02);
+        assert_eq!(p.corrupt_snapshot, 0.01);
+        assert_eq!(p.ckpt_io, 0.1);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn strict_parse_names_the_offending_field() {
+        for (spec, needle) in [
+            ("crash=lots", "crash"),
+            ("crash=1.5", "crash"),
+            ("crash=-0.1", "crash"),
+            ("seed=abc", "seed"),
+            ("slow=0.1", "slow"),
+            ("slow=0.1:20", "slow"),
+            ("slow=0.1:fastms", "slow"),
+            ("frobnicate=0.1", "frobnicate"),
+            ("crash", "crash"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "spec '{spec}' error misses '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_the_inert_plan() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert!(!p.is_active());
+        // an inert injector never fires
+        let mut inj = p.injector(0);
+        for _ in 0..100 {
+            assert!(!inj.crash_now());
+            assert!(inj.slow_delay().is_none());
+            assert!(!inj.drop_inject());
+            assert!(!inj.corrupt_snapshot());
+            assert!(!inj.ckpt_io());
+        }
+    }
+
+    #[test]
+    fn env_lookup_is_strict_but_absence_is_fine() {
+        assert!(FaultPlan::from_lookup(|_| None).unwrap().is_none());
+        assert!(FaultPlan::from_lookup(|_| Some("  ".into())).unwrap().is_none());
+        let p = FaultPlan::from_lookup(|_| Some("seed=3,crash=0.5".into())).unwrap().unwrap();
+        assert_eq!((p.seed, p.crash), (3, 0.5));
+        let err = FaultPlan::from_lookup(|_| Some("crash=oops".into())).unwrap_err().to_string();
+        assert!(err.contains("TVQ_FAULTS"), "{err}");
+    }
+
+    #[test]
+    fn same_plan_same_stream_replays_the_same_fault_sequence() {
+        let p = FaultPlan::parse("seed=11,crash=0.2,slow=0.3:5ms,drop_inject=0.4").unwrap();
+        let mut a = p.injector(2);
+        let mut b = p.injector(2);
+        for _ in 0..200 {
+            assert_eq!(a.crash_now(), b.crash_now());
+            assert_eq!(a.slow_delay(), b.slow_delay());
+            assert_eq!(a.drop_inject(), b.drop_inject());
+        }
+        // distinct streams diverge
+        let mut d = p.injector(2);
+        let mut c = p.injector(3);
+        let seq_d: Vec<bool> = (0..256).map(|_| d.crash_now()).collect();
+        let seq_c: Vec<bool> = (0..256).map(|_| c.crash_now()).collect();
+        assert_ne!(seq_d, seq_c);
+    }
+
+    #[test]
+    fn seams_draw_from_independent_streams() {
+        // consuming one seam's draws must not shift another seam's
+        // sequence: two injectors from the same (plan, stream), one of
+        // which burns crash draws, still agree on the slow sequence
+        let p = FaultPlan::parse("seed=5,crash=0.5,slow=0.5:1ms").unwrap();
+        let mut a = p.injector(0);
+        let mut b = p.injector(0);
+        for _ in 0..50 {
+            let _ = a.crash_now(); // a burns crash draws, b does not
+        }
+        let sa: Vec<bool> = (0..50).map(|_| a.slow_delay().is_some()).collect();
+        let sb: Vec<bool> = (0..50).map(|_| b.slow_delay().is_some()).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn injector_implements_the_checkpoint_io_seam() {
+        let p = FaultPlan::parse("seed=1,ckpt_io=1.0").unwrap();
+        let mut inj = p.injector(0);
+        let err = IoFaults::check(&mut inj, "create").unwrap_err();
+        assert!(err.to_string().contains("ckpt_io"), "{err}");
+        let mut none = FaultPlan::default().injector(0);
+        assert!(IoFaults::check(&mut none, "create").is_ok());
+    }
+}

@@ -1,4 +1,5 @@
-//! Sharded multi-replica serving fleet (DESIGN.md §11).
+//! Sharded multi-replica serving fleet (DESIGN.md §11) with supervised
+//! self-healing (DESIGN.md §12).
 //!
 //! N thread-level engine replicas behind one router: each replica is its
 //! own [`crate::coordinator::Engine`] (own thread, own `Sampler`, own
@@ -13,23 +14,37 @@
 //!   clients as typed protocol-v2 `error.reason` values instead of stalls;
 //! * **live migration** — drain a session at a token boundary, snapshot its
 //!   lane through the checksummed wire format, and continue it on another
-//!   replica bit-identically.
+//!   replica bit-identically;
+//! * **supervision** — a [`Supervisor`] watchdog restarts crashed or wedged
+//!   replicas from the shared weight bundle and resumes their sessions from
+//!   last-token-boundary snapshots in the [`SessionVault`], bit-identically
+//!   on the same client stream. Deterministic fault injection
+//!   ([`FaultPlan`], `--faults` / `TVQ_FAULTS`) drives the chaos gate.
 //!
 //! The fixed-size Transformer-VQ decode state (Thm 3.7 block recurrence:
 //! O(S + 2L) per lane, never growing) is what makes sessions cheap to pin
 //! *and* cheap to move.
 //!
 //! Configuration comes from `tvq serve` flags or the environment:
-//! `TVQ_REPLICAS`, `TVQ_QUEUE_DEPTH`, `TVQ_SHED_DEADLINE_MS`.
+//! `TVQ_REPLICAS`, `TVQ_QUEUE_DEPTH`, `TVQ_SHED_DEADLINE_MS`, `TVQ_FAULTS`.
 
+pub mod faults;
 mod router;
 mod stats;
+pub mod supervisor;
 
-pub use router::{Fleet, FleetHandle, FleetJoin, FleetRequest};
+pub use faults::{FaultInjector, FaultPlan};
+pub use router::{Fleet, FleetHandle, FleetJoin, FleetRequest, FleetShutdownReport};
 pub use stats::{FleetStats, ReplicaStats};
+pub use supervisor::{
+    RecoveryOutcome, SessionVault, Supervisor, SupervisorOptions, SupervisorStats, VaultHook,
+};
 
-/// Fleet sizing and admission policy.
-#[derive(Debug, Clone)]
+/// Fleet sizing and admission policy. [`Default`] is pure code defaults;
+/// [`FleetOptions::from_env`] layers the environment on top with *strict*
+/// parsing — a malformed value is a startup error naming the variable, not
+/// a silent fallback.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetOptions {
     /// Engine replica count (`TVQ_REPLICAS`, default 1).
     pub replicas: usize,
@@ -39,23 +54,120 @@ pub struct FleetOptions {
     /// Shed a request whose deadline is at or under this floor if it would
     /// have to queue (`TVQ_SHED_DEADLINE_MS`; unset = never deadline-shed).
     pub shed_deadline_ms: Option<u64>,
+    /// Deterministic fault-injection plan (`--faults` / `TVQ_FAULTS`;
+    /// `None` = no injection — the production configuration).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        let replicas = std::env::var("TVQ_REPLICAS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or(1);
-        let queue_depth = std::env::var("TVQ_QUEUE_DEPTH")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(8);
-        let shed_deadline_ms = std::env::var("TVQ_SHED_DEADLINE_MS")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .filter(|&ms| ms > 0);
-        FleetOptions { replicas, queue_depth, shed_deadline_ms }
+        FleetOptions { replicas: 1, queue_depth: 8, shed_deadline_ms: None, faults: None }
+    }
+}
+
+impl FleetOptions {
+    /// Defaults overlaid with the process environment, strictly parsed.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// [`Self::from_env`] against an arbitrary lookup (tests inject maps
+    /// instead of mutating process-global env). Unset or blank variables
+    /// keep the default; anything else must parse or the fleet refuses to
+    /// start.
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> anyhow::Result<Self> {
+        let mut o = Self::default();
+        if let Some(v) = lookup("TVQ_REPLICAS").filter(|v| !v.trim().is_empty()) {
+            o.replicas = match v.trim().parse::<usize>() {
+                Ok(n) if n > 0 => n,
+                _ => anyhow::bail!(
+                    "bad value for TVQ_REPLICAS: '{v}' (want a positive integer)"
+                ),
+            };
+        }
+        if let Some(v) = lookup("TVQ_QUEUE_DEPTH").filter(|v| !v.trim().is_empty()) {
+            o.queue_depth = v.trim().parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "bad value for TVQ_QUEUE_DEPTH: '{v}' (want a non-negative integer)"
+                )
+            })?;
+        }
+        if let Some(v) = lookup("TVQ_SHED_DEADLINE_MS").filter(|v| !v.trim().is_empty()) {
+            o.shed_deadline_ms = match v.trim().parse::<u64>() {
+                Ok(ms) if ms > 0 => Some(ms),
+                _ => anyhow::bail!(
+                    "bad value for TVQ_SHED_DEADLINE_MS: '{v}' (want a positive integer of \
+                     milliseconds; unset it to disable deadline shedding)"
+                ),
+            };
+        }
+        o.faults = FaultPlan::from_lookup(&lookup)?;
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |k| pairs.iter().find(|(n, _)| *n == k).map(|(_, v)| v.to_string())
+    }
+
+    #[test]
+    fn empty_env_yields_code_defaults() {
+        let o = FleetOptions::from_lookup(env(&[])).unwrap();
+        assert_eq!(o, FleetOptions::default());
+        assert_eq!(o.replicas, 1);
+        assert_eq!(o.queue_depth, 8);
+        assert_eq!(o.shed_deadline_ms, None);
+        assert!(o.faults.is_none());
+    }
+
+    #[test]
+    fn well_formed_env_is_applied() {
+        let o = FleetOptions::from_lookup(env(&[
+            ("TVQ_REPLICAS", "4"),
+            ("TVQ_QUEUE_DEPTH", "0"),
+            ("TVQ_SHED_DEADLINE_MS", "250"),
+            ("TVQ_FAULTS", "seed=7,crash=0.01"),
+        ]))
+        .unwrap();
+        assert_eq!(o.replicas, 4);
+        assert_eq!(o.queue_depth, 0);
+        assert_eq!(o.shed_deadline_ms, Some(250));
+        let plan = o.faults.unwrap();
+        assert_eq!(plan.seed, 7);
+        assert!((plan.crash - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_env_is_a_hard_error_naming_the_variable() {
+        for (key, val) in [
+            ("TVQ_REPLICAS", "0"),
+            ("TVQ_REPLICAS", "three"),
+            ("TVQ_REPLICAS", "-1"),
+            ("TVQ_QUEUE_DEPTH", "lots"),
+            ("TVQ_QUEUE_DEPTH", "-2"),
+            ("TVQ_SHED_DEADLINE_MS", "0"),
+            ("TVQ_SHED_DEADLINE_MS", "fast"),
+            ("TVQ_FAULTS", "crash=2.0"),
+        ] {
+            let err = FleetOptions::from_lookup(env(&[(key, val)]))
+                .expect_err(&format!("{key}={val} must be rejected"))
+                .to_string();
+            assert!(err.contains(key), "error for {key}={val} must name it: {err}");
+            assert!(err.contains(val), "error for {key}={val} must quote it: {err}");
+        }
+    }
+
+    #[test]
+    fn blank_values_keep_defaults() {
+        let o = FleetOptions::from_lookup(env(&[
+            ("TVQ_REPLICAS", ""),
+            ("TVQ_QUEUE_DEPTH", "  "),
+        ]))
+        .unwrap();
+        assert_eq!(o, FleetOptions::default());
     }
 }

@@ -28,13 +28,34 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::coordinator::{
-    Engine, EngineHandle, EngineStats, Frontend, GenEvent, GenRequest, MigratedSession,
-    RequestEvents, RequestHandle, ShedReason, SubmitError,
+    Engine, EngineHandle, EngineHooks, EngineStats, Frontend, GenEvent, GenRequest,
+    MigratedSession, RequestEvents, RequestHandle, ShedReason, SubmitError,
 };
 use crate::sample::Sampler;
 
+use super::faults::{FaultInjector, FaultPlan};
 use super::stats::{FleetStats, ReplicaStats};
+use super::supervisor::{RecoveryOutcome, SessionVault, VaultHook};
 use super::FleetOptions;
+
+/// Replica stats queries during fleet rollups are bounded by this: a
+/// replica that cannot reach a token boundary in time is reported with
+/// empty engine counters (and left for the supervisor's watchdog to judge).
+const STATS_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Total budget [`FleetJoin::join`] spends waiting for engine threads to
+/// exit before giving up on the stragglers (counted, never hung on).
+const JOIN_BUDGET: Duration = Duration::from_secs(30);
+
+/// Fault stream id for replica `i`, incarnation `gen` — distinct per
+/// incarnation so a restarted replica replays a fresh (but deterministic)
+/// fault sequence instead of its predecessor's.
+fn replica_fault_stream(i: usize, gen: u64) -> u64 {
+    gen.wrapping_mul(0x1_0000).wrapping_add(i as u64)
+}
+
+/// Fault stream id for the router's migration seams.
+const ROUTER_FAULT_STREAM: u64 = u64::MAX;
 
 /// FNV-1a over the prompt's token bytes: the session-affinity key. Stable
 /// across runs (never a `RandomState` hash), so routing is reproducible.
@@ -50,8 +71,16 @@ fn affinity_hash(tokens: &[i32]) -> u64 {
 }
 
 struct Replica {
-    handle: EngineHandle,
-    /// Slot capacity (the engine's batch size), learned at spawn.
+    /// Current engine incarnation's handle. Behind a mutex because the
+    /// supervisor swaps in a fresh incarnation on restart; router paths
+    /// clone the handle out ([`Replica::engine`]) and never hold the lock
+    /// across a blocking call.
+    handle: Mutex<EngineHandle>,
+    /// Current incarnation's thread join handle ([`FleetJoin`] collects it;
+    /// restarts move the old one into [`FleetInner::retired`]).
+    join: Mutex<Option<std::thread::JoinHandle<EngineStats>>>,
+    /// Slot capacity (the engine's batch size), learned at spawn. Restarted
+    /// incarnations reuse it — same factory, same batch geometry.
     slots: usize,
     /// Router-tracked sessions homed here (seated or queued).
     inflight: AtomicU64,
@@ -59,6 +88,11 @@ struct Replica {
 }
 
 impl Replica {
+    /// Clone out the current incarnation's handle (cheap: an mpsc sender).
+    fn engine(&self) -> EngineHandle {
+        self.handle.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
     fn load(&self) -> u64 {
         self.inflight.load(Ordering::Acquire)
     }
@@ -85,6 +119,19 @@ struct SessionEntry {
 struct FleetInner {
     replicas: Vec<Replica>,
     opts: FleetOptions,
+    /// Sampler factory, retained so the supervisor can construct fresh
+    /// engine incarnations on restart (weights stay shared via the `Arc`s
+    /// the factory closes over).
+    factory: Arc<dyn Fn(usize) -> anyhow::Result<Sampler> + Send + Sync>,
+    seed: u64,
+    /// Deterministic chaos plan (None in production) and the router's own
+    /// injector for the migration seams.
+    faults: Option<FaultPlan>,
+    router_faults: Mutex<Option<FaultInjector>>,
+    /// Token-boundary snapshots of every live session, for crash recovery.
+    vault: SessionVault,
+    /// Join handles of replaced engine incarnations, collected at shutdown.
+    retired: Mutex<Vec<std::thread::JoinHandle<EngineStats>>>,
     sessions: Mutex<BTreeMap<String, SessionEntry>>,
     shed_queue_full: AtomicU64,
     shed_deadline: AtomicU64,
@@ -93,6 +140,22 @@ struct FleetInner {
     migration_failed: AtomicU64,
     sessions_routed: AtomicU64,
     affinity_hits: AtomicU64,
+    restarts: AtomicU64,
+    session_retries: AtomicU64,
+    sessions_recovered: AtomicU64,
+    sessions_lost: AtomicU64,
+}
+
+impl FleetInner {
+    /// Engine hooks for replica `i`'s incarnation `gen`: the vault publisher
+    /// plus (under a fault plan) a deterministic injector on that
+    /// incarnation's own stream.
+    fn hooks_for(&self, i: usize, gen: u64) -> EngineHooks {
+        EngineHooks {
+            faults: self.faults.as_ref().map(|p| p.injector(replica_fault_stream(i, gen))),
+            vault: Some(VaultHook::new(i, gen, self.vault.clone())),
+        }
+    }
 }
 
 /// Lock the session map, recovering from poisoning (same rationale as the
@@ -138,7 +201,13 @@ impl FleetRequest {
 
 impl RequestEvents for FleetRequest {
     fn recv_event(&self) -> Result<GenEvent, String> {
+        // tvq-bounded: client-facing park on a supervised stream; the
+        // bounded variant is recv_event_timeout below
         self.inner.recv()
+    }
+
+    fn recv_event_timeout(&self, d: Duration) -> Result<Option<GenEvent>, String> {
+        self.inner.recv_timeout(d)
     }
 
     fn cancel_handle(&self) -> crate::coordinator::CancelToken {
@@ -146,15 +215,71 @@ impl RequestEvents for FleetRequest {
     }
 }
 
-/// Joins the replica engine threads after shutdown; returns per-replica
-/// final [`EngineStats`].
+/// What [`FleetJoin::join`] found when collecting the engine threads.
+#[derive(Debug, Default)]
+pub struct FleetShutdownReport {
+    /// Final stats of each replica's *current* incarnation, in replica
+    /// order. A panicked or unjoinable thread reports default (zero) stats.
+    pub per_replica: Vec<EngineStats>,
+    /// Engine threads (current or retired incarnations) that exited by
+    /// panicking — previously these were silently swallowed as zero stats.
+    pub panicked_threads: u64,
+    /// Threads still running when [`JOIN_BUDGET`] ran out (wedged hard
+    /// enough to survive shutdown; counted and abandoned, never hung on).
+    pub unjoined_threads: u64,
+}
+
+/// Joins the replica engine threads after shutdown.
 pub struct FleetJoin {
-    joins: Vec<std::thread::JoinHandle<EngineStats>>,
+    inner: Arc<FleetInner>,
 }
 
 impl FleetJoin {
-    pub fn join(self) -> Vec<EngineStats> {
-        self.joins.into_iter().map(|j| j.join().unwrap_or_default()).collect()
+    /// Wait (bounded by [`JOIN_BUDGET`]) for every engine thread — current
+    /// incarnations and any retired by restarts — and report what happened
+    /// to each, panics and stragglers included.
+    pub fn join(self) -> FleetShutdownReport {
+        let deadline = std::time::Instant::now() + JOIN_BUDGET;
+        let mut report = FleetShutdownReport::default();
+        let mut pending: Vec<(Option<usize>, std::thread::JoinHandle<EngineStats>)> = Vec::new();
+        for (i, r) in self.inner.replicas.iter().enumerate() {
+            if let Some(j) = r.join.lock().unwrap_or_else(PoisonError::into_inner).take() {
+                pending.push((Some(i), j));
+            }
+            report.per_replica.push(EngineStats::default());
+        }
+        for j in self.inner.retired.lock().unwrap_or_else(PoisonError::into_inner).drain(..) {
+            pending.push((None, j));
+        }
+        while !pending.is_empty() {
+            let mut still: Vec<(Option<usize>, std::thread::JoinHandle<EngineStats>)> = Vec::new();
+            for (ix, j) in pending {
+                if j.is_finished() {
+                    // tvq-bounded: is_finished() above makes this join a
+                    // non-blocking result pickup
+                    match j.join() {
+                        Ok(stats) => {
+                            if let Some(i) = ix {
+                                report.per_replica[i] = stats;
+                            }
+                        }
+                        Err(_) => report.panicked_threads += 1,
+                    }
+                } else {
+                    still.push((ix, j));
+                }
+            }
+            pending = still;
+            if pending.is_empty() {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                report.unjoined_threads = pending.len() as u64;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        report
     }
 }
 
@@ -176,12 +301,19 @@ impl Fleet {
         F: Fn(usize) -> anyhow::Result<Sampler> + Send + Sync + 'static,
     {
         anyhow::ensure!(opts.replicas >= 1, "fleet needs at least one replica");
-        let factory = Arc::new(factory);
+        let factory: Arc<dyn Fn(usize) -> anyhow::Result<Sampler> + Send + Sync> =
+            Arc::new(factory);
+        let faults = opts.faults.clone();
+        let vault = SessionVault::new(opts.replicas);
         let mut replicas = Vec::with_capacity(opts.replicas);
-        let mut joins = Vec::with_capacity(opts.replicas);
         for i in 0..opts.replicas {
             let f = Arc::clone(&factory);
-            let (handle, join) = Engine::spawn(move || f(i), seed.wrapping_add(i as u64))?;
+            let hooks = EngineHooks {
+                faults: faults.as_ref().map(|p| p.injector(replica_fault_stream(i, 0))),
+                vault: Some(VaultHook::new(i, vault.generation(i), vault.clone())),
+            };
+            let (handle, join) =
+                Engine::spawn_with(move || f(i), seed.wrapping_add(i as u64), hooks)?;
             // the engine is idle right after spawn, so this stats query
             // answers from its blocking receive; `slots` is the batch size
             let slots = handle
@@ -189,16 +321,23 @@ impl Fleet {
                 .map_err(|e| anyhow::anyhow!("replica {i} stats after spawn: {e}"))?
                 .slots as usize;
             replicas.push(Replica {
-                handle,
+                handle: Mutex::new(handle),
+                join: Mutex::new(Some(join)),
                 slots,
                 inflight: AtomicU64::new(0),
                 alive: AtomicBool::new(true),
             });
-            joins.push(join);
         }
-        let inner = FleetInner {
+        let router_faults = faults.as_ref().map(|p| p.injector(ROUTER_FAULT_STREAM));
+        let inner = Arc::new(FleetInner {
             replicas,
             opts,
+            factory,
+            seed,
+            faults,
+            router_faults: Mutex::new(router_faults),
+            vault,
+            retired: Mutex::new(Vec::new()),
             sessions: Mutex::new(BTreeMap::new()),
             shed_queue_full: AtomicU64::new(0),
             shed_deadline: AtomicU64::new(0),
@@ -207,8 +346,12 @@ impl Fleet {
             migration_failed: AtomicU64::new(0),
             sessions_routed: AtomicU64::new(0),
             affinity_hits: AtomicU64::new(0),
-        };
-        Ok((FleetHandle(Arc::new(inner)), FleetJoin { joins }))
+            restarts: AtomicU64::new(0),
+            session_retries: AtomicU64::new(0),
+            sessions_recovered: AtomicU64::new(0),
+            sessions_lost: AtomicU64::new(0),
+        });
+        Ok((FleetHandle(Arc::clone(&inner)), FleetJoin { inner }))
     }
 }
 
@@ -251,7 +394,7 @@ impl FleetHandle {
         }
         // evict at the source's next token boundary; the engine keeps the
         // session running in place if the snapshot fails
-        let m = match inner.replicas[src].handle.evict(key) {
+        let mut m = match inner.replicas[src].engine().evict(key) {
             Ok(Some(m)) => m,
             Ok(None) => return Ok(false),
             Err(e) => {
@@ -259,12 +402,43 @@ impl FleetHandle {
                 return Err(format!("evict from replica {src}: {e}"));
             }
         };
-        if let Err(m) = inner.replicas[dst].handle.inject(m) {
+        // chaos seams on the in-transit session (deterministic, from the
+        // router's own fault stream): drop the handoff entirely, or flip
+        // one snapshot byte so the target's checksum verification trips
+        {
+            let mut g = inner.router_faults.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(fi) = g.as_mut() {
+                if fi.drop_inject() {
+                    drop(g);
+                    inner.migration_failed.fetch_add(1, Ordering::Relaxed);
+                    return match inner.replicas[src].engine().inject(m) {
+                        Ok(()) => Err(format!(
+                            "injected drop_inject fault; session re-homed to {src}"
+                        )),
+                        Err(m) => {
+                            let _ = m.tx.send(GenEvent::Error(
+                                "fleet lost the session's replicas mid-migration".to_string(),
+                            ));
+                            Err("injected drop_inject fault and source unavailable".to_string())
+                        }
+                    };
+                }
+                if fi.corrupt_snapshot() {
+                    if let Some(wire) = m.lane_wire.as_mut() {
+                        if !wire.is_empty() {
+                            let ix = fi.corrupt_index(wire.len());
+                            wire[ix] ^= 0x01;
+                        }
+                    }
+                }
+            }
+        }
+        if let Err(m) = inner.replicas[dst].engine().inject(m) {
             // target died between the aliveness check and the handoff:
             // re-home the session where it came from
             inner.replicas[dst].alive.store(false, Ordering::Release);
             inner.migration_failed.fetch_add(1, Ordering::Relaxed);
-            return match inner.replicas[src].handle.inject(m) {
+            return match inner.replicas[src].engine().inject(m) {
                 Ok(()) => Err(format!("replica {dst} unavailable; session re-homed to {src}")),
                 Err(m) => {
                     // both ends gone mid-flight: a clean per-request error,
@@ -330,13 +504,30 @@ impl FleetHandle {
     pub fn crash_replica(&self, i: usize) -> Result<(), String> {
         let inner = &self.0;
         let r = inner.replicas.get(i).ok_or_else(|| format!("no replica {i}"))?;
-        r.handle.crash();
+        r.engine().crash();
         r.alive.store(false, Ordering::Release);
+        // an armed vault means a supervisor owns recovery; without one,
+        // nobody will ever drain this replica's registered sessions — and
+        // each vault entry holds a live sender clone, so clients would
+        // park forever instead of seeing the documented typed error.
+        // Retire them here with `replica_lost` (terminal send drops the
+        // vault's channel clone and unblocks the stream).
+        if !inner.vault.armed() {
+            for (key, m) in inner.vault.begin_recovery(i) {
+                let _ = m.tx.send(GenEvent::Error(format!(
+                    "replica_lost: replica {i} crashed with no supervisor attached"
+                )));
+                inner.sessions_lost.fetch_add(1, Ordering::Relaxed);
+                self.forget_session(key);
+            }
+        }
         Ok(())
     }
 
-    /// Per-replica + router statistics. Queries each live replica's engine;
-    /// a replica that stopped answering is reported (and marked) dead.
+    /// Per-replica + router statistics. Queries each live replica's engine
+    /// (bounded by [`STATS_TIMEOUT`]); a replica whose channel dropped is
+    /// reported (and marked) dead, one that merely timed out is reported
+    /// with empty engine counters but left alive for the watchdog to judge.
     pub fn stats(&self) -> FleetStats {
         let inner = &self.0;
         let replicas = inner
@@ -344,8 +535,9 @@ impl FleetHandle {
             .iter()
             .enumerate()
             .map(|(i, r)| {
-                let engine = match r.handle.stats() {
-                    Ok(s) => s,
+                let engine = match r.engine().stats_timeout(STATS_TIMEOUT) {
+                    Ok(Some(s)) => s,
+                    Ok(None) => EngineStats::default(),
                     Err(_) => {
                         r.alive.store(false, Ordering::Release);
                         EngineStats::default()
@@ -364,6 +556,190 @@ impl FleetHandle {
             sessions_routed: inner.sessions_routed.load(Ordering::Relaxed),
             sessions_active: lock_sessions(&inner.sessions).len() as u64,
             affinity_hits: inner.affinity_hits.load(Ordering::Relaxed),
+            restarts: inner.restarts.load(Ordering::Relaxed),
+            session_retries: inner.session_retries.load(Ordering::Relaxed),
+            sessions_recovered: inner.sessions_recovered.load(Ordering::Relaxed),
+            sessions_lost: inner.sessions_lost.load(Ordering::Relaxed),
+        }
+    }
+
+    // --- supervision surface (used by `super::supervisor::Supervisor`) ----
+
+    /// Arm per-token vault snapshots. Until a supervisor arms the vault,
+    /// engines skip the per-token encode cost (submit-time registration
+    /// still happens, so `replica_lost` stays typed either way).
+    pub fn arm_vault(&self) {
+        self.0.vault.arm();
+    }
+
+    /// The active fault plan, if this fleet injects faults.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.0.faults.as_ref()
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.0.replicas.get(i).is_some_and(|r| r.is_alive())
+    }
+
+    /// Bounded liveness probe: `Ok(Some(_))` = answered at a token
+    /// boundary, `Ok(None)` = alive but silent (possibly wedged), `Err` =
+    /// control channel gone (crashed).
+    pub fn heartbeat(&self, i: usize, timeout: Duration) -> Result<Option<EngineStats>, String> {
+        match self.0.replicas.get(i) {
+            Some(r) => r.engine().stats_timeout(timeout),
+            None => Err(format!("no replica {i}")),
+        }
+    }
+
+    /// Stop routing new sessions to replica `i`.
+    pub fn mark_dead(&self, i: usize) {
+        if let Some(r) = self.0.replicas.get(i) {
+            r.alive.store(false, Ordering::Release);
+        }
+    }
+
+    /// Wait (bounded) for replica `i`'s engine thread to actually exit.
+    /// `false` = still running when the grace expired (a wedged thread —
+    /// restart proceeds anyway; the old incarnation's vault generation and
+    /// event epochs are already fenced off, so it can only shout into the
+    /// void).
+    pub fn confirm_stopped(&self, i: usize, grace: Duration) -> bool {
+        let Some(r) = self.0.replicas.get(i) else { return true };
+        let deadline = std::time::Instant::now() + grace;
+        loop {
+            {
+                let g = r.join.lock().unwrap_or_else(PoisonError::into_inner);
+                match g.as_ref() {
+                    None => return true, // already collected
+                    Some(j) if j.is_finished() => return true,
+                    Some(_) => {}
+                }
+            }
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Open recovery for replica `i`: bump its vault generation (fencing
+    /// every publish from the dead incarnation) and drain its registered
+    /// sessions for [`FleetHandle::resume_sessions`].
+    pub fn begin_recovery(&self, i: usize) -> Vec<(u64, MigratedSession)> {
+        self.0.vault.begin_recovery(i)
+    }
+
+    /// Spawn a fresh engine incarnation for replica `i` from the retained
+    /// factory (shared weights — the `Arc`s inside the factory — are
+    /// reused, not reloaded). The old incarnation's join handle is retired
+    /// for [`FleetJoin::join`] to collect.
+    pub fn restart_replica(&self, i: usize) -> Result<(), String> {
+        let inner = &self.0;
+        let r = inner.replicas.get(i).ok_or_else(|| format!("no replica {i}"))?;
+        let gen = inner.vault.generation(i);
+        let f = Arc::clone(&inner.factory);
+        let hooks = inner.hooks_for(i, gen);
+        let (handle, join) =
+            Engine::spawn_with(move || f(i), inner.seed.wrapping_add(i as u64), hooks)
+                .map_err(|e| format!("restart replica {i}: {e:#}"))?;
+        {
+            let mut g = r.join.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(old) = g.replace(join) {
+                inner.retired.lock().unwrap_or_else(PoisonError::into_inner).push(old);
+            }
+        }
+        *r.handle.lock().unwrap_or_else(PoisonError::into_inner) = handle;
+        // recovered sessions re-home through resume_sessions, which
+        // re-counts them onto whichever replica seats them
+        r.inflight.store(0, Ordering::Release);
+        r.alive.store(true, Ordering::Release);
+        inner.restarts.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Resume the sessions drained by [`FleetHandle::begin_recovery`] on
+    /// live replicas. Each session's event sender is re-fenced first, so a
+    /// zombie copy of it (on a wedged-but-running old incarnation) can
+    /// never interleave with the recovered stream. Sessions with a
+    /// token-boundary snapshot continue bit-identically; never-decoded
+    /// sessions re-run from scratch (their `Started` is deduped); sessions
+    /// that already streamed deltas but have no snapshot surface a typed
+    /// `replica_lost` error — the one case that is not silently retryable.
+    pub fn resume_sessions(&self, entries: Vec<(u64, MigratedSession)>) -> RecoveryOutcome {
+        let inner = &self.0;
+        let mut out = RecoveryOutcome::default();
+        for (key, mut m) in entries {
+            m.tx = m.tx.refence();
+            // cancellation is left to the engine: an injected cancelled
+            // session finishes with Done(Cancelled) like anywhere else
+            let resumable = m.lane_wire.is_some() || m.tx.delta_mark() < 0;
+            if !resumable {
+                let _ = m.tx.send(GenEvent::Error(
+                    "replica_lost: replica died mid-stream with no recoverable snapshot"
+                        .to_string(),
+                ));
+                inner.sessions_lost.fetch_add(1, Ordering::Relaxed);
+                out.lost += 1;
+                self.forget_session(key);
+                continue;
+            }
+            let had_snapshot = m.lane_wire.is_some();
+            // least-loaded live replica takes the session (affinity is a
+            // warm-cache optimization; recovery prioritizes liveness)
+            let mut seated = None;
+            let mut attempt = m;
+            loop {
+                let target = inner
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.is_alive())
+                    .min_by_key(|(_, r)| r.load())
+                    .map(|(i, _)| i);
+                let Some(t) = target else { break };
+                match inner.replicas[t].engine().inject(Box::new(attempt)) {
+                    Ok(()) => {
+                        seated = Some(t);
+                        break;
+                    }
+                    Err(back) => {
+                        inner.replicas[t].alive.store(false, Ordering::Release);
+                        attempt = *back;
+                    }
+                }
+            }
+            match seated {
+                Some(t) => {
+                    inner.replicas[t].inflight.fetch_add(1, Ordering::AcqRel);
+                    self.rehome_session(key, t);
+                    inner.session_retries.fetch_add(1, Ordering::Relaxed);
+                    out.retried += 1;
+                    if had_snapshot {
+                        inner.sessions_recovered.fetch_add(1, Ordering::Relaxed);
+                        out.recovered += 1;
+                    }
+                }
+                None => {
+                    inner.sessions_lost.fetch_add(1, Ordering::Relaxed);
+                    out.lost += 1;
+                    self.forget_session(key);
+                }
+            }
+        }
+        out
+    }
+
+    fn rehome_session(&self, key: u64, replica: usize) {
+        let mut map = lock_sessions(&self.0.sessions);
+        if let Some(e) = map.values_mut().find(|e| e.key == key) {
+            e.replica = replica;
+        }
+    }
+
+    fn forget_session(&self, key: u64) {
+        let mut map = lock_sessions(&self.0.sessions);
+        if let Some(s) = map.iter().find(|(_, e)| e.key == key).map(|(s, _)| s.clone()) {
+            map.remove(&s);
         }
     }
 }
@@ -416,7 +792,7 @@ impl Frontend for FleetHandle {
                     return Err(SubmitError::Shed(ShedReason::Deadline));
                 }
             }
-            match inner.replicas[ix].handle.submit(req.clone()) {
+            match inner.replicas[ix].engine().submit(req.clone()) {
                 Ok(rh) => {
                     inner.replicas[ix].inflight.fetch_add(1, Ordering::AcqRel);
                     inner.sessions_routed.fetch_add(1, Ordering::Relaxed);
@@ -451,7 +827,7 @@ impl Frontend for FleetHandle {
 
     fn shutdown_all(&self) {
         for r in &self.0.replicas {
-            r.handle.shutdown();
+            r.engine().shutdown();
         }
     }
 }

@@ -39,6 +39,18 @@ pub struct FleetStats {
     /// Routed sessions that landed on their prompt-affinity replica (the
     /// prefix-cache locality win under skewed prompt popularity).
     pub affinity_hits: u64,
+    /// Fresh engine incarnations spawned by the supervisor after a crash
+    /// or wedge (DESIGN.md §12).
+    pub restarts: u64,
+    /// Sessions re-seated on a live replica after their replica died
+    /// (snapshot resume or from-scratch re-run).
+    pub session_retries: u64,
+    /// Subset of `session_retries` resumed bit-identically from a
+    /// token-boundary vault snapshot.
+    pub sessions_recovered: u64,
+    /// Sessions surfaced as typed `replica_lost` errors (deltas already
+    /// streamed, no recoverable snapshot).
+    pub sessions_lost: u64,
 }
 
 impl FleetStats {

@@ -1,0 +1,526 @@
+//! Replica supervision: heartbeats, watchdog, restart, session recovery
+//! (DESIGN.md §12).
+//!
+//! The [`SessionVault`] is the recovery substrate: engines publish a
+//! token-boundary snapshot of every live session (the same
+//! [`MigratedSession`] image live migration moves between replicas), keyed
+//! by the engine-assigned session key and stamped with the publishing
+//! replica's *generation*. When a replica dies, [`SessionVault::
+//! begin_recovery`] bumps that generation — instantly fencing every publish
+//! the dead incarnation might still attempt — and drains its sessions for
+//! the router to resume elsewhere.
+//!
+//! The [`Supervisor`] is a watchdog thread over a
+//! [`FleetHandle`](super::FleetHandle): per-replica bounded heartbeats
+//! detect crashed replicas (control channel gone) and wedged ones (alive
+//! but making no token progress while holding work); either way the
+//! replica is marked dead, its thread's exit is awaited (bounded), its
+//! sessions are drained from the vault, a fresh engine incarnation is
+//! spawned from the fleet's retained factory under bounded exponential
+//! backoff with deterministic jitter, and the drained sessions resume on
+//! live replicas — bit-identically when a snapshot exists, from scratch
+//! when nothing was ever streamed, and as a typed `replica_lost` error in
+//! the one unrecoverable case (deltas streamed, no snapshot).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::MigratedSession;
+use crate::rng::Rng;
+
+use super::FleetHandle;
+
+/// Outcome of one [`FleetHandle::resume_sessions`](super::FleetHandle::resume_sessions)
+/// pass over a dead replica's drained sessions.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryOutcome {
+    /// Sessions re-seated on a live replica (snapshot resume or scratch
+    /// re-run).
+    pub retried: u64,
+    /// Subset of `retried` resumed bit-identically from a token-boundary
+    /// snapshot.
+    pub recovered: u64,
+    /// Sessions surfaced to their clients as typed `replica_lost` errors.
+    pub lost: u64,
+}
+
+struct VaultEntry {
+    replica: usize,
+    gen: u64,
+    session: MigratedSession,
+}
+
+struct VaultInner {
+    entries: BTreeMap<u64, VaultEntry>,
+    /// Per-replica incarnation counters; a publish stamped with an older
+    /// generation than its replica's current one is rejected.
+    gens: Vec<u64>,
+}
+
+/// Shared token-boundary session snapshots, the substrate of crash
+/// recovery. Cheap to clone (one `Arc`); one instance per fleet.
+#[derive(Clone)]
+pub struct SessionVault {
+    inner: Arc<Mutex<VaultInner>>,
+    /// Set by [`Supervisor::attach`]: until someone is actually watching,
+    /// engines skip the per-token snapshot encode (submission-time
+    /// registration is unconditional — it is what types `replica_lost`).
+    armed: Arc<AtomicBool>,
+}
+
+impl SessionVault {
+    pub fn new(n_replicas: usize) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(VaultInner {
+                entries: BTreeMap::new(),
+                gens: vec![0; n_replicas],
+            })),
+            armed: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn arm(&self) {
+        self.armed.store(true, Ordering::Release);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Acquire)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, VaultInner> {
+        // a poisoned vault is still structurally valid (plain map + counters)
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Current incarnation counter for `replica`.
+    pub fn generation(&self, replica: usize) -> u64 {
+        self.lock().gens.get(replica).copied().unwrap_or(0)
+    }
+
+    /// Install/overwrite the snapshot for `key`. Rejected (returns `false`)
+    /// when `gen` is no longer `replica`'s current generation — a drained
+    /// incarnation cannot resurrect entries after recovery started.
+    pub fn publish(&self, replica: usize, gen: u64, key: u64, session: MigratedSession) -> bool {
+        let mut g = self.lock();
+        if g.gens.get(replica).copied().unwrap_or(0) != gen {
+            return false;
+        }
+        g.entries.insert(key, VaultEntry { replica, gen, session });
+        true
+    }
+
+    /// Retire a finished session (terminal `Done`/`Error` passed its fence).
+    pub fn remove(&self, key: u64) {
+        self.lock().entries.remove(&key);
+    }
+
+    /// Open recovery for `replica`: bump its generation (fencing the dead
+    /// incarnation's future publishes) and drain its registered sessions,
+    /// in deterministic key order.
+    pub fn begin_recovery(&self, replica: usize) -> Vec<(u64, MigratedSession)> {
+        let mut g = self.lock();
+        if let Some(gen) = g.gens.get_mut(replica) {
+            *gen += 1;
+        }
+        let keys: Vec<u64> = g
+            .entries
+            .iter()
+            .filter(|(_, e)| e.replica == replica)
+            .map(|(k, _)| *k)
+            .collect();
+        keys.into_iter()
+            .filter_map(|k| g.entries.remove(&k).map(|e| (k, e.session)))
+            .collect()
+    }
+
+    /// Live registered sessions (test/bench introspection).
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One replica incarnation's publishing handle, threaded into its engine
+/// via [`crate::coordinator::EngineHooks`].
+#[derive(Clone)]
+pub struct VaultHook {
+    replica: usize,
+    gen: u64,
+    vault: SessionVault,
+}
+
+impl VaultHook {
+    pub fn new(replica: usize, gen: u64, vault: SessionVault) -> Self {
+        Self { replica, gen, vault }
+    }
+
+    pub fn vault(&self) -> &SessionVault {
+        &self.vault
+    }
+
+    /// Whether per-token snapshots should be captured at all.
+    pub fn armed(&self) -> bool {
+        self.vault.armed()
+    }
+
+    pub fn publish(&self, key: u64, session: MigratedSession) -> bool {
+        self.vault.publish(self.replica, self.gen, key, session)
+    }
+}
+
+/// Watchdog cadence and restart policy.
+#[derive(Debug, Clone)]
+pub struct SupervisorOptions {
+    /// Sleep between watchdog sweeps.
+    pub poll: Duration,
+    /// Per-replica heartbeat reply budget; a silent (but connected) replica
+    /// counts toward the wedge threshold.
+    pub heartbeat_timeout: Duration,
+    /// Consecutive no-progress/silent heartbeats before a busy replica is
+    /// declared wedged.
+    pub wedge_after: u32,
+    /// Grace to wait for a dead replica's thread to actually exit before
+    /// restarting over it.
+    pub stop_grace: Duration,
+    /// Exponential restart backoff: `base * 2^k` capped at `max`, plus a
+    /// deterministic jitter in `[0, base)` drawn from the per-replica rng.
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Cumulative restart budget per replica; past it the replica is left
+    /// dead (its sessions still resume on survivors).
+    pub max_restarts_per_replica: u32,
+    /// Seed for the deterministic backoff jitter streams.
+    pub seed: u64,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        Self {
+            poll: Duration::from_millis(25),
+            heartbeat_timeout: Duration::from_secs(1),
+            wedge_after: 3,
+            stop_grace: Duration::from_millis(500),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_secs(2),
+            max_restarts_per_replica: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// What the supervisor did over its lifetime (returned by
+/// [`Supervisor::stop`]).
+#[derive(Debug, Default, Clone)]
+pub struct SupervisorStats {
+    /// Fresh engine incarnations spawned.
+    pub restarts: u64,
+    /// Down events where the old thread refused to exit within the grace
+    /// (wedged; restart proceeded over it).
+    pub wedges: u64,
+    /// Session totals across every recovery pass.
+    pub sessions_retried: u64,
+    pub sessions_recovered: u64,
+    pub sessions_lost: u64,
+    /// Wall-clock of each down→resumed recovery, milliseconds.
+    pub recovery_ms: Vec<f64>,
+}
+
+/// Pure wedge detector: consecutive heartbeat observations with no token
+/// progress while the replica holds work (or no answer at all) accumulate;
+/// any progress — or going idle — resets. Pure logic, unit-tested without
+/// threads.
+pub struct ProgressTracker {
+    last_tokens: Vec<u64>,
+    stalls: Vec<u32>,
+    threshold: u32,
+}
+
+impl ProgressTracker {
+    pub fn new(n_replicas: usize, threshold: u32) -> Self {
+        Self {
+            last_tokens: vec![0; n_replicas],
+            stalls: vec![0; n_replicas],
+            threshold: threshold.max(1),
+        }
+    }
+
+    /// Record one heartbeat: `answered` = a stats reply arrived, `tokens` =
+    /// monotone work counter (prefill + decode tokens), `busy` = the
+    /// replica holds active or queued work. Returns `true` when the replica
+    /// crosses the wedge threshold.
+    pub fn observe(&mut self, i: usize, answered: bool, tokens: u64, busy: bool) -> bool {
+        let (Some(last), Some(stall)) = (self.last_tokens.get_mut(i), self.stalls.get_mut(i))
+        else {
+            return false;
+        };
+        if !answered {
+            *stall += 1;
+        } else if busy && tokens <= *last {
+            *stall += 1;
+        } else {
+            *stall = 0;
+        }
+        if tokens > *last {
+            *last = tokens;
+        }
+        *stall >= self.threshold
+    }
+
+    /// Forget a replica's history (after restart: counters start over).
+    pub fn reset(&mut self, i: usize) {
+        if let (Some(last), Some(stall)) = (self.last_tokens.get_mut(i), self.stalls.get_mut(i)) {
+            *last = 0;
+            *stall = 0;
+        }
+    }
+}
+
+/// `base * 2^k` capped at `max`, plus deterministic jitter in `[0, base)`.
+fn backoff_delay(base: Duration, max: Duration, k: u32, rng: &mut Rng) -> Duration {
+    let base_ms = base.as_millis() as u64;
+    let exp = base_ms.saturating_mul(1u64 << k.min(20));
+    let capped = exp.min(max.as_millis() as u64);
+    let jitter = rng.below(base_ms.max(1));
+    Duration::from_millis(capped.saturating_add(jitter))
+}
+
+/// The watchdog thread handle. Dropping without [`Supervisor::stop`] leaves
+/// the thread running until the fleet handle it holds is the last one.
+pub struct Supervisor {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<SupervisorStats>>,
+}
+
+impl Supervisor {
+    /// Arm the fleet's vault and start the watchdog.
+    pub fn attach(fleet: FleetHandle, opts: SupervisorOptions) -> Supervisor {
+        fleet.arm_vault();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::spawn(move || watchdog(fleet, opts, stop2));
+        Supervisor { stop, join: Some(join) }
+    }
+
+    /// Signal the watchdog and collect its stats (bounded wait; a watchdog
+    /// that somehow refuses to exit is abandoned with default stats rather
+    /// than hung on).
+    pub fn stop(mut self) -> SupervisorStats {
+        self.stop.store(true, Ordering::Release);
+        let Some(join) = self.join.take() else { return SupervisorStats::default() };
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !join.is_finished() {
+            if Instant::now() >= deadline {
+                return SupervisorStats::default();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // tvq-bounded: is_finished() above makes this a result pickup
+        join.join().unwrap_or_default()
+    }
+}
+
+fn watchdog(fleet: FleetHandle, opts: SupervisorOptions, stop: Arc<AtomicBool>) -> SupervisorStats {
+    let n = fleet.replicas();
+    let mut stats = SupervisorStats::default();
+    let mut tracker = ProgressTracker::new(n, opts.wedge_after);
+    let mut restart_counts = vec![0u32; n];
+    let mut given_up = vec![false; n];
+    let mut root = Rng::new(opts.seed ^ 0x5355_5056); // "SUPV" stream tag
+    let mut rngs: Vec<Rng> = (0..n).map(|i| root.fork(i as u64 + 1)).collect();
+    while !stop.load(Ordering::Acquire) {
+        for i in 0..n {
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            if given_up[i] {
+                continue;
+            }
+            let down = if !fleet.is_alive(i) {
+                true
+            } else {
+                match fleet.heartbeat(i, opts.heartbeat_timeout) {
+                    Ok(Some(s)) => {
+                        let tokens = s.prefill_tokens + s.decode_tokens;
+                        let busy = s.active + s.queued > 0;
+                        tracker.observe(i, true, tokens, busy)
+                    }
+                    Ok(None) => tracker.observe(i, false, 0, true),
+                    Err(_) => true,
+                }
+            };
+            if !down {
+                continue;
+            }
+            handle_down(
+                &fleet,
+                &opts,
+                i,
+                &mut stats,
+                &mut tracker,
+                &mut restart_counts,
+                &mut given_up,
+                &mut rngs[i],
+            );
+        }
+        std::thread::sleep(opts.poll);
+    }
+    stats
+}
+
+/// One down event, start to finish: fence, drain, restart, resume.
+#[allow(clippy::too_many_arguments)]
+fn handle_down(
+    fleet: &FleetHandle,
+    opts: &SupervisorOptions,
+    i: usize,
+    stats: &mut SupervisorStats,
+    tracker: &mut ProgressTracker,
+    restart_counts: &mut [u32],
+    given_up: &mut [bool],
+    rng: &mut Rng,
+) {
+    let t0 = Instant::now();
+    fleet.mark_dead(i);
+    // nudge a wedged-but-listening incarnation to exit at its next token
+    // boundary; harmless no-op when the thread is already gone
+    let _ = fleet.crash_replica(i);
+    if !fleet.confirm_stopped(i, opts.stop_grace) {
+        stats.wedges += 1;
+    }
+    let entries = fleet.begin_recovery(i);
+    if restart_counts[i] < opts.max_restarts_per_replica {
+        let delay = backoff_delay(opts.backoff_base, opts.backoff_max, restart_counts[i], rng);
+        std::thread::sleep(delay);
+        if fleet.restart_replica(i).is_ok() {
+            restart_counts[i] += 1;
+            stats.restarts += 1;
+            tracker.reset(i);
+        }
+    } else {
+        given_up[i] = true;
+    }
+    let o = fleet.resume_sessions(entries);
+    stats.sessions_retried += o.retried;
+    stats.sessions_recovered += o.recovered;
+    stats.sessions_lost += o.lost;
+    stats.recovery_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EventTx, GenRequest};
+    use std::sync::mpsc;
+
+    fn dummy_session() -> (MigratedSession, mpsc::Receiver<crate::coordinator::GenEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let m = MigratedSession {
+            key: 0,
+            req: GenRequest::default(),
+            tx: EventTx::new(tx),
+            cancel: crate::coordinator::CancelToken::new(),
+            enqueued: Instant::now(),
+            started: Instant::now(),
+            deadline: None,
+            prompt_pos: 0,
+            generated: Vec::new(),
+            current: 0,
+            decoding: false,
+            ttft_ms: None,
+            rng: Rng::new(0),
+            lane_wire: None,
+        };
+        (m, rx)
+    }
+
+    #[test]
+    fn vault_publishes_and_retires() {
+        let v = SessionVault::new(2);
+        let (m, _rx) = dummy_session();
+        assert!(v.publish(0, 0, 7, m));
+        assert_eq!(v.len(), 1);
+        v.remove(7);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn stale_generation_publishes_are_rejected() {
+        let v = SessionVault::new(2);
+        let (m, _rx) = dummy_session();
+        let (m2, _rx2) = dummy_session();
+        assert!(v.publish(1, 0, 7, m));
+        let drained = v.begin_recovery(1);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, 7);
+        // the dead incarnation (gen 0) cannot resurrect entries
+        assert!(!v.publish(1, 0, 7, m2));
+        assert!(v.is_empty());
+        assert_eq!(v.generation(1), 1);
+    }
+
+    #[test]
+    fn recovery_drains_only_the_dead_replica() {
+        let v = SessionVault::new(3);
+        let (a, _r1) = dummy_session();
+        let (b, _r2) = dummy_session();
+        let (c, _r3) = dummy_session();
+        v.publish(0, 0, 1, a);
+        v.publish(1, 0, 2, b);
+        v.publish(0, 0, 3, c);
+        let drained = v.begin_recovery(0);
+        let keys: Vec<u64> = drained.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![1, 3]);
+        assert_eq!(v.len(), 1);
+        // replica 1 untouched: same generation, entry intact
+        assert_eq!(v.generation(1), 0);
+    }
+
+    #[test]
+    fn tracker_wedges_only_on_sustained_no_progress_while_busy() {
+        let mut t = ProgressTracker::new(1, 3);
+        // idle: never wedges
+        for _ in 0..10 {
+            assert!(!t.observe(0, true, 0, false));
+        }
+        // busy and progressing: never wedges
+        for k in 1..10 {
+            assert!(!t.observe(0, true, k, true));
+        }
+        // busy, stuck at 9 tokens: wedge on the 3rd consecutive stall
+        assert!(!t.observe(0, true, 9, true));
+        assert!(!t.observe(0, true, 9, true));
+        assert!(t.observe(0, true, 9, true));
+        // progress resets
+        t.reset(0);
+        assert!(!t.observe(0, true, 1, true));
+        // silent heartbeats count as stalls
+        assert!(!t.observe(0, false, 0, true));
+        assert!(!t.observe(0, false, 0, true));
+        assert!(t.observe(0, false, 0, true));
+    }
+
+    #[test]
+    fn backoff_grows_is_capped_and_replays_deterministically() {
+        let base = Duration::from_millis(10);
+        let max = Duration::from_millis(100);
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a: Vec<Duration> =
+            (0..8).map(|k| backoff_delay(base, max, k, &mut r1)).collect();
+        let b: Vec<Duration> =
+            (0..8).map(|k| backoff_delay(base, max, k, &mut r2)).collect();
+        assert_eq!(a, b, "same seed must replay the same jittered schedule");
+        // exponential floor below the cap
+        assert!(a[0] >= Duration::from_millis(10) && a[0] < Duration::from_millis(20));
+        assert!(a[2] >= Duration::from_millis(40) && a[2] < Duration::from_millis(50));
+        // capped plus at most one base of jitter
+        for d in &a[4..] {
+            assert!(*d >= Duration::from_millis(100) && *d < Duration::from_millis(110));
+        }
+    }
+}

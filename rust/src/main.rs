@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use transformer_vq::config::TrainConfig;
 use transformer_vq::coordinator::{serve_until, Engine};
-use transformer_vq::fleet::{Fleet, FleetOptions};
+use transformer_vq::fleet::{FaultPlan, Fleet, FleetOptions, Supervisor, SupervisorOptions};
 use transformer_vq::rng::Rng;
 use transformer_vq::runtime::{auto_backend, auto_backend_threads, StateBundle};
 use transformer_vq::sample::{SampleParams, Sampler};
@@ -38,7 +38,7 @@ COMMANDS
             divergent sampling lanes — N at most the preset's batch size)
   serve     --preset P [--addr HOST:PORT] [--checkpoint D] [--threads N]
             [--prefix-cache N] [--replicas N] [--queue-depth N]
-            [--shed-deadline-ms N]
+            [--shed-deadline-ms N] [--faults SPEC]
             (streaming NDJSON protocol v2 + v1 one-shot; type 'quit' on
             stdin for graceful shutdown with drained requests and stats)
   inspect
@@ -70,6 +70,12 @@ sessions beyond the slot count before requests shed (also TVQ_QUEUE_DEPTH;
 default 8). --shed-deadline-ms N sheds queued-bound requests whose
 deadline is at or under N ms (also TVQ_SHED_DEADLINE_MS; default off).
 Sheds surface as typed protocol-v2 error reasons, never stalls.
+--faults SPEC enables deterministic fault injection (also TVQ_FAULTS),
+e.g. 'seed=7,crash=0.01,slow=0.05:20ms,drop_inject=0.02,\
+corrupt_snapshot=0.01,ckpt_io=0.1' (DESIGN.md §12). Any fault plan (and
+any --replicas > 1) attaches the supervisor: crashed or wedged replicas
+restart from the shared weight bundle, and their sessions resume from
+token-boundary snapshots bit-identically on the same stream.
 ";
 
 /// Tiny flag parser: --key value pairs after the subcommand.
@@ -294,7 +300,16 @@ fn main() -> Result<()> {
                 }
                 std::env::set_var("TVQ_SHED_DEADLINE_MS", n.to_string());
             }
-            let opts = FleetOptions::default();
+            if let Some(spec) = args.opt("faults") {
+                // validate eagerly so a typo dies here with the flag's name,
+                // not later wearing the env var's
+                FaultPlan::parse(&spec)
+                    .map_err(|e| anyhow::anyhow!("bad value for --faults: {e}"))?;
+                std::env::set_var("TVQ_FAULTS", spec);
+            }
+            // strict env parse: a malformed TVQ_* value is a startup error
+            // naming the variable, never a silent fallback to defaults
+            let opts = FleetOptions::from_env()?;
             // graceful shutdown: type "quit" (or "shutdown") on stdin. The
             // vendored dependency set has no signal-handling crate, so
             // ctrl-c still kills the process hard; the stdin path drains
@@ -320,7 +335,10 @@ fn main() -> Result<()> {
                 }
             });
             eprintln!("type 'quit' to drain in-flight requests and report stats");
-            if opts.replicas > 1 {
+            // the fleet path also hosts the single-replica chaos case: a
+            // fault plan needs the supervisor, and the supervisor needs the
+            // fleet's restart/vault machinery
+            if opts.replicas > 1 || opts.faults.is_some() {
                 // fleet path: parse the checkpoint once, share the
                 // Arc-backed bundle across replica samplers
                 let staged = match ckpt {
@@ -332,12 +350,17 @@ fn main() -> Result<()> {
                     None => None,
                 };
                 eprintln!(
-                    "fleet: {} replicas, queue depth {}, deadline shed {}",
+                    "fleet: {} replicas, queue depth {}, deadline shed {}, faults {}",
                     opts.replicas,
                     opts.queue_depth,
                     opts.shed_deadline_ms
                         .map_or("off".to_string(), |ms| format!("{ms} ms")),
+                    opts.faults.as_ref().map_or("off".to_string(), |p| format!(
+                        "on (seed {})",
+                        p.seed
+                    )),
                 );
+                let fault_seed = opts.faults.as_ref().map_or(0, |p| p.seed);
                 let (fleet, join) = Fleet::spawn(
                     opts,
                     move |_replica| {
@@ -350,12 +373,17 @@ fn main() -> Result<()> {
                     },
                     0,
                 )?;
+                let supervisor = Supervisor::attach(
+                    fleet.clone(),
+                    SupervisorOptions { seed: fault_seed, ..SupervisorOptions::default() },
+                );
                 serve_until(&addr, fleet.clone(), sd_rx)?;
+                let sup = supervisor.stop();
                 // engines have drained; their final counters come back via
                 // join, while the router's own counters stay readable
-                let per_replica = join.join();
+                let report = join.join();
                 let mut fs = fleet.stats();
-                for (r, e) in fs.replicas.iter_mut().zip(per_replica) {
+                for (r, e) in fs.replicas.iter_mut().zip(report.per_replica) {
                     r.engine = e;
                 }
                 let stats = fs.rollup();
@@ -377,6 +405,17 @@ fn main() -> Result<()> {
                     fs.duplicate_sessions,
                     fs.migrations,
                     fs.migration_failed,
+                );
+                eprintln!(
+                    "supervision: {} restarts ({} wedges); sessions {} retried / \
+                     {} recovered / {} lost; {} panicked + {} unjoined threads",
+                    sup.restarts,
+                    sup.wedges,
+                    sup.sessions_retried,
+                    sup.sessions_recovered,
+                    sup.sessions_lost,
+                    report.panicked_threads,
+                    report.unjoined_threads,
                 );
                 return Ok(());
             }

@@ -48,6 +48,15 @@ impl StateBundle {
         Ok(())
     }
 
+    /// [`Self::load_groups`] from in-memory TVQ bytes — the checkpoint
+    /// loader reads candidate files itself so it can checksum the exact
+    /// bytes before installing them.
+    pub fn load_groups_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let tensors = store::decode_tvq(bytes)?;
+        self.set_named(tensors);
+        Ok(())
+    }
+
     /// Install named tensors (`<group><path>`), grouped by name prefix —
     /// the same contract as [`Self::load_groups`] but from memory (used
     /// with [`crate::runtime::Backend::init_state`]). Tensors must appear
@@ -119,13 +128,23 @@ impl StateBundle {
         Ok(())
     }
 
-    /// Serialize selected groups to a TVQ checkpoint.
+    /// Serialize selected groups to a TVQ checkpoint (atomic write).
     pub fn save_groups(
         &self,
         path: impl AsRef<std::path::Path>,
         spec: &ArtifactSpec,
         group_names: &[&str],
     ) -> Result<()> {
+        store::atomic_write(path, &self.encode_groups(spec, group_names)?)
+    }
+
+    /// Serialize selected groups to TVQ bytes — the checkpoint writer
+    /// checksums and atomically writes them itself.
+    pub fn encode_groups(
+        &self,
+        spec: &ArtifactSpec,
+        group_names: &[&str],
+    ) -> Result<Vec<u8>> {
         let mut tensors = Vec::new();
         for g in group_names {
             let leaves = spec.input_group(g);
@@ -138,7 +157,7 @@ impl StateBundle {
                 tensors.push((format!("{}{}", g, leaf.path), t.clone()));
             }
         }
-        store::write_tvq(path, &tensors)
+        store::encode_tvq(&tensors)
     }
 
     pub fn total_bytes(&self) -> usize {

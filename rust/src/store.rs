@@ -3,6 +3,13 @@
 //! Format (see python/compile/tvq.py, the writer of record):
 //!   b"TVQ1" | u32 header_len LE | JSON header | raw LE tensor data
 //! Used for initial parameters, checkpoints, and golden test vectors.
+//!
+//! Durability: [`write_tvq`] never writes the destination in place — bytes
+//! go to a sibling `.tmp` file, are fsynced, and land via an atomic rename,
+//! so a crash mid-save can truncate at worst the temp file, never a
+//! previously good artifact. Every write point passes through the
+//! [`IoFaults`] seam so checkpoint crash-safety is testable by injection
+//! (`train/checkpoint.rs`, `fleet/faults.rs`).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -14,25 +21,48 @@ use crate::tensor::{DType, HostTensor};
 
 const MAGIC: &[u8; 4] = b"TVQ1";
 
-/// Read every tensor in a TVQ file, preserving order.
-pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
-    let path = path.as_ref();
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
+/// FNV-1a over a byte slice — the store's manifest checksum (same family as
+/// the snapshot wire checksum and the router's affinity hash; dependency
+/// -free and stable across platforms).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
     }
-    let mut len_buf = [0u8; 4];
-    f.read_exact(&mut len_buf)?;
-    let hlen = u32::from_le_bytes(len_buf) as usize;
-    let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)
-        .with_context(|| format!("{}: header parse", path.display()))?;
-    let mut data = Vec::new();
-    f.read_to_end(&mut data)?;
+    h
+}
+
+/// Injection seam for checkpoint-style writes: called immediately before
+/// every filesystem operation with a stable site name; returning `Err`
+/// makes the write fail exactly there, the way a crash or full disk would.
+pub trait IoFaults {
+    fn check(&mut self, site: &str) -> std::io::Result<()>;
+}
+
+/// The production seam: no injected faults.
+pub struct NoIoFaults;
+
+impl IoFaults for NoIoFaults {
+    fn check(&mut self, _site: &str) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Parse every tensor out of in-memory TVQ bytes, preserving order.
+pub fn decode_tvq(bytes: &[u8]) -> Result<Vec<(String, HostTensor)>> {
+    if bytes.len() < 8 {
+        bail!("TVQ bytes truncated ({} bytes, need magic + header length)", bytes.len());
+    }
+    if &bytes[..4] != MAGIC {
+        bail!("bad magic {:?}", &bytes[..4]);
+    }
+    let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    let Some(hbuf) = bytes.get(8..8 + hlen) else {
+        bail!("TVQ header overruns the byte buffer (header {} bytes)", hlen);
+    };
+    let header = Json::parse(std::str::from_utf8(hbuf)?).context("TVQ header parse")?;
+    let data = &bytes[8 + hlen..];
 
     let tensors = header.req("tensors")?.as_arr()?;
     let mut out = Vec::with_capacity(tensors.len());
@@ -48,12 +78,12 @@ pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
             .collect::<Result<_>>()?;
         let end = offset + nbytes;
         if end > data.len() {
-            bail!("{}: tensor {name} overruns data section", path.display());
+            bail!("tensor {name} overruns data section");
         }
         let dtype = DType::parse(m.req("dtype")?.as_str()?)?;
         let expect = shape.iter().product::<usize>() * dtype.size_bytes();
         if expect != nbytes {
-            bail!("{}: tensor {name} shape/bytes mismatch", path.display());
+            bail!("tensor {name} shape/bytes mismatch");
         }
         out.push((
             name,
@@ -63,8 +93,18 @@ pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
     Ok(out)
 }
 
-/// Write tensors to a TVQ file (bit-compatible with the python reader).
-pub fn write_tvq(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+/// Read every tensor in a TVQ file, preserving order.
+pub fn read_tvq(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    decode_tvq(&bytes).with_context(|| format!("reading {}", path.display()))
+}
+
+/// Serialize tensors to TVQ bytes (bit-compatible with the python reader).
+pub fn encode_tvq(tensors: &[(String, HostTensor)]) -> Result<Vec<u8>> {
     let mut metas = Vec::with_capacity(tensors.len());
     let mut offset = 0usize;
     for (name, t) in tensors {
@@ -78,14 +118,70 @@ pub fn write_tvq(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Re
         offset += t.nbytes();
     }
     let header = Json::obj(vec![("tensors", Json::Arr(metas))]).dump().into_bytes();
-    let mut f = std::fs::File::create(path.as_ref())?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u32).to_le_bytes())?;
-    f.write_all(&header)?;
+    let mut out = Vec::with_capacity(8 + header.len() + offset);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header);
     for (_, t) in tensors {
-        f.write_all(&t.data)?;
+        out.extend_from_slice(&t.data);
     }
-    Ok(())
+    Ok(out)
+}
+
+/// Write tensors to a TVQ file via tmp-file + fsync + atomic rename.
+pub fn write_tvq(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    atomic_write(path, &encode_tvq(tensors)?)
+}
+
+/// Crash-safe file write: bytes land in `<name>.tmp` beside the target,
+/// are fsynced, then renamed over the target in one atomic step. The
+/// destination is therefore always either its previous content or the
+/// complete new content — never a torn prefix.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    atomic_write_with(path, bytes, &mut NoIoFaults)
+}
+
+/// [`atomic_write`] with an [`IoFaults`] seam before each filesystem step
+/// (`create`, `write`, `sync`, `rename`). On any failure the temp file is
+/// removed best-effort and the destination is untouched.
+pub fn atomic_write_with(
+    path: impl AsRef<Path>,
+    bytes: &[u8],
+    io: &mut dyn IoFaults,
+) -> Result<()> {
+    let path = path.as_ref();
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .map(|n| format!("{n}.tmp"))
+        .unwrap_or_else(|| "atomic.tmp".to_string());
+    let tmp = path.with_file_name(name);
+    let run = |io: &mut dyn IoFaults| -> Result<()> {
+        io.check("create").context("create")?;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        io.check("write").context("write")?;
+        f.write_all(bytes)?;
+        io.check("sync").context("sync")?;
+        f.sync_all()?;
+        drop(f);
+        io.check("rename").context("rename")?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        // directory durability is best-effort: rename atomicity does the
+        // correctness work, the dir fsync only narrows the power-loss window
+        if let Some(parent) = path.parent() {
+            if let Ok(d) = std::fs::File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    };
+    let out = run(io).with_context(|| format!("atomic write of {}", path.display()));
+    if out.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -152,5 +248,70 @@ mod tests {
         let p = dir.join("empty.tvq");
         std::fs::write(&p, b"").unwrap();
         assert!(read_tvq(&p).is_err());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_in_memory() {
+        let tensors = vec![
+            ("a".to_string(), HostTensor::from_f32(&[2], &[1.5, -2.5])),
+            ("b".to_string(), HostTensor::from_i32(&[3], &[7, 8, 9])),
+        ];
+        let bytes = encode_tvq(&tensors).unwrap();
+        let back = decode_tvq(&bytes).unwrap();
+        assert_eq!(back, tensors);
+        // truncations never panic, always Err
+        for cut in 0..bytes.len() {
+            assert!(decode_tvq(&bytes[..cut]).is_err(), "truncation at {cut} parsed");
+        }
+    }
+
+    /// Fails exactly the k-th IoFaults check, counting every site visited.
+    struct FailAt {
+        k: usize,
+        seen: usize,
+    }
+
+    impl IoFaults for FailAt {
+        fn check(&mut self, site: &str) -> std::io::Result<()> {
+            let i = self.seen;
+            self.seen += 1;
+            if i == self.k {
+                return Err(std::io::Error::other(format!("injected fault at {site}")));
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn atomic_write_is_all_or_nothing_under_injected_faults() {
+        let dir = crate::testutil::TempDir::new();
+        let p = dir.join("target.bin");
+        atomic_write(&p, b"old-good-content").unwrap();
+        // count the fault sites, then fail each one in turn: the target
+        // must keep its previous content and no temp file may linger
+        let mut counter = FailAt { k: usize::MAX, seen: 0 };
+        atomic_write_with(&p, b"probe", &mut counter).unwrap();
+        let sites = counter.seen;
+        assert!(sites >= 4, "expected create/write/sync/rename sites, got {sites}");
+        for k in 0..sites {
+            let mut io = FailAt { k, seen: 0 };
+            let err = atomic_write_with(&p, b"new-content", &mut io).unwrap_err();
+            assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+            assert_eq!(std::fs::read(&p).unwrap(), b"probe", "fault at site {k} tore the file");
+            assert!(
+                !dir.join("target.bin.tmp").exists(),
+                "fault at site {k} leaked the temp file"
+            );
+        }
+        // and with no fault the write goes through
+        atomic_write(&p, b"new-content").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"new-content");
+    }
+
+    #[test]
+    fn fnv64_is_stable_and_sensitive() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv64(b"abc"), fnv64(b"abd"));
+        assert_ne!(fnv64(b"abc"), fnv64(b"ab"));
     }
 }

@@ -3,13 +3,23 @@
 //! the train step touches is saved — including the Adam moments in `opt` —
 //! and the data-stream position, so a resumed run continues the TBPTT
 //! stream where it left off instead of re-training on early windows.
+//!
+//! Crash safety (DESIGN.md §12): every file lands via tmp-file + fsync +
+//! atomic rename, the sidecar carries an FNV-1a checksum of the exact state
+//! bytes it describes, and the previous good pair is rotated to `.bak`
+//! before the new pair is promoted. [`load_checkpoint`] scans all candidate
+//! pairs (`current`, `.new`, `.bak`), verifies each sidecar's checksum
+//! against the state bytes, and loads the newest verifiable pair — so an
+//! interruption (or injected I/O fault, [`crate::store::IoFaults`]) at
+//! *any* write point leaves a loadable checkpoint behind.
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::TbpttBatcher;
 use crate::json::Json;
+use crate::store::{self, IoFaults, NoIoFaults};
 
 use super::Trainer;
 
@@ -17,8 +27,14 @@ use super::Trainer;
 ///
 /// * 1 — PR 1: params/cb/carry + EMA stats only (readout-SGD trainer).
 /// * 2 — full-model Adam: `opt` additionally carries `adam_m`/`adam_v`/
-///   `adam_t`, and the meta records the batcher position.
+///   `adam_t`, and the meta records the batcher position. PR 10 adds an
+///   optional `state_checksum`/`state_nbytes` pair (same format: metas
+///   without it still load, they just skip byte verification).
 pub const CHECKPOINT_FORMAT: u32 = 2;
+
+/// Candidate suffixes in load preference order: the promoted pair, a fully
+/// written but not yet promoted pair, the previous good pair.
+const SUFFIXES: &[&str] = &["", ".new", ".bak"];
 
 #[derive(Debug, Clone)]
 pub struct CheckpointMeta {
@@ -31,11 +47,16 @@ pub struct CheckpointMeta {
     /// [`TbpttBatcher::fingerprint`] of the stream the position refers to
     /// (covers corpus content/size/seed and batch/window geometry).
     pub data_fingerprint: u64,
+    /// FNV-1a of the exact `state.tvq` bytes this sidecar describes, with
+    /// their length — the manifest checksum that pairs sidecar and state
+    /// during fallback scans. `None` on metas written before PR 10.
+    pub state_checksum: Option<u64>,
+    pub state_nbytes: Option<u64>,
 }
 
 impl CheckpointMeta {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("preset", Json::str(self.preset.clone())),
             ("step", Json::num(self.step as f64)),
             ("format", Json::num(self.format as f64)),
@@ -46,7 +67,14 @@ impl CheckpointMeta {
                 "data_fingerprint",
                 Json::str(format!("{:016x}", self.data_fingerprint)),
             ),
-        ])
+        ];
+        if let Some(c) = self.state_checksum {
+            fields.push(("state_checksum", Json::str(format!("{c:016x}"))));
+        }
+        if let Some(n) = self.state_nbytes {
+            fields.push(("state_nbytes", Json::num(n as f64)));
+        }
+        Json::obj(fields)
     }
 
     fn parse(j: &Json) -> Result<Self> {
@@ -58,6 +86,14 @@ impl CheckpointMeta {
                  Adam optimizer state and cannot be resumed — retrain)"
             );
         }
+        let state_checksum = match j.get("state_checksum") {
+            Some(v) => Some(u64::from_str_radix(v.as_str()?, 16)?),
+            None => None,
+        };
+        let state_nbytes = match j.get("state_nbytes") {
+            Some(v) => Some(v.as_u64()?),
+            None => None,
+        };
         Ok(Self {
             preset: j.req("preset")?.as_str()?.to_string(),
             step: j.req("step")?.as_u64()?,
@@ -68,6 +104,8 @@ impl CheckpointMeta {
                 j.req("data_fingerprint")?.as_str()?,
                 16,
             )?,
+            state_checksum,
+            state_nbytes,
         })
     }
 }
@@ -79,6 +117,26 @@ pub fn save_checkpoint(
     batcher: &TbpttBatcher,
     dir: impl AsRef<Path>,
 ) -> Result<()> {
+    save_checkpoint_with(trainer, batcher, dir, &mut NoIoFaults)
+}
+
+/// [`save_checkpoint`] with an [`IoFaults`] seam before every filesystem
+/// step. Write order keeps a loadable pair on disk at all times:
+///
+/// 1. `state.tvq.new` + `meta.json.new` (each tmp + fsync + rename) — the
+///    old pair is untouched; the sidecar checksums the new state bytes.
+/// 2. rotate the old pair to `.bak`.
+/// 3. promote `.new` over the live names.
+///
+/// An interruption between any two steps leaves at least one suffix whose
+/// sidecar verifies against its state bytes, which is exactly what
+/// [`load_checkpoint`]'s candidate scan looks for.
+pub fn save_checkpoint_with(
+    trainer: &Trainer,
+    batcher: &TbpttBatcher,
+    dir: impl AsRef<Path>,
+    io: &mut dyn IoFaults,
+) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
     let groups: Vec<&str> = STATE_GROUPS
@@ -86,9 +144,7 @@ pub fn save_checkpoint(
         .copied()
         .filter(|g| trainer.bundle.has_group(g))
         .collect();
-    trainer
-        .bundle
-        .save_groups(dir.join("state.tvq"), trainer.exe_train.spec(), &groups)?;
+    let state = trainer.bundle.encode_groups(trainer.exe_train.spec(), &groups)?;
     let (epoch, window_index) = batcher.position();
     let meta = CheckpointMeta {
         preset: trainer.preset.clone(),
@@ -97,23 +153,130 @@ pub fn save_checkpoint(
         data_epoch: epoch as u64,
         data_window_index: window_index as u64,
         data_fingerprint: batcher.fingerprint(),
+        state_checksum: Some(store::fnv64(&state)),
+        state_nbytes: Some(state.len() as u64),
     };
-    std::fs::write(dir.join("meta.json"), meta.to_json().dump())?;
+
+    // 1. complete new pair lands under .new — the live pair stays intact
+    store::atomic_write_with(dir.join("state.tvq.new"), &state, io)?;
+    store::atomic_write_with(dir.join("meta.json.new"), meta.to_json().dump().as_bytes(), io)?;
+
+    // 2. rotate the previous good pair out of the way (rename is atomic;
+    //    the .new pair is already loadable if we die between these)
+    let rotate = |io: &mut dyn IoFaults, site: &str, name: &str| -> Result<()> {
+        let live = dir.join(name);
+        if live.exists() {
+            io.check(site).with_context(|| format!("rotating {name}"))?;
+            std::fs::rename(&live, dir.join(format!("{name}.bak")))
+                .with_context(|| format!("rotating {name} to .bak"))?;
+        }
+        Ok(())
+    };
+    rotate(io, "rotate_state_bak", "state.tvq")?;
+    rotate(io, "rotate_meta_bak", "meta.json")?;
+
+    // 3. promote the new pair
+    let promote = |io: &mut dyn IoFaults, site: &str, name: &str| -> Result<()> {
+        io.check(site).with_context(|| format!("promoting {name}"))?;
+        std::fs::rename(dir.join(format!("{name}.new")), dir.join(name))
+            .with_context(|| format!("promoting {name}.new"))?;
+        Ok(())
+    };
+    promote(io, "promote_state", "state.tvq")?;
+    promote(io, "promote_meta", "meta.json")?;
     Ok(())
 }
 
+/// One verified (sidecar, state bytes) pair found by the candidate scan.
+struct Candidate {
+    meta: CheckpointMeta,
+    state: Vec<u8>,
+    suffix: &'static str,
+}
+
+/// Scan every suffix for a sidecar whose checksum verifies against some
+/// candidate state file. Checksummed sidecars may pair with a state file
+/// under any suffix (a crash between rotation renames can split a pair
+/// across suffixes); legacy sidecars (no checksum) pair positionally.
+fn scan_candidates(dir: &Path) -> (Vec<Candidate>, Vec<String>) {
+    let mut found = Vec::new();
+    let mut errors = Vec::new();
+    let states: Vec<(&'static str, Vec<u8>)> = SUFFIXES
+        .iter()
+        .filter_map(|s| {
+            std::fs::read(dir.join(format!("state.tvq{s}"))).ok().map(|b| (*s, b))
+        })
+        .collect();
+    for &suffix in SUFFIXES {
+        let meta_path = dir.join(format!("meta.json{suffix}"));
+        let text = match std::fs::read_to_string(&meta_path) {
+            Ok(t) => t,
+            Err(e) => {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    errors.push(format!("meta.json{suffix}: {e}"));
+                }
+                continue;
+            }
+        };
+        let meta = match Json::parse(&text).and_then(|j| CheckpointMeta::parse(&j)) {
+            Ok(m) => m,
+            Err(e) => {
+                errors.push(format!("meta.json{suffix}: {e:#}"));
+                continue;
+            }
+        };
+        // prefer the state at the sidecar's own suffix, then any other
+        let state = match meta.state_checksum {
+            Some(want) => states
+                .iter()
+                .filter(|(_, b)| {
+                    meta.state_nbytes.is_none_or(|n| n == b.len() as u64)
+                        && store::fnv64(b) == want
+                })
+                .min_by_key(|(s, _)| usize::from(*s != suffix))
+                .map(|(_, b)| b.clone()),
+            None => states.iter().find(|(s, _)| *s == suffix).map(|(_, b)| b.clone()),
+        };
+        match state {
+            Some(state) => found.push(Candidate { meta, state, suffix }),
+            None => errors.push(format!(
+                "meta.json{suffix}: no state file matches its checksum (corrupt or torn \
+                 state.tvq{suffix})"
+            )),
+        }
+    }
+    (found, errors)
+}
+
 /// Restore trainer state (and, when given, the data stream position) from a
-/// checkpoint directory. Unknown or outdated formats are rejected with a
-/// clear error rather than silently mis-parsed.
+/// checkpoint directory. Loads the newest checksum-verified pair, falling
+/// back to `.new`/`.bak` candidates when the promoted pair is missing,
+/// torn, or corrupt; unknown or outdated formats are rejected with a clear
+/// error rather than silently mis-parsed.
 pub fn load_checkpoint(
     trainer: &mut Trainer,
     batcher: Option<&mut TbpttBatcher>,
     dir: impl AsRef<Path>,
 ) -> Result<CheckpointMeta> {
     let dir = dir.as_ref();
-    let meta = CheckpointMeta::parse(&Json::parse(&std::fs::read_to_string(
-        dir.join("meta.json"),
-    )?)?)?;
+    let (candidates, errors) = scan_candidates(dir);
+    // newest step wins; SUFFIXES order breaks ties toward the promoted pair
+    let Some(best) = candidates.into_iter().reduce(|a, b| if b.meta.step > a.meta.step { b } else { a })
+    else {
+        bail!(
+            "no loadable checkpoint in {}: {}",
+            dir.display(),
+            if errors.is_empty() { "no meta.json candidates found".to_string() } else { errors.join("; ") }
+        );
+    };
+    if !errors.is_empty() {
+        eprintln!(
+            "[checkpoint] loading meta.json{} after skipping: {}",
+            best.suffix,
+            errors.join("; ")
+        );
+    }
+    let meta = best.meta;
     if meta.preset != trainer.preset {
         bail!(
             "checkpoint is for preset '{}', trainer is '{}'",
@@ -121,7 +284,7 @@ pub fn load_checkpoint(
             trainer.preset
         );
     }
-    trainer.bundle.load_groups(dir.join("state.tvq"))?;
+    trainer.bundle.load_groups_bytes(&best.state)?;
     trainer.step = meta.step;
     if let Some(b) = batcher {
         if b.fingerprint() != meta.data_fingerprint {

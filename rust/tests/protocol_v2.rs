@@ -9,6 +9,8 @@ use transformer_vq::coordinator::{
     handle_conn, ClientFrame, Engine, EngineHandle, EngineStats, EventFrame, GenerateFrame,
     MAX_MAX_TOKENS,
 };
+use transformer_vq::fleet::{FleetStats, ReplicaStats};
+use transformer_vq::json::Json;
 use transformer_vq::native::NativeBackend;
 use transformer_vq::rng::Rng;
 use transformer_vq::sample::Sampler;
@@ -114,6 +116,144 @@ fn prop_event_frame_roundtrip() {
         };
         let back = EventFrame::parse(&frame.dump()).unwrap();
         assert_eq!(back, frame);
+    });
+}
+
+fn rand_engine_stats(rng: &mut Rng) -> EngineStats {
+    EngineStats {
+        requests_completed: rng.below(1000),
+        requests_cancelled: rng.below(10),
+        requests_failed: rng.below(10),
+        prefill_tokens: rng.below(1 << 20),
+        decode_tokens: rng.below(1 << 20),
+        steps: rng.below(1 << 20),
+        queued: rng.below(64),
+        active: rng.below(4),
+        slots: rng.below(8),
+        migrated_in: rng.below(16),
+        migrated_out: rng.below(16),
+        ..Default::default()
+    }
+}
+
+fn rand_fleet_stats(rng: &mut Rng) -> FleetStats {
+    FleetStats {
+        replicas: (0..1 + rng.below(4))
+            .map(|i| ReplicaStats {
+                id: i as usize,
+                alive: rng.f64() < 0.8,
+                inflight: rng.below(16),
+                engine: rand_engine_stats(rng),
+            })
+            .collect(),
+        shed_queue_full: rng.below(100),
+        shed_deadline: rng.below(100),
+        duplicate_sessions: rng.below(100),
+        migrations: rng.below(100),
+        migration_failed: rng.below(100),
+        sessions_routed: rng.below(1000),
+        sessions_active: rng.below(64),
+        affinity_hits: rng.below(1000),
+        restarts: rng.below(50),
+        session_retries: rng.below(50),
+        sessions_recovered: rng.below(50),
+        sessions_lost: rng.below(50),
+    }
+}
+
+/// The supervision counters added in DESIGN.md §12 ride the same
+/// `fleet_stats` frame: full roundtrip including them.
+#[test]
+fn prop_fleet_stats_roundtrip_with_recovery_counters() {
+    check_property("fleet_stats parse(dump) == id", 40, |rng| {
+        let frame = EventFrame::FleetStats(rand_fleet_stats(rng));
+        let back = EventFrame::parse(&frame.dump()).unwrap();
+        assert_eq!(back, frame);
+    });
+}
+
+/// Back-compat: frames emitted before the recovery counters existed (no
+/// `restarts`/`session_retries`/`sessions_recovered`/`sessions_lost` keys)
+/// still parse, with those counters defaulting to zero.
+#[test]
+fn prop_fleet_stats_pre_recovery_frames_parse_with_zero_counters() {
+    const RECOVERY_KEYS: [&str; 4] =
+        ["restarts", "session_retries", "sessions_recovered", "sessions_lost"];
+    check_property("old fleet_stats shape parses as zeros", 20, |rng| {
+        let stats = rand_fleet_stats(rng);
+        let mut j = EventFrame::FleetStats(stats.clone()).to_json();
+        if let Json::Obj(m) = &mut j {
+            for k in RECOVERY_KEYS {
+                m.remove(k);
+            }
+        }
+        match EventFrame::parse(&j.dump()).expect("old wire shape must keep parsing") {
+            EventFrame::FleetStats(back) => {
+                assert_eq!(back.restarts, 0);
+                assert_eq!(back.session_retries, 0);
+                assert_eq!(back.sessions_recovered, 0);
+                assert_eq!(back.sessions_lost, 0);
+                assert_eq!(back.replicas, stats.replicas);
+                assert_eq!(back.migrations, stats.migrations);
+                assert_eq!(back.sessions_routed, stats.sessions_routed);
+            }
+            other => panic!("expected fleet_stats, got {other:?}"),
+        }
+    });
+}
+
+/// Hostile `fleet_stats` frames: replacing any field's value with a
+/// mistyped one must yield a clean `Err` for the original (required)
+/// fields, the documented zero default for the optional recovery counters
+/// — and never a panic either way. Truncations must fail cleanly too.
+#[test]
+fn prop_hostile_fleet_stats_never_panics() {
+    const RECOVERY_KEYS: [&str; 4] =
+        ["restarts", "session_retries", "sessions_recovered", "sessions_lost"];
+    check_property("mistyped/truncated fleet_stats fail typed", 60, |rng| {
+        let line = EventFrame::FleetStats(rand_fleet_stats(rng)).dump();
+
+        // truncation: any strict prefix must be a clean parse error
+        let cut = 1 + rng.below(line.len() as u64 - 1) as usize;
+        if line.is_char_boundary(cut) {
+            assert!(
+                EventFrame::parse(&line[..cut]).is_err(),
+                "truncated fleet_stats frame parsed"
+            );
+        }
+
+        // mistype one top-level field
+        let mut j = Json::parse(&line).unwrap();
+        let key = {
+            let Json::Obj(m) = &j else { panic!("frame is an object") };
+            let keys: Vec<String> = m.keys().cloned().collect();
+            keys[rng.below(keys.len() as u64) as usize].clone()
+        };
+        let hostile = match rng.below(5) {
+            0 => Json::Str("not-a-number".into()),
+            1 => Json::Bool(true),
+            2 => Json::Num(-3.5),
+            3 => Json::Arr(vec![Json::Num(1.0)]),
+            _ => Json::Null,
+        };
+        if let Json::Obj(m) = &mut j {
+            m.insert(key.clone(), hostile);
+        }
+        let res = EventFrame::parse(&j.dump());
+        if RECOVERY_KEYS.contains(&key.as_str()) {
+            // optional counters: wrong type reads as the back-compat zero
+            match res.expect("optional counter mistype must not fail the frame") {
+                EventFrame::FleetStats(f) => match key.as_str() {
+                    "restarts" => assert_eq!(f.restarts, 0),
+                    "session_retries" => assert_eq!(f.session_retries, 0),
+                    "sessions_recovered" => assert_eq!(f.sessions_recovered, 0),
+                    _ => assert_eq!(f.sessions_lost, 0),
+                },
+                other => panic!("expected fleet_stats, got {other:?}"),
+            }
+        } else {
+            assert!(res.is_err(), "mistyped required field `{key}` parsed anyway");
+        }
     });
 }
 

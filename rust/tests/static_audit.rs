@@ -62,4 +62,11 @@ fn audit_actually_walked_the_hot_paths() {
         zero_alloc_sites >= 4,
         "expected the documented install-time/pool allocation sites, found {zero_alloc_sites}"
     );
+    let bounded_sites =
+        report.suppressions.iter().filter(|s| s.rule == "bounded_blocking").count();
+    assert!(
+        bounded_sites >= 6,
+        "expected the documented tvq-bounded parks in fleet/ and coordinator/, \
+         found {bounded_sites}"
+    );
 }

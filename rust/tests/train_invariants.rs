@@ -6,8 +6,9 @@
 use transformer_vq::data::TbpttBatcher;
 use transformer_vq::native::NativeBackend;
 use transformer_vq::schedule::LrSchedule;
+use transformer_vq::store::IoFaults;
 use transformer_vq::train::{
-    load_checkpoint, save_checkpoint, Trainer, CHECKPOINT_FORMAT,
+    load_checkpoint, save_checkpoint, save_checkpoint_with, Trainer, CHECKPOINT_FORMAT,
 };
 
 fn quickstart_trainer(lr: f32) -> (Trainer, TbpttBatcher) {
@@ -112,6 +113,98 @@ fn format_1_checkpoint_is_rejected() {
     .unwrap();
     let err = load_checkpoint(&mut t2, None, dir.path()).unwrap_err().to_string();
     assert!(err.contains("format 99"), "unhelpful error: {err}");
+}
+
+/// Fails exactly the Nth [`IoFaults::check`] call of a save, recording
+/// which site it hit — a deterministic single-fault crash simulator.
+struct FailAt {
+    countdown: u64,
+    hit: Option<String>,
+}
+
+impl FailAt {
+    fn nth(n: u64) -> Self {
+        FailAt { countdown: n, hit: None }
+    }
+}
+
+impl IoFaults for FailAt {
+    fn check(&mut self, site: &str) -> std::io::Result<()> {
+        if self.countdown == 0 {
+            self.hit = Some(site.to_string());
+            return Err(std::io::Error::other(format!("injected ckpt_io fault at {site}")));
+        }
+        self.countdown -= 1;
+        Ok(())
+    }
+}
+
+/// The ISSUE-10 crash-safety pin: inject an I/O fault at *every* write
+/// point of [`save_checkpoint_with`] in turn — a checkpoint directory with
+/// a promoted pair has exactly 12 (tmp create/write/fsync/rename for each
+/// of the two `.new` files, two `.bak` rotations, two promotions) — and
+/// after every single one, a fresh trainer must still load a checkpoint no
+/// older than the last clean save. Faults up to and including the second
+/// `.new` rename must load the old pair exactly; once the `.new` pair is
+/// complete on disk, the interrupted save's own step must win.
+#[test]
+fn checkpoint_survives_io_fault_at_every_write_point() {
+    const SITES: [&str; 12] = [
+        "create", "write", "sync", "rename", // state.tvq.new
+        "create", "write", "sync", "rename", // meta.json.new
+        "rotate_state_bak", "rotate_meta_bak", "promote_state", "promote_meta",
+    ];
+    let (mut trainer, mut batcher) = quickstart_trainer(1e-3);
+    trainer.train_on(&batcher.next_batch()).unwrap();
+
+    let mut injected = 0u64;
+    for (n, &want_site) in SITES.iter().enumerate() {
+        // fresh directory per fault point, seeded with a clean promoted
+        // pair, so each round walks the same 12-check sequence
+        let dir = transformer_vq::testutil::TempDir::new();
+        save_checkpoint(&trainer, &batcher, dir.path()).unwrap();
+        let base_step = trainer.step;
+        trainer.train_on(&batcher.next_batch()).unwrap();
+        let next_step = trainer.step;
+
+        let mut io = FailAt::nth(n as u64);
+        let err = save_checkpoint_with(&trainer, &batcher, dir.path(), &mut io)
+            .expect_err("fault was injected; save must report it");
+        assert!(
+            format!("{err:#}").contains("injected ckpt_io fault"),
+            "fault at check {n} surfaced a different error: {err:#}"
+        );
+        assert_eq!(io.hit.as_deref(), Some(want_site), "check {n} hit the wrong site");
+        injected += 1;
+
+        // the directory must hold a loadable checkpoint regardless of
+        // where the save died
+        let (mut probe, _) = quickstart_trainer(1e-3);
+        let meta = load_checkpoint(&mut probe, None, dir.path())
+            .unwrap_or_else(|e| panic!("unloadable after fault at {want_site}: {e:#}"));
+        if n < 8 {
+            // the .new pair never fully landed: the promoted pair wins
+            assert_eq!(meta.step, base_step, "fault at {want_site} lost the old pair");
+        } else {
+            // both .new files are complete: the newer state must be found
+            // even when rotation/promotion died halfway
+            assert_eq!(meta.step, next_step, "fault at {want_site} lost the new pair");
+        }
+        assert_eq!(probe.step, meta.step);
+    }
+    assert_eq!(injected, SITES.len() as u64);
+
+    // one past the last site: the save must succeed untouched and load back
+    // its own step
+    let dir = transformer_vq::testutil::TempDir::new();
+    save_checkpoint(&trainer, &batcher, dir.path()).unwrap();
+    trainer.train_on(&batcher.next_batch()).unwrap();
+    let mut io = FailAt::nth(SITES.len() as u64);
+    save_checkpoint_with(&trainer, &batcher, dir.path(), &mut io).unwrap();
+    assert!(io.hit.is_none(), "clean save tripped a fault");
+    let (mut probe, _) = quickstart_trainer(1e-3);
+    let meta = load_checkpoint(&mut probe, None, dir.path()).unwrap();
+    assert_eq!(meta.step, trainer.step);
 }
 
 #[test]
